@@ -1,0 +1,66 @@
+//! Shared helpers for the table/figure benches. Every bench is a
+//! `harness = false` binary built on `bonseyes::bench` (criterion is
+//! unavailable offline; the harness mirrors the paper's method: warm-up
+//! run discarded, then averaged repeats, single thread, §8.2).
+#![allow(dead_code)]
+
+use bonseyes::lne::graph::{Graph, Weights};
+use bonseyes::models;
+use bonseyes::models::kws::build_graph;
+use bonseyes::runtime::manifest::Manifest;
+use bonseyes::tensor::Tensor;
+use bonseyes::util::rng::Rng;
+use std::path::PathBuf;
+
+pub fn manifest() -> Manifest {
+    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json");
+    Manifest::load(&p).expect("run `make artifacts` first")
+}
+
+pub fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// KWS LNE model (graph + random weights) from the manifest arch specs.
+pub fn kws_model(m: &Manifest, name: &str) -> (Graph, Weights) {
+    let arch = m.arch(name).unwrap_or_else(|| panic!("arch {name} missing"));
+    let g = build_graph(arch, m.mel_bands, m.frames, m.num_classes);
+    let w = models::random_weights(&g, 42);
+    (g, w)
+}
+
+/// MFCC-shaped calibration input [1, 1, mel, frames].
+pub fn kws_input(m: &Manifest, seed: u64) -> Tensor {
+    let mut rng = Rng::new(seed);
+    Tensor::randn(&[1, 1, m.mel_bands, m.frames], 1.0, &mut rng)
+}
+
+/// Image input for a zoo model.
+pub fn image_input(g: &Graph, seed: u64) -> Tensor {
+    let mut rng = Rng::new(seed);
+    Tensor::randn(&[1, g.input.0, g.input.1, g.input.2], 1.0, &mut rng)
+}
+
+/// Fast-mode toggle (BONSEYES_BENCH_FAST=1 shrinks everything).
+pub fn fast() -> bool {
+    std::env::var("BONSEYES_BENCH_FAST").map(|v| v == "1").unwrap_or(false)
+}
+
+pub fn scaled(normal: usize, fast_value: usize) -> usize {
+    if fast() {
+        fast_value
+    } else {
+        normal
+    }
+}
+
+pub fn reps() -> usize {
+    scaled(5, 2)
+}
+
+/// Paper-style banner.
+pub fn banner(id: &str, what: &str) {
+    println!("\n=== {id}: {what} ===");
+    println!("(paper values shown for shape comparison; absolute times are");
+    println!(" host-CPU measurements of the from-scratch substrate, DESIGN.md §3)");
+}

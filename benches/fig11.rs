@@ -1,0 +1,49 @@
+//! Fig 11: QS-DNN learning curve — exploration episodes are noisy/slow,
+//! the exploitation phase converges to the fast deployment.
+
+#[path = "common.rs"]
+mod common;
+
+use bonseyes::lne::engine::Prepared;
+use bonseyes::lne::platform::Platform;
+use bonseyes::qsdnn::{search, QsDnnConfig};
+
+fn main() {
+    common::banner("Fig 11", "QS-DNN RL optimization (explore -> exploit)");
+    let m = common::manifest();
+    let (g, w) = common::kws_model(&m, "kws1");
+    let p = Prepared::new(g, w, Platform::jetson_nano()).unwrap();
+    let x = common::kws_input(&m, 3);
+    let episodes = common::scaled(120, 30);
+    let cfg = QsDnnConfig {
+        episodes,
+        explore_episodes: episodes / 2,
+        ..Default::default()
+    };
+    let out = search(&p, &x, &cfg);
+    // render the curve as per-bucket means
+    let bucket = (episodes / 20).max(1);
+    let max = out.episode_ms.iter().cloned().fold(f64::MIN, f64::max);
+    println!("\nepisode latency (ms), {bucket}-episode buckets; | marks explore->exploit:");
+    for (bi, chunk) in out.episode_ms.chunks(bucket).enumerate() {
+        let mean = chunk.iter().sum::<f64>() / chunk.len() as f64;
+        let bars = "#".repeat(((mean / max) * 50.0).round() as usize);
+        let marker = if bi * bucket < cfg.explore_episodes
+            && (bi + 1) * bucket >= cfg.explore_episodes
+        {
+            " <- exploitation starts"
+        } else {
+            ""
+        };
+        println!("ep {:>4}-{:<4} | {bars} {mean:.3}{marker}", bi * bucket, (bi + 1) * bucket - 1);
+    }
+    let explore_mean: f64 = out.episode_ms[..cfg.explore_episodes].iter().sum::<f64>()
+        / cfg.explore_episodes as f64;
+    println!(
+        "\nexplore mean {:.3} ms -> best found {:.3} ms ({:.2}x faster)",
+        explore_mean,
+        out.best_ms,
+        explore_mean / out.best_ms
+    );
+    println!("paper shape: two-stage curve — noisy plateau, then converging descent.");
+}

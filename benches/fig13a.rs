@@ -1,0 +1,59 @@
+//! Fig 13a: LPDNN vs Caffe on the six KWS networks (Jetson-Nano profile,
+//! single thread, f32). Series: Caffe (GEMM baseline), LPDNN per-library
+//! uniforms, and LPDNN+QS-DNN — which must win on every network.
+
+#[path = "common.rs"]
+mod common;
+
+use bonseyes::bench::report;
+use bonseyes::frameworks::{deploy, DeployOptions, Framework};
+use bonseyes::lne::platform::Platform;
+use bonseyes::lne::plugin::{ConvImpl, DesignSpace};
+use bonseyes::qsdnn::measure;
+
+fn main() {
+    common::banner("Fig 13a", "LPDNN vs Caffe on the KWS family (1 s audio)");
+    let m = common::manifest();
+    let nets = ["kws1", "kws3", "kws9", "ds_kws1", "ds_kws3", "ds_kws9"];
+    let platform = Platform::jetson_nano();
+    let reps = common::reps();
+    let mut groups = Vec::new();
+    let mut qs_wins = 0;
+    for net in nets {
+        let (g, w) = common::kws_model(&m, net);
+        let x = common::kws_input(&m, 9);
+        let opts = DeployOptions {
+            episodes: common::scaled(80, 16),
+            explore_episodes: common::scaled(32, 8),
+            ..Default::default()
+        };
+        let caffe = deploy(Framework::Caffe, &g, &w, platform.clone(), &x, &opts).unwrap();
+        let lpdnn = deploy(Framework::Lpdnn, &g, &w, platform.clone(), &x, &opts).unwrap();
+        let caffe_ms = caffe.latency_ms(&x, reps);
+        let lpdnn_ms = lpdnn.latency_ms(&x, reps);
+        // per-library uniforms measured on the optimized graph
+        let space = DesignSpace::build(&lpdnn.prepared.graph, &platform);
+        let mut items = vec![("caffe".to_string(), caffe_ms)];
+        let mut best_uniform = f64::MAX;
+        for lib in [ConvImpl::GemmRef, ConvImpl::GemmBlocked, ConvImpl::Winograd, ConvImpl::Direct] {
+            let a = space.uniform(&lpdnn.prepared.graph, lib);
+            let t = measure(&lpdnn.prepared, &x, &a, reps);
+            best_uniform = best_uniform.min(t);
+            items.push((format!("lpdnn-{}", lib.name()), t));
+        }
+        items.push(("lpdnn-qsdnn".to_string(), lpdnn_ms));
+        if lpdnn_ms <= best_uniform * 1.05 {
+            qs_wins += 1;
+        }
+        eprintln!(
+            "{net}: caffe {caffe_ms:.2} ms, qsdnn {lpdnn_ms:.2} ms ({:.1}x)",
+            caffe_ms / lpdnn_ms
+        );
+        groups.push((net.to_string(), items));
+    }
+    println!("{}", report::grouped_barchart(
+        "Fig 13a — inference time per KWS network (lower is better)",
+        &groups, "ms"));
+    println!("QS-DNN matched/beat every uniform library on {qs_wins}/{} nets", nets.len());
+    println!("paper shape: Caffe 24-50 ms band vs LPDNN 7-21 ms; QS-DNN <= every library.");
+}

@@ -1,0 +1,89 @@
+//! Fig 13b: per-layer quantization analysis on kws1 — int8-GEMM speedup
+//! over f32 GEMM, with Winograd f32 as the shadowing comparison.
+
+#[path = "common.rs"]
+mod common;
+
+use bonseyes::bench::report;
+use bonseyes::lne::engine::Prepared;
+use bonseyes::lne::graph::LayerKind;
+use bonseyes::lne::passes;
+use bonseyes::lne::platform::Platform;
+use bonseyes::lne::plugin::{applicable, Assignment, ConvImpl};
+use bonseyes::lne::quant_explore::explore;
+
+fn main() {
+    common::banner("Fig 13b", "per-layer int8 vs GEMM f32 vs Winograd f32 (kws1)");
+    let m = common::manifest();
+    let (g0, w0) = common::kws_model(&m, "kws1");
+    let (g, w) = passes::optimize(&g0, &w0);
+    let p = Prepared::new(g, w, Platform::jetson_nano()).unwrap();
+    let x = common::kws_input(&m, 5);
+    let reps = common::reps();
+
+    // median per-layer time under a uniform assignment
+    let measure_layers = |a: &Assignment| -> Vec<Vec<f64>> {
+        let mut samples: Vec<Vec<f64>> = vec![Vec::new(); p.graph.layers.len()];
+        for _ in 0..reps {
+            let r = p.run(&x, a);
+            for (i, &t) in r.layer_ms.iter().enumerate() {
+                samples[i].push(t);
+            }
+        }
+        samples
+    };
+    let median = |mut v: Vec<f64>| -> f64 {
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v[v.len() / 2]
+    };
+
+    let mk_uniform = |impl_: ConvImpl| {
+        let mut a = Assignment::default_for(&p.graph);
+        for (i, l) in p.graph.layers.iter().enumerate() {
+            let ch = applicable(&l.kind, &p.platform);
+            if ch.is_empty() {
+                continue;
+            }
+            a.choices[i] = Some(if ch.contains(&impl_) { impl_ } else { ch[0] });
+        }
+        a
+    };
+    let f32_t = measure_layers(&mk_uniform(ConvImpl::GemmRef));
+    let i8_t = measure_layers(&mk_uniform(ConvImpl::Int8Gemm));
+    let wino_t = measure_layers(&mk_uniform(ConvImpl::Winograd));
+
+    let mut items_speedup = Vec::new();
+    let mut rows = Vec::new();
+    for (i, l) in p.graph.layers.iter().enumerate() {
+        if !matches!(l.kind, LayerKind::Conv { .. }) {
+            continue;
+        }
+        let f = median(f32_t[i].clone());
+        let q = median(i8_t[i].clone());
+        let wn = median(wino_t[i].clone());
+        items_speedup.push((l.name.clone(), f / q));
+        let wino_avail = applicable(&l.kind, &p.platform).contains(&ConvImpl::Winograd);
+        rows.push(vec![
+            l.name.clone(),
+            format!("{f:.3}"),
+            format!("{q:.3} ({:+.0}%)", (f / q - 1.0) * 100.0),
+            if wino_avail {
+                format!("{wn:.3} ({:+.0}%)", (f / wn - 1.0) * 100.0)
+            } else {
+                "n/a".into()
+            },
+        ]);
+    }
+    println!("{}", report::table(
+        "Fig 13b — per-layer latency on kws1 (ms)",
+        &["layer", "GEMM f32", "int8", "Winograd f32"], &rows));
+    println!("{}", report::barchart(
+        "int8 speedup over GEMM f32 per layer (>1 = faster)", &items_speedup, "x"));
+
+    // accuracy-aware mixed selection (the §6.2.5 explorer)
+    let e = explore(&p, &x);
+    let selected = e.quantized_layers(0.05);
+    println!("quantization explorer (5% deviation budget) selects: {selected:?}");
+    println!("paper shape: int8 usually-but-not-always beats f32 GEMM; Winograd f32");
+    println!("shadows both on the 3x3 compute-heavy layers.");
+}

@@ -1,0 +1,36 @@
+//! Fig 14a: LPDNN vs PyTorch on the (resnet-based) body-pose models,
+//! CPU single-thread f32 (Jetson-Xavier profile).
+
+#[path = "common.rs"]
+mod common;
+
+use bonseyes::bench::report;
+use bonseyes::frameworks::{deploy, DeployOptions, Framework};
+use bonseyes::lne::platform::Platform;
+use bonseyes::models;
+
+fn main() {
+    common::banner("Fig 14a", "LPDNN vs PyTorch — body-pose models, CPU f32");
+    let platform = Platform::jetson_xavier();
+    let reps = common::reps();
+    let mut items = Vec::new();
+    for net in ["pose-resnet18", "pose-resnet50"] {
+        let (g, w) = models::by_name(net, 3).unwrap();
+        let x = common::image_input(&g, 2);
+        let opts = DeployOptions {
+            episodes: common::scaled(36, 10),
+            explore_episodes: common::scaled(14, 5),
+            ..Default::default()
+        };
+        let pt = deploy(Framework::PyTorch, &g, &w, platform.clone(), &x, &opts).unwrap();
+        let lp = deploy(Framework::Lpdnn, &g, &w, platform.clone(), &x, &opts).unwrap();
+        let pt_ms = pt.latency_ms(&x, reps.min(2));
+        let lp_ms = lp.latency_ms(&x, reps);
+        eprintln!("{net}: pytorch {pt_ms:.0} ms vs lpdnn {lp_ms:.0} ms ({:.1}x)", pt_ms / lp_ms);
+        items.push((format!("{net}/pytorch"), pt_ms));
+        items.push((format!("{net}/lpdnn"), lp_ms));
+    }
+    println!("{}", report::barchart(
+        "Fig 14a — CPU inference time (lower is better)", &items, "ms"));
+    println!("paper shape: LPDNN amply outperforms PyTorch on CPU (up to 15x on resnet18).");
+}

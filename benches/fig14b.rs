@@ -1,0 +1,53 @@
+//! Fig 14b: reduced precision on the pose models — naive whole-network F16
+//! is *slower* than F32 (conversion overhead), while QS-DNN's learned mixed
+//! precision (f32/f16/int8 per layer) is faster. GPU FP16 -> CPU
+//! reduced-precision substitution per DESIGN.md §3.
+
+#[path = "common.rs"]
+mod common;
+
+use bonseyes::bench::report;
+use bonseyes::frameworks::{deploy, DeployOptions, Framework};
+use bonseyes::lne::platform::Platform;
+use bonseyes::lne::plugin::{ConvImpl, DesignSpace};
+use bonseyes::models;
+use bonseyes::qsdnn::measure;
+
+fn main() {
+    common::banner("Fig 14b", "F32 vs naive F16 vs learned mixed precision");
+    let platform = Platform::jetson_xavier();
+    let reps = common::reps();
+    let mut items = Vec::new();
+    for net in ["pose-resnet18", "pose-resnet50"] {
+        let (g, w) = models::by_name(net, 3).unwrap();
+        let x = common::image_input(&g, 2);
+        let opts = DeployOptions {
+            episodes: common::scaled(60, 12),
+            explore_episodes: common::scaled(24, 6),
+            ..Default::default()
+        };
+        // PyTorch-sim: f32 direct, and naive all-F16 (out-of-the-box FP16)
+        let pt = deploy(Framework::PyTorch, &g, &w, platform.clone(), &x, &opts).unwrap();
+        let pt_f32 = pt.latency_ms(&x, reps.min(2));
+        let space = DesignSpace::build(&pt.prepared.graph, &platform);
+        let f16_uniform = space.uniform(&pt.prepared.graph, ConvImpl::F16Gemm);
+        let pt_f16 = measure(&pt.prepared, &x, &f16_uniform, reps.min(2));
+        // LPDNN: f32 blocked baseline and QS-DNN mixed precision
+        let lp = deploy(Framework::Lpdnn, &g, &w, platform.clone(), &x, &opts).unwrap();
+        let lp_space = DesignSpace::build(&lp.prepared.graph, &platform);
+        let lp_f32 =
+            measure(&lp.prepared, &x, &lp_space.uniform(&lp.prepared.graph, ConvImpl::GemmBlocked), reps);
+        let lp_mixed = lp.latency_ms(&x, reps);
+        eprintln!(
+            "{net}: pt f32 {pt_f32:.0} / pt f16 {pt_f16:.0} / lpdnn f32 {lp_f32:.0} / mixed {lp_mixed:.0} ms"
+        );
+        items.push((format!("{net}/pytorch-f32"), pt_f32));
+        items.push((format!("{net}/pytorch-f16"), pt_f16));
+        items.push((format!("{net}/lpdnn-f32"), lp_f32));
+        items.push((format!("{net}/lpdnn-mixed"), lp_mixed));
+    }
+    println!("{}", report::barchart(
+        "Fig 14b — reduced-precision inference time (lower is better)", &items, "ms"));
+    println!("paper shape: out-of-the-box F16 slower than F32; learned mixed precision");
+    println!("up to 65% faster than F32 (ours: int8/f32 mixing on CPU).");
+}

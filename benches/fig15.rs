@@ -1,0 +1,65 @@
+//! Fig 15: comparison with embedded deployment frameworks — five ImageNet
+//! networks x seven baselines + LPDNN x two platform profiles, reported as
+//! relative speedup over Caffe (the paper's reference).
+
+#[path = "common.rs"]
+mod common;
+
+use bonseyes::bench::report;
+use bonseyes::frameworks::{deploy, DeployOptions, Framework, BASELINES};
+use bonseyes::lne::platform::Platform;
+use bonseyes::models;
+
+fn main() {
+    common::banner("Fig 15", "framework comparison on ImageNet networks (speedup over Caffe)");
+    let reps = common::reps().min(3);
+    let nets: Vec<&str> = if common::fast() {
+        vec!["squeezenet", "mobilenet-v2"]
+    } else {
+        models::IMAGENET_MODELS.to_vec()
+    };
+    for platform in [Platform::pi3(), Platform::pi4()] {
+        let mut groups = Vec::new();
+        let mut lpdnn_wins = 0usize;
+        let mut cells = 0usize;
+        for net in &nets {
+            let (g, w) = models::by_name(net, 11).unwrap();
+            let x = common::image_input(&g, 4);
+            let opts = DeployOptions {
+                episodes: common::scaled(36, 10),
+                explore_episodes: common::scaled(14, 5),
+                ..Default::default()
+            };
+            let caffe_ms = deploy(Framework::Caffe, &g, &w, platform.clone(), &x, &opts)
+                .unwrap()
+                .latency_ms(&x, reps);
+            let mut items = vec![("caffe (1.00x)".to_string(), 1.0f64)];
+            let mut best_baseline = 0.0f64;
+            for fw in BASELINES.iter().skip(1) {
+                // skip Caffe itself
+                let d = deploy(*fw, &g, &w, platform.clone(), &x, &opts).unwrap();
+                let speedup = caffe_ms / d.latency_ms(&x, reps);
+                best_baseline = best_baseline.max(speedup);
+                items.push((fw.name().to_string(), speedup));
+            }
+            let lp = deploy(Framework::Lpdnn, &g, &w, platform.clone(), &x, &opts).unwrap();
+            let lp_speedup = caffe_ms / lp.latency_ms(&x, reps);
+            items.push(("lpdnn".to_string(), lp_speedup));
+            cells += 1;
+            if lp_speedup >= best_baseline * 0.97 {
+                lpdnn_wins += 1;
+            }
+            eprintln!(
+                "[{}] {net}: caffe {caffe_ms:.0} ms; lpdnn {lp_speedup:.2}x (best baseline {best_baseline:.2}x)",
+                platform.name
+            );
+            groups.push((format!("{net} (caffe {caffe_ms:.0} ms)"), items));
+        }
+        println!("{}", report::grouped_barchart(
+            &format!("Fig 15 [{}] — speedup over Caffe (higher is better)", platform.name),
+            &groups, "x"));
+        println!("LPDNN best-or-tied on {lpdnn_wins}/{cells} networks ({})\n", platform.name);
+    }
+    println!("paper shape: per-framework wins are spotty; ArmCL & LPDNN stable;");
+    println!("LPDNN highest overall and consistent across both platforms.");
+}

@@ -1,0 +1,83 @@
+//! Table 2: KWS trained models under Q (16-bit) and S (sparsification) —
+//! accuracy / sparsity / size. Runs the real pipeline: synthetic
+//! speech-commands import -> MFCC (pallas/PJRT) -> train (PJRT train-step)
+//! -> Q/S tools -> accuracy benchmark. Expected shape: Q and S cost < 0.7%
+//! accuracy; Q halves size; Q+S can slightly beat S (quantization
+//! regularizes).
+
+#[path = "common.rs"]
+mod common;
+
+use bonseyes::bench::report;
+use bonseyes::pipeline::artifact::ArtifactStore;
+use bonseyes::pipeline::workflow::{run, Workflow};
+use bonseyes::runtime::EngineHandle;
+use bonseyes::toolset::builtin_registry;
+use bonseyes::util::json::Json;
+
+fn main() {
+    common::banner("Table 2", "trained KWS models with Q/S compression");
+    let engine = EngineHandle::spawn(common::artifacts_dir()).unwrap();
+    let store_dir = std::env::temp_dir().join("bonseyes-table2");
+    let _ = std::fs::remove_dir_all(&store_dir);
+    let store = ArtifactStore::open(&store_dir).unwrap();
+    let reg = builtin_registry();
+    let iters = common::scaled(120, 40);
+    let per_class = common::scaled(40, 12);
+    // paper trains the two seeds; at our CPU budget the DS seed is the
+    // honest full run and the CNN seed is reduced-iteration (DESIGN.md §6)
+    let archs: &[(&str, usize)] = if common::fast() {
+        &[("ds_kws9", 40)]
+    } else {
+        &[("ds_cnn_seed", 120), ("kws3", 120)]
+    };
+    let mut rows = Vec::new();
+    for (arch, iterations) in archs {
+        let iterations = (*iterations).min(iters.max(20));
+        let wf_json = format!(
+            r#"{{"name":"table2-{arch}","steps":[
+  {{"tool":"speech-commands-import","params":{{"per_class":{per_class},"seed":5}},"outputs":{{"data":"raw"}}}},
+  {{"tool":"partition","params":{{"val_frac":0.1,"test_frac":0.2}},"inputs":{{"data":"raw"}},
+    "outputs":{{"train":"r-train","val":"r-val","test":"r-test"}}}},
+  {{"tool":"mfcc-features","inputs":{{"data":"r-train"}},"outputs":{{"features":"f-train"}}}},
+  {{"tool":"mfcc-features","inputs":{{"data":"r-val"}},"outputs":{{"features":"f-val"}}}},
+  {{"tool":"mfcc-features","inputs":{{"data":"r-test"}},"outputs":{{"features":"f-test"}}}},
+  {{"tool":"train-kws","params":{{"arch":"{arch}","iterations":{iterations}}},
+    "inputs":{{"train":"f-train","val":"f-val"}},"outputs":{{"model":"m-{arch}"}}}},
+  {{"tool":"benchmark-kws","inputs":{{"model":"m-{arch}","test":"f-test"}},"outputs":{{"report":"rep-{arch}"}}}},
+  {{"tool":"quantize-model","inputs":{{"model":"m-{arch}"}},"outputs":{{"model":"m-{arch}-q"}}}},
+  {{"tool":"benchmark-kws","inputs":{{"model":"m-{arch}-q","test":"f-test"}},"outputs":{{"report":"rep-{arch}-q"}}}},
+  {{"tool":"sparsify-model","params":{{"fraction":0.4}},"inputs":{{"model":"m-{arch}"}},"outputs":{{"model":"m-{arch}-s"}}}},
+  {{"tool":"benchmark-kws","inputs":{{"model":"m-{arch}-s","test":"f-test"}},"outputs":{{"report":"rep-{arch}-s"}}}},
+  {{"tool":"sparsify-model","params":{{"fraction":0.4}},"inputs":{{"model":"m-{arch}-q"}},"outputs":{{"model":"m-{arch}-qs"}}}},
+  {{"tool":"benchmark-kws","inputs":{{"model":"m-{arch}-qs","test":"f-test"}},"outputs":{{"report":"rep-{arch}-qs"}}}}
+]}}"#
+        );
+        let wf = Workflow::parse(&wf_json).unwrap();
+        run(&wf, &reg, &store, Some(engine.clone()), false).unwrap();
+        for (suffix, label) in [("", ""), ("-q", " + Q"), ("-s", " + S"), ("-qs", " + Q + S")] {
+            let rep = Json::parse(
+                &std::fs::read_to_string(
+                    store.dir(&format!("rep-{arch}{suffix}")).join("report.json"),
+                )
+                .unwrap(),
+            )
+            .unwrap();
+            rows.push(vec![
+                format!("{arch}{label}"),
+                format!("{:.2}%", rep.get("accuracy").as_f64().unwrap() * 100.0),
+                format!("{:.1}%", rep.get("sparsity").as_f64().unwrap() * 100.0),
+                format!("{:.0}", rep.get("size_kb").as_f64().unwrap()),
+            ]);
+        }
+    }
+    println!(
+        "{}",
+        report::table(
+            "Table 2 — accuracy / sparsity / size under Q and S",
+            &["model", "acc", "sparsity", "size KB"],
+            &rows
+        )
+    );
+    println!("paper shape: Q/S lose <0.7% acc; Q halves size; Q+S ~ S accuracy.");
+}

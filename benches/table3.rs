@@ -1,0 +1,57 @@
+//! Table 3: TF Lite vs LPDNN on TF-origin networks. Native-format models
+//! perform close to LPDNN; *converted* models keep their unfused/unfolded
+//! graphs and fall behind (the paper's conversion-penalty finding).
+
+#[path = "common.rs"]
+mod common;
+
+use bonseyes::bench::{report, BenchConfig, Group};
+use bonseyes::frameworks::{deploy, DeployOptions, Framework};
+use bonseyes::lne::platform::Platform;
+use bonseyes::models;
+
+fn main() {
+    common::banner("Table 3", "TF Lite vs LPDNN (format-conversion penalty)");
+    let nets = ["mobilenet-v2", "googlenet", "resnet50"];
+    // mobilenet comes "from TF Lite" (native); the others are converted
+    let native = [true, false, false];
+    let mut rows = Vec::new();
+    for platform in [Platform::pi3(), Platform::pi4()] {
+        for (net, &is_native) in nets.iter().zip(native.iter()) {
+            let (g, w) = models::by_name(net, 7).unwrap();
+            let x = common::image_input(&g, 1);
+            let opts = DeployOptions {
+                episodes: common::scaled(40, 8),
+                explore_episodes: common::scaled(16, 4),
+                native_format: is_native,
+                seed: 0,
+            };
+            let mut group = Group::new(net);
+            group.cfg = BenchConfig::from_env();
+            let lp = deploy(Framework::Lpdnn, &g, &w, platform.clone(), &x, &opts).unwrap();
+            let tf = deploy(Framework::TfLite, &g, &w, platform.clone(), &x, &opts).unwrap();
+            let lp_ms = group.bench(&format!("{}/{net}/lpdnn", platform.name), || {
+                std::hint::black_box(lp.run(&x));
+            });
+            let tf_ms = group.bench(&format!("{}/{net}/tflite", platform.name), || {
+                std::hint::black_box(tf.run(&x));
+            });
+            rows.push(vec![
+                format!("{} ({})", net, if is_native { "from TF Lite" } else { "from TF" }),
+                platform.name.clone(),
+                format!("{:.0}", lp_ms.mean),
+                format!("{:.0}", tf_ms.mean),
+                format!("{:.2}x", tf_ms.mean / lp_ms.mean),
+            ]);
+        }
+    }
+    println!(
+        "{}",
+        report::table(
+            "Table 3 — inference ms, TF Lite vs LPDNN",
+            &["DNN", "platform", "LPDNN ms", "TF Lite ms", "TFLite/LPDNN"],
+            &rows
+        )
+    );
+    println!("paper shape: native mobilenet ~parity (1.1x); converted nets ~2x+ slower.");
+}

@@ -1,0 +1,97 @@
+//! Table 4: Pareto-optimal CNN architectures from NAS (TPE + Pareto
+//! selection). Default: surrogate evaluator (DESIGN.md §6); run the real
+//! PJRT-training evaluator via `cargo bench --bench table4 -- --real-train`
+//! (or env BONSEYES_NAS_REAL=1) with a reduced trial budget.
+
+#[path = "common.rs"]
+mod common;
+
+use bonseyes::bench::report;
+use bonseyes::ingestion::bta::{Bta, Dataset};
+use bonseyes::ingestion::synth;
+use bonseyes::ingestion::tools::MfccTool;
+use bonseyes::nas::evaluator::{Real, Surrogate};
+use bonseyes::nas::space::{paper_arch, KwsArch};
+use bonseyes::nas::{flops, search, NasConfig};
+use bonseyes::runtime::EngineHandle;
+use bonseyes::util::json::Json;
+
+fn build_feature_sets(engine: &EngineHandle) -> (Dataset, Dataset) {
+    let (audio, labels) = synth::generate_dataset(16, 10, 5);
+    let n = labels.len();
+    let mfcc = MfccTool::compute(engine, &audio, n).unwrap();
+    let split = n * 8 / 10;
+    let feat = 40 * 32;
+    let mk = |lo: usize, hi: usize| {
+        let mut b = Bta::new();
+        b.push("mfcc", &[hi - lo, 40, 32], mfcc[lo * feat..hi * feat].to_vec());
+        b.push("labels", &[hi - lo], labels[lo..hi].iter().map(|&l| l as f32).collect());
+        b.extra = Json::obj(vec![(
+            "classes",
+            Json::arr((0..12).map(|i| Json::str(format!("c{i}"))).collect()),
+        )]);
+        Dataset::from_bta(&b, "mfcc").unwrap()
+    };
+    (mk(0, split), mk(split, n))
+}
+
+fn main() {
+    let real = std::env::args().any(|a| a == "--real-train")
+        || std::env::var("BONSEYES_NAS_REAL").map(|v| v == "1").unwrap_or(false);
+    common::banner("Table 4", "Pareto-optimal CNN architectures from NAS");
+    let cfg = NasConfig {
+        trials: if real { common::scaled(12, 4) } else { common::scaled(200, 60) },
+        ds: false,
+        ..Default::default()
+    };
+    let out = if real {
+        let engine = EngineHandle::spawn(common::artifacts_dir()).unwrap();
+        let (train, val) = build_feature_sets(&engine);
+        let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+        let mut eval = Real::new(&root, &train, &val, common::scaled(80, 25));
+        search(&cfg, &mut eval).unwrap()
+    } else {
+        search(&cfg, &mut Surrogate).unwrap()
+    };
+    let mut rows: Vec<Vec<String>> = out
+        .frontier_rows()
+        .into_iter()
+        .map(|(desc, acc, mf, kb)| {
+            vec![desc, format!("{acc:.1}%"), format!("{mf:.1}"), format!("{kb:.1}")]
+        })
+        .collect();
+    // seed + paper rows for shape comparison
+    let seed = KwsArch { ds: false, convs: vec![(3, 100); 6] };
+    rows.push(vec![
+        "(seed, paper: 4x10/3x3,100)".into(),
+        "94.2% paper".into(),
+        format!("{:.1}", flops::mflops(&seed)),
+        format!("{:.1}", flops::size_kb(&seed)),
+    ]);
+    for name in ["kws1", "kws3", "kws9"] {
+        let a = paper_arch(name).unwrap();
+        rows.push(vec![
+            format!("(paper {name}: {})", a.describe()),
+            match name {
+                "kws1" => "95.1% paper".into(),
+                "kws3" => "94.1% paper".into(),
+                _ => "93.4% paper".into(),
+            },
+            format!("{:.1}", flops::mflops(&a)),
+            format!("{:.1}", flops::size_kb(&a)),
+        ]);
+    }
+    println!(
+        "{}",
+        report::table(
+            &format!(
+                "Table 4 — NAS Pareto frontier ({} evaluator, {} candidates)",
+                if real { "real PJRT-trained" } else { "surrogate" },
+                out.candidates.len()
+            ),
+            &["architecture", "TOP-1", "MFP_ops", "size KB"],
+            &rows
+        )
+    );
+    println!("paper shape: frontier dominates the seed (better acc at 2.6-15x fewer ops).");
+}

@@ -1,0 +1,39 @@
+//! Deploy one network under every framework policy and print the
+//! latency ranking — a one-model slice of Fig 15.
+//!
+//!     cargo run --release --example framework_comparison [model] [platform]
+//! defaults: squeezenet pi4
+
+use bonseyes::bench::report;
+use bonseyes::frameworks::{deploy, DeployOptions, Framework, BASELINES};
+use bonseyes::lne::platform::Platform;
+use bonseyes::models;
+use bonseyes::tensor::Tensor;
+use bonseyes::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let model = args.first().map(|s| s.as_str()).unwrap_or("squeezenet");
+    let platform = Platform::by_name(args.get(1).map(|s| s.as_str()).unwrap_or("pi4"))
+        .ok_or_else(|| anyhow::anyhow!("unknown platform"))?;
+    let (g, w) = models::by_name(model, 0)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {model}; try one of {:?}",
+                                       models::IMAGENET_MODELS))?;
+    println!("{model} on {}: {:.1} MFLOPs, {:.0} KB, {} layers",
+             platform.name, g.mflops(), g.size_kb(&w), g.layers.len());
+    let mut rng = Rng::new(1);
+    let x = Tensor::randn(&[1, g.input.0, g.input.1, g.input.2], 1.0, &mut rng);
+    let opts = DeployOptions { episodes: 40, explore_episodes: 16, ..Default::default() };
+    let mut items = Vec::new();
+    for fw in BASELINES.iter().copied().chain([Framework::Lpdnn]) {
+        let d = deploy(fw, &g, &w, platform.clone(), &x, &opts)
+            .map_err(|e| anyhow::anyhow!(e))?;
+        let ms = d.latency_ms(&x, 5);
+        println!("  {:10} {ms:9.2} ms   [{}]", fw.name(),
+                 if fw == Framework::Lpdnn { "QS-DNN searched" } else { "fixed policy" });
+        items.push((fw.name().to_string(), ms));
+    }
+    println!("{}", report::barchart(
+        &format!("{model} on {} — lower is better", platform.name), &items, "ms"));
+    Ok(())
+}

@@ -1,0 +1,138 @@
+//! END-TO-END DRIVER (the serving-paper validation required by DESIGN.md):
+//! run the complete Bonseyes pipeline — data ingestion -> MFCC -> training
+//! (PJRT train-step) -> accuracy benchmark -> Q+S compression -> LPDNN
+//! deployment — then stand up the KWS serving stack and push batched
+//! requests through it, reporting accuracy, latency percentiles and
+//! throughput. Results are recorded in EXPERIMENTS.md.
+//!
+//!     make artifacts && cargo run --release --example kws_pipeline_e2e
+//!
+//! Env: E2E_ARCH (default ds_kws3), E2E_ITERS (default 260),
+//!      E2E_PER_CLASS (default 32), E2E_REQUESTS (default 256).
+
+use bonseyes::pipeline::artifact::ArtifactStore;
+use bonseyes::pipeline::workflow::{run, Workflow};
+use bonseyes::runtime::EngineHandle;
+use bonseyes::serving::{BatcherConfig, KwsServer, Router as ServingRouter, ServableModel};
+use bonseyes::toolset::builtin_registry;
+use bonseyes::http::client;
+use bonseyes::util::json::Json;
+use bonseyes::util::stats::summarize;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn env_usize(k: &str, d: usize) -> usize {
+    std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d)
+}
+
+fn main() -> anyhow::Result<()> {
+    let arch = std::env::var("E2E_ARCH").unwrap_or_else(|_| "ds_kws3".into());
+    let iters = env_usize("E2E_ITERS", 260);
+    let per_class = env_usize("E2E_PER_CLASS", 32);
+    let n_requests = env_usize("E2E_REQUESTS", 256);
+
+    println!("== Bonseyes end-to-end: ingest -> train({arch},{iters}) -> deploy -> serve ==");
+    let engine = EngineHandle::spawn("artifacts")?;
+    let store_dir = std::env::temp_dir().join("bonseyes-e2e-example");
+    let _ = std::fs::remove_dir_all(&store_dir);
+    let store = ArtifactStore::open(&store_dir)?;
+    let reg = builtin_registry();
+
+    // ---- stages 1-3 of the paper's pipeline as one workflow -------------
+    let wf = Workflow::parse(&format!(
+        r#"{{"name":"kws-e2e","steps":[
+  {{"tool":"speech-commands-import","params":{{"per_class":{per_class},"seed":5}},"outputs":{{"data":"raw"}}}},
+  {{"tool":"partition","params":{{"val_frac":0.1,"test_frac":0.2}},"inputs":{{"data":"raw"}},
+    "outputs":{{"train":"r-train","val":"r-val","test":"r-test"}}}},
+  {{"tool":"mfcc-features","inputs":{{"data":"r-train"}},"outputs":{{"features":"f-train"}}}},
+  {{"tool":"mfcc-features","inputs":{{"data":"r-val"}},"outputs":{{"features":"f-val"}}}},
+  {{"tool":"mfcc-features","inputs":{{"data":"r-test"}},"outputs":{{"features":"f-test"}}}},
+  {{"tool":"train-kws","params":{{"arch":"{arch}","iterations":{iters}}},
+    "inputs":{{"train":"f-train","val":"f-val"}},"outputs":{{"model":"model"}}}},
+  {{"tool":"benchmark-kws","inputs":{{"model":"model","test":"f-test"}},"outputs":{{"report":"report"}}}},
+  {{"tool":"quantize-model","inputs":{{"model":"model"}},"outputs":{{"model":"model-q"}}}},
+  {{"tool":"sparsify-model","params":{{"fraction":0.3}},"inputs":{{"model":"model-q"}},"outputs":{{"model":"model-qs"}}}},
+  {{"tool":"benchmark-kws","inputs":{{"model":"model-qs","test":"f-test"}},"outputs":{{"report":"report-qs"}}}},
+  {{"tool":"deploy-lpdnn","params":{{"episodes":40}},"inputs":{{"model":"model"}},"outputs":{{"app":"app"}}}}
+]}}"#
+    ))
+    .map_err(|e| anyhow::anyhow!(e))?;
+    let t0 = Instant::now();
+    let report = run(&wf, &reg, &store, Some(engine.clone()), false)
+        .map_err(|e| anyhow::anyhow!(e))?;
+    println!("\npipeline done in {:.1}s:", t0.elapsed().as_secs_f64());
+    for s in &report.steps {
+        println!("  {:26} {:7.2}s{}", s.tool, s.seconds, if s.skipped { " (skipped)" } else { "" });
+    }
+    let acc_report = Json::parse(
+        &std::fs::read_to_string(store.dir("report").join("report.json"))?,
+    )
+    .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let acc = acc_report.get("accuracy").as_f64().unwrap_or(0.0);
+    let acc_qs = Json::parse(
+        &std::fs::read_to_string(store.dir("report-qs").join("report.json"))?,
+    )
+    .map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!("\ntest accuracy: {:.2}%  (Q+S compressed: {:.2}%)",
+             acc * 100.0, acc_qs.get("accuracy").as_f64().unwrap_or(0.0) * 100.0);
+    let app = Json::parse(&std::fs::read_to_string(store.dir("app").join("app.json"))?)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!("LPDNN deployment: {} on {} -> {:.2} ms/inference",
+             app.get("arch").as_str().unwrap_or("?"),
+             app.get("platform").as_str().unwrap_or("?"),
+             app.get("latency_ms").as_f64().unwrap_or(0.0));
+
+    // ---- stage 4: serve the trained model over HTTP with batching -------
+    let model = ServableModel::from_artifact(&store.dir("model"))
+        .map_err(|e| anyhow::anyhow!(e))?;
+    let mut router = ServingRouter::new(engine.clone());
+    router.register(model, BatcherConfig { max_wait_ms: 4.0, max_batch: 32 })?;
+    let serving = Arc::new(router);
+    let mut server = KwsServer::serve(Arc::clone(&serving), "127.0.0.1:0", 16)?;
+    let base = format!("http://{}", server.addr);
+    println!("\nserving on {base}; pushing {n_requests} concurrent requests...");
+
+    let t0 = Instant::now();
+    let lat = Arc::new(std::sync::Mutex::new(Vec::<f64>::new()));
+    let correct = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+    std::thread::scope(|s| {
+        for w in 0..16usize {
+            let base = base.clone();
+            let lat = Arc::clone(&lat);
+            let correct = Arc::clone(&correct);
+            s.spawn(move || {
+                let per = n_requests / 16;
+                for i in 0..per {
+                    let class = (w * per + i) % 10;
+                    let body = Json::parse(&format!(
+                        r#"{{"synthesize": {{"class": {class}, "seed": {}}}}}"#,
+                        1000 + w * per + i
+                    ))
+                    .unwrap();
+                    let t = Instant::now();
+                    let resp = client::post_json(&format!("{base}/v1/kws"), &body).unwrap();
+                    let ms = t.elapsed().as_secs_f64() * 1e3;
+                    lat.lock().unwrap().push(ms);
+                    let got = resp.json().unwrap().get("class_id").as_usize().unwrap_or(99);
+                    if got == class {
+                        correct.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    }
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let lats = lat.lock().unwrap().clone();
+    let s = summarize(&lats);
+    let served_acc =
+        correct.load(std::sync::atomic::Ordering::Relaxed) as f64 / lats.len() as f64;
+    println!("\n== serving results ==");
+    println!("requests      : {}", lats.len());
+    println!("throughput    : {:.1} req/s", lats.len() as f64 / wall);
+    println!("latency mean  : {:.1} ms   p50 {:.1}  p95 {:.1}  p99 {:.1}  max {:.1}",
+             s.mean, s.p50, s.p95, s.p99, s.max);
+    println!("served accuracy (keyword classes): {:.1}%", served_acc * 100.0);
+    println!("batcher stats : {}", serving.metrics.snapshot());
+    server.stop();
+    Ok(())
+}

@@ -1,0 +1,38 @@
+//! Neural Architecture Search demo (paper §5.3): TPE over the KWS conv
+//! space + Pareto selection, printing the accuracy/MFLOPs frontier against
+//! the paper's Table-4 rows.
+//!
+//!     cargo run --release --example nas_search [--ds] [--trials N]
+
+use bonseyes::nas::evaluator::Surrogate;
+use bonseyes::nas::space::{paper_arch, KwsArch};
+use bonseyes::nas::{flops, search, NasConfig};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let ds = args.iter().any(|a| a == "--ds");
+    let trials = args
+        .iter()
+        .position(|a| a == "--trials")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(200);
+    let cfg = NasConfig { trials, ds, ..Default::default() };
+    println!("searching {} {} architectures with TPE...", trials,
+             if ds { "DS_CNN" } else { "CNN" });
+    let out = search(&cfg, &mut Surrogate).map_err(|e| anyhow::anyhow!(e))?;
+    println!("\nPareto frontier (accuracy vs MFP_ops):");
+    println!("{:>7} {:>9} {:>9}  architecture", "TOP-1", "MFP_ops", "size KB");
+    for (desc, acc, mf, kb) in out.frontier_rows() {
+        println!("{acc:6.1}% {mf:9.1} {kb:9.1}  {desc}");
+    }
+    let seed = KwsArch { ds, convs: vec![(3, 100); 6] };
+    println!("\nseed for comparison: {:.1} MFP_ops, {:.1} KB",
+             flops::mflops(&seed), flops::size_kb(&seed));
+    for name in if ds { ["ds_kws1", "ds_kws3", "ds_kws9"] } else { ["kws1", "kws3", "kws9"] } {
+        let a = paper_arch(name).unwrap();
+        println!("paper {name}: {:.1} MFP_ops, {:.1} KB  [{}]",
+                 flops::mflops(&a), flops::size_kb(&a), a.describe());
+    }
+    Ok(())
+}

@@ -1,0 +1,26 @@
+//! §Perf probe: GEMM throughput across shapes (L3 hot path).
+use bonseyes::lne::primitives::gemm::{gemm_blocked, gemm_ref, Blocking};
+use bonseyes::util::rng::Rng;
+use std::time::Instant;
+
+fn main() {
+    let shapes = [(96usize, 363usize, 1024usize), (256, 2304, 256), (64, 576, 4096), (1000, 512, 1)];
+    let mut rng = Rng::new(0);
+    for (m, k, n) in shapes {
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal_f32()).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal_f32()).collect();
+        let mut c = vec![0.0f32; m * n];
+        let flops = 2.0 * (m * k * n) as f64;
+        let time = |f: &mut dyn FnMut()| {
+            f();
+            let t0 = Instant::now();
+            let mut iters = 0;
+            while t0.elapsed().as_secs_f64() < 0.4 { f(); iters += 1; }
+            t0.elapsed().as_secs_f64() / iters as f64
+        };
+        let t_ref = time(&mut || gemm_ref(m, k, n, &a, &b, None, &mut c));
+        let t_blk = time(&mut || gemm_blocked(m, k, n, &a, &b, None, &mut c, Blocking::default()));
+        println!("{m}x{k}x{n}: ref {:.2} GF/s, blocked {:.2} GF/s ({:.2}x)",
+                 flops / t_ref / 1e9, flops / t_blk / 1e9, t_ref / t_blk);
+    }
+}

@@ -1,0 +1,53 @@
+//! Quickstart: load the AOT artifacts, extract MFCC features through the
+//! pallas kernel via PJRT, and classify a synthetic keyword with a KWS
+//! model — the minimal tour of the three-layer stack.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use bonseyes::ingestion::synth;
+use bonseyes::runtime::{EngineHandle, OwnedInput};
+use bonseyes::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // 1. open the artifacts (HLO text compiled on the PJRT CPU client)
+    let engine = EngineHandle::spawn("artifacts")?;
+    let m = engine.manifest.clone();
+    println!("loaded {} graphs / {} architectures", m.graphs.len(), m.archs.len());
+
+    // 2. synthesize a keyword utterance ("left" = class 4)
+    let class = 4usize;
+    let audio = synth::generate(class, m.classes.len() - 2, &mut Rng::new(7));
+    println!("synthesized 1 s of '{}' audio ({} samples)", m.classes[class], audio.len());
+
+    // 3. MFCC front-end: the L1 pallas logmel kernel, AOT-lowered, run from rust
+    let mfcc = engine
+        .run("mfcc_b1", vec![OwnedInput::new(audio, &[1, m.samples])])?
+        .remove(0);
+    println!("MFCC features: {}x{} (40x32 per the paper §4)", m.mel_bands, m.frames);
+
+    // 4. KWS inference with the ds_kws9 model (He-init here; train it with
+    //    `bonseyes pipeline run configs/workflows/kws_e2e.json`)
+    let arch = m.arch("ds_kws9").unwrap();
+    let params = engine.read_blob(&arch.init_file)?;
+    let stats = engine.read_blob(&arch.init_stats_file)?;
+    let logits = engine
+        .run(
+            "ds_kws9_infer_b1",
+            vec![
+                OwnedInput::new(params, &[arch.n_params]),
+                OwnedInput::new(stats, &[arch.n_stats]),
+                OwnedInput::new(mfcc, &[1, m.mel_bands, m.frames]),
+            ],
+        )?
+        .remove(0);
+    let best = logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0;
+    println!("logits: {logits:.3?}");
+    println!("predicted '{}' (untrained weights — see the kws_pipeline_e2e example)",
+             m.classes[best]);
+    Ok(())
+}

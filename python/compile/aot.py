@@ -1,0 +1,214 @@
+"""AOT compiler: lower L2 graphs (which embed the L1 pallas kernels) to HLO
+*text* artifacts for the rust PJRT runtime, plus a JSON manifest.
+
+HLO text — NOT serialized HloModuleProto — is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published `xla` 0.1.6 crate links) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/load_hlo.
+
+Emitted per run (default: every arch in configs/kws_archs.json):
+  artifacts/mfcc_b{B}.hlo.txt              MFCC front-end (paper §4)
+  artifacts/{arch}_infer_b{B}.hlo.txt      inference graphs (serving buckets)
+  artifacts/{arch}_train_b{B}.hlo.txt      Adam train step (paper §5.1)
+  artifacts/{arch}_init.bin / _init_stats.bin   He-init flat state (f32 LE)
+  artifacts/manifest.json                  graph/arch metadata + state layout
+
+NAS mode (invoked by the rust NAS tool as a pipeline *tool* — python stays on
+the compile path, never the request path):
+  python -m compile.aot --arch-json '{"type":"cnn","convs":[...]}' \
+      --name cand7 --out-dir ../artifacts/nas --train-batch 32
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import features, model
+
+MFCC_BATCHES = [1, 8, 32, 64]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    # print_large_constants is ESSENTIAL: the default printer elides big
+    # literals as `constant({...})`, which the rust-side HLO text parser
+    # reads back as zeros — silently zeroing the MFCC DFT bases and framing
+    # indices. (Found the hard way; see EXPERIMENTS.md.)
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def io_meta(shapes_in, shapes_out):
+    return ([{"name": n, "shape": list(s), "dtype": "f32"} for n, s in shapes_in],
+            [{"name": n, "shape": list(s), "dtype": "f32"} for n, s in shapes_out])
+
+
+def emit(out_dir, name, text):
+    path = os.path.join(out_dir, name + ".hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text)} chars)")
+    return name + ".hlo.txt"
+
+
+def lower_mfcc(batch):
+    def fn(audio):
+        return (features.mfcc(audio),)
+    return jax.jit(fn).lower(spec((batch, features.SAMPLE_RATE)))
+
+
+def lower_infer(arch, num_classes, n_params, n_stats, batch, mel, frames):
+    fn = model.make_infer_fn(arch, num_classes)
+    return jax.jit(fn).lower(
+        spec((n_params,)), spec((n_stats,)), spec((batch, mel, frames)))
+
+
+def lower_train(arch, num_classes, n_params, n_stats, batch, mel, frames, cfg):
+    fn = model.make_train_step(arch, num_classes, cfg)
+    return jax.jit(fn).lower(
+        spec((n_params,)), spec((n_stats,)), spec((n_params,)),
+        spec((n_params,)), spec(()), spec((batch, mel, frames)),
+        spec((batch,)))
+
+
+def arch_entry(arch, num_classes, out_dir, name, seed=0):
+    """Init-state files + layout metadata for one architecture."""
+    p_layout, n_params = model.layout(model.param_spec(arch, num_classes))
+    s_layout, n_stats = model.layout(model.stats_spec(arch))
+    params, stats = model.init_params(arch, num_classes, seed=seed)
+    pflat = np.asarray(model.flatten(params, model.param_spec(arch, num_classes)))
+    sflat = np.asarray(model.flatten(stats, model.stats_spec(arch)))
+    init_f = f"{name}_init.bin"
+    init_s = f"{name}_init_stats.bin"
+    pflat.astype("<f4").tofile(os.path.join(out_dir, init_f))
+    sflat.astype("<f4").tofile(os.path.join(out_dir, init_s))
+    return {
+        "type": arch["type"], "convs": arch["convs"],
+        "n_params": n_params, "n_stats": n_stats,
+        "param_layout": p_layout, "stats_layout": s_layout,
+        "init_file": init_f, "init_stats_file": init_s,
+    }
+
+
+def build_arch(cfgall, arch, name, out_dir, infer_batches, train_batch):
+    nc = cfgall["num_classes"]
+    mel = cfgall["input"]["mel_bands"]
+    frames = cfgall["input"]["frames"]
+    entry = arch_entry(arch, nc, out_dir, name)
+    n_params, n_stats = entry["n_params"], entry["n_stats"]
+    graphs = []
+    for b in infer_batches:
+        text = to_hlo_text(lower_infer(arch, nc, n_params, n_stats, b, mel,
+                                       frames))
+        fname = emit(out_dir, f"{name}_infer_b{b}", text)
+        ins, outs = io_meta(
+            [("params", (n_params,)), ("stats", (n_stats,)),
+             ("x", (b, mel, frames))],
+            [("logits", (b, nc))])
+        graphs.append({"name": f"{name}_infer_b{b}", "file": fname,
+                       "kind": "infer", "arch": name, "batch": b,
+                       "inputs": ins, "outputs": outs})
+    if train_batch:
+        b = train_batch
+        text = to_hlo_text(lower_train(arch, nc, n_params, n_stats, b, mel,
+                                       frames, cfgall["train"]))
+        fname = emit(out_dir, f"{name}_train_b{b}", text)
+        ins, outs = io_meta(
+            [("params", (n_params,)), ("stats", (n_stats,)),
+             ("m", (n_params,)), ("v", (n_params,)), ("step", ()),
+             ("x", (b, mel, frames)), ("y", (b,))],
+            [("params", (n_params,)), ("stats", (n_stats,)),
+             ("m", (n_params,)), ("v", (n_params,)), ("loss", ()),
+             ("acc", ())])
+        graphs.append({"name": f"{name}_train_b{b}", "file": fname,
+                       "kind": "train", "arch": name, "batch": b,
+                       "inputs": ins, "outputs": outs})
+    return entry, graphs
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join(
+        os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--config", default=model.CONFIG_PATH)
+    ap.add_argument("--archs", default="", help="comma list; default all")
+    ap.add_argument("--arch-json", default="", help="single inline arch (NAS)")
+    ap.add_argument("--name", default="cand", help="name for --arch-json")
+    ap.add_argument("--train-batch", type=int, default=0,
+                    help="override train batch (0 = config value)")
+    ap.add_argument("--infer-batches", default="", help="override, comma list")
+    ap.add_argument("--no-mfcc", action="store_true")
+    args = ap.parse_args()
+
+    cfgall = model.load_config(args.config)
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+    train_batch = args.train_batch or cfgall["train"]["batch"]
+    infer_batches = ([int(b) for b in args.infer_batches.split(",") if b]
+                     or cfgall["infer_batches"])
+
+    manifest = {
+        "version": 1,
+        "mel_bands": cfgall["input"]["mel_bands"],
+        "frames": cfgall["input"]["frames"],
+        "samples": cfgall["input"]["samples"],
+        "sample_rate": cfgall["input"]["sample_rate"],
+        "num_classes": cfgall["num_classes"],
+        "classes": cfgall["classes"],
+        "train_cfg": dict(cfgall["train"], batch=train_batch),
+        "graphs": [], "archs": {},
+    }
+
+    if args.arch_json:
+        # NAS tool path: one candidate, its own manifest, no MFCC graphs.
+        arch = json.loads(args.arch_json)
+        entry, graphs = build_arch(cfgall, arch, args.name, out_dir,
+                                   infer_batches, train_batch)
+        manifest["archs"][args.name] = entry
+        manifest["graphs"] = graphs
+        mpath = os.path.join(out_dir, f"{args.name}.manifest.json")
+        with open(mpath, "w") as f:
+            json.dump(manifest, f)
+        print(f"  wrote {mpath}")
+        return
+
+    if not args.no_mfcc:
+        for b in MFCC_BATCHES:
+            text = to_hlo_text(lower_mfcc(b))
+            fname = emit(out_dir, f"mfcc_b{b}", text)
+            ins, outs = io_meta(
+                [("audio", (b, features.SAMPLE_RATE))],
+                [("mfcc", (b, features.N_MELS, features.N_FRAMES))])
+            manifest["graphs"].append(
+                {"name": f"mfcc_b{b}", "file": fname, "kind": "mfcc",
+                 "batch": b, "inputs": ins, "outputs": outs})
+
+    selected = [a for a in args.archs.split(",") if a] or \
+        list(cfgall["archs"].keys())
+    for name in selected:
+        arch = cfgall["archs"][name]
+        print(f"arch {name}:")
+        entry, graphs = build_arch(cfgall, arch, name, out_dir, infer_batches,
+                                   train_batch)
+        manifest["archs"][name] = entry
+        manifest["graphs"].extend(graphs)
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest: {len(manifest['graphs'])} graphs, "
+          f"{len(manifest['archs'])} archs -> {out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,109 @@
+"""MFCC front-end (paper §4): framing + window + DFT + mel + log + DCT.
+
+Constants (bases, filterbank, DCT matrix) are built with numpy at trace time
+and baked into the HLO artifact; the per-request compute is the L1 pallas
+kernel (kernels/logmel.py) plus one DCT matmul.
+
+Paper parameters: 16 kHz audio, 128 ms frames (2048 samples), 32 ms stride
+(512 samples), 40 mel bands, 40x32 MFCC output per 1 s sample. Center
+padding (frame_len/2 on both sides, librosa-style) yields exactly 32 frames.
+"""
+
+import functools
+
+import numpy as np
+import jax.numpy as jnp
+
+from .kernels import logmel as logmel_kernel
+
+SAMPLE_RATE = 16000
+FRAME_LEN = 2048
+STRIDE = 512
+N_MELS = 40
+N_FRAMES = 32
+N_FREQ = FRAME_LEN // 2 + 1            # 1025 one-sided bins
+F_PAD = -(-N_FREQ // logmel_kernel.BF) * logmel_kernel.BF  # padded to 1152
+LOG_EPS = 1e-6
+
+
+def hann(n: int) -> np.ndarray:
+    return 0.5 - 0.5 * np.cos(2.0 * np.pi * np.arange(n) / n)
+
+
+def dft_bases(frame_len: int = FRAME_LEN, f_pad: int = F_PAD):
+    """Windowed one-sided DFT bases: Cw[t,f] = hann[t] cos(2pi t f / N)."""
+    t = np.arange(frame_len)[:, None]
+    f = np.arange(f_pad)[None, :]
+    ang = 2.0 * np.pi * t * f / frame_len
+    w = hann(frame_len)[:, None]
+    cos_b = (w * np.cos(ang)).astype(np.float32)
+    sin_b = (w * -np.sin(ang)).astype(np.float32)
+    return cos_b, sin_b
+
+
+def hz_to_mel(f):
+    return 2595.0 * np.log10(1.0 + np.asarray(f) / 700.0)
+
+
+def mel_to_hz(m):
+    return 700.0 * (10.0 ** (np.asarray(m) / 2595.0) - 1.0)
+
+
+def mel_filterbank(n_mels: int = N_MELS, n_freq: int = N_FREQ,
+                   sample_rate: int = SAMPLE_RATE, fmin: float = 20.0,
+                   fmax: float = None) -> np.ndarray:
+    """HTK-style triangular mel filterbank, shape [n_mels, n_freq]."""
+    fmax = fmax or sample_rate / 2.0
+    mel_pts = np.linspace(hz_to_mel(fmin), hz_to_mel(fmax), n_mels + 2)
+    hz_pts = mel_to_hz(mel_pts)
+    bins = np.floor((FRAME_LEN + 1) * hz_pts / sample_rate).astype(int)
+    fb = np.zeros((n_mels, n_freq), dtype=np.float32)
+    for m in range(1, n_mels + 1):
+        lo, ctr, hi = bins[m - 1], bins[m], bins[m + 1]
+        ctr = max(ctr, lo + 1)
+        hi = max(hi, ctr + 1)
+        for k in range(lo, min(ctr, n_freq)):
+            fb[m - 1, k] = (k - lo) / (ctr - lo)
+        for k in range(ctr, min(hi, n_freq)):
+            fb[m - 1, k] = (hi - k) / (hi - ctr)
+    return fb
+
+
+def dct_matrix(n: int = N_MELS) -> np.ndarray:
+    """Orthonormal DCT-II matrix, shape [n, n]; row k = k-th coefficient."""
+    k = np.arange(n)[:, None]
+    t = np.arange(n)[None, :]
+    d = np.sqrt(2.0 / n) * np.cos(np.pi * (t + 0.5) * k / n)
+    d[0] *= np.sqrt(0.5)
+    return d.astype(np.float32)
+
+
+@functools.lru_cache(maxsize=1)
+def constants():
+    """(cos_basis, sin_basis, mel_t_padded, dct_t) as numpy arrays."""
+    cos_b, sin_b = dft_bases()
+    fb = mel_filterbank()                      # [40, 1025]
+    mel_t = np.zeros((F_PAD, N_MELS), dtype=np.float32)
+    mel_t[:N_FREQ, :] = fb.T                   # padded rows stay zero
+    dct_t = dct_matrix().T                     # [40, 40], logmel @ dct_t
+    return cos_b, sin_b, mel_t, dct_t
+
+
+def frame_signal(audio):
+    """audio f32[B, samples] -> centered frames f32[B*N_FRAMES, FRAME_LEN]."""
+    b = audio.shape[0]
+    padded = jnp.pad(audio, ((0, 0), (FRAME_LEN // 2, FRAME_LEN // 2)))
+    idx = np.arange(N_FRAMES)[:, None] * STRIDE + np.arange(FRAME_LEN)[None, :]
+    frames = padded[:, idx]                    # [B, 32, 2048] gather
+    return frames.reshape(b * N_FRAMES, FRAME_LEN)
+
+
+def mfcc(audio):
+    """f32[B, 16000] -> f32[B, N_MELS, N_FRAMES] MFCC tensor (paper's 40x32)."""
+    b = audio.shape[0]
+    cos_b, sin_b, mel_t, dct_t = constants()
+    frames = frame_signal(audio)
+    lm = logmel_kernel.logmel(frames, jnp.asarray(cos_b), jnp.asarray(sin_b),
+                              jnp.asarray(mel_t), eps=LOG_EPS)
+    coeffs = lm @ jnp.asarray(dct_t)           # [B*32, 40]
+    return coeffs.reshape(b, N_FRAMES, N_MELS).transpose(0, 2, 1)

@@ -1,0 +1,95 @@
+"""L1 Pallas kernel: fused log-mel spectrogram (the MFCC hot path, paper §4).
+
+The paper extracts MFCC features with librosa (FFT-based) on the ingestion
+host. TPU adaptation (DESIGN.md §Hardware-Adaptation): an FFT butterfly is
+hostile to a systolic array, so the DFT is expressed as two matmuls against
+fixed cos/sin bases with the Hann window folded into the bases:
+
+    power[f] = (x @ Cw)[f]^2 + (x @ Sw)[f]^2      Cw[t,f] = w[t] cos(2pi t f / N)
+
+followed in the same kernel by the mel projection and log:
+
+    out = log(power @ MelT + eps)
+
+VMEM schedule: the full bases are f32[2048, F] (~9 MB each, too big together
+with the frame block), so the grid is (frame_blocks, freq_blocks) and the
+frequency axis is the sequential/accumulation dimension: each step computes a
+(bn, bf) power tile and accumulates its mel projection into the resident
+(bn, n_mels) output block; the final step applies the log. Frequency rows
+>= n_freq (padding) carry all-zero mel columns, so they contribute nothing.
+
+interpret=True for CPU-PJRT execution (see matmul.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BN_FRAMES = 32   # frame-block rows per grid step (TPU tiling)
+BF = 128         # frequency-tile width (sequential axis, TPU tiling)
+
+# Same policy as kernels/matmul.py: the (BN_FRAMES, BF) grid is the TPU VMEM
+# schedule; under interpret=True each grid step is a sequential loop, so CPU
+# artifacts lower with whole-array single-step blocks.
+FAST_INTERP = True
+
+
+def _logmel_kernel(x_ref, c_ref, s_ref, m_ref, o_ref, *, f_steps: int, eps: float):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    xc = jnp.dot(x_ref[...], c_ref[...], preferred_element_type=jnp.float32)
+    xs = jnp.dot(x_ref[...], s_ref[...], preferred_element_type=jnp.float32)
+    power = xc * xc + xs * xs
+    o_ref[...] += jnp.dot(power, m_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(1) == f_steps - 1)
+    def _epilogue():
+        o_ref[...] = jnp.log(o_ref[...] + eps)
+
+
+def logmel(frames, cos_basis, sin_basis, mel_t, eps: float = 1e-6,
+           bn: int = 0, bf: int = 0):
+    """log(((frames@C)^2 + (frames@S)^2) @ mel_t + eps), fused in one kernel.
+
+    frames:    f32[N, frame_len]   windowless frames (window folded in bases)
+    cos_basis: f32[frame_len, F]   F padded to a multiple of `bf`
+    sin_basis: f32[frame_len, F]
+    mel_t:     f32[F, n_mels]      rows >= n_freq must be zero
+    returns    f32[N, n_mels]
+    """
+    n, frame_len = frames.shape
+    f = cos_basis.shape[1]
+    if bn == 0:
+        bn, bf = (n, f) if FAST_INTERP else (BN_FRAMES, BF)
+    n_mels = mel_t.shape[1]
+    assert cos_basis.shape == sin_basis.shape == (frame_len, f)
+    assert mel_t.shape[0] == f
+    bn_ = min(bn, n)
+    pad_n = (-n) % bn_
+    fp = frames if pad_n == 0 else jnp.pad(frames, ((0, pad_n), (0, 0)))
+    assert f % bf == 0, f"freq axis {f} must be a multiple of bf={bf}"
+    grid = (fp.shape[0] // bn_, f // bf)
+    out = pl.pallas_call(
+        functools.partial(_logmel_kernel, f_steps=grid[1], eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn_, frame_len), lambda i, ff: (i, 0)),
+            pl.BlockSpec((frame_len, bf), lambda i, ff: (0, ff)),
+            pl.BlockSpec((frame_len, bf), lambda i, ff: (0, ff)),
+            pl.BlockSpec((bf, n_mels), lambda i, ff: (ff, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn_, n_mels), lambda i, ff: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((fp.shape[0], n_mels), jnp.float32),
+        interpret=True,
+    )(fp, cos_basis, sin_basis, mel_t)
+    return out[:n]
+
+
+def vmem_bytes(frame_len: int = 2048, n_mels: int = 40,
+               bn: int = BN_FRAMES, bf: int = BF) -> int:
+    """Estimated VMEM residency of one grid step (f32)."""
+    return 4 * (bn * frame_len + 2 * frame_len * bf + bf * n_mels + bn * n_mels)

@@ -1,0 +1,128 @@
+"""L1 Pallas kernel: tiled matmul with fused bias + activation.
+
+This is the compute hot-spot of the KWS models: every convolution lowers to
+im2col + this kernel, and the FC head calls it directly, so the whole model
+inference is dominated by MXU-shaped matmul tiles.
+
+TPU adaptation (see DESIGN.md §Hardware-Adaptation): instead of Arm NEON
+microkernels the paper's LNE plugins use, the kernel expresses an
+HBM->VMEM schedule with a (M/bm, N/bn, K/bk) grid; the K axis is the
+innermost (sequential/reduction) grid dimension accumulating into the
+output block, which stays resident in VMEM across K steps.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret-mode lowers to plain HLO so the AOT artifact runs
+on the rust PJRT CPU client. Real-TPU perf is estimated in DESIGN.md §Perf.
+
+A `jax.custom_vjp` wrapper makes the kernel differentiable (pallas_call has
+no automatic transpose rule); the backward pass reuses the same kernel for
+dX = dZ @ W^T and dW = X^T @ dZ, so training lowers through L1 too.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# TPU VMEM tile sizes. 128 matches the MXU systolic-array edge; 512 on K
+# amortizes the accumulate loop. Tiles are clamped to the (padded) problem.
+BM, BK, BN = 128, 512, 128
+
+# Tiling policy. On a real TPU the (BM, BK, BN) grid above is the point of
+# the kernel: the K axis streams HBM->VMEM while the output tile stays
+# resident. Under interpret=True every grid step is a sequential
+# dynamic-slice loop iteration in the lowered HLO, so the same tiling that
+# is optimal on the MXU is pure overhead on the CPU PJRT backend (measured
+# ~85x on a 20480x360x30 matmul; see EXPERIMENTS.md §Perf). AOT artifacts
+# therefore lower with `fast_interp` single-step blocks; tests exercise the
+# multi-step TPU grid for correctness with small explicit tiles.
+FAST_INTERP = True
+
+
+def _mm_kernel(x_ref, w_ref, b_ref, o_ref, *, k_steps: int, act: str):
+    """One (bm, bn) output tile; grid dim 2 walks K and accumulates."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _epilogue():
+        r = o_ref[...] + b_ref[...]
+        if act == "relu":
+            r = jnp.maximum(r, 0.0)
+        o_ref[...] = r
+
+
+def _pad_to(x, mults):
+    pads = [(0, (-d) % m) for d, m in zip(x.shape, mults)]
+    if all(p == (0, 0) for p in pads):
+        return x
+    return jnp.pad(x, pads)
+
+
+def matmul_bias_act_raw(x, w, b, act: str = "none", bm: int = 0, bk: int = 0, bn: int = 0):
+    """out = act(x @ w + b); x:[M,K] w:[K,N] b:[N]. Pure pallas, no vjp.
+
+    bm/bk/bn = 0 selects the policy default: whole-array single-step blocks
+    under FAST_INTERP (CPU artifacts), MXU tiles otherwise.
+    """
+    assert x.ndim == 2 and w.ndim == 2 and b.ndim == 1
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2 and b.shape[0] == n, (x.shape, w.shape, b.shape)
+    if bm == 0:
+        bm, bk, bn = (m, k, n) if FAST_INTERP else (BM, BK, BN)
+    bm_, bk_, bn_ = min(bm, m), min(bk, k), min(bn, n)
+    xp = _pad_to(x.astype(jnp.float32), (bm_, bk_))
+    wp = _pad_to(w.astype(jnp.float32), (bk_, bn_))
+    bp = _pad_to(b.astype(jnp.float32), (bn_,)).reshape(1, -1)
+    mp, kp = xp.shape
+    np_ = wp.shape[1]
+    grid = (mp // bm_, np_ // bn_, kp // bk_)
+    out = pl.pallas_call(
+        functools.partial(_mm_kernel, k_steps=grid[2], act=act),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn_), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def matmul_bias_act(x, w, b, act: str = "none"):
+    """Differentiable act(x @ w + b) routed through the L1 pallas kernel."""
+    return matmul_bias_act_raw(x, w, b, act)
+
+
+def _mm_fwd(x, w, b, act):
+    y = matmul_bias_act_raw(x, w, b, act)
+    return y, (x, w, y)
+
+
+def _mm_bwd(act, res, dy):
+    x, w, y = res
+    dz = jnp.where(y > 0, dy, 0.0) if act == "relu" else dy
+    zeros_k = jnp.zeros((w.shape[0],), jnp.float32)
+    zeros_n = jnp.zeros((w.shape[1],), jnp.float32)
+    dx = matmul_bias_act_raw(dz, w.T, zeros_k, "none")
+    dw = matmul_bias_act_raw(x.T, dz, zeros_n, "none")
+    db = jnp.sum(dz, axis=0)
+    return dx, dw, db
+
+
+matmul_bias_act.defvjp(_mm_fwd, _mm_bwd)
+
+
+def vmem_bytes(bm: int = BM, bk: int = BK, bn: int = BN) -> int:
+    """Estimated VMEM residency of one grid step (f32): x, w, bias, acc tiles."""
+    return 4 * (bm * bk + bk * bn + bn + bm * bn)

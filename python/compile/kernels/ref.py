@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for the L1 pallas kernels (pytest compares against these).
+
+Nothing here touches pallas; these are the ground-truth definitions of the
+computations the kernels implement. The MFCC oracle uses jnp.fft.rfft (the
+"librosa path" the paper used) so the DFT-as-matmul adaptation is validated
+against a genuinely different algorithm, not against itself.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def matmul_bias_act_ref(x, w, b, act: str = "none"):
+    y = x.astype(jnp.float32) @ w.astype(jnp.float32) + b.astype(jnp.float32)
+    if act == "relu":
+        y = jnp.maximum(y, 0.0)
+    return y
+
+
+def logmel_ref(frames, cos_basis, sin_basis, mel_t, eps: float = 1e-6):
+    """Same math as the kernel, plain jnp (used for exact-path comparison)."""
+    xc = frames @ cos_basis
+    xs = frames @ sin_basis
+    power = xc * xc + xs * xs
+    return jnp.log(power @ mel_t + eps)
+
+
+def mfcc_ref(audio):
+    """FFT-based MFCC oracle: frame -> hann -> rfft power -> mel -> log -> DCT."""
+    from .. import features as ft
+
+    padded = jnp.pad(audio, ((0, 0), (ft.FRAME_LEN // 2, ft.FRAME_LEN // 2)))
+    idx = (np.arange(ft.N_FRAMES)[:, None] * ft.STRIDE
+           + np.arange(ft.FRAME_LEN)[None, :])
+    frames = padded[:, idx]                                  # [B, 32, 2048]
+    windowed = frames * jnp.asarray(ft.hann(ft.FRAME_LEN), jnp.float32)
+    spec = jnp.fft.rfft(windowed, axis=-1)                   # [B, 32, 1025]
+    power = jnp.abs(spec) ** 2
+    fb = jnp.asarray(ft.mel_filterbank())                    # [40, 1025]
+    mel = power @ fb.T                                       # [B, 32, 40]
+    logmel = jnp.log(mel + ft.LOG_EPS)
+    coeffs = logmel @ jnp.asarray(ft.dct_matrix()).T         # [B, 32, 40]
+    return coeffs.transpose(0, 2, 1).astype(jnp.float32)     # [B, 40, 32]
+
+
+def conv2d_ref(x, w, b, stride=(1, 1)):
+    """SAME-padded NCHW conv oracle via jax.lax (used by model tests)."""
+    import jax
+
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=stride, padding="SAME",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+    return y + b.reshape(1, -1, 1, 1)

@@ -1,0 +1,281 @@
+"""L2: the paper's KWS model family (Tables 1, 4, 5) in JAX, calling L1 kernels.
+
+Two families (paper §5.2):
+  - `cnn`:    6x [conv -> batchnorm -> scale -> ReLU], avg-pool, FC.
+  - `ds_cnn`: conv block, then 5x depthwise-separable blocks
+              (dw conv -> BN -> ReLU -> pw conv -> BN -> ReLU), avg-pool, FC.
+
+Geometry: conv1 stride (1,2), all later convs stride (1,1), SAME padding —
+this reproduces the paper's reported MFP_ops and model sizes exactly (see
+configs/kws_archs.json).
+
+Every standard/pointwise convolution lowers through im2col + the L1 pallas
+matmul kernel (kernels/matmul.py), as does the FC head, so the model's
+compute hot-spot is the L1 kernel in both the inference and training HLO.
+Depthwise convolutions use lax.conv with feature_group_count (im2col
+degenerates per-channel; XLA's native dw conv is the right lowering).
+
+State layout: parameters / BN running stats / Adam moments are exchanged with
+the rust coordinator as *flat f32 vectors* with an explicit (name, kind,
+offset, shape) layout table recorded in the artifact manifest, so the rust
+tools (quantize, sparsify, checkpointing) can address individual tensors.
+
+Training step (paper §5.1): multinomial logistic loss + Adam, multi-step LR
+(lr = base * gamma^floor(step/lr_step)), BN batch stats with running-average
+update. Signature (all f32):
+    (params[P], stats[S], m[P], v[P], step[], x[B,40,32], y[B])
+ -> (params'[P], stats'[S], m'[P], v'[P], loss[], acc[])
+"""
+
+import json
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .kernels.matmul import matmul_bias_act
+
+BN_EPS = 1e-5
+CONFIG_PATH = os.path.join(os.path.dirname(__file__), "..", "..", "configs",
+                           "kws_archs.json")
+
+
+def load_config(path: str = CONFIG_PATH) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+# --------------------------------------------------------------------------
+# Parameter / stats specs (ordered; flat-vector layout derives from these)
+# --------------------------------------------------------------------------
+
+def param_spec(arch: dict, num_classes: int):
+    """Ordered trainable-parameter spec: list of (name, shape, kind)."""
+    spec = []
+    c_in = 1
+    for i, conv in enumerate(arch["convs"]):
+        kh, kw = conv["k"]
+        c = conv["c"]
+        n = i + 1
+        if arch["type"] == "cnn" or i == 0:
+            spec.append((f"conv{n}_w", (c, c_in, kh, kw), "conv_w"))
+            spec.append((f"conv{n}_b", (c,), "bias"))
+            spec.append((f"bn{n}_gamma", (c,), "bn_gamma"))
+            spec.append((f"bn{n}_beta", (c,), "bn_beta"))
+        else:
+            spec.append((f"dw{n}_w", (c_in, 1, kh, kw), "dw_w"))
+            spec.append((f"dw{n}_b", (c_in,), "bias"))
+            spec.append((f"bn{n}d_gamma", (c_in,), "bn_gamma"))
+            spec.append((f"bn{n}d_beta", (c_in,), "bn_beta"))
+            spec.append((f"pw{n}_w", (c, c_in, 1, 1), "conv_w"))
+            spec.append((f"pw{n}_b", (c,), "bias"))
+            spec.append((f"bn{n}p_gamma", (c,), "bn_gamma"))
+            spec.append((f"bn{n}p_beta", (c,), "bn_beta"))
+        c_in = c
+    spec.append(("fc_w", (c_in, num_classes), "fc_w"))
+    spec.append(("fc_b", (num_classes,), "bias"))
+    return spec
+
+
+def stats_spec(arch: dict):
+    """Ordered BN running-stat spec: list of (name, shape)."""
+    spec = []
+    c_in = 1
+    for i, conv in enumerate(arch["convs"]):
+        c = conv["c"]
+        n = i + 1
+        if arch["type"] == "cnn" or i == 0:
+            spec.append((f"bn{n}_mean", (c,)))
+            spec.append((f"bn{n}_var", (c,)))
+        else:
+            spec.append((f"bn{n}d_mean", (c_in,)))
+            spec.append((f"bn{n}d_var", (c_in,)))
+            spec.append((f"bn{n}p_mean", (c,)))
+            spec.append((f"bn{n}p_var", (c,)))
+        c_in = c
+    return spec
+
+
+def layout(spec):
+    """[(name, kind, offset, shape)] plus total length, for the manifest."""
+    out, off = [], 0
+    for entry in spec:
+        name, shape = entry[0], entry[1]
+        kind = entry[2] if len(entry) > 2 else "stat"
+        size = int(np.prod(shape))
+        out.append({"name": name, "kind": kind, "offset": off,
+                    "shape": list(shape), "size": size})
+        off += size
+    return out, off
+
+
+def flatten(tree: dict, spec) -> jnp.ndarray:
+    return jnp.concatenate([tree[e[0]].reshape(-1) for e in spec]) \
+        if spec else jnp.zeros((0,), jnp.float32)
+
+
+def unflatten(flat: jnp.ndarray, spec) -> dict:
+    out, off = {}, 0
+    for entry in spec:
+        name, shape = entry[0], entry[1]
+        size = int(np.prod(shape))
+        out[name] = flat[off:off + size].reshape(shape)
+        off += size
+    return out
+
+
+def init_params(arch: dict, num_classes: int, seed: int = 0):
+    """He-init conv/fc weights; returns (params_dict, stats_dict)."""
+    rng = np.random.RandomState(seed)
+    params, stats = {}, {}
+    for name, shape, kind in param_spec(arch, num_classes):
+        if kind in ("conv_w", "dw_w"):
+            fan_in = int(np.prod(shape[1:]))
+            params[name] = jnp.asarray(
+                rng.randn(*shape) * np.sqrt(2.0 / fan_in), jnp.float32)
+        elif kind == "fc_w":
+            fan_in = shape[0]
+            params[name] = jnp.asarray(
+                rng.randn(*shape) * np.sqrt(1.0 / fan_in), jnp.float32)
+        elif kind == "bn_gamma":
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:  # bias, bn_beta
+            params[name] = jnp.zeros(shape, jnp.float32)
+    for name, shape in stats_spec(arch):
+        stats[name] = (jnp.zeros if name.endswith("_mean") else jnp.ones)(
+            shape, jnp.float32)
+    return params, stats
+
+
+# --------------------------------------------------------------------------
+# Forward
+# --------------------------------------------------------------------------
+
+def conv2d(x, w, b, stride):
+    """SAME conv NCHW via im2col + the L1 pallas matmul kernel."""
+    bsz, c_in, h, wd = x.shape
+    c_out, _, kh, kw = w.shape
+    if (kh, kw) == (1, 1) and stride == (1, 1):
+        flat = x.transpose(0, 2, 3, 1).reshape(-1, c_in)
+        y = matmul_bias_act(flat, w.reshape(c_out, c_in).T, b, "none")
+        return y.reshape(bsz, h, wd, c_out).transpose(0, 3, 1, 2)
+    patches = jax.lax.conv_general_dilated_patches(
+        x, filter_shape=(kh, kw), window_strides=stride, padding="SAME")
+    _, feat, ho, wo = patches.shape            # feat = c_in*kh*kw, (c, kh, kw)
+    flat = patches.transpose(0, 2, 3, 1).reshape(-1, feat)
+    y = matmul_bias_act(flat, w.reshape(c_out, feat).T, b, "none")
+    return y.reshape(bsz, ho, wo, c_out).transpose(0, 3, 1, 2)
+
+
+def depthwise_conv2d(x, w, b, stride):
+    c = x.shape[1]
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=stride, padding="SAME",
+        feature_group_count=c,
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+    return y + b.reshape(1, -1, 1, 1)
+
+
+def batchnorm(x, gamma, beta, mean, var, train: bool, momentum: float):
+    if train:
+        mu = x.mean(axis=(0, 2, 3))
+        va = x.var(axis=(0, 2, 3))
+        new_mean = momentum * mean + (1.0 - momentum) * mu
+        new_var = momentum * var + (1.0 - momentum) * va
+    else:
+        mu, va = mean, var
+        new_mean, new_var = mean, var
+    inv = jax.lax.rsqrt(va + BN_EPS).reshape(1, -1, 1, 1)
+    xn = (x - mu.reshape(1, -1, 1, 1)) * inv
+    return gamma.reshape(1, -1, 1, 1) * xn + beta.reshape(1, -1, 1, 1), \
+        (new_mean, new_var)
+
+
+def forward(arch: dict, params: dict, stats: dict, x, train: bool,
+            bn_momentum: float = 0.9):
+    """x: f32[B, mel, frames] -> (logits f32[B, classes], new_stats dict)."""
+    h = x[:, None, :, :]
+    new_stats = {}
+
+    def bn_block(h, tag):
+        g, b = params[f"{tag}_gamma"], params[f"{tag}_beta"]
+        m, v = stats[f"{tag}_mean"], stats[f"{tag}_var"]
+        h, (nm, nv) = batchnorm(h, g, b, m, v, train, bn_momentum)
+        new_stats[f"{tag}_mean"], new_stats[f"{tag}_var"] = nm, nv
+        return jnp.maximum(h, 0.0)
+
+    for i in range(len(arch["convs"])):
+        n = i + 1
+        stride = (1, 2) if i == 0 else (1, 1)
+        if arch["type"] == "cnn" or i == 0:
+            h = conv2d(h, params[f"conv{n}_w"], params[f"conv{n}_b"], stride)
+            h = bn_block(h, f"bn{n}")
+        else:
+            h = depthwise_conv2d(h, params[f"dw{n}_w"], params[f"dw{n}_b"],
+                                 stride)
+            h = bn_block(h, f"bn{n}d")
+            h = conv2d(h, params[f"pw{n}_w"], params[f"pw{n}_b"], (1, 1))
+            h = bn_block(h, f"bn{n}p")
+    pooled = h.mean(axis=(2, 3))
+    logits = matmul_bias_act(pooled, params["fc_w"], params["fc_b"], "none")
+    return logits, new_stats
+
+
+# --------------------------------------------------------------------------
+# AOT entry points (flat-vector signatures the rust runtime calls)
+# --------------------------------------------------------------------------
+
+def make_infer_fn(arch: dict, num_classes: int):
+    pspec = param_spec(arch, num_classes)
+    sspec = stats_spec(arch)
+
+    def infer(params_flat, stats_flat, x):
+        params = unflatten(params_flat, pspec)
+        stats = unflatten(stats_flat, sspec)
+        logits, _ = forward(arch, params, stats, x, train=False)
+        return (logits,)
+
+    return infer
+
+
+def make_train_step(arch: dict, num_classes: int, cfg: dict):
+    pspec = param_spec(arch, num_classes)
+    sspec = stats_spec(arch)
+    base_lr, gamma = cfg["base_lr"], cfg["gamma"]
+    lr_step = cfg["lr_step"]
+    b1, b2, eps = cfg["adam_beta1"], cfg["adam_beta2"], cfg["adam_eps"]
+    momentum = cfg["bn_momentum"]
+
+    def train_step(params_flat, stats_flat, m, v, step, x, y):
+        def loss_fn(pf):
+            params = unflatten(pf, pspec)
+            stats = unflatten(stats_flat, sspec)
+            logits, new_stats = forward(arch, params, stats, x, train=True,
+                                        bn_momentum=momentum)
+            logp = jax.nn.log_softmax(logits, axis=-1)
+            yi = y.astype(jnp.int32)
+            ce = -jnp.take_along_axis(logp, yi[:, None], axis=-1).mean()
+            acc = (jnp.argmax(logits, -1) == yi).astype(jnp.float32).mean()
+            return ce, (flatten(new_stats, sspec), acc)
+
+        (loss, (new_stats_flat, acc)), grads = \
+            jax.value_and_grad(loss_fn, has_aux=True)(params_flat)
+        # Multi-step LR schedule (paper: drop to gamma x every lr_step iters).
+        lr = base_lr * jnp.power(gamma, jnp.floor(step / lr_step))
+        t = step + 1.0
+        m_new = b1 * m + (1.0 - b1) * grads
+        v_new = b2 * v + (1.0 - b2) * grads * grads
+        m_hat = m_new / (1.0 - jnp.power(b1, t))
+        v_hat = v_new / (1.0 - jnp.power(b2, t))
+        params_new = params_flat - lr * m_hat / (jnp.sqrt(v_hat) + eps)
+        return params_new, new_stats_flat, m_new, v_new, loss, acc
+
+    return train_step
+
+
+def state_sizes(arch: dict, num_classes: int):
+    """(n_params, n_stats) flat-vector lengths."""
+    _, p = layout(param_spec(arch, num_classes))
+    _, s = layout(stats_spec(arch))
+    return p, s

@@ -1,0 +1,108 @@
+"""AOT artifact tests: manifest consistency, HLO-text validity, init blobs."""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from compile import aot, model, features
+
+ART = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "..",
+                                   "artifacts"))
+MANIFEST = os.path.join(ART, "manifest.json")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(MANIFEST),
+    reason="artifacts not built (run `make artifacts`)")
+
+
+def manifest():
+    with open(MANIFEST) as f:
+        return json.load(f)
+
+
+def test_manifest_covers_all_archs_and_graphs():
+    m = manifest()
+    cfg = model.load_config()
+    assert set(m["archs"].keys()) == set(cfg["archs"].keys())
+    names = {g["name"] for g in m["graphs"]}
+    for b in aot.MFCC_BATCHES:
+        assert f"mfcc_b{b}" in names
+    for a in cfg["archs"]:
+        for b in cfg["infer_batches"]:
+            assert f"{a}_infer_b{b}" in names
+        assert f"{a}_train_b{m['train_cfg']['batch']}" in names
+
+
+def test_all_graph_files_exist_and_are_hlo_text():
+    m = manifest()
+    for g in m["graphs"]:
+        path = os.path.join(ART, g["file"])
+        assert os.path.exists(path), path
+        with open(path) as f:
+            head = f.read(200)
+        assert "HloModule" in head, path
+
+
+def test_layouts_match_model_spec():
+    m = manifest()
+    cfg = model.load_config()
+    for name, entry in m["archs"].items():
+        arch = cfg["archs"][name]
+        lay, total = model.layout(model.param_spec(arch, m["num_classes"]))
+        assert entry["n_params"] == total
+        assert entry["param_layout"] == lay
+        slay, stotal = model.layout(model.stats_spec(arch))
+        assert entry["n_stats"] == stotal
+
+
+def test_init_blobs_have_layout_size():
+    m = manifest()
+    for name, entry in m["archs"].items():
+        blob = np.fromfile(os.path.join(ART, entry["init_file"]), "<f4")
+        assert blob.shape[0] == entry["n_params"]
+        stats = np.fromfile(os.path.join(ART, entry["init_stats_file"]), "<f4")
+        assert stats.shape[0] == entry["n_stats"]
+        # BN variances init to 1, means to 0
+        for e in entry["stats_layout"]:
+            seg = stats[e["offset"]:e["offset"] + e["size"]]
+            if e["name"].endswith("_var"):
+                np.testing.assert_array_equal(seg, 1.0)
+            else:
+                np.testing.assert_array_equal(seg, 0.0)
+
+
+def test_graph_io_shapes_are_consistent():
+    m = manifest()
+    for g in m["graphs"]:
+        if g["kind"] == "mfcc":
+            assert g["inputs"][0]["shape"] == [g["batch"], m["samples"]]
+            assert g["outputs"][0]["shape"] == [g["batch"], m["mel_bands"],
+                                                m["frames"]]
+        elif g["kind"] == "infer":
+            arch = m["archs"][g["arch"]]
+            assert g["inputs"][0]["shape"] == [arch["n_params"]]
+            assert g["outputs"][0]["shape"] == [g["batch"], m["num_classes"]]
+        elif g["kind"] == "train":
+            arch = m["archs"][g["arch"]]
+            assert [i["name"] for i in g["inputs"]] == \
+                ["params", "stats", "m", "v", "step", "x", "y"]
+            assert g["outputs"][4]["name"] == "loss"
+
+
+def test_nas_mode_emits_candidate(tmp_path):
+    arch_json = json.dumps(
+        {"type": "cnn", "convs": [{"k": [3, 3], "c": 4}] * 2})
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--arch-json", arch_json,
+         "--name", "cand_t", "--out-dir", str(tmp_path),
+         "--infer-batches", "4", "--train-batch", "4"],
+        check=True, cwd=os.path.join(os.path.dirname(__file__), ".."))
+    with open(tmp_path / "cand_t.manifest.json") as f:
+        mm = json.load(f)
+    assert "cand_t" in mm["archs"]
+    assert (tmp_path / "cand_t_infer_b4.hlo.txt").exists()
+    assert (tmp_path / "cand_t_train_b4.hlo.txt").exists()

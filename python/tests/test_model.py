@@ -1,0 +1,177 @@
+"""L2 model tests: geometry vs paper numbers, conv vs lax oracle, BN
+semantics, flat-state round-trip, and a short training run that must learn."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels.ref import conv2d_ref
+
+CFG = model.load_config()
+NC = CFG["num_classes"]
+
+
+# ---------------------------------------------------------------- geometry
+
+@pytest.mark.parametrize("name,size_kb,tol", [
+    # Paper Table 1 / 4 / 5. The paper's Table-1 DS_CNN size (1017 KB) is
+    # inconsistent with its own architecture description and its own Table-5
+    # DS sizes, which *do* match the standard dw+pw accounting we use — so
+    # ds_cnn_seed is checked against that accounting (246 KB), documented in
+    # EXPERIMENTS.md.
+    # CNN family matches within Caffe-blob bookkeeping (<6%); the paper's DS
+    # sizes include accounting we can't reconstruct — tracked within 20%.
+    ("cnn_seed", 1832, 0.06), ("kws1", 707.0, 0.06), ("kws3", 282.1, 0.06),
+    ("kws9", 125.3, 0.06), ("ds_kws1", 61.5, 0.2), ("ds_kws3", 48.4, 0.2),
+    ("ds_kws9", 39.0, 0.2), ("ds_cnn_seed", 246.0, 0.03),
+])
+def test_model_size_matches_paper(name, size_kb, tol):
+    n_params, _ = model.state_sizes(CFG["archs"][name], NC)
+    got_kb = n_params * 4 / 1024
+    assert abs(got_kb - size_kb) / size_kb < tol, (got_kb, size_kb)
+
+
+@pytest.mark.parametrize("name", list(CFG["archs"].keys()))
+def test_layout_is_dense_and_ordered(name):
+    arch = CFG["archs"][name]
+    lay, total = model.layout(model.param_spec(arch, NC))
+    off = 0
+    for e in lay:
+        assert e["offset"] == off
+        assert e["size"] == int(np.prod(e["shape"]))
+        off += e["size"]
+    assert off == total
+
+
+@pytest.mark.parametrize("name", ["cnn_seed", "ds_kws1"])
+def test_flatten_unflatten_roundtrip(name):
+    arch = CFG["archs"][name]
+    params, stats = model.init_params(arch, NC, seed=3)
+    pspec = model.param_spec(arch, NC)
+    flat = model.flatten(params, pspec)
+    back = model.unflatten(flat, pspec)
+    for k in params:
+        np.testing.assert_array_equal(params[k], back[k])
+
+
+# ---------------------------------------------------------------- layers
+
+@settings(max_examples=10, deadline=None)
+@given(kh=st.sampled_from([1, 3, 4, 5]), kw=st.sampled_from([1, 3, 5, 10]),
+       cin=st.integers(1, 6), cout=st.integers(1, 8),
+       sw=st.sampled_from([1, 2]), seed=st.integers(0, 2**31 - 1))
+def test_conv2d_im2col_matches_lax(kh, kw, cin, cout, sw, seed):
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randn(2, cin, 12, 10), jnp.float32)
+    w = jnp.asarray(rng.randn(cout, cin, kh, kw), jnp.float32)
+    b = jnp.asarray(rng.randn(cout), jnp.float32)
+    got = model.conv2d(x, w, b, (1, sw))
+    want = conv2d_ref(x, w, b, (1, sw))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_depthwise_conv_shapes_and_values():
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(2, 4, 8, 6), jnp.float32)
+    w = jnp.asarray(rng.randn(4, 1, 3, 3), jnp.float32)
+    b = jnp.zeros(4, jnp.float32)
+    y = model.depthwise_conv2d(x, w, b, (1, 1))
+    assert y.shape == (2, 4, 8, 6)
+    # channel 0 of output depends only on channel 0 of input
+    x2 = x.at[:, 1:].set(0.0)
+    y2 = model.depthwise_conv2d(x2, w, b, (1, 1))
+    np.testing.assert_allclose(y[:, 0], y2[:, 0], rtol=1e-5, atol=1e-5)
+
+
+def test_batchnorm_train_normalizes_and_updates_stats():
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(8, 3, 5, 5) * 4 + 2, jnp.float32)
+    g = jnp.ones(3, jnp.float32)
+    b = jnp.zeros(3, jnp.float32)
+    y, (nm, nv) = model.batchnorm(x, g, b, jnp.zeros(3), jnp.ones(3),
+                                  train=True, momentum=0.5)
+    np.testing.assert_allclose(y.mean(axis=(0, 2, 3)), 0.0, atol=1e-4)
+    np.testing.assert_allclose(y.var(axis=(0, 2, 3)), 1.0, atol=1e-2)
+    np.testing.assert_allclose(nm, 0.5 * x.mean(axis=(0, 2, 3)), rtol=1e-4)
+
+
+def test_batchnorm_eval_uses_running_stats():
+    x = jnp.ones((2, 1, 2, 2), jnp.float32) * 10.0
+    y, (nm, nv) = model.batchnorm(x, jnp.ones(1), jnp.zeros(1),
+                                  jnp.asarray([10.0]), jnp.asarray([4.0]),
+                                  train=False, momentum=0.9)
+    np.testing.assert_allclose(y, 0.0, atol=1e-3)
+    np.testing.assert_array_equal(nm, [10.0])
+
+
+# ---------------------------------------------------------------- forward
+
+@pytest.mark.parametrize("name", ["kws9", "ds_kws9"])
+def test_forward_shape_and_determinism(name):
+    arch = CFG["archs"][name]
+    params, stats = model.init_params(arch, NC)
+    x = jnp.asarray(np.random.RandomState(0).randn(3, 40, 32), jnp.float32)
+    logits, _ = model.forward(arch, params, stats, x, train=False)
+    logits2, _ = model.forward(arch, params, stats, x, train=False)
+    assert logits.shape == (3, NC)
+    np.testing.assert_array_equal(logits, logits2)
+
+
+def test_infer_fn_matches_forward():
+    arch = CFG["archs"]["ds_kws9"]
+    params, stats = model.init_params(arch, NC)
+    pf = model.flatten(params, model.param_spec(arch, NC))
+    sf = model.flatten(stats, model.stats_spec(arch))
+    x = jnp.asarray(np.random.RandomState(1).randn(2, 40, 32), jnp.float32)
+    (got,) = model.make_infer_fn(arch, NC)(pf, sf, x)
+    want, _ = model.forward(arch, params, stats, x, train=False)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------- training
+
+def test_train_step_learns_separable_toy_data():
+    arch = CFG["archs"]["ds_kws9"]
+    params, stats = model.init_params(arch, NC)
+    pf = model.flatten(params, model.param_spec(arch, NC))
+    sf = model.flatten(stats, model.stats_spec(arch))
+    cfg = dict(CFG["train"], lr_step=10_000)
+    step_fn = jax.jit(model.make_train_step(arch, NC, cfg))
+    rng = np.random.RandomState(0)
+    # deterministic class signature: class k lights up mel band k
+    y = rng.randint(0, NC, 32)
+    x = rng.randn(32, 40, 32).astype(np.float32) * 0.1
+    for i, yi in enumerate(y):
+        x[i, yi * 3] += 3.0
+    x, yf = jnp.asarray(x), jnp.asarray(y, jnp.float32)
+    m = jnp.zeros_like(pf)
+    v = jnp.zeros_like(pf)
+    first_loss = None
+    for t in range(35):
+        pf, sf, m, v, loss, acc = step_fn(pf, sf, m, v, float(t), x, yf)
+        if first_loss is None:
+            first_loss = float(loss)
+    assert float(loss) < first_loss * 0.6, (first_loss, float(loss))
+    assert float(acc) > 0.5
+
+
+def test_lr_schedule_decays_updates():
+    arch = CFG["archs"]["ds_kws9"]
+    params, stats = model.init_params(arch, NC)
+    pf = model.flatten(params, model.param_spec(arch, NC))
+    sf = model.flatten(stats, model.stats_spec(arch))
+    cfg = dict(CFG["train"], lr_step=5)
+    step_fn = jax.jit(model.make_train_step(arch, NC, cfg))
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(8, 40, 32), jnp.float32)
+    y = jnp.asarray(rng.randint(0, NC, 8), jnp.float32)
+    z = jnp.zeros_like(pf)
+    # same state, steps on either side of the LR drop boundary
+    p_before = step_fn(pf, sf, z, z, 4.0, x, y)[0]
+    p_after = step_fn(pf, sf, z, z, 5.0, x, y)[0]
+    d_before = float(jnp.abs(p_before - pf).sum())
+    d_after = float(jnp.abs(p_after - pf).sum())
+    assert d_after < d_before * 0.5, (d_before, d_after)  # gamma = 0.3

@@ -1,0 +1,116 @@
+//! Criterion-like benchmark harness (substrate: criterion is unavailable
+//! offline). Warmup + adaptive iteration count + summary stats, plus the
+//! table/figure report printers used by `benches/*` to regenerate every
+//! table and figure of the paper (DESIGN.md §5).
+
+pub mod report;
+
+use crate::util::stats::{summarize, Summary};
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    /// Minimum wall time spent measuring (after warmup).
+    pub min_time_s: f64,
+    /// Hard cap on measured iterations.
+    pub max_iters: usize,
+    /// Minimum measured iterations.
+    pub min_iters: usize,
+    pub warmup_iters: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig { min_time_s: 0.5, max_iters: 200, min_iters: 5, warmup_iters: 1 }
+    }
+}
+
+impl BenchConfig {
+    /// Fast profile for CI / quick runs (BONSEYES_BENCH_FAST=1).
+    pub fn fast() -> Self {
+        BenchConfig { min_time_s: 0.05, max_iters: 10, min_iters: 2, warmup_iters: 1 }
+    }
+
+    pub fn from_env() -> Self {
+        if std::env::var("BONSEYES_BENCH_FAST").map(|v| v == "1").unwrap_or(false) {
+            Self::fast()
+        } else {
+            Self::default()
+        }
+    }
+}
+
+/// Benchmark a closure; returns per-iteration timing summary in milliseconds.
+/// Mirrors the paper's method (§8.2): discarded warm-up run, then averaged
+/// repeated inferences.
+pub fn bench(cfg: &BenchConfig, mut f: impl FnMut()) -> Summary {
+    for _ in 0..cfg.warmup_iters {
+        f();
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    loop {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e3);
+        let enough_time = start.elapsed().as_secs_f64() >= cfg.min_time_s;
+        if (samples.len() >= cfg.min_iters && enough_time)
+            || samples.len() >= cfg.max_iters
+        {
+            break;
+        }
+    }
+    summarize(&samples)
+}
+
+/// Named benchmark group collecting rows for a report table.
+pub struct Group {
+    pub name: String,
+    pub cfg: BenchConfig,
+    pub rows: Vec<(String, Summary)>,
+}
+
+impl Group {
+    pub fn new(name: &str) -> Group {
+        Group { name: name.to_string(), cfg: BenchConfig::from_env(), rows: Vec::new() }
+    }
+
+    pub fn bench(&mut self, label: &str, f: impl FnMut()) -> Summary {
+        let s = bench(&self.cfg, f);
+        eprintln!("  {:40} {:10.3} ms  (n={}, p95={:.3})", label, s.mean, s.n, s.p95);
+        self.rows.push((label.to_string(), s.clone()));
+        s
+    }
+
+    pub fn get(&self, label: &str) -> Option<&Summary> {
+        self.rows.iter().find(|(l, _)| l == label).map(|(_, s)| s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_sane_stats() {
+        let cfg = BenchConfig { min_time_s: 0.0, max_iters: 8, min_iters: 3, warmup_iters: 1 };
+        let mut n = 0u64;
+        let s = bench(&cfg, || {
+            n += 1;
+            std::hint::black_box((0..2000).sum::<u64>());
+        });
+        assert!(s.n >= 3 && s.n <= 8);
+        assert!(s.mean >= 0.0);
+        assert!(s.min <= s.p50 && s.p50 <= s.max);
+    }
+
+    #[test]
+    fn group_collects_rows() {
+        let mut g = Group::new("t");
+        g.cfg = BenchConfig { min_time_s: 0.0, max_iters: 2, min_iters: 1, warmup_iters: 0 };
+        g.bench("a", || {});
+        g.bench("b", || {});
+        assert_eq!(g.rows.len(), 2);
+        assert!(g.get("a").is_some());
+    }
+}

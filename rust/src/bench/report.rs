@@ -1,0 +1,110 @@
+//! Table/figure printers: every bench target renders its results in the
+//! same shape the paper reports (rows of a table, series of a figure), with
+//! the paper's values alongside for eyeball comparison.
+
+/// Render an ASCII table. `widths` derived from content.
+pub fn table(title: &str, headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = format!("\n== {title} ==\n");
+    let line = |out: &mut String| {
+        for w in &widths {
+            out.push('+');
+            out.push_str(&"-".repeat(w + 2));
+        }
+        out.push_str("+\n");
+    };
+    line(&mut out);
+    out.push('|');
+    for (h, w) in headers.iter().zip(&widths) {
+        out.push_str(&format!(" {h:w$} |"));
+    }
+    out.push('\n');
+    line(&mut out);
+    for row in rows {
+        out.push('|');
+        for (c, w) in row.iter().zip(&widths) {
+            out.push_str(&format!(" {c:>w$} |"));
+        }
+        out.push('\n');
+    }
+    line(&mut out);
+    out
+}
+
+/// Render a horizontal bar chart (one series), used for figure benches.
+pub fn barchart(title: &str, items: &[(String, f64)], unit: &str) -> String {
+    let max = items.iter().map(|(_, v)| *v).fold(f64::MIN, f64::max).max(1e-12);
+    let label_w = items.iter().map(|(l, _)| l.len()).max().unwrap_or(4);
+    let mut out = format!("\n-- {title} --\n");
+    for (label, v) in items {
+        let bar = "#".repeat(((v / max) * 50.0).round() as usize);
+        out.push_str(&format!("{label:label_w$} | {bar} {v:.2} {unit}\n"));
+    }
+    out
+}
+
+/// Grouped bars: one block per group, one bar per series member
+/// (e.g. Fig 15: per network, one bar per framework).
+pub fn grouped_barchart(
+    title: &str,
+    groups: &[(String, Vec<(String, f64)>)],
+    unit: &str,
+) -> String {
+    let mut out = format!("\n-- {title} --\n");
+    for (group, items) in groups {
+        out.push_str(&format!("[{group}]\n"));
+        out.push_str(&barchart_body(items, unit));
+    }
+    out
+}
+
+fn barchart_body(items: &[(String, f64)], unit: &str) -> String {
+    let max = items.iter().map(|(_, v)| *v).fold(f64::MIN, f64::max).max(1e-12);
+    let label_w = items.iter().map(|(l, _)| l.len()).max().unwrap_or(4);
+    let mut out = String::new();
+    for (label, v) in items {
+        let bar = "#".repeat(((v / max) * 40.0).round() as usize);
+        out.push_str(&format!("  {label:label_w$} | {bar} {v:.2} {unit}\n"));
+    }
+    out
+}
+
+/// Format "ours vs paper" with relative deviation.
+pub fn vs_paper(ours: f64, paper: f64) -> String {
+    if paper == 0.0 {
+        return format!("{ours:.1} (paper: n/a)");
+    }
+    format!("{ours:.1} (paper {paper:.1}, {:+.0}%)", (ours / paper - 1.0) * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_all_cells() {
+        let t = table("T", &["a", "bbbb"], &[vec!["1".into(), "2".into()]]);
+        assert!(t.contains("bbbb") && t.contains("| 1 |"));
+    }
+
+    #[test]
+    fn barchart_scales_to_max() {
+        let c = barchart("B", &[("x".into(), 2.0), ("y".into(), 1.0)], "ms");
+        let lines: Vec<&str> = c.lines().filter(|l| l.contains('|')).collect();
+        let hashes = |s: &str| s.chars().filter(|&c| c == '#').count();
+        assert_eq!(hashes(lines[0]), 50);
+        assert_eq!(hashes(lines[1]), 25);
+    }
+
+    #[test]
+    fn vs_paper_formats_deviation() {
+        assert!(vs_paper(110.0, 100.0).contains("+10%"));
+    }
+}

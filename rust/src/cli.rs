@@ -1,0 +1,229 @@
+//! `bonseyes` CLI — the leader entrypoint. Hand-rolled arg parsing (clap is
+//! unavailable offline).
+//!
+//! Subcommands:
+//!   pipeline run <workflow.json> [--store DIR] [--artifacts DIR] [--force]
+//!   pipeline serve [--addr A] [--store DIR] [--artifacts DIR]
+//!   serve [--model ARCH|--app DIR]... [--addr A] [--artifacts DIR]
+//!   iot-hub [--addr A] [--model ARCH] [--artifacts DIR]
+//!   nas [--ds] [--trials N]
+//!   tools
+//!   info
+
+use crate::pipeline::api::PipelineService;
+use crate::pipeline::artifact::ArtifactStore;
+use crate::pipeline::workflow::{run as run_workflow, Workflow};
+use crate::runtime::EngineHandle;
+use crate::serving::{BatcherConfig, KwsServer, Router as ServingRouter, ServableModel};
+use crate::toolset::builtin_registry;
+use anyhow::{anyhow, bail, Context, Result};
+use std::sync::Arc;
+
+pub struct Args {
+    positional: Vec<String>,
+    flags: std::collections::BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Args {
+        let mut positional = Vec::new();
+        let mut flags = std::collections::BTreeMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                const BOOL_FLAGS: [&str; 3] = ["force", "ds", "fast"];
+                if BOOL_FLAGS.contains(&name) {
+                    flags.insert(name.to_string(), "1".to_string());
+                    i += 1;
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(name.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(name.to_string(), "1".to_string());
+                    i += 1;
+                }
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Args { positional, flags }
+    }
+
+    pub fn get(&self, flag: &str, default: &str) -> String {
+        self.flags.get(flag).cloned().unwrap_or_else(|| default.to_string())
+    }
+    pub fn has(&self, flag: &str) -> bool {
+        self.flags.contains_key(flag)
+    }
+    pub fn pos(&self, i: usize) -> Option<&str> {
+        self.positional.get(i).map(|s| s.as_str())
+    }
+}
+
+const USAGE: &str = "bonseyes — the Bonseyes AI pipeline (paper reproduction)
+
+USAGE:
+  bonseyes pipeline run <workflow.json> [--store DIR] [--artifacts DIR] [--force]
+  bonseyes pipeline serve [--addr 127.0.0.1:8080] [--store DIR] [--artifacts DIR]
+  bonseyes serve [--model ARCH] [--app DIR] [--addr 127.0.0.1:8090] [--artifacts DIR]
+  bonseyes iot-hub [--addr 127.0.0.1:8070] [--model ARCH] [--artifacts DIR]
+  bonseyes nas [--ds] [--trials 120]
+  bonseyes tools
+  bonseyes info [--artifacts DIR]
+";
+
+pub fn main_with(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv);
+    match args.pos(0) {
+        Some("pipeline") => match args.pos(1) {
+            Some("run") => pipeline_run(&args),
+            Some("serve") => pipeline_serve(&args),
+            _ => bail!("{USAGE}"),
+        },
+        Some("serve") => serve(&args),
+        Some("iot-hub") => iot_hub(&args),
+        Some("nas") => nas(&args),
+        Some("tools") => tools(),
+        Some("info") => info(&args),
+        _ => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn engine(args: &Args) -> Result<EngineHandle> {
+    let dir = args.get("artifacts", "artifacts");
+    EngineHandle::spawn(&dir).with_context(|| format!("open artifacts at {dir} (run `make artifacts`)"))
+}
+
+fn pipeline_run(args: &Args) -> Result<()> {
+    let path = args.pos(2).ok_or_else(|| anyhow!("need a workflow file\n{USAGE}"))?;
+    let text = std::fs::read_to_string(path).with_context(|| format!("read {path}"))?;
+    let wf = Workflow::parse(&text).map_err(|e| anyhow!(e))?;
+    let store = ArtifactStore::open(args.get("store", "pipeline-store"))?;
+    let reg = builtin_registry();
+    let eng = engine(args)?;
+    let report = run_workflow(&wf, &reg, &store, Some(eng), args.has("force"))
+        .map_err(|e| anyhow!(e))?;
+    println!("{}", report.to_json());
+    Ok(())
+}
+
+fn pipeline_serve(args: &Args) -> Result<()> {
+    let store = Arc::new(ArtifactStore::open(args.get("store", "pipeline-store"))?);
+    let reg = Arc::new(builtin_registry());
+    let eng = engine(args)?;
+    let svc = PipelineService::new(store, reg, Some(eng));
+    let addr = args.get("addr", "127.0.0.1:8080");
+    let _server = svc.serve(&addr)?;
+    println!("pipeline API listening on http://{addr}  (Ctrl-C to stop)");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let eng = engine(args)?;
+    let mut router = ServingRouter::new(eng.clone());
+    let cfg = BatcherConfig {
+        max_wait_ms: args.get("max-wait-ms", "5").parse().unwrap_or(5.0),
+        ..Default::default()
+    };
+    if args.has("app") {
+        let model = ServableModel::from_artifact(std::path::Path::new(&args.get("app", "")))
+            .map_err(|e| anyhow!(e))?;
+        router.register(model, cfg.clone())?;
+    } else {
+        let arch = args.get("model", "ds_kws9");
+        router.register(ServableModel::from_init(&eng, &arch)?, cfg)?;
+        eprintln!("note: serving He-init weights for {arch}; pass --app <model-artifact-dir> for a trained model");
+    }
+    let addr = args.get("addr", "127.0.0.1:8090");
+    let serving = Arc::new(router);
+    let _server = KwsServer::serve(serving, &addr, 8)?;
+    println!("KWS service listening on http://{addr}  (POST /v1/kws)");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn iot_hub(args: &Args) -> Result<()> {
+    let eng = engine(args)?;
+    let mut router = ServingRouter::new(eng.clone());
+    let arch = args.get("model", "ds_kws9");
+    router.register(
+        ServableModel::from_init(&eng, &arch)?,
+        BatcherConfig::default(),
+    )?;
+    let serving = Arc::new(router);
+    let broker = crate::iot::ContextBroker::new();
+    let addr = args.get("addr", "127.0.0.1:8070");
+    let _server = crate::iot::MediaModule::serve_hub(serving, broker, &addr)?;
+    println!("IoT hub (context broker + media module) on http://{addr}");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn nas(args: &Args) -> Result<()> {
+    let cfg = crate::nas::NasConfig {
+        trials: args.get("trials", "120").parse().unwrap_or(120),
+        ds: args.has("ds"),
+        ..Default::default()
+    };
+    let out = crate::nas::search(&cfg, &mut crate::nas::evaluator::Surrogate)
+        .map_err(|e| anyhow!(e))?;
+    println!("Pareto frontier ({} candidates searched):", out.candidates.len());
+    for (desc, acc, mf, kb) in out.frontier_rows() {
+        println!("  {acc:5.1}%  {mf:7.1} MFLOPs  {kb:7.1} KB   {desc}");
+    }
+    Ok(())
+}
+
+fn tools() -> Result<()> {
+    let reg = builtin_registry();
+    for name in reg.names() {
+        let t = reg.get(&name).unwrap();
+        let fmt = |ps: Vec<crate::pipeline::Port>| {
+            ps.iter()
+                .map(|p| format!("{}:{}", p.name, p.format))
+                .collect::<Vec<_>>()
+                .join(", ")
+        };
+        println!("{name:24} in[{}] out[{}]", fmt(t.inputs()), fmt(t.outputs()));
+    }
+    Ok(())
+}
+
+fn info(args: &Args) -> Result<()> {
+    let eng = engine(args)?;
+    let m = &eng.manifest;
+    println!("artifacts: {} graphs, {} archs, {} classes",
+             m.graphs.len(), m.archs.len(), m.num_classes);
+    for (name, a) in &m.archs {
+        println!("  {name:14} {:7} params  batches {:?}",
+                 a.n_params, m.infer_batches(name));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn args_parse_flags_and_positional() {
+        let argv: Vec<String> = ["serve", "--model", "kws9", "--force", "x"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let a = Args::parse(&argv);
+        assert_eq!(a.pos(0), Some("serve"));
+        assert_eq!(a.get("model", ""), "kws9");
+        assert!(a.has("force"));
+        assert_eq!(a.pos(1), Some("x"));
+    }
+}

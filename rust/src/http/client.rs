@@ -1,0 +1,121 @@
+//! Blocking HTTP/1.1 client for tests, the pipeline CLI, and IoT agents.
+
+use super::{Response, MAX_BODY};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+
+#[derive(Debug, Clone)]
+pub struct ClientResponse {
+    pub status: u16,
+    pub headers: BTreeMap<String, String>,
+    pub body: Vec<u8>,
+}
+
+impl ClientResponse {
+    pub fn json(&self) -> Result<Json, String> {
+        Json::parse(std::str::from_utf8(&self.body).map_err(|e| e.to_string())?)
+            .map_err(|e| e.to_string())
+    }
+    pub fn text(&self) -> String {
+        String::from_utf8_lossy(&self.body).into_owned()
+    }
+}
+
+/// Parse "http://host:port/path" -> (authority, path).
+fn split_url(url: &str) -> Result<(String, String), String> {
+    let rest = url
+        .strip_prefix("http://")
+        .ok_or_else(|| format!("only http:// urls supported: {url}"))?;
+    match rest.split_once('/') {
+        Some((auth, path)) => Ok((auth.to_string(), format!("/{path}"))),
+        None => Ok((rest.to_string(), "/".to_string())),
+    }
+}
+
+pub fn request(
+    method: &str,
+    url: &str,
+    headers: &[(&str, &str)],
+    body: &[u8],
+) -> Result<ClientResponse, String> {
+    let (auth, path) = split_url(url)?;
+    let mut stream = TcpStream::connect(&auth).map_err(|e| e.to_string())?;
+    stream.set_nodelay(true).ok();
+    let mut req = format!("{method} {path} HTTP/1.1\r\nHost: {auth}\r\nConnection: close\r\n");
+    for (k, v) in headers {
+        req.push_str(&format!("{k}: {v}\r\n"));
+    }
+    req.push_str(&format!("Content-Length: {}\r\n\r\n", body.len()));
+    stream.write_all(req.as_bytes()).map_err(|e| e.to_string())?;
+    stream.write_all(body).map_err(|e| e.to_string())?;
+    stream.flush().map_err(|e| e.to_string())?;
+
+    let mut reader = BufReader::new(stream);
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line).map_err(|e| e.to_string())?;
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| format!("bad status line: {status_line:?}"))?;
+    let mut resp_headers = BTreeMap::new();
+    loop {
+        let mut line = String::new();
+        reader.read_line(&mut line).map_err(|e| e.to_string())?;
+        let line = line.trim_end();
+        if line.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = line.split_once(':') {
+            resp_headers.insert(k.trim().to_lowercase(), v.trim().to_string());
+        }
+    }
+    let body = match resp_headers.get("content-length").and_then(|v| v.parse::<usize>().ok()) {
+        Some(len) if len <= MAX_BODY => {
+            let mut b = vec![0u8; len];
+            reader.read_exact(&mut b).map_err(|e| e.to_string())?;
+            b
+        }
+        Some(_) => return Err("response too large".into()),
+        None => {
+            let mut b = Vec::new();
+            reader.read_to_end(&mut b).map_err(|e| e.to_string())?;
+            b
+        }
+    };
+    Ok(ClientResponse { status, headers: resp_headers, body })
+}
+
+pub fn get(url: &str) -> Result<ClientResponse, String> {
+    request("GET", url, &[], &[])
+}
+
+pub fn post_json(url: &str, v: &Json) -> Result<ClientResponse, String> {
+    request(
+        "POST",
+        url,
+        &[("Content-Type", "application/json")],
+        v.to_string().as_bytes(),
+    )
+}
+
+pub fn put_json(url: &str, v: &Json) -> Result<ClientResponse, String> {
+    request(
+        "PUT",
+        url,
+        &[("Content-Type", "application/json")],
+        v.to_string().as_bytes(),
+    )
+}
+
+pub fn delete(url: &str) -> Result<ClientResponse, String> {
+    request("DELETE", url, &[], &[])
+}
+
+/// Local-only convenience used by tests.
+#[allow(dead_code)]
+pub fn into_response(r: ClientResponse) -> Response {
+    Response { status: r.status, headers: r.headers, body: r.body }
+}

@@ -1,0 +1,376 @@
+//! Minimal HTTP/1.1 server + client on std::net (substrate: tokio/hyper are
+//! unavailable offline). Enough for the paper's dockerized REST API (§3.2),
+//! the KWS serving endpoint, and the FIWARE-like IoT hub (§7): fixed-size
+//! worker pool, Content-Length bodies, JSON helpers, path-prefix routing.
+
+pub mod client;
+
+use crate::util::json::Json;
+use crate::util::threadpool::ThreadPool;
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read as _, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+pub const MAX_BODY: usize = 64 * 1024 * 1024;
+
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub query: BTreeMap<String, String>,
+    pub headers: BTreeMap<String, String>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    pub fn json(&self) -> Result<Json, String> {
+        let s = std::str::from_utf8(&self.body).map_err(|e| e.to_string())?;
+        Json::parse(s).map_err(|e| e.to_string())
+    }
+    pub fn query_get(&self, k: &str) -> Option<&str> {
+        self.query.get(k).map(|s| s.as_str())
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub status: u16,
+    pub headers: BTreeMap<String, String>,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn new(status: u16) -> Response {
+        Response { status, headers: BTreeMap::new(), body: Vec::new() }
+    }
+    pub fn json(status: u16, v: &Json) -> Response {
+        let mut r = Response::new(status);
+        r.headers.insert("Content-Type".into(), "application/json".into());
+        r.body = v.to_string().into_bytes();
+        r
+    }
+    pub fn text(status: u16, s: &str) -> Response {
+        let mut r = Response::new(status);
+        r.headers.insert("Content-Type".into(), "text/plain".into());
+        r.body = s.as_bytes().to_vec();
+        r
+    }
+    pub fn not_found() -> Response {
+        Response::json(404, &Json::obj(vec![("error", Json::str("not found"))]))
+    }
+    pub fn bad_request(msg: &str) -> Response {
+        Response::json(400, &Json::obj(vec![("error", Json::str(msg))]))
+    }
+    pub fn error(msg: &str) -> Response {
+        Response::json(500, &Json::obj(vec![("error", Json::str(msg))]))
+    }
+}
+
+pub type Handler = Arc<dyn Fn(&Request) -> Response + Send + Sync>;
+
+/// Method + path-pattern router. Patterns match segment-wise; `:name`
+/// segments capture into the returned params map; a trailing `*` matches
+/// any remainder.
+#[derive(Default)]
+pub struct Router {
+    routes: Vec<(String, Vec<String>, Handler)>,
+}
+
+impl Router {
+    pub fn new() -> Router {
+        Router::default()
+    }
+
+    pub fn add(
+        &mut self,
+        method: &str,
+        pattern: &str,
+        handler: impl Fn(&Request, &BTreeMap<String, String>) -> Response + Send + Sync + 'static,
+    ) {
+        let segs: Vec<String> =
+            pattern.trim_matches('/').split('/').map(|s| s.to_string()).collect();
+        let segs_c = segs.clone();
+        let wrapped: Handler = Arc::new(move |req: &Request| {
+            let params = match_segments(&segs_c, &req.path).unwrap_or_default();
+            handler(req, &params)
+        });
+        self.routes.push((method.to_string(), segs, wrapped));
+    }
+
+    /// Absorb all routes of another router (later routes lose ties).
+    pub fn merge(&mut self, other: Router) {
+        self.routes.extend(other.routes);
+    }
+
+    pub fn dispatch(&self, req: &Request) -> Response {
+        for (method, segs, handler) in &self.routes {
+            if method == &req.method && match_segments(segs, &req.path).is_some() {
+                return handler(req);
+            }
+        }
+        Response::not_found()
+    }
+}
+
+fn match_segments(pattern: &[String], path: &str) -> Option<BTreeMap<String, String>> {
+    let path_segs: Vec<&str> = path.trim_matches('/').split('/').collect();
+    let mut params = BTreeMap::new();
+    let mut pi = 0;
+    for (i, pat) in pattern.iter().enumerate() {
+        if pat == "*" {
+            params.insert("*".to_string(), path_segs[i.min(path_segs.len())..].join("/"));
+            return Some(params);
+        }
+        if pi >= path_segs.len() {
+            return None;
+        }
+        if let Some(name) = pat.strip_prefix(':') {
+            params.insert(name.to_string(), path_segs[pi].to_string());
+        } else if pat != path_segs[pi] {
+            return None;
+        }
+        pi += 1;
+    }
+    if pi == path_segs.len() {
+        Some(params)
+    } else {
+        None
+    }
+}
+
+/// A running HTTP server; drop or call `stop()` to shut down.
+pub struct Server {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind `addr` (use port 0 for ephemeral) and serve `router` on a pool.
+    pub fn serve(addr: &str, router: Router, workers: usize) -> std::io::Result<Server> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let router = Arc::new(router);
+        let accept_thread = std::thread::spawn(move || {
+            let pool = ThreadPool::new(workers);
+            while !stop2.load(Ordering::SeqCst) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let router = Arc::clone(&router);
+                        pool.execute(move || {
+                            let _ = handle_conn(stream, &router);
+                        });
+                    }
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(2));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        Ok(Server { addr: local, stop, accept_thread: Some(accept_thread) })
+    }
+
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn handle_conn(stream: TcpStream, router: &Router) -> std::io::Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut reader = BufReader::new(stream.try_clone()?);
+    // keep-alive loop: serve requests until the peer closes
+    loop {
+        match read_request(&mut reader) {
+            Ok(Some(req)) => {
+                let keep_alive = req
+                    .headers
+                    .get("connection")
+                    .map(|v| v.eq_ignore_ascii_case("keep-alive"))
+                    .unwrap_or(true); // HTTP/1.1 default
+                let resp = router.dispatch(&req);
+                write_response(&mut &stream, &resp)?;
+                if !keep_alive {
+                    break;
+                }
+            }
+            Ok(None) => break, // clean EOF
+            Err(_) => break,
+        }
+    }
+    Ok(())
+}
+
+pub fn read_request<R: BufRead>(reader: &mut R) -> std::io::Result<Option<Request>> {
+    let mut line = String::new();
+    if reader.read_line(&mut line)? == 0 {
+        return Ok(None);
+    }
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_uppercase();
+    let target = parts.next().unwrap_or("/").to_string();
+    if method.is_empty() {
+        return Ok(None);
+    }
+    let (path, query) = parse_target(&target);
+    let mut headers = BTreeMap::new();
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            headers.insert(k.trim().to_lowercase(), v.trim().to_string());
+        }
+    }
+    let len: usize = headers
+        .get("content-length")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0);
+    if len > MAX_BODY {
+        return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, "body too large"));
+    }
+    let mut body = vec![0u8; len];
+    reader.read_exact(&mut body)?;
+    Ok(Some(Request { method, path, query, headers, body }))
+}
+
+fn parse_target(target: &str) -> (String, BTreeMap<String, String>) {
+    match target.split_once('?') {
+        None => (target.to_string(), BTreeMap::new()),
+        Some((p, q)) => {
+            let mut map = BTreeMap::new();
+            for kv in q.split('&') {
+                if let Some((k, v)) = kv.split_once('=') {
+                    map.insert(url_decode(k), url_decode(v));
+                } else if !kv.is_empty() {
+                    map.insert(url_decode(kv), String::new());
+                }
+            }
+            (p.to_string(), map)
+        }
+    }
+}
+
+pub fn url_decode(s: &str) -> String {
+    let b = s.as_bytes();
+    let mut out = Vec::with_capacity(b.len());
+    let mut i = 0;
+    while i < b.len() {
+        match b[i] {
+            b'%' if i + 2 < b.len() + 1 && i + 2 < b.len() + 1 => {
+                if i + 2 < b.len() {
+                    if let Ok(v) =
+                        u8::from_str_radix(std::str::from_utf8(&b[i + 1..i + 3]).unwrap_or(""), 16)
+                    {
+                        out.push(v);
+                        i += 3;
+                        continue;
+                    }
+                }
+                out.push(b'%');
+                i += 1;
+            }
+            b'+' => {
+                out.push(b' ');
+                i += 1;
+            }
+            c => {
+                out.push(c);
+                i += 1;
+            }
+        }
+    }
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+pub fn write_response<W: Write>(w: &mut W, resp: &Response) -> std::io::Result<()> {
+    let reason = match resp.status {
+        200 => "OK",
+        201 => "Created",
+        202 => "Accepted",
+        204 => "No Content",
+        400 => "Bad Request",
+        404 => "Not Found",
+        409 => "Conflict",
+        500 => "Internal Server Error",
+        _ => "Unknown",
+    };
+    let mut head = format!("HTTP/1.1 {} {}\r\n", resp.status, reason);
+    for (k, v) in &resp.headers {
+        head.push_str(&format!("{k}: {v}\r\n"));
+    }
+    head.push_str(&format!("Content-Length: {}\r\n\r\n", resp.body.len()));
+    w.write_all(head.as_bytes())?;
+    w.write_all(&resp.body)?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn router_matches_params_and_wildcards() {
+        let mut r = Router::new();
+        r.add("GET", "/v1/items/:id", |_req, params| {
+            Response::text(200, params.get("id").unwrap())
+        });
+        r.add("GET", "/files/*", |_req, params| {
+            Response::text(200, params.get("*").unwrap())
+        });
+        let req = |path: &str| Request {
+            method: "GET".into(),
+            path: path.into(),
+            query: BTreeMap::new(),
+            headers: BTreeMap::new(),
+            body: vec![],
+        };
+        assert_eq!(r.dispatch(&req("/v1/items/42")).body, b"42");
+        assert_eq!(r.dispatch(&req("/files/a/b/c")).body, b"a/b/c");
+        assert_eq!(r.dispatch(&req("/nope")).status, 404);
+    }
+
+    #[test]
+    fn parse_target_extracts_query() {
+        let (p, q) = parse_target("/x?a=1&b=hello%20world&c");
+        assert_eq!(p, "/x");
+        assert_eq!(q.get("a").unwrap(), "1");
+        assert_eq!(q.get("b").unwrap(), "hello world");
+        assert_eq!(q.get("c").unwrap(), "");
+    }
+
+    #[test]
+    fn end_to_end_request_response() {
+        let mut r = Router::new();
+        r.add("POST", "/echo", |req, _| {
+            Response::json(200, &req.json().unwrap())
+        });
+        let mut server = Server::serve("127.0.0.1:0", r, 2).unwrap();
+        let addr = server.addr;
+        let resp = client::post_json(
+            &format!("http://{addr}/echo"),
+            &Json::obj(vec![("k", Json::num(7.0))]),
+        )
+        .unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.json().unwrap().get("k").as_i64(), Some(7));
+        server.stop();
+    }
+}

@@ -1,0 +1,215 @@
+//! BTA — Bonseyes Tensor Archive. The standardized on-disk artifact
+//! serialization (paper §4 uses HDF5; DESIGN.md §3 documents the
+//! substitution). Layout:
+//!
+//! ```text
+//! magic "BTA1" | u32 LE header_len | header JSON | raw payload
+//! header: {"tensors": [{"name", "dtype": "f32", "shape": [..], "offset"}],
+//!          "extra": {...}}
+//! ```
+//!
+//! Offsets are byte offsets into the payload region. Python-side readers
+//! only need json + numpy (tests cross-check against python/compile).
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+
+#[derive(Debug, Clone)]
+pub struct BtaTensor {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Bta {
+    pub tensors: Vec<BtaTensor>,
+    pub extra: Json,
+}
+
+impl Bta {
+    pub fn new() -> Bta {
+        Bta { tensors: Vec::new(), extra: Json::Null }
+    }
+
+    pub fn push(&mut self, name: &str, shape: &[usize], data: Vec<f32>) {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        self.tensors.push(BtaTensor { name: name.to_string(), shape: shape.to_vec(), data });
+    }
+
+    pub fn get(&self, name: &str) -> Option<&BtaTensor> {
+        self.tensors.iter().find(|t| t.name == name)
+    }
+
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        let mut offset = 0usize;
+        let mut metas = Vec::new();
+        for t in &self.tensors {
+            metas.push(Json::obj(vec![
+                ("name", Json::str(t.name.clone())),
+                ("dtype", Json::str("f32")),
+                ("shape", Json::arr(t.shape.iter().map(|&d| Json::from(d)).collect())),
+                ("offset", Json::from(offset)),
+            ]));
+            offset += t.data.len() * 4;
+        }
+        let header = Json::obj(vec![
+            ("tensors", Json::arr(metas)),
+            ("extra", self.extra.clone()),
+        ])
+        .to_string();
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(b"BTA1")?;
+        f.write_all(&(header.len() as u32).to_le_bytes())?;
+        f.write_all(header.as_bytes())?;
+        for t in &self.tensors {
+            // bulk LE write
+            let mut buf = Vec::with_capacity(t.data.len() * 4);
+            for &x in &t.data {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+            f.write_all(&buf)?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Bta, String> {
+        let bytes = std::fs::read(path).map_err(|e| format!("{path:?}: {e}"))?;
+        if bytes.len() < 8 || &bytes[..4] != b"BTA1" {
+            return Err(format!("{path:?}: not a BTA file"));
+        }
+        let hlen = u32::from_le_bytes(bytes[4..8].try_into().unwrap()) as usize;
+        let header = std::str::from_utf8(&bytes[8..8 + hlen]).map_err(|e| e.to_string())?;
+        let h = Json::parse(header).map_err(|e| e.to_string())?;
+        let payload = &bytes[8 + hlen..];
+        let mut tensors = Vec::new();
+        for t in h.get("tensors").as_arr().ok_or("missing tensors")? {
+            let name = t.get("name").as_str().ok_or("tensor name")?.to_string();
+            let shape: Vec<usize> = t
+                .get("shape")
+                .as_arr()
+                .ok_or("tensor shape")?
+                .iter()
+                .map(|d| d.as_usize().unwrap_or(0))
+                .collect();
+            let offset = t.get("offset").as_usize().ok_or("tensor offset")?;
+            let n: usize = shape.iter().product();
+            let end = offset + n * 4;
+            if end > payload.len() {
+                return Err(format!("tensor {name} exceeds payload"));
+            }
+            let data = payload[offset..end]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            tensors.push(BtaTensor { name, shape, data });
+        }
+        Ok(Bta { tensors, extra: h.get("extra").clone() })
+    }
+}
+
+/// Labeled-dataset view over a BTA (x tensor + labels tensor + classes).
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// [N, ...sample shape] flattened rows.
+    pub x: BtaTensor,
+    /// [N] class ids (stored f32).
+    pub y: Vec<usize>,
+    pub classes: Vec<String>,
+}
+
+impl Dataset {
+    pub fn from_bta(bta: &Bta, x_name: &str) -> Result<Dataset, String> {
+        let x = bta.get(x_name).ok_or_else(|| format!("missing {x_name}"))?.clone();
+        let y = bta
+            .get("labels")
+            .ok_or("missing labels")?
+            .data
+            .iter()
+            .map(|&v| v as usize)
+            .collect();
+        let classes = bta
+            .extra
+            .get("classes")
+            .as_arr()
+            .map(|a| a.iter().filter_map(|c| c.as_str().map(String::from)).collect())
+            .unwrap_or_default();
+        Ok(Dataset { x, y, classes })
+    }
+
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    /// Row width (product of non-batch dims).
+    pub fn row(&self) -> usize {
+        self.x.shape[1..].iter().product()
+    }
+
+    /// Class histogram.
+    pub fn histogram(&self, num_classes: usize) -> Vec<usize> {
+        let mut h = vec![0usize; num_classes];
+        for &y in &self.y {
+            if y < num_classes {
+                h[y] += 1;
+            }
+        }
+        h
+    }
+}
+
+/// Per-class maps useful for tools.
+pub type ClassMap = BTreeMap<String, usize>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("bta-{}-{name}", std::process::id()))
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let mut b = Bta::new();
+        b.push("audio", &[2, 3], vec![1.0, -2.0, 3.5, 0.0, 5.0, -6.25]);
+        b.push("labels", &[2], vec![0.0, 7.0]);
+        b.extra = Json::obj(vec![("classes", Json::arr(vec![Json::str("a")]))]);
+        let p = tmp("rt.bta");
+        b.save(&p).unwrap();
+        let b2 = Bta::load(&p).unwrap();
+        assert_eq!(b2.tensors.len(), 2);
+        assert_eq!(b2.get("audio").unwrap().data, b.get("audio").unwrap().data);
+        assert_eq!(b2.get("labels").unwrap().shape, vec![2]);
+        assert_eq!(b2.extra.get("classes").at(0).as_str(), Some("a"));
+    }
+
+    #[test]
+    fn rejects_corrupt() {
+        let p = tmp("bad.bta");
+        std::fs::write(&p, b"NOPE").unwrap();
+        assert!(Bta::load(&p).is_err());
+    }
+
+    #[test]
+    fn dataset_view() {
+        let mut b = Bta::new();
+        b.push("mfcc", &[3, 4], vec![0.0; 12]);
+        b.push("labels", &[3], vec![0.0, 1.0, 1.0]);
+        b.extra = Json::obj(vec![(
+            "classes",
+            Json::arr(vec![Json::str("yes"), Json::str("no")]),
+        )]);
+        let ds = Dataset::from_bta(&b, "mfcc").unwrap();
+        assert_eq!(ds.len(), 3);
+        assert_eq!(ds.row(), 4);
+        assert_eq!(ds.histogram(2), vec![1, 2]);
+        assert_eq!(ds.classes, vec!["yes", "no"]);
+    }
+}

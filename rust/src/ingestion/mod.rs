@@ -1,0 +1,10 @@
+//! AI data ingestion (paper §4): synthetic speech-commands source, BTA
+//! standardized containers, MFCC extraction through the AOT pallas kernel,
+//! and train/val/test partitioning — all exposed as pipeline tools.
+
+pub mod bta;
+pub mod synth;
+pub mod tools;
+
+pub use bta::{Bta, BtaTensor, Dataset};
+pub use tools::{MfccTool, PartitionTool, SpeechCommandsImport, DATA_FILE};

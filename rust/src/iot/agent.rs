@@ -1,0 +1,112 @@
+//! IoT agents (paper §7.1): the two deployment scenarios.
+//!
+//! *Edge-processing* (Fig 12-A): the device runs the AI application locally
+//! (through the serving router) and pushes only results to the hub.
+//!
+//! *Cloud-processing* (Fig 12-B): the constrained device ships raw audio to
+//! the hub's media endpoint (Kurento-style, see `media.rs`); the hub runs
+//! the AI application and stores the result.
+
+use crate::http::client;
+use crate::ingestion::synth;
+use crate::serving::Router as ServingRouter;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use std::sync::Arc;
+
+/// An edge device: local inference, results to the hub.
+pub struct EdgeAgent {
+    pub device_id: String,
+    pub serving: Arc<ServingRouter>,
+    pub broker_url: String,
+    rng: Rng,
+}
+
+impl EdgeAgent {
+    pub fn new(device_id: &str, serving: Arc<ServingRouter>, broker_url: &str) -> EdgeAgent {
+        let rng = Rng::new(fnv(device_id.as_bytes()));
+        EdgeAgent {
+            device_id: device_id.to_string(),
+            serving,
+            broker_url: broker_url.to_string(),
+            rng,
+        }
+    }
+
+    /// Register the device entity with the hub.
+    pub fn register(&self) -> Result<(), String> {
+        let e = Json::obj(vec![
+            ("id", Json::str(self.device_id.clone())),
+            ("type", Json::str("Device")),
+            ("scenario", Json::str("edge-processing")),
+            ("status", Json::str("online")),
+        ]);
+        client::post_json(&format!("{}/v2/entities", self.broker_url), &e)
+            .map(|_| ())
+            .map_err(|e| e.to_string())
+    }
+
+    /// Capture one utterance (synthetic mic), infer locally, push the result.
+    pub fn capture_and_report(&mut self, true_class: usize) -> Result<Json, String> {
+        let nk = self.serving.engine.manifest.classes.len().saturating_sub(2);
+        let audio = synth::generate(true_class, nk, &mut self.rng);
+        let pred = self.serving.infer(None, audio)?;
+        let measurement = Json::obj(vec![
+            ("id", Json::str(format!("{}:last", self.device_id))),
+            ("type", Json::str("Measurement")),
+            ("device", Json::str(self.device_id.clone())),
+            ("keyword", Json::str(pred.class.clone())),
+            ("class_id", Json::from(pred.class_id)),
+            ("true_class", Json::from(true_class)),
+            ("latency_ms", Json::num(pred.latency_ms)),
+        ]);
+        client::post_json(&format!("{}/v2/entities", self.broker_url), &measurement)
+            .map_err(|e| e.to_string())?;
+        Ok(measurement)
+    }
+}
+
+/// A constrained device: ships raw audio to the hub for cloud processing.
+pub struct CloudAgent {
+    pub device_id: String,
+    pub hub_url: String,
+    rng: Rng,
+}
+
+impl CloudAgent {
+    pub fn new(device_id: &str, hub_url: &str) -> CloudAgent {
+        CloudAgent {
+            device_id: device_id.to_string(),
+            hub_url: hub_url.to_string(),
+            rng: Rng::new(fnv(device_id.as_bytes())),
+        }
+    }
+
+    /// Capture one utterance and offload it to the hub's media endpoint.
+    pub fn capture_and_offload(&mut self, true_class: usize, num_keywords: usize) -> Result<Json, String> {
+        let audio = synth::generate(true_class, num_keywords, &mut self.rng);
+        let payload = Json::obj(vec![
+            ("device", Json::str(self.device_id.clone())),
+            ("true_class", Json::from(true_class)),
+            (
+                "audio",
+                Json::arr(audio.iter().map(|&v| Json::num(v as f64)).collect()),
+            ),
+        ]);
+        let resp = client::post_json(&format!("{}/v1/media/kws", self.hub_url), &payload)
+            .map_err(|e| e.to_string())?;
+        if resp.status != 200 {
+            return Err(format!("hub returned {}", resp.status));
+        }
+        resp.json()
+    }
+}
+
+fn fnv(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}

@@ -1,0 +1,265 @@
+//! FIWARE-like context broker (paper §7.2.1, DESIGN.md §3 substitution):
+//! an NGSI-style entity store with subscriptions. Entities carry a type and
+//! a JSON attribute map; subscribers get HTTP notifications on updates.
+//!
+//! API:
+//!   POST   /v2/entities                     {"id", "type", attrs...}
+//!   GET    /v2/entities[?type=T]
+//!   GET    /v2/entities/:id
+//!   PATCH  /v2/entities/:id/attrs           {attr: value, ...}
+//!   DELETE /v2/entities/:id
+//!   POST   /v2/subscriptions                {"entity_type", "url"}
+
+use crate::http::{client, Response, Router, Server};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+#[derive(Debug, Clone)]
+pub struct Entity {
+    pub id: String,
+    pub entity_type: String,
+    pub attrs: BTreeMap<String, Json>,
+}
+
+impl Entity {
+    pub fn to_json(&self) -> Json {
+        let mut o = self.attrs.clone();
+        o.insert("id".into(), Json::str(self.id.clone()));
+        o.insert("type".into(), Json::str(self.entity_type.clone()));
+        Json::Obj(o)
+    }
+}
+
+#[derive(Default)]
+pub struct ContextBroker {
+    entities: Mutex<BTreeMap<String, Entity>>,
+    subscriptions: Mutex<Vec<(String, String)>>, // (entity_type, url)
+}
+
+impl ContextBroker {
+    pub fn new() -> Arc<ContextBroker> {
+        Arc::new(ContextBroker::default())
+    }
+
+    pub fn upsert(&self, id: &str, entity_type: &str, attrs: BTreeMap<String, Json>) {
+        let e = Entity {
+            id: id.to_string(),
+            entity_type: entity_type.to_string(),
+            attrs,
+        };
+        self.entities.lock().unwrap().insert(id.to_string(), e.clone());
+        self.notify(&e);
+    }
+
+    pub fn patch(&self, id: &str, attrs: &BTreeMap<String, Json>) -> bool {
+        let mut lock = self.entities.lock().unwrap();
+        match lock.get_mut(id) {
+            None => false,
+            Some(e) => {
+                for (k, v) in attrs {
+                    e.attrs.insert(k.clone(), v.clone());
+                }
+                let snapshot = e.clone();
+                drop(lock);
+                self.notify(&snapshot);
+                true
+            }
+        }
+    }
+
+    pub fn get(&self, id: &str) -> Option<Entity> {
+        self.entities.lock().unwrap().get(id).cloned()
+    }
+
+    pub fn list(&self, entity_type: Option<&str>) -> Vec<Entity> {
+        self.entities
+            .lock()
+            .unwrap()
+            .values()
+            .filter(|e| entity_type.map(|t| e.entity_type == t).unwrap_or(true))
+            .cloned()
+            .collect()
+    }
+
+    pub fn delete(&self, id: &str) -> bool {
+        self.entities.lock().unwrap().remove(id).is_some()
+    }
+
+    pub fn subscribe(&self, entity_type: &str, url: &str) {
+        self.subscriptions
+            .lock()
+            .unwrap()
+            .push((entity_type.to_string(), url.to_string()));
+    }
+
+    /// Best-effort async notification of matching subscribers.
+    fn notify(&self, e: &Entity) {
+        let subs: Vec<String> = self
+            .subscriptions
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|(t, _)| t == &e.entity_type || t == "*")
+            .map(|(_, u)| u.clone())
+            .collect();
+        if subs.is_empty() {
+            return;
+        }
+        let payload = e.to_json();
+        std::thread::spawn(move || {
+            for url in subs {
+                let _ = client::post_json(&url, &payload);
+            }
+        });
+    }
+
+    pub fn router(self: &Arc<Self>) -> Router {
+        let mut r = Router::new();
+        let me = Arc::clone(self);
+        r.add("POST", "/v2/entities", move |req, _| {
+            let body = match req.json() {
+                Ok(b) => b,
+                Err(e) => return Response::bad_request(&e),
+            };
+            let Some(id) = body.get("id").as_str().map(String::from) else {
+                return Response::bad_request("entity needs id");
+            };
+            let etype = body.get("type").as_str().unwrap_or("Thing").to_string();
+            let attrs: BTreeMap<String, Json> = body
+                .as_obj()
+                .map(|o| {
+                    o.iter()
+                        .filter(|(k, _)| k.as_str() != "id" && k.as_str() != "type")
+                        .map(|(k, v)| (k.clone(), v.clone()))
+                        .collect()
+                })
+                .unwrap_or_default();
+            me.upsert(&id, &etype, attrs);
+            Response::json(201, &Json::obj(vec![("id", Json::str(id))]))
+        });
+        let me = Arc::clone(self);
+        r.add("GET", "/v2/entities", move |req, _| {
+            let t = req.query_get("type");
+            Response::json(
+                200,
+                &Json::arr(me.list(t).iter().map(|e| e.to_json()).collect()),
+            )
+        });
+        let me = Arc::clone(self);
+        r.add("GET", "/v2/entities/:id", move |_req, params| {
+            match me.get(&params["id"]) {
+                None => Response::not_found(),
+                Some(e) => Response::json(200, &e.to_json()),
+            }
+        });
+        let me = Arc::clone(self);
+        r.add("PATCH", "/v2/entities/:id/attrs", move |req, params| {
+            let body = match req.json() {
+                Ok(b) => b,
+                Err(e) => return Response::bad_request(&e),
+            };
+            let attrs: BTreeMap<String, Json> = body
+                .as_obj()
+                .map(|o| o.iter().map(|(k, v)| (k.clone(), v.clone())).collect())
+                .unwrap_or_default();
+            if me.patch(&params["id"], &attrs) {
+                Response::json(200, &Json::obj(vec![("updated", Json::Bool(true))]))
+            } else {
+                Response::not_found()
+            }
+        });
+        let me = Arc::clone(self);
+        r.add("DELETE", "/v2/entities/:id", move |_req, params| {
+            if me.delete(&params["id"]) {
+                Response::new(204)
+            } else {
+                Response::not_found()
+            }
+        });
+        let me = Arc::clone(self);
+        r.add("POST", "/v2/subscriptions", move |req, _| {
+            let body = match req.json() {
+                Ok(b) => b,
+                Err(e) => return Response::bad_request(&e),
+            };
+            let t = body.get("entity_type").as_str().unwrap_or("*").to_string();
+            let Some(url) = body.get("url").as_str().map(String::from) else {
+                return Response::bad_request("subscription needs url");
+            };
+            me.subscribe(&t, &url);
+            Response::json(201, &Json::obj(vec![("subscribed", Json::Bool(true))]))
+        });
+        r
+    }
+
+    pub fn serve(self: &Arc<Self>, addr: &str) -> std::io::Result<Server> {
+        Server::serve(addr, self.router(), 4)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn entity_lifecycle_over_http() {
+        let broker = ContextBroker::new();
+        let mut server = broker.serve("127.0.0.1:0").unwrap();
+        let base = format!("http://{}", server.addr);
+        let e = Json::parse(
+            r#"{"id": "kws-device-1", "type": "Device", "status": "online"}"#,
+        )
+        .unwrap();
+        assert_eq!(client::post_json(&format!("{base}/v2/entities"), &e).unwrap().status, 201);
+        let got = client::get(&format!("{base}/v2/entities/kws-device-1")).unwrap();
+        assert_eq!(got.json().unwrap().get("status").as_str(), Some("online"));
+        // patch
+        let p = Json::parse(r#"{"status": "busy"}"#).unwrap();
+        client::request(
+            "PATCH",
+            &format!("{base}/v2/entities/kws-device-1/attrs"),
+            &[("Content-Type", "application/json")],
+            p.to_string().as_bytes(),
+        )
+        .unwrap();
+        let got = client::get(&format!("{base}/v2/entities/kws-device-1")).unwrap();
+        assert_eq!(got.json().unwrap().get("status").as_str(), Some("busy"));
+        // filtered list
+        let list = client::get(&format!("{base}/v2/entities?type=Device")).unwrap();
+        assert_eq!(list.json().unwrap().as_arr().unwrap().len(), 1);
+        let none = client::get(&format!("{base}/v2/entities?type=Nope")).unwrap();
+        assert_eq!(none.json().unwrap().as_arr().unwrap().len(), 0);
+        server.stop();
+    }
+
+    #[test]
+    fn subscriptions_notify() {
+        // subscriber server capturing notifications
+        let received = Arc::new(Mutex::new(Vec::<Json>::new()));
+        let rec2 = Arc::clone(&received);
+        let mut sub_router = Router::new();
+        sub_router.add("POST", "/notify", move |req, _| {
+            rec2.lock().unwrap().push(req.json().unwrap());
+            Response::new(204)
+        });
+        let mut sub_server = Server::serve("127.0.0.1:0", sub_router, 2).unwrap();
+
+        let broker = ContextBroker::new();
+        broker.subscribe("Measurement", &format!("http://{}/notify", sub_server.addr));
+        let mut attrs = BTreeMap::new();
+        attrs.insert("keyword".into(), Json::str("yes"));
+        broker.upsert("m1", "Measurement", attrs);
+        // wait for async notify
+        for _ in 0..100 {
+            if !received.lock().unwrap().is_empty() {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        let got = received.lock().unwrap();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].get("keyword").as_str(), Some("yes"));
+        sub_server.stop();
+    }
+}

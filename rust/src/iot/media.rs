@@ -1,0 +1,66 @@
+//! Kurento-like media module (paper §7.2.2): a hub-side endpoint that
+//! receives media (audio) from constrained devices, calls the LPDNN AI
+//! application (our serving router) and stores the result in the context
+//! broker — the dedicated media module the paper built for the
+//! edge-processing/cloud-processing scenarios.
+
+use super::broker::ContextBroker;
+use crate::http::{Response, Router, Server};
+use crate::serving::Router as ServingRouter;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+pub struct MediaModule;
+
+impl MediaModule {
+    pub fn router(serving: Arc<ServingRouter>, broker: Arc<ContextBroker>) -> Router {
+        let mut r = Router::new();
+        r.add("POST", "/v1/media/kws", move |req, _| {
+            let body = match req.json() {
+                Ok(b) => b,
+                Err(e) => return Response::bad_request(&e),
+            };
+            let device = body.get("device").as_str().unwrap_or("unknown").to_string();
+            let Some(arr) = body.get("audio").as_arr() else {
+                return Response::bad_request("need audio");
+            };
+            let audio: Vec<f32> = arr.iter().map(|v| v.as_f64().unwrap_or(0.0) as f32).collect();
+            let model = body.get("model").as_str().map(String::from);
+            match serving.infer(model.as_deref(), audio) {
+                Err(e) => Response::error(&e),
+                Ok(p) => {
+                    let mut attrs = BTreeMap::new();
+                    attrs.insert("device".into(), Json::str(device.clone()));
+                    attrs.insert("keyword".into(), Json::str(p.class.clone()));
+                    attrs.insert("class_id".into(), Json::from(p.class_id));
+                    attrs.insert("scenario".into(), Json::str("cloud-processing"));
+                    attrs.insert("latency_ms".into(), Json::num(p.latency_ms));
+                    broker.upsert(&format!("{device}:last"), "Measurement", attrs);
+                    Response::json(
+                        200,
+                        &Json::obj(vec![
+                            ("class", Json::str(p.class)),
+                            ("class_id", Json::from(p.class_id)),
+                            ("latency_ms", Json::num(p.latency_ms)),
+                        ]),
+                    )
+                }
+            }
+        });
+        r
+    }
+
+    /// Serve a combined hub: context broker + media module on one port.
+    pub fn serve_hub(
+        serving: Arc<ServingRouter>,
+        broker: Arc<ContextBroker>,
+        addr: &str,
+    ) -> std::io::Result<Server> {
+        let mut router = broker.router();
+        // merge in media routes
+        let media = Self::router(serving, broker);
+        router.merge(media);
+        Server::serve(addr, router, 4)
+    }
+}

@@ -1,0 +1,64 @@
+//! IoT hub integration (paper §7): FIWARE-like context broker, IoT agents
+//! for the edge-processing and cloud-processing scenarios (Fig 12), and the
+//! Kurento-like media module bridging media streams to the AI application.
+
+pub mod agent;
+pub mod broker;
+pub mod media;
+
+pub use agent::{CloudAgent, EdgeAgent};
+pub use broker::{ContextBroker, Entity};
+pub use media::MediaModule;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::EngineHandle;
+    use crate::serving::{BatcherConfig, Router as ServingRouter, ServableModel};
+    use std::path::PathBuf;
+    use std::sync::Arc;
+
+    #[test]
+    fn both_iot_scenarios_end_to_end() {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("SKIP: artifacts not built");
+            return;
+        }
+        let engine = EngineHandle::spawn(dir).unwrap();
+        let mut serving = ServingRouter::new(engine.clone());
+        serving
+            .register(
+                ServableModel::from_init(&engine, "ds_kws9").unwrap(),
+                BatcherConfig { max_wait_ms: 1.0, ..Default::default() },
+            )
+            .unwrap();
+        let serving = Arc::new(serving);
+        let broker = ContextBroker::new();
+        let mut hub =
+            MediaModule::serve_hub(Arc::clone(&serving), Arc::clone(&broker), "127.0.0.1:0")
+                .unwrap();
+        let hub_url = format!("http://{}", hub.addr);
+
+        // scenario A: edge processing
+        let mut edge = EdgeAgent::new("edge-1", Arc::clone(&serving), &hub_url);
+        edge.register().unwrap();
+        edge.capture_and_report(3).unwrap();
+        // hub now has the device + its measurement
+        assert!(broker.get("edge-1").is_some());
+        let m = broker.get("edge-1:last").unwrap();
+        assert_eq!(m.entity_type, "Measurement");
+        assert!(m.attrs.contains_key("keyword"));
+
+        // scenario B: cloud processing (offload raw audio to the hub)
+        let mut cloud = CloudAgent::new("cloud-1", &hub_url);
+        let resp = cloud.capture_and_offload(5, 10).unwrap();
+        assert!(resp.get("class").as_str().is_some());
+        let m = broker.get("cloud-1:last").unwrap();
+        assert_eq!(
+            m.attrs.get("scenario").and_then(|s| s.as_str()),
+            Some("cloud-processing")
+        );
+        hub.stop();
+    }
+}

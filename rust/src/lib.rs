@@ -1,0 +1,31 @@
+//! # Bonseyes AI Pipeline — reproduction
+//!
+//! End-to-end integration of data, algorithms and deployment tools
+//! (de Prado et al., 2019/2020) rebuilt as a three-layer rust + JAX +
+//! Pallas stack. See DESIGN.md for the system inventory and the
+//! per-table/figure experiment index.
+//!
+//! Layer map:
+//! - L3 (this crate): pipeline framework (tools/artifacts/workflows), LNE
+//!   inference engine + QS-DNN deployment search, NAS, serving, IoT hub.
+//! - L2/L1 (python/compile): JAX KWS models + Pallas kernels, AOT-lowered
+//!   to `artifacts/*.hlo.txt`, executed here via PJRT (`runtime`).
+
+pub mod bench;
+pub mod cli;
+pub mod http;
+pub mod ingestion;
+pub mod iot;
+pub mod frameworks;
+pub mod lne;
+pub mod models;
+pub mod nas;
+pub mod pipeline;
+pub mod qsdnn;
+pub mod training;
+pub mod runtime;
+pub mod serving;
+pub mod tensor;
+pub mod testing;
+pub mod toolset;
+pub mod util;

@@ -1,0 +1,369 @@
+//! The LNE executor: runs a graph under a per-layer implementation
+//! assignment (paper §6.1.2), with per-layer timing (the signal QS-DNN
+//! learns from) and planned memory reuse (§6.2.2: buffers freed at last
+//! use, in-place BN/ReLU when sole consumer).
+
+use super::graph::{Graph, Layer, LayerKind, Weights};
+use super::platform::Platform;
+use super::plugin::{applicable, Assignment, ConvImpl};
+use super::primitives::depthwise::conv_depthwise;
+use super::primitives::direct::conv_direct;
+use super::primitives::f16conv::{self, conv_f16};
+use super::primitives::im2col::{conv_im2col, fc, GemmImpl};
+use super::primitives::int8::{self, conv_int8};
+use super::primitives::pool::{global_pool, lrn, pool, softmax};
+use super::primitives::winograd::{conv_winograd, transform_weights};
+use crate::tensor::{HTensor, QTensor, Tensor};
+use std::collections::HashMap;
+use std::time::Instant;
+
+const BN_EPS: f32 = 1e-5;
+
+/// A model prepared for execution on one platform: weight variants
+/// (winograd/int8/f16) are transformed once here, mirroring LNE's
+/// code-generation step.
+pub struct Prepared {
+    pub graph: Graph,
+    pub weights: Weights,
+    pub platform: Platform,
+    wino: HashMap<usize, Tensor>,
+    quant: HashMap<usize, QTensor>,
+    half: HashMap<usize, HTensor>,
+    /// consumers[v] = how many layers consume value v.
+    consumers: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub output: Tensor,
+    /// Per-layer wall time in ms (aligned with graph.layers).
+    pub layer_ms: Vec<f64>,
+    pub total_ms: f64,
+    /// Peak bytes of live activation memory during the run.
+    pub peak_bytes: usize,
+}
+
+impl Prepared {
+    pub fn new(graph: Graph, weights: Weights, platform: Platform) -> Result<Prepared, String> {
+        graph.infer_shapes()?; // validate topology early
+        let mut wino = HashMap::new();
+        let mut quant = HashMap::new();
+        let mut half = HashMap::new();
+        for (i, layer) in graph.layers.iter().enumerate() {
+            if let LayerKind::Conv { .. } = layer.kind {
+                let w = weights
+                    .get(&layer.name)
+                    .ok_or_else(|| format!("missing weights for {}", layer.name))?;
+                let choices = applicable(&layer.kind, &platform);
+                if choices.contains(&ConvImpl::Winograd) {
+                    wino.insert(i, transform_weights(&w[0]));
+                }
+                if choices.contains(&ConvImpl::Int8Gemm) {
+                    quant.insert(i, int8::prepare_weights(&w[0]));
+                }
+                if choices.contains(&ConvImpl::F16Gemm) {
+                    half.insert(i, f16conv::prepare_weights(&w[0]));
+                }
+            }
+        }
+        let mut consumers = vec![0usize; graph.layers.len() + 1];
+        for layer in &graph.layers {
+            for &v in &layer.inputs {
+                consumers[v] += 1;
+            }
+        }
+        *consumers.last_mut().unwrap() += 1; // final output survives
+        Ok(Prepared { graph, weights, platform, wino, quant, half, consumers })
+    }
+
+    fn wblobs(&self, layer: &Layer) -> &[Tensor] {
+        self.weights
+            .get(&layer.name)
+            .map(|v| v.as_slice())
+            .unwrap_or(&[])
+    }
+
+    /// Execute with the default assignment (first applicable impl per layer).
+    pub fn run_default(&self, x: &Tensor) -> RunResult {
+        let mut a = Assignment::default_for(&self.graph);
+        for (i, l) in self.graph.layers.iter().enumerate() {
+            let ch = applicable(&l.kind, &self.platform);
+            if !ch.is_empty() {
+                a.choices[i] = Some(ch[0]);
+            }
+        }
+        self.run(x, &a)
+    }
+
+    /// Execute the graph under `assignment`; input x: [N,C,H,W].
+    pub fn run(&self, x: &Tensor, assignment: &Assignment) -> RunResult {
+        assert_eq!(assignment.choices.len(), self.graph.layers.len());
+        let nvals = self.graph.layers.len() + 1;
+        let mut values: Vec<Option<Tensor>> = vec![None; nvals];
+        let mut remaining = self.consumers.clone();
+        values[0] = Some(x.clone());
+        let mut layer_ms = Vec::with_capacity(self.graph.layers.len());
+        let mut peak = 0usize;
+        let mut live = x.len() * 4;
+        let t_all = Instant::now();
+        for (i, layer) in self.graph.layers.iter().enumerate() {
+            let t0 = Instant::now();
+            let choice = assignment.choices[i];
+            let out = self.exec_layer(i, layer, choice, &mut values, &mut remaining);
+            live += out.len() * 4;
+            values[i + 1] = Some(out);
+            // release inputs whose consumers are exhausted
+            for &v in &layer.inputs {
+                remaining[v] -= 1;
+                if remaining[v] == 0 {
+                    if let Some(t) = values[v].take() {
+                        live -= t.len() * 4;
+                    }
+                }
+            }
+            peak = peak.max(live);
+            layer_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+        }
+        let output = values.pop().unwrap().expect("final value");
+        RunResult {
+            output,
+            layer_ms,
+            total_ms: t_all.elapsed().as_secs_f64() * 1e3,
+            peak_bytes: peak,
+        }
+    }
+
+    fn exec_layer(
+        &self,
+        idx: usize,
+        layer: &Layer,
+        choice: Option<ConvImpl>,
+        values: &mut [Option<Tensor>],
+        remaining: &mut [usize],
+    ) -> Tensor {
+        let input = |v: usize, values: &[Option<Tensor>]| -> Tensor {
+            values[v].as_ref().expect("input value alive").clone()
+        };
+        // in-place take when this layer is the sole remaining consumer
+        let take_or_clone = |v: usize, values: &mut [Option<Tensor>], remaining: &[usize]| {
+            if remaining[v] == 1 {
+                values[v].take().expect("input value alive")
+            } else {
+                values[v].as_ref().expect("input value alive").clone()
+            }
+        };
+        match &layer.kind {
+            LayerKind::Conv { stride, pad, relu_fused, .. } => {
+                let x = values[layer.inputs[0]].as_ref().expect("alive");
+                let w = self.wblobs(layer);
+                let bias: &[f32] = if w.len() > 1 { &w[1].data } else { &[] };
+                let blk = self.platform.blocking;
+                match choice.unwrap_or(ConvImpl::GemmRef) {
+                    ConvImpl::Direct => conv_direct(x, &w[0], bias, *stride, *pad, *relu_fused),
+                    ConvImpl::GemmRef => {
+                        conv_im2col(x, &w[0], bias, *stride, *pad, GemmImpl::Reference, *relu_fused)
+                    }
+                    ConvImpl::GemmBlocked => conv_im2col(
+                        x, &w[0], bias, *stride, *pad, GemmImpl::Blocked(blk), *relu_fused,
+                    ),
+                    ConvImpl::Winograd => {
+                        let u = self.wino.get(&idx).expect("winograd weights prepared");
+                        conv_winograd(x, u, bias, *pad, *relu_fused)
+                    }
+                    ConvImpl::Int8Gemm => {
+                        let q = self.quant.get(&idx).expect("int8 weights prepared");
+                        conv_int8(x, q, bias, *stride, *pad, *relu_fused)
+                    }
+                    ConvImpl::F16Gemm => {
+                        let h = self.half.get(&idx).expect("f16 weights prepared");
+                        conv_f16(x, h, bias, *stride, *pad, *relu_fused, blk)
+                    }
+                }
+            }
+            LayerKind::DwConv { stride, pad, relu_fused, .. } => {
+                let x = values[layer.inputs[0]].as_ref().expect("alive");
+                let w = self.wblobs(layer);
+                let bias: &[f32] = if w.len() > 1 { &w[1].data } else { &[] };
+                conv_depthwise(x, &w[0], bias, *stride, *pad, *relu_fused)
+            }
+            LayerKind::Fc { relu_fused } => {
+                let x = values[layer.inputs[0]].as_ref().expect("alive");
+                let w = self.wblobs(layer);
+                let gemm = match choice.unwrap_or(ConvImpl::GemmRef) {
+                    ConvImpl::GemmBlocked => GemmImpl::Blocked(self.platform.blocking),
+                    _ => GemmImpl::Reference,
+                };
+                fc(x, &w[0], &w[1].data, gemm, *relu_fused)
+            }
+            LayerKind::BatchNorm => {
+                let mut x = take_or_clone(layer.inputs[0], values, remaining);
+                let w = self.wblobs(layer);
+                let (mean, var, gamma, beta) = (&w[0], &w[1], &w[2], &w[3]);
+                let (c, plane) = (x.c(), x.h() * x.w());
+                let n = x.n();
+                for ci in 0..c {
+                    let scale = gamma.data[ci] / (var.data[ci] + BN_EPS).sqrt();
+                    let shift = beta.data[ci] - mean.data[ci] * scale;
+                    for ni in 0..n {
+                        let base = (ni * c + ci) * plane;
+                        for v in x.data[base..base + plane].iter_mut() {
+                            *v = *v * scale + shift;
+                        }
+                    }
+                }
+                x
+            }
+            LayerKind::ReLU => {
+                let mut x = take_or_clone(layer.inputs[0], values, remaining);
+                x.relu_inplace();
+                x
+            }
+            LayerKind::Pool { kind, k, stride, pad, global } => {
+                let x = values[layer.inputs[0]].as_ref().expect("alive");
+                if *global {
+                    global_pool(x, *kind)
+                } else {
+                    pool(x, *kind, *k, *stride, *pad)
+                }
+            }
+            LayerKind::Softmax => {
+                let x = values[layer.inputs[0]].as_ref().expect("alive");
+                softmax(x)
+            }
+            LayerKind::Add { relu_fused } => {
+                let mut a = take_or_clone(layer.inputs[0], values, remaining);
+                let b = input(layer.inputs[1], values);
+                a.add_inplace(&b);
+                if *relu_fused {
+                    a.relu_inplace();
+                }
+                a
+            }
+            LayerKind::Concat => {
+                let first = values[layer.inputs[0]].as_ref().expect("alive");
+                let (n, h, w) = (first.n(), first.h(), first.w());
+                let c_total: usize = layer
+                    .inputs
+                    .iter()
+                    .map(|&v| values[v].as_ref().unwrap().c())
+                    .sum();
+                let mut out = Tensor::zeros(&[n, c_total, h, w]);
+                let plane = h * w;
+                for ni in 0..n {
+                    let mut c_off = 0;
+                    for &v in &layer.inputs {
+                        let t = values[v].as_ref().unwrap();
+                        let c = t.c();
+                        let src = &t.data[ni * c * plane..(ni + 1) * c * plane];
+                        let dst_base = (ni * c_total + c_off) * plane;
+                        out.data[dst_base..dst_base + c * plane].copy_from_slice(src);
+                        c_off += c;
+                    }
+                }
+                out
+            }
+            LayerKind::Lrn { size, alpha, beta, k } => {
+                let x = values[layer.inputs[0]].as_ref().expect("alive");
+                lrn(x, *size, *alpha, *beta, *k)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lne::graph::{Padding, PoolKind};
+    use crate::util::rng::Rng;
+
+    fn toy_model() -> (Graph, Weights) {
+        let mut rng = Rng::new(5);
+        let mut g = Graph::new("toy", (3, 10, 8));
+        g.push("conv1", LayerKind::Conv { k: (3, 3), stride: (1, 1), pad: Padding::Same, relu_fused: false }, 6);
+        g.push("bn1", LayerKind::BatchNorm, 0);
+        g.push("relu1", LayerKind::ReLU, 0);
+        g.push("pool", LayerKind::Pool { kind: PoolKind::Avg, k: 0, stride: 1, pad: 0, global: true }, 0);
+        g.push("fc", LayerKind::Fc { relu_fused: false }, 4);
+        g.push("prob", LayerKind::Softmax, 0);
+        let mut w = Weights::new();
+        w.insert("conv1".into(), vec![
+            Tensor::randn(&[6, 3, 3, 3], 0.5, &mut rng),
+            Tensor::randn(&[6], 0.1, &mut rng),
+        ]);
+        w.insert("bn1".into(), vec![
+            Tensor::randn(&[6], 0.3, &mut rng),               // mean
+            Tensor::filled(&[6], 1.5),                        // var
+            Tensor::randn(&[6], 0.2, &mut rng),               // gamma
+            Tensor::randn(&[6], 0.2, &mut rng),               // beta
+        ]);
+        w.insert("fc".into(), vec![
+            Tensor::randn(&[6, 4], 0.5, &mut rng),
+            Tensor::randn(&[4], 0.1, &mut rng),
+        ]);
+        (g, w)
+    }
+
+    #[test]
+    fn all_assignments_agree_numerically() {
+        let (g, w) = toy_model();
+        let p = Prepared::new(g.clone(), w, Platform::pi4()).unwrap();
+        let mut rng = Rng::new(9);
+        let x = Tensor::randn(&[2, 3, 10, 8], 1.0, &mut rng);
+        let space = super::super::plugin::DesignSpace::build(&g, &p.platform);
+        let base = p.run(&x, &space.uniform(&g, ConvImpl::Direct));
+        for choice in [ConvImpl::GemmRef, ConvImpl::GemmBlocked, ConvImpl::Winograd] {
+            let r = p.run(&x, &space.uniform(&g, choice));
+            assert!(
+                r.output.allclose(&base.output, 1e-3, 1e-3),
+                "{choice:?} diverges: {}",
+                r.output.max_abs_diff(&base.output)
+            );
+        }
+        // int8 within quantization tolerance
+        let r = p.run(&x, &space.uniform(&g, ConvImpl::Int8Gemm));
+        assert!(r.output.max_abs_diff(&base.output) < 0.1);
+        // probabilities sum to 1
+        let s: f32 = base.output.data[..4].iter().sum();
+        assert!((s - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn layer_times_and_memory_are_recorded() {
+        let (g, w) = toy_model();
+        let nlayers = g.layers.len();
+        let p = Prepared::new(g, w, Platform::pi4()).unwrap();
+        let mut rng = Rng::new(1);
+        let x = Tensor::randn(&[1, 3, 10, 8], 1.0, &mut rng);
+        let r = p.run_default(&x);
+        assert_eq!(r.layer_ms.len(), nlayers);
+        assert!(r.total_ms > 0.0);
+        assert!(r.peak_bytes >= x.len() * 4);
+    }
+
+    #[test]
+    fn residual_graph_executes() {
+        let mut rng = Rng::new(2);
+        let mut g = Graph::new("res", (4, 6, 6));
+        let a = g.push("conv_a", LayerKind::Conv { k: (3, 3), stride: (1, 1), pad: Padding::Same, relu_fused: false }, 4);
+        let add = g.push_on("add", LayerKind::Add { relu_fused: true }, vec![a, 0], 0);
+        g.push_on("cat", LayerKind::Concat, vec![add, 0], 0);
+        let mut w = Weights::new();
+        w.insert("conv_a".into(), vec![
+            Tensor::randn(&[4, 4, 3, 3], 0.3, &mut rng),
+            Tensor::zeros(&[4]),
+        ]);
+        let p = Prepared::new(g, w, Platform::pi3()).unwrap();
+        let x = Tensor::randn(&[1, 4, 6, 6], 1.0, &mut rng);
+        let r = p.run_default(&x);
+        assert_eq!(r.output.shape, vec![1, 8, 6, 6]);
+        // concat's second half is the raw input
+        assert_eq!(&r.output.data[4 * 36..8 * 36], &x.data[..]);
+    }
+
+    #[test]
+    fn missing_weights_is_an_error() {
+        let mut g = Graph::new("bad", (1, 4, 4));
+        g.push("conv1", LayerKind::Conv { k: (3, 3), stride: (1, 1), pad: Padding::Same, relu_fused: false }, 2);
+        assert!(Prepared::new(g, Weights::new(), Platform::pi4()).is_err());
+    }
+}

@@ -1,0 +1,312 @@
+//! LNE computation-graph IR (paper §6.1.2): a Caffe-like layer graph in an
+//! unified internal format. Models imported from the manifest (KWS nets) or
+//! defined by the model zoo (`models/*`) lower to this IR; the engine then
+//! assigns each layer an implementation among the available plugins.
+//!
+//! Tensors are SSA values identified by index; layers consume input value
+//! ids and produce one value. Branchy topologies (inception concat, resnet
+//! add) are expressed directly.
+
+use crate::tensor::Tensor;
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum LayerKind {
+    /// Standard convolution: OIHW weights, SAME or explicit padding.
+    Conv { k: (usize, usize), stride: (usize, usize), pad: Padding, relu_fused: bool },
+    /// Depthwise convolution (one filter per input channel).
+    DwConv { k: (usize, usize), stride: (usize, usize), pad: Padding, relu_fused: bool },
+    /// Fully connected: weights [in, out].
+    Fc { relu_fused: bool },
+    /// Batch normalization (inference: running stats) followed by scale
+    /// (gamma/beta) — Caffe's BatchNorm+Scale pair kept as one layer.
+    BatchNorm,
+    ReLU,
+    /// Max or average pooling; `global` pools the full spatial extent.
+    /// `pad` is symmetric zero padding (Caffe ceil-mode geometry).
+    Pool { kind: PoolKind, k: usize, stride: usize, pad: usize, global: bool },
+    Softmax,
+    /// Elementwise residual add of two inputs.
+    Add { relu_fused: bool },
+    /// Channel concat of N inputs.
+    Concat,
+    /// Local response normalization (AlexNet/GoogleNet).
+    Lrn { size: usize, alpha: f32, beta: f32, k: f32 },
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Padding {
+    Same,
+    Valid,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PoolKind {
+    Max,
+    Avg,
+}
+
+#[derive(Debug, Clone)]
+pub struct Layer {
+    pub name: String,
+    pub kind: LayerKind,
+    /// Value ids consumed (value 0 is the graph input).
+    pub inputs: Vec<usize>,
+    /// Output channels for conv/fc (redundant with weights; used by shape
+    /// inference before weights exist).
+    pub c_out: usize,
+}
+
+/// Weight blobs per layer name. Conv: [w OIHW, bias]; DwConv: [w C1HW, bias];
+/// Fc: [w [in,out], bias]; BatchNorm: [mean, var, gamma, beta].
+pub type Weights = BTreeMap<String, Vec<Tensor>>;
+
+#[derive(Debug, Clone)]
+pub struct Graph {
+    pub name: String,
+    /// Input shape (C, H, W) for batch-1 NCHW activations.
+    pub input: (usize, usize, usize),
+    pub layers: Vec<Layer>,
+}
+
+impl Graph {
+    pub fn new(name: &str, input: (usize, usize, usize)) -> Graph {
+        Graph { name: name.to_string(), input, layers: Vec::new() }
+    }
+
+    /// Append a layer consuming the previous value; returns its value id.
+    /// Value ids: 0 = graph input, layer i produces value i+1.
+    pub fn push(&mut self, name: &str, kind: LayerKind, c_out: usize) -> usize {
+        let prev = self.layers.len(); // value id of the previous output
+        self.push_on(name, kind, vec![prev], c_out)
+    }
+
+    /// Append a layer with explicit input value ids; returns its value id.
+    pub fn push_on(
+        &mut self,
+        name: &str,
+        kind: LayerKind,
+        inputs: Vec<usize>,
+        c_out: usize,
+    ) -> usize {
+        self.layers.push(Layer { name: name.to_string(), kind, inputs, c_out });
+        self.layers.len()
+    }
+
+    pub fn layer(&self, name: &str) -> Option<&Layer> {
+        self.layers.iter().find(|l| l.name == name)
+    }
+
+    /// Infer every value's shape (C, H, W) for a given batch-independent
+    /// spatial input. Returns shapes[value_id]; shapes[0] = input.
+    pub fn infer_shapes(&self) -> Result<Vec<(usize, usize, usize)>, String> {
+        let mut shapes = vec![self.input];
+        for (i, layer) in self.layers.iter().enumerate() {
+            for &inp in &layer.inputs {
+                if inp > i {
+                    return Err(format!(
+                        "layer {} consumes future value {inp}",
+                        layer.name
+                    ));
+                }
+            }
+            let s0 = shapes[layer.inputs[0]];
+            let out = match &layer.kind {
+                LayerKind::Conv { k, stride, pad, .. } => {
+                    let (h, w) = conv_out(s0.1, s0.2, *k, *stride, *pad);
+                    (layer.c_out, h, w)
+                }
+                LayerKind::DwConv { k, stride, pad, .. } => {
+                    let (h, w) = conv_out(s0.1, s0.2, *k, *stride, *pad);
+                    (s0.0, h, w)
+                }
+                LayerKind::Fc { .. } => (layer.c_out, 1, 1),
+                LayerKind::BatchNorm | LayerKind::ReLU | LayerKind::Softmax => s0,
+                LayerKind::Lrn { .. } => s0,
+                LayerKind::Pool { k, stride, pad, global, .. } => {
+                    if *global {
+                        (s0.0, 1, 1)
+                    } else {
+                        // Caffe ceil-mode: out = ceil((H + 2p - k)/s) + 1
+                        let h = (s0.1 + 2 * pad).saturating_sub(*k).div_ceil(*stride) + 1;
+                        let w = (s0.2 + 2 * pad).saturating_sub(*k).div_ceil(*stride) + 1;
+                        (s0.0, h, w)
+                    }
+                }
+                LayerKind::Add { .. } => {
+                    let s1 = shapes[layer.inputs[1]];
+                    if s0 != s1 {
+                        return Err(format!(
+                            "add {}: shape mismatch {s0:?} vs {s1:?}",
+                            layer.name
+                        ));
+                    }
+                    s0
+                }
+                LayerKind::Concat => {
+                    let mut c = 0;
+                    for &inp in &layer.inputs {
+                        let s = shapes[inp];
+                        if (s.1, s.2) != (s0.1, s0.2) {
+                            return Err(format!(
+                                "concat {}: spatial mismatch",
+                                layer.name
+                            ));
+                        }
+                        c += s.0;
+                    }
+                    (c, s0.1, s0.2)
+                }
+            };
+            shapes.push(out);
+        }
+        Ok(shapes)
+    }
+
+    /// MFLOPs per single-sample inference, conv/fc only (the paper's
+    /// MFP_ops convention: 2 * K * K * Cin * Cout * Hout * Wout).
+    pub fn mflops(&self) -> f64 {
+        let shapes = self.infer_shapes().expect("shape inference");
+        let mut flops = 0.0f64;
+        for (i, layer) in self.layers.iter().enumerate() {
+            let s_in = shapes[layer.inputs[0]];
+            let s_out = shapes[i + 1];
+            flops += match &layer.kind {
+                LayerKind::Conv { k, .. } => {
+                    2.0 * (k.0 * k.1 * s_in.0 * s_out.0 * s_out.1 * s_out.2) as f64
+                }
+                LayerKind::DwConv { k, .. } => {
+                    2.0 * (k.0 * k.1 * s_out.0 * s_out.1 * s_out.2) as f64
+                }
+                LayerKind::Fc { .. } => {
+                    2.0 * (s_in.0 * s_in.1 * s_in.2 * s_out.0) as f64
+                }
+                _ => 0.0,
+            };
+        }
+        flops / 1e6
+    }
+
+    /// Model size in KB (f32 weights), conv/dw/fc + bn parameters.
+    pub fn size_kb(&self, weights: &Weights) -> f64 {
+        let params: usize = self
+            .layers
+            .iter()
+            .filter_map(|l| weights.get(&l.name))
+            .flat_map(|ts| ts.iter().map(|t| t.len()))
+            .sum();
+        params as f64 * 4.0 / 1024.0
+    }
+
+    /// Ids of layers that hold weights (conv / dwconv / fc / bn).
+    pub fn weighted_layers(&self) -> Vec<usize> {
+        self.layers
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| {
+                matches!(
+                    l.kind,
+                    LayerKind::Conv { .. }
+                        | LayerKind::DwConv { .. }
+                        | LayerKind::Fc { .. }
+                        | LayerKind::BatchNorm
+                )
+            })
+            .map(|(i, _)| i)
+            .collect()
+    }
+}
+
+pub fn conv_out(
+    h: usize,
+    w: usize,
+    k: (usize, usize),
+    stride: (usize, usize),
+    pad: Padding,
+) -> (usize, usize) {
+    match pad {
+        Padding::Same => (h.div_ceil(stride.0), w.div_ceil(stride.1)),
+        Padding::Valid => (
+            (h.saturating_sub(k.0) / stride.0) + 1,
+            (w.saturating_sub(k.1) / stride.1) + 1,
+        ),
+    }
+}
+
+/// SAME padding amounts (top, left) for a conv.
+pub fn same_pad(
+    h: usize,
+    w: usize,
+    k: (usize, usize),
+    stride: (usize, usize),
+) -> (usize, usize) {
+    let out_h = h.div_ceil(stride.0);
+    let out_w = w.div_ceil(stride.1);
+    let pad_h = ((out_h - 1) * stride.0 + k.0).saturating_sub(h);
+    let pad_w = ((out_w - 1) * stride.1 + k.1).saturating_sub(w);
+    (pad_h / 2, pad_w / 2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Graph {
+        let mut g = Graph::new("toy", (1, 40, 32));
+        g.push("conv1",
+               LayerKind::Conv { k: (4, 10), stride: (1, 2), pad: Padding::Same, relu_fused: false },
+               100);
+        g.push("bn1", LayerKind::BatchNorm, 0);
+        g.push("relu1", LayerKind::ReLU, 0);
+        g.push("pool", LayerKind::Pool { kind: PoolKind::Avg, k: 0, stride: 1, pad: 0, global: true }, 0);
+        g.push("fc", LayerKind::Fc { relu_fused: false }, 12);
+        g
+    }
+
+    #[test]
+    fn shapes_propagate() {
+        let g = toy();
+        let shapes = g.infer_shapes().unwrap();
+        assert_eq!(shapes[0], (1, 40, 32));
+        assert_eq!(shapes[1], (100, 40, 16)); // conv1 stride (1,2) SAME
+        assert_eq!(shapes[4], (100, 1, 1));   // global pool
+        assert_eq!(shapes[5], (12, 1, 1));    // fc
+    }
+
+    #[test]
+    fn residual_and_concat_shapes() {
+        let mut g = Graph::new("res", (8, 10, 10));
+        let a = g.push("conv_a",
+                       LayerKind::Conv { k: (3, 3), stride: (1, 1), pad: Padding::Same, relu_fused: false }, 8);
+        let b = g.push_on("conv_b",
+                          LayerKind::Conv { k: (1, 1), stride: (1, 1), pad: Padding::Same, relu_fused: false },
+                          vec![0], 8);
+        let add = g.push_on("add", LayerKind::Add { relu_fused: false }, vec![a, b], 0);
+        g.push_on("cat", LayerKind::Concat, vec![add, 0], 0);
+        let shapes = g.infer_shapes().unwrap();
+        assert_eq!(shapes[add], (8, 10, 10));
+        assert_eq!(shapes[4], (16, 10, 10));
+    }
+
+    #[test]
+    fn mflops_matches_paper_for_cnn_seed_geometry() {
+        // 6-conv KWS seed: conv1 4x10 s(1,2), conv2-6 3x3 s1, all SAME
+        let mut g = Graph::new("cnn_seed", (1, 40, 32));
+        g.push("conv1", LayerKind::Conv { k: (4, 10), stride: (1, 2), pad: Padding::Same, relu_fused: false }, 100);
+        for i in 2..=6 {
+            g.push(&format!("conv{i}"),
+                   LayerKind::Conv { k: (3, 3), stride: (1, 1), pad: Padding::Same, relu_fused: false }, 100);
+        }
+        g.push("pool", LayerKind::Pool { kind: PoolKind::Avg, k: 0, stride: 1, pad: 0, global: true }, 0);
+        g.push("fc", LayerKind::Fc { relu_fused: false }, 12);
+        let mf = g.mflops();
+        assert!((mf - 581.1).abs() < 1.0, "got {mf}"); // paper Table 1
+    }
+
+    #[test]
+    fn rejects_forward_references() {
+        let mut g = Graph::new("bad", (1, 4, 4));
+        g.push_on("add", LayerKind::Add { relu_fused: false }, vec![0, 5], 0);
+        assert!(g.infer_shapes().is_err());
+    }
+}

@@ -1,0 +1,20 @@
+//! LPDNN Inference Engine (LNE) substrate — paper §6.
+//!
+//! A Caffe-like graph IR (`graph`), a set of from-scratch acceleration-
+//! library primitives (`primitives`), a plugin registry describing which
+//! implementation may run each layer on each platform (`plugin`,
+//! `platform`), compile-time optimization passes (`passes`: BN folding,
+//! activation fusion), a per-layer-assigned executor with planned memory
+//! reuse (`engine`), and the int8 sensitivity explorer (`quant_explore`).
+
+pub mod engine;
+pub mod graph;
+pub mod passes;
+pub mod platform;
+pub mod plugin;
+pub mod primitives;
+pub mod quant_explore;
+
+pub use engine::{Prepared, RunResult};
+pub use graph::{Graph, Layer, LayerKind, Padding, PoolKind, Weights};
+pub use plugin::{applicable, Assignment, ConvImpl, DesignSpace};

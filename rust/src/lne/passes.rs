@@ -1,0 +1,243 @@
+//! Graph optimization passes (paper §6.2.1): batch-norm folding into the
+//! preceding conv/fc at compile time, and activation fusion into the
+//! producing layer at run time. Both rewrite (Graph, Weights) pairs.
+
+use super::graph::{Graph, LayerKind, Weights};
+use crate::tensor::Tensor;
+
+const BN_EPS: f32 = 1e-5;
+
+fn consumer_counts(g: &Graph) -> Vec<usize> {
+    let mut counts = vec![0usize; g.layers.len() + 1];
+    for l in &g.layers {
+        for &v in &l.inputs {
+            counts[v] += 1;
+        }
+    }
+    *counts.last_mut().unwrap() += 1;
+    counts
+}
+
+fn is_foldable_producer(kind: &LayerKind) -> bool {
+    matches!(
+        kind,
+        LayerKind::Conv { .. } | LayerKind::DwConv { .. } | LayerKind::Fc { .. }
+    )
+}
+
+/// Fold BatchNorm layers into their producing conv/dw/fc. The folded layers
+/// disappear from the graph; weights are merged (memory + latency win).
+pub fn fold_batchnorm(graph: &Graph, weights: &Weights) -> (Graph, Weights) {
+    let counts = consumer_counts(graph);
+    let mut w = weights.clone();
+    let mut out = Graph::new(&graph.name, graph.input);
+    // value_map[old value id] -> new value id
+    let mut value_map = vec![0usize; graph.layers.len() + 1];
+    for (i, layer) in graph.layers.iter().enumerate() {
+        let old_out = i + 1;
+        let v = layer.inputs[0];
+        let foldable = matches!(layer.kind, LayerKind::BatchNorm)
+            && v > 0
+            && counts[v] == 1
+            && is_foldable_producer(&graph.layers[v - 1].kind)
+            // producer must still exist in the rewritten graph as the tip
+            && value_map[v] == out.layers.len();
+        if foldable {
+            let producer = &graph.layers[v - 1];
+            fold_into(&mut w, &producer.name, &layer.name, &producer.kind);
+            w.remove(&layer.name);
+            value_map[old_out] = value_map[v];
+            continue;
+        }
+        let inputs = layer.inputs.iter().map(|&x| value_map[x]).collect();
+        out.layers.push(super::graph::Layer {
+            name: layer.name.clone(),
+            kind: layer.kind.clone(),
+            inputs,
+            c_out: layer.c_out,
+        });
+        value_map[old_out] = out.layers.len();
+    }
+    (out, w)
+}
+
+fn fold_into(w: &mut Weights, producer: &str, bn: &str, kind: &LayerKind) {
+    let bn_blobs = w.get(bn).expect("bn weights").clone();
+    let (mean, var, gamma, beta) = (&bn_blobs[0], &bn_blobs[1], &bn_blobs[2], &bn_blobs[3]);
+    let c = mean.len();
+    let scale: Vec<f32> = (0..c)
+        .map(|i| gamma.data[i] / (var.data[i] + BN_EPS).sqrt())
+        .collect();
+    let shift: Vec<f32> = (0..c)
+        .map(|i| beta.data[i] - mean.data[i] * scale[i])
+        .collect();
+    let blobs = w.get_mut(producer).expect("producer weights");
+    // ensure a bias blob exists
+    if blobs.len() < 2 {
+        let c_out = match kind {
+            LayerKind::Fc { .. } => blobs[0].shape[1],
+            _ => blobs[0].shape[0],
+        };
+        blobs.push(Tensor::zeros(&[c_out]));
+    }
+    match kind {
+        LayerKind::Conv { .. } | LayerKind::DwConv { .. } => {
+            let o = blobs[0].shape[0];
+            assert_eq!(o, c, "bn channels vs producer out channels");
+            let per = blobs[0].len() / o;
+            for oc in 0..o {
+                for x in blobs[0].data[oc * per..(oc + 1) * per].iter_mut() {
+                    *x *= scale[oc];
+                }
+                blobs[1].data[oc] = blobs[1].data[oc] * scale[oc] + shift[oc];
+            }
+        }
+        LayerKind::Fc { .. } => {
+            let (wi, wo) = (blobs[0].shape[0], blobs[0].shape[1]);
+            assert_eq!(wo, c);
+            for i in 0..wi {
+                for oc in 0..wo {
+                    blobs[0].data[i * wo + oc] *= scale[oc];
+                }
+            }
+            for oc in 0..wo {
+                blobs[1].data[oc] = blobs[1].data[oc] * scale[oc] + shift[oc];
+            }
+        }
+        _ => unreachable!(),
+    }
+}
+
+/// Fuse ReLU layers into the producing conv/dw/fc/add (halves the memory
+/// traffic for the conv+activation pair, §6.2.1).
+pub fn fuse_activations(graph: &Graph) -> Graph {
+    let counts = consumer_counts(graph);
+    let mut out = Graph::new(&graph.name, graph.input);
+    let mut value_map = vec![0usize; graph.layers.len() + 1];
+    for (i, layer) in graph.layers.iter().enumerate() {
+        let old_out = i + 1;
+        let v = layer.inputs[0];
+        if matches!(layer.kind, LayerKind::ReLU) && v > 0 && counts[v] == 1 {
+            // the producer in the *rewritten* graph must be the tip
+            if value_map[v] == out.layers.len() && !out.layers.is_empty() {
+                let tip = out.layers.last_mut().unwrap();
+                let fused = match &mut tip.kind {
+                    LayerKind::Conv { relu_fused, .. }
+                    | LayerKind::DwConv { relu_fused, .. }
+                    | LayerKind::Fc { relu_fused }
+                    | LayerKind::Add { relu_fused } => {
+                        *relu_fused = true;
+                        true
+                    }
+                    _ => false,
+                };
+                if fused {
+                    value_map[old_out] = value_map[v];
+                    continue;
+                }
+            }
+        }
+        let inputs = layer.inputs.iter().map(|&x| value_map[x]).collect();
+        out.layers.push(super::graph::Layer {
+            name: layer.name.clone(),
+            kind: layer.kind.clone(),
+            inputs,
+            c_out: layer.c_out,
+        });
+        value_map[old_out] = out.layers.len();
+    }
+    out
+}
+
+/// Convenience: fold BN then fuse activations (LPDNN's default pipeline).
+pub fn optimize(graph: &Graph, weights: &Weights) -> (Graph, Weights) {
+    let (g, w) = fold_batchnorm(graph, weights);
+    (fuse_activations(&g), w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lne::engine::Prepared;
+    use crate::lne::graph::{Padding, PoolKind};
+    use crate::lne::platform::Platform;
+    use crate::util::rng::Rng;
+
+    fn model() -> (Graph, Weights) {
+        let mut rng = Rng::new(11);
+        let mut g = Graph::new("m", (2, 8, 8));
+        g.push("conv1", LayerKind::Conv { k: (3, 3), stride: (1, 1), pad: Padding::Same, relu_fused: false }, 4);
+        g.push("bn1", LayerKind::BatchNorm, 0);
+        g.push("relu1", LayerKind::ReLU, 0);
+        g.push("dw2", LayerKind::DwConv { k: (3, 3), stride: (1, 1), pad: Padding::Same, relu_fused: false }, 4);
+        g.push("bn2", LayerKind::BatchNorm, 0);
+        g.push("relu2", LayerKind::ReLU, 0);
+        g.push("pool", LayerKind::Pool { kind: PoolKind::Avg, k: 0, stride: 1, pad: 0, global: true }, 0);
+        g.push("fc", LayerKind::Fc { relu_fused: false }, 3);
+        let mut w = Weights::new();
+        w.insert("conv1".into(), vec![Tensor::randn(&[4, 2, 3, 3], 0.5, &mut rng), Tensor::randn(&[4], 0.1, &mut rng)]);
+        let bn = |rng: &mut Rng| vec![
+            Tensor::randn(&[4], 0.3, rng),
+            Tensor::filled(&[4], 0.8),
+            Tensor::randn(&[4], 0.2, rng),
+            Tensor::randn(&[4], 0.2, rng),
+        ];
+        w.insert("bn1".into(), bn(&mut rng));
+        w.insert("dw2".into(), vec![Tensor::randn(&[4, 1, 3, 3], 0.5, &mut rng), Tensor::zeros(&[4])]);
+        w.insert("bn2".into(), bn(&mut rng));
+        w.insert("fc".into(), vec![Tensor::randn(&[4, 3], 0.5, &mut rng), Tensor::zeros(&[3])]);
+        (g, w)
+    }
+
+    #[test]
+    fn folding_preserves_output_and_removes_layers() {
+        let (g, w) = model();
+        let (g2, w2) = fold_batchnorm(&g, &w);
+        assert_eq!(g2.layers.len(), g.layers.len() - 2);
+        assert!(g2.layer("bn1").is_none() && w2.get("bn1").is_none());
+        let mut rng = Rng::new(3);
+        let x = Tensor::randn(&[1, 2, 8, 8], 1.0, &mut rng);
+        let p1 = Prepared::new(g, w, Platform::pi4()).unwrap();
+        let p2 = Prepared::new(g2, w2, Platform::pi4()).unwrap();
+        let y1 = p1.run_default(&x).output;
+        let y2 = p2.run_default(&x).output;
+        assert!(y1.allclose(&y2, 1e-4, 1e-4), "diff {}", y1.max_abs_diff(&y2));
+    }
+
+    #[test]
+    fn fuse_then_fold_full_pipeline() {
+        let (g, w) = model();
+        let (g3, w3) = optimize(&g, &w);
+        // conv1+bn1+relu1 -> conv1(relu_fused); dw2+bn2+relu2 -> dw2(fused)
+        assert_eq!(g3.layers.len(), 4);
+        match &g3.layers[0].kind {
+            LayerKind::Conv { relu_fused, .. } => assert!(relu_fused),
+            k => panic!("unexpected {k:?}"),
+        }
+        let mut rng = Rng::new(4);
+        let x = Tensor::randn(&[2, 2, 8, 8], 1.0, &mut rng);
+        let p1 = Prepared::new(g, w, Platform::pi4()).unwrap();
+        let p2 = Prepared::new(g3, w3, Platform::pi4()).unwrap();
+        let y1 = p1.run_default(&x).output;
+        let y2 = p2.run_default(&x).output;
+        assert!(y1.allclose(&y2, 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn branchy_bn_is_not_folded() {
+        // BN whose input also feeds a residual add must survive
+        let mut rng = Rng::new(5);
+        let mut g = Graph::new("b", (2, 4, 4));
+        let c = g.push("conv", LayerKind::Conv { k: (1, 1), stride: (1, 1), pad: Padding::Same, relu_fused: false }, 2);
+        let b = g.push("bn", LayerKind::BatchNorm, 0);
+        g.push_on("add", LayerKind::Add { relu_fused: false }, vec![b, c], 0);
+        let mut w = Weights::new();
+        w.insert("conv".into(), vec![Tensor::randn(&[2, 2, 1, 1], 0.5, &mut rng), Tensor::zeros(&[2])]);
+        w.insert("bn".into(), vec![
+            Tensor::zeros(&[2]), Tensor::filled(&[2], 1.0),
+            Tensor::filled(&[2], 1.0), Tensor::zeros(&[2]),
+        ]);
+        let (g2, _) = fold_batchnorm(&g, &w);
+        assert!(g2.layer("bn").is_some(), "bn feeding a branch must not fold");
+    }
+}

@@ -1,0 +1,96 @@
+//! Platform profiles (paper §6.1.3: BSP + per-platform computing libraries).
+//!
+//! The paper benchmarks on RPi3b+ (Cortex-A53) and RPi4b (Cortex-A72). We
+//! run on one host CPU, so a profile stands in for a board: it fixes the
+//! GEMM blocking (cache hierarchy) and which plugins the BSP ships. The
+//! resulting executions genuinely differ; the evaluation claims we
+//! reproduce are *relative* (DESIGN.md §3).
+
+use super::plugin::ConvImpl;
+use super::primitives::gemm::Blocking;
+
+#[derive(Debug, Clone)]
+pub struct Platform {
+    pub name: String,
+    pub blocking: Blocking,
+    /// Plugins available in this BSP.
+    pub plugins: Vec<ConvImpl>,
+}
+
+impl Platform {
+    /// RPi3-class profile: small caches -> tight blocking, lean plugin set.
+    pub fn pi3() -> Platform {
+        Platform {
+            name: "pi3".into(),
+            blocking: Blocking { mc: 32, kc: 128, nc: 64 },
+            plugins: vec![
+                ConvImpl::Direct,
+                ConvImpl::GemmRef,
+                ConvImpl::GemmBlocked,
+                ConvImpl::Winograd,
+                ConvImpl::Int8Gemm,
+            ],
+        }
+    }
+
+    /// RPi4-class profile: bigger caches -> wider blocking, full plugin set.
+    pub fn pi4() -> Platform {
+        Platform {
+            name: "pi4".into(),
+            blocking: Blocking { mc: 64, kc: 256, nc: 256 },
+            plugins: vec![
+                ConvImpl::Direct,
+                ConvImpl::GemmRef,
+                ConvImpl::GemmBlocked,
+                ConvImpl::Winograd,
+                ConvImpl::Int8Gemm,
+                ConvImpl::F16Gemm,
+            ],
+        }
+    }
+
+    /// Jetson-Nano-class profile used for the KWS deployment (Fig 13).
+    pub fn jetson_nano() -> Platform {
+        Platform { name: "jetson-nano".into(), ..Platform::pi4() }
+    }
+
+    /// Jetson-Xavier-class profile used for body-pose (Fig 14); includes
+    /// the reduced-precision plugins the GPU experiment exercises.
+    pub fn jetson_xavier() -> Platform {
+        Platform { name: "jetson-xavier".into(), ..Platform::pi4() }
+    }
+
+    pub fn by_name(name: &str) -> Option<Platform> {
+        match name {
+            "pi3" => Some(Self::pi3()),
+            "pi4" => Some(Self::pi4()),
+            "jetson-nano" => Some(Self::jetson_nano()),
+            "jetson-xavier" => Some(Self::jetson_xavier()),
+            _ => None,
+        }
+    }
+
+    pub fn supports(&self, p: ConvImpl) -> bool {
+        self.plugins.contains(&p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profiles_differ() {
+        let a = Platform::pi3();
+        let b = Platform::pi4();
+        assert_ne!(a.blocking.nc, b.blocking.nc);
+        assert!(!a.supports(ConvImpl::F16Gemm));
+        assert!(b.supports(ConvImpl::F16Gemm));
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert!(Platform::by_name("pi3").is_some());
+        assert!(Platform::by_name("nope").is_none());
+    }
+}

@@ -1,0 +1,203 @@
+//! Plugin registry (paper §6.1.2, Fig 9): which layer implementations the
+//! engine may assign to each layer. A deployment *assignment* — one choice
+//! per selectable layer — is the state QS-DNN searches over (§6.2.4).
+
+use super::graph::{Graph, LayerKind};
+use super::platform::Platform;
+
+/// Implementation choices for conv-like layers (the "acceleration
+/// libraries" of §6.2.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ConvImpl {
+    /// 7-loop direct convolution.
+    Direct,
+    /// im2col + reference GEMM (the generic-BLAS path).
+    GemmRef,
+    /// im2col + cache-blocked GEMM (tuned-library path).
+    GemmBlocked,
+    /// Winograd F(2x2,3x3) — 3x3 stride-1 only.
+    Winograd,
+    /// int8 symmetric quantized GEMM (§6.2.5).
+    Int8Gemm,
+    /// f16-storage GEMM (naive half precision; Fig 14b).
+    F16Gemm,
+}
+
+impl ConvImpl {
+    pub const ALL: [ConvImpl; 6] = [
+        ConvImpl::Direct,
+        ConvImpl::GemmRef,
+        ConvImpl::GemmBlocked,
+        ConvImpl::Winograd,
+        ConvImpl::Int8Gemm,
+        ConvImpl::F16Gemm,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ConvImpl::Direct => "direct",
+            ConvImpl::GemmRef => "gemm-ref",
+            ConvImpl::GemmBlocked => "gemm-blocked",
+            ConvImpl::Winograd => "winograd",
+            ConvImpl::Int8Gemm => "int8",
+            ConvImpl::F16Gemm => "f16",
+        }
+    }
+
+    pub fn by_name(s: &str) -> Option<ConvImpl> {
+        Self::ALL.iter().copied().find(|p| p.name() == s)
+    }
+
+    /// Reduced numerical precision (relevant to accuracy budgets).
+    pub fn reduced_precision(&self) -> bool {
+        matches!(self, ConvImpl::Int8Gemm | ConvImpl::F16Gemm)
+    }
+}
+
+/// Choices applicable to one layer on one platform.
+pub fn applicable(kind: &LayerKind, platform: &Platform) -> Vec<ConvImpl> {
+    match kind {
+        LayerKind::Conv { k, stride, .. } => {
+            let mut v = Vec::new();
+            for &p in &platform.plugins {
+                let ok = match p {
+                    ConvImpl::Winograd => *k == (3, 3) && *stride == (1, 1),
+                    _ => true,
+                };
+                if ok {
+                    v.push(p);
+                }
+            }
+            v
+        }
+        LayerKind::DwConv { .. } => vec![ConvImpl::Direct],
+        LayerKind::Fc { .. } => platform
+            .plugins
+            .iter()
+            .copied()
+            .filter(|p| matches!(p, ConvImpl::GemmRef | ConvImpl::GemmBlocked))
+            .collect(),
+        _ => Vec::new(), // not selectable
+    }
+}
+
+/// The deployment design space for a graph on a platform: per selectable
+/// layer, the applicable implementations (paper Fig 10).
+#[derive(Debug, Clone)]
+pub struct DesignSpace {
+    /// (layer index, choices) for every selectable layer.
+    pub layers: Vec<(usize, Vec<ConvImpl>)>,
+}
+
+impl DesignSpace {
+    pub fn build(graph: &Graph, platform: &Platform) -> DesignSpace {
+        let layers = graph
+            .layers
+            .iter()
+            .enumerate()
+            .filter_map(|(i, l)| {
+                let ch = applicable(&l.kind, platform);
+                if ch.is_empty() {
+                    None
+                } else {
+                    Some((i, ch))
+                }
+            })
+            .collect();
+        DesignSpace { layers }
+    }
+
+    /// Total number of assignments (product of per-layer choices).
+    pub fn cardinality(&self) -> f64 {
+        self.layers.iter().map(|(_, c)| c.len() as f64).product()
+    }
+
+    /// Uniform assignment using `choice` wherever applicable, else the
+    /// first applicable implementation.
+    pub fn uniform(&self, graph: &Graph, choice: ConvImpl) -> Assignment {
+        let mut a = Assignment::default_for(graph);
+        for (i, choices) in &self.layers {
+            a.choices[*i] = Some(if choices.contains(&choice) {
+                choice
+            } else {
+                choices[0]
+            });
+        }
+        a
+    }
+}
+
+/// One implementation choice per layer (None = not selectable / default).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Assignment {
+    pub choices: Vec<Option<ConvImpl>>,
+}
+
+impl Assignment {
+    pub fn default_for(graph: &Graph) -> Assignment {
+        Assignment { choices: vec![None; graph.layers.len()] }
+    }
+
+    pub fn describe(&self, graph: &Graph) -> String {
+        self.choices
+            .iter()
+            .enumerate()
+            .filter_map(|(i, c)| {
+                c.map(|c| format!("{}={}", graph.layers[i].name, c.name()))
+            })
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lne::graph::Padding;
+
+    fn toy() -> Graph {
+        let mut g = Graph::new("t", (3, 8, 8));
+        g.push("c3", LayerKind::Conv { k: (3, 3), stride: (1, 1), pad: Padding::Same, relu_fused: false }, 8);
+        g.push("c5", LayerKind::Conv { k: (5, 5), stride: (2, 2), pad: Padding::Same, relu_fused: false }, 8);
+        g.push("relu", LayerKind::ReLU, 0);
+        g.push("fc", LayerKind::Fc { relu_fused: false }, 4);
+        g
+    }
+
+    #[test]
+    fn winograd_only_for_3x3_s1() {
+        let g = toy();
+        let p = Platform::pi4();
+        let ds = DesignSpace::build(&g, &p);
+        assert_eq!(ds.layers.len(), 3); // two convs + fc; relu not selectable
+        let c3 = &ds.layers[0].1;
+        let c5 = &ds.layers[1].1;
+        assert!(c3.contains(&ConvImpl::Winograd));
+        assert!(!c5.contains(&ConvImpl::Winograd));
+    }
+
+    #[test]
+    fn cardinality_is_product() {
+        let g = toy();
+        let ds = DesignSpace::build(&g, &Platform::pi4());
+        let expect: f64 = ds.layers.iter().map(|(_, c)| c.len() as f64).product();
+        assert_eq!(ds.cardinality(), expect);
+        assert!(ds.cardinality() > 1.0);
+    }
+
+    #[test]
+    fn uniform_assignment_respects_applicability() {
+        let g = toy();
+        let ds = DesignSpace::build(&g, &Platform::pi4());
+        let a = ds.uniform(&g, ConvImpl::Winograd);
+        assert_eq!(a.choices[0], Some(ConvImpl::Winograd));
+        assert_ne!(a.choices[1], Some(ConvImpl::Winograd)); // 5x5 falls back
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        for p in ConvImpl::ALL {
+            assert_eq!(ConvImpl::by_name(p.name()), Some(p));
+        }
+    }
+}

@@ -1,0 +1,95 @@
+//! Depthwise convolution — the specialized primitive that makes DS_CNN /
+//! MobileNet-style models fast (the "Tengine plays this well" plugin).
+
+use crate::lne::graph::{conv_out, same_pad, Padding};
+use crate::tensor::Tensor;
+
+/// x: [N,C,H,W], w: [C,1,kh,kw], b: [C].
+pub fn conv_depthwise(
+    x: &Tensor,
+    w: &Tensor,
+    b: &[f32],
+    stride: (usize, usize),
+    pad: Padding,
+    relu: bool,
+) -> Tensor {
+    let (n, c, h, wd) = (x.n(), x.c(), x.h(), x.w());
+    let (wc, _, kh, kw) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+    assert_eq!(c, wc, "depthwise channel mismatch");
+    let (out_h, out_w) = conv_out(h, wd, (kh, kw), stride, pad);
+    let (pt, pl) = match pad {
+        Padding::Same => same_pad(h, wd, (kh, kw), stride),
+        Padding::Valid => (0, 0),
+    };
+    let mut out = Tensor::zeros(&[n, c, out_h, out_w]);
+    let kern = kh * kw;
+    for ni in 0..n {
+        for ci in 0..c {
+            let bias = b.get(ci).copied().unwrap_or(0.0);
+            let wbase = ci * kern;
+            for oy in 0..out_h {
+                for ox in 0..out_w {
+                    let mut acc = bias;
+                    for dy in 0..kh {
+                        let iy = (oy * stride.0 + dy) as isize - pt as isize;
+                        if iy < 0 || iy as usize >= h {
+                            continue;
+                        }
+                        for dx in 0..kw {
+                            let ix = (ox * stride.1 + dx) as isize - pl as isize;
+                            if ix < 0 || ix as usize >= wd {
+                                continue;
+                            }
+                            acc += x.at4(ni, ci, iy as usize, ix as usize)
+                                * w.data[wbase + dy * kw + dx];
+                        }
+                    }
+                    if relu && acc < 0.0 {
+                        acc = 0.0;
+                    }
+                    out.set4(ni, ci, oy, ox, acc);
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lne::primitives::direct::conv_direct;
+    use crate::util::rng::Rng;
+
+    /// Depthwise == block-diagonal standard conv.
+    #[test]
+    fn matches_blockdiag_standard_conv() {
+        let mut rng = Rng::new(0);
+        let c = 4;
+        let x = Tensor::randn(&[2, c, 7, 6], 1.0, &mut rng);
+        let wd = Tensor::randn(&[c, 1, 3, 3], 1.0, &mut rng);
+        let b: Vec<f32> = (0..c).map(|i| i as f32).collect();
+        // expand into a standard conv weight with zeros off-diagonal
+        let mut wfull = Tensor::zeros(&[c, c, 3, 3]);
+        for ci in 0..c {
+            for dy in 0..3 {
+                for dx in 0..3 {
+                    wfull.set4(ci, ci, dy, dx, wd.at4(ci, 0, dy, dx));
+                }
+            }
+        }
+        for stride in [(1, 1), (2, 2)] {
+            let got = conv_depthwise(&x, &wd, &b, stride, Padding::Same, false);
+            let want = conv_direct(&x, &wfull, &b, stride, Padding::Same, false);
+            assert!(got.allclose(&want, 1e-5, 1e-5));
+        }
+    }
+
+    #[test]
+    fn relu_fused() {
+        let x = Tensor::filled(&[1, 1, 3, 3], -1.0);
+        let w = Tensor::from_vec(&[1, 1, 1, 1], vec![1.0]);
+        let y = conv_depthwise(&x, &w, &[0.0], (1, 1), Padding::Same, true);
+        assert!(y.data.iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,98 @@
+//! Direct (7-loop) convolution — the correctness reference every other
+//! primitive is tested against, and a plugin in its own right (wins for
+//! very small channel counts where im2col overhead dominates).
+
+use crate::lne::graph::{conv_out, same_pad, Padding};
+use crate::tensor::Tensor;
+
+/// x: [N,C,H,W], w: [O,C,kh,kw], b: [O].
+pub fn conv_direct(
+    x: &Tensor,
+    w: &Tensor,
+    b: &[f32],
+    stride: (usize, usize),
+    pad: Padding,
+    relu: bool,
+) -> Tensor {
+    let (n, c, h, wd) = (x.n(), x.c(), x.h(), x.w());
+    let (o, ci, kh, kw) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+    assert_eq!(c, ci, "channel mismatch");
+    let (out_h, out_w) = conv_out(h, wd, (kh, kw), stride, pad);
+    let (pt, pl) = match pad {
+        Padding::Same => same_pad(h, wd, (kh, kw), stride),
+        Padding::Valid => (0, 0),
+    };
+    let mut out = Tensor::zeros(&[n, o, out_h, out_w]);
+    for ni in 0..n {
+        for oc in 0..o {
+            let bias = b.get(oc).copied().unwrap_or(0.0);
+            for oy in 0..out_h {
+                for ox in 0..out_w {
+                    let mut acc = bias;
+                    for ic in 0..c {
+                        for dy in 0..kh {
+                            let iy = (oy * stride.0 + dy) as isize - pt as isize;
+                            if iy < 0 || iy as usize >= h {
+                                continue;
+                            }
+                            for dx in 0..kw {
+                                let ix = (ox * stride.1 + dx) as isize - pl as isize;
+                                if ix < 0 || ix as usize >= wd {
+                                    continue;
+                                }
+                                acc += x.at4(ni, ic, iy as usize, ix as usize)
+                                    * w.at4(oc, ic, dy, dx);
+                            }
+                        }
+                    }
+                    if relu && acc < 0.0 {
+                        acc = 0.0;
+                    }
+                    out.set4(ni, oc, oy, ox, acc);
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_kernel_passes_through() {
+        // 1x1 kernel with weight 1 reproduces the input
+        let x = Tensor::from_vec(&[1, 1, 2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let w = Tensor::from_vec(&[1, 1, 1, 1], vec![1.0]);
+        let y = conv_direct(&x, &w, &[0.0], (1, 1), Padding::Same, false);
+        assert_eq!(y.data, x.data);
+    }
+
+    #[test]
+    fn known_3x3_same_padding() {
+        // all-ones 3x3 kernel over all-ones 3x3 input: corner sees 4, edge 6, center 9
+        let x = Tensor::filled(&[1, 1, 3, 3], 1.0);
+        let w = Tensor::filled(&[1, 1, 3, 3], 1.0);
+        let y = conv_direct(&x, &w, &[0.0], (1, 1), Padding::Same, false);
+        assert_eq!(y.data, vec![4.0, 6.0, 4.0, 6.0, 9.0, 6.0, 4.0, 6.0, 4.0]);
+    }
+
+    #[test]
+    fn valid_padding_shrinks() {
+        let x = Tensor::filled(&[1, 1, 5, 5], 1.0);
+        let w = Tensor::filled(&[1, 1, 3, 3], 1.0);
+        let y = conv_direct(&x, &w, &[0.0], (1, 1), Padding::Valid, false);
+        assert_eq!(y.shape, vec![1, 1, 3, 3]);
+        assert!(y.data.iter().all(|&v| v == 9.0));
+    }
+
+    #[test]
+    fn stride_two_downsamples() {
+        let x = Tensor::filled(&[1, 1, 4, 4], 1.0);
+        let w = Tensor::from_vec(&[1, 1, 1, 1], vec![2.0]);
+        let y = conv_direct(&x, &w, &[0.0], (2, 2), Padding::Same, false);
+        assert_eq!(y.shape, vec![1, 1, 2, 2]);
+        assert!(y.data.iter().all(|&v| v == 2.0));
+    }
+}

@@ -1,0 +1,85 @@
+//! Half-precision-storage convolution (Fig 14b substrate). Weights live in
+//! f16 (converted once at plugin setup); activations are converted to f16
+//! storage and back around an f32-compute GEMM — exactly the storage/compute
+//! split of fp16-with-fp32-accumulate hardware, with the conversion cost
+//! paid explicitly. A whole-network naive-FP16 assignment is therefore
+//! *slower* than FP32 (the paper's out-of-the-box PyTorch FP16 observation),
+//! while halving weight memory; QS-DNN only picks it where that trade wins.
+
+use super::gemm::{gemm_blocked, Blocking};
+use super::im2col::im2col;
+use crate::lne::graph::{conv_out, same_pad, Padding};
+use crate::tensor::{HTensor, Tensor};
+use crate::util::f16::F16;
+
+pub fn prepare_weights(w: &Tensor) -> HTensor {
+    HTensor::from_f32(w)
+}
+
+/// f16-storage conv: round activations through f16, GEMM in f32.
+pub fn conv_f16(
+    x: &Tensor,
+    hw: &HTensor,
+    b: &[f32],
+    stride: (usize, usize),
+    pad: Padding,
+    relu: bool,
+    blk: Blocking,
+) -> Tensor {
+    let (n, c, h, wd) = (x.n(), x.c(), x.h(), x.w());
+    let o = hw.shape[0];
+    let k = (hw.shape[2], hw.shape[3]);
+    let (out_h, out_w) = conv_out(h, wd, k, stride, pad);
+    let padding = match pad {
+        Padding::Same => same_pad(h, wd, k, stride),
+        Padding::Valid => (0, 0),
+    };
+    let kdim = c * k.0 * k.1;
+    let out_plane = out_h * out_w;
+    // dequantized weight copy (per call: fp16 units feed the MAC array each
+    // pass; the conversion traffic is the cost being modeled)
+    let wf: Vec<f32> = hw.data.iter().map(|h| h.to_f32()).collect();
+    let mut cols = vec![0.0f32; kdim * out_plane];
+    let mut out = Tensor::zeros(&[n, o, out_h, out_w]);
+    for ni in 0..n {
+        let xi = &x.data[ni * c * h * wd..(ni + 1) * c * h * wd];
+        im2col(xi, c, h, wd, k, stride, padding, out_h, out_w, &mut cols);
+        // round activations through f16 storage
+        for v in cols.iter_mut() {
+            *v = F16::from_f32(*v).to_f32();
+        }
+        let ci = &mut out.data[ni * o * out_plane..(ni + 1) * o * out_plane];
+        gemm_blocked(o, kdim, out_plane, &wf, &cols, None, ci, blk);
+        for oc in 0..o {
+            let bias = b.get(oc).copied().unwrap_or(0.0);
+            let row = &mut ci[oc * out_plane..(oc + 1) * out_plane];
+            for v in row.iter_mut() {
+                *v = F16::from_f32(*v + bias).to_f32(); // f16 output storage
+                if relu && *v < 0.0 {
+                    *v = 0.0;
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lne::primitives::direct::conv_direct;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn close_to_f32_within_half_precision() {
+        let mut rng = Rng::new(0);
+        let x = Tensor::randn(&[1, 3, 6, 6], 1.0, &mut rng);
+        let w = Tensor::randn(&[4, 3, 3, 3], 0.5, &mut rng);
+        let b = vec![0.1; 4];
+        let hw = prepare_weights(&w);
+        let got = conv_f16(&x, &hw, &b, (1, 1), Padding::Same, false, Blocking::default());
+        let want = conv_direct(&x, &w, &b, (1, 1), Padding::Same, false);
+        let scale = want.max_abs();
+        assert!(got.max_abs_diff(&want) < scale * 0.02);
+    }
+}

@@ -1,0 +1,218 @@
+//! GEMM primitives — the "acceleration libraries" LNE's plugins wrap
+//! (paper §6.2.3: BLAS, ArmCL, NNPACK...). Two implementations with
+//! genuinely different performance profiles:
+//!
+//! - `gemm_ref`: straightforward ikj loop — plays the role of the generic
+//!   BLAS the Caffe baseline links.
+//! - `gemm_blocked`: cache-blocked with a register-tiled microkernel —
+//!   plays the role of a tuned mobile library (ArmCL/NCNN style). Block
+//!   sizes come from the platform profile (pi3/pi4, see lne/platform.rs).
+
+/// C[M,N] = A[M,K] @ B[K,N] (+ bias[N] broadcast over rows if given).
+pub fn gemm_ref(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], bias: Option<&[f32]>, c: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let crow = &mut c[i * n..(i + 1) * n];
+        match bias {
+            Some(bias) => crow.copy_from_slice(&bias[..n]),
+            None => crow.fill(0.0),
+        }
+        for kk in 0..k {
+            let av = a[i * k + kk];
+            if av == 0.0 {
+                continue; // sparsity-aware: skipped zeros are the S benefit
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+}
+
+/// Blocking parameters (selected by the platform profile).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Blocking {
+    pub mc: usize,
+    pub kc: usize,
+    pub nc: usize,
+}
+
+impl Default for Blocking {
+    fn default() -> Self {
+        Blocking { mc: 64, kc: 256, nc: 256 }
+    }
+}
+
+/// Cache-blocked GEMM with a 4x8 register microkernel.
+pub fn gemm_blocked(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    bias: Option<&[f32]>,
+    c: &mut [f32],
+    blk: Blocking,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    // init C with bias
+    for i in 0..m {
+        let crow = &mut c[i * n..(i + 1) * n];
+        match bias {
+            Some(bias) => crow.copy_from_slice(&bias[..n]),
+            None => crow.fill(0.0),
+        }
+    }
+    let mut kk = 0;
+    while kk < k {
+        let kb = blk.kc.min(k - kk);
+        let mut ii = 0;
+        while ii < m {
+            let mb = blk.mc.min(m - ii);
+            let mut jj = 0;
+            while jj < n {
+                let nb = blk.nc.min(n - jj);
+                block_kernel(a, b, c, k, n, ii, jj, kk, mb, nb, kb);
+                jj += nb;
+            }
+            ii += blk.mc;
+        }
+        kk += blk.kc;
+    }
+}
+
+/// Inner block: 4-row x 8-col register tile, scalar cleanup.
+#[inline]
+fn block_kernel(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    k: usize,
+    n: usize,
+    ii: usize,
+    jj: usize,
+    kk: usize,
+    mb: usize,
+    nb: usize,
+    kb: usize,
+) {
+    const MR: usize = 4;
+    const NR: usize = 8;
+    let mut i = 0;
+    while i + MR <= mb {
+        let mut j = 0;
+        while j + NR <= nb {
+            let mut acc = [[0.0f32; NR]; MR];
+            // SAFETY: loop bounds guarantee i+MR <= mb, j+NR <= nb and
+            // kk+kb <= k, so every index below is in range.
+            unsafe {
+                for p in 0..kb {
+                    let bi = (kk + p) * n + jj + j;
+                    let brow: &[f32] = b.get_unchecked(bi..bi + NR);
+                    for (r, accr) in acc.iter_mut().enumerate() {
+                        let av = *a.get_unchecked((ii + i + r) * k + kk + p);
+                        for (x, bv) in accr.iter_mut().zip(brow.iter()) {
+                            *x += av * *bv;
+                        }
+                    }
+                }
+            }
+            for (r, accr) in acc.iter().enumerate() {
+                let ci = (ii + i + r) * n + jj + j;
+                for (x, &v) in c[ci..ci + NR].iter_mut().zip(accr.iter()) {
+                    *x += v;
+                }
+            }
+            j += NR;
+        }
+        // column cleanup
+        while j < nb {
+            for r in 0..MR {
+                let mut s = 0.0;
+                for p in 0..kb {
+                    s += a[(ii + i + r) * k + kk + p] * b[(kk + p) * n + jj + j];
+                }
+                c[(ii + i + r) * n + jj + j] += s;
+            }
+            j += 1;
+        }
+        i += MR;
+    }
+    // row cleanup
+    while i < mb {
+        for j in 0..nb {
+            let mut s = 0.0;
+            for p in 0..kb {
+                s += a[(ii + i) * k + kk + p] * b[(kk + p) * n + jj + j];
+            }
+            c[(ii + i) * n + jj + j] += s;
+        }
+        i += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing;
+    use crate::util::rng::Rng;
+
+    fn check_close(a: &[f32], b: &[f32], tol: f32) {
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+            assert!((x - y).abs() <= tol * (1.0 + y.abs()), "idx {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn blocked_matches_ref_property() {
+        testing::check("gemm-blocked-vs-ref", &[(1, 40), (1, 40), (1, 40), (0, 1)], 40, |case| {
+            let (m, k, n) = (case.usize(0), case.usize(1), case.usize(2));
+            let with_bias = case.get(3) == 1;
+            let mut rng = Rng::new((m * 1000 + k * 100 + n) as u64);
+            let a = testing::randn_vec(&mut rng, m * k, 1.0);
+            let b = testing::randn_vec(&mut rng, k * n, 1.0);
+            let bias: Vec<f32> = testing::randn_vec(&mut rng, n, 1.0);
+            let bias_opt = if with_bias { Some(bias.as_slice()) } else { None };
+            let mut c1 = vec![0.0; m * n];
+            let mut c2 = vec![0.0; m * n];
+            gemm_ref(m, k, n, &a, &b, bias_opt, &mut c1);
+            gemm_blocked(m, k, n, &a, &b, bias_opt, &mut c2, Blocking::default());
+            c1.iter().zip(c2.iter()).all(|(x, y)| (x - y).abs() < 1e-3 * (1.0 + y.abs()))
+        });
+    }
+
+    #[test]
+    fn tiny_and_awkward_shapes() {
+        for &(m, k, n) in &[(1, 1, 1), (5, 3, 9), (4, 8, 8), (13, 17, 19), (64, 1, 64)] {
+            let mut rng = Rng::new(7);
+            let a = testing::randn_vec(&mut rng, m * k, 1.0);
+            let b = testing::randn_vec(&mut rng, k * n, 1.0);
+            let mut c1 = vec![0.0; m * n];
+            let mut c2 = vec![0.0; m * n];
+            gemm_ref(m, k, n, &a, &b, None, &mut c1);
+            gemm_blocked(m, k, n, &a, &b, None, &mut c2, Blocking { mc: 8, kc: 8, nc: 8 });
+            check_close(&c2, &c1, 1e-4);
+        }
+    }
+
+    #[test]
+    fn identity_matmul() {
+        // A @ I = A
+        let m = 6;
+        let mut rng = Rng::new(3);
+        let a = testing::randn_vec(&mut rng, m * m, 1.0);
+        let mut eye = vec![0.0; m * m];
+        for i in 0..m {
+            eye[i * m + i] = 1.0;
+        }
+        let mut c = vec![0.0; m * m];
+        gemm_blocked(m, m, m, &a, &eye, None, &mut c, Blocking::default());
+        check_close(&c, &a, 1e-6);
+    }
+}

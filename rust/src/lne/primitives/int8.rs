@@ -1,0 +1,131 @@
+//! Int8 quantized convolution (paper §6.2.5 / Fig 13b): symmetric per-tensor
+//! quantization, integer GEMM with i32 accumulators, f32 dequantize+bias.
+//! Weights are quantized once at plugin-setup time; activations per call
+//! (that conversion is part of the honest cost, as on real hardware).
+
+use super::im2col::im2col;
+use crate::lne::graph::{conv_out, same_pad, Padding};
+use crate::tensor::{QTensor, Tensor};
+
+/// Quantize conv weights [O,C,kh,kw] once.
+pub fn prepare_weights(w: &Tensor) -> QTensor {
+    QTensor::quantize(w)
+}
+
+fn quantize_buf(x: &[f32], out: &mut [i8]) -> f32 {
+    let max = x.iter().fold(0.0f32, |m, &v| m.max(v.abs())).max(1e-12);
+    let scale = max / 127.0;
+    let inv = 1.0 / scale;
+    for (o, &v) in out.iter_mut().zip(x.iter()) {
+        *o = (v * inv).round().clamp(-127.0, 127.0) as i8;
+    }
+    scale
+}
+
+/// Integer GEMM: C_i32[M,N] = A_i8[M,K] @ B_i8[K,N].
+pub fn gemm_i8(m: usize, k: usize, n: usize, a: &[i8], b: &[i8], c: &mut [i32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    c.fill(0);
+    for i in 0..m {
+        let crow = &mut c[i * n..(i + 1) * n];
+        for kk in 0..k {
+            let av = a[i * k + kk] as i32;
+            if av == 0 {
+                continue;
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
+                *cv += av * bv as i32;
+            }
+        }
+    }
+}
+
+/// Int8 conv via im2col + integer GEMM. `qw` from `prepare_weights`.
+pub fn conv_int8(
+    x: &Tensor,
+    qw: &QTensor,
+    b: &[f32],
+    stride: (usize, usize),
+    pad: Padding,
+    relu: bool,
+) -> Tensor {
+    let (n, c, h, wd) = (x.n(), x.c(), x.h(), x.w());
+    let o = qw.shape[0];
+    let k = (qw.shape[2], qw.shape[3]);
+    let (out_h, out_w) = conv_out(h, wd, k, stride, pad);
+    let padding = match pad {
+        Padding::Same => same_pad(h, wd, k, stride),
+        Padding::Valid => (0, 0),
+    };
+    let kdim = c * k.0 * k.1;
+    let out_plane = out_h * out_w;
+    let mut cols_f = vec![0.0f32; kdim * out_plane];
+    let mut cols_q = vec![0i8; kdim * out_plane];
+    let mut acc = vec![0i32; o * out_plane];
+    let mut out = Tensor::zeros(&[n, o, out_h, out_w]);
+    for ni in 0..n {
+        let xi = &x.data[ni * c * h * wd..(ni + 1) * c * h * wd];
+        im2col(xi, c, h, wd, k, stride, padding, out_h, out_w, &mut cols_f);
+        let sx = quantize_buf(&cols_f, &mut cols_q);
+        gemm_i8(o, kdim, out_plane, &qw.data, &cols_q, &mut acc);
+        let dq = sx * qw.scale;
+        let obase = ni * o * out_plane;
+        for oc in 0..o {
+            let bias = b.get(oc).copied().unwrap_or(0.0);
+            for p in 0..out_plane {
+                let mut v = acc[oc * out_plane + p] as f32 * dq + bias;
+                if relu && v < 0.0 {
+                    v = 0.0;
+                }
+                out.data[obase + oc * out_plane + p] = v;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lne::primitives::direct::conv_direct;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn close_to_f32_conv_within_quant_error() {
+        let mut rng = Rng::new(0);
+        let x = Tensor::randn(&[1, 3, 8, 8], 1.0, &mut rng);
+        let w = Tensor::randn(&[5, 3, 3, 3], 0.5, &mut rng);
+        let b: Vec<f32> = (0..5).map(|i| 0.1 * i as f32).collect();
+        let qw = prepare_weights(&w);
+        let got = conv_int8(&x, &qw, &b, (1, 1), Padding::Same, false);
+        let want = conv_direct(&x, &w, &b, (1, 1), Padding::Same, false);
+        // int8 error: ~1/127 relative on each factor, accumulated over K=27
+        let scale = want.max_abs();
+        assert!(
+            got.max_abs_diff(&want) < scale * 0.05,
+            "diff {} vs scale {scale}",
+            got.max_abs_diff(&want)
+        );
+    }
+
+    #[test]
+    fn gemm_i8_exact_small() {
+        let a: Vec<i8> = vec![1, 2, 3, 4];
+        let b: Vec<i8> = vec![5, 6, 7, 8];
+        let mut c = vec![0i32; 4];
+        gemm_i8(2, 2, 2, &a, &b, &mut c);
+        assert_eq!(c, vec![19, 22, 43, 50]);
+    }
+
+    #[test]
+    fn relu_clamps() {
+        let mut rng = Rng::new(1);
+        let x = Tensor::randn(&[1, 2, 5, 5], 1.0, &mut rng);
+        let w = Tensor::randn(&[2, 2, 3, 3], 1.0, &mut rng);
+        let qw = prepare_weights(&w);
+        let y = conv_int8(&x, &qw, &[0.0, 0.0], (1, 1), Padding::Same, true);
+        assert!(y.data.iter().all(|&v| v >= 0.0));
+    }
+}

@@ -1,0 +1,12 @@
+//! The acceleration-library primitives LNE's plugin system selects among
+//! (paper §6.2.3). Each file is one "library"; all are validated against
+//! `direct` (the 7-loop reference).
+
+pub mod depthwise;
+pub mod direct;
+pub mod f16conv;
+pub mod gemm;
+pub mod im2col;
+pub mod int8;
+pub mod pool;
+pub mod winograd;

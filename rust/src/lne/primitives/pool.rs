@@ -1,0 +1,159 @@
+//! Pooling, softmax and LRN kernels (support layers; not plugin-selectable).
+
+use crate::lne::graph::PoolKind;
+use crate::tensor::Tensor;
+
+/// Caffe-style ceil-mode pooling over [N,C,H,W] with symmetric zero `pad`;
+/// out = ceil((H + 2p - k)/s) + 1, windows clipped to the valid region
+/// (averages divide by the clipped window size).
+pub fn pool(x: &Tensor, kind: PoolKind, k: usize, stride: usize, pad: usize) -> Tensor {
+    let (n, c, h, w) = (x.n(), x.c(), x.h(), x.w());
+    let out_h = (h + 2 * pad).saturating_sub(k).div_ceil(stride) + 1;
+    let out_w = (w + 2 * pad).saturating_sub(k).div_ceil(stride) + 1;
+    let mut out = Tensor::zeros(&[n, c, out_h, out_w]);
+    for ni in 0..n {
+        for ci in 0..c {
+            for oy in 0..out_h {
+                for ox in 0..out_w {
+                    // clip the (possibly padded) window to the valid region
+                    let y0 = (oy * stride).saturating_sub(pad).min(h - 1);
+                    let x0 = (ox * stride).saturating_sub(pad).min(w - 1);
+                    let y1 = (oy * stride + k).saturating_sub(pad).clamp(y0 + 1, h);
+                    let x1 = (ox * stride + k).saturating_sub(pad).clamp(x0 + 1, w);
+                    let v = match kind {
+                        PoolKind::Max => {
+                            let mut m = f32::MIN;
+                            for yy in y0..y1 {
+                                for xx in x0..x1 {
+                                    m = m.max(x.at4(ni, ci, yy, xx));
+                                }
+                            }
+                            m
+                        }
+                        PoolKind::Avg => {
+                            let mut s = 0.0;
+                            for yy in y0..y1 {
+                                for xx in x0..x1 {
+                                    s += x.at4(ni, ci, yy, xx);
+                                }
+                            }
+                            s / ((y1 - y0) * (x1 - x0)) as f32
+                        }
+                    };
+                    out.set4(ni, ci, oy, ox, v);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Global pooling to [N,C,1,1].
+pub fn global_pool(x: &Tensor, kind: PoolKind) -> Tensor {
+    let (n, c, h, w) = (x.n(), x.c(), x.h(), x.w());
+    let plane = h * w;
+    let mut out = Tensor::zeros(&[n, c, 1, 1]);
+    for ni in 0..n {
+        for ci in 0..c {
+            let base = (ni * c + ci) * plane;
+            let slice = &x.data[base..base + plane];
+            out.data[ni * c + ci] = match kind {
+                PoolKind::Avg => slice.iter().sum::<f32>() / plane as f32,
+                PoolKind::Max => slice.iter().fold(f32::MIN, |m, &v| m.max(v)),
+            };
+        }
+    }
+    out
+}
+
+/// Channel-wise softmax over [N,C,1,1] (classifier head).
+pub fn softmax(x: &Tensor) -> Tensor {
+    let n = x.shape[0];
+    let c: usize = x.shape[1..].iter().product();
+    let mut out = x.clone();
+    for ni in 0..n {
+        let row = &mut out.data[ni * c..(ni + 1) * c];
+        let max = row.iter().fold(f32::MIN, |m, &v| m.max(v));
+        let mut sum = 0.0;
+        for v in row.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= sum;
+        }
+    }
+    out
+}
+
+/// Across-channel local response normalization (AlexNet/GoogLeNet).
+pub fn lrn(x: &Tensor, size: usize, alpha: f32, beta: f32, k: f32) -> Tensor {
+    let (n, c, h, w) = (x.n(), x.c(), x.h(), x.w());
+    let mut out = Tensor::zeros(&x.shape);
+    let half = size / 2;
+    for ni in 0..n {
+        for ci in 0..c {
+            let lo = ci.saturating_sub(half);
+            let hi = (ci + half + 1).min(c);
+            for y in 0..h {
+                for xx in 0..w {
+                    let mut ss = 0.0;
+                    for cj in lo..hi {
+                        let v = x.at4(ni, cj, y, xx);
+                        ss += v * v;
+                    }
+                    let denom = (k + alpha * ss / size as f32).powf(beta);
+                    out.set4(ni, ci, y, xx, x.at4(ni, ci, y, xx) / denom);
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn max_pool_2x2() {
+        let x = Tensor::from_vec(&[1, 1, 2, 2], vec![1.0, 5.0, 3.0, 2.0]);
+        let y = pool(&x, PoolKind::Max, 2, 2, 0);
+        assert_eq!(y.shape, vec![1, 1, 1, 1]);
+        assert_eq!(y.data, vec![5.0]);
+    }
+
+    #[test]
+    fn avg_pool_handles_edge_windows() {
+        let x = Tensor::from_vec(&[1, 1, 3, 3],
+                                 vec![1., 2., 3., 4., 5., 6., 7., 8., 9.]);
+        let y = pool(&x, PoolKind::Avg, 2, 2, 0);
+        // ceil mode: 2x2 output; edge windows are clipped
+        assert_eq!(y.shape, vec![1, 1, 2, 2]);
+        assert_eq!(y.data, vec![3.0, 4.5, 7.5, 9.0]);
+    }
+
+    #[test]
+    fn global_avg() {
+        let x = Tensor::from_vec(&[1, 2, 1, 2], vec![1.0, 3.0, 10.0, 20.0]);
+        let y = global_pool(&x, PoolKind::Avg);
+        assert_eq!(y.data, vec![2.0, 15.0]);
+    }
+
+    #[test]
+    fn softmax_sums_to_one_and_orders() {
+        let x = Tensor::from_vec(&[1, 3, 1, 1], vec![1.0, 3.0, 2.0]);
+        let y = softmax(&x);
+        let s: f32 = y.data.iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+        assert!(y.data[1] > y.data[2] && y.data[2] > y.data[0]);
+    }
+
+    #[test]
+    fn lrn_preserves_shape_and_shrinks() {
+        let x = Tensor::filled(&[1, 8, 2, 2], 2.0);
+        let y = lrn(&x, 5, 1e-4, 0.75, 2.0);
+        assert_eq!(y.shape, x.shape);
+        assert!(y.data.iter().all(|&v| v > 0.0 && v < 2.0));
+    }
+}

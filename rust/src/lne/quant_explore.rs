@@ -1,0 +1,142 @@
+//! Quantization exploration (paper §6.2.5): per-layer sensitivity to int8,
+//! measured as output deviation + latency when exactly one layer runs
+//! quantized. The selector then builds a mixed-precision assignment that
+//! quantizes every layer whose deviation stays under an accuracy budget.
+
+use super::engine::Prepared;
+use super::plugin::{applicable, Assignment, ConvImpl};
+use crate::tensor::Tensor;
+
+#[derive(Debug, Clone)]
+pub struct LayerQuantReport {
+    pub layer: usize,
+    pub name: String,
+    /// Relative output deviation (max |f32 - int8| / max |f32|).
+    pub deviation: f64,
+    /// Latency of the quantized layer vs its f32 (blocked-GEMM) latency.
+    pub f32_ms: f64,
+    pub int8_ms: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct QuantExploration {
+    pub reports: Vec<LayerQuantReport>,
+    pub baseline: Assignment,
+}
+
+/// Baseline f32 assignment: blocked GEMM where available, else first choice.
+pub fn f32_baseline(p: &Prepared) -> Assignment {
+    let mut a = Assignment::default_for(&p.graph);
+    for (i, l) in p.graph.layers.iter().enumerate() {
+        let ch = applicable(&l.kind, &p.platform);
+        if ch.is_empty() {
+            continue;
+        }
+        a.choices[i] = Some(if ch.contains(&ConvImpl::GemmBlocked) {
+            ConvImpl::GemmBlocked
+        } else {
+            ch[0]
+        });
+    }
+    a
+}
+
+/// Explore per-layer int8 sensitivity on a calibration input.
+pub fn explore(p: &Prepared, x: &Tensor) -> QuantExploration {
+    let baseline = f32_baseline(p);
+    let ref_run = p.run(x, &baseline);
+    let ref_scale = ref_run.output.max_abs().max(1e-12) as f64;
+    let mut reports = Vec::new();
+    for (i, l) in p.graph.layers.iter().enumerate() {
+        let ch = applicable(&l.kind, &p.platform);
+        if !ch.contains(&ConvImpl::Int8Gemm) {
+            continue;
+        }
+        let mut a = baseline.clone();
+        a.choices[i] = Some(ConvImpl::Int8Gemm);
+        let run = p.run(x, &a);
+        reports.push(LayerQuantReport {
+            layer: i,
+            name: l.name.clone(),
+            deviation: run.output.max_abs_diff(&ref_run.output) as f64 / ref_scale,
+            f32_ms: ref_run.layer_ms[i],
+            int8_ms: run.layer_ms[i],
+        });
+    }
+    QuantExploration { reports, baseline }
+}
+
+impl QuantExploration {
+    /// Mixed assignment: int8 wherever deviation <= budget AND int8 is
+    /// actually faster than the layer's f32 implementation.
+    pub fn select(&self, budget: f64) -> Assignment {
+        let mut a = self.baseline.clone();
+        for r in &self.reports {
+            if r.deviation <= budget && r.int8_ms < r.f32_ms {
+                a.choices[r.layer] = Some(ConvImpl::Int8Gemm);
+            }
+        }
+        a
+    }
+
+    /// Layers quantized under a budget.
+    pub fn quantized_layers(&self, budget: f64) -> Vec<&str> {
+        self.reports
+            .iter()
+            .filter(|r| r.deviation <= budget && r.int8_ms < r.f32_ms)
+            .map(|r| r.name.as_str())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lne::graph::{Graph, LayerKind, Padding, Weights};
+    use crate::lne::platform::Platform;
+    use crate::util::rng::Rng;
+
+    fn model() -> (Graph, Weights, Tensor) {
+        let mut rng = Rng::new(0);
+        let mut g = Graph::new("q", (3, 12, 12));
+        g.push("conv1", LayerKind::Conv { k: (3, 3), stride: (1, 1), pad: Padding::Same, relu_fused: true }, 8);
+        g.push("conv2", LayerKind::Conv { k: (3, 3), stride: (1, 1), pad: Padding::Same, relu_fused: true }, 8);
+        let mut w = Weights::new();
+        w.insert("conv1".into(), vec![Tensor::randn(&[8, 3, 3, 3], 0.4, &mut rng), Tensor::zeros(&[8])]);
+        w.insert("conv2".into(), vec![Tensor::randn(&[8, 8, 3, 3], 0.4, &mut rng), Tensor::zeros(&[8])]);
+        let x = Tensor::randn(&[1, 3, 12, 12], 1.0, &mut rng);
+        (g, w, x)
+    }
+
+    #[test]
+    fn explore_reports_every_conv() {
+        let (g, w, x) = model();
+        let p = Prepared::new(g, w, Platform::pi4()).unwrap();
+        let e = explore(&p, &x);
+        assert_eq!(e.reports.len(), 2);
+        for r in &e.reports {
+            assert!(r.deviation >= 0.0 && r.deviation < 0.2, "{:?}", r);
+        }
+    }
+
+    #[test]
+    fn tight_budget_selects_nothing() {
+        let (g, w, x) = model();
+        let p = Prepared::new(g, w, Platform::pi4()).unwrap();
+        let e = explore(&p, &x);
+        let a = e.select(0.0);
+        assert_eq!(a, e.baseline);
+    }
+
+    #[test]
+    fn loose_budget_quantizes_only_when_faster() {
+        let (g, w, x) = model();
+        let p = Prepared::new(g, w, Platform::pi4()).unwrap();
+        let e = explore(&p, &x);
+        let a = e.select(1.0);
+        for r in &e.reports {
+            let quantized = a.choices[r.layer] == Some(ConvImpl::Int8Gemm);
+            assert_eq!(quantized, r.int8_ms < r.f32_ms);
+        }
+    }
+}

@@ -1,0 +1,4 @@
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    bonseyes::cli::main_with(&argv)
+}

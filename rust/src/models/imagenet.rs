@@ -1,0 +1,318 @@
+//! ImageNet-family reference networks (Fig 15) at reduced 3x64x64 input:
+//! faithful channel/topology structure, documented spatial reduction.
+
+use super::conv_bn_relu;
+use crate::lne::graph::{Graph, LayerKind, Padding, PoolKind};
+
+const INPUT: (usize, usize, usize) = (3, 64, 64);
+const CLASSES: usize = 1000;
+
+fn conv(g: &mut Graph, name: &str, k: usize, s: usize, c: usize) -> usize {
+    g.push(name, LayerKind::Conv { k: (k, k), stride: (s, s), pad: Padding::Same, relu_fused: false }, c)
+}
+
+fn conv_relu(g: &mut Graph, name: &str, k: usize, s: usize, c: usize) -> usize {
+    conv(g, name, k, s, c);
+    g.push(&format!("{name}_relu"), LayerKind::ReLU, 0)
+}
+
+fn maxpool(g: &mut Graph, name: &str, k: usize, s: usize, pad: usize) -> usize {
+    g.push(name, LayerKind::Pool { kind: PoolKind::Max, k, stride: s, pad, global: false }, 0)
+}
+
+/// AlexNet (BVLC structure: 5 convs + LRN + pools + classifier).
+pub fn alexnet() -> Graph {
+    let mut g = Graph::new("alexnet", INPUT);
+    conv_relu(&mut g, "conv1", 11, 4, 96);
+    g.push("norm1", LayerKind::Lrn { size: 5, alpha: 1e-4, beta: 0.75, k: 1.0 }, 0);
+    maxpool(&mut g, "pool1", 3, 2, 0);
+    conv_relu(&mut g, "conv2", 5, 1, 256);
+    g.push("norm2", LayerKind::Lrn { size: 5, alpha: 1e-4, beta: 0.75, k: 1.0 }, 0);
+    maxpool(&mut g, "pool2", 3, 2, 0);
+    conv_relu(&mut g, "conv3", 3, 1, 384);
+    conv_relu(&mut g, "conv4", 3, 1, 384);
+    conv_relu(&mut g, "conv5", 3, 1, 256);
+    maxpool(&mut g, "pool3", 3, 2, 0);
+    // dense classifier approximated with a global pool + fc (the original
+    // 4096-wide fc pair at 64px input would dominate unrealistically)
+    g.push("pool_final", LayerKind::Pool { kind: PoolKind::Avg, k: 0, stride: 1, pad: 0, global: true }, 0);
+    g.push("fc", LayerKind::Fc { relu_fused: false }, CLASSES);
+    g.push("prob", LayerKind::Softmax, 0);
+    g
+}
+
+/// Resnet bottleneck/basic blocks.
+fn res_block(g: &mut Graph, name: &str, c: usize, stride: usize, bottleneck: bool, input: usize) -> usize {
+    let branch = if bottleneck {
+        let a = {
+            g.push_on(&format!("{name}_a"),
+                      LayerKind::Conv { k: (1, 1), stride: (stride, stride), pad: Padding::Same, relu_fused: false },
+                      vec![input], c / 4);
+            g.push(&format!("{name}_a_bn"), LayerKind::BatchNorm, 0);
+            g.push(&format!("{name}_a_relu"), LayerKind::ReLU, 0)
+        };
+        let _ = a;
+        conv_bn_relu(g, &format!("{name}_b"), (3, 3), (1, 1), c / 4);
+        g.push(&format!("{name}_c"),
+               LayerKind::Conv { k: (1, 1), stride: (1, 1), pad: Padding::Same, relu_fused: false }, c);
+        g.push(&format!("{name}_c_bn"), LayerKind::BatchNorm, 0)
+    } else {
+        g.push_on(&format!("{name}_a"),
+                  LayerKind::Conv { k: (3, 3), stride: (stride, stride), pad: Padding::Same, relu_fused: false },
+                  vec![input], c);
+        g.push(&format!("{name}_a_bn"), LayerKind::BatchNorm, 0);
+        g.push(&format!("{name}_a_relu"), LayerKind::ReLU, 0);
+        g.push(&format!("{name}_b"),
+               LayerKind::Conv { k: (3, 3), stride: (1, 1), pad: Padding::Same, relu_fused: false }, c);
+        g.push(&format!("{name}_b_bn"), LayerKind::BatchNorm, 0)
+    };
+    // projection shortcut when shape changes
+    let shapes = g.infer_shapes().expect("resnet shapes");
+    let need_proj = shapes[input].0 != c || stride != 1;
+    let shortcut = if need_proj {
+        g.push_on(&format!("{name}_proj"),
+                  LayerKind::Conv { k: (1, 1), stride: (stride, stride), pad: Padding::Same, relu_fused: false },
+                  vec![input], c);
+        g.push(&format!("{name}_proj_bn"), LayerKind::BatchNorm, 0)
+    } else {
+        input
+    };
+    g.push_on(&format!("{name}_add"), LayerKind::Add { relu_fused: false }, vec![branch, shortcut], 0);
+    g.push(&format!("{name}_out_relu"), LayerKind::ReLU, 0)
+}
+
+pub fn resnet(depth: usize, input: (usize, usize, usize), classes: usize) -> Graph {
+    let (blocks, bottleneck): (&[usize], bool) = match depth {
+        18 => (&[2, 2, 2, 2], false),
+        50 => (&[3, 4, 6, 3], true),
+        _ => panic!("unsupported resnet depth {depth}"),
+    };
+    let widths = if bottleneck { [256, 512, 1024, 2048] } else { [64, 128, 256, 512] };
+    let mut g = Graph::new(&format!("resnet{depth}"), input);
+    conv_bn_relu(&mut g, "conv1", (7, 7), (2, 2), 64);
+    let mut last = maxpool(&mut g, "pool1", 3, 2, 0);
+    for (stage, (&n, &c)) in blocks.iter().zip(widths.iter()).enumerate() {
+        for b in 0..n {
+            let stride = if b == 0 && stage > 0 { 2 } else { 1 };
+            last = res_block(&mut g, &format!("res{}_{b}", stage + 2), c, stride, bottleneck, last);
+        }
+    }
+    g.push("pool_final", LayerKind::Pool { kind: PoolKind::Avg, k: 0, stride: 1, pad: 0, global: true }, 0);
+    g.push("fc", LayerKind::Fc { relu_fused: false }, classes);
+    g.push("prob", LayerKind::Softmax, 0);
+    g
+}
+
+pub fn resnet50() -> Graph {
+    resnet(50, INPUT, CLASSES)
+}
+
+/// GoogLeNet-V1 inception module.
+#[allow(clippy::too_many_arguments)]
+fn inception(
+    g: &mut Graph,
+    name: &str,
+    input: usize,
+    c1: usize,
+    c3r: usize,
+    c3: usize,
+    c5r: usize,
+    c5: usize,
+    pp: usize,
+) -> usize {
+    let b1 = {
+        g.push_on(&format!("{name}_1x1"),
+                  LayerKind::Conv { k: (1, 1), stride: (1, 1), pad: Padding::Same, relu_fused: false },
+                  vec![input], c1);
+        g.push(&format!("{name}_1x1_relu"), LayerKind::ReLU, 0)
+    };
+    let b3 = {
+        g.push_on(&format!("{name}_3x3r"),
+                  LayerKind::Conv { k: (1, 1), stride: (1, 1), pad: Padding::Same, relu_fused: false },
+                  vec![input], c3r);
+        g.push(&format!("{name}_3x3r_relu"), LayerKind::ReLU, 0);
+        g.push(&format!("{name}_3x3"),
+               LayerKind::Conv { k: (3, 3), stride: (1, 1), pad: Padding::Same, relu_fused: false }, c3);
+        g.push(&format!("{name}_3x3_relu"), LayerKind::ReLU, 0)
+    };
+    let b5 = {
+        g.push_on(&format!("{name}_5x5r"),
+                  LayerKind::Conv { k: (1, 1), stride: (1, 1), pad: Padding::Same, relu_fused: false },
+                  vec![input], c5r);
+        g.push(&format!("{name}_5x5r_relu"), LayerKind::ReLU, 0);
+        g.push(&format!("{name}_5x5"),
+               LayerKind::Conv { k: (5, 5), stride: (1, 1), pad: Padding::Same, relu_fused: false }, c5);
+        g.push(&format!("{name}_5x5_relu"), LayerKind::ReLU, 0)
+    };
+    let bp = {
+        g.push_on(&format!("{name}_pool"),
+                  LayerKind::Pool { kind: PoolKind::Max, k: 3, stride: 1, pad: 1, global: false },
+                  vec![input], 0);
+        g.push(&format!("{name}_poolp"),
+               LayerKind::Conv { k: (1, 1), stride: (1, 1), pad: Padding::Same, relu_fused: false }, pp);
+        g.push(&format!("{name}_poolp_relu"), LayerKind::ReLU, 0)
+    };
+    g.push_on(&format!("{name}_cat"), LayerKind::Concat, vec![b1, b3, b5, bp], 0)
+}
+
+pub fn googlenet() -> Graph {
+    let mut g = Graph::new("googlenet", INPUT);
+    conv_relu(&mut g, "conv1", 7, 2, 64);
+    maxpool(&mut g, "pool1", 3, 2, 0);
+    conv_relu(&mut g, "conv2r", 1, 1, 64);
+    conv_relu(&mut g, "conv2", 3, 1, 192);
+    let mut last = maxpool(&mut g, "pool2", 3, 2, 0);
+    last = inception(&mut g, "i3a", last, 64, 96, 128, 16, 32, 32);
+    last = inception(&mut g, "i3b", last, 128, 128, 192, 32, 96, 64);
+    last = {
+        g.push_on("pool3", LayerKind::Pool { kind: PoolKind::Max, k: 3, stride: 2, pad: 0, global: false }, vec![last], 0)
+    };
+    last = inception(&mut g, "i4a", last, 192, 96, 208, 16, 48, 64);
+    last = inception(&mut g, "i4b", last, 160, 112, 224, 24, 64, 64);
+    last = inception(&mut g, "i4c", last, 128, 128, 256, 24, 64, 64);
+    last = inception(&mut g, "i4d", last, 112, 144, 288, 32, 64, 64);
+    last = inception(&mut g, "i4e", last, 256, 160, 320, 32, 128, 128);
+    last = {
+        g.push_on("pool4", LayerKind::Pool { kind: PoolKind::Max, k: 3, stride: 2, pad: 0, global: false }, vec![last], 0)
+    };
+    last = inception(&mut g, "i5a", last, 256, 160, 320, 32, 128, 128);
+    let _ = inception(&mut g, "i5b", last, 384, 192, 384, 48, 128, 128);
+    g.push("pool_final", LayerKind::Pool { kind: PoolKind::Avg, k: 0, stride: 1, pad: 0, global: true }, 0);
+    g.push("fc", LayerKind::Fc { relu_fused: false }, CLASSES);
+    g.push("prob", LayerKind::Softmax, 0);
+    g
+}
+
+/// SqueezeNet-V1.1 fire module.
+fn fire(g: &mut Graph, name: &str, input: usize, squeeze: usize, expand: usize) -> usize {
+    let s = {
+        g.push_on(&format!("{name}_squeeze"),
+                  LayerKind::Conv { k: (1, 1), stride: (1, 1), pad: Padding::Same, relu_fused: false },
+                  vec![input], squeeze);
+        g.push(&format!("{name}_squeeze_relu"), LayerKind::ReLU, 0)
+    };
+    let e1 = {
+        g.push_on(&format!("{name}_e1"),
+                  LayerKind::Conv { k: (1, 1), stride: (1, 1), pad: Padding::Same, relu_fused: false },
+                  vec![s], expand);
+        g.push(&format!("{name}_e1_relu"), LayerKind::ReLU, 0)
+    };
+    let e3 = {
+        g.push_on(&format!("{name}_e3"),
+                  LayerKind::Conv { k: (3, 3), stride: (1, 1), pad: Padding::Same, relu_fused: false },
+                  vec![s], expand);
+        g.push(&format!("{name}_e3_relu"), LayerKind::ReLU, 0)
+    };
+    g.push_on(&format!("{name}_cat"), LayerKind::Concat, vec![e1, e3], 0)
+}
+
+pub fn squeezenet() -> Graph {
+    let mut g = Graph::new("squeezenet", INPUT);
+    conv_relu(&mut g, "conv1", 3, 2, 64);
+    let mut last = maxpool(&mut g, "pool1", 3, 2, 0);
+    last = fire(&mut g, "fire2", last, 16, 64);
+    last = fire(&mut g, "fire3", last, 16, 64);
+    last = g.push_on("pool3", LayerKind::Pool { kind: PoolKind::Max, k: 3, stride: 2, pad: 0, global: false }, vec![last], 0);
+    last = fire(&mut g, "fire4", last, 32, 128);
+    last = fire(&mut g, "fire5", last, 32, 128);
+    last = g.push_on("pool5", LayerKind::Pool { kind: PoolKind::Max, k: 3, stride: 2, pad: 0, global: false }, vec![last], 0);
+    last = fire(&mut g, "fire6", last, 48, 192);
+    last = fire(&mut g, "fire7", last, 48, 192);
+    last = fire(&mut g, "fire8", last, 64, 256);
+    let _ = fire(&mut g, "fire9", last, 64, 256);
+    conv_relu(&mut g, "conv10", 1, 1, CLASSES);
+    g.push("pool_final", LayerKind::Pool { kind: PoolKind::Avg, k: 0, stride: 1, pad: 0, global: true }, 0);
+    g.push("prob", LayerKind::Softmax, 0);
+    g
+}
+
+/// MobileNet-V2 inverted residual.
+fn inverted_residual(g: &mut Graph, name: &str, input: usize, c_out: usize, stride: usize, expand: usize) -> usize {
+    let shapes = g.infer_shapes().expect("mb2 shapes");
+    let c_in = shapes[input].0;
+    let hidden = c_in * expand;
+    let mut last = input;
+    if expand != 1 {
+        g.push_on(&format!("{name}_expand"),
+                  LayerKind::Conv { k: (1, 1), stride: (1, 1), pad: Padding::Same, relu_fused: false },
+                  vec![last], hidden);
+        g.push(&format!("{name}_expand_bn"), LayerKind::BatchNorm, 0);
+        last = g.push(&format!("{name}_expand_relu"), LayerKind::ReLU, 0);
+    }
+    g.push_on(&format!("{name}_dw"),
+              LayerKind::DwConv { k: (3, 3), stride: (stride, stride), pad: Padding::Same, relu_fused: false },
+              vec![last], 0);
+    g.push(&format!("{name}_dw_bn"), LayerKind::BatchNorm, 0);
+    g.push(&format!("{name}_dw_relu"), LayerKind::ReLU, 0);
+    g.push(&format!("{name}_project"),
+           LayerKind::Conv { k: (1, 1), stride: (1, 1), pad: Padding::Same, relu_fused: false }, c_out);
+    let project = g.push(&format!("{name}_project_bn"), LayerKind::BatchNorm, 0);
+    if stride == 1 && c_in == c_out {
+        g.push_on(&format!("{name}_add"), LayerKind::Add { relu_fused: false }, vec![project, input], 0)
+    } else {
+        project
+    }
+}
+
+pub fn mobilenet_v2() -> Graph {
+    let mut g = Graph::new("mobilenet-v2", INPUT);
+    let mut last = conv_bn_relu(&mut g, "conv1", (3, 3), (2, 2), 32);
+    // (expand, c_out, repeats, stride)
+    let cfg: [(usize, usize, usize, usize); 7] = [
+        (1, 16, 1, 1),
+        (6, 24, 2, 2),
+        (6, 32, 3, 2),
+        (6, 64, 4, 2),
+        (6, 96, 3, 1),
+        (6, 160, 3, 2),
+        (6, 320, 1, 1),
+    ];
+    for (bi, &(e, c, n, s)) in cfg.iter().enumerate() {
+        for r in 0..n {
+            let stride = if r == 0 { s } else { 1 };
+            last = inverted_residual(&mut g, &format!("ir{}_{r}", bi + 1), last, c, stride, e);
+        }
+    }
+    conv_bn_relu(&mut g, "conv_last", (1, 1), (1, 1), 1280);
+    g.push("pool_final", LayerKind::Pool { kind: PoolKind::Avg, k: 0, stride: 1, pad: 0, global: true }, 0);
+    g.push("fc", LayerKind::Fc { relu_fused: false }, CLASSES);
+    g.push("prob", LayerKind::Softmax, 0);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet50_has_bottlenecks_and_right_output() {
+        let g = resnet50();
+        let shapes = g.infer_shapes().unwrap();
+        assert_eq!(shapes.last().unwrap().0, CLASSES);
+        assert!(g.layers.iter().any(|l| l.name == "res2_0_proj"));
+        assert!(g.layers.len() > 100);
+    }
+
+    #[test]
+    fn googlenet_concat_widths() {
+        let g = googlenet();
+        let shapes = g.infer_shapes().unwrap();
+        let cat = g.layers.iter().position(|l| l.name == "i3a_cat").unwrap();
+        assert_eq!(shapes[cat + 1].0, 64 + 128 + 32 + 32); // 256
+    }
+
+    #[test]
+    fn mobilenet_uses_depthwise_and_residuals() {
+        let g = mobilenet_v2();
+        let dw = g.layers.iter().filter(|l| matches!(l.kind, LayerKind::DwConv { .. })).count();
+        assert_eq!(dw, 17);
+        assert!(g.layers.iter().any(|l| l.name == "ir5_1_add"));
+    }
+
+    #[test]
+    fn squeezenet_is_small() {
+        let g = squeezenet();
+        let w = super::super::random_weights(&g, 0);
+        assert!(g.size_kb(&w) < 6000.0, "{}", g.size_kb(&w));
+    }
+}

@@ -1,0 +1,156 @@
+//! KWS model builders: LNE graphs from the shared arch specs (Fig 13), and
+//! the "deploy" conversion that maps a *trained* flat parameter vector from
+//! the training stage onto LNE layer weights using the manifest layout —
+//! LPDNN's model-import step (§6.1.2: Caffe/ONNX -> internal format).
+
+use crate::lne::graph::{Graph, LayerKind, Padding, PoolKind, Weights};
+use crate::runtime::manifest::ArchMeta;
+use crate::tensor::Tensor;
+
+/// Build the LNE graph for a KWS architecture (Caffe-style: conv + BN +
+/// ReLU blocks, §5.2 geometry: conv1 stride (1,2), SAME padding).
+pub fn build_graph(arch: &ArchMeta, mel: usize, frames: usize, classes: usize) -> Graph {
+    let mut g = Graph::new(&arch.name, (1, mel, frames));
+    let mut _c_in = 1usize;
+    for (i, (k, c)) in arch.convs.iter().enumerate() {
+        let n = i + 1;
+        let stride = if i == 0 { (1, 2) } else { (1, 1) };
+        let kk = (k[0], k[1]);
+        if arch.arch_type == "cnn" || i == 0 {
+            g.push(&format!("conv{n}"),
+                   LayerKind::Conv { k: kk, stride, pad: Padding::Same, relu_fused: false }, *c);
+            g.push(&format!("bn{n}"), LayerKind::BatchNorm, 0);
+            g.push(&format!("relu{n}"), LayerKind::ReLU, 0);
+        } else {
+            g.push(&format!("dw{n}"),
+                   LayerKind::DwConv { k: kk, stride, pad: Padding::Same, relu_fused: false }, 0);
+            g.push(&format!("bn{n}d"), LayerKind::BatchNorm, 0);
+            g.push(&format!("relu{n}d"), LayerKind::ReLU, 0);
+            g.push(&format!("pw{n}"),
+                   LayerKind::Conv { k: (1, 1), stride: (1, 1), pad: Padding::Same, relu_fused: false }, *c);
+            g.push(&format!("bn{n}p"), LayerKind::BatchNorm, 0);
+            g.push(&format!("relu{n}p"), LayerKind::ReLU, 0);
+        }
+        _c_in = *c;
+    }
+    g.push("pool", LayerKind::Pool { kind: PoolKind::Avg, k: 0, stride: 1, pad: 0, global: true }, 0);
+    g.push("fc", LayerKind::Fc { relu_fused: false }, classes);
+    g.push("prob", LayerKind::Softmax, 0);
+    g
+}
+
+fn slice(params: &[f32], arch: &ArchMeta, name: &str) -> Result<Tensor, String> {
+    let e = arch
+        .param(name)
+        .ok_or_else(|| format!("layout missing {name}"))?;
+    Ok(Tensor::from_vec(&e.shape, params[e.offset..e.offset + e.size].to_vec()))
+}
+
+fn stat_slice(stats: &[f32], arch: &ArchMeta, name: &str) -> Result<Tensor, String> {
+    let e = arch
+        .stats_layout
+        .iter()
+        .find(|e| e.name == name)
+        .ok_or_else(|| format!("stats layout missing {name}"))?;
+    Ok(Tensor::from_vec(&e.shape, stats[e.offset..e.offset + e.size].to_vec()))
+}
+
+/// Map trained flat params/stats onto LNE layer weights. The L2 model's FC
+/// weights are [in, out] which matches the LNE Fc layer directly; conv
+/// weights are OIHW on both sides.
+pub fn import_weights(
+    arch: &ArchMeta,
+    params: &[f32],
+    stats: &[f32],
+) -> Result<Weights, String> {
+    let mut w = Weights::new();
+    for (i, _) in arch.convs.iter().enumerate() {
+        let n = i + 1;
+        if arch.arch_type == "cnn" || i == 0 {
+            w.insert(format!("conv{n}"), vec![
+                slice(params, arch, &format!("conv{n}_w"))?,
+                slice(params, arch, &format!("conv{n}_b"))?,
+            ]);
+            w.insert(format!("bn{n}"), vec![
+                stat_slice(stats, arch, &format!("bn{n}_mean"))?,
+                stat_slice(stats, arch, &format!("bn{n}_var"))?,
+                slice(params, arch, &format!("bn{n}_gamma"))?,
+                slice(params, arch, &format!("bn{n}_beta"))?,
+            ]);
+        } else {
+            w.insert(format!("dw{n}"), vec![
+                slice(params, arch, &format!("dw{n}_w"))?,
+                slice(params, arch, &format!("dw{n}_b"))?,
+            ]);
+            w.insert(format!("bn{n}d"), vec![
+                stat_slice(stats, arch, &format!("bn{n}d_mean"))?,
+                stat_slice(stats, arch, &format!("bn{n}d_var"))?,
+                slice(params, arch, &format!("bn{n}d_gamma"))?,
+                slice(params, arch, &format!("bn{n}d_beta"))?,
+            ]);
+            w.insert(format!("pw{n}"), vec![
+                slice(params, arch, &format!("pw{n}_w"))?,
+                slice(params, arch, &format!("pw{n}_b"))?,
+            ]);
+            w.insert(format!("bn{n}p"), vec![
+                stat_slice(stats, arch, &format!("bn{n}p_mean"))?,
+                stat_slice(stats, arch, &format!("bn{n}p_var"))?,
+                slice(params, arch, &format!("bn{n}p_gamma"))?,
+                slice(params, arch, &format!("bn{n}p_beta"))?,
+            ]);
+        }
+    }
+    w.insert("fc".into(), vec![
+        slice(params, arch, "fc_w")?,
+        slice(params, arch, "fc_b")?,
+    ]);
+    Ok(w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Manifest;
+
+    fn manifest() -> Option<Manifest> {
+        let p = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts/manifest.json");
+        Manifest::load(&p).ok()
+    }
+
+    #[test]
+    fn kws_graphs_match_paper_flops() {
+        let Some(m) = manifest() else {
+            eprintln!("SKIP: no artifacts");
+            return;
+        };
+        for (name, paper) in [("cnn_seed", 581.1), ("kws1", 223.4), ("kws3", 87.6), ("kws9", 37.7)] {
+            let arch = m.arch(name).unwrap();
+            let g = build_graph(arch, m.mel_bands, m.frames, m.num_classes);
+            let mf = g.mflops();
+            assert!((mf - paper).abs() / paper < 0.01, "{name}: {mf} vs {paper}");
+        }
+    }
+
+    #[test]
+    fn import_weights_covers_all_layers() {
+        let Some(m) = manifest() else {
+            eprintln!("SKIP: no artifacts");
+            return;
+        };
+        for name in ["kws9", "ds_kws9"] {
+            let arch = m.arch(name).unwrap();
+            let params = vec![0.1f32; arch.n_params];
+            let stats: Vec<f32> = (0..arch.n_stats).map(|i| 1.0 + i as f32 * 1e-4).collect();
+            let w = import_weights(arch, &params, &stats).unwrap();
+            let g = build_graph(arch, m.mel_bands, m.frames, m.num_classes);
+            // every weighted layer has blobs
+            for l in &g.layers {
+                if matches!(l.kind, LayerKind::Conv { .. } | LayerKind::DwConv { .. }
+                            | LayerKind::Fc { .. } | LayerKind::BatchNorm) {
+                    assert!(w.contains_key(&l.name), "{name}: missing {}", l.name);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,52 @@
+//! Body-pose estimation models (Fig 14): resnet18/50 backbone + a
+//! composite-fields head in the PifPaf [67] style. The paper's models
+//! upsample with deconvolutions; LNE has no deconv layer, so the head uses
+//! 1x1/3x3 convs at backbone resolution (documented in DESIGN.md §6 — the
+//! compute profile, resnet-dominated, is preserved).
+
+use super::imagenet::resnet;
+use crate::lne::graph::{Graph, LayerKind, Padding};
+
+/// 17 keypoints x (confidence + 2 offsets) PIF-style fields.
+const FIELDS: usize = 17 * 3;
+
+pub fn pose_resnet(depth: usize) -> Graph {
+    let mut g = backbone(depth);
+    // composite-fields head
+    g.push("head1", LayerKind::Conv { k: (3, 3), stride: (1, 1), pad: Padding::Same, relu_fused: false }, 256);
+    g.push("head1_relu", LayerKind::ReLU, 0);
+    g.push("head2", LayerKind::Conv { k: (1, 1), stride: (1, 1), pad: Padding::Same, relu_fused: false }, FIELDS);
+    g
+}
+
+fn backbone(depth: usize) -> Graph {
+    // build the resnet then strip the classifier head (pool/fc/softmax)
+    let mut g = resnet(depth, (3, 128, 96), 1000);
+    g.name = format!("pose-resnet{depth}");
+    while matches!(
+        g.layers.last().map(|l| &l.kind),
+        Some(LayerKind::Pool { global: true, .. }) | Some(LayerKind::Fc { .. }) | Some(LayerKind::Softmax)
+    ) {
+        g.layers.pop();
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pose_head_outputs_fields() {
+        let g = pose_resnet(18);
+        let shapes = g.infer_shapes().unwrap();
+        let last = shapes.last().unwrap();
+        assert_eq!(last.0, FIELDS);
+        assert!(last.1 > 1 && last.2 > 1, "spatial fields, not a vector");
+    }
+
+    #[test]
+    fn resnet50_pose_is_heavier() {
+        assert!(pose_resnet(50).mflops() > pose_resnet(18).mflops() * 1.5);
+    }
+}

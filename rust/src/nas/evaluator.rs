@@ -1,0 +1,203 @@
+//! Candidate evaluators for NAS (paper §5.3).
+//!
+//! `Surrogate`: a calibrated analytic accuracy model — deterministic, free,
+//! used by the default Table-4/5 bench (DESIGN.md §6 documents this
+//! substitution for the paper's hundreds of trained candidates). The model
+//! encodes the paper's own findings: accuracy saturates in FLOPs, uniform
+//! channel stacks (the seed) carry redundancy, DS variants trade a few
+//! points of accuracy, square kernels suffice.
+//!
+//! `Real`: invokes the AOT compiler as a pipeline tool (python on the
+//! *compile* path, as the paper's dockerized training tools do), then
+//! trains the candidate via PJRT and reports measured validation accuracy.
+
+use super::flops;
+use super::space::KwsArch;
+use crate::ingestion::bta::Dataset;
+use crate::runtime::EngineHandle;
+use crate::training::trainer::{self, TrainConfig};
+
+#[derive(Debug, Clone)]
+pub struct Evaluation {
+    pub accuracy: f64,
+    pub mflops: f64,
+    pub size_kb: f64,
+}
+
+pub trait ArchEvaluator {
+    fn evaluate(&mut self, arch: &KwsArch) -> Result<Evaluation, String>;
+}
+
+/// Deterministic calibrated surrogate.
+pub struct Surrogate;
+
+fn hash_noise(arch: &KwsArch) -> f64 {
+    // FNV over the arch description; +-0.35% deterministic "training noise"
+    let mut h = 0xcbf29ce484222325u64;
+    for &(k, c) in &arch.convs {
+        for b in [k as u8, c as u8, arch.ds as u8] {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    ((h % 1000) as f64 / 1000.0 - 0.5) * 0.7
+}
+
+pub fn surrogate_accuracy(arch: &KwsArch) -> f64 {
+    let mf = flops::mflops(arch);
+    // capacity: saturating in FLOPs
+    let mut acc = 95.8 - 2.6 * (-mf / 60.0).exp();
+    // uniform channel stacks carry redundancy (the seed's weakness)
+    let all_equal = arch.convs.windows(2).all(|w| w[0].1 == w[1].1);
+    if all_equal {
+        acc -= 1.1;
+    }
+    // 1x1 first conv cannot extract local time-frequency structure
+    if arch.convs[0].0 == 1 {
+        acc -= 1.6;
+    }
+    // severe mid-network bottlenecks lose information
+    for w in arch.convs.windows(2) {
+        if w[1].1 * 2 < w[0].1 {
+            acc -= 0.35;
+        }
+    }
+    // depthwise-separable trade-off (paper: DS a few points under CNN)
+    if arch.ds {
+        acc -= 1.6;
+    }
+    acc + hash_noise(arch)
+}
+
+impl ArchEvaluator for Surrogate {
+    fn evaluate(&mut self, arch: &KwsArch) -> Result<Evaluation, String> {
+        Ok(Evaluation {
+            accuracy: surrogate_accuracy(arch),
+            mflops: flops::mflops(arch),
+            size_kb: flops::size_kb(arch),
+        })
+    }
+}
+
+/// Real evaluator: AOT-compile the candidate (python tool), short-train via
+/// PJRT, report measured validation accuracy.
+pub struct Real<'a> {
+    pub train_set: &'a Dataset,
+    pub val_set: &'a Dataset,
+    pub iterations: usize,
+    pub python_dir: std::path::PathBuf,
+    pub out_dir: std::path::PathBuf,
+    pub counter: usize,
+}
+
+impl<'a> Real<'a> {
+    pub fn new(
+        repo_root: &std::path::Path,
+        train_set: &'a Dataset,
+        val_set: &'a Dataset,
+        iterations: usize,
+    ) -> Real<'a> {
+        Real {
+            train_set,
+            val_set,
+            iterations,
+            python_dir: repo_root.join("python"),
+            out_dir: repo_root.join("artifacts").join("nas"),
+            counter: 0,
+        }
+    }
+}
+
+impl ArchEvaluator for Real<'_> {
+    fn evaluate(&mut self, arch: &KwsArch) -> Result<Evaluation, String> {
+        self.counter += 1;
+        let name = format!("cand{}", self.counter);
+        std::fs::create_dir_all(&self.out_dir).map_err(|e| e.to_string())?;
+        // 1. AOT-compile the candidate (compile-path python, like the
+        //    paper's dockerized training tool images)
+        let arch_json = arch.to_arch_json(&name).to_string();
+        let status = std::process::Command::new("python")
+            .current_dir(&self.python_dir)
+            .args([
+                "-m",
+                "compile.aot",
+                "--arch-json",
+                &arch_json,
+                "--name",
+                &name,
+                "--out-dir",
+                self.out_dir.to_str().unwrap(),
+                "--infer-batches",
+                "32",
+            ])
+            .status()
+            .map_err(|e| format!("spawn aot: {e}"))?;
+        if !status.success() {
+            return Err(format!("aot failed for {name}"));
+        }
+        // 2. train + evaluate through PJRT
+        let engine = EngineHandle::spawn_with_manifest(
+            &self.out_dir,
+            &format!("{name}.manifest.json"),
+        )
+        .map_err(|e| e.to_string())?;
+        let cfg = TrainConfig {
+            arch: name.clone(),
+            iterations: self.iterations,
+            eval_every: 0,
+            seed: 0,
+        };
+        let model = trainer::train(&engine, &cfg, self.train_set, None)
+            .map_err(|e| e.to_string())?;
+        let acc = trainer::evaluate(&engine, &name, &model.params, &model.stats, self.val_set)
+            .map_err(|e| e.to_string())?;
+        Ok(Evaluation {
+            accuracy: acc * 100.0,
+            mflops: flops::mflops(arch),
+            size_kb: flops::size_kb(arch),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nas::space::paper_arch;
+
+    #[test]
+    fn surrogate_matches_paper_orderings() {
+        let seed = KwsArch { ds: false, convs: vec![(3, 100); 6] };
+        let kws1 = paper_arch("kws1").unwrap();
+        let kws9 = paper_arch("kws9").unwrap();
+        let ds1 = paper_arch("ds_kws1").unwrap();
+        let a_seed = surrogate_accuracy(&seed);
+        let a1 = surrogate_accuracy(&kws1);
+        let a9 = surrogate_accuracy(&kws9);
+        let ad1 = surrogate_accuracy(&ds1);
+        // paper: kws1 (95.1) > seed (94.2) despite 2.6x fewer flops
+        assert!(a1 > a_seed, "kws1 {a1} vs seed {a_seed}");
+        // paper: kws9 (93.4) < kws1 (95.1)
+        assert!(a9 < a1);
+        // ds variants a couple points under their cnn counterparts
+        assert!(ad1 < a1 - 0.8);
+        // all in the plausible band
+        for a in [a_seed, a1, a9, ad1] {
+            assert!((88.0..97.0).contains(&a), "{a}");
+        }
+    }
+
+    #[test]
+    fn surrogate_within_point_of_paper_values() {
+        for (name, paper) in [("kws1", 95.1), ("kws3", 94.1), ("kws9", 93.4),
+                              ("ds_kws1", 92.6), ("ds_kws3", 91.2), ("ds_kws9", 91.3)] {
+            let a = surrogate_accuracy(&paper_arch(name).unwrap());
+            assert!((a - paper).abs() < 1.6, "{name}: {a} vs paper {paper}");
+        }
+    }
+
+    #[test]
+    fn surrogate_is_deterministic() {
+        let a = paper_arch("kws3").unwrap();
+        assert_eq!(surrogate_accuracy(&a), surrogate_accuracy(&a));
+    }
+}

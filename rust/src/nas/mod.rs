@@ -1,0 +1,155 @@
+//! Neural Architecture Search (paper §5.3): TPE search strategy over the
+//! KWS conv space, performance estimation via surrogate or real PJRT
+//! training, and Pareto-frontier selection on (accuracy, MFP_ops) — the
+//! integrated solution of [53] that produced Tables 4 and 5.
+
+pub mod evaluator;
+pub mod flops;
+pub mod pareto;
+pub mod space;
+pub mod tpe;
+
+use evaluator::{ArchEvaluator, Evaluation};
+use space::KwsArch;
+use tpe::{Tpe, TpeConfig};
+
+#[derive(Debug, Clone)]
+pub struct NasConfig {
+    pub trials: usize,
+    pub ds: bool,
+    /// Objective trade-off: maximize acc - lambda * log2(mflops).
+    pub lambda: f64,
+    pub seed: u64,
+}
+
+impl Default for NasConfig {
+    fn default() -> Self {
+        NasConfig { trials: 120, ds: false, lambda: 0.35, seed: 0 }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    pub arch: KwsArch,
+    pub eval: Evaluation,
+}
+
+#[derive(Debug, Clone)]
+pub struct NasOutcome {
+    pub candidates: Vec<Candidate>,
+    /// Indices into `candidates` on the (accuracy, mflops) Pareto frontier,
+    /// ascending mflops.
+    pub frontier: Vec<usize>,
+}
+
+/// Run the search: TPE proposes, the evaluator scores, Pareto selects.
+pub fn search(
+    cfg: &NasConfig,
+    eval: &mut dyn ArchEvaluator,
+) -> Result<NasOutcome, String> {
+    let mut tpe = Tpe::new(
+        KwsArch::cardinalities(),
+        TpeConfig { seed: cfg.seed, ..Default::default() },
+    );
+    let mut candidates: Vec<Candidate> = Vec::with_capacity(cfg.trials);
+    let mut seen = std::collections::HashSet::new();
+    for t in 0..cfg.trials {
+        let idx = tpe.suggest();
+        let arch = KwsArch::decode(cfg.ds, &idx);
+        if !seen.insert(arch.clone()) {
+            // duplicate proposal: feed back the known objective
+            if let Some(c) = candidates.iter().find(|c| c.arch == arch) {
+                let obj = c.eval.accuracy - cfg.lambda * c.eval.mflops.log2();
+                tpe.observe(idx, obj);
+            }
+            continue;
+        }
+        let e = eval.evaluate(&arch)?;
+        let obj = e.accuracy - cfg.lambda * e.mflops.max(1e-3).log2();
+        if t % 20 == 0 {
+            eprintln!(
+                "  trial {t:>4}: acc {:.2}% {:.1} MFLOPs obj {obj:.2} [{}]",
+                e.accuracy,
+                e.mflops,
+                arch.describe()
+            );
+        }
+        tpe.observe(idx, obj);
+        candidates.push(Candidate { arch, eval: e });
+    }
+    let pts: Vec<(f64, f64)> = candidates
+        .iter()
+        .map(|c| (c.eval.accuracy, c.eval.mflops))
+        .collect();
+    let frontier = pareto::frontier(&pts);
+    Ok(NasOutcome { candidates, frontier })
+}
+
+impl NasOutcome {
+    /// Frontier candidates as (describe, acc, mflops, size_kb) rows.
+    pub fn frontier_rows(&self) -> Vec<(String, f64, f64, f64)> {
+        self.frontier
+            .iter()
+            .map(|&i| {
+                let c = &self.candidates[i];
+                (
+                    c.arch.describe(),
+                    c.eval.accuracy,
+                    c.eval.mflops,
+                    c.eval.size_kb,
+                )
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use evaluator::Surrogate;
+
+    #[test]
+    fn nas_frontier_dominates_the_seed() {
+        let cfg = NasConfig { trials: 150, ds: false, lambda: 0.35, seed: 1 };
+        let out = search(&cfg, &mut Surrogate).unwrap();
+        assert!(!out.frontier.is_empty());
+        let seed_arch = KwsArch { ds: false, convs: vec![(3, 100); 6] };
+        let seed_acc = evaluator::surrogate_accuracy(&seed_arch);
+        let seed_mf = flops::mflops(&seed_arch);
+        // paper §8.1: NAS discovers models that dominate the seed
+        let dominated = out.frontier.iter().any(|&i| {
+            let c = &out.candidates[i];
+            c.eval.accuracy >= seed_acc && c.eval.mflops < seed_mf
+        });
+        assert!(dominated, "no frontier candidate dominates the seed");
+        // frontier is sorted by ascending flops with ascending accuracy
+        let rows = out.frontier_rows();
+        for w in rows.windows(2) {
+            assert!(w[0].2 <= w[1].2);
+            assert!(w[0].1 <= w[1].1);
+        }
+    }
+
+    #[test]
+    fn ds_search_produces_small_models() {
+        let cfg = NasConfig { trials: 100, ds: true, lambda: 0.5, seed: 2 };
+        let out = search(&cfg, &mut Surrogate).unwrap();
+        let rows = out.frontier_rows();
+        // paper Table 5: DS models in the ~7-12 MFLOP band exist
+        assert!(
+            rows.iter().any(|r| r.2 < 20.0),
+            "no small DS model found: {rows:?}"
+        );
+    }
+
+    #[test]
+    fn duplicate_proposals_do_not_crash() {
+        let cfg = NasConfig { trials: 300, ds: false, lambda: 0.35, seed: 3 };
+        let out = search(&cfg, &mut Surrogate).unwrap();
+        assert!(out.candidates.len() <= 300);
+        // uniqueness
+        let set: std::collections::HashSet<_> =
+            out.candidates.iter().map(|c| c.arch.clone()).collect();
+        assert_eq!(set.len(), out.candidates.len());
+    }
+}

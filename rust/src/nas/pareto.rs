@@ -1,0 +1,81 @@
+//! Pareto-frontier selection (paper §5.3, [70]): a candidate is on the
+//! frontier iff no other candidate is both more accurate and cheaper.
+
+/// Points are (accuracy %, mflops). Returns indices on the frontier,
+/// sorted by ascending mflops.
+pub fn frontier(points: &[(f64, f64)]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..points.len()).collect();
+    // sort by mflops asc, accuracy desc for ties
+    idx.sort_by(|&a, &b| {
+        points[a]
+            .1
+            .partial_cmp(&points[b].1)
+            .unwrap()
+            .then(points[b].0.partial_cmp(&points[a].0).unwrap())
+    });
+    let mut out = Vec::new();
+    let mut best_acc = f64::MIN;
+    for &i in &idx {
+        if points[i].0 > best_acc {
+            out.push(i);
+            best_acc = points[i].0;
+        }
+    }
+    out
+}
+
+/// True iff a dominates b (a at least as good in both, better in one).
+pub fn dominates(a: (f64, f64), b: (f64, f64)) -> bool {
+    (a.0 >= b.0 && a.1 <= b.1) && (a.0 > b.0 || a.1 < b.1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frontier_of_known_set() {
+        // (acc, cost)
+        let pts = vec![
+            (94.2, 581.1), // seed: dominated by kws1
+            (95.1, 223.4), // kws1
+            (94.1, 87.6),  // kws3
+            (93.4, 37.7),  // kws9
+            (90.0, 500.0), // clearly dominated
+        ];
+        let f = frontier(&pts);
+        assert_eq!(f, vec![3, 2, 1]);
+        assert!(!f.contains(&0), "seed must be dominated");
+    }
+
+    #[test]
+    fn dominance_relation() {
+        assert!(dominates((95.0, 100.0), (94.0, 200.0)));
+        assert!(!dominates((95.0, 300.0), (94.0, 200.0)));
+        assert!(!dominates((94.0, 200.0), (94.0, 200.0)), "no self-dominance");
+    }
+
+    #[test]
+    fn frontier_members_are_mutually_nondominated() {
+        let pts: Vec<(f64, f64)> = (0..50)
+            .map(|i| {
+                let x = i as f64;
+                (90.0 + (x * 7.3) % 6.0, 20.0 + (x * 13.7) % 500.0)
+            })
+            .collect();
+        let f = frontier(&pts);
+        for &a in &f {
+            for &b in &f {
+                if a != b {
+                    assert!(!dominates(pts[a], pts[b]), "{a} dominates {b}");
+                }
+            }
+        }
+        // everything off the frontier is dominated by something on it
+        for i in 0..pts.len() {
+            if !f.contains(&i) {
+                assert!(f.iter().any(|&a| dominates(pts[a], pts[i])), "point {i}");
+            }
+        }
+    }
+}

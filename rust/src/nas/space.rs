@@ -1,0 +1,139 @@
+//! NAS search space (paper §5.3): per-layer kernel shape k_h x k_w in
+//! {1,3,5} and output channels M in {10..100 step 10}, six conv layers,
+//! CNN or DS_CNN family. Matches the space of [53] that produced Tables 4/5.
+
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+pub const KERNELS: [usize; 3] = [1, 3, 5];
+pub const CHANNELS: [usize; 10] = [10, 20, 30, 40, 50, 60, 70, 80, 90, 100];
+pub const LAYERS: usize = 6;
+
+/// A KWS architecture point: 6 conv layers, each (k, channels).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct KwsArch {
+    pub ds: bool,
+    /// (kernel edge, out channels); kernels are square (the NAS finding:
+    /// rectangular 4x10 kernels are obsolete with 128 ms frames, §8.1).
+    pub convs: Vec<(usize, usize)>,
+}
+
+impl KwsArch {
+    pub fn dims() -> usize {
+        LAYERS * 2 // (kernel idx, channel idx) per layer
+    }
+
+    /// Decode from per-dimension categorical indices.
+    pub fn decode(ds: bool, idx: &[usize]) -> KwsArch {
+        assert_eq!(idx.len(), Self::dims());
+        let convs = (0..LAYERS)
+            .map(|l| (KERNELS[idx[l * 2]], CHANNELS[idx[l * 2 + 1]]))
+            .collect();
+        KwsArch { ds, convs }
+    }
+
+    /// Per-dimension cardinalities.
+    pub fn cardinalities() -> Vec<usize> {
+        (0..Self::dims())
+            .map(|d| if d % 2 == 0 { KERNELS.len() } else { CHANNELS.len() })
+            .collect()
+    }
+
+    pub fn sample(ds: bool, rng: &mut Rng) -> (Vec<usize>, KwsArch) {
+        let idx: Vec<usize> = Self::cardinalities()
+            .iter()
+            .map(|&c| rng.below(c))
+            .collect();
+        let arch = Self::decode(ds, &idx);
+        (idx, arch)
+    }
+
+    /// The paper's seed architecture (Table 1) in this encoding family
+    /// (4x10 first kernel kept verbatim — it is representable for FLOPs
+    /// accounting even though NAS itself only proposes square kernels).
+    pub fn to_arch_json(&self, name: &str) -> Json {
+        Json::obj(vec![
+            ("type", Json::str(if self.ds { "ds_cnn" } else { "cnn" })),
+            (
+                "convs",
+                Json::arr(
+                    self.convs
+                        .iter()
+                        .map(|&(k, c)| {
+                            Json::obj(vec![
+                                ("k", Json::arr(vec![Json::from(k), Json::from(k)])),
+                                ("c", Json::from(c)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("name", Json::str(name)),
+        ])
+    }
+
+    pub fn describe(&self) -> String {
+        self.convs
+            .iter()
+            .map(|(k, c)| format!("{k}x{k},{c}"))
+            .collect::<Vec<_>>()
+            .join(" | ")
+    }
+}
+
+/// Known architectures from the paper's appendix (Tables 4/5), used for
+/// calibration checks and the bench baselines.
+pub fn paper_arch(name: &str) -> Option<KwsArch> {
+    let cnn = |convs: Vec<(usize, usize)>| KwsArch { ds: false, convs };
+    let ds = |convs: Vec<(usize, usize)>| KwsArch { ds: true, convs };
+    match name {
+        "kws1" => Some(cnn(vec![(3, 40), (3, 30), (1, 30), (5, 50), (5, 50), (5, 50)])),
+        "kws3" => Some(cnn(vec![(5, 50), (1, 30), (5, 40), (3, 20), (5, 30), (3, 50)])),
+        "kws9" => Some(cnn(vec![(5, 50), (1, 20), (1, 50), (3, 20), (5, 20), (3, 40)])),
+        "ds_kws1" => Some(ds(vec![(3, 40), (3, 30), (1, 30), (5, 50), (5, 50), (5, 50)])),
+        "ds_kws3" => Some(ds(vec![(5, 50), (1, 30), (5, 40), (3, 20), (5, 30), (3, 50)])),
+        "ds_kws9" => Some(ds(vec![(5, 50), (1, 20), (1, 50), (3, 20), (5, 20), (3, 40)])),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decode_roundtrip() {
+        let idx = vec![0, 3, 1, 2, 2, 4, 0, 0, 1, 9, 2, 5];
+        let a = KwsArch::decode(false, &idx);
+        assert_eq!(a.convs[0], (1, 40));
+        assert_eq!(a.convs[1], (3, 30));
+        assert_eq!(a.convs[5], (5, 60));
+    }
+
+    #[test]
+    fn sample_is_in_space() {
+        let mut rng = Rng::new(0);
+        for _ in 0..50 {
+            let (idx, a) = KwsArch::sample(true, &mut rng);
+            assert_eq!(idx.len(), KwsArch::dims());
+            for (k, c) in a.convs {
+                assert!(KERNELS.contains(&k) && CHANNELS.contains(&c));
+            }
+        }
+    }
+
+    #[test]
+    fn paper_archs_decode() {
+        let a = paper_arch("kws1").unwrap();
+        assert_eq!(a.describe(), "3x3,40 | 3x3,30 | 1x1,30 | 5x5,50 | 5x5,50 | 5x5,50");
+        assert!(paper_arch("ds_kws9").unwrap().ds);
+    }
+
+    #[test]
+    fn arch_json_shape() {
+        let a = paper_arch("kws9").unwrap();
+        let j = a.to_arch_json("cand");
+        assert_eq!(j.get("type").as_str(), Some("cnn"));
+        assert_eq!(j.get("convs").as_arr().unwrap().len(), 6);
+    }
+}

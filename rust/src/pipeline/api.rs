@@ -1,0 +1,309 @@
+//! REST control API over the pipeline (paper §3.2: "a high-level HTTP API is
+//! defined to control the workflows and tools"). Workflows submitted via
+//! POST run asynchronously; status is polled by id.
+
+use super::artifact::ArtifactStore;
+use super::tool::Registry;
+use super::workflow::{run as run_workflow, RunReport, Workflow};
+use crate::http::{Response, Router, Server};
+use crate::runtime::EngineHandle;
+use crate::util::json::Json;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+#[derive(Debug, Clone)]
+pub enum RunState {
+    Running,
+    Done(RunReport),
+    Failed(String),
+}
+
+pub struct PipelineService {
+    pub store: Arc<ArtifactStore>,
+    pub registry: Arc<Registry>,
+    pub engine: Option<EngineHandle>,
+    runs: Arc<Mutex<HashMap<u64, RunState>>>,
+    next_id: AtomicU64,
+}
+
+impl PipelineService {
+    pub fn new(
+        store: Arc<ArtifactStore>,
+        registry: Arc<Registry>,
+        engine: Option<EngineHandle>,
+    ) -> Arc<PipelineService> {
+        Arc::new(PipelineService {
+            store,
+            registry,
+            engine,
+            runs: Arc::new(Mutex::new(HashMap::new())),
+            next_id: AtomicU64::new(1),
+        })
+    }
+
+    /// Submit a workflow for asynchronous execution; returns the run id.
+    pub fn submit(self: &Arc<Self>, wf: Workflow, force: bool) -> u64 {
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        self.runs.lock().unwrap().insert(id, RunState::Running);
+        let me = Arc::clone(self);
+        std::thread::spawn(move || {
+            let result = run_workflow(&wf, &me.registry, &me.store, me.engine.clone(), force);
+            let state = match result {
+                Ok(rep) => RunState::Done(rep),
+                Err(e) => RunState::Failed(e),
+            };
+            me.runs.lock().unwrap().insert(id, state);
+        });
+        id
+    }
+
+    pub fn state(&self, id: u64) -> Option<RunState> {
+        self.runs.lock().unwrap().get(&id).cloned()
+    }
+
+    /// Block until a run finishes (test/CLI helper).
+    pub fn wait(&self, id: u64) -> RunState {
+        loop {
+            match self.state(id) {
+                Some(RunState::Running) | None => {
+                    std::thread::sleep(std::time::Duration::from_millis(10))
+                }
+                Some(s) => return s,
+            }
+        }
+    }
+
+    /// Build the HTTP router exposing the control API.
+    pub fn router(self: &Arc<Self>) -> Router {
+        let mut r = Router::new();
+        let me = Arc::clone(self);
+        r.add("GET", "/v1/tools", move |_req, _| {
+            let tools: Vec<Json> = me
+                .registry
+                .names()
+                .iter()
+                .map(|n| {
+                    let t = me.registry.get(n).unwrap();
+                    Json::obj(vec![
+                        ("name", Json::str(n.clone())),
+                        ("image", Json::str(t.image())),
+                        (
+                            "inputs",
+                            Json::arr(
+                                t.inputs()
+                                    .iter()
+                                    .map(|p| {
+                                        Json::obj(vec![
+                                            ("port", Json::str(p.name.clone())),
+                                            ("format", Json::str(p.format.clone())),
+                                        ])
+                                    })
+                                    .collect(),
+                            ),
+                        ),
+                        (
+                            "outputs",
+                            Json::arr(
+                                t.outputs()
+                                    .iter()
+                                    .map(|p| {
+                                        Json::obj(vec![
+                                            ("port", Json::str(p.name.clone())),
+                                            ("format", Json::str(p.format.clone())),
+                                        ])
+                                    })
+                                    .collect(),
+                            ),
+                        ),
+                        (
+                            "interchangeable_with",
+                            Json::arr(
+                                me.registry
+                                    .interchangeable_with(n)
+                                    .into_iter()
+                                    .map(Json::str)
+                                    .collect(),
+                            ),
+                        ),
+                    ])
+                })
+                .collect();
+            Response::json(200, &Json::arr(tools))
+        });
+        let me = Arc::clone(self);
+        r.add("GET", "/v1/artifacts", move |_req, _| {
+            let arts: Vec<Json> = me
+                .store
+                .list()
+                .iter()
+                .map(|m| {
+                    Json::obj(vec![
+                        ("name", Json::str(m.name.clone())),
+                        ("format", Json::str(m.format.clone())),
+                        ("producer", Json::str(m.producer.clone())),
+                        ("hash", Json::str(format!("{:016x}", m.content_hash))),
+                    ])
+                })
+                .collect();
+            Response::json(200, &Json::arr(arts))
+        });
+        let me = Arc::clone(self);
+        r.add("GET", "/v1/artifacts/:name", move |_req, params| {
+            match me.store.meta(&params["name"]) {
+                None => Response::not_found(),
+                Some(m) => Response::json(
+                    200,
+                    &Json::obj(vec![
+                        ("name", Json::str(m.name)),
+                        ("format", Json::str(m.format)),
+                        ("producer", Json::str(m.producer)),
+                        ("created_unix", Json::num(m.created_unix as f64)),
+                        ("verified", Json::Bool(me.store.verify(&params["name"]))),
+                        ("extra", m.extra),
+                    ]),
+                ),
+            }
+        });
+        let me = Arc::clone(self);
+        r.add("DELETE", "/v1/artifacts/:name", move |_req, params| {
+            match me.store.delete(&params["name"]) {
+                Ok(()) => Response::json(200, &Json::obj(vec![("deleted", Json::Bool(true))])),
+                Err(_) => Response::not_found(),
+            }
+        });
+        let me = Arc::clone(self);
+        r.add("POST", "/v1/workflows", move |req, _| {
+            let body = match req.json() {
+                Ok(b) => b,
+                Err(e) => return Response::bad_request(&e),
+            };
+            let wf = match Workflow::from_json(&body) {
+                Ok(w) => w,
+                Err(e) => return Response::bad_request(&e),
+            };
+            if let Err(e) = wf.validate(&me.registry, &me.store) {
+                return Response::bad_request(&e);
+            }
+            let force = req.query_get("force") == Some("1");
+            let id = me.submit(wf, force);
+            Response::json(202, &Json::obj(vec![("run_id", Json::num(id as f64))]))
+        });
+        let me = Arc::clone(self);
+        r.add("GET", "/v1/workflows/:id", move |_req, params| {
+            let id: u64 = match params["id"].parse() {
+                Ok(i) => i,
+                Err(_) => return Response::bad_request("bad id"),
+            };
+            match me.state(id) {
+                None => Response::not_found(),
+                Some(RunState::Running) => Response::json(
+                    200,
+                    &Json::obj(vec![("status", Json::str("running"))]),
+                ),
+                Some(RunState::Failed(e)) => Response::json(
+                    200,
+                    &Json::obj(vec![
+                        ("status", Json::str("failed")),
+                        ("error", Json::str(e)),
+                    ]),
+                ),
+                Some(RunState::Done(rep)) => Response::json(
+                    200,
+                    &Json::obj(vec![
+                        ("status", Json::str("done")),
+                        ("report", rep.to_json()),
+                    ]),
+                ),
+            }
+        });
+        r
+    }
+
+    /// Serve the API; returns the bound server.
+    pub fn serve(self: &Arc<Self>, addr: &str) -> std::io::Result<Server> {
+        Server::serve(addr, self.router(), 4)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::http::client;
+    use crate::pipeline::artifact::formats;
+    use crate::pipeline::tool::{Port, Tool, ToolCtx};
+
+    struct Producer;
+    impl Tool for Producer {
+        fn name(&self) -> &str {
+            "producer"
+        }
+        fn inputs(&self) -> Vec<Port> {
+            vec![]
+        }
+        fn outputs(&self) -> Vec<Port> {
+            vec![Port::new("out", formats::REPORT)]
+        }
+        fn run(&self, ctx: &mut ToolCtx) -> Result<(), String> {
+            std::fs::write(ctx.output("out")?.join("x.json"), "{}").map_err(|e| e.to_string())
+        }
+    }
+
+    fn service() -> Arc<PipelineService> {
+        let d = std::env::temp_dir().join(format!(
+            "bonseyes-api-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        let store = Arc::new(ArtifactStore::open(d).unwrap());
+        let mut reg = Registry::new();
+        reg.register(Arc::new(Producer));
+        PipelineService::new(store, Arc::new(reg), None)
+    }
+
+    #[test]
+    fn rest_workflow_lifecycle() {
+        let svc = service();
+        let mut server = svc.serve("127.0.0.1:0").unwrap();
+        let base = format!("http://{}", server.addr);
+
+        let tools = client::get(&format!("{base}/v1/tools")).unwrap();
+        assert_eq!(tools.status, 200);
+        assert_eq!(tools.json().unwrap().at(0).get("name").as_str(), Some("producer"));
+
+        let wf = Json::parse(
+            r#"{"name":"w","steps":[{"tool":"producer","outputs":{"out":"art1"}}]}"#,
+        )
+        .unwrap();
+        let resp = client::post_json(&format!("{base}/v1/workflows"), &wf).unwrap();
+        assert_eq!(resp.status, 202);
+        let id = resp.json().unwrap().get("run_id").as_i64().unwrap() as u64;
+        let state = svc.wait(id);
+        assert!(matches!(state, RunState::Done(_)));
+
+        let st = client::get(&format!("{base}/v1/workflows/{id}")).unwrap();
+        assert_eq!(st.json().unwrap().get("status").as_str(), Some("done"));
+
+        let arts = client::get(&format!("{base}/v1/artifacts")).unwrap();
+        assert_eq!(arts.json().unwrap().at(0).get("name").as_str(), Some("art1"));
+
+        let one = client::get(&format!("{base}/v1/artifacts/art1")).unwrap();
+        assert_eq!(one.json().unwrap().get("verified").as_bool(), Some(true));
+
+        let del = client::delete(&format!("{base}/v1/artifacts/art1")).unwrap();
+        assert_eq!(del.status, 200);
+        server.stop();
+    }
+
+    #[test]
+    fn invalid_workflow_is_rejected_with_400() {
+        let svc = service();
+        let mut server = svc.serve("127.0.0.1:0").unwrap();
+        let base = format!("http://{}", server.addr);
+        let wf = Json::parse(r#"{"name":"w","steps":[{"tool":"ghost"}]}"#).unwrap();
+        let resp = client::post_json(&format!("{base}/v1/workflows"), &wf).unwrap();
+        assert_eq!(resp.status, 400);
+        server.stop();
+    }
+}

@@ -1,0 +1,254 @@
+//! Artifact store (paper §3.2): artifacts are the products of tool
+//! executions — datasets, feature tensors, trained models, reports — stored
+//! with a declared *format*, provenance, and a content hash. Tools declare
+//! their inputs/outputs against these formats, which is what makes tools
+//! with matching ports interchangeable (the paper's modularity claim).
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// Standard artifact formats (the paper's "collection of standard formats
+/// that define on-disk serialization"). Extendable: formats are open strings,
+/// these are the ones the built-in tools speak.
+pub mod formats {
+    /// Raw audio dataset: BTA container of waveforms + labels.
+    pub const AUDIO_DATASET: &str = "bonseyes/audio-dataset";
+    /// MFCC feature tensor set: BTA container of features + labels.
+    pub const FEATURE_SET: &str = "bonseyes/feature-set";
+    /// Trained model: flat f32 params/stats blobs + metadata.
+    pub const MODEL: &str = "bonseyes/kws-model";
+    /// JSON benchmark/accuracy report.
+    pub const REPORT: &str = "bonseyes/report";
+    /// Deployed AI application (LNE model + assignment).
+    pub const AI_APP: &str = "bonseyes/ai-app";
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub format: String,
+    pub producer: String,
+    pub created_unix: u64,
+    pub content_hash: u64,
+    pub extra: Json,
+}
+
+impl ArtifactMeta {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("format", Json::str(self.format.clone())),
+            ("producer", Json::str(self.producer.clone())),
+            ("created_unix", Json::num(self.created_unix as f64)),
+            ("content_hash", Json::str(format!("{:016x}", self.content_hash))),
+            ("extra", self.extra.clone()),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Option<ArtifactMeta> {
+        Some(ArtifactMeta {
+            name: v.get("name").as_str()?.to_string(),
+            format: v.get("format").as_str()?.to_string(),
+            producer: v.get("producer").as_str().unwrap_or("").to_string(),
+            created_unix: v.get("created_unix").as_usize().unwrap_or(0) as u64,
+            content_hash: u64::from_str_radix(
+                v.get("content_hash").as_str().unwrap_or("0"),
+                16,
+            )
+            .unwrap_or(0),
+            extra: v.get("extra").clone(),
+        })
+    }
+}
+
+/// Filesystem-backed artifact store. Each artifact is a directory:
+/// `<root>/<name>/{meta.json, payload files...}`.
+pub struct ArtifactStore {
+    root: PathBuf,
+}
+
+impl ArtifactStore {
+    pub fn open(root: impl AsRef<Path>) -> std::io::Result<ArtifactStore> {
+        std::fs::create_dir_all(root.as_ref())?;
+        Ok(ArtifactStore { root: root.as_ref().to_path_buf() })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    pub fn dir(&self, name: &str) -> PathBuf {
+        self.root.join(sanitize(name))
+    }
+
+    pub fn exists(&self, name: &str) -> bool {
+        self.dir(name).join("meta.json").exists()
+    }
+
+    /// Begin staging an artifact: returns a fresh payload directory the tool
+    /// writes into; `commit` finalizes it (hash + metadata).
+    pub fn stage(&self, name: &str) -> std::io::Result<PathBuf> {
+        let dir = self.dir(name);
+        if dir.exists() {
+            std::fs::remove_dir_all(&dir)?;
+        }
+        std::fs::create_dir_all(&dir)?;
+        Ok(dir)
+    }
+
+    pub fn commit(
+        &self,
+        name: &str,
+        format: &str,
+        producer: &str,
+        extra: Json,
+    ) -> std::io::Result<ArtifactMeta> {
+        let dir = self.dir(name);
+        let hash = hash_dir(&dir)?;
+        let meta = ArtifactMeta {
+            name: name.to_string(),
+            format: format.to_string(),
+            producer: producer.to_string(),
+            created_unix: SystemTime::now()
+                .duration_since(UNIX_EPOCH)
+                .map(|d| d.as_secs())
+                .unwrap_or(0),
+            content_hash: hash,
+            extra,
+        };
+        std::fs::write(dir.join("meta.json"), meta.to_json().to_string())?;
+        Ok(meta)
+    }
+
+    pub fn meta(&self, name: &str) -> Option<ArtifactMeta> {
+        let text = std::fs::read_to_string(self.dir(name).join("meta.json")).ok()?;
+        ArtifactMeta::from_json(&Json::parse(&text).ok()?)
+    }
+
+    pub fn list(&self) -> Vec<ArtifactMeta> {
+        let mut out = Vec::new();
+        if let Ok(entries) = std::fs::read_dir(&self.root) {
+            for e in entries.flatten() {
+                if let Some(name) = e.file_name().to_str() {
+                    if let Some(m) = self.meta(name) {
+                        out.push(m);
+                    }
+                }
+            }
+        }
+        out.sort_by(|a, b| a.name.cmp(&b.name));
+        out
+    }
+
+    pub fn delete(&self, name: &str) -> std::io::Result<()> {
+        std::fs::remove_dir_all(self.dir(name))
+    }
+
+    /// Verify an artifact's payload against its recorded hash.
+    pub fn verify(&self, name: &str) -> bool {
+        match self.meta(name) {
+            None => false,
+            Some(m) => hash_dir(&self.dir(name)).map(|h| h == m.content_hash).unwrap_or(false),
+        }
+    }
+}
+
+fn sanitize(name: &str) -> String {
+    name.chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '_' || c == '.' { c } else { '_' })
+        .collect()
+}
+
+/// FNV-1a over sorted payload file names + contents (meta.json excluded).
+fn hash_dir(dir: &Path) -> std::io::Result<u64> {
+    let mut files: Vec<PathBuf> = std::fs::read_dir(dir)?
+        .flatten()
+        .map(|e| e.path())
+        .filter(|p| p.file_name().map(|n| n != "meta.json").unwrap_or(true) && p.is_file())
+        .collect();
+    files.sort();
+    let mut h = 0xcbf29ce484222325u64;
+    let mut eat = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    };
+    for f in files {
+        eat(f.file_name().unwrap().to_string_lossy().as_bytes());
+        eat(&std::fs::read(&f)?);
+    }
+    Ok(h)
+}
+
+/// Typed helpers for common payloads.
+pub fn write_json(dir: &Path, file: &str, v: &Json) -> std::io::Result<()> {
+    std::fs::write(dir.join(file), v.to_string())
+}
+
+pub fn read_json(dir: &Path, file: &str) -> Result<Json, String> {
+    let text = std::fs::read_to_string(dir.join(file)).map_err(|e| e.to_string())?;
+    Json::parse(&text).map_err(|e| e.to_string())
+}
+
+/// Minimal ordered-map helper used by tools.
+pub type PortMap = BTreeMap<String, String>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp() -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "bonseyes-store-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn stage_commit_roundtrip() {
+        let store = ArtifactStore::open(tmp()).unwrap();
+        let dir = store.stage("ds1").unwrap();
+        std::fs::write(dir.join("data.bin"), b"hello").unwrap();
+        let meta = store
+            .commit("ds1", formats::AUDIO_DATASET, "tool-x", Json::Null)
+            .unwrap();
+        assert!(store.exists("ds1"));
+        assert_eq!(store.meta("ds1").unwrap().format, formats::AUDIO_DATASET);
+        assert_eq!(meta.producer, "tool-x");
+        assert!(store.verify("ds1"));
+        assert_eq!(store.list().len(), 1);
+    }
+
+    #[test]
+    fn tamper_detection() {
+        let store = ArtifactStore::open(tmp()).unwrap();
+        let dir = store.stage("a").unwrap();
+        std::fs::write(dir.join("p.bin"), b"payload").unwrap();
+        store.commit("a", formats::MODEL, "t", Json::Null).unwrap();
+        std::fs::write(store.dir("a").join("p.bin"), b"tampered").unwrap();
+        assert!(!store.verify("a"));
+    }
+
+    #[test]
+    fn restage_replaces() {
+        let store = ArtifactStore::open(tmp()).unwrap();
+        let dir = store.stage("x").unwrap();
+        std::fs::write(dir.join("1.bin"), b"one").unwrap();
+        store.commit("x", formats::REPORT, "t", Json::Null).unwrap();
+        let dir = store.stage("x").unwrap();
+        assert!(!dir.join("1.bin").exists(), "stage must clear old payload");
+    }
+
+    #[test]
+    fn sanitize_rejects_traversal() {
+        let store = ArtifactStore::open(tmp()).unwrap();
+        let d = store.dir("../evil");
+        assert!(d.starts_with(store.root()));
+    }
+}

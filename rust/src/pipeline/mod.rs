@@ -1,0 +1,13 @@
+//! The Bonseyes AI-pipeline framework (paper §3): tools, artifacts and
+//! workflows, plus the HTTP control API. The concrete tools (data
+//! ingestion, training, deployment, IoT) live in their domain modules and
+//! register here.
+
+pub mod api;
+pub mod artifact;
+pub mod tool;
+pub mod workflow;
+
+pub use artifact::{formats, ArtifactMeta, ArtifactStore};
+pub use tool::{invoke, Port, Registry, Tool, ToolCtx};
+pub use workflow::{run, RunReport, Step, Workflow};

@@ -1,0 +1,278 @@
+//! Tools (paper §3.2): software components performing one pipeline function,
+//! packaged with declared input/output ports over artifact formats. The
+//! paper isolates tools in Docker containers with an HTTP API; here each
+//! tool runs with a mediated context that only exposes its declared inputs
+//! and a staging directory for its declared outputs (DESIGN.md §3 documents
+//! the container -> mediated-context substitution; the *interface* contract
+//! is identical).
+
+use super::artifact::{ArtifactStore, PortMap};
+use crate::runtime::EngineHandle;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// A declared port: name + required artifact format.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Port {
+    pub name: String,
+    pub format: String,
+}
+
+impl Port {
+    pub fn new(name: &str, format: &str) -> Port {
+        Port { name: name.to_string(), format: format.to_string() }
+    }
+}
+
+/// Execution context handed to a tool: resolved input artifact directories,
+/// staging directories for outputs, parameters, and the shared PJRT engine
+/// (the "GPU of the container").
+pub struct ToolCtx<'a> {
+    pub store: &'a ArtifactStore,
+    pub params: Json,
+    pub inputs: BTreeMap<String, PathBuf>,
+    pub outputs: BTreeMap<String, PathBuf>,
+    pub engine: Option<EngineHandle>,
+    pub log: Vec<String>,
+}
+
+impl ToolCtx<'_> {
+    pub fn input(&self, port: &str) -> Result<&PathBuf, String> {
+        self.inputs.get(port).ok_or_else(|| format!("input port '{port}' not bound"))
+    }
+    pub fn output(&self, port: &str) -> Result<&PathBuf, String> {
+        self.outputs.get(port).ok_or_else(|| format!("output port '{port}' not bound"))
+    }
+    pub fn engine(&self) -> Result<&EngineHandle, String> {
+        self.engine.as_ref().ok_or_else(|| "tool requires the PJRT engine".to_string())
+    }
+    pub fn param_str(&self, key: &str, default: &str) -> String {
+        self.params.get(key).as_str().unwrap_or(default).to_string()
+    }
+    pub fn param_usize(&self, key: &str, default: usize) -> usize {
+        self.params.get(key).as_usize().unwrap_or(default)
+    }
+    pub fn param_f64(&self, key: &str, default: f64) -> f64 {
+        self.params.get(key).as_f64().unwrap_or(default)
+    }
+    pub fn info(&mut self, msg: impl Into<String>) {
+        let msg = msg.into();
+        eprintln!("    [tool] {msg}");
+        self.log.push(msg);
+    }
+}
+
+/// A pipeline tool. `image` is the container-image metadata the paper's
+/// docker packaging would use (recorded for provenance).
+pub trait Tool: Send + Sync {
+    fn name(&self) -> &str;
+    fn image(&self) -> String {
+        format!("bonseyes/{}:latest", self.name())
+    }
+    fn inputs(&self) -> Vec<Port>;
+    fn outputs(&self) -> Vec<Port>;
+    /// Extra JSON recorded on each produced artifact.
+    fn provenance(&self, ctx: &ToolCtx) -> Json {
+        Json::obj(vec![
+            ("image", Json::str(self.image())),
+            ("params", ctx.params.clone()),
+        ])
+    }
+    fn run(&self, ctx: &mut ToolCtx) -> Result<(), String>;
+}
+
+/// Tool registry: the catalog a workflow resolves tool names against.
+#[derive(Default)]
+pub struct Registry {
+    tools: BTreeMap<String, Arc<dyn Tool>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    pub fn register(&mut self, tool: Arc<dyn Tool>) {
+        self.tools.insert(tool.name().to_string(), tool);
+    }
+
+    pub fn get(&self, name: &str) -> Option<Arc<dyn Tool>> {
+        self.tools.get(name).cloned()
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.tools.keys().cloned().collect()
+    }
+
+    /// Tools whose input/output signature matches (interchangeability probe —
+    /// the paper's claim that same-port tools are swappable).
+    pub fn interchangeable_with(&self, name: &str) -> Vec<String> {
+        let Some(t) = self.get(name) else { return Vec::new() };
+        let (ti, to) = (t.inputs(), t.outputs());
+        self.tools
+            .values()
+            .filter(|o| o.name() != name && o.inputs() == ti && o.outputs() == to)
+            .map(|o| o.name().to_string())
+            .collect()
+    }
+}
+
+/// Execute one tool invocation: resolve inputs, stage outputs, run, commit.
+pub fn invoke(
+    store: &ArtifactStore,
+    tool: &dyn Tool,
+    params: Json,
+    input_bindings: &PortMap,
+    output_bindings: &PortMap,
+    engine: Option<EngineHandle>,
+) -> Result<Vec<String>, String> {
+    // resolve + type-check inputs
+    let mut inputs = BTreeMap::new();
+    for port in tool.inputs() {
+        let artifact = input_bindings
+            .get(&port.name)
+            .ok_or_else(|| format!("{}: input '{}' unbound", tool.name(), port.name))?;
+        let meta = store
+            .meta(artifact)
+            .ok_or_else(|| format!("{}: input artifact '{artifact}' missing", tool.name()))?;
+        if meta.format != port.format {
+            return Err(format!(
+                "{}: input '{}' expects format {} but artifact '{artifact}' is {}",
+                tool.name(),
+                port.name,
+                port.format,
+                meta.format
+            ));
+        }
+        inputs.insert(port.name.clone(), store.dir(artifact));
+    }
+    // stage outputs
+    let mut outputs = BTreeMap::new();
+    for port in tool.outputs() {
+        let artifact = output_bindings
+            .get(&port.name)
+            .ok_or_else(|| format!("{}: output '{}' unbound", tool.name(), port.name))?;
+        let dir = store.stage(artifact).map_err(|e| e.to_string())?;
+        outputs.insert(port.name.clone(), dir);
+    }
+    let mut ctx = ToolCtx { store, params, inputs, outputs, engine, log: Vec::new() };
+    tool.run(&mut ctx)?;
+    // commit outputs with provenance
+    let prov = tool.provenance(&ctx);
+    for port in tool.outputs() {
+        let artifact = &output_bindings[&port.name];
+        store
+            .commit(artifact, &port.format, tool.name(), prov.clone())
+            .map_err(|e| e.to_string())?;
+    }
+    Ok(ctx.log)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::artifact::formats;
+
+    struct MakeData;
+    impl Tool for MakeData {
+        fn name(&self) -> &str {
+            "make-data"
+        }
+        fn inputs(&self) -> Vec<Port> {
+            vec![]
+        }
+        fn outputs(&self) -> Vec<Port> {
+            vec![Port::new("data", formats::AUDIO_DATASET)]
+        }
+        fn run(&self, ctx: &mut ToolCtx) -> Result<(), String> {
+            let n = ctx.param_usize("n", 3);
+            std::fs::write(ctx.output("data")?.join("data.txt"), format!("{n}"))
+                .map_err(|e| e.to_string())?;
+            ctx.info(format!("made {n}"));
+            Ok(())
+        }
+    }
+
+    struct Consume;
+    impl Tool for Consume {
+        fn name(&self) -> &str {
+            "consume"
+        }
+        fn inputs(&self) -> Vec<Port> {
+            vec![Port::new("data", formats::AUDIO_DATASET)]
+        }
+        fn outputs(&self) -> Vec<Port> {
+            vec![Port::new("report", formats::REPORT)]
+        }
+        fn run(&self, ctx: &mut ToolCtx) -> Result<(), String> {
+            let s = std::fs::read_to_string(ctx.input("data")?.join("data.txt"))
+                .map_err(|e| e.to_string())?;
+            std::fs::write(ctx.output("report")?.join("report.json"),
+                           format!("{{\"n\": {s}}}"))
+                .map_err(|e| e.to_string())
+        }
+    }
+
+    fn store() -> ArtifactStore {
+        let d = std::env::temp_dir().join(format!(
+            "bonseyes-tool-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        ArtifactStore::open(d).unwrap()
+    }
+
+    #[test]
+    fn invoke_chain_passes_artifacts() {
+        let store = store();
+        let mut out1 = PortMap::new();
+        out1.insert("data".into(), "ds".into());
+        invoke(&store, &MakeData, Json::obj(vec![("n", Json::num(7.0))]),
+               &PortMap::new(), &out1, None)
+            .unwrap();
+        let mut in2 = PortMap::new();
+        in2.insert("data".into(), "ds".into());
+        let mut out2 = PortMap::new();
+        out2.insert("report".into(), "rep".into());
+        invoke(&store, &Consume, Json::Null, &in2, &out2, None).unwrap();
+        let rep = std::fs::read_to_string(store.dir("rep").join("report.json")).unwrap();
+        assert!(rep.contains('7'));
+        assert_eq!(store.meta("rep").unwrap().format, formats::REPORT);
+        assert_eq!(store.meta("rep").unwrap().producer, "consume");
+    }
+
+    #[test]
+    fn format_mismatch_is_rejected() {
+        let store = store();
+        // stage an artifact with the wrong format
+        store.stage("bad").unwrap();
+        store.commit("bad", formats::MODEL, "x", Json::Null).unwrap();
+        let mut in2 = PortMap::new();
+        in2.insert("data".into(), "bad".into());
+        let mut out2 = PortMap::new();
+        out2.insert("report".into(), "rep".into());
+        let err = invoke(&store, &Consume, Json::Null, &in2, &out2, None).unwrap_err();
+        assert!(err.contains("expects format"), "{err}");
+    }
+
+    #[test]
+    fn missing_input_is_rejected() {
+        let store = store();
+        let err = invoke(&store, &Consume, Json::Null, &PortMap::new(),
+                         &PortMap::new(), None)
+            .unwrap_err();
+        assert!(err.contains("unbound"));
+    }
+
+    #[test]
+    fn registry_finds_interchangeable_tools() {
+        let mut reg = Registry::new();
+        reg.register(Arc::new(MakeData));
+        reg.register(Arc::new(Consume));
+        assert!(reg.interchangeable_with("make-data").is_empty());
+        assert_eq!(reg.names(), vec!["consume", "make-data"]);
+    }
+}

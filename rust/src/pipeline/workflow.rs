@@ -1,0 +1,303 @@
+//! Workflows (paper §3.2): declarative JSON pipeline descriptions listing
+//! the tools to run and the artifacts to create. The executor resolves each
+//! step's tool against the registry, checks artifact availability, skips
+//! steps whose outputs already exist (incremental re-runs), and records a
+//! run log.
+//!
+//! Workflow JSON:
+//! ```json
+//! { "name": "kws-e2e",
+//!   "steps": [
+//!     { "tool": "speech-commands-import", "params": {"samples": 2000},
+//!       "inputs": {}, "outputs": {"data": "raw-speech"} },
+//!     { "tool": "mfcc-features",
+//!       "inputs": {"data": "raw-speech"}, "outputs": {"features": "mfcc"} }
+//!   ] }
+//! ```
+
+use super::artifact::{ArtifactStore, PortMap};
+use super::tool::{invoke, Registry};
+use crate::runtime::EngineHandle;
+use crate::util::json::Json;
+use std::sync::Arc;
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct Step {
+    pub tool: String,
+    pub params: Json,
+    pub inputs: PortMap,
+    pub outputs: PortMap,
+}
+
+#[derive(Debug, Clone)]
+pub struct Workflow {
+    pub name: String,
+    pub steps: Vec<Step>,
+}
+
+impl Workflow {
+    pub fn parse(text: &str) -> Result<Workflow, String> {
+        let v = Json::parse(text).map_err(|e| e.to_string())?;
+        Self::from_json(&v)
+    }
+
+    pub fn from_json(v: &Json) -> Result<Workflow, String> {
+        let name = v.get("name").as_str().unwrap_or("workflow").to_string();
+        let mut steps = Vec::new();
+        for s in v.get("steps").as_arr().ok_or("workflow needs steps[]")? {
+            let tool = s.get("tool").as_str().ok_or("step needs tool")?.to_string();
+            let port_map = |key: &str| -> PortMap {
+                s.get(key)
+                    .as_obj()
+                    .map(|o| {
+                        o.iter()
+                            .filter_map(|(k, v)| v.as_str().map(|s| (k.clone(), s.to_string())))
+                            .collect()
+                    })
+                    .unwrap_or_default()
+            };
+            steps.push(Step {
+                tool,
+                params: s.get("params").clone(),
+                inputs: port_map("inputs"),
+                outputs: port_map("outputs"),
+            });
+        }
+        Ok(Workflow { name, steps })
+    }
+
+    /// Static validation against a registry: tools exist, ports covered,
+    /// inputs are produced by earlier steps or pre-existing artifacts.
+    pub fn validate(&self, reg: &Registry, store: &ArtifactStore) -> Result<(), String> {
+        let mut produced: Vec<String> = Vec::new();
+        for (i, step) in self.steps.iter().enumerate() {
+            let tool = reg
+                .get(&step.tool)
+                .ok_or_else(|| format!("step {i}: unknown tool '{}'", step.tool))?;
+            for port in tool.inputs() {
+                let artifact = step
+                    .inputs
+                    .get(&port.name)
+                    .ok_or_else(|| format!("step {i} ({}): input '{}' unbound", step.tool, port.name))?;
+                if !produced.contains(artifact) && !store.exists(artifact) {
+                    return Err(format!(
+                        "step {i} ({}): input artifact '{artifact}' is neither produced by an earlier step nor present in the store",
+                        step.tool
+                    ));
+                }
+            }
+            for port in tool.outputs() {
+                let artifact = step
+                    .outputs
+                    .get(&port.name)
+                    .ok_or_else(|| format!("step {i} ({}): output '{}' unbound", step.tool, port.name))?;
+                produced.push(artifact.clone());
+            }
+        }
+        Ok(())
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct StepResult {
+    pub tool: String,
+    pub skipped: bool,
+    pub seconds: f64,
+    pub log: Vec<String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub workflow: String,
+    pub steps: Vec<StepResult>,
+    pub seconds: f64,
+}
+
+impl RunReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("workflow", Json::str(self.workflow.clone())),
+            ("seconds", Json::num(self.seconds)),
+            (
+                "steps",
+                Json::arr(
+                    self.steps
+                        .iter()
+                        .map(|s| {
+                            Json::obj(vec![
+                                ("tool", Json::str(s.tool.clone())),
+                                ("skipped", Json::Bool(s.skipped)),
+                                ("seconds", Json::num(s.seconds)),
+                                (
+                                    "log",
+                                    Json::arr(s.log.iter().map(|l| Json::str(l.clone())).collect()),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Execute a workflow. `force` re-runs steps whose outputs already exist.
+pub fn run(
+    wf: &Workflow,
+    reg: &Registry,
+    store: &ArtifactStore,
+    engine: Option<EngineHandle>,
+    force: bool,
+) -> Result<RunReport, String> {
+    wf.validate(reg, store)?;
+    let t_all = Instant::now();
+    let mut results = Vec::new();
+    for step in &wf.steps {
+        let tool = reg.get(&step.tool).expect("validated");
+        let have_all = !step.outputs.is_empty()
+            && step.outputs.values().all(|a| store.exists(a));
+        if have_all && !force {
+            eprintln!("  [skip] {} (outputs exist)", step.tool);
+            results.push(StepResult {
+                tool: step.tool.clone(),
+                skipped: true,
+                seconds: 0.0,
+                log: Vec::new(),
+            });
+            continue;
+        }
+        eprintln!("  [run ] {}", step.tool);
+        let t0 = Instant::now();
+        let log = invoke(
+            store,
+            tool.as_ref(),
+            step.params.clone(),
+            &step.inputs,
+            &step.outputs,
+            engine.clone(),
+        )
+        .map_err(|e| format!("step '{}': {e}", step.tool))?;
+        results.push(StepResult {
+            tool: step.tool.clone(),
+            skipped: false,
+            seconds: t0.elapsed().as_secs_f64(),
+            log,
+        });
+    }
+    Ok(RunReport {
+        workflow: wf.name.clone(),
+        steps: results,
+        seconds: t_all.elapsed().as_secs_f64(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::artifact::formats;
+    use crate::pipeline::tool::{Port, Tool, ToolCtx};
+
+    struct Producer;
+    impl Tool for Producer {
+        fn name(&self) -> &str {
+            "producer"
+        }
+        fn inputs(&self) -> Vec<Port> {
+            vec![]
+        }
+        fn outputs(&self) -> Vec<Port> {
+            vec![Port::new("out", formats::REPORT)]
+        }
+        fn run(&self, ctx: &mut ToolCtx) -> Result<(), String> {
+            std::fs::write(ctx.output("out")?.join("x.json"), "{}").map_err(|e| e.to_string())
+        }
+    }
+
+    struct Transformer;
+    impl Tool for Transformer {
+        fn name(&self) -> &str {
+            "transformer"
+        }
+        fn inputs(&self) -> Vec<Port> {
+            vec![Port::new("in", formats::REPORT)]
+        }
+        fn outputs(&self) -> Vec<Port> {
+            vec![Port::new("out", formats::REPORT)]
+        }
+        fn run(&self, ctx: &mut ToolCtx) -> Result<(), String> {
+            std::fs::copy(ctx.input("in")?.join("x.json"), ctx.output("out")?.join("x.json"))
+                .map(|_| ())
+                .map_err(|e| e.to_string())
+        }
+    }
+
+    fn setup() -> (Registry, ArtifactStore) {
+        let mut reg = Registry::new();
+        reg.register(Arc::new(Producer));
+        reg.register(Arc::new(Transformer));
+        let d = std::env::temp_dir().join(format!(
+            "bonseyes-wf-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        (reg, ArtifactStore::open(d).unwrap())
+    }
+
+    const WF: &str = r#"{
+      "name": "t",
+      "steps": [
+        {"tool": "producer", "outputs": {"out": "a"}},
+        {"tool": "transformer", "inputs": {"in": "a"}, "outputs": {"out": "b"}}
+      ]
+    }"#;
+
+    #[test]
+    fn parse_validate_run_skip() {
+        let (reg, store) = setup();
+        let wf = Workflow::parse(WF).unwrap();
+        wf.validate(&reg, &store).unwrap();
+        let rep = run(&wf, &reg, &store, None, false).unwrap();
+        assert!(rep.steps.iter().all(|s| !s.skipped));
+        assert!(store.exists("b"));
+        // second run skips everything
+        let rep2 = run(&wf, &reg, &store, None, false).unwrap();
+        assert!(rep2.steps.iter().all(|s| s.skipped));
+        // force re-runs
+        let rep3 = run(&wf, &reg, &store, None, true).unwrap();
+        assert!(rep3.steps.iter().all(|s| !s.skipped));
+    }
+
+    #[test]
+    fn validation_catches_dangling_input() {
+        let (reg, store) = setup();
+        let wf = Workflow::parse(
+            r#"{"name":"bad","steps":[{"tool":"transformer",
+                "inputs":{"in":"nope"},"outputs":{"out":"b"}}]}"#,
+        )
+        .unwrap();
+        let err = wf.validate(&reg, &store).unwrap_err();
+        assert!(err.contains("neither produced"), "{err}");
+    }
+
+    #[test]
+    fn validation_catches_unknown_tool() {
+        let (reg, store) = setup();
+        let wf = Workflow::parse(
+            r#"{"name":"bad","steps":[{"tool":"ghost","outputs":{}}]}"#,
+        )
+        .unwrap();
+        assert!(wf.validate(&reg, &store).unwrap_err().contains("unknown tool"));
+    }
+
+    #[test]
+    fn report_serializes() {
+        let (reg, store) = setup();
+        let wf = Workflow::parse(WF).unwrap();
+        let rep = run(&wf, &reg, &store, None, false).unwrap();
+        let j = rep.to_json();
+        assert_eq!(j.get("workflow").as_str(), Some("t"));
+        assert_eq!(j.get("steps").as_arr().unwrap().len(), 2);
+    }
+}

@@ -1,0 +1,216 @@
+//! QS-DNN (paper §6.2.4, Fig 11, [57]): RL-based search over the network-
+//! deployment design space. States are layer positions, actions are the
+//! applicable layer implementations; the agent learns per-(layer, impl)
+//! latency values from *measured* engine runs and converges to the
+//! fastest combination of primitives.
+//!
+//! Two-stage schedule as in Fig 11: a pure-exploration phase (uniform
+//! random assignments) followed by epsilon-greedy exploitation with
+//! decaying epsilon. Rewards are the negated measured per-layer times, so
+//! cross-plugin costs that show up in a layer's own wall time (e.g. int8
+//! quantize/dequantize of activations) are learned automatically.
+
+use crate::lne::engine::Prepared;
+use crate::lne::plugin::{Assignment, ConvImpl, DesignSpace};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+use std::collections::HashMap;
+
+#[derive(Debug, Clone)]
+pub struct QsDnnConfig {
+    /// Total episodes (paper Fig 11 uses 1000 on a larger space).
+    pub episodes: usize,
+    /// Pure-exploration episodes (paper: 500).
+    pub explore_episodes: usize,
+    pub epsilon_start: f64,
+    pub epsilon_end: f64,
+    /// EMA factor for Q updates.
+    pub alpha: f64,
+    pub seed: u64,
+}
+
+impl Default for QsDnnConfig {
+    fn default() -> Self {
+        QsDnnConfig {
+            episodes: 120,
+            explore_episodes: 40,
+            epsilon_start: 0.4,
+            epsilon_end: 0.02,
+            alpha: 0.35,
+            seed: 0,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct SearchOutcome {
+    pub best: Assignment,
+    pub best_ms: f64,
+    /// Total latency per episode (the Fig 11 learning curve).
+    pub episode_ms: Vec<f64>,
+    /// Learned per-(layer, impl) expected latency (ms).
+    pub q: HashMap<(usize, ConvImpl), f64>,
+}
+
+/// Run the QS-DNN search on a prepared model with calibration input `x`.
+pub fn search(p: &Prepared, x: &Tensor, cfg: &QsDnnConfig) -> SearchOutcome {
+    let space = DesignSpace::build(&p.graph, &p.platform);
+    let mut rng = Rng::new(cfg.seed);
+    let mut q: HashMap<(usize, ConvImpl), f64> = HashMap::new();
+    let mut counts: HashMap<(usize, ConvImpl), usize> = HashMap::new();
+    let mut episode_ms = Vec::with_capacity(cfg.episodes);
+    let mut best: Option<(Assignment, f64)> = None;
+
+    for ep in 0..cfg.episodes {
+        let explore = ep < cfg.explore_episodes;
+        let eps = if explore {
+            1.0
+        } else {
+            let t = (ep - cfg.explore_episodes) as f64
+                / (cfg.episodes - cfg.explore_episodes).max(1) as f64;
+            cfg.epsilon_start + (cfg.epsilon_end - cfg.epsilon_start) * t
+        };
+        // build an assignment: per layer, epsilon-greedy on learned Q
+        let mut a = Assignment::default_for(&p.graph);
+        for (layer, choices) in &space.layers {
+            let pick = if rng.f64() < eps {
+                *rng.choose(choices)
+            } else {
+                *choices
+                    .iter()
+                    .min_by(|&&c1, &&c2| {
+                        let q1 = q.get(&(*layer, c1)).copied().unwrap_or(f64::MAX);
+                        let q2 = q.get(&(*layer, c2)).copied().unwrap_or(f64::MAX);
+                        q1.partial_cmp(&q2).unwrap()
+                    })
+                    .unwrap()
+            };
+            a.choices[*layer] = Some(pick);
+        }
+        let run = p.run(x, &a);
+        // update Q with measured per-layer latency
+        for (layer, _) in &space.layers {
+            let choice = a.choices[*layer].unwrap();
+            let t = run.layer_ms[*layer];
+            let key = (*layer, choice);
+            let c = counts.entry(key).or_insert(0);
+            *c += 1;
+            let entry = q.entry(key).or_insert(t);
+            // first sample initializes; later samples EMA
+            if *c > 1 {
+                *entry = (1.0 - cfg.alpha) * *entry + cfg.alpha * t;
+            }
+        }
+        let total: f64 = run.layer_ms.iter().sum();
+        episode_ms.push(total);
+        if best.as_ref().map(|(_, b)| total < *b).unwrap_or(true) {
+            best = Some((a, total));
+        }
+    }
+    // final greedy assignment from Q (may beat any sampled episode)
+    let mut greedy = Assignment::default_for(&p.graph);
+    for (layer, choices) in &space.layers {
+        let pick = *choices
+            .iter()
+            .min_by(|&&c1, &&c2| {
+                let q1 = q.get(&(*layer, c1)).copied().unwrap_or(f64::MAX);
+                let q2 = q.get(&(*layer, c2)).copied().unwrap_or(f64::MAX);
+                q1.partial_cmp(&q2).unwrap()
+            })
+            .unwrap();
+        greedy.choices[*layer] = Some(pick);
+    }
+    let greedy_run = p.run(x, &greedy);
+    let greedy_ms: f64 = greedy_run.layer_ms.iter().sum();
+    let (best_a, best_ms) = best.unwrap();
+    let (best, best_ms) = if greedy_ms < best_ms {
+        (greedy, greedy_ms)
+    } else {
+        (best_a, best_ms)
+    };
+    SearchOutcome { best, best_ms, episode_ms, q }
+}
+
+/// Median latency of a fixed uniform assignment (baseline for comparisons).
+pub fn measure(p: &Prepared, x: &Tensor, a: &Assignment, reps: usize) -> f64 {
+    let mut times: Vec<f64> = (0..reps.max(1))
+        .map(|_| p.run(x, a).layer_ms.iter().sum())
+        .collect();
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times[times.len() / 2]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lne::graph::{Graph, LayerKind, Padding, Weights};
+    use crate::lne::platform::Platform;
+
+    fn model() -> (Graph, Weights, Tensor) {
+        let mut rng = Rng::new(0);
+        let mut g = Graph::new("q", (3, 16, 12));
+        g.push("conv1", LayerKind::Conv { k: (3, 3), stride: (1, 1), pad: Padding::Same, relu_fused: true }, 12);
+        g.push("conv2", LayerKind::Conv { k: (5, 5), stride: (1, 1), pad: Padding::Same, relu_fused: true }, 12);
+        g.push("conv3", LayerKind::Conv { k: (1, 1), stride: (1, 1), pad: Padding::Same, relu_fused: true }, 8);
+        let mut w = Weights::new();
+        w.insert("conv1".into(), vec![Tensor::randn(&[12, 3, 3, 3], 0.4, &mut rng), Tensor::zeros(&[12])]);
+        w.insert("conv2".into(), vec![Tensor::randn(&[12, 12, 5, 5], 0.3, &mut rng), Tensor::zeros(&[12])]);
+        w.insert("conv3".into(), vec![Tensor::randn(&[8, 12, 1, 1], 0.4, &mut rng), Tensor::zeros(&[8])]);
+        let x = Tensor::randn(&[1, 3, 16, 12], 1.0, &mut rng);
+        (g, w, x)
+    }
+
+    #[test]
+    fn search_beats_or_matches_every_uniform_library() {
+        let (g, w, x) = model();
+        let p = Prepared::new(g.clone(), w, Platform::pi4()).unwrap();
+        let cfg = QsDnnConfig { episodes: 60, explore_episodes: 25, ..Default::default() };
+        let out = search(&p, &x, &cfg);
+        let space = DesignSpace::build(&g, &p.platform);
+        for lib in [ConvImpl::GemmRef, ConvImpl::GemmBlocked, ConvImpl::Direct] {
+            let uni = space.uniform(&g, lib);
+            let t = measure(&p, &x, &uni, 3);
+            // allow 25% noise margin on a tiny model
+            assert!(
+                out.best_ms <= t * 1.25,
+                "{lib:?} uniform {t:.3}ms beat searched {:.3}ms",
+                out.best_ms
+            );
+        }
+        assert_eq!(out.episode_ms.len(), 60);
+    }
+
+    #[test]
+    fn learning_curve_improves_after_exploration() {
+        let (g, w, x) = model();
+        let p = Prepared::new(g, w, Platform::pi4()).unwrap();
+        let cfg = QsDnnConfig { episodes: 60, explore_episodes: 30, ..Default::default() };
+        let out = search(&p, &x, &cfg);
+        let explore_avg: f64 =
+            out.episode_ms[..30].iter().sum::<f64>() / 30.0;
+        let exploit_best = out.episode_ms[30..]
+            .iter()
+            .fold(f64::MAX, |m, &v| m.min(v));
+        assert!(
+            exploit_best <= explore_avg,
+            "exploit best {exploit_best} vs explore avg {explore_avg}"
+        );
+    }
+
+    #[test]
+    fn q_table_covers_design_space() {
+        let (g, w, x) = model();
+        let p = Prepared::new(g.clone(), w, Platform::pi4()).unwrap();
+        let cfg = QsDnnConfig { episodes: 80, explore_episodes: 50, ..Default::default() };
+        let out = search(&p, &x, &cfg);
+        let space = DesignSpace::build(&g, &p.platform);
+        for (layer, choices) in &space.layers {
+            for &c in choices {
+                assert!(
+                    out.q.contains_key(&(*layer, c)),
+                    "unexplored ({layer}, {c:?})"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,173 @@
+//! Thread-safe engine handle. The `xla` crate's PJRT objects are `!Send`
+//! (internal Rc), so a dedicated runner thread owns the `Engine` and the
+//! compiled executables; `EngineHandle` is a cloneable, Send+Sync RPC
+//! endpoint the serving path, the pipeline tools and the HTTP API share.
+//! Requests are serialized on the runner thread — XLA CPU parallelizes
+//! *inside* each executable, so a single submission lane is the right model.
+
+use super::{manifest::Manifest, Engine, Input};
+use anyhow::{anyhow, Result};
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+/// An owned input tensor (flat f32 + shape; empty shape = scalar).
+#[derive(Debug, Clone)]
+pub struct OwnedInput {
+    pub data: Vec<f32>,
+    pub shape: Vec<usize>,
+}
+
+impl OwnedInput {
+    pub fn new(data: Vec<f32>, shape: &[usize]) -> OwnedInput {
+        OwnedInput { data, shape: shape.to_vec() }
+    }
+    pub fn scalar(v: f32) -> OwnedInput {
+        OwnedInput { data: vec![v], shape: vec![] }
+    }
+}
+
+enum Req {
+    Run {
+        graph: String,
+        inputs: Vec<OwnedInput>,
+        resp: mpsc::Sender<Result<Vec<Vec<f32>>>>,
+    },
+    /// Compile+run an HLO file outside the manifest (NAS candidates).
+    RunFile {
+        path: PathBuf,
+        inputs: Vec<OwnedInput>,
+        resp: mpsc::Sender<Result<Vec<Vec<f32>>>>,
+    },
+    /// Pre-compile a graph so later Run calls are warm.
+    Warm {
+        graph: String,
+        resp: mpsc::Sender<Result<()>>,
+    },
+}
+
+#[derive(Clone)]
+pub struct EngineHandle {
+    tx: mpsc::Sender<Req>,
+    pub manifest: Arc<Manifest>,
+    artifacts_dir: PathBuf,
+    // serialize senders so responses pair with requests
+    lock: Arc<Mutex<()>>,
+}
+
+impl EngineHandle {
+    /// Spawn the runner thread over an artifacts directory.
+    pub fn spawn(artifacts_dir: impl Into<PathBuf>) -> Result<EngineHandle> {
+        Self::spawn_with_manifest(artifacts_dir, "manifest.json")
+    }
+
+    /// Spawn with a non-default manifest file (NAS candidate directories).
+    pub fn spawn_with_manifest(
+        artifacts_dir: impl Into<PathBuf>,
+        manifest_file: &str,
+    ) -> Result<EngineHandle> {
+        let dir: PathBuf = artifacts_dir.into();
+        let manifest = Manifest::load(&dir.join(manifest_file))?;
+        let (tx, rx) = mpsc::channel::<Req>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let dir2 = dir.clone();
+        let manifest2 = manifest.clone();
+        std::thread::Builder::new()
+            .name("bonseyes-pjrt".into())
+            .spawn(move || {
+                let engine = match Engine::open_with_manifest(&dir2, manifest2) {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                let mut file_cache: std::collections::HashMap<PathBuf, super::Executable> =
+                    std::collections::HashMap::new();
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Req::Run { graph, inputs, resp } => {
+                            let result = engine.load(&graph).and_then(|exe| {
+                                let ins: Vec<Input> = inputs
+                                    .iter()
+                                    .map(|i| Input::new(&i.data, &i.shape))
+                                    .collect();
+                                exe.run(&ins)
+                            });
+                            let _ = resp.send(result);
+                        }
+                        Req::RunFile { path, inputs, resp } => {
+                            let result = (|| {
+                                if !file_cache.contains_key(&path) {
+                                    let name = path.to_string_lossy().into_owned();
+                                    let exe = engine.compile_file(&path, &name)?;
+                                    file_cache.insert(path.clone(), exe);
+                                }
+                                let exe = file_cache.get(&path).unwrap();
+                                let ins: Vec<Input> = inputs
+                                    .iter()
+                                    .map(|i| Input::new(&i.data, &i.shape))
+                                    .collect();
+                                exe.run(&ins)
+                            })();
+                            let _ = resp.send(result);
+                        }
+                        Req::Warm { graph, resp } => {
+                            let _ = resp.send(engine.load(&graph).map(|_| ()));
+                        }
+                    }
+                }
+            })?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("engine thread died during startup"))??;
+        Ok(EngineHandle {
+            tx,
+            manifest: Arc::new(manifest),
+            artifacts_dir: dir,
+            lock: Arc::new(Mutex::new(())),
+        })
+    }
+
+    pub fn artifacts_dir(&self) -> &PathBuf {
+        &self.artifacts_dir
+    }
+
+    /// Execute a manifest graph with owned inputs.
+    pub fn run(&self, graph: &str, inputs: Vec<OwnedInput>) -> Result<Vec<Vec<f32>>> {
+        let _g = self.lock.lock().unwrap();
+        let (resp, rx) = mpsc::channel();
+        self.tx
+            .send(Req::Run { graph: graph.to_string(), inputs, resp })
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("engine thread gone"))?
+    }
+
+    /// Execute an HLO text file (NAS candidate) with owned inputs.
+    pub fn run_file(&self, path: impl Into<PathBuf>, inputs: Vec<OwnedInput>) -> Result<Vec<Vec<f32>>> {
+        let _g = self.lock.lock().unwrap();
+        let (resp, rx) = mpsc::channel();
+        self.tx
+            .send(Req::RunFile { path: path.into(), inputs, resp })
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("engine thread gone"))?
+    }
+
+    /// Pre-compile a graph (serving startup).
+    pub fn warm(&self, graph: &str) -> Result<()> {
+        let _g = self.lock.lock().unwrap();
+        let (resp, rx) = mpsc::channel();
+        self.tx
+            .send(Req::Warm { graph: graph.to_string(), resp })
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("engine thread gone"))?
+    }
+
+    /// Read a flat f32 blob from the artifacts directory.
+    pub fn read_blob(&self, file: &str) -> Result<Vec<f32>> {
+        super::read_f32_file(&self.artifacts_dir.join(file))
+    }
+}

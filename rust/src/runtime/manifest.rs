@@ -1,0 +1,311 @@
+//! Artifact manifest: typed view over artifacts/manifest.json written by
+//! python/compile/aot.py. The manifest is the contract between the compile
+//! path (python, build-time) and the request path (rust, runtime): graph IO
+//! shapes plus the flat-state layout that lets rust tools address individual
+//! parameter tensors (quantize/sparsify/checkpoint).
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct GraphMeta {
+    pub name: String,
+    pub file: String,
+    pub kind: String, // "mfcc" | "infer" | "train"
+    pub arch: Option<String>,
+    pub batch: usize,
+    pub inputs: Vec<TensorMeta>,
+    pub outputs: Vec<TensorMeta>,
+}
+
+/// One entry of the flat-state layout: a named tensor at [offset, offset+size).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayoutEntry {
+    pub name: String,
+    pub kind: String, // conv_w | dw_w | fc_w | bias | bn_gamma | bn_beta | stat
+    pub offset: usize,
+    pub size: usize,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArchMeta {
+    pub name: String,
+    pub arch_type: String, // "cnn" | "ds_cnn"
+    pub convs: Vec<(Vec<usize>, usize)>, // (kernel [kh,kw], out channels)
+    pub n_params: usize,
+    pub n_stats: usize,
+    pub param_layout: Vec<LayoutEntry>,
+    pub stats_layout: Vec<LayoutEntry>,
+    pub init_file: String,
+    pub init_stats_file: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct TrainCfg {
+    pub base_lr: f64,
+    pub gamma: f64,
+    pub lr_step: usize,
+    pub batch: usize,
+    pub iterations: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub mel_bands: usize,
+    pub frames: usize,
+    pub samples: usize,
+    pub sample_rate: usize,
+    pub num_classes: usize,
+    pub classes: Vec<String>,
+    pub train_cfg: TrainCfg,
+    pub graphs: Vec<GraphMeta>,
+    pub archs: BTreeMap<String, ArchMeta>,
+}
+
+fn tensor_meta(v: &Json) -> Result<TensorMeta> {
+    Ok(TensorMeta {
+        name: v.get("name").as_str().unwrap_or("").to_string(),
+        shape: v
+            .get("shape")
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(|d| d.as_usize().unwrap_or(0))
+            .collect(),
+        dtype: v.get("dtype").as_str().unwrap_or("f32").to_string(),
+    })
+}
+
+fn layout_entry(v: &Json) -> Result<LayoutEntry> {
+    Ok(LayoutEntry {
+        name: v.get("name").as_str().unwrap_or("").to_string(),
+        kind: v.get("kind").as_str().unwrap_or("stat").to_string(),
+        offset: v.get("offset").as_usize().ok_or_else(|| anyhow!("offset"))?,
+        size: v.get("size").as_usize().ok_or_else(|| anyhow!("size"))?,
+        shape: v
+            .get("shape")
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(|d| d.as_usize().unwrap_or(0))
+            .collect(),
+    })
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read manifest {path:?}"))?;
+        Self::parse(&text).with_context(|| format!("parse manifest {path:?}"))
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let v = Json::parse(text).map_err(|e| anyhow!("{e}"))?;
+        let tc = v.get("train_cfg");
+        let train_cfg = TrainCfg {
+            base_lr: tc.get("base_lr").as_f64().unwrap_or(5e-3),
+            gamma: tc.get("gamma").as_f64().unwrap_or(0.3),
+            lr_step: tc.get("lr_step").as_usize().unwrap_or(250),
+            batch: tc.get("batch").as_usize().unwrap_or(32),
+            iterations: tc.get("iterations").as_usize().unwrap_or(1000),
+        };
+        let graphs = v
+            .get("graphs")
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(|g| -> Result<GraphMeta> {
+                Ok(GraphMeta {
+                    name: g.get("name").as_str().unwrap_or("").to_string(),
+                    file: g.get("file").as_str().unwrap_or("").to_string(),
+                    kind: g.get("kind").as_str().unwrap_or("").to_string(),
+                    arch: g.get("arch").as_str().map(|s| s.to_string()),
+                    batch: g.get("batch").as_usize().unwrap_or(1),
+                    inputs: g
+                        .get("inputs")
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .map(tensor_meta)
+                        .collect::<Result<_>>()?,
+                    outputs: g
+                        .get("outputs")
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .map(tensor_meta)
+                        .collect::<Result<_>>()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let mut archs = BTreeMap::new();
+        if let Some(obj) = v.get("archs").as_obj() {
+            for (name, a) in obj {
+                let convs = a
+                    .get("convs")
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(|c| {
+                        let k: Vec<usize> = c
+                            .get("k")
+                            .as_arr()
+                            .unwrap_or(&[])
+                            .iter()
+                            .map(|d| d.as_usize().unwrap_or(1))
+                            .collect();
+                        (k, c.get("c").as_usize().unwrap_or(1))
+                    })
+                    .collect();
+                archs.insert(
+                    name.clone(),
+                    ArchMeta {
+                        name: name.clone(),
+                        arch_type: a.get("type").as_str().unwrap_or("cnn").to_string(),
+                        convs,
+                        n_params: a.get("n_params").as_usize().unwrap_or(0),
+                        n_stats: a.get("n_stats").as_usize().unwrap_or(0),
+                        param_layout: a
+                            .get("param_layout")
+                            .as_arr()
+                            .unwrap_or(&[])
+                            .iter()
+                            .map(layout_entry)
+                            .collect::<Result<_>>()?,
+                        stats_layout: a
+                            .get("stats_layout")
+                            .as_arr()
+                            .unwrap_or(&[])
+                            .iter()
+                            .map(layout_entry)
+                            .collect::<Result<_>>()?,
+                        init_file: a.get("init_file").as_str().unwrap_or("").to_string(),
+                        init_stats_file: a
+                            .get("init_stats_file")
+                            .as_str()
+                            .unwrap_or("")
+                            .to_string(),
+                    },
+                );
+            }
+        }
+        Ok(Manifest {
+            mel_bands: v.get("mel_bands").as_usize().unwrap_or(40),
+            frames: v.get("frames").as_usize().unwrap_or(32),
+            samples: v.get("samples").as_usize().unwrap_or(16000),
+            sample_rate: v.get("sample_rate").as_usize().unwrap_or(16000),
+            num_classes: v.get("num_classes").as_usize().unwrap_or(12),
+            classes: v
+                .get("classes")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|c| c.as_str().map(|s| s.to_string()))
+                .collect(),
+            train_cfg,
+            graphs,
+            archs,
+        })
+    }
+
+    pub fn graph(&self, name: &str) -> Option<&GraphMeta> {
+        self.graphs.iter().find(|g| g.name == name)
+    }
+
+    pub fn arch(&self, name: &str) -> Option<&ArchMeta> {
+        self.archs.get(name)
+    }
+
+    /// Graph name for (arch, kind, batch), e.g. infer graph at a batch bucket.
+    pub fn find_graph(&self, arch: &str, kind: &str, batch: usize) -> Option<&GraphMeta> {
+        self.graphs
+            .iter()
+            .find(|g| g.kind == kind && g.arch.as_deref() == Some(arch) && g.batch == batch)
+    }
+
+    /// Available infer batch buckets for an arch, ascending.
+    pub fn infer_batches(&self, arch: &str) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .graphs
+            .iter()
+            .filter(|g| g.kind == "infer" && g.arch.as_deref() == Some(arch))
+            .map(|g| g.batch)
+            .collect();
+        v.sort();
+        v
+    }
+}
+
+impl ArchMeta {
+    /// Layout entry by tensor name.
+    pub fn param(&self, name: &str) -> Option<&LayoutEntry> {
+        self.param_layout.iter().find(|e| e.name == name)
+    }
+
+    /// All weight tensors (conv/dw/fc), the targets of quantize/sparsify.
+    pub fn weight_entries(&self) -> impl Iterator<Item = &LayoutEntry> {
+        self.param_layout
+            .iter()
+            .filter(|e| matches!(e.kind.as_str(), "conv_w" | "dw_w" | "fc_w"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "mel_bands": 40, "frames": 32, "samples": 16000, "sample_rate": 16000,
+      "num_classes": 12, "classes": ["yes","no"],
+      "train_cfg": {"base_lr": 0.005, "gamma": 0.3, "lr_step": 250,
+                    "batch": 32, "iterations": 1000},
+      "graphs": [
+        {"name": "mfcc_b1", "file": "mfcc_b1.hlo.txt", "kind": "mfcc",
+         "batch": 1,
+         "inputs": [{"name": "audio", "shape": [1, 16000], "dtype": "f32"}],
+         "outputs": [{"name": "mfcc", "shape": [1, 40, 32], "dtype": "f32"}]},
+        {"name": "a_infer_b8", "file": "a_infer_b8.hlo.txt", "kind": "infer",
+         "arch": "a", "batch": 8, "inputs": [], "outputs": []}
+      ],
+      "archs": {"a": {"type": "cnn",
+        "convs": [{"k": [3,3], "c": 10}],
+        "n_params": 100, "n_stats": 20,
+        "param_layout": [{"name": "conv1_w", "kind": "conv_w", "offset": 0,
+                          "size": 90, "shape": [10,1,3,3]},
+                         {"name": "conv1_b", "kind": "bias", "offset": 90,
+                          "size": 10, "shape": [10]}],
+        "stats_layout": [],
+        "init_file": "a_init.bin", "init_stats_file": "a_s.bin"}}
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.num_classes, 12);
+        assert_eq!(m.graphs.len(), 2);
+        assert_eq!(m.graph("mfcc_b1").unwrap().inputs[0].shape, vec![1, 16000]);
+        let a = m.arch("a").unwrap();
+        assert_eq!(a.n_params, 100);
+        assert_eq!(a.param("conv1_w").unwrap().size, 90);
+        assert_eq!(a.weight_entries().count(), 1);
+        assert_eq!(m.find_graph("a", "infer", 8).unwrap().name, "a_infer_b8");
+        assert_eq!(m.infer_batches("a"), vec![8]);
+    }
+
+    #[test]
+    fn missing_fields_default() {
+        let m = Manifest::parse(r#"{"graphs": [], "archs": {}}"#).unwrap();
+        assert_eq!(m.mel_bands, 40);
+        assert!(m.graph("x").is_none());
+    }
+}

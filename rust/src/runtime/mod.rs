@@ -1,0 +1,167 @@
+//! PJRT runtime: load AOT HLO-text artifacts produced by `python/compile/aot.py`
+//! and execute them from the rust request path (python is never involved).
+//!
+//! Pattern (see /opt/xla-example/load_hlo): `PjRtClient::cpu()` ->
+//! `HloModuleProto::from_text_file` -> `client.compile` -> `execute`.
+//! The AOT side lowers with `return_tuple=True`, so every executable
+//! returns one tuple literal which we decompose into flat f32 vectors.
+
+pub mod handle;
+pub mod manifest;
+
+pub use handle::{EngineHandle, OwnedInput};
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+pub use manifest::{ArchMeta, GraphMeta, Manifest, TensorMeta};
+
+/// One input value for an executable: a flat f32 buffer + logical shape.
+#[derive(Debug, Clone)]
+pub struct Input<'a> {
+    pub data: &'a [f32],
+    pub shape: Vec<i64>,
+}
+
+impl<'a> Input<'a> {
+    pub fn new(data: &'a [f32], shape: &[usize]) -> Input<'a> {
+        Input { data, shape: shape.iter().map(|&d| d as i64).collect() }
+    }
+    pub fn scalar(v: &'a f32) -> Input<'a> {
+        Input { data: std::slice::from_ref(v), shape: vec![] }
+    }
+}
+
+/// A compiled PJRT executable.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with flat f32 inputs; returns one flat f32 vector per output.
+    pub fn run(&self, inputs: &[Input]) -> Result<Vec<Vec<f32>>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|inp| -> Result<xla::Literal> {
+                if inp.shape.is_empty() {
+                    Ok(xla::Literal::scalar(inp.data[0]))
+                } else {
+                    let lit = xla::Literal::vec1(inp.data);
+                    Ok(lit.reshape(&inp.shape)?)
+                }
+            })
+            .collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("execute {}", self.name))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetch result of {}", self.name))?;
+        let parts = out.to_tuple()?;
+        parts
+            .into_iter()
+            .map(|lit| Ok(lit.to_vec::<f32>()?))
+            .collect()
+    }
+}
+
+/// The PJRT engine: owns the client and a cache of compiled executables.
+pub struct Engine {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+}
+
+impl Engine {
+    /// Open `artifacts_dir` (must contain manifest.json) on the CPU client.
+    pub fn open(artifacts_dir: impl AsRef<Path>) -> Result<Engine> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir.join("manifest.json"))?;
+        Ok(Engine {
+            client: xla::PjRtClient::cpu()?,
+            artifacts_dir: dir,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Open with an explicit manifest (used for NAS candidate directories).
+    pub fn open_with_manifest(dir: impl AsRef<Path>, manifest: Manifest) -> Result<Engine> {
+        Ok(Engine {
+            client: xla::PjRtClient::cpu()?,
+            artifacts_dir: dir.as_ref().to_path_buf(),
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.artifacts_dir
+    }
+
+    /// Compile (or fetch from cache) the graph named in the manifest.
+    pub fn load(&self, graph_name: &str) -> Result<std::sync::Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(graph_name) {
+            return Ok(std::sync::Arc::clone(e));
+        }
+        let meta = self
+            .manifest
+            .graph(graph_name)
+            .ok_or_else(|| anyhow!("graph '{graph_name}' not in manifest"))?;
+        let path = self.artifacts_dir.join(&meta.file);
+        let exe = self.compile_file(&path, graph_name)?;
+        let arc = std::sync::Arc::new(exe);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(graph_name.to_string(), std::sync::Arc::clone(&arc));
+        Ok(arc)
+    }
+
+    /// Compile an HLO text file outside the manifest (NAS candidates).
+    pub fn compile_file(&self, path: &Path, name: &str) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parse HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {path:?}"))?;
+        Ok(Executable { exe, name: name.to_string() })
+    }
+
+    /// Read a flat f32 little-endian blob (init params/stats).
+    pub fn read_f32_blob(&self, file: &str) -> Result<Vec<f32>> {
+        read_f32_file(&self.artifacts_dir.join(file))
+    }
+}
+
+pub fn read_f32_file(path: &Path) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path).with_context(|| format!("read {path:?}"))?;
+    if bytes.len() % 4 != 0 {
+        return Err(anyhow!("{path:?}: length {} not a multiple of 4", bytes.len()));
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+pub fn write_f32_file(path: &Path, data: &[f32]) -> Result<()> {
+    let mut bytes = Vec::with_capacity(data.len() * 4);
+    for &x in data {
+        bytes.extend_from_slice(&x.to_le_bytes());
+    }
+    std::fs::write(path, bytes).with_context(|| format!("write {path:?}"))
+}

@@ -1,0 +1,248 @@
+//! Dynamic batcher: coalesces concurrent requests into the compiled batch
+//! buckets. Policy: flush when the largest bucket fills, or when the oldest
+//! queued request has waited `max_wait_ms` (latency SLO knob).
+
+use super::metrics::ServingMetrics;
+use super::ServableModel;
+use crate::runtime::{EngineHandle, OwnedInput};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct Prediction {
+    pub class_id: usize,
+    pub class: String,
+    pub scores: Vec<f32>,
+    /// Time spent queued + batched + executed, server side.
+    pub latency_ms: f64,
+    pub batch_size: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    /// Flush deadline for the oldest queued request.
+    pub max_wait_ms: f64,
+    /// Upper bound on coalesced batch (clamped to the largest bucket).
+    pub max_batch: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_wait_ms: 5.0, max_batch: 32 }
+    }
+}
+
+struct Job {
+    audio: Vec<f32>,
+    enqueued: Instant,
+    resp: mpsc::Sender<Result<Prediction, String>>,
+}
+
+pub struct Batcher {
+    tx: mpsc::Sender<Job>,
+}
+
+impl Batcher {
+    pub fn start(
+        engine: EngineHandle,
+        model: ServableModel,
+        cfg: BatcherConfig,
+        metrics: Arc<ServingMetrics>,
+    ) -> anyhow::Result<Batcher> {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let mut buckets = engine.manifest.infer_batches(&model.arch);
+        if buckets.is_empty() {
+            anyhow::bail!("no infer graphs for {}", model.arch);
+        }
+        buckets.sort_unstable();
+        std::thread::Builder::new()
+            .name(format!("batcher-{}", model.arch))
+            .spawn(move || batch_loop(engine, model, cfg, buckets, rx, metrics))?;
+        Ok(Batcher { tx })
+    }
+
+    /// Submit one request; blocks until its prediction is ready.
+    pub fn submit(&self, audio: Vec<f32>) -> Result<Prediction, String> {
+        let (resp, rx) = mpsc::channel();
+        self.tx
+            .send(Job { audio, enqueued: Instant::now(), resp })
+            .map_err(|_| "batcher stopped".to_string())?;
+        rx.recv().map_err(|_| "batcher dropped request".to_string())?
+    }
+}
+
+fn batch_loop(
+    engine: EngineHandle,
+    model: ServableModel,
+    cfg: BatcherConfig,
+    buckets: Vec<usize>,
+    rx: mpsc::Receiver<Job>,
+    metrics: Arc<ServingMetrics>,
+) {
+    let max_batch = cfg.max_batch.min(*buckets.last().unwrap());
+    let wait = Duration::from_secs_f64(cfg.max_wait_ms / 1e3);
+    let mut pending: Vec<Job> = Vec::new();
+    loop {
+        // block for the first job
+        if pending.is_empty() {
+            match rx.recv() {
+                Ok(j) => pending.push(j),
+                Err(_) => return, // all senders gone
+            }
+        }
+        // first, drain everything already queued (requests that piled up
+        // while the previous batch was executing)
+        while pending.len() < max_batch {
+            match rx.try_recv() {
+                Ok(j) => pending.push(j),
+                Err(_) => break,
+            }
+        }
+        // then coalesce until the flush deadline (measured from pickup so a
+        // long prior batch doesn't force size-1 flushes) or until full
+        let deadline = Instant::now() + wait;
+        while pending.len() < max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(j) => pending.push(j),
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        // waste-aware bucket choice: padding up to the next bucket costs
+        // (bucket - n) wasted lanes; processing only the bucket below
+        // defers (n - b_down) requests to the next flush (~small constant
+        // overhead). Pick whichever wastes less.
+        let n = pending.len().min(max_batch);
+        let b_up = buckets.iter().copied().find(|&b| b >= n);
+        let b_down = buckets.iter().copied().filter(|&b| b <= n).next_back();
+        const DEFER_OVERHEAD: usize = 2;
+        let bucket = match (b_up, b_down) {
+            (Some(up), Some(down)) => {
+                if up - n <= (n - down) + DEFER_OVERHEAD {
+                    up
+                } else {
+                    down
+                }
+            }
+            (Some(up), None) => up,
+            (None, Some(down)) => down,
+            (None, None) => unreachable!("buckets non-empty"),
+        };
+        let take = n.min(bucket);
+        let batch: Vec<Job> = pending.drain(..take).collect();
+        let queue_ms = batch
+            .iter()
+            .map(|j| j.enqueued.elapsed().as_secs_f64() * 1e3)
+            .fold(0.0, f64::max);
+        let t0 = Instant::now();
+        let result = run_batch(&engine, &model, bucket, &batch);
+        let infer_ms = t0.elapsed().as_secs_f64() * 1e3;
+        metrics.record_batch(batch.len(), queue_ms, infer_ms);
+        match result {
+            Ok(mut preds) => {
+                for (job, mut p) in batch.into_iter().zip(preds.drain(..)) {
+                    p.latency_ms = job.enqueued.elapsed().as_secs_f64() * 1e3;
+                    p.batch_size = take;
+                    let _ = job.resp.send(Ok(p));
+                }
+            }
+            Err(e) => {
+                for job in batch {
+                    let _ = job.resp.send(Err(e.clone()));
+                }
+            }
+        }
+    }
+}
+
+fn run_batch(
+    engine: &EngineHandle,
+    model: &ServableModel,
+    bucket: usize,
+    jobs: &[Job],
+) -> Result<Vec<Prediction>, String> {
+    let m = &engine.manifest;
+    let samples = m.samples;
+    let nc = m.num_classes;
+    let arch = m.arch(&model.arch).ok_or("arch missing")?;
+    let mut audio = vec![0.0f32; bucket * samples];
+    for (i, j) in jobs.iter().enumerate() {
+        if j.audio.len() != samples {
+            return Err(format!("audio must be {samples} samples, got {}", j.audio.len()));
+        }
+        audio[i * samples..(i + 1) * samples].copy_from_slice(&j.audio);
+    }
+    // MFCC front-end (pallas kernel) at the same bucket when compiled,
+    // else fall back to chunked compute
+    let feat = m.mel_bands * m.frames;
+    let mfcc = if m.graph(&format!("mfcc_b{bucket}")).is_some() {
+        engine
+            .run(&format!("mfcc_b{bucket}"), vec![OwnedInput::new(audio, &[bucket, samples])])
+            .map_err(|e| e.to_string())?
+            .remove(0)
+    } else {
+        crate::ingestion::tools::MfccTool::compute(engine, &audio, bucket)?
+    };
+    let out = engine
+        .run(
+            &format!("{}_infer_b{bucket}", model.arch),
+            vec![
+                OwnedInput::new(model.params.as_ref().clone(), &[arch.n_params]),
+                OwnedInput::new(model.stats.as_ref().clone(), &[arch.n_stats]),
+                OwnedInput::new(mfcc, &[bucket, m.mel_bands, m.frames]),
+            ],
+        )
+        .map_err(|e| e.to_string())?;
+    let logits = &out[0];
+    let preds = (0..jobs.len())
+        .map(|i| {
+            let row = &logits[i * nc..(i + 1) * nc];
+            let scores = softmax(row);
+            let class_id = argmax(&scores);
+            Prediction {
+                class_id,
+                class: m
+                    .classes
+                    .get(class_id)
+                    .cloned()
+                    .unwrap_or_else(|| format!("class{class_id}")),
+                scores,
+                latency_ms: 0.0,
+                batch_size: 0,
+            }
+        })
+        .collect();
+    Ok(preds)
+}
+
+fn softmax(row: &[f32]) -> Vec<f32> {
+    let max = row.iter().fold(f32::MIN, |m, &v| m.max(v));
+    let exps: Vec<f32> = row.iter().map(|&v| (v - max).exp()).collect();
+    let sum: f32 = exps.iter().sum();
+    exps.into_iter().map(|e| e / sum).collect()
+}
+
+fn argmax(v: &[f32]) -> usize {
+    v.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_and_argmax() {
+        let s = softmax(&[0.0, 2.0, 1.0]);
+        assert!((s.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert_eq!(argmax(&s), 1);
+    }
+}

@@ -1,0 +1,61 @@
+//! Serving metrics: request/batch counters + latency distributions.
+
+use crate::util::json::Json;
+use crate::util::stats::Welford;
+use std::sync::Mutex;
+
+#[derive(Default)]
+pub struct ServingMetrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Default)]
+struct Inner {
+    requests: u64,
+    batches: u64,
+    queue_ms: Welford,
+    infer_ms: Welford,
+    batch_size: Welford,
+}
+
+impl ServingMetrics {
+    pub fn record_batch(&self, size: usize, queue_ms: f64, infer_ms: f64) {
+        let mut i = self.inner.lock().unwrap();
+        i.requests += size as u64;
+        i.batches += 1;
+        i.queue_ms.push(queue_ms);
+        i.infer_ms.push(infer_ms);
+        i.batch_size.push(size as f64);
+    }
+
+    pub fn snapshot(&self) -> Json {
+        let i = self.inner.lock().unwrap();
+        Json::obj(vec![
+            ("requests", Json::from(i.requests as i64)),
+            ("batches", Json::from(i.batches as i64)),
+            ("mean_batch_size", Json::num(i.batch_size.mean())),
+            ("queue_ms_mean", Json::num(i.queue_ms.mean())),
+            ("queue_ms_max", Json::num(i.queue_ms.max)),
+            ("infer_ms_mean", Json::num(i.infer_ms.mean())),
+            ("infer_ms_std", Json::num(i.infer_ms.std())),
+            ("infer_ms_max", Json::num(i.infer_ms.max)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_aggregates() {
+        let m = ServingMetrics::default();
+        m.record_batch(8, 1.0, 10.0);
+        m.record_batch(4, 3.0, 6.0);
+        let s = m.snapshot();
+        assert_eq!(s.get("requests").as_i64(), Some(12));
+        assert_eq!(s.get("batches").as_i64(), Some(2));
+        assert!((s.get("mean_batch_size").as_f64().unwrap() - 6.0).abs() < 1e-9);
+        assert!((s.get("infer_ms_mean").as_f64().unwrap() - 8.0).abs() < 1e-9);
+    }
+}

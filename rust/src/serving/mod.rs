@@ -1,0 +1,156 @@
+//! KWS serving runtime: request router + dynamic batcher over the AOT PJRT
+//! executables. This is the "AI application on the device" the paper's IoT
+//! stage integrates (§7): audio in, keyword scores out, python nowhere on
+//! the path.
+//!
+//! Requests are routed per model to a batcher thread that coalesces them
+//! into the compiled batch buckets (1/8/32) with a flush deadline; each
+//! batch runs MFCC (pallas kernel) + inference through the engine handle.
+
+pub mod batcher;
+pub mod metrics;
+pub mod server;
+
+pub use batcher::{Batcher, BatcherConfig, Prediction};
+pub use metrics::ServingMetrics;
+pub use server::KwsServer;
+
+use crate::runtime::EngineHandle;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// A servable model: trained flat state for one architecture.
+#[derive(Clone)]
+pub struct ServableModel {
+    pub arch: String,
+    pub params: Arc<Vec<f32>>,
+    pub stats: Arc<Vec<f32>>,
+}
+
+impl ServableModel {
+    /// Load the He-init state from the artifacts (untrained; smoke/testing).
+    pub fn from_init(engine: &EngineHandle, arch: &str) -> anyhow::Result<ServableModel> {
+        let meta = engine
+            .manifest
+            .arch(arch)
+            .ok_or_else(|| anyhow::anyhow!("unknown arch {arch}"))?;
+        Ok(ServableModel {
+            arch: arch.to_string(),
+            params: Arc::new(engine.read_blob(&meta.init_file)?),
+            stats: Arc::new(engine.read_blob(&meta.init_stats_file)?),
+        })
+    }
+
+    /// Load from a trained model artifact directory.
+    pub fn from_artifact(dir: &std::path::Path) -> Result<ServableModel, String> {
+        let m = crate::training::tools::load_model(dir)?;
+        Ok(ServableModel {
+            arch: m.arch,
+            params: Arc::new(m.params),
+            stats: Arc::new(m.stats),
+        })
+    }
+}
+
+/// The router: one batcher per registered model; dispatch by model name.
+pub struct Router {
+    pub engine: EngineHandle,
+    batchers: BTreeMap<String, Batcher>,
+    pub default_model: String,
+    pub metrics: Arc<ServingMetrics>,
+}
+
+impl Router {
+    pub fn new(engine: EngineHandle) -> Router {
+        Router {
+            engine,
+            batchers: BTreeMap::new(),
+            default_model: String::new(),
+            metrics: Arc::new(ServingMetrics::default()),
+        }
+    }
+
+    pub fn register(&mut self, model: ServableModel, cfg: BatcherConfig) -> anyhow::Result<()> {
+        let name = model.arch.clone();
+        // warm the executables this model will use
+        for b in self.engine.manifest.infer_batches(&name) {
+            self.engine.warm(&format!("{name}_infer_b{b}"))?;
+            let _ = self.engine.warm(&format!("mfcc_b{b}"));
+        }
+        let batcher = Batcher::start(
+            self.engine.clone(),
+            model,
+            cfg,
+            Arc::clone(&self.metrics),
+        )?;
+        if self.default_model.is_empty() {
+            self.default_model = name.clone();
+        }
+        self.batchers.insert(name, batcher);
+        Ok(())
+    }
+
+    pub fn models(&self) -> Vec<String> {
+        self.batchers.keys().cloned().collect()
+    }
+
+    /// Route one request (blocking until the prediction is ready).
+    pub fn infer(&self, model: Option<&str>, audio: Vec<f32>) -> Result<Prediction, String> {
+        let name = model.unwrap_or(&self.default_model);
+        let b = self
+            .batchers
+            .get(name)
+            .ok_or_else(|| format!("model '{name}' not registered"))?;
+        b.submit(audio)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn artifacts() -> Option<PathBuf> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            Some(dir)
+        } else {
+            eprintln!("SKIP: artifacts not built");
+            None
+        }
+    }
+
+    #[test]
+    fn router_routes_and_batches() {
+        let Some(dir) = artifacts() else { return };
+        let engine = EngineHandle::spawn(dir).unwrap();
+        let mut router = Router::new(engine.clone());
+        let model = ServableModel::from_init(&engine, "ds_kws9").unwrap();
+        router
+            .register(model, BatcherConfig { max_wait_ms: 2.0, ..Default::default() })
+            .unwrap();
+        let samples = engine.manifest.samples;
+        // concurrent requests exercise batching
+        std::thread::scope(|s| {
+            let router = &router;
+            let handles: Vec<_> = (0..10)
+                .map(|i| {
+                    s.spawn(move || {
+                        router
+                            .infer(None, vec![0.01 * i as f32; samples])
+                            .unwrap()
+                    })
+                })
+                .collect();
+            for h in handles {
+                let p = h.join().unwrap();
+                assert_eq!(p.scores.len(), engine.manifest.num_classes);
+                assert!(p.class_id < engine.manifest.num_classes);
+            }
+        });
+        let snap = router.metrics.snapshot();
+        assert_eq!(snap.get("requests").as_i64(), Some(10));
+        assert!(snap.get("batches").as_i64().unwrap() <= 10);
+        assert!(router.infer(Some("nope"), vec![0.0; samples]).is_err());
+    }
+}

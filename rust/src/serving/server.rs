@@ -1,0 +1,133 @@
+//! HTTP front-end for the KWS serving runtime.
+//!
+//! POST /v1/kws    {"audio": [f32; 16000]} or
+//!                 {"synthesize": {"class": 3, "seed": 7}}   (load-gen aid)
+//!                 optional "model": "<arch>"
+//! GET  /v1/models
+//! GET  /metrics
+
+use super::Router as ServingRouter;
+use crate::http::{Response, Router, Server};
+use crate::ingestion::synth;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use std::sync::Arc;
+
+pub struct KwsServer;
+
+impl KwsServer {
+    pub fn router(serving: Arc<ServingRouter>) -> Router {
+        let mut r = Router::new();
+        let s = Arc::clone(&serving);
+        r.add("POST", "/v1/kws", move |req, _| {
+            let body = match req.json() {
+                Ok(b) => b,
+                Err(e) => return Response::bad_request(&e),
+            };
+            let model = body.get("model").as_str().map(|s| s.to_string());
+            let samples = s.engine.manifest.samples;
+            let audio: Vec<f32> = if let Some(arr) = body.get("audio").as_arr() {
+                arr.iter().map(|v| v.as_f64().unwrap_or(0.0) as f32).collect()
+            } else if !body.get("synthesize").is_null() {
+                let spec = body.get("synthesize");
+                let class = spec.get("class").as_usize().unwrap_or(0);
+                let seed = spec.get("seed").as_usize().unwrap_or(0) as u64;
+                let nk = s.engine.manifest.classes.len().saturating_sub(2);
+                synth::generate(class, nk, &mut Rng::new(seed))
+            } else {
+                return Response::bad_request("need 'audio' or 'synthesize'");
+            };
+            if audio.len() != samples {
+                return Response::bad_request(&format!(
+                    "audio must be {samples} samples, got {}",
+                    audio.len()
+                ));
+            }
+            match s.infer(model.as_deref(), audio) {
+                Err(e) => Response::error(&e),
+                Ok(p) => Response::json(
+                    200,
+                    &Json::obj(vec![
+                        ("class", Json::str(p.class)),
+                        ("class_id", Json::from(p.class_id)),
+                        (
+                            "scores",
+                            Json::arr(p.scores.iter().map(|&v| Json::num(v as f64)).collect()),
+                        ),
+                        ("latency_ms", Json::num(p.latency_ms)),
+                        ("batch_size", Json::from(p.batch_size)),
+                    ]),
+                ),
+            }
+        });
+        let s = Arc::clone(&serving);
+        r.add("GET", "/v1/models", move |_req, _| {
+            Response::json(
+                200,
+                &Json::arr(s.models().into_iter().map(Json::str).collect()),
+            )
+        });
+        let s = Arc::clone(&serving);
+        r.add("GET", "/metrics", move |_req, _| {
+            Response::json(200, &s.metrics.snapshot())
+        });
+        r
+    }
+
+    pub fn serve(serving: Arc<ServingRouter>, addr: &str, workers: usize) -> std::io::Result<Server> {
+        Server::serve(addr, Self::router(serving), workers)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::http::client;
+    use crate::runtime::EngineHandle;
+    use crate::serving::{BatcherConfig, ServableModel};
+    use std::path::PathBuf;
+
+    #[test]
+    fn http_kws_round_trip() {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("SKIP: artifacts not built");
+            return;
+        }
+        let engine = EngineHandle::spawn(dir).unwrap();
+        let mut router = ServingRouter::new(engine.clone());
+        router
+            .register(
+                ServableModel::from_init(&engine, "ds_kws9").unwrap(),
+                BatcherConfig { max_wait_ms: 1.0, ..Default::default() },
+            )
+            .unwrap();
+        let serving = Arc::new(router);
+        let mut server = KwsServer::serve(Arc::clone(&serving), "127.0.0.1:0", 4).unwrap();
+        let base = format!("http://{}", server.addr);
+
+        let resp = client::post_json(
+            &format!("{base}/v1/kws"),
+            &Json::parse(r#"{"synthesize": {"class": 2, "seed": 11}}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(resp.status, 200, "{}", resp.text());
+        let body = resp.json().unwrap();
+        assert_eq!(body.get("scores").as_arr().unwrap().len(), 12);
+        assert!(body.get("latency_ms").as_f64().unwrap() > 0.0);
+
+        let models = client::get(&format!("{base}/v1/models")).unwrap();
+        assert_eq!(models.json().unwrap().at(0).as_str(), Some("ds_kws9"));
+
+        let metrics = client::get(&format!("{base}/metrics")).unwrap();
+        assert_eq!(metrics.json().unwrap().get("requests").as_i64(), Some(1));
+
+        let bad = client::post_json(
+            &format!("{base}/v1/kws"),
+            &Json::parse(r#"{"audio": [1.0, 2.0]}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(bad.status, 400);
+        server.stop();
+    }
+}

@@ -1,0 +1,216 @@
+//! Dense tensors for the LNE inference-engine substrate.
+//!
+//! `Tensor` is row-major f32 with an arbitrary shape (NCHW by convention for
+//! activations, OIHW for conv weights). Quantized (`QTensor`, int8 symmetric
+//! per-tensor) and half (`HTensor`) storage types carry the reduced-precision
+//! paths of §6.2.5 / Fig 14b.
+
+use crate::util::f16::F16;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn filled(shape: &[usize], v: f32) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![v; shape.iter().product()] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(),
+                   "shape {shape:?} vs len {}", data.len());
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn randn(shape: &[usize], sigma: f32, rng: &mut Rng) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        rng.fill_normal(&mut t.data, sigma);
+        t
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// NCHW accessors (panic on rank != 4).
+    pub fn n(&self) -> usize { self.shape[0] }
+    pub fn c(&self) -> usize { self.shape[1] }
+    pub fn h(&self) -> usize { self.shape[2] }
+    pub fn w(&self) -> usize { self.shape[3] }
+
+    #[inline]
+    pub fn at4(&self, n: usize, c: usize, h: usize, w: usize) -> f32 {
+        debug_assert_eq!(self.shape.len(), 4);
+        let (_, cc, hh, ww) = (self.shape[0], self.shape[1], self.shape[2], self.shape[3]);
+        self.data[((n * cc + c) * hh + h) * ww + w]
+    }
+
+    #[inline]
+    pub fn set4(&mut self, n: usize, c: usize, h: usize, w: usize, v: f32) {
+        debug_assert_eq!(self.shape.len(), 4);
+        let (_, cc, hh, ww) = (self.shape[0], self.shape[1], self.shape[2], self.shape[3]);
+        self.data[((n * cc + c) * hh + h) * ww + w] = v;
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    pub fn relu_inplace(&mut self) {
+        for x in self.data.iter_mut() {
+            if *x < 0.0 {
+                *x = 0.0;
+            }
+        }
+    }
+
+    pub fn add_inplace(&mut self, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += *b;
+        }
+    }
+
+    pub fn scale_inplace(&mut self, s: f32) {
+        for x in self.data.iter_mut() {
+            *x *= s;
+        }
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    pub fn allclose(&self, other: &Tensor, rtol: f32, atol: f32) -> bool {
+        self.shape == other.shape
+            && self
+                .data
+                .iter()
+                .zip(other.data.iter())
+                .all(|(a, b)| (a - b).abs() <= atol + rtol * b.abs())
+    }
+
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .fold(0.0f32, |m, (a, b)| m.max((a - b).abs()))
+    }
+}
+
+/// Symmetric per-tensor int8 quantization (paper §6.2.5).
+#[derive(Debug, Clone)]
+pub struct QTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<i8>,
+    pub scale: f32, // real = q * scale
+}
+
+impl QTensor {
+    pub fn quantize(t: &Tensor) -> QTensor {
+        let max = t.max_abs().max(1e-12);
+        let scale = max / 127.0;
+        let inv = 1.0 / scale;
+        let data = t
+            .data
+            .iter()
+            .map(|&x| (x * inv).round().clamp(-127.0, 127.0) as i8)
+            .collect();
+        QTensor { shape: t.shape.clone(), data, scale }
+    }
+
+    pub fn dequantize(&self) -> Tensor {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&q| q as f32 * self.scale).collect(),
+        }
+    }
+}
+
+/// Half-precision storage tensor (Fig 14b substrate).
+#[derive(Debug, Clone)]
+pub struct HTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<F16>,
+}
+
+impl HTensor {
+    pub fn from_f32(t: &Tensor) -> HTensor {
+        HTensor {
+            shape: t.shape.clone(),
+            data: t.data.iter().map(|&x| F16::from_f32(x)).collect(),
+        }
+    }
+    pub fn to_f32(&self) -> Tensor {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|h| h.to_f32()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_and_index() {
+        let mut t = Tensor::zeros(&[2, 3, 4, 5]);
+        t.set4(1, 2, 3, 4, 7.5);
+        assert_eq!(t.at4(1, 2, 3, 4), 7.5);
+        assert_eq!(t.len(), 120);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_validates_len() {
+        Tensor::from_vec(&[2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn relu_and_add() {
+        let mut t = Tensor::from_vec(&[4], vec![-1.0, 2.0, -3.0, 4.0]);
+        t.relu_inplace();
+        assert_eq!(t.data, vec![0.0, 2.0, 0.0, 4.0]);
+        t.add_inplace(&Tensor::filled(&[4], 1.0));
+        assert_eq!(t.data, vec![1.0, 3.0, 1.0, 5.0]);
+    }
+
+    #[test]
+    fn int8_quantization_error_bounded() {
+        let mut rng = Rng::new(0);
+        let t = Tensor::randn(&[64, 8], 1.0, &mut rng);
+        let q = QTensor::quantize(&t);
+        let back = q.dequantize();
+        // error bounded by half a quantization step
+        let step = q.scale;
+        assert!(t.max_abs_diff(&back) <= step * 0.5 + 1e-6);
+    }
+
+    #[test]
+    fn f16_tensor_roundtrip_near() {
+        let mut rng = Rng::new(1);
+        let t = Tensor::randn(&[100], 2.0, &mut rng);
+        let h = HTensor::from_f32(&t);
+        let back = h.to_f32();
+        assert!(t.allclose(&back, 1e-3, 1e-3));
+    }
+}

@@ -1,0 +1,120 @@
+//! Mini property-testing framework (substrate: proptest is unavailable
+//! offline). Deterministic, seeded generators with linear shrinking on
+//! failure: when a case fails, each numeric input is independently walked
+//! toward its minimum while the property still fails, and the smallest
+//! failing case is reported in the panic message.
+
+use crate::util::rng::Rng;
+
+pub const DEFAULT_CASES: usize = 64;
+
+/// A generated case: a vector of i64 drawn from per-dimension ranges.
+#[derive(Debug, Clone)]
+pub struct Case(pub Vec<i64>);
+
+impl Case {
+    pub fn get(&self, i: usize) -> i64 {
+        self.0[i]
+    }
+    pub fn usize(&self, i: usize) -> usize {
+        self.0[i] as usize
+    }
+}
+
+/// Run `prop` over `cases` random vectors drawn from `dims` (inclusive
+/// ranges); on failure, shrink and panic with the minimal counterexample.
+pub fn check(name: &str, dims: &[(i64, i64)], cases: usize, prop: impl Fn(&Case) -> bool) {
+    let mut rng = Rng::new(0xB0B5_EE5 ^ hash(name));
+    for case_idx in 0..cases {
+        let c = Case(
+            dims.iter()
+                .map(|&(lo, hi)| lo + rng.below((hi - lo + 1) as usize) as i64)
+                .collect(),
+        );
+        if !prop(&c) {
+            let minimal = shrink(&c, dims, &prop);
+            panic!(
+                "property '{name}' failed (case {case_idx}): original {:?}, minimal {:?}",
+                c.0, minimal.0
+            );
+        }
+    }
+}
+
+fn shrink(failing: &Case, dims: &[(i64, i64)], prop: &impl Fn(&Case) -> bool) -> Case {
+    let mut cur = failing.clone();
+    let mut progress = true;
+    while progress {
+        progress = false;
+        for i in 0..cur.0.len() {
+            let lo = dims[i].0;
+            // try the minimum, then binary steps toward it
+            let mut candidate = cur.clone();
+            candidate.0[i] = lo;
+            if !prop(&candidate) {
+                if cur.0[i] != lo {
+                    cur = candidate;
+                    progress = true;
+                }
+                continue;
+            }
+            let mut step = (cur.0[i] - lo) / 2;
+            while step > 0 {
+                let mut candidate = cur.clone();
+                candidate.0[i] = cur.0[i] - step;
+                if !prop(&candidate) {
+                    cur = candidate;
+                    progress = true;
+                    break;
+                }
+                step /= 2;
+            }
+        }
+    }
+    cur
+}
+
+fn hash(s: &str) -> u64 {
+    // FNV-1a
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Generate a random f32 vector (helper for tensor properties).
+pub fn randn_vec(rng: &mut Rng, n: usize, sigma: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.normal_f32() * sigma).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        check("sum-commutes", &[(0, 100), (0, 100)], 50, |c| {
+            c.get(0) + c.get(1) == c.get(1) + c.get(0)
+        });
+    }
+
+    #[test]
+    fn failing_property_shrinks_to_minimal() {
+        let r = std::panic::catch_unwind(|| {
+            check("fails-at-10", &[(0, 1000)], 200, |c| c.get(0) < 10)
+        });
+        let msg = *r.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("minimal [10]"), "{msg}");
+    }
+
+    #[test]
+    fn shrink_respects_lower_bounds() {
+        let r = std::panic::catch_unwind(|| {
+            check("always-fails", &[(5, 50)], 10, |_| false)
+        });
+        let msg = *r.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("minimal [5]"), "{msg}");
+    }
+}

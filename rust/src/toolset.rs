@@ -1,0 +1,114 @@
+//! Built-in tool catalog: every pipeline tool the four stages ship with
+//! (paper Fig 3/4), plus the LPDNN deployment tool.
+
+use crate::frameworks::{deploy, DeployOptions, Framework};
+use crate::lne::platform::Platform;
+use crate::models::kws::{build_graph, import_weights};
+use crate::pipeline::artifact::formats;
+use crate::pipeline::tool::{Port, Registry, Tool, ToolCtx};
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use std::sync::Arc;
+
+/// Deploy a trained KWS model as an LPDNN AI application (paper §6): import
+/// weights into the LNE graph, fold/fuse, QS-DNN-search the deployment, and
+/// emit the AI-app artifact (assignment + measured latency).
+pub struct DeployLpdnn;
+
+impl Tool for DeployLpdnn {
+    fn name(&self) -> &str {
+        "deploy-lpdnn"
+    }
+    fn inputs(&self) -> Vec<Port> {
+        vec![Port::new("model", formats::MODEL)]
+    }
+    fn outputs(&self) -> Vec<Port> {
+        vec![Port::new("app", formats::AI_APP)]
+    }
+    fn run(&self, ctx: &mut ToolCtx) -> Result<(), String> {
+        let engine = ctx.engine()?.clone();
+        let platform = Platform::by_name(&ctx.param_str("platform", "jetson-nano"))
+            .ok_or("unknown platform")?;
+        let episodes = ctx.param_usize("episodes", 60);
+        let model = crate::training::tools::load_model(ctx.input("model")?)?;
+        let m = &engine.manifest;
+        let arch = m.arch(&model.arch).ok_or("arch missing from manifest")?;
+        let graph = build_graph(arch, m.mel_bands, m.frames, m.num_classes);
+        let weights = import_weights(arch, &model.params, &model.stats)?;
+        let mut rng = Rng::new(0);
+        let calib = Tensor::randn(&[1, 1, m.mel_bands, m.frames], 1.0, &mut rng);
+        let opts = DeployOptions {
+            episodes,
+            explore_episodes: (episodes / 3).max(4),
+            ..Default::default()
+        };
+        let d = deploy(Framework::Lpdnn, &graph, &weights, platform.clone(), &calib, &opts)?;
+        let latency = d.latency_ms(&calib, 5);
+        ctx.info(format!(
+            "deployed {} on {}: {:.3} ms ({} layers searched)",
+            model.arch,
+            platform.name,
+            latency,
+            d.assignment.choices.iter().flatten().count()
+        ));
+        let out = ctx.output("app")?;
+        let app = Json::obj(vec![
+            ("arch", Json::str(model.arch.clone())),
+            ("platform", Json::str(platform.name.clone())),
+            ("assignment", Json::str(d.assignment.describe(&d.prepared.graph))),
+            ("latency_ms", Json::num(latency)),
+            ("mflops", Json::num(graph.mflops())),
+        ]);
+        std::fs::write(out.join("app.json"), app.to_string()).map_err(|e| e.to_string())?;
+        // the AI app carries its own weights (self-contained deployment)
+        crate::runtime::write_f32_file(&out.join("params.bin"), &model.params)
+            .map_err(|e| e.to_string())?;
+        crate::runtime::write_f32_file(&out.join("stats.bin"), &model.stats)
+            .map_err(|e| e.to_string())
+    }
+}
+
+/// Registry with every built-in tool.
+pub fn builtin_registry() -> Registry {
+    let mut reg = Registry::new();
+    reg.register(Arc::new(crate::ingestion::SpeechCommandsImport));
+    reg.register(Arc::new(crate::ingestion::PartitionTool));
+    reg.register(Arc::new(crate::ingestion::MfccTool));
+    reg.register(Arc::new(crate::training::TrainKws));
+    reg.register(Arc::new(crate::training::BenchmarkKws));
+    reg.register(Arc::new(crate::training::QuantizeModel));
+    reg.register(Arc::new(crate::training::SparsifyModel));
+    reg.register(Arc::new(DeployLpdnn));
+    reg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_has_all_stage_tools() {
+        let reg = builtin_registry();
+        for t in [
+            "speech-commands-import",
+            "partition",
+            "mfcc-features",
+            "train-kws",
+            "benchmark-kws",
+            "quantize-model",
+            "sparsify-model",
+            "deploy-lpdnn",
+        ] {
+            assert!(reg.get(t).is_some(), "missing {t}");
+        }
+    }
+
+    #[test]
+    fn quantize_and_sparsify_are_interchangeable() {
+        // both are MODEL -> MODEL: the paper's modularity claim
+        let reg = builtin_registry();
+        let peers = reg.interchangeable_with("quantize-model");
+        assert!(peers.contains(&"sparsify-model".to_string()));
+    }
+}

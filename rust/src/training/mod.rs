@@ -1,0 +1,12 @@
+//! Training stage (paper §5): PJRT-driven train loop, evaluation, and the
+//! Q (16-bit quantization) / S (sparsification) compression tools.
+
+pub mod compress;
+pub mod tools;
+pub mod trainer;
+
+pub use tools::{
+    load_model, save_model, BenchmarkKws, ModelArtifact, QuantizeModel, SparsifyModel,
+    TrainKws, MODEL_META, PARAMS_FILE, STATS_FILE,
+};
+pub use trainer::{evaluate, predict, train, TrainConfig, TrainedModel};

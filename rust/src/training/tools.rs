@@ -1,0 +1,237 @@
+//! Training-stage pipeline tools (paper §5): train, benchmark, quantize,
+//! sparsify. Model artifacts carry flat params/stats blobs + metadata.
+
+use super::compress::{model_size_kb, quantize16, sparsify, weight_sparsity};
+use super::trainer::{self, TrainConfig};
+use crate::ingestion::bta::{Bta, Dataset};
+use crate::ingestion::tools::DATA_FILE;
+use crate::pipeline::artifact::formats;
+use crate::pipeline::tool::{Port, Tool, ToolCtx};
+use crate::runtime::EngineHandle;
+use crate::util::json::Json;
+use std::path::Path;
+
+pub const PARAMS_FILE: &str = "params.bin";
+pub const STATS_FILE: &str = "stats.bin";
+pub const MODEL_META: &str = "model.json";
+
+/// Saved model artifact payload.
+pub struct ModelArtifact {
+    pub arch: String,
+    pub params: Vec<f32>,
+    pub stats: Vec<f32>,
+    pub meta: Json,
+}
+
+pub fn save_model(dir: &Path, m: &ModelArtifact) -> Result<(), String> {
+    crate::runtime::write_f32_file(&dir.join(PARAMS_FILE), &m.params)
+        .map_err(|e| e.to_string())?;
+    crate::runtime::write_f32_file(&dir.join(STATS_FILE), &m.stats)
+        .map_err(|e| e.to_string())?;
+    let mut meta = match &m.meta {
+        Json::Obj(o) => o.clone(),
+        _ => Default::default(),
+    };
+    meta.insert("arch".into(), Json::str(m.arch.clone()));
+    std::fs::write(dir.join(MODEL_META), Json::Obj(meta).to_string())
+        .map_err(|e| e.to_string())
+}
+
+pub fn load_model(dir: &Path) -> Result<ModelArtifact, String> {
+    let meta_text =
+        std::fs::read_to_string(dir.join(MODEL_META)).map_err(|e| e.to_string())?;
+    let meta = Json::parse(&meta_text).map_err(|e| e.to_string())?;
+    let arch = meta.get("arch").as_str().ok_or("model.json missing arch")?.to_string();
+    let params = crate::runtime::read_f32_file(&dir.join(PARAMS_FILE))
+        .map_err(|e| e.to_string())?;
+    let stats = crate::runtime::read_f32_file(&dir.join(STATS_FILE))
+        .map_err(|e| e.to_string())?;
+    Ok(ModelArtifact { arch, params, stats, meta })
+}
+
+fn load_features(dir: &Path) -> Result<Dataset, String> {
+    let bta = Bta::load(&dir.join(DATA_FILE))?;
+    Dataset::from_bta(&bta, "mfcc")
+}
+
+/// Train a KWS model on MFCC features via the AOT train-step.
+pub struct TrainKws;
+
+impl Tool for TrainKws {
+    fn name(&self) -> &str {
+        "train-kws"
+    }
+    fn inputs(&self) -> Vec<Port> {
+        vec![
+            Port::new("train", formats::FEATURE_SET),
+            Port::new("val", formats::FEATURE_SET),
+        ]
+    }
+    fn outputs(&self) -> Vec<Port> {
+        vec![Port::new("model", formats::MODEL)]
+    }
+    fn run(&self, ctx: &mut ToolCtx) -> Result<(), String> {
+        let engine: EngineHandle = ctx.engine()?.clone();
+        let arch = ctx.param_str("arch", "kws9");
+        let iterations =
+            ctx.param_usize("iterations", engine.manifest.train_cfg.iterations);
+        let eval_every = ctx.param_usize("eval_every", (iterations / 4).max(1));
+        let seed = ctx.param_usize("seed", 0) as u64;
+        let train_set = load_features(ctx.input("train")?)?;
+        let val_set = load_features(ctx.input("val")?)?;
+        ctx.info(format!(
+            "training {arch} for {iterations} iterations on {} samples",
+            train_set.len()
+        ));
+        let cfg = TrainConfig { arch: arch.clone(), iterations, eval_every, seed };
+        let out = trainer::train(&engine, &cfg, &train_set, Some(&val_set))
+            .map_err(|e| e.to_string())?;
+        let final_val = out.val_history.last().map(|&(_, a)| a).unwrap_or(0.0);
+        let history = Json::arr(
+            out.history
+                .iter()
+                .map(|&(s, l, a)| {
+                    Json::arr(vec![Json::from(s), Json::num(l as f64), Json::num(a as f64)])
+                })
+                .collect(),
+        );
+        save_model(
+            ctx.output("model")?,
+            &ModelArtifact {
+                arch,
+                params: out.params,
+                stats: out.stats,
+                meta: Json::obj(vec![
+                    ("val_accuracy", Json::num(final_val)),
+                    ("iterations", Json::from(iterations)),
+                    ("history", history),
+                ]),
+            },
+        )?;
+        ctx.info(format!("final val accuracy {final_val:.3}"));
+        Ok(())
+    }
+}
+
+/// Accuracy benchmark on a held-out test set (paper §5.1's benchmarking tool).
+pub struct BenchmarkKws;
+
+impl Tool for BenchmarkKws {
+    fn name(&self) -> &str {
+        "benchmark-kws"
+    }
+    fn inputs(&self) -> Vec<Port> {
+        vec![
+            Port::new("model", formats::MODEL),
+            Port::new("test", formats::FEATURE_SET),
+        ]
+    }
+    fn outputs(&self) -> Vec<Port> {
+        vec![Port::new("report", formats::REPORT)]
+    }
+    fn run(&self, ctx: &mut ToolCtx) -> Result<(), String> {
+        let engine = ctx.engine()?.clone();
+        let model = load_model(ctx.input("model")?)?;
+        let test = load_features(ctx.input("test")?)?;
+        let preds = trainer::predict(&engine, &model.arch, &model.params, &model.stats, &test)
+            .map_err(|e| e.to_string())?;
+        let nc = engine.manifest.num_classes;
+        let correct = preds.iter().zip(test.y.iter()).filter(|(p, y)| p == y).count();
+        let acc = correct as f64 / test.len().max(1) as f64;
+        let cm = trainer::confusion(&preds, &test.y, nc);
+        let arch_meta = engine.manifest.arch(&model.arch).ok_or("arch missing")?;
+        let sparsity = weight_sparsity(arch_meta, &model.params);
+        let quant = model.meta.get("quantized16").as_bool().unwrap_or(false);
+        let report = Json::obj(vec![
+            ("arch", Json::str(model.arch.clone())),
+            ("accuracy", Json::num(acc)),
+            ("test_samples", Json::from(test.len())),
+            ("sparsity", Json::num(sparsity)),
+            ("size_kb", Json::num(model_size_kb(arch_meta, quant))),
+            (
+                "confusion",
+                Json::arr(
+                    cm.iter()
+                        .map(|row| Json::arr(row.iter().map(|&c| Json::from(c)).collect()))
+                        .collect(),
+                ),
+            ),
+        ]);
+        std::fs::write(ctx.output("report")?.join("report.json"), report.to_string())
+            .map_err(|e| e.to_string())?;
+        ctx.info(format!(
+            "{}: accuracy {acc:.4} on {} samples (sparsity {sparsity:.2})",
+            model.arch,
+            test.len()
+        ));
+        Ok(())
+    }
+}
+
+/// 16-bit weight quantization tool (Q in Table 2).
+pub struct QuantizeModel;
+
+impl Tool for QuantizeModel {
+    fn name(&self) -> &str {
+        "quantize-model"
+    }
+    fn inputs(&self) -> Vec<Port> {
+        vec![Port::new("model", formats::MODEL)]
+    }
+    fn outputs(&self) -> Vec<Port> {
+        vec![Port::new("model", formats::MODEL)]
+    }
+    fn run(&self, ctx: &mut ToolCtx) -> Result<(), String> {
+        let engine = ctx.engine()?.clone();
+        let mut model = load_model(ctx.input("model")?)?;
+        let arch = engine.manifest.arch(&model.arch).ok_or("arch missing")?;
+        let touched = quantize16(arch, &mut model.params);
+        let meta = Json::obj(vec![
+            ("quantized16", Json::Bool(true)),
+            ("size_kb", Json::num(model_size_kb(arch, true))),
+            ("base", model.meta.clone()),
+        ]);
+        ctx.info(format!(
+            "quantized {touched} weights to 16-bit ({} -> {:.0} KB)",
+            model_size_kb(arch, false).round(),
+            model_size_kb(arch, true)
+        ));
+        save_model(
+            ctx.output("model")?,
+            &ModelArtifact { arch: model.arch, params: model.params, stats: model.stats, meta },
+        )
+    }
+}
+
+/// Magnitude sparsification tool (S in Table 2).
+pub struct SparsifyModel;
+
+impl Tool for SparsifyModel {
+    fn name(&self) -> &str {
+        "sparsify-model"
+    }
+    fn inputs(&self) -> Vec<Port> {
+        vec![Port::new("model", formats::MODEL)]
+    }
+    fn outputs(&self) -> Vec<Port> {
+        vec![Port::new("model", formats::MODEL)]
+    }
+    fn run(&self, ctx: &mut ToolCtx) -> Result<(), String> {
+        let engine = ctx.engine()?.clone();
+        let fraction = ctx.param_f64("fraction", 0.4);
+        let mut model = load_model(ctx.input("model")?)?;
+        let arch = engine.manifest.arch(&model.arch).ok_or("arch missing")?;
+        let achieved = sparsify(arch, &mut model.params, fraction);
+        let quant = model.meta.get("quantized16").as_bool().unwrap_or(false);
+        let meta = Json::obj(vec![
+            ("sparsity", Json::num(achieved)),
+            ("quantized16", Json::Bool(quant)),
+            ("base", model.meta.clone()),
+        ]);
+        ctx.info(format!("sparsified to {:.1}% zeros", achieved * 100.0));
+        save_model(
+            ctx.output("model")?,
+            &ModelArtifact { arch: model.arch, params: model.params, stats: model.stats, meta },
+        )
+    }
+}

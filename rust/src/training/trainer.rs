@@ -1,0 +1,213 @@
+//! Training driver (paper §5.1): the rust coordinator owns the loop —
+//! shuffled mini-batches, step counter for the multi-step LR schedule,
+//! Adam moment state — and executes the AOT JAX train-step through PJRT.
+//! Python never runs here; the train step is a compiled artifact.
+
+use crate::ingestion::bta::Dataset;
+use crate::runtime::{EngineHandle, OwnedInput};
+use crate::util::rng::Rng;
+use anyhow::{anyhow, Result};
+
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub arch: String,
+    pub iterations: usize,
+    pub eval_every: usize,
+    pub seed: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct TrainedModel {
+    pub arch: String,
+    pub params: Vec<f32>,
+    pub stats: Vec<f32>,
+    /// (step, loss, train-batch accuracy)
+    pub history: Vec<(usize, f32, f32)>,
+    /// (step, val accuracy)
+    pub val_history: Vec<(usize, f64)>,
+}
+
+/// Train `arch` on a feature dataset; returns the model + loss curve.
+pub fn train(
+    engine: &EngineHandle,
+    cfg: &TrainConfig,
+    train_set: &Dataset,
+    val_set: Option<&Dataset>,
+) -> Result<TrainedModel> {
+    let m = &engine.manifest;
+    let arch = m
+        .arch(&cfg.arch)
+        .ok_or_else(|| anyhow!("unknown arch '{}'", cfg.arch))?
+        .clone();
+    let batch = m.train_cfg.batch;
+    let graph = m
+        .find_graph(&cfg.arch, "train", batch)
+        .ok_or_else(|| anyhow!("no train graph for {} at batch {batch}", cfg.arch))?
+        .name
+        .clone();
+    let row = train_set.row();
+    let feat_shape = [batch, m.mel_bands, m.frames];
+    if row != m.mel_bands * m.frames {
+        return Err(anyhow!("feature row {row} != {}x{}", m.mel_bands, m.frames));
+    }
+    let mut params = engine.read_blob(&arch.init_file)?;
+    let mut stats = engine.read_blob(&arch.init_stats_file)?;
+    let mut mom = vec![0.0f32; params.len()];
+    let mut vel = vec![0.0f32; params.len()];
+    let mut rng = Rng::new(cfg.seed);
+    let n = train_set.len();
+    if n == 0 {
+        return Err(anyhow!("empty training set"));
+    }
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    let mut cursor = 0usize;
+    let mut history = Vec::new();
+    let mut val_history = Vec::new();
+    for step in 0..cfg.iterations {
+        // assemble the next shuffled batch (wraps across epochs)
+        let mut x = Vec::with_capacity(batch * row);
+        let mut y = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            if cursor == n {
+                cursor = 0;
+                rng.shuffle(&mut order);
+            }
+            let i = order[cursor];
+            cursor += 1;
+            x.extend_from_slice(&train_set.x.data[i * row..(i + 1) * row]);
+            y.push(train_set.y[i] as f32);
+        }
+        let outputs = engine.run(
+            &graph,
+            vec![
+                OwnedInput::new(std::mem::take(&mut params), &[arch.n_params]),
+                OwnedInput::new(std::mem::take(&mut stats), &[arch.n_stats]),
+                OwnedInput::new(std::mem::take(&mut mom), &[arch.n_params]),
+                OwnedInput::new(std::mem::take(&mut vel), &[arch.n_params]),
+                OwnedInput::scalar(step as f32),
+                OwnedInput::new(x, &feat_shape),
+                OwnedInput::new(y, &[batch]),
+            ],
+        )?;
+        let mut it = outputs.into_iter();
+        params = it.next().unwrap();
+        stats = it.next().unwrap();
+        mom = it.next().unwrap();
+        vel = it.next().unwrap();
+        let loss = it.next().unwrap()[0];
+        let acc = it.next().unwrap()[0];
+        if !loss.is_finite() {
+            return Err(anyhow!("training diverged at step {step} (loss {loss})"));
+        }
+        history.push((step, loss, acc));
+        let at_eval = cfg.eval_every > 0 && (step + 1) % cfg.eval_every == 0;
+        if at_eval || step + 1 == cfg.iterations {
+            eprintln!("    step {:>5}  loss {loss:.4}  batch-acc {acc:.3}", step + 1);
+            if let Some(vs) = val_set {
+                let va = evaluate(engine, &cfg.arch, &params, &stats, vs)?;
+                eprintln!("    step {:>5}  val-acc {va:.3}", step + 1);
+                val_history.push((step + 1, va));
+            }
+        }
+    }
+    Ok(TrainedModel { arch: cfg.arch.clone(), params, stats, history, val_history })
+}
+
+/// Accuracy of (params, stats) on a feature dataset via the infer graphs.
+pub fn evaluate(
+    engine: &EngineHandle,
+    arch_name: &str,
+    params: &[f32],
+    stats: &[f32],
+    set: &Dataset,
+) -> Result<f64> {
+    let preds = predict(engine, arch_name, params, stats, set)?;
+    let correct = preds
+        .iter()
+        .zip(set.y.iter())
+        .filter(|(p, y)| *p == *y)
+        .count();
+    Ok(correct as f64 / set.len().max(1) as f64)
+}
+
+/// Argmax class predictions over a feature dataset.
+pub fn predict(
+    engine: &EngineHandle,
+    arch_name: &str,
+    params: &[f32],
+    stats: &[f32],
+    set: &Dataset,
+) -> Result<Vec<usize>> {
+    let m = &engine.manifest;
+    let arch = m.arch(arch_name).ok_or_else(|| anyhow!("unknown arch"))?;
+    let nc = m.num_classes;
+    let row = set.row();
+    let mut buckets = m.infer_batches(arch_name);
+    if buckets.is_empty() {
+        return Err(anyhow!("no infer graphs for {arch_name}"));
+    }
+    buckets.reverse(); // descending
+    let n = set.len();
+    let mut preds = Vec::with_capacity(n);
+    let mut done = 0usize;
+    while done < n {
+        let remaining = n - done;
+        let &bucket = buckets
+            .iter()
+            .find(|&&b| b <= remaining)
+            .unwrap_or(buckets.last().unwrap());
+        let take = bucket.min(remaining);
+        let mut x = vec![0.0f32; bucket * row];
+        x[..take * row].copy_from_slice(&set.x.data[done * row..(done + take) * row]);
+        let graph = format!("{arch_name}_infer_b{bucket}");
+        let out = engine.run(
+            &graph,
+            vec![
+                OwnedInput::new(params.to_vec(), &[arch.n_params]),
+                OwnedInput::new(stats.to_vec(), &[arch.n_stats]),
+                OwnedInput::new(x, &[bucket, m.mel_bands, m.frames]),
+            ],
+        )?;
+        let logits = &out[0];
+        for i in 0..take {
+            let row = &logits[i * nc..(i + 1) * nc];
+            let pred = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap_or(0);
+            preds.push(pred);
+        }
+        done += take;
+    }
+    Ok(preds)
+}
+
+/// Per-class confusion counts (rows = truth, cols = prediction).
+pub fn confusion(preds: &[usize], truth: &[usize], nc: usize) -> Vec<Vec<usize>> {
+    let mut m = vec![vec![0usize; nc]; nc];
+    for (&p, &t) in preds.iter().zip(truth.iter()) {
+        if t < nc && p < nc {
+            m[t][p] += 1;
+        }
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn confusion_counts() {
+        let preds = [0, 1, 1, 2];
+        let truth = [0, 1, 2, 2];
+        let m = confusion(&preds, &truth, 3);
+        assert_eq!(m[0][0], 1);
+        assert_eq!(m[1][1], 1);
+        assert_eq!(m[2][1], 1);
+        assert_eq!(m[2][2], 1);
+    }
+}

@@ -1,0 +1,146 @@
+//! Software IEEE-754 half precision (substrate for the Fig-14b mixed-precision
+//! experiment; the `half` crate is unavailable offline).
+//!
+//! Storage-only type: arithmetic happens in f32 after conversion, exactly like
+//! fp16 storage with fp32 accumulate on real hardware. Conversions are the
+//! honest cost the naive-FP16 path pays per tensor element (paper §8.2.2:
+//! out-of-the-box FP16 is *slower* than FP32 because of exactly this).
+
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct F16(pub u16);
+
+impl F16 {
+    pub const ZERO: F16 = F16(0);
+
+    #[inline]
+    pub fn from_f32(x: f32) -> F16 {
+        let bits = x.to_bits();
+        let sign = ((bits >> 16) & 0x8000) as u16;
+        let exp = ((bits >> 23) & 0xFF) as i32;
+        let man = bits & 0x7F_FFFF;
+
+        if exp == 0xFF {
+            // inf / nan
+            let m = if man != 0 { 0x200 } else { 0 };
+            return F16(sign | 0x7C00 | m);
+        }
+        let unbiased = exp - 127;
+        if unbiased > 15 {
+            return F16(sign | 0x7C00); // overflow -> inf
+        }
+        if unbiased >= -14 {
+            // normal half
+            let half_exp = ((unbiased + 15) as u16) << 10;
+            let mut half_man = (man >> 13) as u16;
+            // round-to-nearest-even on the truncated 13 bits
+            let rem = man & 0x1FFF;
+            if rem > 0x1000 || (rem == 0x1000 && (half_man & 1) == 1) {
+                half_man += 1;
+                if half_man == 0x400 {
+                    return F16(sign | (half_exp + 0x400)); // mantissa carry
+                }
+            }
+            F16(sign | half_exp | half_man)
+        } else if unbiased >= -25 {
+            // includes [2^-25, 2^-24): rounds up to the smallest subnormal
+            // subnormal half: man_h = round(value * 2^24) = full_man >> shift
+            let shift = (-unbiased - 1) as u32;
+            let full_man = man | 0x80_0000;
+            let mut half_man = (full_man >> shift) as u16;
+            let rem = full_man & ((1u32 << shift) - 1);
+            let half_bit = 1u32 << (shift - 1);
+            if rem > half_bit || (rem == half_bit && (half_man & 1) == 1) {
+                half_man += 1;
+            }
+            // a carry into bit 10 lands exactly on the smallest normal half
+            F16(sign | half_man)
+        } else {
+            F16(sign) // underflow -> signed zero
+        }
+    }
+
+    #[inline]
+    pub fn to_f32(self) -> f32 {
+        let h = self.0 as u32;
+        let sign = (h & 0x8000) << 16;
+        let exp = (h >> 10) & 0x1F;
+        let man = h & 0x3FF;
+        let bits = if exp == 0x1F {
+            sign | 0x7F80_0000 | (man << 13)
+        } else if exp == 0 {
+            if man == 0 {
+                sign
+            } else {
+                // subnormal: normalize
+                let mut e = -1i32;
+                let mut m = man;
+                while m & 0x400 == 0 {
+                    m <<= 1;
+                    e -= 1;
+                }
+                m &= 0x3FF;
+                sign | (((127 - 15 + e + 1) as u32) << 23) | (m << 13)
+            }
+        } else {
+            sign | ((exp + 127 - 15) << 23) | (man << 13)
+        };
+        f32::from_bits(bits)
+    }
+}
+
+/// Convert a slice to f16 storage.
+pub fn quantize(src: &[f32]) -> Vec<F16> {
+    src.iter().map(|&x| F16::from_f32(x)).collect()
+}
+
+/// Convert f16 storage back to f32.
+pub fn dequantize(src: &[F16]) -> Vec<f32> {
+    src.iter().map(|h| h.to_f32()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_values_roundtrip() {
+        for &x in &[0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 65504.0, -65504.0,
+                    1.0 / 1024.0] {
+            assert_eq!(F16::from_f32(x).to_f32(), x, "{x}");
+        }
+    }
+
+    #[test]
+    fn overflow_to_inf_and_nan() {
+        assert_eq!(F16::from_f32(1e6).to_f32(), f32::INFINITY);
+        assert_eq!(F16::from_f32(-1e6).to_f32(), f32::NEG_INFINITY);
+        assert!(F16::from_f32(f32::NAN).to_f32().is_nan());
+    }
+
+    #[test]
+    fn subnormals() {
+        let tiny = 5.96e-8f32; // smallest positive subnormal half ~5.96e-8
+        let h = F16::from_f32(tiny);
+        assert!(h.to_f32() > 0.0);
+        assert_eq!(F16::from_f32(1e-9).to_f32(), 0.0); // below subnormal range
+    }
+
+    #[test]
+    fn relative_error_within_half_ulp() {
+        let mut worst = 0.0f32;
+        let mut x = 0.001f32;
+        while x < 60000.0 {
+            let r = F16::from_f32(x).to_f32();
+            worst = worst.max(((r - x) / x).abs());
+            x *= 1.1;
+        }
+        assert!(worst <= 1.0 / 2048.0 + 1e-6, "worst rel err {worst}");
+    }
+
+    #[test]
+    fn round_to_nearest_even() {
+        // 2048 + 1 is exactly between representable halves 2048 and 2050
+        assert_eq!(F16::from_f32(2049.0).to_f32(), 2048.0);
+        assert_eq!(F16::from_f32(2051.0).to_f32(), 2052.0);
+    }
+}

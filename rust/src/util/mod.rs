@@ -1,0 +1,10 @@
+//! From-scratch substrates: JSON, PRNG, f16, stats, threading, timing.
+//! (serde / rand / half / tokio / criterion are unavailable offline —
+//! DESIGN.md §3 documents each substitution.)
+
+pub mod f16;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+pub mod timer;

@@ -1,0 +1,165 @@
+//! Fixed-size thread pool (substrate: tokio is unavailable offline; the
+//! HTTP server and pipeline executor run blocking work on this pool).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+    in_flight: Arc<(Mutex<usize>, Condvar)>,
+    size: usize,
+}
+
+impl ThreadPool {
+    pub fn new(size: usize) -> ThreadPool {
+        assert!(size > 0);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let in_flight = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let workers = (0..size)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                let inf = Arc::clone(&in_flight);
+                thread::Builder::new()
+                    .name(format!("bonseyes-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => {
+                                job();
+                                let (lock, cv) = &*inf;
+                                let mut n = lock.lock().unwrap();
+                                *n -= 1;
+                                cv.notify_all();
+                            }
+                            Err(_) => break, // channel closed: shut down
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), workers, in_flight, size }
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        {
+            let (lock, _) = &*self.in_flight;
+            *lock.lock().unwrap() += 1;
+        }
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(f))
+            .expect("worker channel closed");
+    }
+
+    /// Block until every submitted job has finished.
+    pub fn wait_idle(&self) {
+        let (lock, cv) = &*self.in_flight;
+        let mut n = lock.lock().unwrap();
+        while *n > 0 {
+            n = cv.wait(n).unwrap();
+        }
+    }
+
+    /// Run `f(i)` for i in 0..n across the pool and wait for completion.
+    pub fn scatter<F: Fn(usize) + Send + Sync + 'static>(&self, n: usize, f: F) {
+        let f = Arc::new(f);
+        let done = Arc::new((Mutex::new(0usize), Condvar::new()));
+        for i in 0..n {
+            let f = Arc::clone(&f);
+            let done = Arc::clone(&done);
+            self.execute(move || {
+                f(i);
+                let (lock, cv) = &*done;
+                *lock.lock().unwrap() += 1;
+                cv.notify_all();
+            });
+        }
+        let (lock, cv) = &*done;
+        let mut k = lock.lock().unwrap();
+        while *k < n {
+            k = cv.wait(k).unwrap();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // close channel; workers exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Global helper for quick parallel-for without owning a pool.
+pub fn parallel_for<F: Fn(usize) + Send + Sync>(n: usize, threads: usize, f: F) {
+    if n == 0 {
+        return;
+    }
+    let threads = threads.max(1).min(n);
+    let next = AtomicUsize::new(0);
+    thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                f(i);
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn scatter_covers_indices() {
+        let pool = ThreadPool::new(3);
+        let hits = Arc::new(Mutex::new(vec![0u32; 37]));
+        let h2 = Arc::clone(&hits);
+        pool.scatter(37, move |i| {
+            h2.lock().unwrap()[i] += 1;
+        });
+        assert!(hits.lock().unwrap().iter().all(|&h| h == 1));
+    }
+
+    #[test]
+    fn parallel_for_covers() {
+        let sum = AtomicU64::new(0);
+        parallel_for(1000, 8, |i| {
+            sum.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), 999 * 1000 / 2);
+    }
+}

@@ -1,0 +1,66 @@
+//! Wall-clock timing helpers.
+
+use std::time::Instant;
+
+/// Time a closure, returning (result, seconds).
+pub fn time<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Time a closure in milliseconds.
+pub fn time_ms<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let (out, s) = time(f);
+    (out, s * 1e3)
+}
+
+/// A scoped stopwatch accumulating named segments (used by profiling).
+#[derive(Debug, Default)]
+pub struct Stopwatch {
+    pub segments: Vec<(String, f64)>,
+}
+
+impl Stopwatch {
+    pub fn measure<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let (out, s) = time(f);
+        self.segments.push((name.to_string(), s));
+        out
+    }
+    pub fn total(&self) -> f64 {
+        self.segments.iter().map(|(_, s)| s).sum()
+    }
+    pub fn report(&self) -> String {
+        let total = self.total().max(1e-12);
+        let mut out = String::new();
+        for (name, s) in &self.segments {
+            out.push_str(&format!(
+                "{name:24} {:10.3} ms  {:5.1}%\n",
+                s * 1e3,
+                s / total * 100.0
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_measures_something() {
+        let (v, s) = time(|| (0..10_000).sum::<u64>());
+        assert_eq!(v, 49_995_000);
+        assert!(s >= 0.0);
+    }
+
+    #[test]
+    fn stopwatch_accumulates() {
+        let mut sw = Stopwatch::default();
+        sw.measure("a", || {});
+        sw.measure("b", || {});
+        assert_eq!(sw.segments.len(), 2);
+        assert!(sw.report().contains("a"));
+    }
+}

@@ -1,0 +1,140 @@
+//! End-to-end integration over the real AOT artifacts: pipeline workflow
+//! (synthetic speech-commands import -> partition -> MFCC via the pallas
+//! kernel through PJRT -> train-step execution -> accuracy benchmark ->
+//! Q/S compression), exercising every stage of the paper's §3-§5 pipeline.
+//!
+//! Skipped (with a message) when `make artifacts` hasn't been run.
+
+use bonseyes::ingestion::bta::{Bta, Dataset};
+use bonseyes::ingestion::tools::DATA_FILE;
+use bonseyes::pipeline::artifact::ArtifactStore;
+use bonseyes::pipeline::tool::Registry;
+use bonseyes::pipeline::workflow::{run, Workflow};
+use bonseyes::runtime::{EngineHandle, OwnedInput};
+use bonseyes::training::tools::load_model;
+use bonseyes::util::json::Json;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn registry() -> Registry {
+    let mut reg = Registry::new();
+    reg.register(Arc::new(bonseyes::ingestion::SpeechCommandsImport));
+    reg.register(Arc::new(bonseyes::ingestion::PartitionTool));
+    reg.register(Arc::new(bonseyes::ingestion::MfccTool));
+    reg.register(Arc::new(bonseyes::training::TrainKws));
+    reg.register(Arc::new(bonseyes::training::BenchmarkKws));
+    reg.register(Arc::new(bonseyes::training::QuantizeModel));
+    reg.register(Arc::new(bonseyes::training::SparsifyModel));
+    reg
+}
+
+#[test]
+fn mfcc_graph_runs_and_matches_expected_shape() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = EngineHandle::spawn(&dir).unwrap();
+    let m = &engine.manifest;
+    let audio = vec![0.1f32; m.samples];
+    let out = engine
+        .run("mfcc_b1", vec![OwnedInput::new(audio, &[1, m.samples])])
+        .unwrap();
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].len(), m.mel_bands * m.frames);
+    assert!(out[0].iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn infer_graph_runs_from_init_state() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = EngineHandle::spawn(&dir).unwrap();
+    let m = engine.manifest.clone();
+    let arch = m.arch("ds_kws9").expect("ds_kws9 in manifest");
+    let params = engine.read_blob(&arch.init_file).unwrap();
+    let stats = engine.read_blob(&arch.init_stats_file).unwrap();
+    let x = vec![0.0f32; m.mel_bands * m.frames];
+    let out = engine
+        .run(
+            "ds_kws9_infer_b1",
+            vec![
+                OwnedInput::new(params, &[arch.n_params]),
+                OwnedInput::new(stats, &[arch.n_stats]),
+                OwnedInput::new(x, &[1, m.mel_bands, m.frames]),
+            ],
+        )
+        .unwrap();
+    assert_eq!(out[0].len(), m.num_classes);
+}
+
+#[test]
+fn full_pipeline_workflow_learns_and_compresses() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = EngineHandle::spawn(&dir).unwrap();
+    let store_dir = std::env::temp_dir().join(format!("bonseyes-e2e-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&store_dir);
+    let store = ArtifactStore::open(&store_dir).unwrap();
+    let reg = registry();
+    let wf = Workflow::parse(
+        r#"{
+      "name": "kws-e2e-test",
+      "steps": [
+        {"tool": "speech-commands-import", "params": {"per_class": 16, "seed": 5},
+         "outputs": {"data": "raw"}},
+        {"tool": "partition", "params": {"val_frac": 0.15, "test_frac": 0.15},
+         "inputs": {"data": "raw"},
+         "outputs": {"train": "raw-train", "val": "raw-val", "test": "raw-test"}},
+        {"tool": "mfcc-features", "inputs": {"data": "raw-train"}, "outputs": {"features": "mfcc-train"}},
+        {"tool": "mfcc-features", "inputs": {"data": "raw-val"}, "outputs": {"features": "mfcc-val"}},
+        {"tool": "mfcc-features", "inputs": {"data": "raw-test"}, "outputs": {"features": "mfcc-test"}},
+        {"tool": "train-kws", "params": {"arch": "ds_kws9", "iterations": 40, "eval_every": 40},
+         "inputs": {"train": "mfcc-train", "val": "mfcc-val"},
+         "outputs": {"model": "model"}},
+        {"tool": "benchmark-kws", "inputs": {"model": "model", "test": "mfcc-test"},
+         "outputs": {"report": "report"}},
+        {"tool": "quantize-model", "inputs": {"model": "model"}, "outputs": {"model": "model-q"}},
+        {"tool": "sparsify-model", "params": {"fraction": 0.3},
+         "inputs": {"model": "model-q"}, "outputs": {"model": "model-qs"}},
+        {"tool": "benchmark-kws", "inputs": {"model": "model-qs", "test": "mfcc-test"},
+         "outputs": {"report": "report-qs"}}
+      ]
+    }"#,
+    )
+    .unwrap();
+    let rep = run(&wf, &reg, &store, Some(engine.clone()), false).unwrap();
+    assert_eq!(rep.steps.len(), 10);
+
+    // the training loss must decrease substantially over 40 steps
+    let model = load_model(&store.dir("model")).unwrap();
+    let hist = model.meta.get("history").as_arr().unwrap().to_vec();
+    let first: f64 = hist[0].at(1).as_f64().unwrap();
+    let last: f64 = hist[hist.len() - 1].at(1).as_f64().unwrap();
+    assert!(last < first * 0.8, "loss did not fall: {first} -> {last}");
+
+    // reports exist and are parseable; quantized+sparse model still predicts
+    let rep_json = Json::parse(
+        &std::fs::read_to_string(store.dir("report").join("report.json")).unwrap(),
+    )
+    .unwrap();
+    let acc = rep_json.get("accuracy").as_f64().unwrap();
+    assert!((0.0..=1.0).contains(&acc));
+    let rep_qs = Json::parse(
+        &std::fs::read_to_string(store.dir("report-qs").join("report.json")).unwrap(),
+    )
+    .unwrap();
+    assert!(rep_qs.get("sparsity").as_f64().unwrap() > 0.2);
+    assert!(rep_qs.get("size_kb").as_f64().unwrap()
+            < rep_json.get("size_kb").as_f64().unwrap());
+
+    // MFCC artifacts have the documented shape
+    let bta = Bta::load(&store.dir("mfcc-test").join(DATA_FILE)).unwrap();
+    let ds = Dataset::from_bta(&bta, "mfcc").unwrap();
+    assert_eq!(ds.row(), engine.manifest.mel_bands * engine.manifest.frames);
+}
