@@ -21,11 +21,14 @@ fn main() {
     let x = common::kws_input(&m, 5);
     let reps = common::reps();
 
-    // median per-layer time under a uniform assignment
+    // median per-layer time under a uniform assignment: plan once per
+    // assignment, replay hot across the repetitions
     let measure_layers = |a: &Assignment| -> Vec<Vec<f64>> {
+        let plan = p.plan(a, x.n()).expect("plannable graph");
+        let mut arena = bonseyes::lne::planner::Arena::for_plan(&plan);
         let mut samples: Vec<Vec<f64>> = vec![Vec::new(); p.graph.layers.len()];
         for _ in 0..reps {
-            let r = p.run(&x, a);
+            let r = plan.replay(&x, &mut arena);
             for (i, &t) in r.layer_ms.iter().enumerate() {
                 samples[i].push(t);
             }

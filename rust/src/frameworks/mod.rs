@@ -198,13 +198,20 @@ pub fn deploy(
 
 impl Deployment {
     /// Median end-to-end latency over `reps` runs (paper's method: warm-up
-    /// discarded by the caller's bench harness).
+    /// discarded by the caller's bench harness). The assignment is
+    /// compiled to one `ExecPlan` and replayed, so repeats run hot.
     pub fn latency_ms(&self, x: &Tensor, reps: usize) -> f64 {
         qsdnn::measure(&self.prepared, x, &self.assignment, reps)
     }
 
     pub fn run(&self, x: &Tensor) -> crate::lne::engine::RunResult {
         self.prepared.run(x, &self.assignment)
+    }
+
+    /// Compile this deployment's assignment into a reusable plan at a
+    /// fixed batch size (serving path; pair with `planner::Arena`).
+    pub fn plan(&self, batch: usize) -> Result<crate::lne::planner::ExecPlan, String> {
+        self.prepared.plan(&self.assignment, batch)
     }
 }
 

@@ -5,9 +5,10 @@
 //! Pallas stack. See DESIGN.md for the system inventory and the
 //! per-table/figure experiment index.
 //!
-//! Layer map:
+//! Layer map (DESIGN.md §1):
 //! - L3 (this crate): pipeline framework (tools/artifacts/workflows), LNE
-//!   inference engine + QS-DNN deployment search, NAS, serving, IoT hub.
+//!   inference engine with its plan/arena executor (`lne::planner`,
+//!   DESIGN.md §2) + QS-DNN deployment search, NAS, serving, IoT hub.
 //! - L2/L1 (python/compile): JAX KWS models + Pallas kernels, AOT-lowered
 //!   to `artifacts/*.hlo.txt`, executed here via PJRT (`runtime`).
 

@@ -1,9 +1,11 @@
-//! The LNE executor: runs a graph under a per-layer implementation
-//! assignment (paper §6.1.2), with per-layer timing (the signal QS-DNN
-//! learns from) and planned memory reuse (§6.2.2: buffers freed at last
-//! use, in-place BN/ReLU when sole consumer).
+//! The LNE executor facade: prepares a model for one platform (weight
+//! variants transformed once), compiles per-assignment execution plans
+//! (see `lne::planner`) and replays them with per-layer timing — the
+//! signal QS-DNN learns from. The pre-plan interpreter survives as
+//! `run_legacy`, the parity reference for the planner tests.
 
 use super::graph::{Graph, Layer, LayerKind, Weights};
+use super::planner::{Arena, ExecPlan};
 use super::platform::Platform;
 use super::plugin::{applicable, Assignment, ConvImpl};
 use super::primitives::depthwise::conv_depthwise;
@@ -26,9 +28,9 @@ pub struct Prepared {
     pub graph: Graph,
     pub weights: Weights,
     pub platform: Platform,
-    wino: HashMap<usize, Tensor>,
-    quant: HashMap<usize, QTensor>,
-    half: HashMap<usize, HTensor>,
+    pub(crate) wino: HashMap<usize, Tensor>,
+    pub(crate) quant: HashMap<usize, QTensor>,
+    pub(crate) half: HashMap<usize, HTensor>,
     /// consumers[v] = how many layers consume value v.
     consumers: Vec<usize>,
 }
@@ -39,7 +41,12 @@ pub struct RunResult {
     /// Per-layer wall time in ms (aligned with graph.layers).
     pub layer_ms: Vec<f64>,
     pub total_ms: f64,
-    /// Peak bytes of live activation memory during the run.
+    /// Peak bytes of execution memory. On the planned path (`run`,
+    /// `ExecPlan::replay`) this is the arena high-water mark —
+    /// activations *and* per-step scratch (im2col/winograd/int8 staging),
+    /// equal to the planner's computed footprint. `run_legacy` reports
+    /// live activation bytes only (no scratch), so the two paths are not
+    /// directly comparable on this field.
     pub peak_bytes: usize,
 }
 
@@ -95,13 +102,41 @@ impl Prepared {
         self.run(x, &a)
     }
 
+    /// Compile an execution plan for `assignment` at a fixed batch size:
+    /// one resolved step per layer, weights pre-transformed, every
+    /// activation/scratch buffer placed in the arena by liveness (paper
+    /// §6.2.2). Callers that run the same assignment repeatedly (QS-DNN
+    /// measurement, NAS evaluation, serving) compile once and replay.
+    pub fn plan(&self, assignment: &Assignment, batch: usize) -> Result<ExecPlan, String> {
+        ExecPlan::compile(self, assignment, batch)
+    }
+
     /// Execute the graph under `assignment`; input x: [N,C,H,W].
+    ///
+    /// One-shot convenience over the planned path: compiles the plan,
+    /// builds a fresh arena and replays once. `RunResult::peak_bytes` is
+    /// the planned arena high-water mark.
     pub fn run(&self, x: &Tensor, assignment: &Assignment) -> RunResult {
+        let plan = ExecPlan::compile(self, assignment, x.n()).expect("plannable graph");
+        let mut arena = Arena::for_plan(&plan);
+        plan.replay(x, &mut arena)
+    }
+
+    /// The pre-plan interpreter, kept as the parity reference for the
+    /// planner tests: walks the graph dispatching on `LayerKind` per call,
+    /// cloning inputs and allocating outputs as it goes.
+    pub fn run_legacy(&self, x: &Tensor, assignment: &Assignment) -> RunResult {
         assert_eq!(assignment.choices.len(), self.graph.layers.len());
         let nvals = self.graph.layers.len() + 1;
         let mut values: Vec<Option<Tensor>> = vec![None; nvals];
         let mut remaining = self.consumers.clone();
         values[0] = Some(x.clone());
+        // byte length of each value, recorded at creation: an in-place
+        // layer takes its input out of `values` during exec_layer, so the
+        // release accounting below must not depend on the Option still
+        // being Some
+        let mut lens = vec![0usize; nvals];
+        lens[0] = x.len();
         let mut layer_ms = Vec::with_capacity(self.graph.layers.len());
         let mut peak = 0usize;
         let mut live = x.len() * 4;
@@ -111,14 +146,16 @@ impl Prepared {
             let choice = assignment.choices[i];
             let out = self.exec_layer(i, layer, choice, &mut values, &mut remaining);
             live += out.len() * 4;
+            lens[i + 1] = out.len();
             values[i + 1] = Some(out);
-            // release inputs whose consumers are exhausted
+            // release inputs whose consumers are exhausted; a buffer an
+            // in-place layer reused was re-added as the output above, so
+            // subtracting its length here keeps `live` a true level
             for &v in &layer.inputs {
                 remaining[v] -= 1;
                 if remaining[v] == 0 {
-                    if let Some(t) = values[v].take() {
-                        live -= t.len() * 4;
-                    }
+                    let _ = values[v].take();
+                    live -= lens[v] * 4;
                 }
             }
             peak = peak.max(live);
@@ -365,5 +402,22 @@ mod tests {
         let mut g = Graph::new("bad", (1, 4, 4));
         g.push("conv1", LayerKind::Conv { k: (3, 3), stride: (1, 1), pad: Padding::Same, relu_fused: false }, 2);
         assert!(Prepared::new(g, Weights::new(), Platform::pi4()).is_err());
+    }
+
+    #[test]
+    fn planned_run_matches_legacy_interpreter() {
+        let (g, w) = toy_model();
+        let p = Prepared::new(g.clone(), w, Platform::pi4()).unwrap();
+        let mut rng = Rng::new(17);
+        let x = Tensor::randn(&[2, 3, 10, 8], 1.0, &mut rng);
+        let space = super::super::plugin::DesignSpace::build(&g, &p.platform);
+        let a = space.uniform(&g, ConvImpl::GemmBlocked);
+        let planned = p.run(&x, &a);
+        let legacy = p.run_legacy(&x, &a);
+        assert!(planned.output.allclose(&legacy.output, 0.0, 0.0));
+        assert_eq!(planned.layer_ms.len(), legacy.layer_ms.len());
+        // peak_bytes is now the planned arena footprint
+        let plan = p.plan(&a, 2).unwrap();
+        assert_eq!(planned.peak_bytes, plan.arena_bytes());
     }
 }

@@ -233,6 +233,21 @@ pub fn conv_out(
     }
 }
 
+/// Resolve a symbolic `Padding` into concrete (top, left) zero-padding —
+/// the form the planner freezes into steps before the hot loop.
+pub fn resolve_pad(
+    h: usize,
+    w: usize,
+    k: (usize, usize),
+    stride: (usize, usize),
+    pad: Padding,
+) -> (usize, usize) {
+    match pad {
+        Padding::Same => same_pad(h, w, k, stride),
+        Padding::Valid => (0, 0),
+    }
+}
+
 /// SAME padding amounts (top, left) for a conv.
 pub fn same_pad(
     h: usize,

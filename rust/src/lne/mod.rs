@@ -4,12 +4,15 @@
 //! library primitives (`primitives`), a plugin registry describing which
 //! implementation may run each layer on each platform (`plugin`,
 //! `platform`), compile-time optimization passes (`passes`: BN folding,
-//! activation fusion), a per-layer-assigned executor with planned memory
-//! reuse (`engine`), and the int8 sensitivity explorer (`quant_explore`).
+//! activation fusion), the execution planner that freezes an assignment
+//! into a Step list + arena memory plan (`planner`), the engine facade
+//! that compiles and replays plans (`engine`), and the int8 sensitivity
+//! explorer (`quant_explore`).
 
 pub mod engine;
 pub mod graph;
 pub mod passes;
+pub mod planner;
 pub mod platform;
 pub mod plugin;
 pub mod primitives;
@@ -17,4 +20,5 @@ pub mod quant_explore;
 
 pub use engine::{Prepared, RunResult};
 pub use graph::{Graph, Layer, LayerKind, Padding, PoolKind, Weights};
+pub use planner::{Arena, ExecPlan, Step};
 pub use plugin::{applicable, Assignment, ConvImpl, DesignSpace};

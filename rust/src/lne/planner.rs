@@ -1,0 +1,1073 @@
+//! Execution planner (paper §6.2.2): compile a `Graph` + `Assignment` once
+//! into an `ExecPlan` — one resolved `Step` per layer with the
+//! implementation choice, padding geometry, pre-transformed weights and
+//! folded BN coefficients frozen in — plus a static arena memory plan.
+//!
+//! Every activation and every scratch buffer (im2col patch matrix,
+//! winograd tiles, int8/f16 staging) is assigned a byte offset in one
+//! preallocated arena by a liveness-driven offset allocator: buffers are
+//! returned to the free list at their last use, and BN/ReLU/Add outputs
+//! alias their input in place when the layer is the sole remaining
+//! consumer. Replaying the plan therefore performs **zero heap
+//! allocation** per layer, and `RunResult::peak_bytes` is a *planned*
+//! quantity (the allocator's high-water mark) that the replay loop
+//! re-observes and the tests assert equal.
+//!
+//! This mirrors the codegen-time decisions the paper credits for LNE's
+//! embedded-target edge, and the Planner -> Vec<Step> -> replay shape of
+//! production inference engines.
+
+use super::engine::{Prepared, RunResult};
+use super::graph::{resolve_pad, LayerKind, PoolKind};
+use super::plugin::{Assignment, ConvImpl};
+use super::primitives::depthwise::conv_depthwise_into;
+use super::primitives::direct::conv_direct_into;
+use super::primitives::f16conv::conv_f16_into;
+use super::primitives::gemm::Blocking;
+use super::primitives::im2col::{conv_im2col_into, fc_into, GemmImpl};
+use super::primitives::int8::conv_int8_into;
+use super::primitives::pool::{global_pool_into, lrn_into, pool_into, softmax_into};
+use super::primitives::winograd::{self, conv_winograd_into};
+use crate::tensor::{HTensor, QTensor, Tensor, TensorView, TensorViewMut};
+use std::time::Instant;
+
+const BN_EPS: f32 = 1e-5;
+
+/// A planned buffer: an offset span in the arena's f32 lane plus the
+/// logical NCHW shape the step reads it under.
+#[derive(Debug, Clone)]
+pub struct Slot {
+    pub off: usize,
+    pub len: usize,
+    pub shape: Vec<usize>,
+}
+
+/// A raw scratch span (offset, length in lane elements).
+#[derive(Debug, Clone, Copy)]
+pub struct Span {
+    pub off: usize,
+    pub len: usize,
+}
+
+/// One resolved op: everything the hot loop needs, decided at plan time.
+#[derive(Debug, Clone)]
+pub enum Op {
+    ConvDirect {
+        w: Tensor,
+        bias: Vec<f32>,
+        stride: (usize, usize),
+        pad: (usize, usize),
+        relu: bool,
+    },
+    ConvIm2col {
+        w: Tensor,
+        bias: Vec<f32>,
+        stride: (usize, usize),
+        pad: (usize, usize),
+        gemm: GemmImpl,
+        relu: bool,
+        /// Patch-matrix scratch (f32 lane).
+        cols: Span,
+    },
+    ConvWinograd {
+        /// Pre-transformed weights (G g G^T), cloned from `Prepared`.
+        u: Tensor,
+        bias: Vec<f32>,
+        pad: (usize, usize),
+        relu: bool,
+        /// Per-channel tile scratch (f32 lane).
+        vbuf: Span,
+    },
+    ConvInt8 {
+        qw: QTensor,
+        bias: Vec<f32>,
+        stride: (usize, usize),
+        pad: (usize, usize),
+        relu: bool,
+        /// f32 patch matrix, its int8 quantization, i32 accumulators.
+        cols_f: Span,
+        cols_q: Span,
+        acc: Span,
+    },
+    ConvF16 {
+        hw: HTensor,
+        bias: Vec<f32>,
+        stride: (usize, usize),
+        pad: (usize, usize),
+        relu: bool,
+        blk: Blocking,
+        /// f32 weight staging + patch matrix (f32 lane).
+        wf: Span,
+        cols: Span,
+    },
+    ConvDw {
+        w: Tensor,
+        bias: Vec<f32>,
+        stride: (usize, usize),
+        pad: (usize, usize),
+        relu: bool,
+    },
+    Fc {
+        w: Tensor,
+        bias: Vec<f32>,
+        gemm: GemmImpl,
+        relu: bool,
+    },
+    /// Inference BN folded to per-channel scale/shift at plan time.
+    BatchNorm { scale: Vec<f32>, shift: Vec<f32> },
+    Relu,
+    Pool { kind: PoolKind, k: usize, stride: usize, pad: usize },
+    GlobalPool { kind: PoolKind },
+    Softmax,
+    Add { relu: bool },
+    Concat,
+    Lrn { size: usize, alpha: f32, beta: f32, k: f32 },
+}
+
+impl Op {
+    /// Scratch spans per lane: (f32 spans, i8 span, i32 span).
+    fn scratch(&self) -> ([Option<Span>; 2], Option<Span>, Option<Span>) {
+        match self {
+            Op::ConvIm2col { cols, .. } => ([Some(*cols), None], None, None),
+            Op::ConvWinograd { vbuf, .. } => ([Some(*vbuf), None], None, None),
+            Op::ConvInt8 { cols_f, cols_q, acc, .. } => {
+                ([Some(*cols_f), None], Some(*cols_q), Some(*acc))
+            }
+            Op::ConvF16 { wf, cols, .. } => ([Some(*wf), Some(*cols)], None, None),
+            _ => ([None, None], None, None),
+        }
+    }
+}
+
+/// One executable step: resolved inputs/output and the frozen op.
+#[derive(Debug, Clone)]
+pub struct Step {
+    /// Index into `graph.layers` (aligned with `RunResult::layer_ms`).
+    pub layer: usize,
+    pub name: String,
+    pub ins: Vec<Slot>,
+    pub out: Slot,
+    /// Output aliases `ins[0]` (BN/ReLU/Add with a sole consumer).
+    pub in_place: bool,
+    pub op: Op,
+}
+
+/// A compiled execution plan: steps + arena layout. Immutable and
+/// shareable; pair with a per-thread [`Arena`] to execute.
+#[derive(Debug, Clone)]
+pub struct ExecPlan {
+    pub graph_name: String,
+    /// Slot holding the graph input (value 0); replay copies x here.
+    pub input: Slot,
+    pub steps: Vec<Step>,
+    /// Slot of the final value.
+    pub output: Slot,
+    /// Planned lane high-water marks (the arena sizes).
+    pub f32_words: usize,
+    pub i8_bytes: usize,
+    pub i32_words: usize,
+}
+
+/// The preallocated execution arena: one buffer per lane. All
+/// activations and scratch of a replay live here.
+#[derive(Debug, Default)]
+pub struct Arena {
+    f: Vec<f32>,
+    q: Vec<i8>,
+    acc: Vec<i32>,
+}
+
+impl Arena {
+    pub fn new() -> Arena {
+        Arena::default()
+    }
+
+    /// Size the arena for a plan (a no-op when already large enough, so a
+    /// long-lived arena can serve many plans without churn).
+    pub fn ensure(&mut self, plan: &ExecPlan) {
+        if self.f.len() < plan.f32_words {
+            self.f.resize(plan.f32_words, 0.0);
+        }
+        if self.q.len() < plan.i8_bytes {
+            self.q.resize(plan.i8_bytes, 0);
+        }
+        if self.acc.len() < plan.i32_words {
+            self.acc.resize(plan.i32_words, 0);
+        }
+    }
+
+    pub fn for_plan(plan: &ExecPlan) -> Arena {
+        let mut a = Arena::new();
+        a.ensure(plan);
+        a
+    }
+
+    /// Currently allocated bytes across lanes.
+    pub fn capacity_bytes(&self) -> usize {
+        self.f.len() * 4 + self.q.len() + self.acc.len() * 4
+    }
+}
+
+/// Liveness-driven offset allocator over one lane: a sorted, coalescing
+/// free list with best-fit placement; `hi` is the high-water mark that
+/// becomes the lane size.
+#[derive(Debug, Default)]
+struct Region {
+    free: Vec<(usize, usize)>,
+    hi: usize,
+}
+
+impl Region {
+    fn alloc(&mut self, len: usize) -> usize {
+        if len == 0 {
+            return 0;
+        }
+        // best fit over the free list
+        let mut best: Option<(usize, usize)> = None; // (index, block len)
+        for (i, &(_, l)) in self.free.iter().enumerate() {
+            if l >= len && best.map(|(_, bl)| l < bl).unwrap_or(true) {
+                best = Some((i, l));
+            }
+        }
+        if let Some((i, l)) = best {
+            let (o, _) = self.free[i];
+            if l == len {
+                self.free.remove(i);
+            } else {
+                self.free[i] = (o + len, l - len);
+            }
+            return o;
+        }
+        // grow; absorb a trailing free block adjacent to the high-water
+        if let Some(&(o, l)) = self.free.last() {
+            if o + l == self.hi {
+                self.free.pop();
+                self.hi = o + len;
+                return o;
+            }
+        }
+        let o = self.hi;
+        self.hi += len;
+        o
+    }
+
+    fn free(&mut self, off: usize, len: usize) {
+        if len == 0 {
+            return;
+        }
+        let pos = self.free.partition_point(|&(o, _)| o < off);
+        self.free.insert(pos, (off, len));
+        // coalesce with the next block
+        if pos + 1 < self.free.len() {
+            let (o1, l1) = self.free[pos];
+            let (o2, l2) = self.free[pos + 1];
+            debug_assert!(o1 + l1 <= o2, "double free / overlap");
+            if o1 + l1 == o2 {
+                self.free[pos] = (o1, l1 + l2);
+                self.free.remove(pos + 1);
+            }
+        }
+        // coalesce with the previous block
+        if pos > 0 {
+            let (o0, l0) = self.free[pos - 1];
+            let (o1, l1) = self.free[pos];
+            debug_assert!(o0 + l0 <= o1, "double free / overlap");
+            if o0 + l0 == o1 {
+                self.free[pos - 1] = (o0, l0 + l1);
+                self.free.remove(pos);
+            }
+        }
+    }
+}
+
+fn spans_overlap(a_off: usize, a_len: usize, b_off: usize, b_len: usize) -> bool {
+    a_off < b_off + b_len && b_off < a_off + a_len
+}
+
+impl ExecPlan {
+    /// Walk the graph once under `assignment` and emit the plan for a
+    /// fixed `batch` size. Weight transforms are cloned out of `Prepared`
+    /// (computed once there), BN folds to scale/shift, padding resolves to
+    /// (top, left), and every buffer gets a liveness-reused arena offset.
+    ///
+    /// The plan *owns* its weights (no lifetimes), which is what lets
+    /// serving hold plans in `Arc` containers and threads replay without
+    /// touching `Prepared`; the copy is paid once per compile, so hot
+    /// paths compile once and replay many times (`qsdnn::measure`,
+    /// `LneBatcher`) rather than calling `Prepared::run` in a loop.
+    pub fn compile(
+        p: &Prepared,
+        assignment: &Assignment,
+        batch: usize,
+    ) -> Result<ExecPlan, String> {
+        let g = &p.graph;
+        assert_eq!(assignment.choices.len(), g.layers.len());
+        assert!(batch > 0, "batch must be positive");
+        let shapes = g.infer_shapes()?;
+        let nvals = g.layers.len() + 1;
+        let vshape: Vec<Vec<usize>> = shapes
+            .iter()
+            .map(|&(c, h, w)| vec![batch, c, h, w])
+            .collect();
+        let vlen: Vec<usize> = vshape.iter().map(|s| s.iter().product()).collect();
+
+        // remaining consumer counts (the final value stays alive)
+        let mut remaining = vec![0usize; nvals];
+        for l in &g.layers {
+            for &v in &l.inputs {
+                remaining[v] += 1;
+            }
+        }
+        remaining[nvals - 1] += 1;
+
+        let mut falloc = Region::default();
+        let mut qalloc = Region::default();
+        let mut ialloc = Region::default();
+        let mut slots: Vec<Option<Slot>> = vec![None; nvals];
+        let input = Slot {
+            off: falloc.alloc(vlen[0]),
+            len: vlen[0],
+            shape: vshape[0].clone(),
+        };
+        slots[0] = Some(input.clone());
+
+        fn wblobs<'a>(p: &'a Prepared, name: &str) -> Result<&'a [Tensor], String> {
+            p.weights
+                .get(name)
+                .map(|v| v.as_slice())
+                .ok_or_else(|| format!("missing weights for {name}"))
+        }
+
+        let mut steps: Vec<Step> = Vec::with_capacity(g.layers.len());
+        for (i, layer) in g.layers.iter().enumerate() {
+            let choice = assignment.choices[i];
+            let (c_in, h_in, w_in) = shapes[layer.inputs[0]];
+            let (c_out, out_h, out_w) = shapes[i + 1];
+            let out_plane = out_h * out_w;
+            let blk = p.platform.blocking;
+            let op = match &layer.kind {
+                LayerKind::Conv { k, stride, pad, relu_fused } => {
+                    let w = wblobs(p, &layer.name)?;
+                    let bias: Vec<f32> =
+                        if w.len() > 1 { w[1].data.clone() } else { Vec::new() };
+                    let rp = resolve_pad(h_in, w_in, *k, *stride, *pad);
+                    let kdim = c_in * k.0 * k.1;
+                    match choice.unwrap_or(ConvImpl::GemmRef) {
+                        ConvImpl::Direct => Op::ConvDirect {
+                            w: w[0].clone(),
+                            bias,
+                            stride: *stride,
+                            pad: rp,
+                            relu: *relu_fused,
+                        },
+                        ConvImpl::GemmRef => Op::ConvIm2col {
+                            w: w[0].clone(),
+                            bias,
+                            stride: *stride,
+                            pad: rp,
+                            gemm: GemmImpl::Reference,
+                            relu: *relu_fused,
+                            cols: Span {
+                                off: falloc.alloc(kdim * out_plane),
+                                len: kdim * out_plane,
+                            },
+                        },
+                        ConvImpl::GemmBlocked => Op::ConvIm2col {
+                            w: w[0].clone(),
+                            bias,
+                            stride: *stride,
+                            pad: rp,
+                            gemm: GemmImpl::Blocked(blk),
+                            relu: *relu_fused,
+                            cols: Span {
+                                off: falloc.alloc(kdim * out_plane),
+                                len: kdim * out_plane,
+                            },
+                        },
+                        ConvImpl::Winograd => {
+                            let u = p
+                                .wino
+                                .get(&i)
+                                .ok_or_else(|| format!("{}: winograd weights not prepared", layer.name))?;
+                            let words = winograd::scratch_words(c_in);
+                            Op::ConvWinograd {
+                                u: u.clone(),
+                                bias,
+                                pad: rp,
+                                relu: *relu_fused,
+                                vbuf: Span { off: falloc.alloc(words), len: words },
+                            }
+                        }
+                        ConvImpl::Int8Gemm => {
+                            let qw = p
+                                .quant
+                                .get(&i)
+                                .ok_or_else(|| format!("{}: int8 weights not prepared", layer.name))?;
+                            Op::ConvInt8 {
+                                qw: qw.clone(),
+                                bias,
+                                stride: *stride,
+                                pad: rp,
+                                relu: *relu_fused,
+                                cols_f: Span {
+                                    off: falloc.alloc(kdim * out_plane),
+                                    len: kdim * out_plane,
+                                },
+                                cols_q: Span {
+                                    off: qalloc.alloc(kdim * out_plane),
+                                    len: kdim * out_plane,
+                                },
+                                acc: Span {
+                                    off: ialloc.alloc(c_out * out_plane),
+                                    len: c_out * out_plane,
+                                },
+                            }
+                        }
+                        ConvImpl::F16Gemm => {
+                            let hw = p
+                                .half
+                                .get(&i)
+                                .ok_or_else(|| format!("{}: f16 weights not prepared", layer.name))?;
+                            let wlen = hw.data.len();
+                            Op::ConvF16 {
+                                hw: hw.clone(),
+                                bias,
+                                stride: *stride,
+                                pad: rp,
+                                relu: *relu_fused,
+                                blk,
+                                wf: Span { off: falloc.alloc(wlen), len: wlen },
+                                cols: Span {
+                                    off: falloc.alloc(kdim * out_plane),
+                                    len: kdim * out_plane,
+                                },
+                            }
+                        }
+                    }
+                }
+                LayerKind::DwConv { k, stride, pad, relu_fused } => {
+                    let w = wblobs(p, &layer.name)?;
+                    let bias: Vec<f32> =
+                        if w.len() > 1 { w[1].data.clone() } else { Vec::new() };
+                    Op::ConvDw {
+                        w: w[0].clone(),
+                        bias,
+                        stride: *stride,
+                        pad: resolve_pad(h_in, w_in, *k, *stride, *pad),
+                        relu: *relu_fused,
+                    }
+                }
+                LayerKind::Fc { relu_fused } => {
+                    let w = wblobs(p, &layer.name)?;
+                    if w.len() < 2 {
+                        return Err(format!("{}: fc needs weight + bias", layer.name));
+                    }
+                    let gemm = match choice.unwrap_or(ConvImpl::GemmRef) {
+                        ConvImpl::GemmBlocked => GemmImpl::Blocked(blk),
+                        _ => GemmImpl::Reference,
+                    };
+                    Op::Fc {
+                        w: w[0].clone(),
+                        bias: w[1].data.clone(),
+                        gemm,
+                        relu: *relu_fused,
+                    }
+                }
+                LayerKind::BatchNorm => {
+                    let w = wblobs(p, &layer.name)?;
+                    if w.len() < 4 {
+                        return Err(format!("{}: bn needs mean/var/gamma/beta", layer.name));
+                    }
+                    let (mean, var, gamma, beta) = (&w[0], &w[1], &w[2], &w[3]);
+                    let c = mean.len();
+                    let scale: Vec<f32> = (0..c)
+                        .map(|ci| gamma.data[ci] / (var.data[ci] + BN_EPS).sqrt())
+                        .collect();
+                    let shift: Vec<f32> = (0..c)
+                        .map(|ci| beta.data[ci] - mean.data[ci] * scale[ci])
+                        .collect();
+                    Op::BatchNorm { scale, shift }
+                }
+                LayerKind::ReLU => Op::Relu,
+                LayerKind::Pool { kind, k, stride, pad, global } => {
+                    if *global {
+                        Op::GlobalPool { kind: *kind }
+                    } else {
+                        Op::Pool { kind: *kind, k: *k, stride: *stride, pad: *pad }
+                    }
+                }
+                LayerKind::Softmax => Op::Softmax,
+                LayerKind::Add { relu_fused } => Op::Add { relu: *relu_fused },
+                LayerKind::Concat => Op::Concat,
+                LayerKind::Lrn { size, alpha, beta, k } => Op::Lrn {
+                    size: *size,
+                    alpha: *alpha,
+                    beta: *beta,
+                    k: *k,
+                },
+            };
+
+            // in-place aliasing: BN/ReLU/Add may write over their first
+            // input when this step is its sole remaining consumer
+            let in_place = matches!(
+                layer.kind,
+                LayerKind::BatchNorm | LayerKind::ReLU | LayerKind::Add { .. }
+            ) && remaining[layer.inputs[0]] == 1;
+            let out = if in_place {
+                let src = slots[layer.inputs[0]].as_ref().expect("input value alive");
+                debug_assert_eq!(src.len, vlen[i + 1]);
+                Slot { off: src.off, len: src.len, shape: vshape[i + 1].clone() }
+            } else {
+                Slot {
+                    off: falloc.alloc(vlen[i + 1]),
+                    len: vlen[i + 1],
+                    shape: vshape[i + 1].clone(),
+                }
+            };
+
+            let ins: Vec<Slot> = layer
+                .inputs
+                .iter()
+                .map(|&v| slots[v].clone().expect("input value alive"))
+                .collect();
+            steps.push(Step {
+                layer: i,
+                name: layer.name.clone(),
+                ins,
+                out: out.clone(),
+                in_place,
+                op,
+            });
+
+            // scratch lives only during the step
+            let (fs, qs, is) = steps.last().unwrap().op.scratch();
+            for s in fs.into_iter().flatten() {
+                falloc.free(s.off, s.len);
+            }
+            if let Some(s) = qs {
+                qalloc.free(s.off, s.len);
+            }
+            if let Some(s) = is {
+                ialloc.free(s.off, s.len);
+            }
+
+            // release inputs whose consumers are exhausted; an aliased
+            // input's storage lives on as this step's output
+            for &v in &layer.inputs {
+                remaining[v] -= 1;
+                if remaining[v] == 0 {
+                    if let Some(s) = slots[v].take() {
+                        if !(in_place && v == layer.inputs[0]) {
+                            falloc.free(s.off, s.len);
+                        }
+                    }
+                }
+            }
+            slots[i + 1] = Some(out);
+        }
+
+        let output = slots[nvals - 1]
+            .clone()
+            .ok_or_else(|| "graph has no output value".to_string())?;
+        Ok(ExecPlan {
+            graph_name: g.name.clone(),
+            input,
+            steps,
+            output,
+            f32_words: falloc.hi,
+            i8_bytes: qalloc.hi,
+            i32_words: ialloc.hi,
+        })
+    }
+
+    /// Total planned arena footprint — the `peak_bytes` the replay
+    /// observes.
+    pub fn arena_bytes(&self) -> usize {
+        self.f32_words * 4 + self.i8_bytes + self.i32_words * 4
+    }
+
+    /// Sum of all buffer sizes with no reuse at all — every layer output
+    /// plus every per-step scratch buffer allocated separately, which is
+    /// what the pre-plan executor effectively did. The arena-reuse test
+    /// asserts the planned footprint is strictly smaller.
+    pub fn unplanned_bytes(&self) -> usize {
+        let mut total = self.input.len * 4;
+        for s in &self.steps {
+            total += s.out.len * 4;
+            let (fs, qs, is) = s.op.scratch();
+            for sp in fs.into_iter().flatten() {
+                total += sp.len * 4;
+            }
+            if let Some(sp) = qs {
+                total += sp.len;
+            }
+            if let Some(sp) = is {
+                total += sp.len * 4;
+            }
+        }
+        total
+    }
+
+    /// Replay the plan: copy `x` into the input slot, run every step hot
+    /// (no per-layer allocation), and return the result with per-layer
+    /// timings exactly like the interpreter recorded them.
+    pub fn replay(&self, x: &Tensor, arena: &mut Arena) -> RunResult {
+        assert_eq!(
+            x.shape, self.input.shape,
+            "input shape {:?} vs planned {:?}",
+            x.shape, self.input.shape
+        );
+        arena.ensure(self);
+        arena.f[self.input.off..self.input.off + self.input.len]
+            .copy_from_slice(&x.data);
+        let mut layer_ms = Vec::with_capacity(self.steps.len());
+        // observed high-water marks per lane (must reproduce the plan)
+        let mut hi_f = self.input.off + self.input.len;
+        let mut hi_q = 0usize;
+        let mut hi_i = 0usize;
+        let t_all = Instant::now();
+        for step in &self.steps {
+            let t0 = Instant::now();
+            exec_step(step, arena);
+            layer_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+            hi_f = hi_f.max(step.out.off + step.out.len);
+            for s in &step.ins {
+                hi_f = hi_f.max(s.off + s.len);
+            }
+            let (fs, qs, is) = step.op.scratch();
+            for s in fs.into_iter().flatten() {
+                hi_f = hi_f.max(s.off + s.len);
+            }
+            if let Some(s) = qs {
+                hi_q = hi_q.max(s.off + s.len);
+            }
+            if let Some(s) = is {
+                hi_i = hi_i.max(s.off + s.len);
+            }
+        }
+        let out_slice = &arena.f[self.output.off..self.output.off + self.output.len];
+        let output = Tensor::from_vec(&self.output.shape, out_slice.to_vec());
+        RunResult {
+            output,
+            layer_ms,
+            total_ms: t_all.elapsed().as_secs_f64() * 1e3,
+            peak_bytes: hi_f * 4 + hi_q + hi_i * 4,
+        }
+    }
+}
+
+/// SAFETY: `base` must be valid for `s.off + s.len` reads and the span
+/// must not be mutably aliased for the returned lifetime.
+unsafe fn view_at<'a>(base: *const f32, s: &'a Slot) -> TensorView<'a> {
+    TensorView::new(&s.shape, std::slice::from_raw_parts(base.add(s.off), s.len))
+}
+
+/// SAFETY: `base` must be valid for `s.off + s.len` writes and the span
+/// must not be aliased at all for the returned lifetime.
+unsafe fn view_mut_at<'a>(base: *mut f32, s: &'a Slot) -> TensorViewMut<'a> {
+    TensorViewMut::new(
+        &s.shape,
+        std::slice::from_raw_parts_mut(base.add(s.off), s.len),
+    )
+}
+
+/// SAFETY: as `view_mut_at`, for a raw scratch span.
+unsafe fn span_mut_at<'a>(base: *mut f32, s: Span) -> &'a mut [f32] {
+    std::slice::from_raw_parts_mut(base.add(s.off), s.len)
+}
+
+/// Bind a step's arena spans and dispatch to the out-param primitive.
+fn exec_step(step: &Step, arena: &mut Arena) {
+    // The planner guarantees: the output span is disjoint from every
+    // input span unless `in_place` (where it aliases ins[0] exactly), and
+    // scratch spans are disjoint from inputs, output and each other. The
+    // debug assertions below check the invariant.
+    if step.in_place {
+        debug_assert_eq!(step.out.off, step.ins[0].off, "{}: bad alias", step.name);
+    } else {
+        for s in &step.ins {
+            debug_assert!(
+                !spans_overlap(s.off, s.len, step.out.off, step.out.len),
+                "{}: input overlaps output",
+                step.name
+            );
+        }
+    }
+    let fbase = arena.f.as_mut_ptr();
+    // SAFETY: all spans were bounds-allocated by the planner inside the
+    // lane sizes `ensure` guaranteed, and disjointness (above) makes the
+    // simultaneous &/&mut derived from `fbase` non-overlapping.
+    unsafe {
+        match &step.op {
+            Op::ConvDirect { w, bias, stride, pad, relu } => {
+                conv_direct_into(
+                    view_at(fbase, &step.ins[0]),
+                    w.view(),
+                    bias,
+                    *stride,
+                    *pad,
+                    *relu,
+                    view_mut_at(fbase, &step.out),
+                );
+            }
+            Op::ConvIm2col { w, bias, stride, pad, gemm, relu, cols } => {
+                conv_im2col_into(
+                    view_at(fbase, &step.ins[0]),
+                    w.view(),
+                    bias,
+                    *stride,
+                    *pad,
+                    *gemm,
+                    *relu,
+                    span_mut_at(fbase, *cols),
+                    view_mut_at(fbase, &step.out),
+                );
+            }
+            Op::ConvWinograd { u, bias, pad, relu, vbuf } => {
+                conv_winograd_into(
+                    view_at(fbase, &step.ins[0]),
+                    u.view(),
+                    bias,
+                    *pad,
+                    *relu,
+                    span_mut_at(fbase, *vbuf),
+                    view_mut_at(fbase, &step.out),
+                );
+            }
+            Op::ConvInt8 { qw, bias, stride, pad, relu, cols_f, cols_q, acc } => {
+                conv_int8_into(
+                    view_at(fbase, &step.ins[0]),
+                    qw,
+                    bias,
+                    *stride,
+                    *pad,
+                    *relu,
+                    span_mut_at(fbase, *cols_f),
+                    &mut arena.q[cols_q.off..cols_q.off + cols_q.len],
+                    &mut arena.acc[acc.off..acc.off + acc.len],
+                    view_mut_at(fbase, &step.out),
+                );
+            }
+            Op::ConvF16 { hw, bias, stride, pad, relu, blk, wf, cols } => {
+                conv_f16_into(
+                    view_at(fbase, &step.ins[0]),
+                    hw,
+                    bias,
+                    *stride,
+                    *pad,
+                    *relu,
+                    *blk,
+                    span_mut_at(fbase, *wf),
+                    span_mut_at(fbase, *cols),
+                    view_mut_at(fbase, &step.out),
+                );
+            }
+            Op::ConvDw { w, bias, stride, pad, relu } => {
+                conv_depthwise_into(
+                    view_at(fbase, &step.ins[0]),
+                    w.view(),
+                    bias,
+                    *stride,
+                    *pad,
+                    *relu,
+                    view_mut_at(fbase, &step.out),
+                );
+            }
+            Op::Fc { w, bias, gemm, relu } => {
+                fc_into(
+                    view_at(fbase, &step.ins[0]),
+                    w.view(),
+                    bias,
+                    *gemm,
+                    *relu,
+                    view_mut_at(fbase, &step.out),
+                );
+            }
+            Op::BatchNorm { scale, shift } => {
+                let out = view_mut_at(fbase, &step.out);
+                if !step.in_place {
+                    let src = view_at(fbase, &step.ins[0]);
+                    out.data.copy_from_slice(src.data);
+                }
+                bn_apply(out.data, &step.out.shape, scale, shift);
+            }
+            Op::Relu => {
+                let out = view_mut_at(fbase, &step.out);
+                if !step.in_place {
+                    out.data.copy_from_slice(view_at(fbase, &step.ins[0]).data);
+                }
+                for v in out.data.iter_mut() {
+                    if *v < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+            }
+            Op::Add { relu } => {
+                let out = view_mut_at(fbase, &step.out);
+                if !step.in_place {
+                    out.data.copy_from_slice(view_at(fbase, &step.ins[0]).data);
+                }
+                let b = view_at(fbase, &step.ins[1]);
+                for (a, &bv) in out.data.iter_mut().zip(b.data.iter()) {
+                    *a += bv;
+                    if *relu && *a < 0.0 {
+                        *a = 0.0;
+                    }
+                }
+            }
+            Op::Pool { kind, k, stride, pad } => {
+                pool_into(
+                    view_at(fbase, &step.ins[0]),
+                    *kind,
+                    *k,
+                    *stride,
+                    *pad,
+                    view_mut_at(fbase, &step.out),
+                );
+            }
+            Op::GlobalPool { kind } => {
+                global_pool_into(view_at(fbase, &step.ins[0]), *kind, view_mut_at(fbase, &step.out));
+            }
+            Op::Softmax => {
+                softmax_into(view_at(fbase, &step.ins[0]), view_mut_at(fbase, &step.out));
+            }
+            Op::Concat => {
+                let out = view_mut_at(fbase, &step.out);
+                let (n, c_total, h, w) = (out.n(), out.c(), out.h(), out.w());
+                let plane = h * w;
+                for ni in 0..n {
+                    let mut c_off = 0;
+                    for s in &step.ins {
+                        let t = view_at(fbase, s);
+                        let c = t.c();
+                        let src = &t.data[ni * c * plane..(ni + 1) * c * plane];
+                        let dst_base = (ni * c_total + c_off) * plane;
+                        out.data[dst_base..dst_base + c * plane].copy_from_slice(src);
+                        c_off += c;
+                    }
+                }
+            }
+            Op::Lrn { size, alpha, beta, k } => {
+                lrn_into(
+                    view_at(fbase, &step.ins[0]),
+                    *size,
+                    *alpha,
+                    *beta,
+                    *k,
+                    view_mut_at(fbase, &step.out),
+                );
+            }
+        }
+    }
+}
+
+/// y = x * scale[c] + shift[c] over an [N,C,H,W] buffer, in place.
+fn bn_apply(data: &mut [f32], shape: &[usize], scale: &[f32], shift: &[f32]) {
+    let (n, c) = (shape[0], shape[1]);
+    let plane = shape[2] * shape[3];
+    for ci in 0..c {
+        let (s, t) = (scale[ci], shift[ci]);
+        for ni in 0..n {
+            let base = (ni * c + ci) * plane;
+            for v in data[base..base + plane].iter_mut() {
+                *v = *v * s + t;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lne::graph::{Graph, Padding, PoolKind, Weights};
+    use crate::lne::platform::Platform;
+    use crate::lne::plugin::DesignSpace;
+    use crate::util::rng::Rng;
+
+    fn toy_model() -> (Graph, Weights) {
+        let mut rng = Rng::new(5);
+        let mut g = Graph::new("toy", (3, 10, 8));
+        g.push("conv1", LayerKind::Conv { k: (3, 3), stride: (1, 1), pad: Padding::Same, relu_fused: false }, 6);
+        g.push("bn1", LayerKind::BatchNorm, 0);
+        g.push("relu1", LayerKind::ReLU, 0);
+        g.push("conv2", LayerKind::Conv { k: (3, 3), stride: (1, 1), pad: Padding::Same, relu_fused: true }, 6);
+        g.push("pool", LayerKind::Pool { kind: PoolKind::Avg, k: 0, stride: 1, pad: 0, global: true }, 0);
+        g.push("fc", LayerKind::Fc { relu_fused: false }, 4);
+        g.push("prob", LayerKind::Softmax, 0);
+        let mut w = Weights::new();
+        w.insert("conv1".into(), vec![
+            Tensor::randn(&[6, 3, 3, 3], 0.5, &mut rng),
+            Tensor::randn(&[6], 0.1, &mut rng),
+        ]);
+        w.insert("conv2".into(), vec![
+            Tensor::randn(&[6, 6, 3, 3], 0.4, &mut rng),
+            Tensor::randn(&[6], 0.1, &mut rng),
+        ]);
+        w.insert("bn1".into(), vec![
+            Tensor::randn(&[6], 0.3, &mut rng),
+            Tensor::filled(&[6], 1.5),
+            Tensor::randn(&[6], 0.2, &mut rng),
+            Tensor::randn(&[6], 0.2, &mut rng),
+        ]);
+        w.insert("fc".into(), vec![
+            Tensor::randn(&[6, 4], 0.5, &mut rng),
+            Tensor::randn(&[4], 0.1, &mut rng),
+        ]);
+        (g, w)
+    }
+
+    fn residual_model() -> (Graph, Weights) {
+        let mut rng = Rng::new(2);
+        let mut g = Graph::new("res", (4, 6, 6));
+        let a = g.push("conv_a", LayerKind::Conv { k: (3, 3), stride: (1, 1), pad: Padding::Same, relu_fused: false }, 4);
+        let add = g.push_on("add", LayerKind::Add { relu_fused: true }, vec![a, 0], 0);
+        g.push_on("cat", LayerKind::Concat, vec![add, 0], 0);
+        let mut w = Weights::new();
+        w.insert("conv_a".into(), vec![
+            Tensor::randn(&[4, 4, 3, 3], 0.3, &mut rng),
+            Tensor::zeros(&[4]),
+        ]);
+        (g, w)
+    }
+
+    #[test]
+    fn region_allocator_reuses_and_coalesces() {
+        let mut r = Region::default();
+        let a = r.alloc(100);
+        let b = r.alloc(50);
+        assert_eq!((a, b), (0, 100));
+        assert_eq!(r.hi, 150);
+        r.free(a, 100);
+        // best-fit reuses the freed hole instead of growing
+        let c = r.alloc(60);
+        assert_eq!(c, 0);
+        assert_eq!(r.hi, 150);
+        r.free(c, 60);
+        r.free(b, 50);
+        // coalesced free space absorbs a larger request without more than
+        // the needed growth
+        let d = r.alloc(150);
+        assert_eq!(d, 0);
+        assert_eq!(r.hi, 150);
+    }
+
+    #[test]
+    fn plan_replay_matches_legacy_on_toy_across_all_impls() {
+        let (g, w) = toy_model();
+        let p = Prepared::new(g.clone(), w, Platform::pi4()).unwrap();
+        let mut rng = Rng::new(9);
+        let x = Tensor::randn(&[2, 3, 10, 8], 1.0, &mut rng);
+        let space = DesignSpace::build(&g, &p.platform);
+        for choice in ConvImpl::ALL {
+            let a = space.uniform(&g, choice);
+            let legacy = p.run_legacy(&x, &a);
+            let plan = p.plan(&a, x.n()).unwrap();
+            let mut arena = Arena::for_plan(&plan);
+            let replayed = plan.replay(&x, &mut arena);
+            assert_eq!(replayed.layer_ms.len(), g.layers.len());
+            // bit-exact: the same primitive code runs in both paths
+            assert!(
+                replayed.output.allclose(&legacy.output, 0.0, 0.0),
+                "{choice:?}: max diff {}",
+                replayed.output.max_abs_diff(&legacy.output)
+            );
+        }
+    }
+
+    #[test]
+    fn plan_replay_matches_legacy_on_residual_and_concat() {
+        let (g, w) = residual_model();
+        let p = Prepared::new(g.clone(), w, Platform::pi3()).unwrap();
+        let mut rng = Rng::new(7);
+        let x = Tensor::randn(&[1, 4, 6, 6], 1.0, &mut rng);
+        let space = DesignSpace::build(&g, &p.platform);
+        for choice in [ConvImpl::Direct, ConvImpl::GemmRef, ConvImpl::GemmBlocked,
+                       ConvImpl::Winograd, ConvImpl::Int8Gemm] {
+            let a = space.uniform(&g, choice);
+            let legacy = p.run_legacy(&x, &a);
+            let plan = p.plan(&a, 1).unwrap();
+            let mut arena = Arena::for_plan(&plan);
+            let replayed = plan.replay(&x, &mut arena);
+            assert!(
+                replayed.output.allclose(&legacy.output, 0.0, 0.0),
+                "{choice:?}: max diff {}",
+                replayed.output.max_abs_diff(&legacy.output)
+            );
+            // concat's second half is the raw input
+            assert_eq!(replayed.output.shape, vec![1, 8, 6, 6]);
+            assert_eq!(&replayed.output.data[4 * 36..8 * 36], &x.data[..]);
+        }
+    }
+
+    #[test]
+    fn arena_is_reused_and_peak_matches_plan() {
+        let (g, w) = toy_model();
+        let p = Prepared::new(g.clone(), w, Platform::pi4()).unwrap();
+        let mut rng = Rng::new(3);
+        let x = Tensor::randn(&[1, 3, 10, 8], 1.0, &mut rng);
+        let space = DesignSpace::build(&g, &p.platform);
+        for choice in [ConvImpl::GemmRef, ConvImpl::GemmBlocked, ConvImpl::Winograd] {
+            let a = space.uniform(&g, choice);
+            let plan = p.plan(&a, 1).unwrap();
+            // liveness reuse: the planned arena is strictly smaller than
+            // the sum of all buffers a no-reuse executor would allocate
+            assert!(
+                plan.arena_bytes() < plan.unplanned_bytes(),
+                "{choice:?}: planned {} vs unplanned {}",
+                plan.arena_bytes(),
+                plan.unplanned_bytes()
+            );
+            let mut arena = Arena::for_plan(&plan);
+            let r = plan.replay(&x, &mut arena);
+            // planned == observed peak
+            assert_eq!(r.peak_bytes, plan.arena_bytes(), "{choice:?}");
+            // replay twice on the same arena: identical output, no growth
+            let before = arena.capacity_bytes();
+            let r2 = plan.replay(&x, &mut arena);
+            assert!(r2.output.allclose(&r.output, 0.0, 0.0));
+            assert_eq!(arena.capacity_bytes(), before);
+        }
+    }
+
+    #[test]
+    fn inplace_aliasing_applies_to_sole_consumer_chains() {
+        let (g, w) = toy_model();
+        let p = Prepared::new(g.clone(), w, Platform::pi4()).unwrap();
+        let space = DesignSpace::build(&g, &p.platform);
+        let a = space.uniform(&g, ConvImpl::GemmRef);
+        let plan = p.plan(&a, 1).unwrap();
+        // bn1 and relu1 are sole consumers of their inputs -> in place
+        let bn = plan.steps.iter().find(|s| s.name == "bn1").unwrap();
+        assert!(bn.in_place);
+        assert_eq!(bn.out.off, bn.ins[0].off);
+        let relu = plan.steps.iter().find(|s| s.name == "relu1").unwrap();
+        assert!(relu.in_place);
+        // residual add input feeds two consumers -> its producer output
+        // must NOT be clobbered
+        let (g2, w2) = residual_model();
+        let p2 = Prepared::new(g2.clone(), w2, Platform::pi3()).unwrap();
+        let a2 = DesignSpace::build(&g2, &p2.platform).uniform(&g2, ConvImpl::Direct);
+        let plan2 = p2.plan(&a2, 1).unwrap();
+        let add = plan2.steps.iter().find(|s| s.name == "add").unwrap();
+        // add's first input (conv_a) has one consumer -> aliased in place;
+        // its second input (the graph input, also consumed by concat) is
+        // read-only
+        assert!(add.in_place);
+        assert_ne!(add.out.off, add.ins[1].off);
+    }
+
+    #[test]
+    fn batched_plan_rejects_wrong_input_shape() {
+        let (g, w) = toy_model();
+        let p = Prepared::new(g, w, Platform::pi4()).unwrap();
+        let a = Assignment::default_for(&p.graph);
+        let plan = p.plan(&a, 2).unwrap();
+        assert_eq!(plan.input.shape, vec![2, 3, 10, 8]);
+        let bad = Tensor::zeros(&[1, 3, 10, 8]);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut arena = Arena::for_plan(&plan);
+            plan.replay(&bad, &mut arena)
+        }));
+        assert!(result.is_err(), "shape mismatch must be rejected");
+    }
+}

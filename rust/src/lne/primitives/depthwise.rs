@@ -1,27 +1,27 @@
 //! Depthwise convolution — the specialized primitive that makes DS_CNN /
 //! MobileNet-style models fast (the "Tengine plays this well" plugin).
 
-use crate::lne::graph::{conv_out, same_pad, Padding};
-use crate::tensor::Tensor;
+use crate::lne::graph::{conv_out, resolve_pad, Padding};
+use crate::tensor::{Tensor, TensorView, TensorViewMut};
 
-/// x: [N,C,H,W], w: [C,1,kh,kw], b: [C].
-pub fn conv_depthwise(
-    x: &Tensor,
-    w: &Tensor,
+/// Out-param core (resolved padding, caller-provided output buffer).
+/// x: [N,C,H,W], w: [C,1,kh,kw], b: [C], out: [N,C,out_h,out_w].
+pub fn conv_depthwise_into(
+    x: TensorView,
+    w: TensorView,
     b: &[f32],
     stride: (usize, usize),
-    pad: Padding,
+    pad: (usize, usize),
     relu: bool,
-) -> Tensor {
+    mut out: TensorViewMut,
+) {
     let (n, c, h, wd) = (x.n(), x.c(), x.h(), x.w());
     let (wc, _, kh, kw) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
     assert_eq!(c, wc, "depthwise channel mismatch");
-    let (out_h, out_w) = conv_out(h, wd, (kh, kw), stride, pad);
-    let (pt, pl) = match pad {
-        Padding::Same => same_pad(h, wd, (kh, kw), stride),
-        Padding::Valid => (0, 0),
-    };
-    let mut out = Tensor::zeros(&[n, c, out_h, out_w]);
+    let (out_h, out_w) = (out.h(), out.w());
+    debug_assert_eq!(out.n(), n);
+    debug_assert_eq!(out.c(), c);
+    let (pt, pl) = pad;
     let kern = kh * kw;
     for ni in 0..n {
         for ci in 0..c {
@@ -52,6 +52,31 @@ pub fn conv_depthwise(
             }
         }
     }
+}
+
+/// Allocating wrapper kept for callers outside the planned path.
+/// x: [N,C,H,W], w: [C,1,kh,kw], b: [C].
+pub fn conv_depthwise(
+    x: &Tensor,
+    w: &Tensor,
+    b: &[f32],
+    stride: (usize, usize),
+    pad: Padding,
+    relu: bool,
+) -> Tensor {
+    let (h, wd) = (x.h(), x.w());
+    let k = (w.shape[2], w.shape[3]);
+    let (out_h, out_w) = conv_out(h, wd, k, stride, pad);
+    let mut out = Tensor::zeros(&[x.n(), x.c(), out_h, out_w]);
+    conv_depthwise_into(
+        x.view(),
+        w.view(),
+        b,
+        stride,
+        resolve_pad(h, wd, k, stride, pad),
+        relu,
+        out.view_mut(),
+    );
     out
 }
 

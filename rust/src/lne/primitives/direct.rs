@@ -2,27 +2,28 @@
 //! primitive is tested against, and a plugin in its own right (wins for
 //! very small channel counts where im2col overhead dominates).
 
-use crate::lne::graph::{conv_out, same_pad, Padding};
-use crate::tensor::Tensor;
+use crate::lne::graph::{conv_out, resolve_pad, Padding};
+use crate::tensor::{Tensor, TensorView, TensorViewMut};
 
-/// x: [N,C,H,W], w: [O,C,kh,kw], b: [O].
-pub fn conv_direct(
-    x: &Tensor,
-    w: &Tensor,
+/// Out-param core: padding is resolved (top, left) and the output buffer
+/// is provided by the caller (the plan arena). No allocation inside.
+/// x: [N,C,H,W], w: [O,C,kh,kw], b: [O], out: [N,O,out_h,out_w].
+pub fn conv_direct_into(
+    x: TensorView,
+    w: TensorView,
     b: &[f32],
     stride: (usize, usize),
-    pad: Padding,
+    pad: (usize, usize),
     relu: bool,
-) -> Tensor {
+    mut out: TensorViewMut,
+) {
     let (n, c, h, wd) = (x.n(), x.c(), x.h(), x.w());
     let (o, ci, kh, kw) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
     assert_eq!(c, ci, "channel mismatch");
-    let (out_h, out_w) = conv_out(h, wd, (kh, kw), stride, pad);
-    let (pt, pl) = match pad {
-        Padding::Same => same_pad(h, wd, (kh, kw), stride),
-        Padding::Valid => (0, 0),
-    };
-    let mut out = Tensor::zeros(&[n, o, out_h, out_w]);
+    let (out_h, out_w) = (out.h(), out.w());
+    debug_assert_eq!(out.n(), n);
+    debug_assert_eq!(out.c(), o);
+    let (pt, pl) = pad;
     for ni in 0..n {
         for oc in 0..o {
             let bias = b.get(oc).copied().unwrap_or(0.0);
@@ -53,6 +54,31 @@ pub fn conv_direct(
             }
         }
     }
+}
+
+/// Allocating wrapper kept for callers outside the planned path.
+/// x: [N,C,H,W], w: [O,C,kh,kw], b: [O].
+pub fn conv_direct(
+    x: &Tensor,
+    w: &Tensor,
+    b: &[f32],
+    stride: (usize, usize),
+    pad: Padding,
+    relu: bool,
+) -> Tensor {
+    let (h, wd) = (x.h(), x.w());
+    let k = (w.shape[2], w.shape[3]);
+    let (out_h, out_w) = conv_out(h, wd, k, stride, pad);
+    let mut out = Tensor::zeros(&[x.n(), w.shape[0], out_h, out_w]);
+    conv_direct_into(
+        x.view(),
+        w.view(),
+        b,
+        stride,
+        resolve_pad(h, wd, k, stride, pad),
+        relu,
+        out.view_mut(),
+    );
     out
 }
 

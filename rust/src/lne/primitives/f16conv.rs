@@ -8,48 +8,55 @@
 
 use super::gemm::{gemm_blocked, Blocking};
 use super::im2col::im2col;
-use crate::lne::graph::{conv_out, same_pad, Padding};
-use crate::tensor::{HTensor, Tensor};
+use crate::lne::graph::{conv_out, resolve_pad, Padding};
+use crate::tensor::{HTensor, Tensor, TensorView, TensorViewMut};
 use crate::util::f16::F16;
 
 pub fn prepare_weights(w: &Tensor) -> HTensor {
     HTensor::from_f32(w)
 }
 
-/// f16-storage conv: round activations through f16, GEMM in f32.
-pub fn conv_f16(
-    x: &Tensor,
+/// Out-param core: resolved padding and caller-provided staging buffers —
+/// `wf` (f32 weight staging, len = weight element count; refilled every
+/// call because the fp16->fp32 conversion traffic *is* the cost being
+/// modeled) and `cols` (patch matrix). No allocation inside.
+#[allow(clippy::too_many_arguments)]
+pub fn conv_f16_into(
+    x: TensorView,
     hw: &HTensor,
     b: &[f32],
     stride: (usize, usize),
-    pad: Padding,
+    pad: (usize, usize),
     relu: bool,
     blk: Blocking,
-) -> Tensor {
+    wf: &mut [f32],
+    cols: &mut [f32],
+    out: TensorViewMut,
+) {
     let (n, c, h, wd) = (x.n(), x.c(), x.h(), x.w());
     let o = hw.shape[0];
     let k = (hw.shape[2], hw.shape[3]);
-    let (out_h, out_w) = conv_out(h, wd, k, stride, pad);
-    let padding = match pad {
-        Padding::Same => same_pad(h, wd, k, stride),
-        Padding::Valid => (0, 0),
-    };
+    let (out_h, out_w) = (out.h(), out.w());
+    debug_assert_eq!(out.n(), n);
+    debug_assert_eq!(out.c(), o);
     let kdim = c * k.0 * k.1;
     let out_plane = out_h * out_w;
-    // dequantized weight copy (per call: fp16 units feed the MAC array each
-    // pass; the conversion traffic is the cost being modeled)
-    let wf: Vec<f32> = hw.data.iter().map(|h| h.to_f32()).collect();
-    let mut cols = vec![0.0f32; kdim * out_plane];
-    let mut out = Tensor::zeros(&[n, o, out_h, out_w]);
+    debug_assert_eq!(wf.len(), hw.data.len());
+    debug_assert_eq!(cols.len(), kdim * out_plane);
+    // dequantize the weights into the staging lane (per call: fp16 units
+    // feed the MAC array each pass)
+    for (dst, src) in wf.iter_mut().zip(hw.data.iter()) {
+        *dst = src.to_f32();
+    }
     for ni in 0..n {
         let xi = &x.data[ni * c * h * wd..(ni + 1) * c * h * wd];
-        im2col(xi, c, h, wd, k, stride, padding, out_h, out_w, &mut cols);
+        im2col(xi, c, h, wd, k, stride, pad, out_h, out_w, cols);
         // round activations through f16 storage
         for v in cols.iter_mut() {
             *v = F16::from_f32(*v).to_f32();
         }
         let ci = &mut out.data[ni * o * out_plane..(ni + 1) * o * out_plane];
-        gemm_blocked(o, kdim, out_plane, &wf, &cols, None, ci, blk);
+        gemm_blocked(o, kdim, out_plane, wf, cols, None, ci, blk);
         for oc in 0..o {
             let bias = b.get(oc).copied().unwrap_or(0.0);
             let row = &mut ci[oc * out_plane..(oc + 1) * out_plane];
@@ -61,6 +68,38 @@ pub fn conv_f16(
             }
         }
     }
+}
+
+/// Allocating wrapper kept for callers outside the planned path.
+/// f16-storage conv: round activations through f16, GEMM in f32.
+pub fn conv_f16(
+    x: &Tensor,
+    hw: &HTensor,
+    b: &[f32],
+    stride: (usize, usize),
+    pad: Padding,
+    relu: bool,
+    blk: Blocking,
+) -> Tensor {
+    let (h, wd) = (x.h(), x.w());
+    let k = (hw.shape[2], hw.shape[3]);
+    let (out_h, out_w) = conv_out(h, wd, k, stride, pad);
+    let kdim = x.c() * k.0 * k.1;
+    let mut wf = vec![0.0f32; hw.data.len()];
+    let mut cols = vec![0.0f32; kdim * out_h * out_w];
+    let mut out = Tensor::zeros(&[x.n(), hw.shape[0], out_h, out_w]);
+    conv_f16_into(
+        x.view(),
+        hw,
+        b,
+        stride,
+        resolve_pad(h, wd, k, stride, pad),
+        relu,
+        blk,
+        &mut wf,
+        &mut cols,
+        out.view_mut(),
+    );
     out
 }
 

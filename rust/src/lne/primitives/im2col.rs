@@ -2,8 +2,8 @@
 //! for the GEMM-backed plugins (Caffe/BLAS-style and blocked variants).
 
 use super::gemm::{gemm_blocked, gemm_ref, Blocking};
-use crate::lne::graph::{conv_out, same_pad, Padding};
-use crate::tensor::Tensor;
+use crate::lne::graph::{conv_out, resolve_pad, Padding};
+use crate::tensor::{Tensor, TensorView, TensorViewMut};
 
 /// Lower one image (C,H,W view within a batch) to the patch matrix:
 /// cols[(c*kh*kw + dy*kw + dx) * (out_h*out_w) + (oy*out_w + ox)].
@@ -56,39 +56,39 @@ pub enum GemmImpl {
     Blocked(Blocking),
 }
 
-/// SAME/VALID conv via im2col + GEMM. x: [N,C,H,W], w: [O,C,kh,kw], b: [O].
-pub fn conv_im2col(
-    x: &Tensor,
-    w: &Tensor,
+/// Out-param core: resolved padding, caller-provided patch-matrix scratch
+/// (`cols`, len C*kh*kw*out_h*out_w — reused across batch images) and
+/// output buffer. No allocation inside.
+/// x: [N,C,H,W], w: [O,C,kh,kw], b: [O], out: [N,O,out_h,out_w].
+#[allow(clippy::too_many_arguments)]
+pub fn conv_im2col_into(
+    x: TensorView,
+    w: TensorView,
     b: &[f32],
     stride: (usize, usize),
-    pad: Padding,
+    pad: (usize, usize),
     gemm: GemmImpl,
     relu: bool,
-) -> Tensor {
+    cols: &mut [f32],
+    out: TensorViewMut,
+) {
     let (n, c, h, wd) = (x.n(), x.c(), x.h(), x.w());
     let o = w.shape[0];
     let k = (w.shape[2], w.shape[3]);
-    let (out_h, out_w) = conv_out(h, wd, k, stride, pad);
-    let padding = match pad {
-        Padding::Same => same_pad(h, wd, k, stride),
-        Padding::Valid => (0, 0),
-    };
+    let (out_h, out_w) = (out.h(), out.w());
+    debug_assert_eq!(out.n(), n);
+    debug_assert_eq!(out.c(), o);
     let kdim = c * k.0 * k.1;
     let out_plane = out_h * out_w;
-    let mut cols = vec![0.0f32; kdim * out_plane];
-    let mut out = Tensor::zeros(&[n, o, out_h, out_w]);
-    let bias_rows: Vec<f32>; // gemm adds bias per *row*; here rows are output channels
-    bias_rows = Vec::new();
-    let _ = bias_rows;
+    debug_assert_eq!(cols.len(), kdim * out_plane);
     for ni in 0..n {
         let xi = &x.data[ni * c * h * wd..(ni + 1) * c * h * wd];
-        im2col(xi, c, h, wd, k, stride, padding, out_h, out_w, &mut cols);
+        im2col(xi, c, h, wd, k, stride, pad, out_h, out_w, cols);
         let ci = &mut out.data[ni * o * out_plane..(ni + 1) * o * out_plane];
         match gemm {
-            GemmImpl::Reference => gemm_ref(o, kdim, out_plane, &w.data, &cols, None, ci),
+            GemmImpl::Reference => gemm_ref(o, kdim, out_plane, w.data, cols, None, ci),
             GemmImpl::Blocked(blk) => {
-                gemm_blocked(o, kdim, out_plane, &w.data, &cols, None, ci, blk)
+                gemm_blocked(o, kdim, out_plane, w.data, cols, None, ci, blk)
             }
         }
         // bias is per output channel = per GEMM row
@@ -109,27 +109,73 @@ pub fn conv_im2col(
             }
         }
     }
+}
+
+/// Allocating wrapper kept for callers outside the planned path.
+/// SAME/VALID conv via im2col + GEMM. x: [N,C,H,W], w: [O,C,kh,kw], b: [O].
+pub fn conv_im2col(
+    x: &Tensor,
+    w: &Tensor,
+    b: &[f32],
+    stride: (usize, usize),
+    pad: Padding,
+    gemm: GemmImpl,
+    relu: bool,
+) -> Tensor {
+    let (h, wd) = (x.h(), x.w());
+    let k = (w.shape[2], w.shape[3]);
+    let (out_h, out_w) = conv_out(h, wd, k, stride, pad);
+    let kdim = x.c() * k.0 * k.1;
+    let mut cols = vec![0.0f32; kdim * out_h * out_w];
+    let mut out = Tensor::zeros(&[x.n(), w.shape[0], out_h, out_w]);
+    conv_im2col_into(
+        x.view(),
+        w.view(),
+        b,
+        stride,
+        resolve_pad(h, wd, k, stride, pad),
+        gemm,
+        relu,
+        &mut cols,
+        out.view_mut(),
+    );
     out
 }
 
-/// Fully connected via GEMM: x [N, C*H*W] @ w [in, out] + b.
-pub fn fc(x: &Tensor, w: &Tensor, b: &[f32], gemm: GemmImpl, relu: bool) -> Tensor {
+/// Out-param fully connected: x [N, C*H*W] @ w [in, out] + b into the
+/// caller-provided [N, out, 1, 1] buffer.
+pub fn fc_into(
+    x: TensorView,
+    w: TensorView,
+    b: &[f32],
+    gemm: GemmImpl,
+    relu: bool,
+    out: TensorViewMut,
+) {
     let n = x.shape[0];
     let in_dim: usize = x.shape[1..].iter().product();
     let (wi, wo) = (w.shape[0], w.shape[1]);
     assert_eq!(in_dim, wi, "fc input {in_dim} vs weight {wi}");
-    let mut out = Tensor::zeros(&[n, wo, 1, 1]);
+    debug_assert_eq!(out.len(), n * wo);
     match gemm {
-        GemmImpl::Reference => {
-            gemm_ref(n, in_dim, wo, &x.data, &w.data, Some(b), &mut out.data)
-        }
+        GemmImpl::Reference => gemm_ref(n, in_dim, wo, x.data, w.data, Some(b), out.data),
         GemmImpl::Blocked(blk) => {
-            gemm_blocked(n, in_dim, wo, &x.data, &w.data, Some(b), &mut out.data, blk)
+            gemm_blocked(n, in_dim, wo, x.data, w.data, Some(b), out.data, blk)
         }
     }
     if relu {
-        out.relu_inplace();
+        for v in out.data.iter_mut() {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
     }
+}
+
+/// Allocating wrapper: fully connected via GEMM, x [N, C*H*W] @ w [in, out] + b.
+pub fn fc(x: &Tensor, w: &Tensor, b: &[f32], gemm: GemmImpl, relu: bool) -> Tensor {
+    let mut out = Tensor::zeros(&[x.shape[0], w.shape[1], 1, 1]);
+    fc_into(x.view(), w.view(), b, gemm, relu, out.view_mut());
     out
 }
 

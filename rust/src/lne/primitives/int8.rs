@@ -4,8 +4,8 @@
 //! (that conversion is part of the honest cost, as on real hardware).
 
 use super::im2col::im2col;
-use crate::lne::graph::{conv_out, same_pad, Padding};
-use crate::tensor::{QTensor, Tensor};
+use crate::lne::graph::{conv_out, resolve_pad, Padding};
+use crate::tensor::{QTensor, Tensor, TensorView, TensorViewMut};
 
 /// Quantize conv weights [O,C,kh,kw] once.
 pub fn prepare_weights(w: &Tensor) -> QTensor {
@@ -42,34 +42,40 @@ pub fn gemm_i8(m: usize, k: usize, n: usize, a: &[i8], b: &[i8], c: &mut [i32]) 
     }
 }
 
-/// Int8 conv via im2col + integer GEMM. `qw` from `prepare_weights`.
-pub fn conv_int8(
-    x: &Tensor,
+/// Out-param core: resolved padding and caller-provided staging buffers —
+/// `cols_f` (f32 patch matrix), `cols_q` (its int8 quantization, same
+/// element count) and `acc` (i32 accumulators, O*out_h*out_w). These are
+/// the int8 staging lanes of the plan arena. No allocation inside.
+/// `qw` from `prepare_weights`.
+#[allow(clippy::too_many_arguments)]
+pub fn conv_int8_into(
+    x: TensorView,
     qw: &QTensor,
     b: &[f32],
     stride: (usize, usize),
-    pad: Padding,
+    pad: (usize, usize),
     relu: bool,
-) -> Tensor {
+    cols_f: &mut [f32],
+    cols_q: &mut [i8],
+    acc: &mut [i32],
+    out: TensorViewMut,
+) {
     let (n, c, h, wd) = (x.n(), x.c(), x.h(), x.w());
     let o = qw.shape[0];
     let k = (qw.shape[2], qw.shape[3]);
-    let (out_h, out_w) = conv_out(h, wd, k, stride, pad);
-    let padding = match pad {
-        Padding::Same => same_pad(h, wd, k, stride),
-        Padding::Valid => (0, 0),
-    };
+    let (out_h, out_w) = (out.h(), out.w());
+    debug_assert_eq!(out.n(), n);
+    debug_assert_eq!(out.c(), o);
     let kdim = c * k.0 * k.1;
     let out_plane = out_h * out_w;
-    let mut cols_f = vec![0.0f32; kdim * out_plane];
-    let mut cols_q = vec![0i8; kdim * out_plane];
-    let mut acc = vec![0i32; o * out_plane];
-    let mut out = Tensor::zeros(&[n, o, out_h, out_w]);
+    debug_assert_eq!(cols_f.len(), kdim * out_plane);
+    debug_assert_eq!(cols_q.len(), kdim * out_plane);
+    debug_assert_eq!(acc.len(), o * out_plane);
     for ni in 0..n {
         let xi = &x.data[ni * c * h * wd..(ni + 1) * c * h * wd];
-        im2col(xi, c, h, wd, k, stride, padding, out_h, out_w, &mut cols_f);
-        let sx = quantize_buf(&cols_f, &mut cols_q);
-        gemm_i8(o, kdim, out_plane, &qw.data, &cols_q, &mut acc);
+        im2col(xi, c, h, wd, k, stride, pad, out_h, out_w, cols_f);
+        let sx = quantize_buf(cols_f, cols_q);
+        gemm_i8(o, kdim, out_plane, &qw.data, cols_q, acc);
         let dq = sx * qw.scale;
         let obase = ni * o * out_plane;
         for oc in 0..o {
@@ -83,6 +89,39 @@ pub fn conv_int8(
             }
         }
     }
+}
+
+/// Allocating wrapper kept for callers outside the planned path.
+/// Int8 conv via im2col + integer GEMM. `qw` from `prepare_weights`.
+pub fn conv_int8(
+    x: &Tensor,
+    qw: &QTensor,
+    b: &[f32],
+    stride: (usize, usize),
+    pad: Padding,
+    relu: bool,
+) -> Tensor {
+    let (h, wd) = (x.h(), x.w());
+    let k = (qw.shape[2], qw.shape[3]);
+    let (out_h, out_w) = conv_out(h, wd, k, stride, pad);
+    let kdim = x.c() * k.0 * k.1;
+    let out_plane = out_h * out_w;
+    let mut cols_f = vec![0.0f32; kdim * out_plane];
+    let mut cols_q = vec![0i8; kdim * out_plane];
+    let mut acc = vec![0i32; qw.shape[0] * out_plane];
+    let mut out = Tensor::zeros(&[x.n(), qw.shape[0], out_h, out_w]);
+    conv_int8_into(
+        x.view(),
+        qw,
+        b,
+        stride,
+        resolve_pad(h, wd, k, stride, pad),
+        relu,
+        &mut cols_f,
+        &mut cols_q,
+        &mut acc,
+        out.view_mut(),
+    );
     out
 }
 

@@ -1,6 +1,12 @@
 //! The acceleration-library primitives LNE's plugin system selects among
 //! (paper §6.2.3). Each file is one "library"; all are validated against
 //! `direct` (the 7-loop reference).
+//!
+//! Every primitive exposes an out-param `*_into` core — borrowed
+//! `TensorView` inputs, resolved (top, left) padding, caller-provided
+//! scratch and output slices — which is what `lne::planner` steps call so
+//! the hot loop never allocates. The historical allocating signatures are
+//! kept as thin wrappers over the cores (`gemm` was already out-param).
 
 pub mod depthwise;
 pub mod direct;

@@ -1,16 +1,24 @@
 //! Pooling, softmax and LRN kernels (support layers; not plugin-selectable).
+//! Each has an out-param `_into` core (arena path) and an allocating
+//! wrapper.
 
 use crate::lne::graph::PoolKind;
-use crate::tensor::Tensor;
+use crate::tensor::{Tensor, TensorView, TensorViewMut};
 
-/// Caffe-style ceil-mode pooling over [N,C,H,W] with symmetric zero `pad`;
-/// out = ceil((H + 2p - k)/s) + 1, windows clipped to the valid region
-/// (averages divide by the clipped window size).
-pub fn pool(x: &Tensor, kind: PoolKind, k: usize, stride: usize, pad: usize) -> Tensor {
+/// Out-param ceil-mode pooling core; output geometry is read from `out`
+/// (planned by shape inference).
+pub fn pool_into(
+    x: TensorView,
+    kind: PoolKind,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    mut out: TensorViewMut,
+) {
     let (n, c, h, w) = (x.n(), x.c(), x.h(), x.w());
-    let out_h = (h + 2 * pad).saturating_sub(k).div_ceil(stride) + 1;
-    let out_w = (w + 2 * pad).saturating_sub(k).div_ceil(stride) + 1;
-    let mut out = Tensor::zeros(&[n, c, out_h, out_w]);
+    let (out_h, out_w) = (out.h(), out.w());
+    debug_assert_eq!(out.n(), n);
+    debug_assert_eq!(out.c(), c);
     for ni in 0..n {
         for ci in 0..c {
             for oy in 0..out_h {
@@ -45,14 +53,25 @@ pub fn pool(x: &Tensor, kind: PoolKind, k: usize, stride: usize, pad: usize) -> 
             }
         }
     }
+}
+
+/// Caffe-style ceil-mode pooling over [N,C,H,W] with symmetric zero `pad`;
+/// out = ceil((H + 2p - k)/s) + 1, windows clipped to the valid region
+/// (averages divide by the clipped window size).
+pub fn pool(x: &Tensor, kind: PoolKind, k: usize, stride: usize, pad: usize) -> Tensor {
+    let (h, w) = (x.h(), x.w());
+    let out_h = (h + 2 * pad).saturating_sub(k).div_ceil(stride) + 1;
+    let out_w = (w + 2 * pad).saturating_sub(k).div_ceil(stride) + 1;
+    let mut out = Tensor::zeros(&[x.n(), x.c(), out_h, out_w]);
+    pool_into(x.view(), kind, k, stride, pad, out.view_mut());
     out
 }
 
-/// Global pooling to [N,C,1,1].
-pub fn global_pool(x: &Tensor, kind: PoolKind) -> Tensor {
+/// Out-param global pooling core; out: [N,C,1,1].
+pub fn global_pool_into(x: TensorView, kind: PoolKind, out: TensorViewMut) {
     let (n, c, h, w) = (x.n(), x.c(), x.h(), x.w());
     let plane = h * w;
-    let mut out = Tensor::zeros(&[n, c, 1, 1]);
+    debug_assert_eq!(out.len(), n * c);
     for ni in 0..n {
         for ci in 0..c {
             let base = (ni * c + ci) * plane;
@@ -63,16 +82,29 @@ pub fn global_pool(x: &Tensor, kind: PoolKind) -> Tensor {
             };
         }
     }
+}
+
+/// Global pooling to [N,C,1,1].
+pub fn global_pool(x: &Tensor, kind: PoolKind) -> Tensor {
+    let mut out = Tensor::zeros(&[x.n(), x.c(), 1, 1]);
+    global_pool_into(x.view(), kind, out.view_mut());
     out
 }
 
-/// Channel-wise softmax over [N,C,1,1] (classifier head).
-pub fn softmax(x: &Tensor) -> Tensor {
-    let n = x.shape[0];
-    let c: usize = x.shape[1..].iter().product();
-    let mut out = x.clone();
+/// Out-param channel-wise softmax; same shape in and out (which may
+/// alias in memory only via the in-place wrapper below).
+pub fn softmax_into(x: TensorView, out: TensorViewMut) {
+    debug_assert_eq!(out.len(), x.len());
+    out.data.copy_from_slice(x.data);
+    softmax_inplace(x.shape, out.data);
+}
+
+/// In-place softmax over rows of [N, C*H*W].
+pub fn softmax_inplace(shape: &[usize], data: &mut [f32]) {
+    let n = shape[0];
+    let c: usize = shape[1..].iter().product();
     for ni in 0..n {
-        let row = &mut out.data[ni * c..(ni + 1) * c];
+        let row = &mut data[ni * c..(ni + 1) * c];
         let max = row.iter().fold(f32::MIN, |m, &v| m.max(v));
         let mut sum = 0.0;
         for v in row.iter_mut() {
@@ -83,13 +115,26 @@ pub fn softmax(x: &Tensor) -> Tensor {
             *v /= sum;
         }
     }
+}
+
+/// Channel-wise softmax over [N,C,1,1] (classifier head).
+pub fn softmax(x: &Tensor) -> Tensor {
+    let mut out = x.clone();
+    softmax_inplace(&x.shape, &mut out.data);
     out
 }
 
-/// Across-channel local response normalization (AlexNet/GoogLeNet).
-pub fn lrn(x: &Tensor, size: usize, alpha: f32, beta: f32, k: f32) -> Tensor {
+/// Out-param across-channel local response normalization core.
+pub fn lrn_into(
+    x: TensorView,
+    size: usize,
+    alpha: f32,
+    beta: f32,
+    k: f32,
+    mut out: TensorViewMut,
+) {
     let (n, c, h, w) = (x.n(), x.c(), x.h(), x.w());
-    let mut out = Tensor::zeros(&x.shape);
+    debug_assert_eq!(out.len(), x.len());
     let half = size / 2;
     for ni in 0..n {
         for ci in 0..c {
@@ -108,6 +153,12 @@ pub fn lrn(x: &Tensor, size: usize, alpha: f32, beta: f32, k: f32) -> Tensor {
             }
         }
     }
+}
+
+/// Across-channel local response normalization (AlexNet/GoogLeNet).
+pub fn lrn(x: &Tensor, size: usize, alpha: f32, beta: f32, k: f32) -> Tensor {
+    let mut out = Tensor::zeros(&x.shape);
+    lrn_into(x.view(), size, alpha, beta, k, out.view_mut());
     out
 }
 

@@ -5,8 +5,8 @@
 //! Restrictions: k = 3x3, stride 1. The plugin registry only offers it
 //! where those hold.
 
-use crate::lne::graph::{conv_out, same_pad, Padding};
-use crate::tensor::Tensor;
+use crate::lne::graph::{conv_out, resolve_pad, Padding};
+use crate::tensor::{Tensor, TensorView, TensorViewMut};
 
 /// Pre-transform the weights: U[o][c] = G g G^T, shape [O, C, 4, 4].
 pub fn transform_weights(w: &Tensor) -> Tensor {
@@ -71,32 +71,40 @@ fn output_transform(m: &[[f32; 4]; 4]) -> [[f32; 2]; 2] {
     ]
 }
 
-/// 3x3 stride-1 conv via Winograd F(2x2,3x3). `u` from `transform_weights`.
-pub fn conv_winograd(
-    x: &Tensor,
-    u: &Tensor,
+/// Words of tile scratch `conv_winograd_into` needs for `c` input channels
+/// (one transformed 4x4 tile per channel).
+pub fn scratch_words(c: usize) -> usize {
+    c * 16
+}
+
+/// Out-param core: 3x3 stride-1 conv via Winograd F(2x2,3x3), resolved
+/// (top, left) padding, caller-provided per-channel tile scratch `vbuf`
+/// (len `scratch_words(C)`) and output buffer. No allocation inside.
+/// `u` from `transform_weights`.
+pub fn conv_winograd_into(
+    x: TensorView,
+    u: TensorView,
     b: &[f32],
-    pad: Padding,
+    pad: (usize, usize),
     relu: bool,
-) -> Tensor {
+    vbuf: &mut [f32],
+    mut out: TensorViewMut,
+) {
     let (n, c, h, w) = (x.n(), x.c(), x.h(), x.w());
     let o = u.shape[0];
     assert_eq!(u.shape[1], c);
-    let (out_h, out_w) = conv_out(h, w, (3, 3), (1, 1), pad);
-    let (pt, pl) = match pad {
-        Padding::Same => same_pad(h, w, (3, 3), (1, 1)),
-        Padding::Valid => (0, 0),
-    };
+    let (out_h, out_w) = (out.h(), out.w());
+    debug_assert_eq!(out.n(), n);
+    debug_assert_eq!(out.c(), o);
+    debug_assert_eq!(vbuf.len(), scratch_words(c));
+    let (pt, pl) = pad;
     let tiles_y = out_h.div_ceil(2);
     let tiles_x = out_w.div_ceil(2);
-    let mut out = Tensor::zeros(&[n, o, out_h, out_w]);
-    // per-channel transformed input tiles for one tile position
-    let mut v = vec![[[0.0f32; 4]; 4]; c];
     for ni in 0..n {
         for ty in 0..tiles_y {
             for tx in 0..tiles_x {
                 // gather + transform all input channels for this tile
-                for (ic, vc) in v.iter_mut().enumerate() {
+                for (ic, vc) in vbuf.chunks_exact_mut(16).enumerate() {
                     let mut d = [[0.0f32; 4]; 4];
                     for (dy, drow) in d.iter_mut().enumerate() {
                         let iy = (ty * 2 + dy) as isize - pt as isize;
@@ -110,14 +118,17 @@ pub fn conv_winograd(
                             }
                         }
                     }
-                    *vc = input_transform(&d);
+                    let t = input_transform(&d);
+                    for (y, ty4) in t.iter().enumerate() {
+                        vc[y * 4..y * 4 + 4].copy_from_slice(ty4);
+                    }
                 }
                 for oc in 0..o {
                     let mut m = [[0.0f32; 4]; 4];
-                    for (ic, vc) in v.iter().enumerate() {
+                    for (ic, vc) in vbuf.chunks_exact(16).enumerate() {
                         for y in 0..4 {
                             for xx in 0..4 {
-                                m[y][xx] += u.at4(oc, ic, y, xx) * vc[y][xx];
+                                m[y][xx] += u.at4(oc, ic, y, xx) * vc[y * 4 + xx];
                             }
                         }
                     }
@@ -144,6 +155,30 @@ pub fn conv_winograd(
             }
         }
     }
+}
+
+/// Allocating wrapper kept for callers outside the planned path.
+/// 3x3 stride-1 conv via Winograd F(2x2,3x3). `u` from `transform_weights`.
+pub fn conv_winograd(
+    x: &Tensor,
+    u: &Tensor,
+    b: &[f32],
+    pad: Padding,
+    relu: bool,
+) -> Tensor {
+    let (h, w) = (x.h(), x.w());
+    let (out_h, out_w) = conv_out(h, w, (3, 3), (1, 1), pad);
+    let mut vbuf = vec![0.0f32; scratch_words(x.c())];
+    let mut out = Tensor::zeros(&[x.n(), u.shape[0], out_h, out_w]);
+    conv_winograd_into(
+        x.view(),
+        u.view(),
+        b,
+        resolve_pad(h, w, (3, 3), (1, 1), pad),
+        relu,
+        &mut vbuf,
+        out.view_mut(),
+    );
     out
 }
 

@@ -14,14 +14,24 @@
 use super::flops;
 use super::space::KwsArch;
 use crate::ingestion::bta::Dataset;
+use crate::lne::engine::Prepared;
+use crate::lne::graph::{Graph, LayerKind, Padding, PoolKind};
+use crate::lne::planner::Arena;
+use crate::lne::platform::Platform;
+use crate::lne::quant_explore::f32_baseline;
 use crate::runtime::EngineHandle;
+use crate::tensor::Tensor;
 use crate::training::trainer::{self, TrainConfig};
+use crate::util::rng::Rng;
 
 #[derive(Debug, Clone)]
 pub struct Evaluation {
     pub accuracy: f64,
     pub mflops: f64,
     pub size_kb: f64,
+    /// Measured single-inference LNE latency (ms), when an evaluator with
+    /// latency measurement produced this candidate (see [`WithLneLatency`]).
+    pub latency_ms: Option<f64>,
 }
 
 pub trait ArchEvaluator {
@@ -75,7 +85,70 @@ impl ArchEvaluator for Surrogate {
             accuracy: surrogate_accuracy(arch),
             mflops: flops::mflops(arch),
             size_kb: flops::size_kb(arch),
+            latency_ms: None,
         })
+    }
+}
+
+/// Build the LNE graph + random weights for a candidate (the same §5.2
+/// geometry as `models::kws::build_graph`: 40x32 input, conv1 W-stride 2).
+pub fn lne_model(arch: &KwsArch, seed: u64) -> (Graph, crate::lne::graph::Weights) {
+    let mut g = Graph::new("nas-cand", (1, flops::MEL, 2 * flops::FRAMES_AFTER_STRIDE));
+    for (i, &(k, c)) in arch.convs.iter().enumerate() {
+        let n = i + 1;
+        let stride = if i == 0 { (1, 2) } else { (1, 1) };
+        if !arch.ds || i == 0 {
+            g.push(&format!("conv{n}"),
+                   LayerKind::Conv { k: (k, k), stride, pad: Padding::Same, relu_fused: true }, c);
+        } else {
+            g.push(&format!("dw{n}"),
+                   LayerKind::DwConv { k: (k, k), stride, pad: Padding::Same, relu_fused: true }, 0);
+            g.push(&format!("pw{n}"),
+                   LayerKind::Conv { k: (1, 1), stride: (1, 1), pad: Padding::Same, relu_fused: true }, c);
+        }
+    }
+    g.push("pool", LayerKind::Pool { kind: PoolKind::Avg, k: 0, stride: 1, pad: 0, global: true }, 0);
+    g.push("fc", LayerKind::Fc { relu_fused: false }, flops::NUM_CLASSES);
+    let w = crate::models::random_weights(&g, seed);
+    (g, w)
+}
+
+/// Decorator adding *measured* LNE latency to any evaluator: per
+/// candidate, one `ExecPlan` is compiled for the f32-baseline assignment
+/// and replayed `reps` times against a shared arena (median reported) —
+/// the plan-once/run-hot protocol the engine refactor enables.
+pub struct WithLneLatency<E> {
+    pub inner: E,
+    pub platform: Platform,
+    pub reps: usize,
+}
+
+impl<E> WithLneLatency<E> {
+    pub fn new(inner: E, platform: Platform, reps: usize) -> WithLneLatency<E> {
+        WithLneLatency { inner, platform, reps: reps.max(1) }
+    }
+}
+
+impl<E: ArchEvaluator> ArchEvaluator for WithLneLatency<E> {
+    fn evaluate(&mut self, arch: &KwsArch) -> Result<Evaluation, String> {
+        let mut eval = self.inner.evaluate(arch)?;
+        let (g, w) = lne_model(arch, 7);
+        let p = Prepared::new(g, w, self.platform.clone())?;
+        let a = f32_baseline(&p);
+        let plan = p.plan(&a, 1)?;
+        let mut arena = Arena::for_plan(&plan);
+        let mut rng = Rng::new(11);
+        let x = Tensor::randn(
+            &[1, 1, flops::MEL, 2 * flops::FRAMES_AFTER_STRIDE],
+            1.0,
+            &mut rng,
+        );
+        let mut times: Vec<f64> = (0..self.reps)
+            .map(|_| plan.replay(&x, &mut arena).layer_ms.iter().sum())
+            .collect();
+        times.sort_by(|t1, t2| t1.partial_cmp(t2).unwrap());
+        eval.latency_ms = Some(times[times.len() / 2]);
+        Ok(eval)
     }
 }
 
@@ -155,6 +228,7 @@ impl ArchEvaluator for Real<'_> {
             accuracy: acc * 100.0,
             mflops: flops::mflops(arch),
             size_kb: flops::size_kb(arch),
+            latency_ms: None,
         })
     }
 }
@@ -199,5 +273,31 @@ mod tests {
     fn surrogate_is_deterministic() {
         let a = paper_arch("kws3").unwrap();
         assert_eq!(surrogate_accuracy(&a), surrogate_accuracy(&a));
+    }
+
+    #[test]
+    fn latency_decorator_measures_via_one_plan() {
+        let arch = KwsArch {
+            ds: false,
+            convs: vec![(3, 10), (1, 10), (3, 10), (1, 10), (3, 10), (1, 10)],
+        };
+        let mut e = WithLneLatency::new(Surrogate, crate::lne::platform::Platform::pi4(), 3);
+        let ev = e.evaluate(&arch).unwrap();
+        let ms = ev.latency_ms.expect("decorator fills latency");
+        assert!(ms > 0.0 && ms.is_finite());
+        // bigger model -> more measured time (coarse sanity, generous gap)
+        let big = KwsArch { ds: false, convs: vec![(5, 100); 6] };
+        let ev_big = e.evaluate(&big).unwrap();
+        assert!(ev_big.latency_ms.unwrap() > ms);
+    }
+
+    #[test]
+    fn ds_candidate_builds_lne_graph() {
+        let arch = paper_arch("ds_kws9").unwrap();
+        let (g, w) = lne_model(&arch, 0);
+        let p = Prepared::new(g, w, crate::lne::platform::Platform::pi3()).unwrap();
+        let x = Tensor::zeros(&[1, 1, flops::MEL, 2 * flops::FRAMES_AFTER_STRIDE]);
+        let r = p.run_default(&x);
+        assert_eq!(r.output.shape, vec![1, flops::NUM_CLASSES, 1, 1]);
     }
 }

@@ -11,6 +11,7 @@
 //! quantize/dequantize of activations) are learned automatically.
 
 use crate::lne::engine::Prepared;
+use crate::lne::planner::Arena;
 use crate::lne::plugin::{Assignment, ConvImpl, DesignSpace};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
@@ -60,6 +61,11 @@ pub fn search(p: &Prepared, x: &Tensor, cfg: &QsDnnConfig) -> SearchOutcome {
     let mut counts: HashMap<(usize, ConvImpl), usize> = HashMap::new();
     let mut episode_ms = Vec::with_capacity(cfg.episodes);
     let mut best: Option<(Assignment, f64)> = None;
+    // one arena reused across every episode's plan (grows to the max and
+    // then stays). Compiling still clones the weight set into each
+    // episode's plan — the *replay* is what runs allocation-free; see
+    // ExecPlan::compile on that trade-off.
+    let mut arena = Arena::new();
 
     for ep in 0..cfg.episodes {
         let explore = ep < cfg.explore_episodes;
@@ -87,7 +93,11 @@ pub fn search(p: &Prepared, x: &Tensor, cfg: &QsDnnConfig) -> SearchOutcome {
             };
             a.choices[*layer] = Some(pick);
         }
-        let run = p.run(x, &a);
+        // plan once for this episode's assignment, then replay hot — the
+        // per-layer timings QS-DNN learns from come from the same replay
+        // loop the deployment will run
+        let plan = p.plan(&a, x.n()).expect("plannable graph");
+        let run = plan.replay(x, &mut arena);
         // update Q with measured per-layer latency
         for (layer, _) in &space.layers {
             let choice = a.choices[*layer].unwrap();
@@ -120,7 +130,8 @@ pub fn search(p: &Prepared, x: &Tensor, cfg: &QsDnnConfig) -> SearchOutcome {
             .unwrap();
         greedy.choices[*layer] = Some(pick);
     }
-    let greedy_run = p.run(x, &greedy);
+    let greedy_plan = p.plan(&greedy, x.n()).expect("plannable graph");
+    let greedy_run = greedy_plan.replay(x, &mut arena);
     let greedy_ms: f64 = greedy_run.layer_ms.iter().sum();
     let (best_a, best_ms) = best.unwrap();
     let (best, best_ms) = if greedy_ms < best_ms {
@@ -131,10 +142,14 @@ pub fn search(p: &Prepared, x: &Tensor, cfg: &QsDnnConfig) -> SearchOutcome {
     SearchOutcome { best, best_ms, episode_ms, q }
 }
 
-/// Median latency of a fixed uniform assignment (baseline for comparisons).
+/// Median latency of a fixed assignment (baseline for comparisons): the
+/// plan is compiled once and replayed `reps` times against one arena, so
+/// the measurement loop itself performs no per-run allocation.
 pub fn measure(p: &Prepared, x: &Tensor, a: &Assignment, reps: usize) -> f64 {
+    let plan = p.plan(a, x.n()).expect("plannable graph");
+    let mut arena = Arena::for_plan(&plan);
     let mut times: Vec<f64> = (0..reps.max(1))
-        .map(|_| p.run(x, a).layer_ms.iter().sum())
+        .map(|_| plan.replay(x, &mut arena).layer_ms.iter().sum())
         .collect();
     times.sort_by(|a, b| a.partial_cmp(b).unwrap());
     times[times.len() / 2]

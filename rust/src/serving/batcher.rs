@@ -1,12 +1,21 @@
 //! Dynamic batcher: coalesces concurrent requests into the compiled batch
 //! buckets. Policy: flush when the largest bucket fills, or when the oldest
 //! queued request has waited `max_wait_ms` (latency SLO knob).
+//!
+//! Two backends share the bucket policy: the PJRT [`Batcher`] (AOT
+//! executables) and the [`LneBatcher`], which holds one precompiled
+//! `ExecPlan` + arena per batch bucket so steady-state LNE inference
+//! performs zero heap allocation in the execution hot loop.
 
 use super::metrics::ServingMetrics;
 use super::ServableModel;
+use crate::lne::engine::Prepared;
+use crate::lne::planner::{Arena, ExecPlan};
+use crate::lne::plugin::Assignment;
 use crate::runtime::{EngineHandle, OwnedInput};
+use crate::tensor::Tensor;
 use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 #[derive(Debug, Clone)]
@@ -220,6 +229,121 @@ fn run_batch(
     Ok(preds)
 }
 
+/// Mutable per-bucket execution state: the preallocated arena plus a
+/// staging input tensor requests are packed into (both reused forever).
+struct LneBucketState {
+    arena: Arena,
+    staging: Tensor,
+}
+
+struct LneBucket {
+    batch: usize,
+    plan: ExecPlan,
+    state: Mutex<LneBucketState>,
+}
+
+/// LNE serving backend: one `ExecPlan` + arena per batch bucket,
+/// compiled at registration time (plan once, run hot). Requests are
+/// packed into the bucket's staging tensor, the plan is replayed against
+/// the bucket arena, and per-request score rows are sliced back out —
+/// no per-request heap allocation inside the execution loop.
+pub struct LneBatcher {
+    prepared: Arc<Prepared>,
+    assignment: Assignment,
+    buckets: Vec<LneBucket>,
+}
+
+impl LneBatcher {
+    /// Precompile plans for every bucket size in `batches` (deduplicated,
+    /// ascending).
+    pub fn new(
+        prepared: Arc<Prepared>,
+        assignment: Assignment,
+        batches: &[usize],
+    ) -> Result<LneBatcher, String> {
+        let (c, h, w) = prepared.graph.input;
+        let mut sizes: Vec<usize> = batches.iter().copied().filter(|&b| b > 0).collect();
+        sizes.sort_unstable();
+        sizes.dedup();
+        if sizes.is_empty() {
+            return Err("no batch buckets given".into());
+        }
+        let mut buckets = Vec::with_capacity(sizes.len());
+        for &b in &sizes {
+            let plan = prepared.plan(&assignment, b)?;
+            let arena = Arena::for_plan(&plan);
+            let staging = Tensor::zeros(&[b, c, h, w]);
+            buckets.push(LneBucket { batch: b, plan, state: Mutex::new(LneBucketState { arena, staging }) });
+        }
+        Ok(LneBatcher { prepared, assignment, buckets })
+    }
+
+    pub fn bucket_sizes(&self) -> Vec<usize> {
+        self.buckets.iter().map(|b| b.batch).collect()
+    }
+
+    /// Bucket chosen for `n` concurrent requests: the smallest bucket
+    /// that fits, else the largest (callers chunk above that).
+    pub fn bucket_for(&self, n: usize) -> usize {
+        self.buckets
+            .iter()
+            .map(|b| b.batch)
+            .find(|&b| b >= n)
+            .unwrap_or_else(|| self.buckets.last().unwrap().batch)
+    }
+
+    /// Planned arena footprint of the largest bucket (capacity planning).
+    pub fn peak_bytes(&self) -> usize {
+        self.buckets.iter().map(|b| b.plan.arena_bytes()).max().unwrap_or(0)
+    }
+
+    pub fn assignment(&self) -> &Assignment {
+        &self.assignment
+    }
+
+    pub fn prepared(&self) -> &Prepared {
+        &self.prepared
+    }
+
+    /// Run a set of single-sample inputs (each C*H*W long), batching
+    /// through the buckets; returns one score row per request.
+    pub fn infer(&self, samples: &[Vec<f32>]) -> Result<Vec<Vec<f32>>, String> {
+        let (c, h, w) = self.prepared.graph.input;
+        let sample_len = c * h * w;
+        let mut out = Vec::with_capacity(samples.len());
+        let largest = self.buckets.last().unwrap().batch;
+        for chunk in samples.chunks(largest.max(1)) {
+            let bucket_size = self.bucket_for(chunk.len());
+            let bucket = self
+                .buckets
+                .iter()
+                .find(|b| b.batch == bucket_size)
+                .expect("bucket_for returns an existing bucket");
+            let mut st = bucket.state.lock().map_err(|_| "bucket poisoned")?;
+            let st = &mut *st;
+            for (i, s) in chunk.iter().enumerate() {
+                if s.len() != sample_len {
+                    return Err(format!(
+                        "sample must be {sample_len} values, got {}",
+                        s.len()
+                    ));
+                }
+                st.staging.data[i * sample_len..(i + 1) * sample_len].copy_from_slice(s);
+            }
+            // zero the padded lanes so replay stays deterministic
+            for v in st.staging.data[chunk.len() * sample_len..].iter_mut() {
+                *v = 0.0;
+            }
+            let result = bucket.plan.replay(&st.staging, &mut st.arena);
+            let row = result.output.len() / bucket.batch;
+            for i in 0..chunk.len() {
+                out.push(result.output.data[i * row..(i + 1) * row].to_vec());
+            }
+        }
+        Ok(out)
+    }
+}
+
 fn softmax(row: &[f32]) -> Vec<f32> {
     let max = row.iter().fold(f32::MIN, |m, &v| m.max(v));
     let exps: Vec<f32> = row.iter().map(|&v| (v - max).exp()).collect();
@@ -238,11 +362,82 @@ fn argmax(v: &[f32]) -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::lne::graph::{Graph, LayerKind, Padding, PoolKind, Weights};
+    use crate::lne::platform::Platform;
+    use crate::lne::plugin::{applicable, ConvImpl};
+    use crate::util::rng::Rng;
 
     #[test]
     fn softmax_and_argmax() {
         let s = softmax(&[0.0, 2.0, 1.0]);
         assert!((s.iter().sum::<f32>() - 1.0).abs() < 1e-6);
         assert_eq!(argmax(&s), 1);
+    }
+
+    fn lne_model() -> (Arc<Prepared>, Assignment) {
+        let mut rng = Rng::new(0);
+        let mut g = Graph::new("serve", (2, 6, 6));
+        g.push("conv1", LayerKind::Conv { k: (3, 3), stride: (1, 1), pad: Padding::Same, relu_fused: true }, 4);
+        g.push("pool", LayerKind::Pool { kind: PoolKind::Avg, k: 0, stride: 1, pad: 0, global: true }, 0);
+        g.push("fc", LayerKind::Fc { relu_fused: false }, 3);
+        g.push("prob", LayerKind::Softmax, 0);
+        let mut w = Weights::new();
+        w.insert("conv1".into(), vec![
+            Tensor::randn(&[4, 2, 3, 3], 0.5, &mut rng),
+            Tensor::zeros(&[4]),
+        ]);
+        w.insert("fc".into(), vec![
+            Tensor::randn(&[4, 3], 0.5, &mut rng),
+            Tensor::zeros(&[3]),
+        ]);
+        let p = Prepared::new(g, w, Platform::pi4()).unwrap();
+        let mut a = Assignment::default_for(&p.graph);
+        for (i, l) in p.graph.layers.iter().enumerate() {
+            let ch = applicable(&l.kind, &p.platform);
+            if !ch.is_empty() {
+                a.choices[i] = Some(if ch.contains(&ConvImpl::GemmBlocked) {
+                    ConvImpl::GemmBlocked
+                } else {
+                    ch[0]
+                });
+            }
+        }
+        (Arc::new(p), a)
+    }
+
+    #[test]
+    fn lne_batcher_matches_single_sample_runs() {
+        let (p, a) = lne_model();
+        let batcher = LneBatcher::new(Arc::clone(&p), a.clone(), &[4, 1]).unwrap();
+        assert_eq!(batcher.bucket_sizes(), vec![1, 4]);
+        assert_eq!(batcher.bucket_for(1), 1);
+        assert_eq!(batcher.bucket_for(3), 4);
+        assert_eq!(batcher.bucket_for(9), 4);
+        let mut rng = Rng::new(4);
+        let samples: Vec<Vec<f32>> = (0..3)
+            .map(|_| Tensor::randn(&[2, 6, 6], 1.0, &mut rng).data)
+            .collect();
+        let preds = batcher.infer(&samples).unwrap();
+        assert_eq!(preds.len(), 3);
+        for (s, row) in samples.iter().zip(preds.iter()) {
+            let x = Tensor::from_vec(&[1, 2, 6, 6], s.clone());
+            let single = p.run(&x, &a);
+            assert_eq!(row.len(), 3);
+            for (got, want) in row.iter().zip(single.output.data.iter()) {
+                assert!((got - want).abs() < 1e-6, "{got} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn lne_batcher_chunks_above_largest_bucket() {
+        let (p, a) = lne_model();
+        let batcher = LneBatcher::new(p, a, &[2]).unwrap();
+        let samples: Vec<Vec<f32>> = (0..5).map(|i| vec![0.1 * i as f32; 72]).collect();
+        let preds = batcher.infer(&samples).unwrap();
+        assert_eq!(preds.len(), 5);
+        assert!(batcher.peak_bytes() > 0);
+        // wrong sample size is rejected
+        assert!(batcher.infer(&[vec![0.0; 10]]).is_err());
     }
 }

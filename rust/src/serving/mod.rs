@@ -11,7 +11,7 @@ pub mod batcher;
 pub mod metrics;
 pub mod server;
 
-pub use batcher::{Batcher, BatcherConfig, Prediction};
+pub use batcher::{Batcher, BatcherConfig, LneBatcher, Prediction};
 pub use metrics::ServingMetrics;
 pub use server::KwsServer;
 

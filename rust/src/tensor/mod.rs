@@ -98,13 +98,15 @@ impl Tensor {
         self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
     }
 
+    /// Symmetric closeness: |a-b| <= atol + rtol * max(|a|,|b|), so the
+    /// result does not depend on argument order.
     pub fn allclose(&self, other: &Tensor, rtol: f32, atol: f32) -> bool {
         self.shape == other.shape
             && self
                 .data
                 .iter()
                 .zip(other.data.iter())
-                .all(|(a, b)| (a - b).abs() <= atol + rtol * b.abs())
+                .all(|(a, b)| (a - b).abs() <= atol + rtol * a.abs().max(b.abs()))
     }
 
     pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
@@ -113,6 +115,104 @@ impl Tensor {
             .iter()
             .zip(other.data.iter())
             .fold(0.0f32, |m, (a, b)| m.max((a - b).abs()))
+    }
+
+    /// Borrow this tensor as an immutable view.
+    pub fn view(&self) -> TensorView<'_> {
+        TensorView { shape: &self.shape, data: &self.data }
+    }
+
+    /// Borrow this tensor as a mutable view.
+    pub fn view_mut(&mut self) -> TensorViewMut<'_> {
+        TensorViewMut { shape: &self.shape, data: &mut self.data }
+    }
+}
+
+/// Borrowed immutable view over a dense f32 buffer: a shape plus a slice.
+/// This is how plan steps address activations inside the execution arena
+/// without copying them into owned `Tensor`s (§6.2.2 planned memory).
+#[derive(Debug, Clone, Copy)]
+pub struct TensorView<'a> {
+    pub shape: &'a [usize],
+    pub data: &'a [f32],
+}
+
+impl<'a> TensorView<'a> {
+    pub fn new(shape: &'a [usize], data: &'a [f32]) -> TensorView<'a> {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        TensorView { shape, data }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// NCHW accessors (panic on rank != 4 in debug).
+    pub fn n(&self) -> usize { self.shape[0] }
+    pub fn c(&self) -> usize { self.shape[1] }
+    pub fn h(&self) -> usize { self.shape[2] }
+    pub fn w(&self) -> usize { self.shape[3] }
+
+    #[inline]
+    pub fn at4(&self, n: usize, c: usize, h: usize, w: usize) -> f32 {
+        debug_assert_eq!(self.shape.len(), 4);
+        let (cc, hh, ww) = (self.shape[1], self.shape[2], self.shape[3]);
+        self.data[((n * cc + c) * hh + h) * ww + w]
+    }
+
+    /// Materialize an owned tensor (copies).
+    pub fn to_tensor(&self) -> Tensor {
+        Tensor { shape: self.shape.to_vec(), data: self.data.to_vec() }
+    }
+}
+
+/// Borrowed mutable view over a dense f32 buffer (arena output slot).
+#[derive(Debug)]
+pub struct TensorViewMut<'a> {
+    pub shape: &'a [usize],
+    pub data: &'a mut [f32],
+}
+
+impl<'a> TensorViewMut<'a> {
+    pub fn new(shape: &'a [usize], data: &'a mut [f32]) -> TensorViewMut<'a> {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        TensorViewMut { shape, data }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn n(&self) -> usize { self.shape[0] }
+    pub fn c(&self) -> usize { self.shape[1] }
+    pub fn h(&self) -> usize { self.shape[2] }
+    pub fn w(&self) -> usize { self.shape[3] }
+
+    #[inline]
+    pub fn at4(&self, n: usize, c: usize, h: usize, w: usize) -> f32 {
+        debug_assert_eq!(self.shape.len(), 4);
+        let (cc, hh, ww) = (self.shape[1], self.shape[2], self.shape[3]);
+        self.data[((n * cc + c) * hh + h) * ww + w]
+    }
+
+    #[inline]
+    pub fn set4(&mut self, n: usize, c: usize, h: usize, w: usize, v: f32) {
+        debug_assert_eq!(self.shape.len(), 4);
+        let (cc, hh, ww) = (self.shape[1], self.shape[2], self.shape[3]);
+        self.data[((n * cc + c) * hh + h) * ww + w] = v;
+    }
+
+    /// Downgrade to an immutable view (reborrows).
+    pub fn as_view(&self) -> TensorView<'_> {
+        TensorView { shape: self.shape, data: self.data }
     }
 }
 
@@ -203,6 +303,29 @@ mod tests {
         // error bounded by half a quantization step
         let step = q.scale;
         assert!(t.max_abs_diff(&back) <= step * 0.5 + 1e-6);
+    }
+
+    #[test]
+    fn allclose_is_symmetric() {
+        let a = Tensor::from_vec(&[2], vec![100.0, 1.0]);
+        let b = Tensor::from_vec(&[2], vec![100.9, 1.0]);
+        assert_eq!(a.allclose(&b, 1e-2, 0.0), b.allclose(&a, 1e-2, 0.0));
+        assert!(a.allclose(&b, 1e-2, 0.0));
+        assert!(!a.allclose(&b, 1e-3, 0.0));
+    }
+
+    #[test]
+    fn views_share_storage() {
+        let mut t = Tensor::zeros(&[1, 2, 2, 2]);
+        {
+            let mut v = t.view_mut();
+            v.set4(0, 1, 1, 1, 9.0);
+            assert_eq!(v.at4(0, 1, 1, 1), 9.0);
+        }
+        let v = t.view();
+        assert_eq!(v.at4(0, 1, 1, 1), 9.0);
+        assert_eq!(v.to_tensor().data, t.data);
+        assert_eq!(v.len(), 8);
     }
 
     #[test]

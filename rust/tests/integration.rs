@@ -138,3 +138,49 @@ fn full_pipeline_workflow_learns_and_compresses() {
     let ds = Dataset::from_bta(&bta, "mfcc").unwrap();
     assert_eq!(ds.row(), engine.manifest.mel_bands * engine.manifest.frames);
 }
+
+/// Plan/arena serving path end to end — requires no AOT artifacts: build
+/// a paper KWS architecture as an LNE graph, compile one ExecPlan per
+/// batch bucket, and serve requests through the bucketed batcher with
+/// planned (== observed) peak memory.
+#[test]
+fn lne_planned_serving_runs_without_artifacts() {
+    use bonseyes::lne::engine::Prepared;
+    use bonseyes::lne::planner::Arena;
+    use bonseyes::lne::platform::Platform;
+    use bonseyes::lne::quant_explore::f32_baseline;
+    use bonseyes::nas::evaluator::lne_model;
+    use bonseyes::nas::space::paper_arch;
+    use bonseyes::serving::LneBatcher;
+    use bonseyes::tensor::Tensor;
+    use bonseyes::util::rng::Rng;
+    use std::sync::Arc;
+
+    let arch = paper_arch("kws9").unwrap();
+    let (g, w) = lne_model(&arch, 3);
+    let (c, h, wd) = g.input;
+    let p = Arc::new(Prepared::new(g, w, Platform::pi4()).unwrap());
+    let a = f32_baseline(&p);
+
+    // planned == observed peak on a direct replay
+    let plan = p.plan(&a, 1).unwrap();
+    let mut arena = Arena::for_plan(&plan);
+    let mut rng = Rng::new(1);
+    let x = Tensor::randn(&[1, c, h, wd], 1.0, &mut rng);
+    let r = plan.replay(&x, &mut arena);
+    assert_eq!(r.peak_bytes, plan.arena_bytes());
+    assert!(r.output.data.iter().all(|v| v.is_finite()));
+
+    // bucketed serving over the same prepared model
+    let batcher = LneBatcher::new(Arc::clone(&p), a, &[1, 4]).unwrap();
+    let samples: Vec<Vec<f32>> = (0..5)
+        .map(|_| Tensor::randn(&[c, h, wd], 1.0, &mut rng).data)
+        .collect();
+    let rows = batcher.infer(&samples).unwrap();
+    assert_eq!(rows.len(), 5);
+    for row in &rows {
+        assert_eq!(row.len(), 12); // NUM_CLASSES logits
+        assert!(row.iter().all(|v| v.is_finite()));
+    }
+    assert!(batcher.peak_bytes() >= plan.arena_bytes());
+}
