@@ -7,13 +7,14 @@
 
 use bonseyes::iot::{CloudAgent, ContextBroker, EdgeAgent, MediaModule};
 use bonseyes::runtime::EngineHandle;
-use bonseyes::serving::{BatcherConfig, Router as ServingRouter, ServableModel};
+use bonseyes::serving::{BatcherConfig, ModelRouter, ServableModel};
 use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
     let engine = EngineHandle::spawn("artifacts")?;
-    let mut serving = ServingRouter::new(engine.clone());
-    serving.register(
+    let mut serving = ModelRouter::new();
+    serving.register_pjrt(
+        &engine,
         ServableModel::from_init(&engine, "ds_kws9")?,
         BatcherConfig { max_wait_ms: 3.0, ..Default::default() },
     )?;

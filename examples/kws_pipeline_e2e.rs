@@ -13,7 +13,7 @@
 use bonseyes::pipeline::artifact::ArtifactStore;
 use bonseyes::pipeline::workflow::{run, Workflow};
 use bonseyes::runtime::EngineHandle;
-use bonseyes::serving::{BatcherConfig, KwsServer, Router as ServingRouter, ServableModel};
+use bonseyes::serving::{BatcherConfig, KwsServer, ModelRouter, ServableModel};
 use bonseyes::toolset::builtin_registry;
 use bonseyes::http::client;
 use bonseyes::util::json::Json;
@@ -85,8 +85,8 @@ fn main() -> anyhow::Result<()> {
     // ---- stage 4: serve the trained model over HTTP with batching -------
     let model = ServableModel::from_artifact(&store.dir("model"))
         .map_err(|e| anyhow::anyhow!(e))?;
-    let mut router = ServingRouter::new(engine.clone());
-    router.register(model, BatcherConfig { max_wait_ms: 4.0, max_batch: 32 })?;
+    let mut router = ModelRouter::new();
+    router.register_pjrt(&engine, model, BatcherConfig { max_wait_ms: 4.0, max_batch: 32 })?;
     let serving = Arc::new(router);
     let mut server = KwsServer::serve(Arc::clone(&serving), "127.0.0.1:0", 16)?;
     let base = format!("http://{}", server.addr);

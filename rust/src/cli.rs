@@ -4,7 +4,7 @@
 //! Subcommands:
 //!   pipeline run <workflow.json> [--store DIR] [--artifacts DIR] [--force]
 //!   pipeline serve [--addr A] [--store DIR] [--artifacts DIR]
-//!   serve [--model ARCH|--app DIR]... [--addr A] [--artifacts DIR]
+//!   serve [--model ARCH|--app DIR|--lne-model ARCH]... [--addr A] [--artifacts DIR]
 //!   iot-hub [--addr A] [--model ARCH] [--artifacts DIR]
 //!   nas [--ds] [--trials N]
 //!   tools
@@ -14,7 +14,7 @@ use crate::pipeline::api::PipelineService;
 use crate::pipeline::artifact::ArtifactStore;
 use crate::pipeline::workflow::{run as run_workflow, Workflow};
 use crate::runtime::EngineHandle;
-use crate::serving::{BatcherConfig, KwsServer, Router as ServingRouter, ServableModel};
+use crate::serving::{BatcherConfig, KwsServer, ModelRouter, ServableModel};
 use crate::toolset::builtin_registry;
 use anyhow::{anyhow, bail, Context, Result};
 use std::sync::Arc;
@@ -67,7 +67,7 @@ const USAGE: &str = "bonseyes — the Bonseyes AI pipeline (paper reproduction)
 USAGE:
   bonseyes pipeline run <workflow.json> [--store DIR] [--artifacts DIR] [--force]
   bonseyes pipeline serve [--addr 127.0.0.1:8080] [--store DIR] [--artifacts DIR]
-  bonseyes serve [--model ARCH] [--app DIR] [--addr 127.0.0.1:8090] [--artifacts DIR]
+  bonseyes serve [--model ARCH] [--app DIR] [--lne-model ARCH] [--addr 127.0.0.1:8090] [--artifacts DIR]
   bonseyes iot-hub [--addr 127.0.0.1:8070] [--model ARCH] [--artifacts DIR]
   bonseyes nas [--ds] [--trials 120]
   bonseyes tools
@@ -126,20 +126,36 @@ fn pipeline_serve(args: &Args) -> Result<()> {
 }
 
 fn serve(args: &Args) -> Result<()> {
-    let eng = engine(args)?;
-    let mut router = ServingRouter::new(eng.clone());
+    let mut router = ModelRouter::new();
     let cfg = BatcherConfig {
         max_wait_ms: args.get("max-wait-ms", "5").parse().unwrap_or(5.0),
         ..Default::default()
     };
+    // PJRT-backed models register first so a trained --app (or --model)
+    // stays the default route when an LNE model rides along
     if args.has("app") {
+        let eng = engine(args)?;
         let model = ServableModel::from_artifact(std::path::Path::new(&args.get("app", "")))
             .map_err(|e| anyhow!(e))?;
-        router.register(model, cfg.clone())?;
-    } else {
+        router.register_pjrt(&eng, model, cfg.clone())?;
+    } else if args.has("model") || !args.has("lne-model") {
+        let eng = engine(args)?;
         let arch = args.get("model", "ds_kws9");
-        router.register(ServableModel::from_init(&eng, &arch)?, cfg)?;
+        router.register_pjrt(&eng, ServableModel::from_init(&eng, &arch)?, cfg.clone())?;
         eprintln!("note: serving He-init weights for {arch}; pass --app <model-artifact-dir> for a trained model");
+    }
+    // LNE-backed model: planned serving, no AOT artifacts required
+    if args.has("lne-model") {
+        let name = args.get("lne-model", "kws9");
+        let arch = crate::nas::space::paper_arch(&name)
+            .ok_or_else(|| anyhow!("unknown paper arch '{name}'"))?;
+        let (p, a) =
+            crate::nas::evaluator::lne_prepared(&arch, 7, crate::lne::platform::Platform::pi4())
+                .map_err(|e| anyhow!(e))?;
+        router
+            .register_lne(&name, p, a, &[1, 8, 32], &[], cfg)
+            .map_err(|e| anyhow!(e))?;
+        eprintln!("note: serving random LNE weights for {name} (plan/arena path)");
     }
     let addr = args.get("addr", "127.0.0.1:8090");
     let serving = Arc::new(router);
@@ -152,9 +168,10 @@ fn serve(args: &Args) -> Result<()> {
 
 fn iot_hub(args: &Args) -> Result<()> {
     let eng = engine(args)?;
-    let mut router = ServingRouter::new(eng.clone());
+    let mut router = ModelRouter::new();
     let arch = args.get("model", "ds_kws9");
-    router.register(
+    router.register_pjrt(
+        &eng,
         ServableModel::from_init(&eng, &arch)?,
         BatcherConfig::default(),
     )?;

@@ -9,7 +9,7 @@
 
 use crate::http::client;
 use crate::ingestion::synth;
-use crate::serving::Router as ServingRouter;
+use crate::serving::ModelRouter;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 use std::sync::Arc;
@@ -17,13 +17,13 @@ use std::sync::Arc;
 /// An edge device: local inference, results to the hub.
 pub struct EdgeAgent {
     pub device_id: String,
-    pub serving: Arc<ServingRouter>,
+    pub serving: Arc<ModelRouter>,
     pub broker_url: String,
     rng: Rng,
 }
 
 impl EdgeAgent {
-    pub fn new(device_id: &str, serving: Arc<ServingRouter>, broker_url: &str) -> EdgeAgent {
+    pub fn new(device_id: &str, serving: Arc<ModelRouter>, broker_url: &str) -> EdgeAgent {
         let rng = Rng::new(fnv(device_id.as_bytes()));
         EdgeAgent {
             device_id: device_id.to_string(),
@@ -48,7 +48,7 @@ impl EdgeAgent {
 
     /// Capture one utterance (synthetic mic), infer locally, push the result.
     pub fn capture_and_report(&mut self, true_class: usize) -> Result<Json, String> {
-        let nk = self.serving.engine.manifest.classes.len().saturating_sub(2);
+        let nk = self.serving.num_classes(None)?.saturating_sub(2);
         let audio = synth::generate(true_class, nk, &mut self.rng);
         let pred = self.serving.infer(None, audio)?;
         let measurement = Json::obj(vec![

@@ -6,7 +6,7 @@
 
 use super::broker::ContextBroker;
 use crate::http::{Response, Router, Server};
-use crate::serving::Router as ServingRouter;
+use crate::serving::ModelRouter;
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -14,7 +14,7 @@ use std::sync::Arc;
 pub struct MediaModule;
 
 impl MediaModule {
-    pub fn router(serving: Arc<ServingRouter>, broker: Arc<ContextBroker>) -> Router {
+    pub fn router(serving: Arc<ModelRouter>, broker: Arc<ContextBroker>) -> Router {
         let mut r = Router::new();
         r.add("POST", "/v1/media/kws", move |req, _| {
             let body = match req.json() {
@@ -53,7 +53,7 @@ impl MediaModule {
 
     /// Serve a combined hub: context broker + media module on one port.
     pub fn serve_hub(
-        serving: Arc<ServingRouter>,
+        serving: Arc<ModelRouter>,
         broker: Arc<ContextBroker>,
         addr: &str,
     ) -> std::io::Result<Server> {

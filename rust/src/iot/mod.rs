@@ -14,7 +14,7 @@ pub use media::MediaModule;
 mod tests {
     use super::*;
     use crate::runtime::EngineHandle;
-    use crate::serving::{BatcherConfig, Router as ServingRouter, ServableModel};
+    use crate::serving::{BatcherConfig, ModelRouter, ServableModel};
     use std::path::PathBuf;
     use std::sync::Arc;
 
@@ -26,9 +26,10 @@ mod tests {
             return;
         }
         let engine = EngineHandle::spawn(dir).unwrap();
-        let mut serving = ServingRouter::new(engine.clone());
+        let mut serving = ModelRouter::new();
         serving
-            .register(
+            .register_pjrt(
+                &engine,
                 ServableModel::from_init(&engine, "ds_kws9").unwrap(),
                 BatcherConfig { max_wait_ms: 1.0, ..Default::default() },
             )

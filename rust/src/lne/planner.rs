@@ -29,6 +29,8 @@ use super::primitives::int8::conv_int8_into;
 use super::primitives::pool::{global_pool_into, lrn_into, pool_into, softmax_into};
 use super::primitives::winograd::{self, conv_winograd_into};
 use crate::tensor::{HTensor, QTensor, Tensor, TensorView, TensorViewMut};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 const BN_EPS: f32 = 1e-5;
@@ -208,6 +210,63 @@ impl Arena {
     }
 }
 
+/// An arena behind a lock, lendable across model sessions.
+pub type SharedArena = Arc<Mutex<Arena>>;
+
+/// The memory identity of a compiled plan: batch size plus the planned
+/// high-water mark of every lane. Two plans with equal profiles make
+/// identical demands on an arena, so one arena can serve both.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ArenaProfile {
+    pub batch: usize,
+    pub f32_words: usize,
+    pub i8_bytes: usize,
+    pub i32_words: usize,
+}
+
+/// Cross-model arena pool (ROADMAP: arena sharing across models with
+/// identical high-water profiles). Keyed by [`ArenaProfile`]; models whose
+/// per-bucket plans have the same planned `peak_bytes` check out the *same*
+/// arena instead of each holding plan+arena per bucket. Replays serialize
+/// on the arena's lock, trading a little parallelism for a footprint that
+/// scales with distinct profiles rather than models × buckets.
+#[derive(Debug, Default)]
+pub struct ArenaPool {
+    arenas: Mutex<HashMap<ArenaProfile, SharedArena>>,
+}
+
+impl ArenaPool {
+    pub fn new() -> ArenaPool {
+        ArenaPool::default()
+    }
+
+    /// The arena for `plan`'s profile, created on first checkout and
+    /// shared with every later plan of the same profile.
+    pub fn checkout(&self, plan: &ExecPlan) -> SharedArena {
+        let key = plan.profile();
+        let mut m = self.arenas.lock().unwrap();
+        Arc::clone(
+            m.entry(key)
+                .or_insert_with(|| Arc::new(Mutex::new(Arena::for_plan(plan)))),
+        )
+    }
+
+    /// Number of distinct arenas the pool holds.
+    pub fn arena_count(&self) -> usize {
+        self.arenas.lock().unwrap().len()
+    }
+
+    /// Total bytes currently held across all pooled arenas.
+    pub fn total_bytes(&self) -> usize {
+        self.arenas
+            .lock()
+            .unwrap()
+            .values()
+            .map(|a| a.lock().map(|g| g.capacity_bytes()).unwrap_or(0))
+            .sum()
+    }
+}
+
 /// Liveness-driven offset allocator over one lane: a sorted, coalescing
 /// free list with best-fit placement; `hi` is the high-water mark that
 /// becomes the lane size.
@@ -294,7 +353,8 @@ impl ExecPlan {
     /// serving hold plans in `Arc` containers and threads replay without
     /// touching `Prepared`; the copy is paid once per compile, so hot
     /// paths compile once and replay many times (`qsdnn::measure`,
-    /// `LneBatcher`) rather than calling `Prepared::run` in a loop.
+    /// serving's `LneSession`) rather than calling `Prepared::run` in a
+    /// loop.
     pub fn compile(
         p: &Prepared,
         assignment: &Assignment,
@@ -584,6 +644,21 @@ impl ExecPlan {
     /// observes.
     pub fn arena_bytes(&self) -> usize {
         self.f32_words * 4 + self.i8_bytes + self.i32_words * 4
+    }
+
+    /// The batch size this plan was compiled for.
+    pub fn batch(&self) -> usize {
+        self.input.shape[0]
+    }
+
+    /// The plan's memory identity for [`ArenaPool`] sharing.
+    pub fn profile(&self) -> ArenaProfile {
+        ArenaProfile {
+            batch: self.batch(),
+            f32_words: self.f32_words,
+            i8_bytes: self.i8_bytes,
+            i32_words: self.i32_words,
+        }
     }
 
     /// Sum of all buffer sizes with no reuse at all — every layer output
@@ -1054,6 +1129,35 @@ mod tests {
         // read-only
         assert!(add.in_place);
         assert_ne!(add.out.off, add.ins[1].off);
+    }
+
+    #[test]
+    fn arena_pool_shares_identical_profiles() {
+        let (g, w) = toy_model();
+        let p = Prepared::new(g.clone(), w, Platform::pi4()).unwrap();
+        let space = DesignSpace::build(&g, &p.platform);
+        let a = space.uniform(&g, ConvImpl::GemmBlocked);
+        let pool = ArenaPool::new();
+        let p1 = p.plan(&a, 1).unwrap();
+        let p2 = p.plan(&a, 1).unwrap();
+        let p4 = p.plan(&a, 4).unwrap();
+        assert_eq!(p1.profile(), p2.profile());
+        let a1 = pool.checkout(&p1);
+        let a2 = pool.checkout(&p2);
+        // same profile -> the very same arena
+        assert!(Arc::ptr_eq(&a1, &a2));
+        assert_eq!(pool.arena_count(), 1);
+        // a different batch has a different profile -> its own arena
+        let a4 = pool.checkout(&p4);
+        assert!(!Arc::ptr_eq(&a1, &a4));
+        assert_eq!(pool.arena_count(), 2);
+        assert!(pool.total_bytes() >= p1.arena_bytes() + p4.arena_bytes());
+        // a checked-out arena replays correctly
+        let mut rng = Rng::new(21);
+        let x = Tensor::randn(&[1, 3, 10, 8], 1.0, &mut rng);
+        let mut guard = a1.lock().unwrap();
+        let r = p1.replay(&x, &mut guard);
+        assert_eq!(r.peak_bytes, p1.arena_bytes());
     }
 
     #[test]

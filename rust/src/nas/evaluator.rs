@@ -113,6 +113,21 @@ pub fn lne_model(arch: &KwsArch, seed: u64) -> (Graph, crate::lne::graph::Weight
     (g, w)
 }
 
+/// Build a candidate as a servable LNE model: graph + random weights at
+/// `seed`, prepared for `platform`, with the f32-baseline assignment —
+/// what serving's `LneSession` registration and the latency decorator
+/// both consume.
+pub fn lne_prepared(
+    arch: &KwsArch,
+    seed: u64,
+    platform: Platform,
+) -> Result<(std::sync::Arc<Prepared>, crate::lne::plugin::Assignment), String> {
+    let (g, w) = lne_model(arch, seed);
+    let p = Prepared::new(g, w, platform)?;
+    let a = f32_baseline(&p);
+    Ok((std::sync::Arc::new(p), a))
+}
+
 /// Decorator adding *measured* LNE latency to any evaluator: per
 /// candidate, one `ExecPlan` is compiled for the f32-baseline assignment
 /// and replayed `reps` times against a shared arena (median reported) —
@@ -132,9 +147,7 @@ impl<E> WithLneLatency<E> {
 impl<E: ArchEvaluator> ArchEvaluator for WithLneLatency<E> {
     fn evaluate(&mut self, arch: &KwsArch) -> Result<Evaluation, String> {
         let mut eval = self.inner.evaluate(arch)?;
-        let (g, w) = lne_model(arch, 7);
-        let p = Prepared::new(g, w, self.platform.clone())?;
-        let a = f32_baseline(&p);
+        let (p, a) = lne_prepared(arch, 7, self.platform.clone())?;
         let plan = p.plan(&a, 1)?;
         let mut arena = Arena::for_plan(&plan);
         let mut rng = Rng::new(11);

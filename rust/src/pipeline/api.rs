@@ -10,7 +10,7 @@ use crate::runtime::EngineHandle;
 use crate::util::json::Json;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
 #[derive(Debug, Clone)]
 pub enum RunState {
@@ -23,7 +23,9 @@ pub struct PipelineService {
     pub store: Arc<ArtifactStore>,
     pub registry: Arc<Registry>,
     pub engine: Option<EngineHandle>,
-    runs: Arc<Mutex<HashMap<u64, RunState>>>,
+    /// Run states plus a condvar notified whenever a run finishes, so
+    /// `wait` parks instead of sleep-polling.
+    runs: Arc<(Mutex<HashMap<u64, RunState>>, Condvar)>,
     next_id: AtomicU64,
 }
 
@@ -37,7 +39,7 @@ impl PipelineService {
             store,
             registry,
             engine,
-            runs: Arc::new(Mutex::new(HashMap::new())),
+            runs: Arc::new((Mutex::new(HashMap::new()), Condvar::new())),
             next_id: AtomicU64::new(1),
         })
     }
@@ -45,7 +47,7 @@ impl PipelineService {
     /// Submit a workflow for asynchronous execution; returns the run id.
     pub fn submit(self: &Arc<Self>, wf: Workflow, force: bool) -> u64 {
         let id = self.next_id.fetch_add(1, Ordering::SeqCst);
-        self.runs.lock().unwrap().insert(id, RunState::Running);
+        self.runs.0.lock().unwrap().insert(id, RunState::Running);
         let me = Arc::clone(self);
         std::thread::spawn(move || {
             let result = run_workflow(&wf, &me.registry, &me.store, me.engine.clone(), force);
@@ -53,23 +55,28 @@ impl PipelineService {
                 Ok(rep) => RunState::Done(rep),
                 Err(e) => RunState::Failed(e),
             };
-            me.runs.lock().unwrap().insert(id, state);
+            let (lock, cvar) = &*me.runs;
+            lock.lock().unwrap().insert(id, state);
+            cvar.notify_all();
         });
         id
     }
 
     pub fn state(&self, id: u64) -> Option<RunState> {
-        self.runs.lock().unwrap().get(&id).cloned()
+        self.runs.0.lock().unwrap().get(&id).cloned()
     }
 
-    /// Block until a run finishes (test/CLI helper).
+    /// Block until a run finishes (test/CLI helper): parks on the condvar
+    /// signalled at run completion rather than sleep-polling.
     pub fn wait(&self, id: u64) -> RunState {
+        let (lock, cvar) = &*self.runs;
+        let mut runs = lock.lock().unwrap();
         loop {
-            match self.state(id) {
+            match runs.get(&id) {
                 Some(RunState::Running) | None => {
-                    std::thread::sleep(std::time::Duration::from_millis(10))
+                    runs = cvar.wait(runs).unwrap();
                 }
-                Some(s) => return s,
+                Some(s) => return s.clone(),
             }
         }
     }

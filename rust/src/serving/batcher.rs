@@ -1,21 +1,20 @@
-//! Dynamic batcher: coalesces concurrent requests into the compiled batch
-//! buckets. Policy: flush when the largest bucket fills, or when the oldest
-//! queued request has waited `max_wait_ms` (latency SLO knob).
+//! The dynamic batcher: one generic coalescing loop over any
+//! [`InferenceSession`] backend. Requests are queued to a per-model
+//! batcher thread that packs them into the session's compiled batch
+//! buckets; policy: flush when the largest bucket fills, or when the
+//! oldest queued request has waited `max_wait_ms` (latency SLO knob),
+//! with waste-aware bucket choice between padding up and deferring.
 //!
-//! Two backends share the bucket policy: the PJRT [`Batcher`] (AOT
-//! executables) and the [`LneBatcher`], which holds one precompiled
-//! `ExecPlan` + arena per batch bucket so steady-state LNE inference
-//! performs zero heap allocation in the execution hot loop.
+//! Submission is asynchronous at the core: [`DynamicBatcher::submit_async`]
+//! returns a [`Ticket`] immediately, so callers (HTTP workers, IoT agents)
+//! are not thread-per-request blocked; the blocking
+//! [`DynamicBatcher::submit`] is a one-line wrapper over it.
 
 use super::metrics::ServingMetrics;
-use super::ServableModel;
-use crate::lne::engine::Prepared;
-use crate::lne::planner::{Arena, ExecPlan};
-use crate::lne::plugin::Assignment;
-use crate::runtime::{EngineHandle, OwnedInput};
-use crate::tensor::Tensor;
+use super::session::InferenceSession;
+use std::marker::PhantomData;
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 #[derive(Debug, Clone)]
@@ -43,53 +42,116 @@ impl Default for BatcherConfig {
 }
 
 struct Job {
-    audio: Vec<f32>,
+    input: Vec<f32>,
     enqueued: Instant,
     resp: mpsc::Sender<Result<Prediction, String>>,
 }
 
-pub struct Batcher {
-    tx: mpsc::Sender<Job>,
+/// A pending prediction: the receiver half of one request's response
+/// channel. Hold it, do other work, then [`wait`](Ticket::wait) (or poll
+/// with [`try_get`](Ticket::try_get)).
+pub struct Ticket {
+    rx: mpsc::Receiver<Result<Prediction, String>>,
 }
 
-impl Batcher {
+impl Ticket {
+    /// Block until the prediction is ready.
+    pub fn wait(self) -> Result<Prediction, String> {
+        self.rx.recv().map_err(|_| "batcher dropped request".to_string())?
+    }
+
+    /// Non-blocking poll: `None` while the batch is still in flight.
+    pub fn try_get(&self) -> Option<Result<Prediction, String>> {
+        match self.rx.try_recv() {
+            Ok(r) => Some(r),
+            Err(mpsc::TryRecvError::Empty) => None,
+            Err(mpsc::TryRecvError::Disconnected) => {
+                Some(Err("batcher dropped request".to_string()))
+            }
+        }
+    }
+}
+
+/// The per-model batcher: owns the queue to a worker thread that runs the
+/// single coalescing loop over `B`. Metadata (buckets, input length,
+/// classes) is snapshotted at start so the router can introspect models
+/// without touching the session, which lives on the worker thread.
+pub struct DynamicBatcher<B: InferenceSession> {
+    tx: mpsc::Sender<Job>,
+    buckets: Vec<usize>,
+    input_len: usize,
+    classes: Vec<String>,
+    _session: PhantomData<fn() -> B>,
+}
+
+impl<B: InferenceSession> DynamicBatcher<B> {
+    /// Move `session` onto a dedicated batcher thread named after `name`.
     pub fn start(
-        engine: EngineHandle,
-        model: ServableModel,
+        name: &str,
+        session: B,
         cfg: BatcherConfig,
         metrics: Arc<ServingMetrics>,
-    ) -> anyhow::Result<Batcher> {
-        let (tx, rx) = mpsc::channel::<Job>();
-        let mut buckets = engine.manifest.infer_batches(&model.arch);
+    ) -> Result<DynamicBatcher<B>, String> {
+        let buckets = session.buckets().to_vec();
         if buckets.is_empty() {
-            anyhow::bail!("no infer graphs for {}", model.arch);
+            return Err(format!("session '{name}' has no batch buckets"));
         }
-        buckets.sort_unstable();
+        debug_assert!(buckets.windows(2).all(|w| w[0] < w[1]), "buckets ascending");
+        let input_len = session.input_len();
+        let classes = session.classes();
+        let (tx, rx) = mpsc::channel::<Job>();
         std::thread::Builder::new()
-            .name(format!("batcher-{}", model.arch))
-            .spawn(move || batch_loop(engine, model, cfg, buckets, rx, metrics))?;
-        Ok(Batcher { tx })
+            .name(format!("batcher-{name}"))
+            .spawn(move || batch_loop(session, cfg, rx, metrics))
+            .map_err(|e| format!("spawn batcher thread: {e}"))?;
+        Ok(DynamicBatcher { tx, buckets, input_len, classes, _session: PhantomData })
     }
 
-    /// Submit one request; blocks until its prediction is ready.
-    pub fn submit(&self, audio: Vec<f32>) -> Result<Prediction, String> {
+    /// Submit one request; returns a [`Ticket`] without blocking on the
+    /// batch. Length is validated here so malformed requests never poison
+    /// a coalesced batch.
+    pub fn submit_async(&self, input: Vec<f32>) -> Result<Ticket, String> {
+        if input.len() != self.input_len {
+            return Err(format!(
+                "input must be {} values, got {}",
+                self.input_len,
+                input.len()
+            ));
+        }
         let (resp, rx) = mpsc::channel();
         self.tx
-            .send(Job { audio, enqueued: Instant::now(), resp })
+            .send(Job { input, enqueued: Instant::now(), resp })
             .map_err(|_| "batcher stopped".to_string())?;
-        rx.recv().map_err(|_| "batcher dropped request".to_string())?
+        Ok(Ticket { rx })
+    }
+
+    /// Submit one request and block until its prediction is ready.
+    pub fn submit(&self, input: Vec<f32>) -> Result<Prediction, String> {
+        self.submit_async(input)?.wait()
+    }
+
+    pub fn buckets(&self) -> &[usize] {
+        &self.buckets
+    }
+
+    pub fn input_len(&self) -> usize {
+        self.input_len
+    }
+
+    pub fn classes(&self) -> &[String] {
+        &self.classes
     }
 }
 
-fn batch_loop(
-    engine: EngineHandle,
-    model: ServableModel,
+/// The one coalescing loop, generic over the backend.
+fn batch_loop<B: InferenceSession>(
+    mut session: B,
     cfg: BatcherConfig,
-    buckets: Vec<usize>,
     rx: mpsc::Receiver<Job>,
     metrics: Arc<ServingMetrics>,
 ) {
-    let max_batch = cfg.max_batch.min(*buckets.last().unwrap());
+    let buckets = session.buckets().to_vec();
+    let max_batch = cfg.max_batch.min(*buckets.last().unwrap()).max(1);
     let wait = Duration::from_secs_f64(cfg.max_wait_ms / 1e3);
     let mut pending: Vec<Job> = Vec::new();
     loop {
@@ -143,17 +205,31 @@ fn batch_loop(
             (None, None) => unreachable!("buckets non-empty"),
         };
         let take = n.min(bucket);
+        let depth = pending.len();
         let batch: Vec<Job> = pending.drain(..take).collect();
         let queue_ms = batch
             .iter()
             .map(|j| j.enqueued.elapsed().as_secs_f64() * 1e3)
             .fold(0.0, f64::max);
+        let inputs: Vec<&[f32]> = batch.iter().map(|j| j.input.as_slice()).collect();
         let t0 = Instant::now();
-        let result = run_batch(&engine, &model, bucket, &batch);
+        let result = session.run_batch(bucket, &inputs);
         let infer_ms = t0.elapsed().as_secs_f64() * 1e3;
-        metrics.record_batch(batch.len(), queue_ms, infer_ms);
+        drop(inputs);
+        metrics.record_batch(bucket, batch.len(), depth, queue_ms, infer_ms);
         match result {
             Ok(mut preds) => {
+                if preds.len() != batch.len() {
+                    let e = format!(
+                        "backend returned {} predictions for {} requests",
+                        preds.len(),
+                        batch.len()
+                    );
+                    for job in batch {
+                        let _ = job.resp.send(Err(e.clone()));
+                    }
+                    continue;
+                }
                 for (job, mut p) in batch.into_iter().zip(preds.drain(..)) {
                     p.latency_ms = job.enqueued.elapsed().as_secs_f64() * 1e3;
                     p.batch_size = take;
@@ -169,189 +245,14 @@ fn batch_loop(
     }
 }
 
-fn run_batch(
-    engine: &EngineHandle,
-    model: &ServableModel,
-    bucket: usize,
-    jobs: &[Job],
-) -> Result<Vec<Prediction>, String> {
-    let m = &engine.manifest;
-    let samples = m.samples;
-    let nc = m.num_classes;
-    let arch = m.arch(&model.arch).ok_or("arch missing")?;
-    let mut audio = vec![0.0f32; bucket * samples];
-    for (i, j) in jobs.iter().enumerate() {
-        if j.audio.len() != samples {
-            return Err(format!("audio must be {samples} samples, got {}", j.audio.len()));
-        }
-        audio[i * samples..(i + 1) * samples].copy_from_slice(&j.audio);
-    }
-    // MFCC front-end (pallas kernel) at the same bucket when compiled,
-    // else fall back to chunked compute
-    let feat = m.mel_bands * m.frames;
-    let mfcc = if m.graph(&format!("mfcc_b{bucket}")).is_some() {
-        engine
-            .run(&format!("mfcc_b{bucket}"), vec![OwnedInput::new(audio, &[bucket, samples])])
-            .map_err(|e| e.to_string())?
-            .remove(0)
-    } else {
-        crate::ingestion::tools::MfccTool::compute(engine, &audio, bucket)?
-    };
-    let out = engine
-        .run(
-            &format!("{}_infer_b{bucket}", model.arch),
-            vec![
-                OwnedInput::new(model.params.as_ref().clone(), &[arch.n_params]),
-                OwnedInput::new(model.stats.as_ref().clone(), &[arch.n_stats]),
-                OwnedInput::new(mfcc, &[bucket, m.mel_bands, m.frames]),
-            ],
-        )
-        .map_err(|e| e.to_string())?;
-    let logits = &out[0];
-    let preds = (0..jobs.len())
-        .map(|i| {
-            let row = &logits[i * nc..(i + 1) * nc];
-            let scores = softmax(row);
-            let class_id = argmax(&scores);
-            Prediction {
-                class_id,
-                class: m
-                    .classes
-                    .get(class_id)
-                    .cloned()
-                    .unwrap_or_else(|| format!("class{class_id}")),
-                scores,
-                latency_ms: 0.0,
-                batch_size: 0,
-            }
-        })
-        .collect();
-    Ok(preds)
-}
-
-/// Mutable per-bucket execution state: the preallocated arena plus a
-/// staging input tensor requests are packed into (both reused forever).
-struct LneBucketState {
-    arena: Arena,
-    staging: Tensor,
-}
-
-struct LneBucket {
-    batch: usize,
-    plan: ExecPlan,
-    state: Mutex<LneBucketState>,
-}
-
-/// LNE serving backend: one `ExecPlan` + arena per batch bucket,
-/// compiled at registration time (plan once, run hot). Requests are
-/// packed into the bucket's staging tensor, the plan is replayed against
-/// the bucket arena, and per-request score rows are sliced back out —
-/// no per-request heap allocation inside the execution loop.
-pub struct LneBatcher {
-    prepared: Arc<Prepared>,
-    assignment: Assignment,
-    buckets: Vec<LneBucket>,
-}
-
-impl LneBatcher {
-    /// Precompile plans for every bucket size in `batches` (deduplicated,
-    /// ascending).
-    pub fn new(
-        prepared: Arc<Prepared>,
-        assignment: Assignment,
-        batches: &[usize],
-    ) -> Result<LneBatcher, String> {
-        let (c, h, w) = prepared.graph.input;
-        let mut sizes: Vec<usize> = batches.iter().copied().filter(|&b| b > 0).collect();
-        sizes.sort_unstable();
-        sizes.dedup();
-        if sizes.is_empty() {
-            return Err("no batch buckets given".into());
-        }
-        let mut buckets = Vec::with_capacity(sizes.len());
-        for &b in &sizes {
-            let plan = prepared.plan(&assignment, b)?;
-            let arena = Arena::for_plan(&plan);
-            let staging = Tensor::zeros(&[b, c, h, w]);
-            buckets.push(LneBucket { batch: b, plan, state: Mutex::new(LneBucketState { arena, staging }) });
-        }
-        Ok(LneBatcher { prepared, assignment, buckets })
-    }
-
-    pub fn bucket_sizes(&self) -> Vec<usize> {
-        self.buckets.iter().map(|b| b.batch).collect()
-    }
-
-    /// Bucket chosen for `n` concurrent requests: the smallest bucket
-    /// that fits, else the largest (callers chunk above that).
-    pub fn bucket_for(&self, n: usize) -> usize {
-        self.buckets
-            .iter()
-            .map(|b| b.batch)
-            .find(|&b| b >= n)
-            .unwrap_or_else(|| self.buckets.last().unwrap().batch)
-    }
-
-    /// Planned arena footprint of the largest bucket (capacity planning).
-    pub fn peak_bytes(&self) -> usize {
-        self.buckets.iter().map(|b| b.plan.arena_bytes()).max().unwrap_or(0)
-    }
-
-    pub fn assignment(&self) -> &Assignment {
-        &self.assignment
-    }
-
-    pub fn prepared(&self) -> &Prepared {
-        &self.prepared
-    }
-
-    /// Run a set of single-sample inputs (each C*H*W long), batching
-    /// through the buckets; returns one score row per request.
-    pub fn infer(&self, samples: &[Vec<f32>]) -> Result<Vec<Vec<f32>>, String> {
-        let (c, h, w) = self.prepared.graph.input;
-        let sample_len = c * h * w;
-        let mut out = Vec::with_capacity(samples.len());
-        let largest = self.buckets.last().unwrap().batch;
-        for chunk in samples.chunks(largest.max(1)) {
-            let bucket_size = self.bucket_for(chunk.len());
-            let bucket = self
-                .buckets
-                .iter()
-                .find(|b| b.batch == bucket_size)
-                .expect("bucket_for returns an existing bucket");
-            let mut st = bucket.state.lock().map_err(|_| "bucket poisoned")?;
-            let st = &mut *st;
-            for (i, s) in chunk.iter().enumerate() {
-                if s.len() != sample_len {
-                    return Err(format!(
-                        "sample must be {sample_len} values, got {}",
-                        s.len()
-                    ));
-                }
-                st.staging.data[i * sample_len..(i + 1) * sample_len].copy_from_slice(s);
-            }
-            // zero the padded lanes so replay stays deterministic
-            for v in st.staging.data[chunk.len() * sample_len..].iter_mut() {
-                *v = 0.0;
-            }
-            let result = bucket.plan.replay(&st.staging, &mut st.arena);
-            let row = result.output.len() / bucket.batch;
-            for i in 0..chunk.len() {
-                out.push(result.output.data[i * row..(i + 1) * row].to_vec());
-            }
-        }
-        Ok(out)
-    }
-}
-
-fn softmax(row: &[f32]) -> Vec<f32> {
+pub(crate) fn softmax(row: &[f32]) -> Vec<f32> {
     let max = row.iter().fold(f32::MIN, |m, &v| m.max(v));
     let exps: Vec<f32> = row.iter().map(|&v| (v - max).exp()).collect();
     let sum: f32 = exps.iter().sum();
     exps.into_iter().map(|e| e / sum).collect()
 }
 
-fn argmax(v: &[f32]) -> usize {
+pub(crate) fn argmax(v: &[f32]) -> usize {
     v.iter()
         .enumerate()
         .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
@@ -361,11 +262,31 @@ fn argmax(v: &[f32]) -> usize {
 
 #[cfg(test)]
 mod tests {
+    use super::super::session::tests::lne_toy;
+    use super::super::session::LneSession;
     use super::*;
-    use crate::lne::graph::{Graph, LayerKind, Padding, PoolKind, Weights};
-    use crate::lne::platform::Platform;
-    use crate::lne::plugin::{applicable, ConvImpl};
+    use crate::lne::planner::ArenaPool;
+    use crate::tensor::Tensor;
     use crate::util::rng::Rng;
+
+    const SAMPLE: usize = 2 * 6 * 6;
+
+    fn lne_batcher(
+        buckets: &[usize],
+        max_wait_ms: f64,
+        pool: &ArenaPool,
+        metrics: Arc<ServingMetrics>,
+    ) -> DynamicBatcher<LneSession> {
+        let (p, a) = lne_toy();
+        let session = LneSession::new(p, a, buckets, &[], pool).unwrap();
+        DynamicBatcher::start(
+            "test",
+            session,
+            BatcherConfig { max_wait_ms, max_batch: 32 },
+            metrics,
+        )
+        .unwrap()
+    }
 
     #[test]
     fn softmax_and_argmax() {
@@ -374,70 +295,109 @@ mod tests {
         assert_eq!(argmax(&s), 1);
     }
 
-    fn lne_model() -> (Arc<Prepared>, Assignment) {
-        let mut rng = Rng::new(0);
-        let mut g = Graph::new("serve", (2, 6, 6));
-        g.push("conv1", LayerKind::Conv { k: (3, 3), stride: (1, 1), pad: Padding::Same, relu_fused: true }, 4);
-        g.push("pool", LayerKind::Pool { kind: PoolKind::Avg, k: 0, stride: 1, pad: 0, global: true }, 0);
-        g.push("fc", LayerKind::Fc { relu_fused: false }, 3);
-        g.push("prob", LayerKind::Softmax, 0);
-        let mut w = Weights::new();
-        w.insert("conv1".into(), vec![
-            Tensor::randn(&[4, 2, 3, 3], 0.5, &mut rng),
-            Tensor::zeros(&[4]),
-        ]);
-        w.insert("fc".into(), vec![
-            Tensor::randn(&[4, 3], 0.5, &mut rng),
-            Tensor::zeros(&[3]),
-        ]);
-        let p = Prepared::new(g, w, Platform::pi4()).unwrap();
-        let mut a = Assignment::default_for(&p.graph);
-        for (i, l) in p.graph.layers.iter().enumerate() {
-            let ch = applicable(&l.kind, &p.platform);
-            if !ch.is_empty() {
-                a.choices[i] = Some(if ch.contains(&ConvImpl::GemmBlocked) {
-                    ConvImpl::GemmBlocked
-                } else {
-                    ch[0]
-                });
-            }
-        }
-        (Arc::new(p), a)
-    }
-
     #[test]
-    fn lne_batcher_matches_single_sample_runs() {
-        let (p, a) = lne_model();
-        let batcher = LneBatcher::new(Arc::clone(&p), a.clone(), &[4, 1]).unwrap();
-        assert_eq!(batcher.bucket_sizes(), vec![1, 4]);
-        assert_eq!(batcher.bucket_for(1), 1);
-        assert_eq!(batcher.bucket_for(3), 4);
-        assert_eq!(batcher.bucket_for(9), 4);
+    fn lne_batcher_coalesces_and_selects_buckets() {
+        let pool = ArenaPool::new();
+        let metrics = Arc::new(ServingMetrics::default());
+        let batcher = lne_batcher(&[1, 4], 50.0, &pool, Arc::clone(&metrics));
+        assert_eq!(batcher.buckets(), &[1, 4]);
+        assert_eq!(batcher.input_len(), SAMPLE);
         let mut rng = Rng::new(4);
-        let samples: Vec<Vec<f32>> = (0..3)
+        let samples: Vec<Vec<f32>> = (0..4)
             .map(|_| Tensor::randn(&[2, 6, 6], 1.0, &mut rng).data)
             .collect();
-        let preds = batcher.infer(&samples).unwrap();
-        assert_eq!(preds.len(), 3);
-        for (s, row) in samples.iter().zip(preds.iter()) {
+        // submit all four asynchronously, then collect: the generous
+        // flush deadline lets them coalesce into the 4-bucket
+        let tickets: Vec<Ticket> = samples
+            .iter()
+            .map(|s| batcher.submit_async(s.clone()).unwrap())
+            .collect();
+        let (p0, a0) = lne_toy();
+        for (s, t) in samples.iter().zip(tickets) {
+            let pred = t.wait().unwrap();
+            assert_eq!(pred.scores.len(), 3);
+            assert!(pred.latency_ms >= 0.0);
+            assert!(pred.batch_size >= 1 && pred.batch_size <= 4);
+            // prediction matches a direct single-sample run
             let x = Tensor::from_vec(&[1, 2, 6, 6], s.clone());
-            let single = p.run(&x, &a);
-            assert_eq!(row.len(), 3);
-            for (got, want) in row.iter().zip(single.output.data.iter()) {
-                assert!((got - want).abs() < 1e-6, "{got} vs {want}");
-            }
+            let single = p0.run(&x, &a0);
+            assert_eq!(pred.class_id, argmax(&single.output.data));
         }
+        let snap = metrics.snapshot();
+        assert_eq!(snap.get("requests").as_i64(), Some(4));
+        let batches = snap.get("batches").as_i64().unwrap();
+        assert!((1..=4).contains(&batches));
+        // per-bucket flush counts sum to the batch count
+        let flushes = snap.get("bucket_flushes");
+        let total: i64 = [1usize, 4]
+            .iter()
+            .filter_map(|b| flushes.get(&format!("b{b}")).as_i64())
+            .sum();
+        assert_eq!(total, batches);
+        assert!(snap.get("queue_depth_max").as_f64().unwrap() >= 1.0);
     }
 
     #[test]
-    fn lne_batcher_chunks_above_largest_bucket() {
-        let (p, a) = lne_model();
-        let batcher = LneBatcher::new(p, a, &[2]).unwrap();
-        let samples: Vec<Vec<f32>> = (0..5).map(|i| vec![0.1 * i as f32; 72]).collect();
-        let preds = batcher.infer(&samples).unwrap();
-        assert_eq!(preds.len(), 5);
-        assert!(batcher.peak_bytes() > 0);
-        // wrong sample size is rejected
-        assert!(batcher.infer(&[vec![0.0; 10]]).is_err());
+    fn flush_deadline_fires_for_a_lone_request() {
+        let pool = ArenaPool::new();
+        let metrics = Arc::new(ServingMetrics::default());
+        // only a 4-bucket compiled: a lone request can never fill it and
+        // must be flushed by the deadline, padded up
+        let batcher = lne_batcher(&[4], 15.0, &pool, Arc::clone(&metrics));
+        let x = vec![0.25f32; SAMPLE];
+        let t0 = Instant::now();
+        let pred = batcher.submit(x).unwrap();
+        let elapsed_ms = t0.elapsed().as_secs_f64() * 1e3;
+        assert_eq!(pred.batch_size, 1);
+        // flushed after the deadline, not instantly and not never
+        assert!(elapsed_ms >= 10.0, "flushed too early: {elapsed_ms}ms");
+        let snap = metrics.snapshot();
+        assert_eq!(snap.get("batches").as_i64(), Some(1));
+        assert_eq!(snap.get("bucket_flushes").get("b4").as_i64(), Some(1));
+    }
+
+    #[test]
+    fn async_submission_does_not_block_the_caller() {
+        let pool = ArenaPool::new();
+        let metrics = Arc::new(ServingMetrics::default());
+        // long deadline: a sync submit would block ~200ms
+        let batcher = lne_batcher(&[4], 200.0, &pool, metrics);
+        let t0 = Instant::now();
+        let ticket = batcher.submit_async(vec![0.5f32; SAMPLE]).unwrap();
+        let submit_ms = t0.elapsed().as_secs_f64() * 1e3;
+        assert!(submit_ms < 100.0, "submit_async blocked {submit_ms}ms");
+        // the caller thread is free while the batch coalesces
+        let polled_early = ticket.try_get();
+        let pred = match polled_early {
+            Some(r) => r.unwrap(),
+            None => ticket.wait().unwrap(),
+        };
+        assert_eq!(pred.scores.len(), 3);
+    }
+
+    #[test]
+    fn bad_input_length_is_rejected_at_submit() {
+        let pool = ArenaPool::new();
+        let batcher = lne_batcher(&[2], 1.0, &pool, Arc::new(ServingMetrics::default()));
+        assert!(batcher.submit(vec![0.0; 10]).is_err());
+        // and a well-formed request still round-trips afterwards
+        assert!(batcher.submit(vec![0.0; SAMPLE]).is_ok());
+    }
+
+    #[test]
+    fn batchers_share_arenas_through_the_pool() {
+        let pool = ArenaPool::new();
+        let metrics = Arc::new(ServingMetrics::default());
+        let b1 = lne_batcher(&[1, 4], 1.0, &pool, Arc::clone(&metrics));
+        let b2 = lne_batcher(&[1, 4], 1.0, &pool, Arc::clone(&metrics));
+        // two identical models x two buckets -> only two pooled arenas
+        assert_eq!(pool.arena_count(), 2);
+        // both batchers serve correctly over the shared arenas
+        let p1 = b1.submit(vec![0.1f32; SAMPLE]).unwrap();
+        let p2 = b2.submit(vec![0.1f32; SAMPLE]).unwrap();
+        assert_eq!(p1.class_id, p2.class_id);
+        for (a, b) in p1.scores.iter().zip(p2.scores.iter()) {
+            assert!((a - b).abs() < 1e-6);
+        }
     }
 }

@@ -1,7 +1,10 @@
-//! Serving metrics: request/batch counters + latency distributions.
+//! Serving metrics: request/batch counters, latency distributions, batcher
+//! queue depth and per-bucket flush counts. One instance is shared by all
+//! batchers behind a [`ModelRouter`](super::ModelRouter).
 
 use crate::util::json::Json;
 use crate::util::stats::Welford;
+use std::collections::BTreeMap;
 use std::sync::Mutex;
 
 #[derive(Default)]
@@ -16,20 +19,41 @@ struct Inner {
     queue_ms: Welford,
     infer_ms: Welford,
     batch_size: Welford,
+    /// Requests queued at flush time (taken + deferred): the backlog the
+    /// coalescing loop saw when it chose a bucket.
+    queue_depth: Welford,
+    /// Flush count per chosen bucket size.
+    bucket_flushes: BTreeMap<usize, u64>,
 }
 
 impl ServingMetrics {
-    pub fn record_batch(&self, size: usize, queue_ms: f64, infer_ms: f64) {
+    /// Record one flushed batch: `bucket` is the chosen bucket size,
+    /// `size` the occupied lanes, `depth` the queue length at flush.
+    pub fn record_batch(
+        &self,
+        bucket: usize,
+        size: usize,
+        depth: usize,
+        queue_ms: f64,
+        infer_ms: f64,
+    ) {
         let mut i = self.inner.lock().unwrap();
         i.requests += size as u64;
         i.batches += 1;
         i.queue_ms.push(queue_ms);
         i.infer_ms.push(infer_ms);
         i.batch_size.push(size as f64);
+        i.queue_depth.push(depth as f64);
+        *i.bucket_flushes.entry(bucket).or_insert(0) += 1;
     }
 
     pub fn snapshot(&self) -> Json {
         let i = self.inner.lock().unwrap();
+        let flushes: BTreeMap<String, Json> = i
+            .bucket_flushes
+            .iter()
+            .map(|(&b, &n)| (format!("b{b}"), Json::from(n as i64)))
+            .collect();
         Json::obj(vec![
             ("requests", Json::from(i.requests as i64)),
             ("batches", Json::from(i.batches as i64)),
@@ -39,6 +63,9 @@ impl ServingMetrics {
             ("infer_ms_mean", Json::num(i.infer_ms.mean())),
             ("infer_ms_std", Json::num(i.infer_ms.std())),
             ("infer_ms_max", Json::num(i.infer_ms.max)),
+            ("queue_depth_mean", Json::num(i.queue_depth.mean())),
+            ("queue_depth_max", Json::num(i.queue_depth.max)),
+            ("bucket_flushes", Json::Obj(flushes)),
         ])
     }
 }
@@ -50,12 +77,17 @@ mod tests {
     #[test]
     fn snapshot_aggregates() {
         let m = ServingMetrics::default();
-        m.record_batch(8, 1.0, 10.0);
-        m.record_batch(4, 3.0, 6.0);
+        m.record_batch(8, 8, 9, 1.0, 10.0);
+        m.record_batch(8, 4, 4, 3.0, 6.0);
+        m.record_batch(1, 1, 1, 0.5, 2.0);
         let s = m.snapshot();
-        assert_eq!(s.get("requests").as_i64(), Some(12));
-        assert_eq!(s.get("batches").as_i64(), Some(2));
-        assert!((s.get("mean_batch_size").as_f64().unwrap() - 6.0).abs() < 1e-9);
-        assert!((s.get("infer_ms_mean").as_f64().unwrap() - 8.0).abs() < 1e-9);
+        assert_eq!(s.get("requests").as_i64(), Some(13));
+        assert_eq!(s.get("batches").as_i64(), Some(3));
+        assert!((s.get("mean_batch_size").as_f64().unwrap() - 13.0 / 3.0).abs() < 1e-9);
+        assert!((s.get("infer_ms_mean").as_f64().unwrap() - 6.0).abs() < 1e-9);
+        // queue depth distribution and per-bucket flush counts
+        assert!((s.get("queue_depth_max").as_f64().unwrap() - 9.0).abs() < 1e-9);
+        assert_eq!(s.get("bucket_flushes").get("b8").as_i64(), Some(2));
+        assert_eq!(s.get("bucket_flushes").get("b1").as_i64(), Some(1));
     }
 }

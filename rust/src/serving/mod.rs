@@ -1,20 +1,29 @@
-//! KWS serving runtime: request router + dynamic batcher over the AOT PJRT
-//! executables. This is the "AI application on the device" the paper's IoT
-//! stage integrates (§7): audio in, keyword scores out, python nowhere on
-//! the path.
+//! Serving runtime: one inference API over interchangeable backends, the
+//! way the paper's plugin architecture lets the same application run over
+//! different engines (§6–7). A [`ModelRouter`] holds one generic
+//! [`DynamicBatcher`] per registered model, each wrapping a boxed
+//! [`InferenceSession`] — the PJRT AOT executables and the LNE plan/arena
+//! path register side by side behind the same submit/submit_async surface.
 //!
 //! Requests are routed per model to a batcher thread that coalesces them
-//! into the compiled batch buckets (1/8/32) with a flush deadline; each
-//! batch runs MFCC (pallas kernel) + inference through the engine handle.
+//! into the backend's compiled batch buckets with a flush deadline; LNE
+//! sessions check their per-bucket arenas out of a cross-model
+//! [`ArenaPool`], so models with identical high-water profiles share
+//! memory instead of each holding plan+arena per bucket.
 
 pub mod batcher;
 pub mod metrics;
 pub mod server;
+pub mod session;
 
-pub use batcher::{Batcher, BatcherConfig, LneBatcher, Prediction};
+pub use batcher::{BatcherConfig, DynamicBatcher, Prediction, Ticket};
 pub use metrics::ServingMetrics;
 pub use server::KwsServer;
+pub use session::{InferenceSession, LneSession, PjrtSession};
 
+use crate::lne::engine::Prepared;
+use crate::lne::planner::ArenaPool;
+use crate::lne::plugin::Assignment;
 use crate::runtime::EngineHandle;
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -52,61 +61,127 @@ impl ServableModel {
     }
 }
 
-/// The router: one batcher per registered model; dispatch by model name.
-pub struct Router {
-    pub engine: EngineHandle,
-    batchers: BTreeMap<String, Batcher>,
+/// The model router (formerly `serving::Router`, renamed to stop shadowing
+/// `http::Router`): one batcher per registered model over a boxed backend
+/// session; dispatch by model name.
+pub struct ModelRouter {
+    batchers: BTreeMap<String, DynamicBatcher<Box<dyn InferenceSession>>>,
     pub default_model: String,
     pub metrics: Arc<ServingMetrics>,
+    /// Cross-model arena pool for LNE sessions registered on this router.
+    pub arena_pool: Arc<ArenaPool>,
 }
 
-impl Router {
-    pub fn new(engine: EngineHandle) -> Router {
-        Router {
-            engine,
+impl Default for ModelRouter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ModelRouter {
+    pub fn new() -> ModelRouter {
+        ModelRouter {
             batchers: BTreeMap::new(),
             default_model: String::new(),
             metrics: Arc::new(ServingMetrics::default()),
+            arena_pool: Arc::new(ArenaPool::new()),
         }
     }
 
-    pub fn register(&mut self, model: ServableModel, cfg: BatcherConfig) -> anyhow::Result<()> {
-        let name = model.arch.clone();
-        // warm the executables this model will use
-        for b in self.engine.manifest.infer_batches(&name) {
-            self.engine.warm(&format!("{name}_infer_b{b}"))?;
-            let _ = self.engine.warm(&format!("mfcc_b{b}"));
+    /// Register any backend session under `name`. The first registered
+    /// model becomes the default route; duplicate names are rejected
+    /// (silently swapping backends under a live route would orphan the
+    /// old batcher's queue).
+    pub fn register_session(
+        &mut self,
+        name: &str,
+        session: Box<dyn InferenceSession>,
+        cfg: BatcherConfig,
+    ) -> Result<(), String> {
+        if self.batchers.contains_key(name) {
+            return Err(format!("model '{name}' already registered"));
         }
-        let batcher = Batcher::start(
-            self.engine.clone(),
-            model,
-            cfg,
-            Arc::clone(&self.metrics),
-        )?;
+        let batcher = DynamicBatcher::start(name, session, cfg, Arc::clone(&self.metrics))?;
         if self.default_model.is_empty() {
-            self.default_model = name.clone();
+            self.default_model = name.to_string();
         }
-        self.batchers.insert(name, batcher);
+        self.batchers.insert(name.to_string(), batcher);
         Ok(())
+    }
+
+    /// Register a PJRT-backed model (AOT executables), warming the
+    /// executables it will use; routed under its architecture name.
+    pub fn register_pjrt(
+        &mut self,
+        engine: &EngineHandle,
+        model: ServableModel,
+        cfg: BatcherConfig,
+    ) -> anyhow::Result<()> {
+        let name = model.arch.clone();
+        let session = PjrtSession::new(engine.clone(), model)?;
+        self.register_session(&name, Box::new(session), cfg)
+            .map_err(|e| anyhow::anyhow!(e))
+    }
+
+    /// Register an LNE-backed model: one `ExecPlan` per bucket in
+    /// `batches`, arenas checked out of this router's shared pool.
+    pub fn register_lne(
+        &mut self,
+        name: &str,
+        prepared: Arc<Prepared>,
+        assignment: Assignment,
+        batches: &[usize],
+        classes: &[String],
+        cfg: BatcherConfig,
+    ) -> Result<(), String> {
+        let session = LneSession::new(prepared, assignment, batches, classes, &self.arena_pool)?;
+        self.register_session(name, Box::new(session), cfg)
     }
 
     pub fn models(&self) -> Vec<String> {
         self.batchers.keys().cloned().collect()
     }
 
-    /// Route one request (blocking until the prediction is ready).
-    pub fn infer(&self, model: Option<&str>, audio: Vec<f32>) -> Result<Prediction, String> {
+    fn batcher(
+        &self,
+        model: Option<&str>,
+    ) -> Result<&DynamicBatcher<Box<dyn InferenceSession>>, String> {
         let name = model.unwrap_or(&self.default_model);
-        let b = self
-            .batchers
+        self.batchers
             .get(name)
-            .ok_or_else(|| format!("model '{name}' not registered"))?;
-        b.submit(audio)
+            .ok_or_else(|| format!("model '{name}' not registered"))
+    }
+
+    /// Expected raw input length for a model (None = default model).
+    pub fn input_len(&self, model: Option<&str>) -> Result<usize, String> {
+        Ok(self.batcher(model)?.input_len())
+    }
+
+    /// Class names for a model (None = default model).
+    pub fn classes(&self, model: Option<&str>) -> Result<Vec<String>, String> {
+        Ok(self.batcher(model)?.classes().to_vec())
+    }
+
+    /// Number of output classes for a model, without cloning the names.
+    pub fn num_classes(&self, model: Option<&str>) -> Result<usize, String> {
+        Ok(self.batcher(model)?.classes().len())
+    }
+
+    /// Route one request (blocking until the prediction is ready).
+    pub fn infer(&self, model: Option<&str>, input: Vec<f32>) -> Result<Prediction, String> {
+        self.batcher(model)?.submit(input)
+    }
+
+    /// Route one request asynchronously: returns a [`Ticket`] immediately,
+    /// so the caller thread is free while the batch coalesces and runs.
+    pub fn infer_async(&self, model: Option<&str>, input: Vec<f32>) -> Result<Ticket, String> {
+        self.batcher(model)?.submit_async(input)
     }
 }
 
 #[cfg(test)]
 mod tests {
+    use super::session::tests::lne_toy;
     use super::*;
     use std::path::PathBuf;
 
@@ -120,14 +195,47 @@ mod tests {
         }
     }
 
+    /// PJRT and LNE models behind one router — the api_redesign acceptance
+    /// path. The LNE half runs everywhere; the PJRT half needs artifacts.
+    #[test]
+    fn router_serves_pjrt_and_lne_side_by_side() {
+        let Some(dir) = artifacts() else { return };
+        let engine = EngineHandle::spawn(dir).unwrap();
+        let mut router = ModelRouter::new();
+        router
+            .register_pjrt(
+                &engine,
+                ServableModel::from_init(&engine, "ds_kws9").unwrap(),
+                BatcherConfig { max_wait_ms: 2.0, ..Default::default() },
+            )
+            .unwrap();
+        let (p, a) = lne_toy();
+        router
+            .register_lne("toy_lne", p, a, &[1, 4], &[], BatcherConfig::default())
+            .unwrap();
+        assert_eq!(router.models(), vec!["ds_kws9".to_string(), "toy_lne".to_string()]);
+        // both backends answer through the same API
+        let samples = engine.manifest.samples;
+        assert_eq!(router.input_len(Some("ds_kws9")).unwrap(), samples);
+        assert_eq!(router.input_len(Some("toy_lne")).unwrap(), 2 * 6 * 6);
+        let p1 = router.infer(Some("ds_kws9"), vec![0.01; samples]).unwrap();
+        assert_eq!(p1.scores.len(), engine.manifest.num_classes);
+        let p2 = router.infer(Some("toy_lne"), vec![0.2; 2 * 6 * 6]).unwrap();
+        assert_eq!(p2.scores.len(), 3);
+    }
+
     #[test]
     fn router_routes_and_batches() {
         let Some(dir) = artifacts() else { return };
         let engine = EngineHandle::spawn(dir).unwrap();
-        let mut router = Router::new(engine.clone());
+        let mut router = ModelRouter::new();
         let model = ServableModel::from_init(&engine, "ds_kws9").unwrap();
         router
-            .register(model, BatcherConfig { max_wait_ms: 2.0, ..Default::default() })
+            .register_pjrt(
+                &engine,
+                model,
+                BatcherConfig { max_wait_ms: 2.0, ..Default::default() },
+            )
             .unwrap();
         let samples = engine.manifest.samples;
         // concurrent requests exercise batching
@@ -152,5 +260,40 @@ mod tests {
         assert_eq!(snap.get("requests").as_i64(), Some(10));
         assert!(snap.get("batches").as_i64().unwrap() <= 10);
         assert!(router.infer(Some("nope"), vec![0.0; samples]).is_err());
+    }
+
+    /// Runs without artifacts: two LNE models behind the router, async
+    /// submission, shared arena pool.
+    #[test]
+    fn router_serves_lne_models_without_artifacts() {
+        let mut router = ModelRouter::new();
+        let (p1, a1) = lne_toy();
+        let (p2, a2) = lne_toy();
+        router
+            .register_lne("m1", p1, a1, &[1, 4], &[], BatcherConfig { max_wait_ms: 1.0, ..Default::default() })
+            .unwrap();
+        let names: Vec<String> = vec!["go".into(), "stop".into(), "up".into()];
+        router
+            .register_lne("m2", p2, a2, &[1, 4], &names, BatcherConfig { max_wait_ms: 1.0, ..Default::default() })
+            .unwrap();
+        assert_eq!(router.default_model, "m1");
+        assert_eq!(router.classes(Some("m2")).unwrap(), names);
+        assert_eq!(router.num_classes(Some("m2")).unwrap(), 3);
+        // re-registering a live route is rejected, not silently swapped
+        let (p3, a3) = lne_toy();
+        assert!(router
+            .register_lne("m1", p3, a3, &[1], &[], BatcherConfig::default())
+            .is_err());
+        // identical profiles -> pooled arenas, 2 not 4
+        assert_eq!(router.arena_pool.arena_count(), 2);
+        // async round trip on the default model
+        let ticket = router.infer_async(None, vec![0.3; 72]).unwrap();
+        let pred = ticket.wait().unwrap();
+        assert_eq!(pred.scores.len(), 3);
+        // named dispatch picks the right classes
+        let pred2 = router.infer(Some("m2"), vec![0.3; 72]).unwrap();
+        assert_eq!(pred2.class_id, pred.class_id);
+        assert_eq!(pred2.class, names[pred2.class_id]);
+        assert!(router.infer(Some("nope"), vec![0.0; 72]).is_err());
     }
 }

@@ -1,12 +1,16 @@
-//! HTTP front-end for the KWS serving runtime.
+//! HTTP front-end for the serving runtime.
 //!
-//! POST /v1/kws    {"audio": [f32; 16000]} or
+//! POST /v1/kws    {"audio": [f32; N]} or
 //!                 {"synthesize": {"class": 3, "seed": 7}}   (load-gen aid)
-//!                 optional "model": "<arch>"
+//!                 optional "model": "<name>"
 //! GET  /v1/models
 //! GET  /metrics
+//!
+//! The handler is backend-agnostic: it asks the [`ModelRouter`] for the
+//! routed model's expected input length and classes, so PJRT and LNE
+//! models serve through the same endpoint.
 
-use super::Router as ServingRouter;
+use super::ModelRouter;
 use crate::http::{Response, Router, Server};
 use crate::ingestion::synth;
 use crate::util::json::Json;
@@ -16,7 +20,7 @@ use std::sync::Arc;
 pub struct KwsServer;
 
 impl KwsServer {
-    pub fn router(serving: Arc<ServingRouter>) -> Router {
+    pub fn router(serving: Arc<ModelRouter>) -> Router {
         let mut r = Router::new();
         let s = Arc::clone(&serving);
         r.add("POST", "/v1/kws", move |req, _| {
@@ -25,21 +29,35 @@ impl KwsServer {
                 Err(e) => return Response::bad_request(&e),
             };
             let model = body.get("model").as_str().map(|s| s.to_string());
-            let samples = s.engine.manifest.samples;
+            let want = match s.input_len(model.as_deref()) {
+                Ok(w) => w,
+                Err(e) => return Response::bad_request(&e),
+            };
             let audio: Vec<f32> = if let Some(arr) = body.get("audio").as_arr() {
                 arr.iter().map(|v| v.as_f64().unwrap_or(0.0) as f32).collect()
             } else if !body.get("synthesize").is_null() {
+                // the synthetic mic emits fixed 16 kHz utterances; only
+                // models ingesting raw audio of that length can use it
+                if want != synth::SAMPLES {
+                    return Response::bad_request(&format!(
+                        "synthesize emits {} samples but this model takes {want}; POST raw 'audio'",
+                        synth::SAMPLES
+                    ));
+                }
                 let spec = body.get("synthesize");
                 let class = spec.get("class").as_usize().unwrap_or(0);
                 let seed = spec.get("seed").as_usize().unwrap_or(0) as u64;
-                let nk = s.engine.manifest.classes.len().saturating_sub(2);
+                let nk = s
+                    .num_classes(model.as_deref())
+                    .map(|n| n.saturating_sub(2))
+                    .unwrap_or(0);
                 synth::generate(class, nk, &mut Rng::new(seed))
             } else {
                 return Response::bad_request("need 'audio' or 'synthesize'");
             };
-            if audio.len() != samples {
+            if audio.len() != want {
                 return Response::bad_request(&format!(
-                    "audio must be {samples} samples, got {}",
+                    "audio must be {want} samples, got {}",
                     audio.len()
                 ));
             }
@@ -74,7 +92,7 @@ impl KwsServer {
         r
     }
 
-    pub fn serve(serving: Arc<ServingRouter>, addr: &str, workers: usize) -> std::io::Result<Server> {
+    pub fn serve(serving: Arc<ModelRouter>, addr: &str, workers: usize) -> std::io::Result<Server> {
         Server::serve(addr, Self::router(serving), workers)
     }
 }
@@ -84,6 +102,7 @@ mod tests {
     use super::*;
     use crate::http::client;
     use crate::runtime::EngineHandle;
+    use crate::serving::session::tests::lne_toy;
     use crate::serving::{BatcherConfig, ServableModel};
     use std::path::PathBuf;
 
@@ -95,9 +114,10 @@ mod tests {
             return;
         }
         let engine = EngineHandle::spawn(dir).unwrap();
-        let mut router = ServingRouter::new(engine.clone());
+        let mut router = ModelRouter::new();
         router
-            .register(
+            .register_pjrt(
+                &engine,
                 ServableModel::from_init(&engine, "ds_kws9").unwrap(),
                 BatcherConfig { max_wait_ms: 1.0, ..Default::default() },
             )
@@ -128,6 +148,59 @@ mod tests {
         )
         .unwrap();
         assert_eq!(bad.status, 400);
+        server.stop();
+    }
+
+    /// The HTTP endpoint over a pure-LNE router: serves without any AOT
+    /// artifacts and reports the new batcher metrics.
+    #[test]
+    fn http_serves_lne_backend_without_artifacts() {
+        let (p, a) = lne_toy();
+        let mut router = ModelRouter::new();
+        router
+            .register_lne(
+                "toy",
+                p,
+                a,
+                &[1, 4],
+                &["go".into(), "stop".into(), "up".into()],
+                BatcherConfig { max_wait_ms: 1.0, ..Default::default() },
+            )
+            .unwrap();
+        let serving = Arc::new(router);
+        let mut server = KwsServer::serve(Arc::clone(&serving), "127.0.0.1:0", 2).unwrap();
+        let base = format!("http://{}", server.addr);
+
+        let audio: Vec<String> = (0..72).map(|i| format!("{:.2}", 0.01 * i as f64)).collect();
+        let resp = client::post_json(
+            &format!("{base}/v1/kws"),
+            &Json::parse(&format!(r#"{{"audio": [{}]}}"#, audio.join(","))).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(resp.status, 200, "{}", resp.text());
+        let body = resp.json().unwrap();
+        assert_eq!(body.get("scores").as_arr().unwrap().len(), 3);
+        assert!(["go", "stop", "up"].contains(&body.get("class").as_str().unwrap()));
+
+        // wrong length -> 400 with the LNE model's expected size
+        let bad = client::post_json(
+            &format!("{base}/v1/kws"),
+            &Json::parse(r#"{"audio": [1.0, 2.0]}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(bad.status, 400);
+        // synthesize emits 16k raw audio -> rejected for a non-audio model
+        let synth_bad = client::post_json(
+            &format!("{base}/v1/kws"),
+            &Json::parse(r#"{"synthesize": {"class": 0}}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(synth_bad.status, 400);
+
+        let metrics = client::get(&format!("{base}/metrics")).unwrap();
+        let m = metrics.json().unwrap();
+        assert_eq!(m.get("requests").as_i64(), Some(1));
+        assert!(m.get("bucket_flushes").get("b1").as_i64().unwrap_or(0) >= 1);
         server.stop();
     }
 }

@@ -1,0 +1,381 @@
+//! The serving backend API. [`InferenceSession`] abstracts "run a
+//! preprocessed batch of size `bucket` → per-item predictions", so the
+//! one [`DynamicBatcher`](super::DynamicBatcher) coalescing loop and the
+//! [`ModelRouter`](super::ModelRouter) work over interchangeable engines —
+//! the paper's plugin argument (§6–7) applied to the serving layer: the
+//! same application fronts the PJRT AOT executables ([`PjrtSession`]) and
+//! the LNE plan/arena path ([`LneSession`]) without knowing which runs.
+
+use super::batcher::{argmax, softmax, Prediction};
+use super::ServableModel;
+use crate::lne::engine::Prepared;
+use crate::lne::graph::LayerKind;
+use crate::lne::planner::{ArenaPool, ExecPlan, SharedArena};
+use crate::lne::plugin::Assignment;
+use crate::runtime::{EngineHandle, OwnedInput};
+use crate::tensor::Tensor;
+use std::sync::Arc;
+
+/// A serving backend: executes one batch at a compiled bucket size.
+///
+/// Implementations own whatever state execution needs (executable handles,
+/// plans, staging buffers); the batcher thread owns the session, so
+/// `run_batch` takes `&mut self` and needs no internal locking beyond what
+/// the backend shares deliberately (e.g. pooled arenas).
+pub trait InferenceSession: Send + 'static {
+    /// Compiled batch bucket sizes, ascending and deduplicated, non-empty.
+    fn buckets(&self) -> &[usize];
+
+    /// Length of one raw request (f32 values); submissions of any other
+    /// length are rejected before they reach the queue.
+    fn input_len(&self) -> usize;
+
+    /// Class names, index-aligned with `Prediction::scores`.
+    fn classes(&self) -> Vec<String>;
+
+    /// Run `inputs` (at most `bucket` of them, each `input_len` long,
+    /// `bucket` one of `buckets()`) and return one prediction per input.
+    /// `latency_ms`/`batch_size` are filled in by the batcher.
+    fn run_batch(&mut self, bucket: usize, inputs: &[&[f32]]) -> Result<Vec<Prediction>, String>;
+}
+
+impl InferenceSession for Box<dyn InferenceSession> {
+    fn buckets(&self) -> &[usize] {
+        (**self).buckets()
+    }
+    fn input_len(&self) -> usize {
+        (**self).input_len()
+    }
+    fn classes(&self) -> Vec<String> {
+        (**self).classes()
+    }
+    fn run_batch(&mut self, bucket: usize, inputs: &[&[f32]]) -> Result<Vec<Prediction>, String> {
+        (**self).run_batch(bucket, inputs)
+    }
+}
+
+/// PJRT backend: raw audio in, MFCC (pallas kernel) + AOT inference
+/// executables at the compiled batch buckets.
+pub struct PjrtSession {
+    engine: EngineHandle,
+    model: ServableModel,
+    buckets: Vec<usize>,
+    input_len: usize,
+}
+
+impl PjrtSession {
+    /// Wrap a servable model over the engine's compiled buckets, warming
+    /// the executables this model will use.
+    pub fn new(engine: EngineHandle, model: ServableModel) -> anyhow::Result<PjrtSession> {
+        let mut buckets = engine.manifest.infer_batches(&model.arch);
+        if buckets.is_empty() {
+            anyhow::bail!("no infer graphs for {}", model.arch);
+        }
+        buckets.sort_unstable();
+        buckets.dedup();
+        for &b in &buckets {
+            engine.warm(&format!("{}_infer_b{b}", model.arch))?;
+            let _ = engine.warm(&format!("mfcc_b{b}"));
+        }
+        let input_len = engine.manifest.samples;
+        Ok(PjrtSession { engine, model, buckets, input_len })
+    }
+
+    pub fn arch(&self) -> &str {
+        &self.model.arch
+    }
+}
+
+impl InferenceSession for PjrtSession {
+    fn buckets(&self) -> &[usize] {
+        &self.buckets
+    }
+
+    fn input_len(&self) -> usize {
+        self.input_len
+    }
+
+    fn classes(&self) -> Vec<String> {
+        self.engine.manifest.classes.clone()
+    }
+
+    fn run_batch(&mut self, bucket: usize, inputs: &[&[f32]]) -> Result<Vec<Prediction>, String> {
+        let m = &self.engine.manifest;
+        let samples = m.samples;
+        let nc = m.num_classes;
+        let arch = m.arch(&self.model.arch).ok_or("arch missing")?;
+        let mut audio = vec![0.0f32; bucket * samples];
+        for (i, s) in inputs.iter().enumerate() {
+            if s.len() != samples {
+                return Err(format!("audio must be {samples} samples, got {}", s.len()));
+            }
+            audio[i * samples..(i + 1) * samples].copy_from_slice(s);
+        }
+        // MFCC front-end at the same bucket when compiled, else chunked
+        let mfcc = if m.graph(&format!("mfcc_b{bucket}")).is_some() {
+            self.engine
+                .run(&format!("mfcc_b{bucket}"), vec![OwnedInput::new(audio, &[bucket, samples])])
+                .map_err(|e| e.to_string())?
+                .remove(0)
+        } else {
+            crate::ingestion::tools::MfccTool::compute(&self.engine, &audio, bucket)?
+        };
+        let out = self
+            .engine
+            .run(
+                &format!("{}_infer_b{bucket}", self.model.arch),
+                vec![
+                    OwnedInput::new(self.model.params.as_ref().clone(), &[arch.n_params]),
+                    OwnedInput::new(self.model.stats.as_ref().clone(), &[arch.n_stats]),
+                    OwnedInput::new(mfcc, &[bucket, m.mel_bands, m.frames]),
+                ],
+            )
+            .map_err(|e| e.to_string())?;
+        let logits = &out[0];
+        let preds = (0..inputs.len())
+            .map(|i| {
+                let row = &logits[i * nc..(i + 1) * nc];
+                let scores = softmax(row);
+                let class_id = argmax(&scores);
+                Prediction {
+                    class_id,
+                    class: m
+                        .classes
+                        .get(class_id)
+                        .cloned()
+                        .unwrap_or_else(|| format!("class{class_id}")),
+                    scores,
+                    latency_ms: 0.0,
+                    batch_size: 0,
+                }
+            })
+            .collect();
+        Ok(preds)
+    }
+}
+
+/// Per-bucket LNE state: the compiled plan, the staging input tensor
+/// requests are packed into (owned, reused forever), and the pooled arena
+/// — possibly lent by another model with the same high-water profile.
+struct LneBucket {
+    batch: usize,
+    plan: ExecPlan,
+    staging: Tensor,
+    arena: SharedArena,
+}
+
+/// LNE backend: one `ExecPlan` per batch bucket, compiled at registration
+/// (plan once, run hot), arenas checked out of a cross-model [`ArenaPool`].
+/// Steady-state inference performs zero heap allocation in the execution
+/// hot loop; replays on a shared arena serialize on its lock.
+pub struct LneSession {
+    prepared: Arc<Prepared>,
+    assignment: Assignment,
+    buckets: Vec<LneBucket>,
+    sizes: Vec<usize>,
+    classes: Vec<String>,
+    input_len: usize,
+    /// Softmax the output row unless the graph already ends in one.
+    apply_softmax: bool,
+}
+
+impl LneSession {
+    /// Precompile plans for every bucket size in `batches` (deduplicated,
+    /// ascending) and check their arenas out of `pool`. `classes` may be
+    /// empty; names are synthesized per output index then.
+    pub fn new(
+        prepared: Arc<Prepared>,
+        assignment: Assignment,
+        batches: &[usize],
+        classes: &[String],
+        pool: &ArenaPool,
+    ) -> Result<LneSession, String> {
+        let (c, h, w) = prepared.graph.input;
+        let input_len = c * h * w;
+        let mut sizes: Vec<usize> = batches.iter().copied().filter(|&b| b > 0).collect();
+        sizes.sort_unstable();
+        sizes.dedup();
+        if sizes.is_empty() {
+            return Err("no batch buckets given".into());
+        }
+        let mut buckets = Vec::with_capacity(sizes.len());
+        for &b in &sizes {
+            let plan = prepared.plan(&assignment, b)?;
+            let arena = pool.checkout(&plan);
+            let staging = Tensor::zeros(&[b, c, h, w]);
+            buckets.push(LneBucket { batch: b, plan, staging, arena });
+        }
+        let nc = buckets[0].plan.output.len / sizes[0];
+        let classes: Vec<String> = (0..nc)
+            .map(|i| classes.get(i).cloned().unwrap_or_else(|| format!("class{i}")))
+            .collect();
+        let apply_softmax = !matches!(
+            prepared.graph.layers.last().map(|l| &l.kind),
+            Some(LayerKind::Softmax)
+        );
+        Ok(LneSession { prepared, assignment, buckets, sizes, classes, input_len, apply_softmax })
+    }
+
+    /// Planned arena footprint of the largest bucket (capacity planning).
+    pub fn peak_bytes(&self) -> usize {
+        self.buckets.iter().map(|b| b.plan.arena_bytes()).max().unwrap_or(0)
+    }
+
+    pub fn assignment(&self) -> &Assignment {
+        &self.assignment
+    }
+
+    pub fn prepared(&self) -> &Prepared {
+        &self.prepared
+    }
+}
+
+impl InferenceSession for LneSession {
+    fn buckets(&self) -> &[usize] {
+        &self.sizes
+    }
+
+    fn input_len(&self) -> usize {
+        self.input_len
+    }
+
+    fn classes(&self) -> Vec<String> {
+        self.classes.clone()
+    }
+
+    fn run_batch(&mut self, bucket: usize, inputs: &[&[f32]]) -> Result<Vec<Prediction>, String> {
+        let sample_len = self.input_len;
+        let b = self
+            .buckets
+            .iter_mut()
+            .find(|b| b.batch == bucket)
+            .ok_or_else(|| format!("bucket {bucket} not compiled"))?;
+        if inputs.len() > b.batch {
+            return Err(format!("{} inputs exceed bucket {}", inputs.len(), b.batch));
+        }
+        for (i, s) in inputs.iter().enumerate() {
+            if s.len() != sample_len {
+                return Err(format!("sample must be {sample_len} values, got {}", s.len()));
+            }
+            b.staging.data[i * sample_len..(i + 1) * sample_len].copy_from_slice(s);
+        }
+        // zero the padded lanes so replay stays deterministic
+        for v in b.staging.data[inputs.len() * sample_len..].iter_mut() {
+            *v = 0.0;
+        }
+        let result = {
+            // recover from poisoning: the arena holds no invariants a fresh
+            // replay doesn't rewrite, and one model's panic must not
+            // permanently fail every model lending the same arena
+            let mut arena = b.arena.lock().unwrap_or_else(|e| e.into_inner());
+            b.plan.replay(&b.staging, &mut arena)
+        };
+        let row_len = result.output.len() / b.batch;
+        let preds = (0..inputs.len())
+            .map(|i| {
+                let row = &result.output.data[i * row_len..(i + 1) * row_len];
+                let scores = if self.apply_softmax { softmax(row) } else { row.to_vec() };
+                let class_id = argmax(&scores);
+                Prediction {
+                    class_id,
+                    class: self
+                        .classes
+                        .get(class_id)
+                        .cloned()
+                        .unwrap_or_else(|| format!("class{class_id}")),
+                    scores,
+                    latency_ms: 0.0,
+                    batch_size: 0,
+                }
+            })
+            .collect();
+        Ok(preds)
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::lne::graph::{Graph, Padding, PoolKind, Weights};
+    use crate::lne::platform::Platform;
+    use crate::lne::plugin::{applicable, ConvImpl};
+    use crate::util::rng::Rng;
+
+    pub(crate) fn lne_toy() -> (Arc<Prepared>, Assignment) {
+        let mut rng = Rng::new(0);
+        let mut g = Graph::new("serve", (2, 6, 6));
+        g.push("conv1", LayerKind::Conv { k: (3, 3), stride: (1, 1), pad: Padding::Same, relu_fused: true }, 4);
+        g.push("pool", LayerKind::Pool { kind: PoolKind::Avg, k: 0, stride: 1, pad: 0, global: true }, 0);
+        g.push("fc", LayerKind::Fc { relu_fused: false }, 3);
+        g.push("prob", LayerKind::Softmax, 0);
+        let mut w = Weights::new();
+        w.insert("conv1".into(), vec![
+            Tensor::randn(&[4, 2, 3, 3], 0.5, &mut rng),
+            Tensor::zeros(&[4]),
+        ]);
+        w.insert("fc".into(), vec![
+            Tensor::randn(&[4, 3], 0.5, &mut rng),
+            Tensor::zeros(&[3]),
+        ]);
+        let p = Prepared::new(g, w, Platform::pi4()).unwrap();
+        let mut a = Assignment::default_for(&p.graph);
+        for (i, l) in p.graph.layers.iter().enumerate() {
+            let ch = applicable(&l.kind, &p.platform);
+            if !ch.is_empty() {
+                a.choices[i] = Some(if ch.contains(&ConvImpl::GemmBlocked) {
+                    ConvImpl::GemmBlocked
+                } else {
+                    ch[0]
+                });
+            }
+        }
+        (Arc::new(p), a)
+    }
+
+    #[test]
+    fn lne_session_matches_single_sample_runs() {
+        let (p, a) = lne_toy();
+        let pool = ArenaPool::new();
+        let mut s = LneSession::new(Arc::clone(&p), a.clone(), &[4, 1, 4], &[], &pool).unwrap();
+        assert_eq!(s.buckets(), &[1, 4]);
+        assert_eq!(s.input_len(), 2 * 6 * 6);
+        assert_eq!(s.classes(), vec!["class0", "class1", "class2"]);
+        // graph ends in Softmax -> rows passed through untouched
+        assert!(!s.apply_softmax);
+        let mut rng = Rng::new(4);
+        let samples: Vec<Vec<f32>> = (0..3)
+            .map(|_| Tensor::randn(&[2, 6, 6], 1.0, &mut rng).data)
+            .collect();
+        let refs: Vec<&[f32]> = samples.iter().map(|v| v.as_slice()).collect();
+        let preds = s.run_batch(4, &refs).unwrap();
+        assert_eq!(preds.len(), 3);
+        for (sample, pred) in samples.iter().zip(preds.iter()) {
+            let x = Tensor::from_vec(&[1, 2, 6, 6], sample.clone());
+            let single = p.run(&x, &a);
+            assert_eq!(pred.scores.len(), 3);
+            for (got, want) in pred.scores.iter().zip(single.output.data.iter()) {
+                assert!((got - want).abs() < 1e-6, "{got} vs {want}");
+            }
+            assert_eq!(pred.class_id, argmax(&single.output.data));
+        }
+        // wrong sample length and unknown bucket are rejected
+        let bad = vec![0.0f32; 10];
+        assert!(s.run_batch(1, &[bad.as_slice()]).is_err());
+        assert!(s.run_batch(2, &refs[..1]).is_err());
+    }
+
+    #[test]
+    fn two_identical_models_share_pooled_arenas() {
+        let (p1, a1) = lne_toy();
+        let (p2, a2) = lne_toy();
+        let pool = ArenaPool::new();
+        let s1 = LneSession::new(p1, a1, &[1, 4], &[], &pool).unwrap();
+        let s2 = LneSession::new(p2, a2, &[1, 4], &[], &pool).unwrap();
+        // identical per-bucket high-water profiles -> 2 arenas, not
+        // models x buckets = 4
+        let models_x_buckets = 2 * s1.buckets().len();
+        assert_eq!(pool.arena_count(), 2);
+        assert!(pool.arena_count() < models_x_buckets);
+        assert_eq!(s1.peak_bytes(), s2.peak_bytes());
+    }
+}

@@ -140,27 +140,23 @@ fn full_pipeline_workflow_learns_and_compresses() {
 }
 
 /// Plan/arena serving path end to end — requires no AOT artifacts: build
-/// a paper KWS architecture as an LNE graph, compile one ExecPlan per
-/// batch bucket, and serve requests through the bucketed batcher with
-/// planned (== observed) peak memory.
+/// paper KWS architectures as LNE models, register them behind the
+/// `ModelRouter` as `InferenceSession` backends, and serve requests
+/// (sync + async) with cross-model arena sharing and planned
+/// (== observed) peak memory.
 #[test]
 fn lne_planned_serving_runs_without_artifacts() {
-    use bonseyes::lne::engine::Prepared;
     use bonseyes::lne::planner::Arena;
     use bonseyes::lne::platform::Platform;
-    use bonseyes::lne::quant_explore::f32_baseline;
-    use bonseyes::nas::evaluator::lne_model;
+    use bonseyes::nas::evaluator::lne_prepared;
     use bonseyes::nas::space::paper_arch;
-    use bonseyes::serving::LneBatcher;
+    use bonseyes::serving::{BatcherConfig, ModelRouter, Ticket};
     use bonseyes::tensor::Tensor;
     use bonseyes::util::rng::Rng;
-    use std::sync::Arc;
 
     let arch = paper_arch("kws9").unwrap();
-    let (g, w) = lne_model(&arch, 3);
-    let (c, h, wd) = g.input;
-    let p = Arc::new(Prepared::new(g, w, Platform::pi4()).unwrap());
-    let a = f32_baseline(&p);
+    let (p, a) = lne_prepared(&arch, 3, Platform::pi4()).unwrap();
+    let (c, h, wd) = p.graph.input;
 
     // planned == observed peak on a direct replay
     let plan = p.plan(&a, 1).unwrap();
@@ -171,16 +167,32 @@ fn lne_planned_serving_runs_without_artifacts() {
     assert_eq!(r.peak_bytes, plan.arena_bytes());
     assert!(r.output.data.iter().all(|v| v.is_finite()));
 
-    // bucketed serving over the same prepared model
-    let batcher = LneBatcher::new(Arc::clone(&p), a, &[1, 4]).unwrap();
-    let samples: Vec<Vec<f32>> = (0..5)
-        .map(|_| Tensor::randn(&[c, h, wd], 1.0, &mut rng).data)
+    // the same prepared model (twice) behind the production router:
+    // identical high-water profiles share pooled arenas
+    let mut router = ModelRouter::new();
+    let cfg = BatcherConfig { max_wait_ms: 1.0, ..Default::default() };
+    let (p2, a2) = lne_prepared(&arch, 3, Platform::pi4()).unwrap();
+    router.register_lne("kws9", p, a, &[1, 4], &[], cfg.clone()).unwrap();
+    router.register_lne("kws9_replica", p2, a2, &[1, 4], &[], cfg).unwrap();
+    assert_eq!(router.models().len(), 2);
+    assert_eq!(router.arena_pool.arena_count(), 2, "2 profiles shared, not 2x2");
+
+    // async submissions round-trip through the coalescing batcher
+    let tickets: Vec<Ticket> = (0..5)
+        .map(|_| {
+            let s = Tensor::randn(&[c, h, wd], 1.0, &mut rng).data;
+            router.infer_async(None, s).unwrap()
+        })
         .collect();
-    let rows = batcher.infer(&samples).unwrap();
-    assert_eq!(rows.len(), 5);
-    for row in &rows {
-        assert_eq!(row.len(), 12); // NUM_CLASSES logits
-        assert!(row.iter().all(|v| v.is_finite()));
+    for t in tickets {
+        let pred = t.wait().unwrap();
+        assert_eq!(pred.scores.len(), 12); // NUM_CLASSES
+        assert!(pred.scores.iter().all(|v| v.is_finite()));
+        assert!(pred.class_id < 12);
     }
-    assert!(batcher.peak_bytes() >= plan.arena_bytes());
+    // and the replica answers identically through the same API
+    let s = Tensor::randn(&[c, h, wd], 1.0, &mut rng).data;
+    let m1 = router.infer(Some("kws9"), s.clone()).unwrap();
+    let m2 = router.infer(Some("kws9_replica"), s).unwrap();
+    assert_eq!(m1.class_id, m2.class_id);
 }
