@@ -1,0 +1,58 @@
+//! Wavefront scheduling bench: sequential `ExecPlan::replay` vs
+//! wavefront-parallel `replay_on` over a shared worker pool, on branchy
+//! models (inception towers, residual legs). Demonstrates the wall-clock
+//! speedup parallel branch execution buys on multi-branch wavefronts;
+//! chain-shaped models (kws family) show ~1.0x by construction, so only
+//! branchy zoo members appear here.
+
+#[path = "common.rs"]
+mod common;
+
+use bonseyes::lne::engine::Prepared;
+use bonseyes::lne::planner::Arena;
+use bonseyes::lne::platform::Platform;
+use bonseyes::lne::quant_explore::f32_baseline;
+use bonseyes::models;
+use bonseyes::util::stats::median;
+use bonseyes::util::threadpool::ThreadPool;
+
+fn main() {
+    common::banner(
+        "wavefront",
+        "parallel branch execution on the shared worker pool",
+    );
+    let reps = common::reps().max(3);
+    println!(
+        "{:<14} {:>5} {:>9} {:>12} {:>16} {:>16}",
+        "model", "waves", "max-width", "seq ms", "2 threads", "4 threads"
+    );
+    for name in ["inceptionette", "googlenet", "squeezenet"] {
+        let (g, w) = models::by_name(name, 42).expect("zoo model");
+        let p = Prepared::new(g, w, Platform::pi4()).expect("prepared");
+        let a = f32_baseline(&p);
+        let plan = p.plan(&a, 1).expect("plan");
+        let mut arena = Arena::for_plan(&plan);
+        let x = common::image_input(&p.graph, 7);
+        let _ = plan.replay(&x, &mut arena); // warm-up
+        let seq = median((0..reps).map(|_| plan.replay(&x, &mut arena).total_ms).collect());
+        print!(
+            "{:<14} {:>5} {:>9} {:>9.2} ms",
+            name,
+            plan.wave_count(),
+            plan.max_wave_width(),
+            seq
+        );
+        for threads in [2usize, 4] {
+            let pool = ThreadPool::new(threads);
+            let _ = plan.replay_on(&x, &mut arena, &pool);
+            let par = median(
+                (0..reps)
+                    .map(|_| plan.replay_on(&x, &mut arena, &pool).total_ms)
+                    .collect(),
+            );
+            print!("  {par:>7.2} ms {:>4.2}x", seq / par.max(1e-9));
+        }
+        println!();
+    }
+    println!("\n(speedup tracks max wavefront width; concat/pool barriers cap it)");
+}

@@ -38,7 +38,9 @@ pub struct Prepared {
 #[derive(Debug, Clone)]
 pub struct RunResult {
     pub output: Tensor,
-    /// Per-layer wall time in ms (aligned with graph.layers).
+    /// Per-layer wall time in ms, indexed by *layer* (aligned with
+    /// graph.layers) — not by execution order, which on the planned path
+    /// is wavefront order and may interleave branches (`ExecPlan::waves`).
     pub layer_ms: Vec<f64>,
     pub total_ms: f64,
     /// Peak bytes of execution memory. On the planned path (`run`,
@@ -105,7 +107,9 @@ impl Prepared {
     /// Compile an execution plan for `assignment` at a fixed batch size:
     /// one resolved step per layer, weights pre-transformed, every
     /// activation/scratch buffer placed in the arena by liveness (paper
-    /// §6.2.2). Callers that run the same assignment repeatedly (QS-DNN
+    /// §6.2.2), steps grouped into disjoint-span wavefronts (DESIGN.md
+    /// §6) so branches can replay in parallel via `ExecPlan::replay_on`.
+    /// Callers that run the same assignment repeatedly (QS-DNN
     /// measurement, NAS evaluation, serving) compile once and replay.
     pub fn plan(&self, assignment: &Assignment, batch: usize) -> Result<ExecPlan, String> {
         ExecPlan::compile(self, assignment, batch)

@@ -13,6 +13,15 @@
 //! quantity (the allocator's high-water mark) that the replay loop
 //! re-observes and the tests assert equal.
 //!
+//! Steps are additionally grouped into **wavefronts** (DESIGN.md §6): all
+//! steps of one wavefront depend only on earlier wavefronts, and the
+//! allocator is concurrency-aware — spans are released at wavefront
+//! boundaries, never mid-wave — so co-scheduled steps touch pairwise
+//! disjoint arena spans (activations *and* scratch) and branchy
+//! topologies (inception towers, residual legs) can execute in parallel
+//! via [`ExecPlan::replay_on`] on a shared worker pool, bit-exact with
+//! the sequential [`ExecPlan::replay`].
+//!
 //! This mirrors the codegen-time decisions the paper credits for LNE's
 //! embedded-target edge, and the Planner -> Vec<Step> -> replay shape of
 //! production inference engines.
@@ -29,7 +38,8 @@ use super::primitives::int8::conv_int8_into;
 use super::primitives::pool::{global_pool_into, lrn_into, pool_into, softmax_into};
 use super::primitives::winograd::{self, conv_winograd_into};
 use crate::tensor::{HTensor, QTensor, Tensor, TensorView, TensorViewMut};
-use std::collections::HashMap;
+use crate::util::threadpool::ThreadPool;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -151,6 +161,9 @@ pub struct Step {
     pub out: Slot,
     /// Output aliases `ins[0]` (BN/ReLU/Add with a sole consumer).
     pub in_place: bool,
+    /// Wavefront this step belongs to; steps of one wavefront touch
+    /// pairwise disjoint arena spans and may execute concurrently.
+    pub wave: usize,
     pub op: Op,
 }
 
@@ -161,7 +174,13 @@ pub struct ExecPlan {
     pub graph_name: String,
     /// Slot holding the graph input (value 0); replay copies x here.
     pub input: Slot,
+    /// Steps in wavefront order (a valid topological order; NOT layer
+    /// order on branchy graphs — `Step::layer` maps back).
     pub steps: Vec<Step>,
+    /// Wavefronts as contiguous `(start, end)` ranges into `steps`. Every
+    /// step in a wavefront depends only on steps of earlier wavefronts,
+    /// and co-scheduled steps touch disjoint arena spans.
+    pub waves: Vec<(usize, usize)>,
     /// Slot of the final value.
     pub output: Slot,
     /// Planned lane high-water marks (the arena sizes).
@@ -224,15 +243,28 @@ pub struct ArenaProfile {
     pub i32_words: usize,
 }
 
-/// Cross-model arena pool (ROADMAP: arena sharing across models with
-/// identical high-water profiles). Keyed by [`ArenaProfile`]; models whose
-/// per-bucket plans have the same planned `peak_bytes` check out the *same*
-/// arena instead of each holding plan+arena per bucket. Replays serialize
-/// on the arena's lock, trading a little parallelism for a footprint that
-/// scales with distinct profiles rather than models × buckets.
+impl ArenaProfile {
+    /// Whether an arena sized for `self` can serve a plan with profile
+    /// `other` without growing: every lane's high-water mark covers it.
+    pub fn covers(&self, other: &ArenaProfile) -> bool {
+        self.f32_words >= other.f32_words
+            && self.i8_bytes >= other.i8_bytes
+            && self.i32_words >= other.i32_words
+    }
+}
+
+/// Cross-model arena pool (ROADMAP: arena sharing across models). Plans
+/// with the *same* [`ArenaProfile`] always check out the same arena, and a
+/// plan whose per-lane high-water marks are all ≤ an idle arena's borrows
+/// that larger arena instead of allocating a new one. Replays serialize on
+/// the arena's lock, trading a little parallelism for a footprint that
+/// scales with distinct (incompatible) profiles rather than models ×
+/// buckets.
 #[derive(Debug, Default)]
 pub struct ArenaPool {
-    arenas: Mutex<HashMap<ArenaProfile, SharedArena>>,
+    /// (profile the arena was sized for, arena). Scanned linearly — pools
+    /// hold a handful of arenas, not thousands.
+    arenas: Mutex<Vec<(ArenaProfile, SharedArena)>>,
 }
 
 impl ArenaPool {
@@ -240,15 +272,43 @@ impl ArenaPool {
         ArenaPool::default()
     }
 
-    /// The arena for `plan`'s profile, created on first checkout and
-    /// shared with every later plan of the same profile.
+    /// An arena serving `plan`: the arena of an identical profile when one
+    /// exists, else the snuggest *idle* arena whose every lane covers the
+    /// plan, else a freshly allocated one.
     pub fn checkout(&self, plan: &ExecPlan) -> SharedArena {
         let key = plan.profile();
         let mut m = self.arenas.lock().unwrap();
-        Arc::clone(
-            m.entry(key)
-                .or_insert_with(|| Arc::new(Mutex::new(Arena::for_plan(plan)))),
-        )
+        if let Some((_, a)) = m.iter().find(|(p, _)| *p == key) {
+            return Arc::clone(a);
+        }
+        // compatible borrow: lend a larger idle arena (busy arenas are
+        // skipped so a long replay doesn't pick up new co-tenants). A
+        // poisoned arena still counts as idle: replays recover poisoning
+        // (`LneSession::run_batch` relocks via `into_inner`), so one
+        // model's panic must not end lending for everyone else.
+        let mut best: Option<usize> = None;
+        for (idx, (p, a)) in m.iter().enumerate() {
+            let idle = match a.try_lock() {
+                Ok(_) => true,
+                Err(std::sync::TryLockError::Poisoned(_)) => true,
+                Err(std::sync::TryLockError::WouldBlock) => false,
+            };
+            if p.covers(&key) && idle {
+                let better = match best {
+                    Some(b) => p.f32_words < m[b].0.f32_words,
+                    None => true,
+                };
+                if better {
+                    best = Some(idx);
+                }
+            }
+        }
+        if let Some(b) = best {
+            return Arc::clone(&m[b].1);
+        }
+        let arena = Arc::new(Mutex::new(Arena::for_plan(plan)));
+        m.push((key, Arc::clone(&arena)));
+        arena
     }
 
     /// Number of distinct arenas the pool holds.
@@ -261,8 +321,8 @@ impl ArenaPool {
         self.arenas
             .lock()
             .unwrap()
-            .values()
-            .map(|a| a.lock().map(|g| g.capacity_bytes()).unwrap_or(0))
+            .iter()
+            .map(|(_, a)| a.lock().map(|g| g.capacity_bytes()).unwrap_or(0))
             .sum()
     }
 }
@@ -380,6 +440,22 @@ impl ExecPlan {
         }
         remaining[nvals - 1] += 1;
 
+        // wavefront grouping: value 0 is ready at wave 0; a layer runs in
+        // the earliest wave where all of its inputs exist, i.e. one wave
+        // after its latest producer. Layers of one wave share no edge.
+        let mut vwave = vec![0usize; nvals];
+        let mut lwave = vec![0usize; g.layers.len()];
+        for (i, layer) in g.layers.iter().enumerate() {
+            let w = layer.inputs.iter().map(|&v| vwave[v]).max().unwrap_or(0);
+            lwave[i] = w;
+            vwave[i + 1] = w + 1;
+        }
+        let nwaves = lwave.iter().map(|&w| w + 1).max().unwrap_or(0);
+        let mut wave_layers: Vec<Vec<usize>> = vec![Vec::new(); nwaves];
+        for (i, &w) in lwave.iter().enumerate() {
+            wave_layers[w].push(i);
+        }
+
         let mut falloc = Region::default();
         let mut qalloc = Region::default();
         let mut ialloc = Region::default();
@@ -398,8 +474,20 @@ impl ExecPlan {
                 .ok_or_else(|| format!("missing weights for {name}"))
         }
 
+        // Plan wavefront by wavefront. Releases (scratch, dead inputs) are
+        // deferred to the *end of each wave*: a span freed mid-wave could
+        // be handed to a co-scheduled step, and two steps of one wavefront
+        // must never share memory. `remaining` is likewise decremented only
+        // at wave end, so the in-place sole-consumer test below can never
+        // be satisfied by a value another step of the same wave still
+        // reads. Steps are emitted in wavefront order — a valid topological
+        // order that sequential replay follows unchanged.
         let mut steps: Vec<Step> = Vec::with_capacity(g.layers.len());
-        for (i, layer) in g.layers.iter().enumerate() {
+        let mut waves: Vec<(usize, usize)> = Vec::with_capacity(nwaves);
+        for (wave_idx, layers_in_wave) in wave_layers.iter().enumerate() {
+            let wave_start = steps.len();
+            for &i in layers_in_wave {
+            let layer = &g.layers[i];
             let choice = assignment.choices[i];
             let (c_in, h_in, w_in) = shapes[layer.inputs[0]];
             let (c_out, out_h, out_w) = shapes[i + 1];
@@ -596,48 +684,64 @@ impl ExecPlan {
                 ins,
                 out: out.clone(),
                 in_place,
+                wave: wave_idx,
                 op,
             });
-
-            // scratch lives only during the step
-            let (fs, qs, is) = steps.last().unwrap().op.scratch();
-            for s in fs.into_iter().flatten() {
-                falloc.free(s.off, s.len);
-            }
-            if let Some(s) = qs {
-                qalloc.free(s.off, s.len);
-            }
-            if let Some(s) = is {
-                ialloc.free(s.off, s.len);
+            slots[i + 1] = Some(out);
             }
 
-            // release inputs whose consumers are exhausted; an aliased
-            // input's storage lives on as this step's output
-            for &v in &layer.inputs {
-                remaining[v] -= 1;
-                if remaining[v] == 0 {
-                    if let Some(s) = slots[v].take() {
-                        if !(in_place && v == layer.inputs[0]) {
-                            falloc.free(s.off, s.len);
+            // end of wave: only now do scratch spans and exhausted inputs
+            // return to the free lists (a span read anywhere in this wave
+            // may be reused from the next wave on, never within it)
+            for si in wave_start..steps.len() {
+                let (fs, qs, is) = steps[si].op.scratch();
+                for s in fs.into_iter().flatten() {
+                    falloc.free(s.off, s.len);
+                }
+                if let Some(s) = qs {
+                    qalloc.free(s.off, s.len);
+                }
+                if let Some(s) = is {
+                    ialloc.free(s.off, s.len);
+                }
+                // release inputs whose consumers are exhausted; an aliased
+                // input's storage lives on as its step's output
+                let i = steps[si].layer;
+                let in_place = steps[si].in_place;
+                let layer = &g.layers[i];
+                for &v in &layer.inputs {
+                    remaining[v] -= 1;
+                    if remaining[v] == 0 {
+                        if let Some(s) = slots[v].take() {
+                            if !(in_place && v == layer.inputs[0]) {
+                                falloc.free(s.off, s.len);
+                            }
                         }
                     }
                 }
             }
-            slots[i + 1] = Some(out);
+            waves.push((wave_start, steps.len()));
         }
 
         let output = slots[nvals - 1]
             .clone()
             .ok_or_else(|| "graph has no output value".to_string())?;
-        Ok(ExecPlan {
+        let plan = ExecPlan {
             graph_name: g.name.clone(),
             input,
             steps,
+            waves,
             output,
             f32_words: falloc.hi,
             i8_bytes: qalloc.hi,
             i32_words: ialloc.hi,
-        })
+        };
+        if cfg!(debug_assertions) {
+            if let Err(e) = plan.validate_wavefronts() {
+                panic!("planner wavefront invariant violated: {e}");
+            }
+        }
+        Ok(plan)
     }
 
     /// Total planned arena footprint — the `peak_bytes` the replay
@@ -683,28 +787,26 @@ impl ExecPlan {
         total
     }
 
-    /// Replay the plan: copy `x` into the input slot, run every step hot
-    /// (no per-layer allocation), and return the result with per-layer
-    /// timings exactly like the interpreter recorded them.
-    pub fn replay(&self, x: &Tensor, arena: &mut Arena) -> RunResult {
-        assert_eq!(
-            x.shape, self.input.shape,
-            "input shape {:?} vs planned {:?}",
-            x.shape, self.input.shape
-        );
-        arena.ensure(self);
-        arena.f[self.input.off..self.input.off + self.input.len]
-            .copy_from_slice(&x.data);
-        let mut layer_ms = Vec::with_capacity(self.steps.len());
-        // observed high-water marks per lane (must reproduce the plan)
+    /// Number of wavefronts in the plan (the graph's critical-path depth).
+    pub fn wave_count(&self) -> usize {
+        self.waves.len()
+    }
+
+    /// Widest wavefront: the maximum number of steps the plan can run
+    /// concurrently (1 on a pure chain).
+    pub fn max_wave_width(&self) -> usize {
+        self.waves.iter().map(|&(s, e)| e - s).max().unwrap_or(0)
+    }
+
+    /// Observed arena high-water marks, folded over every step's spans —
+    /// the `peak_bytes` both replay paths report (asserted equal to the
+    /// planned footprint in tests). Order-independent, so sequential and
+    /// wavefront replays observe the same number.
+    fn observed_peak_bytes(&self) -> usize {
         let mut hi_f = self.input.off + self.input.len;
         let mut hi_q = 0usize;
         let mut hi_i = 0usize;
-        let t_all = Instant::now();
         for step in &self.steps {
-            let t0 = Instant::now();
-            exec_step(step, arena);
-            layer_ms.push(t0.elapsed().as_secs_f64() * 1e3);
             hi_f = hi_f.max(step.out.off + step.out.len);
             for s in &step.ins {
                 hi_f = hi_f.max(s.off + s.len);
@@ -720,13 +822,171 @@ impl ExecPlan {
                 hi_i = hi_i.max(s.off + s.len);
             }
         }
+        hi_f * 4 + hi_q + hi_i * 4
+    }
+
+    /// Check the concurrency invariant the wavefront allocator guarantees:
+    /// within every wavefront, each step's write spans (output + scratch,
+    /// all lanes) are disjoint from every other co-scheduled step's read
+    /// *and* write spans. This is what makes `replay_on`'s simultaneous
+    /// mutable views of one arena sound.
+    pub fn validate_wavefronts(&self) -> Result<(), String> {
+        fn f32_writes(s: &Step) -> Vec<Span> {
+            let mut v = vec![Span { off: s.out.off, len: s.out.len }];
+            let (fs, _, _) = s.op.scratch();
+            for sp in fs.into_iter().flatten() {
+                v.push(sp);
+            }
+            v
+        }
+        for &(start, end) in &self.waves {
+            for ai in start..end {
+                for bi in (ai + 1)..end {
+                    let (sa, sb) = (&self.steps[ai], &self.steps[bi]);
+                    let (wa, wb) = (f32_writes(sa), f32_writes(sb));
+                    // f32 lane: a's writes vs b's reads+writes, and b's
+                    // writes vs a's reads
+                    for x in &wa {
+                        for y in wb
+                            .iter()
+                            .copied()
+                            .chain(sb.ins.iter().map(|s| Span { off: s.off, len: s.len }))
+                        {
+                            if spans_overlap(x.off, x.len, y.off, y.len) {
+                                return Err(format!(
+                                    "wave {}: '{}' and '{}' overlap in the f32 lane",
+                                    sa.wave, sa.name, sb.name
+                                ));
+                            }
+                        }
+                    }
+                    for x in &wb {
+                        for y in sa.ins.iter().map(|s| Span { off: s.off, len: s.len }) {
+                            if spans_overlap(x.off, x.len, y.off, y.len) {
+                                return Err(format!(
+                                    "wave {}: '{}' writes over '{}' input",
+                                    sb.wave, sb.name, sa.name
+                                ));
+                            }
+                        }
+                    }
+                    // i8 / i32 lanes carry only int8 scratch
+                    let (_, qa, ia) = sa.op.scratch();
+                    let (_, qb, ib) = sb.op.scratch();
+                    if let (Some(x), Some(y)) = (qa, qb) {
+                        if spans_overlap(x.off, x.len, y.off, y.len) {
+                            return Err(format!(
+                                "wave {}: '{}' and '{}' share i8 scratch",
+                                sa.wave, sa.name, sb.name
+                            ));
+                        }
+                    }
+                    if let (Some(x), Some(y)) = (ia, ib) {
+                        if spans_overlap(x.off, x.len, y.off, y.len) {
+                            return Err(format!(
+                                "wave {}: '{}' and '{}' share i32 scratch",
+                                sa.wave, sa.name, sb.name
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Replay the plan: copy `x` into the input slot, run every step hot
+    /// (no per-layer allocation), and return the result with per-layer
+    /// timings exactly like the interpreter recorded them.
+    /// `RunResult::layer_ms` is indexed by *layer* (steps execute in
+    /// wavefront order, which differs from layer order on branchy graphs).
+    pub fn replay(&self, x: &Tensor, arena: &mut Arena) -> RunResult {
+        assert_eq!(
+            x.shape, self.input.shape,
+            "input shape {:?} vs planned {:?}",
+            x.shape, self.input.shape
+        );
+        arena.ensure(self);
+        arena.f[self.input.off..self.input.off + self.input.len]
+            .copy_from_slice(&x.data);
+        let mut layer_ms = vec![0.0f64; self.steps.len()];
+        let t_all = Instant::now();
+        for step in &self.steps {
+            let t0 = Instant::now();
+            exec_step(step, arena);
+            layer_ms[step.layer] = t0.elapsed().as_secs_f64() * 1e3;
+        }
         let out_slice = &arena.f[self.output.off..self.output.off + self.output.len];
         let output = Tensor::from_vec(&self.output.shape, out_slice.to_vec());
         RunResult {
             output,
             layer_ms,
             total_ms: t_all.elapsed().as_secs_f64() * 1e3,
-            peak_bytes: hi_f * 4 + hi_q + hi_i * 4,
+            peak_bytes: self.observed_peak_bytes(),
+        }
+    }
+
+    /// Replay with wavefront parallelism: steps of each wavefront are
+    /// dispatched across `pool`'s workers (waves of width 1 — all of a
+    /// pure chain — run inline), with a barrier between waves. Bit-exact
+    /// with [`ExecPlan::replay`] and `run_legacy`: the same `exec_step`
+    /// code runs over the same disjoint spans, only the order of
+    /// independent steps differs.
+    pub fn replay_on(&self, x: &Tensor, arena: &mut Arena, pool: &ThreadPool) -> RunResult {
+        assert_eq!(
+            x.shape, self.input.shape,
+            "input shape {:?} vs planned {:?}",
+            x.shape, self.input.shape
+        );
+        arena.ensure(self);
+        arena.f[self.input.off..self.input.off + self.input.len]
+            .copy_from_slice(&x.data);
+        let mut layer_ms = vec![0.0f64; self.steps.len()];
+        let lanes = Lanes {
+            f: arena.f.as_mut_ptr(),
+            q: arena.q.as_mut_ptr(),
+            acc: arena.acc.as_mut_ptr(),
+        };
+        let t_all = Instant::now();
+        for &(start, end) in &self.waves {
+            let width = end - start;
+            if width <= 1 || pool.size() <= 1 {
+                for step in &self.steps[start..end] {
+                    let t0 = Instant::now();
+                    // SAFETY: single thread here; spans are in-bounds by
+                    // construction and `ensure` sized the lanes.
+                    unsafe { exec_step_on(step, lanes) };
+                    layer_ms[step.layer] = t0.elapsed().as_secs_f64() * 1e3;
+                }
+            } else {
+                let wave_steps = &self.steps[start..end];
+                let times: Vec<AtomicU64> = (0..width).map(|_| AtomicU64::new(0)).collect();
+                pool.scope_run(width, |i| {
+                    let t0 = Instant::now();
+                    // SAFETY: the planner guarantees co-scheduled steps
+                    // touch pairwise disjoint arena spans (asserted by
+                    // `validate_wavefronts` in debug builds), so the
+                    // mutable views the workers derive from `lanes` never
+                    // overlap; `scope_run` is a barrier, so no span
+                    // outlives the wave into a reuse by a later one.
+                    unsafe { exec_step_on(&wave_steps[i], lanes) };
+                    times[i].store(
+                        (t0.elapsed().as_secs_f64() * 1e3).to_bits(),
+                        Ordering::Relaxed,
+                    );
+                });
+                for (i, step) in wave_steps.iter().enumerate() {
+                    layer_ms[step.layer] = f64::from_bits(times[i].load(Ordering::Relaxed));
+                }
+            }
+        }
+        let out_slice = &arena.f[self.output.off..self.output.off + self.output.len];
+        let output = Tensor::from_vec(&self.output.shape, out_slice.to_vec());
+        RunResult {
+            output,
+            layer_ms,
+            total_ms: t_all.elapsed().as_secs_f64() * 1e3,
+            peak_bytes: self.observed_peak_bytes(),
         }
     }
 }
@@ -751,8 +1011,41 @@ unsafe fn span_mut_at<'a>(base: *mut f32, s: Span) -> &'a mut [f32] {
     std::slice::from_raw_parts_mut(base.add(s.off), s.len)
 }
 
+/// Raw views of the arena's three lanes, shared by every worker of a
+/// wavefront.
+///
+/// SAFETY of the Send/Sync impls: a `Lanes` value is only created inside
+/// `replay`/`replay_on` from a `&mut Arena` held for the whole call, and
+/// concurrent workers only dereference spans the planner proved pairwise
+/// disjoint (`validate_wavefronts`), with a barrier between wavefronts.
+#[derive(Clone, Copy)]
+struct Lanes {
+    f: *mut f32,
+    q: *mut i8,
+    acc: *mut i32,
+}
+
+unsafe impl Send for Lanes {}
+unsafe impl Sync for Lanes {}
+
 /// Bind a step's arena spans and dispatch to the out-param primitive.
 fn exec_step(step: &Step, arena: &mut Arena) {
+    let lanes = Lanes {
+        f: arena.f.as_mut_ptr(),
+        q: arena.q.as_mut_ptr(),
+        acc: arena.acc.as_mut_ptr(),
+    };
+    // SAFETY: exclusive `&mut Arena` — no concurrent access at all.
+    unsafe { exec_step_on(step, lanes) }
+}
+
+/// Execute one step against raw lane pointers.
+///
+/// SAFETY: the lanes must stay allocated (and sized per `Arena::ensure`)
+/// for the whole call, and no concurrently executing step may touch a
+/// span overlapping this step's input/output/scratch spans — the
+/// planner's wavefront disjointness invariant.
+unsafe fn exec_step_on(step: &Step, lanes: Lanes) {
     // The planner guarantees: the output span is disjoint from every
     // input span unless `in_place` (where it aliases ins[0] exactly), and
     // scratch spans are disjoint from inputs, output and each other. The
@@ -768,7 +1061,7 @@ fn exec_step(step: &Step, arena: &mut Arena) {
             );
         }
     }
-    let fbase = arena.f.as_mut_ptr();
+    let fbase = lanes.f;
     // SAFETY: all spans were bounds-allocated by the planner inside the
     // lane sizes `ensure` guaranteed, and disjointness (above) makes the
     // simultaneous &/&mut derived from `fbase` non-overlapping.
@@ -818,8 +1111,8 @@ fn exec_step(step: &Step, arena: &mut Arena) {
                     *pad,
                     *relu,
                     span_mut_at(fbase, *cols_f),
-                    &mut arena.q[cols_q.off..cols_q.off + cols_q.len],
-                    &mut arena.acc[acc.off..acc.off + acc.len],
+                    std::slice::from_raw_parts_mut(lanes.q.add(cols_q.off), cols_q.len),
+                    std::slice::from_raw_parts_mut(lanes.acc.add(acc.off), acc.len),
                     view_mut_at(fbase, &step.out),
                 );
             }
@@ -1157,6 +1450,243 @@ mod tests {
         let x = Tensor::randn(&[1, 3, 10, 8], 1.0, &mut rng);
         let mut guard = a1.lock().unwrap();
         let r = p1.replay(&x, &mut guard);
+        assert_eq!(r.peak_bytes, p1.arena_bytes());
+    }
+
+    /// Staggered branches off the input: a light 1x1-conv chain and one
+    /// heavy 5x5 conv, joined by a concat. Wavefront order differs from
+    /// layer order (the heavy conv of wave 0 is emitted between the
+    /// chain's two light convs, which sit in waves 0 and 1).
+    fn branchy_model() -> (Graph, Weights) {
+        let mut g = Graph::new("branchy", (8, 16, 16));
+        let b0 = g.push_on(
+            "light_a",
+            LayerKind::Conv { k: (1, 1), stride: (1, 1), pad: Padding::Same, relu_fused: true },
+            vec![0],
+            8,
+        );
+        let b1 = g.push_on(
+            "light_b",
+            LayerKind::Conv { k: (1, 1), stride: (1, 1), pad: Padding::Same, relu_fused: true },
+            vec![b0],
+            8,
+        );
+        let hv = g.push_on(
+            "heavy",
+            LayerKind::Conv { k: (5, 5), stride: (1, 1), pad: Padding::Same, relu_fused: false },
+            vec![0],
+            96,
+        );
+        g.push_on("cat", LayerKind::Concat, vec![b1, hv], 0);
+        let w = crate::models::random_weights(&g, 3);
+        (g, w)
+    }
+
+    fn parity_cases() -> Vec<(Graph, Weights, bool)> {
+        let (bg, bw) = branchy_model();
+        let (rg, rw) = residual_model();
+        let ig = crate::models::inceptionette::inceptionette();
+        let iw = crate::models::random_weights(&ig, 11);
+        // bool: graph has a wavefront of width >= 2
+        vec![(bg, bw, true), (rg, rw, false), (ig, iw, true)]
+    }
+
+    #[test]
+    fn replay_on_matches_replay_and_legacy_across_thread_counts() {
+        for (g, w, _) in parity_cases() {
+            let p = Prepared::new(g.clone(), w, Platform::pi4()).unwrap();
+            let space = DesignSpace::build(&g, &p.platform);
+            let mut rng = Rng::new(5);
+            let x = Tensor::randn(&[1, g.input.0, g.input.1, g.input.2], 1.0, &mut rng);
+            for choice in [ConvImpl::Direct, ConvImpl::GemmBlocked, ConvImpl::Int8Gemm] {
+                let a = space.uniform(&g, choice);
+                let legacy = p.run_legacy(&x, &a);
+                let plan = p.plan(&a, 1).unwrap();
+                let mut arena = Arena::for_plan(&plan);
+                let seq = plan.replay(&x, &mut arena);
+                assert!(
+                    seq.output.allclose(&legacy.output, 0.0, 0.0),
+                    "{}/{choice:?}: sequential replay diverged from legacy",
+                    g.name
+                );
+                for threads in [1usize, 2, 4] {
+                    let pool = ThreadPool::new(threads);
+                    let par = plan.replay_on(&x, &mut arena, &pool);
+                    assert!(
+                        par.output.allclose(&seq.output, 0.0, 0.0),
+                        "{}/{choice:?}/{threads}t: parallel replay diverged (max diff {})",
+                        g.name,
+                        par.output.max_abs_diff(&seq.output)
+                    );
+                    assert_eq!(par.peak_bytes, seq.peak_bytes);
+                    assert_eq!(par.layer_ms.len(), g.layers.len());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn co_scheduled_steps_have_disjoint_arena_spans() {
+        for (g, w, parallel) in parity_cases() {
+            let p = Prepared::new(g.clone(), w, Platform::pi4()).unwrap();
+            let space = DesignSpace::build(&g, &p.platform);
+            for choice in [ConvImpl::Direct, ConvImpl::GemmRef, ConvImpl::GemmBlocked,
+                           ConvImpl::Int8Gemm] {
+                let a = space.uniform(&g, choice);
+                for batch in [1usize, 2] {
+                    let plan = p.plan(&a, batch).unwrap();
+                    plan.validate_wavefronts()
+                        .unwrap_or_else(|e| panic!("{}/{choice:?}/b{batch}: {e}", g.name));
+                    assert_eq!(plan.waves.last().map(|&(_, e)| e), Some(plan.steps.len()));
+                    if parallel {
+                        assert!(
+                            plan.max_wave_width() >= 2,
+                            "{}: branchy graph must yield a parallel wavefront",
+                            g.name
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn inplace_aliasing_never_crosses_a_wavefront() {
+        // conv_a feeds both a conv (reader) and a ReLU: the two land in the
+        // same wavefront, so the ReLU must NOT alias in place (the old
+        // sequential planner would have aliased it). The later Add is the
+        // sole consumer of its first input and may alias.
+        let mut g = Graph::new("alias", (4, 8, 8));
+        let a = g.push_on(
+            "conv_a",
+            LayerKind::Conv { k: (3, 3), stride: (1, 1), pad: Padding::Same, relu_fused: false },
+            vec![0],
+            4,
+        );
+        let b = g.push_on(
+            "conv_b",
+            LayerKind::Conv { k: (3, 3), stride: (1, 1), pad: Padding::Same, relu_fused: false },
+            vec![a],
+            4,
+        );
+        let ra = g.push_on("relu_a", LayerKind::ReLU, vec![a], 0);
+        let c = g.push_on(
+            "conv_c",
+            LayerKind::Conv { k: (3, 3), stride: (1, 1), pad: Padding::Same, relu_fused: false },
+            vec![ra],
+            4,
+        );
+        let add = g.push_on("add", LayerKind::Add { relu_fused: true }, vec![b, c], 0);
+        g.push_on("cat", LayerKind::Concat, vec![add, 0], 0);
+        let w = crate::models::random_weights(&g, 2);
+        let p = Prepared::new(g.clone(), w, Platform::pi3()).unwrap();
+        let a_uni = DesignSpace::build(&g, &p.platform).uniform(&g, ConvImpl::Direct);
+        let plan = p.plan(&a_uni, 1).unwrap();
+
+        let relu = plan.steps.iter().find(|s| s.name == "relu_a").unwrap();
+        let conv_b = plan.steps.iter().find(|s| s.name == "conv_b").unwrap();
+        assert_eq!(relu.wave, conv_b.wave, "both consume conv_a's output");
+        assert!(
+            !relu.in_place,
+            "a co-scheduled reader forbids in-place aliasing"
+        );
+        let add_step = plan.steps.iter().find(|s| s.name == "add").unwrap();
+        assert!(add_step.in_place, "sole consumer still aliases");
+
+        // generalized: every in-place step's aliased value has all of its
+        // other consumers retired in strictly earlier wavefronts
+        let mut wave_of = vec![0usize; g.layers.len()];
+        for s in &plan.steps {
+            wave_of[s.layer] = s.wave;
+        }
+        let mut aliased = 0;
+        for s in plan.steps.iter().filter(|s| s.in_place) {
+            aliased += 1;
+            let v = g.layers[s.layer].inputs[0];
+            for (j, l) in g.layers.iter().enumerate() {
+                if j != s.layer && l.inputs.contains(&v) {
+                    assert!(
+                        wave_of[j] < s.wave,
+                        "'{}' aliases a value '{}' still reads in wave {}",
+                        s.name,
+                        l.name,
+                        wave_of[j]
+                    );
+                }
+            }
+        }
+        assert!(aliased >= 1);
+
+        // and the graph still computes the same thing in parallel
+        let mut rng = Rng::new(8);
+        let x = Tensor::randn(&[1, 4, 8, 8], 1.0, &mut rng);
+        let legacy = p.run_legacy(&x, &a_uni);
+        let mut arena = Arena::for_plan(&plan);
+        let pool = ThreadPool::new(4);
+        let par = plan.replay_on(&x, &mut arena, &pool);
+        assert!(par.output.allclose(&legacy.output, 0.0, 0.0));
+    }
+
+    #[test]
+    fn layer_ms_indexed_by_layer_not_completion_order() {
+        let (g, w) = branchy_model();
+        let p = Prepared::new(g.clone(), w, Platform::pi4()).unwrap();
+        let a = DesignSpace::build(&g, &p.platform).uniform(&g, ConvImpl::GemmBlocked);
+        let plan = p.plan(&a, 1).unwrap();
+        // wavefront emission reorders steps relative to layer order here
+        assert!(
+            plan.steps.iter().enumerate().any(|(si, s)| s.layer != si),
+            "expected wavefront order to differ from layer order"
+        );
+        let mut rng = Rng::new(13);
+        let x = Tensor::randn(&[1, 8, 16, 16], 1.0, &mut rng);
+        let pool = ThreadPool::new(4);
+        let mut arena = Arena::for_plan(&plan);
+        let r = plan.replay_on(&x, &mut arena, &pool);
+        assert_eq!(r.layer_ms.len(), g.layers.len());
+        // 'heavy' (layer 2, ~300x the flops of any other layer) must own
+        // the dominant slot even though it executed as step 1 of wave 0
+        let argmax = r
+            .layer_ms
+            .iter()
+            .enumerate()
+            .max_by(|p, q| p.1.partial_cmp(q.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(argmax, 2, "layer_ms must stay layer-indexed: {:?}", r.layer_ms);
+    }
+
+    #[test]
+    fn arena_pool_lends_larger_compatible_arena() {
+        let (g, w) = toy_model();
+        let p = Prepared::new(g.clone(), w, Platform::pi4()).unwrap();
+        let space = DesignSpace::build(&g, &p.platform);
+        let a = space.uniform(&g, ConvImpl::GemmBlocked);
+        let pool = ArenaPool::new();
+        let p4 = p.plan(&a, 4).unwrap();
+        let p1 = p.plan(&a, 1).unwrap();
+        assert!(p4.profile().covers(&p1.profile()));
+        let a4 = pool.checkout(&p4);
+        // the batch-1 plan fits inside the idle batch-4 arena: borrowed,
+        // not newly allocated -> fewer arenas than distinct profiles
+        let a1 = pool.checkout(&p1);
+        assert!(Arc::ptr_eq(&a4, &a1));
+        assert_eq!(pool.arena_count(), 1);
+        // a busy arena is not lent to a *new* profile
+        let guard = a4.lock().unwrap();
+        let a1b = pool.checkout(&p.plan(&a, 1).unwrap());
+        assert!(!Arc::ptr_eq(&a4, &a1b));
+        assert_eq!(pool.arena_count(), 2);
+        drop(guard);
+        // an exact-profile match is shared even while busy
+        let a1c = pool.checkout(&p.plan(&a, 1).unwrap());
+        assert!(Arc::ptr_eq(&a1b, &a1c));
+        assert_eq!(pool.arena_count(), 2);
+        // the borrowed arena replays the smaller plan correctly
+        let mut rng = Rng::new(21);
+        let x = Tensor::randn(&[1, 3, 10, 8], 1.0, &mut rng);
+        let mut ga = a1.lock().unwrap();
+        let r = p1.replay(&x, &mut ga);
         assert_eq!(r.peak_bytes, p1.arena_bytes());
     }
 

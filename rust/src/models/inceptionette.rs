@@ -1,0 +1,82 @@
+//! `inceptionette` — a small branchy reference model for the wavefront
+//! scheduler: two inception-style blocks of four parallel conv towers
+//! (1x1 / 1x1→3x3 / 1x1→5x5 / 3x3-maxpool→1x1) joined by channel
+//! concats. Channel structure follows GoogleNet's block shape at toy
+//! scale, so tests and benches get a realistic multi-branch workload
+//! (wavefronts of width 4) without GoogleNet's cost.
+
+use crate::lne::graph::{Graph, LayerKind, Padding, PoolKind};
+
+fn conv(k: usize) -> LayerKind {
+    LayerKind::Conv {
+        k: (k, k),
+        stride: (1, 1),
+        pad: Padding::Same,
+        relu_fused: true,
+    }
+}
+
+/// One inception block on value `inp`; returns the concat's value id.
+/// Tower channels: `c1` (1x1), `c3r`→`c3` (reduce + 3x3), `c5r`→`c5`
+/// (reduce + 5x5), `cp` (pool projection); output has c1+c3+c5+cp
+/// channels at the input's spatial extent.
+#[allow(clippy::too_many_arguments)]
+fn block(
+    g: &mut Graph,
+    name: &str,
+    inp: usize,
+    c1: usize,
+    c3r: usize,
+    c3: usize,
+    c5r: usize,
+    c5: usize,
+    cp: usize,
+) -> usize {
+    let t1 = g.push_on(&format!("{name}_1x1"), conv(1), vec![inp], c1);
+    let r3 = g.push_on(&format!("{name}_3x3r"), conv(1), vec![inp], c3r);
+    let t3 = g.push_on(&format!("{name}_3x3"), conv(3), vec![r3], c3);
+    let r5 = g.push_on(&format!("{name}_5x5r"), conv(1), vec![inp], c5r);
+    let t5 = g.push_on(&format!("{name}_5x5"), conv(5), vec![r5], c5);
+    let pl = g.push_on(
+        &format!("{name}_pool"),
+        LayerKind::Pool { kind: PoolKind::Max, k: 3, stride: 1, pad: 1, global: false },
+        vec![inp],
+        0,
+    );
+    let tp = g.push_on(&format!("{name}_proj"), conv(1), vec![pl], cp);
+    g.push_on(&format!("{name}_cat"), LayerKind::Concat, vec![t1, t3, t5, tp], 0)
+}
+
+pub fn inceptionette() -> Graph {
+    let mut g = Graph::new("inceptionette", (3, 16, 16));
+    let stem = g.push("stem", conv(3), 16);
+    let b1 = block(&mut g, "inc1", stem, 8, 8, 12, 4, 6, 6); // 32 ch out
+    let b2 = block(&mut g, "inc2", b1, 12, 8, 16, 4, 8, 8); // 44 ch out
+    g.push_on(
+        "pool",
+        LayerKind::Pool { kind: PoolKind::Avg, k: 0, stride: 1, pad: 0, global: true },
+        vec![b2],
+        0,
+    );
+    g.push("fc", LayerKind::Fc { relu_fused: false }, 10);
+    g.push("prob", LayerKind::Softmax, 0);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inceptionette_shapes_and_branch_width() {
+        let g = inceptionette();
+        let shapes = g.infer_shapes().unwrap();
+        // stem -> 16ch, block concats -> 32 and 44 channels, 10 classes
+        assert_eq!(shapes[1], (16, 16, 16));
+        let cat1 = g.layer("inc1_cat").unwrap();
+        assert_eq!(cat1.inputs.len(), 4, "four parallel towers");
+        let cat1_val = g.layers.iter().position(|l| l.name == "inc1_cat").unwrap() + 1;
+        assert_eq!(shapes[cat1_val], (32, 16, 16));
+        assert_eq!(shapes[shapes.len() - 1], (10, 1, 1));
+    }
+}

@@ -3,11 +3,12 @@
 //! Fig 15 uses Alexnet, Resnet50-V1, Googlenet-V1, Squeezenet-V1.1 and
 //! Mobilenet-V2; Fig 14 uses resnet18/50-based body-pose models; Fig 13
 //! uses the KWS family. Channel structure is faithful to the originals;
-//! spatial input is reduced (DESIGN.md §6: 64x64 for the ImageNet family,
+//! spatial input is reduced (DESIGN.md §7: 64x64 for the ImageNet family,
 //! 128x96 for pose) to keep single-thread from-scratch benches tractable —
 //! relative framework orderings are what the evaluation claims.
 
 pub mod imagenet;
+pub mod inceptionette;
 pub mod kws;
 pub mod pose;
 
@@ -88,6 +89,7 @@ pub fn by_name(name: &str, seed: u64) -> Option<(Graph, Weights)> {
         "mobilenet-v2" => imagenet::mobilenet_v2(),
         "pose-resnet18" => pose::pose_resnet(18),
         "pose-resnet50" => pose::pose_resnet(50),
+        "inceptionette" => inceptionette::inceptionette(),
         _ => return None,
     };
     let w = random_weights(&g, seed);
@@ -105,7 +107,7 @@ mod tests {
 
     #[test]
     fn every_zoo_model_builds_and_runs() {
-        for name in IMAGENET_MODELS.iter().chain(["pose-resnet18"].iter()) {
+        for name in IMAGENET_MODELS.iter().chain(["pose-resnet18", "inceptionette"].iter()) {
             let (g, w) = by_name(name, 0).unwrap();
             let shapes = g.infer_shapes().unwrap_or_else(|e| panic!("{name}: {e}"));
             assert!(shapes.len() > 5, "{name} too small");

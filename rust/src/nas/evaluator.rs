@@ -1,7 +1,7 @@
 //! Candidate evaluators for NAS (paper §5.3).
 //!
 //! `Surrogate`: a calibrated analytic accuracy model — deterministic, free,
-//! used by the default Table-4/5 bench (DESIGN.md §6 documents this
+//! used by the default Table-4/5 bench (DESIGN.md §7 documents this
 //! substitution for the paper's hundreds of trained candidates). The model
 //! encodes the paper's own findings: accuracy saturates in FLOPs, uniform
 //! channel stacks (the seed) carry redundancy, DS variants trade a few
@@ -23,6 +23,7 @@ use crate::runtime::EngineHandle;
 use crate::tensor::Tensor;
 use crate::training::trainer::{self, TrainConfig};
 use crate::util::rng::Rng;
+use crate::util::threadpool::ThreadPool;
 
 #[derive(Debug, Clone)]
 pub struct Evaluation {
@@ -131,16 +132,36 @@ pub fn lne_prepared(
 /// Decorator adding *measured* LNE latency to any evaluator: per
 /// candidate, one `ExecPlan` is compiled for the f32-baseline assignment
 /// and replayed `reps` times against a shared arena (median reported) —
-/// the plan-once/run-hot protocol the engine refactor enables.
+/// the plan-once/run-hot protocol the engine refactor enables. With
+/// [`WithLneLatency::with_threads`] the replays run wavefront-parallel on
+/// a worker pool, so the search scores candidates at the parallelism the
+/// deployment will actually use.
 pub struct WithLneLatency<E> {
     pub inner: E,
     pub platform: Platform,
     pub reps: usize,
+    threads: usize,
+    pool: Option<ThreadPool>,
 }
 
 impl<E> WithLneLatency<E> {
     pub fn new(inner: E, platform: Platform, reps: usize) -> WithLneLatency<E> {
-        WithLneLatency { inner, platform, reps: reps.max(1) }
+        WithLneLatency { inner, platform, reps: reps.max(1), threads: 1, pool: None }
+    }
+
+    /// Measure with `threads` wavefront workers (1 = sequential replay).
+    pub fn with_threads(mut self, threads: usize) -> WithLneLatency<E> {
+        self.threads = threads.max(1);
+        self.pool = if self.threads > 1 {
+            Some(ThreadPool::new(self.threads))
+        } else {
+            None
+        };
+        self
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
     }
 }
 
@@ -156,11 +177,13 @@ impl<E: ArchEvaluator> ArchEvaluator for WithLneLatency<E> {
             1.0,
             &mut rng,
         );
-        let mut times: Vec<f64> = (0..self.reps)
-            .map(|_| plan.replay(&x, &mut arena).layer_ms.iter().sum())
+        let times: Vec<f64> = (0..self.reps)
+            .map(|_| match &self.pool {
+                Some(pool) => plan.replay_on(&x, &mut arena, pool).total_ms,
+                None => plan.replay(&x, &mut arena).total_ms,
+            })
             .collect();
-        times.sort_by(|t1, t2| t1.partial_cmp(t2).unwrap());
-        eval.latency_ms = Some(times[times.len() / 2]);
+        eval.latency_ms = Some(crate::util::stats::median(times));
         Ok(eval)
     }
 }
@@ -302,6 +325,21 @@ mod tests {
         let big = KwsArch { ds: false, convs: vec![(5, 100); 6] };
         let ev_big = e.evaluate(&big).unwrap();
         assert!(ev_big.latency_ms.unwrap() > ms);
+    }
+
+    #[test]
+    fn latency_decorator_measures_at_a_thread_count() {
+        let arch = KwsArch { ds: false, convs: vec![(3, 12), (1, 12), (3, 12)] };
+        let mut e = WithLneLatency::new(Surrogate, crate::lne::platform::Platform::pi4(), 3)
+            .with_threads(2);
+        assert_eq!(e.threads(), 2);
+        let ev = e.evaluate(&arch).unwrap();
+        let ms = ev.latency_ms.expect("decorator fills latency");
+        assert!(ms > 0.0 && ms.is_finite());
+        // threads = 1 degrades to the sequential path
+        let mut e1 = WithLneLatency::new(Surrogate, crate::lne::platform::Platform::pi4(), 3)
+            .with_threads(1);
+        assert!(e1.evaluate(&arch).unwrap().latency_ms.unwrap().is_finite());
     }
 
     #[test]

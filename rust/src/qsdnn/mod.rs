@@ -148,11 +148,10 @@ pub fn search(p: &Prepared, x: &Tensor, cfg: &QsDnnConfig) -> SearchOutcome {
 pub fn measure(p: &Prepared, x: &Tensor, a: &Assignment, reps: usize) -> f64 {
     let plan = p.plan(a, x.n()).expect("plannable graph");
     let mut arena = Arena::for_plan(&plan);
-    let mut times: Vec<f64> = (0..reps.max(1))
+    let times: Vec<f64> = (0..reps.max(1))
         .map(|_| plan.replay(x, &mut arena).layer_ms.iter().sum())
         .collect();
-    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    times[times.len() / 2]
+    crate::util::stats::median(times)
 }
 
 #[cfg(test)]

@@ -9,6 +9,11 @@
 //! returns a [`Ticket`] immediately, so callers (HTTP workers, IoT agents)
 //! are not thread-per-request blocked; the blocking
 //! [`DynamicBatcher::submit`] is a one-line wrapper over it.
+//!
+//! The batcher thread only coalesces and dispatches; LNE backends execute
+//! their replays wavefront-parallel on the router's shared
+//! [`WorkerPool`](super::WorkerPool), so compute threads do not multiply
+//! with registered models.
 
 use super::metrics::ServingMetrics;
 use super::session::InferenceSession;
@@ -278,7 +283,8 @@ mod tests {
         metrics: Arc<ServingMetrics>,
     ) -> DynamicBatcher<LneSession> {
         let (p, a) = lne_toy();
-        let session = LneSession::new(p, a, buckets, &[], pool).unwrap();
+        let workers = crate::serving::session::tests::workers();
+        let session = LneSession::new(p, a, buckets, &[], pool, workers).unwrap();
         DynamicBatcher::start(
             "test",
             session,
@@ -390,8 +396,9 @@ mod tests {
         let metrics = Arc::new(ServingMetrics::default());
         let b1 = lne_batcher(&[1, 4], 1.0, &pool, Arc::clone(&metrics));
         let b2 = lne_batcher(&[1, 4], 1.0, &pool, Arc::clone(&metrics));
-        // two identical models x two buckets -> only two pooled arenas
-        assert_eq!(pool.arena_count(), 2);
+        // two identical models x two buckets -> ONE pooled arena: the
+        // batch-1 profile borrows the batch-4 arena (compatible lending)
+        assert_eq!(pool.arena_count(), 1);
         // both batchers serve correctly over the shared arenas
         let p1 = b1.submit(vec![0.1f32; SAMPLE]).unwrap();
         let p2 = b2.submit(vec![0.1f32; SAMPLE]).unwrap();

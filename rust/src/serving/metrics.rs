@@ -1,6 +1,8 @@
 //! Serving metrics: request/batch counters, latency distributions, batcher
-//! queue depth and per-bucket flush counts. One instance is shared by all
-//! batchers behind a [`ModelRouter`](super::ModelRouter).
+//! queue depth, per-bucket flush counts, and — for LNE sessions replaying
+//! on the shared [`WorkerPool`](super::WorkerPool) — per-replay wavefront
+//! shape and pool occupancy. One instance is shared by all batchers behind
+//! a [`ModelRouter`](super::ModelRouter).
 
 use crate::util::json::Json;
 use crate::util::stats::Welford;
@@ -24,6 +26,14 @@ struct Inner {
     queue_depth: Welford,
     /// Flush count per chosen bucket size.
     bucket_flushes: BTreeMap<usize, u64>,
+    /// Plan replays dispatched to the shared worker pool.
+    replays: u64,
+    /// Wavefront count of each replayed plan (critical-path depth).
+    waves: Welford,
+    /// Widest wavefront of each replayed plan (parallel branch breadth).
+    wave_width: Welford,
+    /// Worker-pool jobs already in flight when a replay dispatched.
+    pool_occupancy: Welford,
 }
 
 impl ServingMetrics {
@@ -47,6 +57,17 @@ impl ServingMetrics {
         *i.bucket_flushes.entry(bucket).or_insert(0) += 1;
     }
 
+    /// Record one plan replay on the shared worker pool: the plan's
+    /// wavefront count and widest wavefront, plus how many pool jobs were
+    /// already in flight when this replay dispatched.
+    pub fn record_replay(&self, waves: usize, max_width: usize, occupancy: usize) {
+        let mut i = self.inner.lock().unwrap();
+        i.replays += 1;
+        i.waves.push(waves as f64);
+        i.wave_width.push(max_width as f64);
+        i.pool_occupancy.push(occupancy as f64);
+    }
+
     pub fn snapshot(&self) -> Json {
         let i = self.inner.lock().unwrap();
         let flushes: BTreeMap<String, Json> = i
@@ -66,6 +87,12 @@ impl ServingMetrics {
             ("queue_depth_mean", Json::num(i.queue_depth.mean())),
             ("queue_depth_max", Json::num(i.queue_depth.max)),
             ("bucket_flushes", Json::Obj(flushes)),
+            ("replays", Json::from(i.replays as i64)),
+            ("waves_mean", Json::num(i.waves.mean())),
+            ("wave_width_mean", Json::num(i.wave_width.mean())),
+            ("wave_width_max", Json::num(i.wave_width.max)),
+            ("pool_occupancy_mean", Json::num(i.pool_occupancy.mean())),
+            ("pool_occupancy_max", Json::num(i.pool_occupancy.max)),
         ])
     }
 }
@@ -89,5 +116,18 @@ mod tests {
         assert!((s.get("queue_depth_max").as_f64().unwrap() - 9.0).abs() < 1e-9);
         assert_eq!(s.get("bucket_flushes").get("b8").as_i64(), Some(2));
         assert_eq!(s.get("bucket_flushes").get("b1").as_i64(), Some(1));
+    }
+
+    #[test]
+    fn replay_wavefront_and_occupancy_aggregate() {
+        let m = ServingMetrics::default();
+        m.record_replay(12, 4, 0);
+        m.record_replay(12, 4, 3);
+        let s = m.snapshot();
+        assert_eq!(s.get("replays").as_i64(), Some(2));
+        assert!((s.get("wave_width_max").as_f64().unwrap() - 4.0).abs() < 1e-9);
+        assert!((s.get("waves_mean").as_f64().unwrap() - 12.0).abs() < 1e-9);
+        assert!((s.get("pool_occupancy_mean").as_f64().unwrap() - 1.5).abs() < 1e-9);
+        assert!((s.get("pool_occupancy_max").as_f64().unwrap() - 3.0).abs() < 1e-9);
     }
 }

@@ -8,16 +8,20 @@
 //! Requests are routed per model to a batcher thread that coalesces them
 //! into the backend's compiled batch buckets with a flush deadline; LNE
 //! sessions check their per-bucket arenas out of a cross-model
-//! [`ArenaPool`], so models with identical high-water profiles share
-//! memory instead of each holding plan+arena per bucket.
+//! [`ArenaPool`] (largest bucket first, so compatible profiles borrow the
+//! larger arena) and replay on the router's one shared [`WorkerPool`] —
+//! branchy plans execute wavefront-parallel (DESIGN.md §6) with total
+//! compute threads bounded by the machine, not by registered models.
 
 pub mod batcher;
 pub mod metrics;
+pub mod pool;
 pub mod server;
 pub mod session;
 
 pub use batcher::{BatcherConfig, DynamicBatcher, Prediction, Ticket};
 pub use metrics::ServingMetrics;
+pub use pool::WorkerPool;
 pub use server::KwsServer;
 pub use session::{InferenceSession, LneSession, PjrtSession};
 
@@ -70,6 +74,8 @@ pub struct ModelRouter {
     pub metrics: Arc<ServingMetrics>,
     /// Cross-model arena pool for LNE sessions registered on this router.
     pub arena_pool: Arc<ArenaPool>,
+    /// The one shared replay worker pool every LNE session dispatches to.
+    pub worker_pool: Arc<WorkerPool>,
 }
 
 impl Default for ModelRouter {
@@ -79,12 +85,20 @@ impl Default for ModelRouter {
 }
 
 impl ModelRouter {
+    /// Router with a worker pool sized to the machine.
     pub fn new() -> ModelRouter {
+        ModelRouter::with_threads(pool::default_threads())
+    }
+
+    /// Router whose shared replay pool has exactly `threads` workers
+    /// (CLI `--threads`; 1 = fully sequential replays).
+    pub fn with_threads(threads: usize) -> ModelRouter {
         ModelRouter {
             batchers: BTreeMap::new(),
             default_model: String::new(),
             metrics: Arc::new(ServingMetrics::default()),
             arena_pool: Arc::new(ArenaPool::new()),
+            worker_pool: Arc::new(WorkerPool::new(threads)),
         }
     }
 
@@ -124,7 +138,8 @@ impl ModelRouter {
     }
 
     /// Register an LNE-backed model: one `ExecPlan` per bucket in
-    /// `batches`, arenas checked out of this router's shared pool.
+    /// `batches`, arenas checked out of this router's shared pool, replays
+    /// dispatched to the router's shared worker pool.
     pub fn register_lne(
         &mut self,
         name: &str,
@@ -134,7 +149,15 @@ impl ModelRouter {
         classes: &[String],
         cfg: BatcherConfig,
     ) -> Result<(), String> {
-        let session = LneSession::new(prepared, assignment, batches, classes, &self.arena_pool)?;
+        let session = LneSession::new(
+            prepared,
+            assignment,
+            batches,
+            classes,
+            &self.arena_pool,
+            Arc::clone(&self.worker_pool),
+        )?
+        .with_metrics(Arc::clone(&self.metrics));
         self.register_session(name, Box::new(session), cfg)
     }
 
@@ -284,8 +307,9 @@ mod tests {
         assert!(router
             .register_lne("m1", p3, a3, &[1], &[], BatcherConfig::default())
             .is_err());
-        // identical profiles -> pooled arenas, 2 not 4
-        assert_eq!(router.arena_pool.arena_count(), 2);
+        // identical profiles + compatible lending (batch-1 borrows the
+        // batch-4 arena) -> ONE pooled arena, not models x buckets = 4
+        assert_eq!(router.arena_pool.arena_count(), 1);
         // async round trip on the default model
         let ticket = router.infer_async(None, vec![0.3; 72]).unwrap();
         let pred = ticket.wait().unwrap();

@@ -1,0 +1,64 @@
+//! The shared serving worker pool (ROADMAP remnant from PR 2): one
+//! fixed-size pool per [`ModelRouter`](super::ModelRouter) instead of
+//! compute threads per model. LNE sessions dispatch their wavefront-
+//! parallel replays here (`ExecPlan::replay_on`), so total compute
+//! parallelism is bounded by the machine, not by models × branches.
+
+use crate::util::threadpool::ThreadPool;
+
+/// Default worker count: the machine's available parallelism.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+}
+
+/// A shared pool of replay workers. Thin wrapper over the substrate
+/// [`ThreadPool`] that fixes the serving semantics: sized once at router
+/// construction, shared by every registered LNE session, occupancy
+/// observable for metrics.
+pub struct WorkerPool {
+    pool: ThreadPool,
+}
+
+impl WorkerPool {
+    pub fn new(threads: usize) -> WorkerPool {
+        WorkerPool { pool: ThreadPool::new(threads.max(1)) }
+    }
+
+    /// Pool sized to the machine (see [`default_threads`]).
+    pub fn with_available_parallelism() -> WorkerPool {
+        WorkerPool::new(default_threads())
+    }
+
+    /// Number of workers.
+    pub fn threads(&self) -> usize {
+        self.pool.size()
+    }
+
+    /// Jobs currently queued or executing — the occupancy gauge
+    /// `ServingMetrics` samples at replay dispatch.
+    pub fn active(&self) -> usize {
+        self.pool.active()
+    }
+
+    /// The underlying pool, for `ExecPlan::replay_on`.
+    pub fn inner(&self) -> &ThreadPool {
+        &self.pool
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn worker_pool_sizes_and_idles() {
+        let p = WorkerPool::new(3);
+        assert_eq!(p.threads(), 3);
+        assert_eq!(p.active(), 0);
+        // degenerate size clamps to one worker
+        assert_eq!(WorkerPool::new(0).threads(), 1);
+        assert!(default_threads() >= 1);
+    }
+}

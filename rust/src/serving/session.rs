@@ -7,6 +7,8 @@
 //! the LNE plan/arena path ([`LneSession`]) without knowing which runs.
 
 use super::batcher::{argmax, softmax, Prediction};
+use super::metrics::ServingMetrics;
+use super::pool::WorkerPool;
 use super::ServableModel;
 use crate::lne::engine::Prepared;
 use crate::lne::graph::LayerKind;
@@ -165,9 +167,12 @@ struct LneBucket {
 }
 
 /// LNE backend: one `ExecPlan` per batch bucket, compiled at registration
-/// (plan once, run hot), arenas checked out of a cross-model [`ArenaPool`].
-/// Steady-state inference performs zero heap allocation in the execution
-/// hot loop; replays on a shared arena serialize on its lock.
+/// (plan once, run hot), arenas checked out of a cross-model [`ArenaPool`]
+/// largest bucket first, so smaller buckets borrow the big bucket's arena
+/// (compatible-profile lending). Steady-state inference performs zero heap
+/// allocation in the execution hot loop; replays on a shared arena
+/// serialize on its lock and dispatch their wavefront-parallel steps onto
+/// the router's shared [`WorkerPool`] instead of a thread per model.
 pub struct LneSession {
     prepared: Arc<Prepared>,
     assignment: Assignment,
@@ -177,18 +182,25 @@ pub struct LneSession {
     input_len: usize,
     /// Softmax the output row unless the graph already ends in one.
     apply_softmax: bool,
+    /// Shared replay workers (wavefront parallelism when threads > 1).
+    workers: Arc<WorkerPool>,
+    /// When attached, each replay records wavefront shape + occupancy.
+    metrics: Option<Arc<ServingMetrics>>,
 }
 
 impl LneSession {
     /// Precompile plans for every bucket size in `batches` (deduplicated,
-    /// ascending) and check their arenas out of `pool`. `classes` may be
-    /// empty; names are synthesized per output index then.
+    /// ascending) and check their arenas out of `pool` — largest bucket
+    /// first, so a smaller bucket's compatible profile borrows the larger
+    /// arena instead of allocating its own. `classes` may be empty; names
+    /// are synthesized per output index then. Replays run on `workers`.
     pub fn new(
         prepared: Arc<Prepared>,
         assignment: Assignment,
         batches: &[usize],
         classes: &[String],
         pool: &ArenaPool,
+        workers: Arc<WorkerPool>,
     ) -> Result<LneSession, String> {
         let (c, h, w) = prepared.graph.input;
         let input_len = c * h * w;
@@ -199,12 +211,13 @@ impl LneSession {
             return Err("no batch buckets given".into());
         }
         let mut buckets = Vec::with_capacity(sizes.len());
-        for &b in &sizes {
+        for &b in sizes.iter().rev() {
             let plan = prepared.plan(&assignment, b)?;
             let arena = pool.checkout(&plan);
             let staging = Tensor::zeros(&[b, c, h, w]);
             buckets.push(LneBucket { batch: b, plan, staging, arena });
         }
+        buckets.reverse();
         let nc = buckets[0].plan.output.len / sizes[0];
         let classes: Vec<String> = (0..nc)
             .map(|i| classes.get(i).cloned().unwrap_or_else(|| format!("class{i}")))
@@ -213,7 +226,24 @@ impl LneSession {
             prepared.graph.layers.last().map(|l| &l.kind),
             Some(LayerKind::Softmax)
         );
-        Ok(LneSession { prepared, assignment, buckets, sizes, classes, input_len, apply_softmax })
+        Ok(LneSession {
+            prepared,
+            assignment,
+            buckets,
+            sizes,
+            classes,
+            input_len,
+            apply_softmax,
+            workers,
+            metrics: None,
+        })
+    }
+
+    /// Attach serving metrics: each replay then records its plan's
+    /// wavefront shape and the worker-pool occupancy it dispatched into.
+    pub fn with_metrics(mut self, metrics: Arc<ServingMetrics>) -> LneSession {
+        self.metrics = Some(metrics);
+        self
     }
 
     /// Planned arena footprint of the largest bucket (capacity planning).
@@ -263,13 +293,21 @@ impl InferenceSession for LneSession {
         for v in b.staging.data[inputs.len() * sample_len..].iter_mut() {
             *v = 0.0;
         }
+        let occupancy = self.workers.active();
         let result = {
             // recover from poisoning: the arena holds no invariants a fresh
             // replay doesn't rewrite, and one model's panic must not
             // permanently fail every model lending the same arena
             let mut arena = b.arena.lock().unwrap_or_else(|e| e.into_inner());
-            b.plan.replay(&b.staging, &mut arena)
+            if self.workers.threads() > 1 {
+                b.plan.replay_on(&b.staging, &mut arena, self.workers.inner())
+            } else {
+                b.plan.replay(&b.staging, &mut arena)
+            }
         };
+        if let Some(m) = &self.metrics {
+            m.record_replay(b.plan.wave_count(), b.plan.max_wave_width(), occupancy);
+        }
         let row_len = result.output.len() / b.batch;
         let preds = (0..inputs.len())
             .map(|i| {
@@ -332,11 +370,16 @@ pub(crate) mod tests {
         (Arc::new(p), a)
     }
 
+    pub(crate) fn workers() -> Arc<WorkerPool> {
+        Arc::new(WorkerPool::new(2))
+    }
+
     #[test]
     fn lne_session_matches_single_sample_runs() {
         let (p, a) = lne_toy();
         let pool = ArenaPool::new();
-        let mut s = LneSession::new(Arc::clone(&p), a.clone(), &[4, 1, 4], &[], &pool).unwrap();
+        let mut s =
+            LneSession::new(Arc::clone(&p), a.clone(), &[4, 1, 4], &[], &pool, workers()).unwrap();
         assert_eq!(s.buckets(), &[1, 4]);
         assert_eq!(s.input_len(), 2 * 6 * 6);
         assert_eq!(s.classes(), vec!["class0", "class1", "class2"]);
@@ -369,13 +412,58 @@ pub(crate) mod tests {
         let (p1, a1) = lne_toy();
         let (p2, a2) = lne_toy();
         let pool = ArenaPool::new();
-        let s1 = LneSession::new(p1, a1, &[1, 4], &[], &pool).unwrap();
-        let s2 = LneSession::new(p2, a2, &[1, 4], &[], &pool).unwrap();
-        // identical per-bucket high-water profiles -> 2 arenas, not
-        // models x buckets = 4
+        let s1 = LneSession::new(p1, a1, &[1, 4], &[], &pool, workers()).unwrap();
+        let s2 = LneSession::new(p2, a2, &[1, 4], &[], &pool, workers()).unwrap();
+        // largest-first checkout + compatible-profile lending: the batch-1
+        // bucket borrows the batch-4 arena, and the second model matches
+        // the first's profiles exactly -> ONE arena, not models x buckets
         let models_x_buckets = 2 * s1.buckets().len();
-        assert_eq!(pool.arena_count(), 2);
+        assert_eq!(pool.arena_count(), 1);
         assert!(pool.arena_count() < models_x_buckets);
         assert_eq!(s1.peak_bytes(), s2.peak_bytes());
+    }
+
+    /// The session replays on the shared worker pool: predictions match
+    /// the sequential engine bit for bit on a branchy (inceptionette)
+    /// graph, across pool sizes.
+    #[test]
+    fn parallel_session_matches_sequential_on_branchy_model() {
+        use crate::lne::platform::Platform;
+        use crate::models;
+
+        let g = models::inceptionette::inceptionette();
+        let w = models::random_weights(&g, 9);
+        let p = Arc::new(Prepared::new(g, w, Platform::pi4()).unwrap());
+        let a = crate::lne::quant_explore::f32_baseline(&p);
+        let mut rng = Rng::new(31);
+        let sample = Tensor::randn(&[3, 16, 16], 1.0, &mut rng).data;
+        let mut reference: Option<Vec<f32>> = None;
+        for threads in [1usize, 2, 4] {
+            let pool = ArenaPool::new();
+            let metrics = Arc::new(crate::serving::ServingMetrics::default());
+            let mut s = LneSession::new(
+                Arc::clone(&p),
+                a.clone(),
+                &[2],
+                &[],
+                &pool,
+                Arc::new(WorkerPool::new(threads)),
+            )
+            .unwrap()
+            .with_metrics(Arc::clone(&metrics));
+            let preds = s.run_batch(2, &[sample.as_slice()]).unwrap();
+            assert_eq!(preds.len(), 1);
+            if let Some(want) = reference.as_ref() {
+                for (got, want) in preds[0].scores.iter().zip(want.iter()) {
+                    assert_eq!(got, want, "threads={threads} diverged");
+                }
+            } else {
+                reference = Some(preds[0].scores.clone());
+            }
+            // replay metrics recorded the branchy plan's wavefront shape
+            let snap = metrics.snapshot();
+            assert_eq!(snap.get("replays").as_i64(), Some(1));
+            assert!(snap.get("wave_width_max").as_f64().unwrap() >= 2.0);
+        }
     }
 }

@@ -35,6 +35,18 @@ pub fn summarize(samples: &[f64]) -> Summary {
     }
 }
 
+/// Median by sort-and-index (upper median for even counts) — the
+/// latency-measurement convention shared by `qsdnn::measure`, the NAS
+/// latency decorator, the CLI `eval` command and the wavefront bench.
+/// Returns 0.0 for an empty set.
+pub fn median(mut v: Vec<f64>) -> f64 {
+    if v.is_empty() {
+        return 0.0;
+    }
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v[v.len() / 2]
+}
+
 /// Linear-interpolated percentile over a pre-sorted slice.
 pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
     if sorted.is_empty() {

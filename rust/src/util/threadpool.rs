@@ -73,6 +73,70 @@ impl ThreadPool {
         }
     }
 
+    /// Jobs currently queued or executing (a pool-occupancy gauge).
+    pub fn active(&self) -> usize {
+        let (lock, _) = &*self.in_flight;
+        *lock.lock().unwrap()
+    }
+
+    /// Run `f(i)` for i in 0..n across the pool and block until every job
+    /// has finished. Unlike [`ThreadPool::scatter`], the closure may
+    /// borrow from the caller's stack: the call is a barrier, so no job
+    /// outlives the borrowed data. A panicking job is caught on the
+    /// worker (keeping the pool alive) and re-raised here after the
+    /// barrier.
+    pub fn scope_run<F: Fn(usize) + Send + Sync>(&self, n: usize, f: F) {
+        if n == 0 {
+            return;
+        }
+        if self.size == 1 {
+            // one worker executes sequentially anyway; run inline and skip
+            // the queue round-trip
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+        struct Scope<'a> {
+            f: &'a (dyn Fn(usize) + Sync),
+            done: Mutex<usize>,
+            cv: Condvar,
+            panicked: std::sync::atomic::AtomicBool,
+        }
+        let scope = Scope {
+            f: &f,
+            done: Mutex::new(0),
+            cv: Condvar::new(),
+            panicked: std::sync::atomic::AtomicBool::new(false),
+        };
+        let sp = &scope as *const Scope as usize;
+        for i in 0..n {
+            self.execute(move || {
+                // SAFETY: `scope` outlives every job — scope_run does not
+                // return until all n jobs have signalled `done` below.
+                let scope = unsafe { &*(sp as *const Scope) };
+                let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    (scope.f)(i)
+                }));
+                if r.is_err() {
+                    scope.panicked.store(true, Ordering::SeqCst);
+                }
+                let mut d = scope.done.lock().unwrap();
+                *d += 1;
+                scope.cv.notify_all();
+            });
+        }
+        let mut d = scope.done.lock().unwrap();
+        while *d < n {
+            d = scope.cv.wait(d).unwrap();
+        }
+        drop(d);
+        assert!(
+            !scope.panicked.load(Ordering::SeqCst),
+            "scope_run job panicked"
+        );
+    }
+
     /// Run `f(i)` for i in 0..n across the pool and wait for completion.
     pub fn scatter<F: Fn(usize) + Send + Sync + 'static>(&self, n: usize, f: F) {
         let f = Arc::new(f);
@@ -152,6 +216,54 @@ mod tests {
             h2.lock().unwrap()[i] += 1;
         });
         assert!(hits.lock().unwrap().iter().all(|&h| h == 1));
+    }
+
+    #[test]
+    fn scope_run_borrows_from_the_stack() {
+        let pool = ThreadPool::new(4);
+        let data: Vec<u64> = (0..64).collect();
+        let out: Vec<AtomicU64> = (0..64).map(|_| AtomicU64::new(0)).collect();
+        pool.scope_run(64, |i| {
+            out[i].store(data[i] * 2, Ordering::SeqCst);
+        });
+        for (i, o) in out.iter().enumerate() {
+            assert_eq!(o.load(Ordering::SeqCst), 2 * i as u64);
+        }
+        // a second scope_run on the same pool works (workers survived)
+        let hits = AtomicU64::new(0);
+        pool.scope_run(10, |_| {
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn scope_run_single_worker_runs_inline() {
+        let pool = ThreadPool::new(1);
+        let sum = AtomicU64::new(0);
+        pool.scope_run(100, |i| {
+            sum.fetch_add(i as u64, Ordering::SeqCst);
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), 99 * 100 / 2);
+    }
+
+    #[test]
+    fn scope_run_reraises_job_panics_and_pool_survives() {
+        let pool = ThreadPool::new(2);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.scope_run(4, |i| {
+                if i == 2 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(r.is_err(), "panic must propagate to the caller");
+        // the pool still executes work afterwards
+        let ok = AtomicU64::new(0);
+        pool.scope_run(3, |_| {
+            ok.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(ok.load(Ordering::SeqCst), 3);
     }
 
     #[test]

@@ -175,7 +175,9 @@ fn lne_planned_serving_runs_without_artifacts() {
     router.register_lne("kws9", p, a, &[1, 4], &[], cfg.clone()).unwrap();
     router.register_lne("kws9_replica", p2, a2, &[1, 4], &[], cfg).unwrap();
     assert_eq!(router.models().len(), 2);
-    assert_eq!(router.arena_pool.arena_count(), 2, "2 profiles shared, not 2x2");
+    // identical profiles shared + the batch-1 profile borrowing the
+    // batch-4 arena (compatible-profile lending) -> one arena, not 2x2
+    assert_eq!(router.arena_pool.arena_count(), 1, "1 lent arena, not 2x2");
 
     // async submissions round-trip through the coalescing batcher
     let tickets: Vec<Ticket> = (0..5)
@@ -195,4 +197,60 @@ fn lne_planned_serving_runs_without_artifacts() {
     let m1 = router.infer(Some("kws9"), s.clone()).unwrap();
     let m2 = router.infer(Some("kws9_replica"), s).unwrap();
     assert_eq!(m1.class_id, m2.class_id);
+}
+
+/// Wavefront-parallel serving end to end: a branchy model (inceptionette)
+/// served through routers whose shared worker pools have 1 / 2 / 4
+/// threads must produce identical predictions — the planner's
+/// disjointness invariant makes parallel replay bit-exact — and the
+/// metrics must report the plan's wavefront shape.
+#[test]
+fn wavefront_parallel_serving_is_bit_exact_across_thread_counts() {
+    use bonseyes::lne::engine::Prepared;
+    use bonseyes::lne::platform::Platform;
+    use bonseyes::lne::quant_explore::f32_baseline;
+    use bonseyes::models;
+    use bonseyes::serving::{BatcherConfig, ModelRouter};
+    use bonseyes::tensor::Tensor;
+    use bonseyes::util::rng::Rng;
+
+    let mut rng = Rng::new(77);
+    let samples: Vec<Vec<f32>> = (0..3)
+        .map(|_| Tensor::randn(&[3, 16, 16], 1.0, &mut rng).data)
+        .collect();
+    let mut reference: Option<Vec<Vec<f32>>> = None;
+    for threads in [1usize, 2, 4] {
+        let g = models::inceptionette::inceptionette();
+        let w = models::random_weights(&g, 5);
+        let p = std::sync::Arc::new(Prepared::new(g, w, Platform::pi4()).unwrap());
+        let a = f32_baseline(&p);
+        let mut router = ModelRouter::with_threads(threads);
+        assert_eq!(router.worker_pool.threads(), threads);
+        router
+            .register_lne(
+                "incep",
+                p,
+                a,
+                &[1, 4],
+                &[],
+                BatcherConfig { max_wait_ms: 1.0, ..Default::default() },
+            )
+            .unwrap();
+        let scores: Vec<Vec<f32>> = samples
+            .iter()
+            .map(|s| router.infer(None, s.clone()).unwrap().scores)
+            .collect();
+        if let Some(want) = reference.as_ref() {
+            for (got_row, want_row) in scores.iter().zip(want.iter()) {
+                for (got, want) in got_row.iter().zip(want_row.iter()) {
+                    assert_eq!(got, want, "threads={threads} diverged");
+                }
+            }
+        } else {
+            reference = Some(scores);
+        }
+        let snap = router.metrics.snapshot();
+        assert_eq!(snap.get("replays").as_i64(), Some(3));
+        assert!(snap.get("wave_width_max").as_f64().unwrap() >= 4.0, "inception towers");
+    }
 }
