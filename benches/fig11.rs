@@ -20,7 +20,7 @@ fn main() {
         explore_episodes: episodes / 2,
         ..Default::default()
     };
-    let out = search(&p, &x, &cfg);
+    let out = search(&p, &x, &cfg).expect("plannable model");
     // render the curve as per-bucket means
     let bucket = (episodes / 20).max(1);
     let max = out.episode_ms.iter().cloned().fold(f64::MIN, f64::max);

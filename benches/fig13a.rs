@@ -29,15 +29,15 @@ fn main() {
         };
         let caffe = deploy(Framework::Caffe, &g, &w, platform.clone(), &x, &opts).unwrap();
         let lpdnn = deploy(Framework::Lpdnn, &g, &w, platform.clone(), &x, &opts).unwrap();
-        let caffe_ms = caffe.latency_ms(&x, reps);
-        let lpdnn_ms = lpdnn.latency_ms(&x, reps);
+        let caffe_ms = caffe.latency_ms(&x, reps).expect("plannable assignment");
+        let lpdnn_ms = lpdnn.latency_ms(&x, reps).expect("plannable assignment");
         // per-library uniforms measured on the optimized graph
         let space = DesignSpace::build(&lpdnn.prepared.graph, &platform);
         let mut items = vec![("caffe".to_string(), caffe_ms)];
         let mut best_uniform = f64::MAX;
         for lib in [ConvImpl::GemmRef, ConvImpl::GemmBlocked, ConvImpl::Winograd, ConvImpl::Direct] {
             let a = space.uniform(&lpdnn.prepared.graph, lib);
-            let t = measure(&lpdnn.prepared, &x, &a, reps);
+            let t = measure(&lpdnn.prepared, &x, &a, reps).expect("plannable assignment");
             best_uniform = best_uniform.min(t);
             items.push((format!("lpdnn-{}", lib.name()), t));
         }

@@ -35,10 +35,7 @@ fn main() {
         }
         samples
     };
-    let median = |mut v: Vec<f64>| -> f64 {
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        v[v.len() / 2]
-    };
+    let median = bonseyes::util::stats::median;
 
     let mk_uniform = |impl_: ConvImpl| {
         let mut a = Assignment::default_for(&p.graph);
@@ -83,10 +80,19 @@ fn main() {
     println!("{}", report::barchart(
         "int8 speedup over GEMM f32 per layer (>1 = faster)", &items_speedup, "x"));
 
-    // accuracy-aware mixed selection (the §6.2.5 explorer)
+    // accuracy-aware mixed selection (the §6.2.5 explorer): candidates
+    // pass per-layer, then the joint re-run rolls back compounding layers
     let e = explore(&p, &x);
-    let selected = e.quantized_layers(0.05);
-    println!("quantization explorer (5% deviation budget) selects: {selected:?}");
+    let candidates = e.quantized_layers(0.05);
+    let a = e.select(&p, 0.05);
+    let selected: Vec<&str> = e
+        .reports
+        .iter()
+        .filter(|r| a.choices[r.layer] == Some(ConvImpl::Int8Gemm))
+        .map(|r| r.name.as_str())
+        .collect();
+    println!("quantization explorer (5% deviation budget) candidates: {candidates:?}");
+    println!("  joint-budget selection (after rollback):             {selected:?}");
     println!("paper shape: int8 usually-but-not-always beats f32 GEMM; Winograd f32");
     println!("shadows both on the 3x3 compute-heavy layers.");
 }

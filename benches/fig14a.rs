@@ -24,8 +24,8 @@ fn main() {
         };
         let pt = deploy(Framework::PyTorch, &g, &w, platform.clone(), &x, &opts).unwrap();
         let lp = deploy(Framework::Lpdnn, &g, &w, platform.clone(), &x, &opts).unwrap();
-        let pt_ms = pt.latency_ms(&x, reps.min(2));
-        let lp_ms = lp.latency_ms(&x, reps);
+        let pt_ms = pt.latency_ms(&x, reps.min(2)).expect("plannable assignment");
+        let lp_ms = lp.latency_ms(&x, reps).expect("plannable assignment");
         eprintln!("{net}: pytorch {pt_ms:.0} ms vs lpdnn {lp_ms:.0} ms ({:.1}x)", pt_ms / lp_ms);
         items.push((format!("{net}/pytorch"), pt_ms));
         items.push((format!("{net}/lpdnn"), lp_ms));

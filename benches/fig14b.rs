@@ -28,16 +28,17 @@ fn main() {
         };
         // PyTorch-sim: f32 direct, and naive all-F16 (out-of-the-box FP16)
         let pt = deploy(Framework::PyTorch, &g, &w, platform.clone(), &x, &opts).unwrap();
-        let pt_f32 = pt.latency_ms(&x, reps.min(2));
+        let pt_f32 = pt.latency_ms(&x, reps.min(2)).expect("plannable assignment");
         let space = DesignSpace::build(&pt.prepared.graph, &platform);
         let f16_uniform = space.uniform(&pt.prepared.graph, ConvImpl::F16Gemm);
-        let pt_f16 = measure(&pt.prepared, &x, &f16_uniform, reps.min(2));
+        let pt_f16 = measure(&pt.prepared, &x, &f16_uniform, reps.min(2)).expect("plannable assignment");
         // LPDNN: f32 blocked baseline and QS-DNN mixed precision
         let lp = deploy(Framework::Lpdnn, &g, &w, platform.clone(), &x, &opts).unwrap();
         let lp_space = DesignSpace::build(&lp.prepared.graph, &platform);
         let lp_f32 =
-            measure(&lp.prepared, &x, &lp_space.uniform(&lp.prepared.graph, ConvImpl::GemmBlocked), reps);
-        let lp_mixed = lp.latency_ms(&x, reps);
+            measure(&lp.prepared, &x, &lp_space.uniform(&lp.prepared.graph, ConvImpl::GemmBlocked), reps)
+                .expect("plannable assignment");
+        let lp_mixed = lp.latency_ms(&x, reps).expect("plannable assignment");
         eprintln!(
             "{net}: pt f32 {pt_f32:.0} / pt f16 {pt_f16:.0} / lpdnn f32 {lp_f32:.0} / mixed {lp_mixed:.0} ms"
         );

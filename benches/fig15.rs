@@ -32,18 +32,19 @@ fn main() {
             };
             let caffe_ms = deploy(Framework::Caffe, &g, &w, platform.clone(), &x, &opts)
                 .unwrap()
-                .latency_ms(&x, reps);
+                .latency_ms(&x, reps)
+                .expect("plannable assignment");
             let mut items = vec![("caffe (1.00x)".to_string(), 1.0f64)];
             let mut best_baseline = 0.0f64;
             for fw in BASELINES.iter().skip(1) {
                 // skip Caffe itself
                 let d = deploy(*fw, &g, &w, platform.clone(), &x, &opts).unwrap();
-                let speedup = caffe_ms / d.latency_ms(&x, reps);
+                let speedup = caffe_ms / d.latency_ms(&x, reps).expect("plannable assignment");
                 best_baseline = best_baseline.max(speedup);
                 items.push((fw.name().to_string(), speedup));
             }
             let lp = deploy(Framework::Lpdnn, &g, &w, platform.clone(), &x, &opts).unwrap();
-            let lp_speedup = caffe_ms / lp.latency_ms(&x, reps);
+            let lp_speedup = caffe_ms / lp.latency_ms(&x, reps).expect("plannable assignment");
             items.push(("lpdnn".to_string(), lp_speedup));
             cells += 1;
             if lp_speedup >= best_baseline * 0.97 {

@@ -1,0 +1,77 @@
+//! Int8 activation-lane bench: an all-int8 conv chain executed three
+//! ways — uniform f32 (blocked GEMM), the legacy int8 path that
+//! round-trips every activation through f32 (dequantize + requantize the
+//! whole patch matrix at each edge), and the i8-resident path that keeps
+//! activations quantized between consecutive int8 layers with boundary
+//! conversions only (DESIGN.md §7). The delta between the last two is the
+//! conversion cost the resident lanes remove.
+
+#[path = "common.rs"]
+mod common;
+
+use bonseyes::lne::engine::Prepared;
+use bonseyes::lne::graph::{Graph, LayerKind, Padding};
+use bonseyes::lne::planner::{Arena, ExecPlan, PlanOptions};
+use bonseyes::lne::platform::Platform;
+use bonseyes::lne::plugin::{ConvImpl, DesignSpace};
+use bonseyes::models;
+use bonseyes::util::stats::median;
+
+fn chain(name: &str, depth: usize, c: usize, hw: usize) -> Graph {
+    let mut g = Graph::new(name, (3, hw, hw));
+    for i in 0..depth {
+        g.push(
+            &format!("conv{}", i + 1),
+            LayerKind::Conv { k: (3, 3), stride: (1, 1), pad: Padding::Same, relu_fused: true },
+            c,
+        );
+    }
+    g
+}
+
+fn bench_plan(plan: &ExecPlan, x: &bonseyes::tensor::Tensor, reps: usize) -> f64 {
+    let mut arena = Arena::for_plan(plan);
+    let _ = plan.replay(x, &mut arena); // warm-up
+    median((0..reps).map(|_| plan.replay(x, &mut arena).total_ms).collect())
+}
+
+fn main() {
+    common::banner(
+        "int8_chain",
+        "f32 vs int8-roundtrip vs int8-resident activation lanes",
+    );
+    let reps = common::reps().max(3);
+    println!(
+        "{:<18} {:>12} {:>15} {:>15} {:>9}",
+        "chain", "f32 ms", "i8-roundtrip", "i8-resident", "vs-rt"
+    );
+    for (depth, c, hw) in [(4usize, 16usize, 32usize), (6, 32, 24)] {
+        let name = format!("{depth}x conv{c}@{hw}");
+        let g = chain(&name, depth, c, hw);
+        let w = models::random_weights(&g, 42);
+        let p = Prepared::new(g.clone(), w, Platform::pi4()).expect("prepared");
+        let space = DesignSpace::build(&g, &p.platform);
+        let x = common::image_input(&g, 7);
+
+        let f32_plan = p
+            .plan(&space.uniform(&g, ConvImpl::GemmBlocked), 1)
+            .expect("f32 plan");
+        let a_i8 = space.uniform(&g, ConvImpl::Int8Gemm);
+        let rt_plan = p
+            .plan_with(&a_i8, 1, PlanOptions { int8_resident: false })
+            .expect("roundtrip plan");
+        let res_plan = p.plan(&a_i8, 1).expect("resident plan");
+        assert_eq!(res_plan.i8_resident_steps(), depth);
+        assert_eq!(res_plan.lane_conversion_steps(), 2);
+
+        let f = bench_plan(&f32_plan, &x, reps);
+        let rt = bench_plan(&rt_plan, &x, reps);
+        let res = bench_plan(&res_plan, &x, reps);
+        println!(
+            "{name:<18} {f:>9.2} ms {rt:>12.2} ms {res:>12.2} ms {:>8.2}x",
+            rt / res.max(1e-9)
+        );
+    }
+    println!("\n(vs-rt: i8-resident speedup over the f32 round-trip int8 path;");
+    println!(" interior edges skip dequantize + patch-matrix requantize entirely)");
+}

@@ -28,7 +28,7 @@ fn main() -> anyhow::Result<()> {
     for fw in BASELINES.iter().copied().chain([Framework::Lpdnn]) {
         let d = deploy(fw, &g, &w, platform.clone(), &x, &opts)
             .map_err(|e| anyhow::anyhow!(e))?;
-        let ms = d.latency_ms(&x, 5);
+        let ms = d.latency_ms(&x, 5).expect("plannable assignment");
         println!("  {:10} {ms:9.2} ms   [{}]", fw.name(),
                  if fw == Framework::Lpdnn { "QS-DNN searched" } else { "fixed policy" });
         items.push((fw.name().to_string(), ms));

@@ -5,7 +5,7 @@
 //! `run_legacy`, the parity reference for the planner tests.
 
 use super::graph::{Graph, Layer, LayerKind, Weights};
-use super::planner::{Arena, ExecPlan};
+use super::planner::{Arena, ExecPlan, PlanOptions};
 use super::platform::Platform;
 use super::plugin::{applicable, Assignment, ConvImpl};
 use super::primitives::depthwise::conv_depthwise;
@@ -113,6 +113,18 @@ impl Prepared {
     /// measurement, NAS evaluation, serving) compile once and replay.
     pub fn plan(&self, assignment: &Assignment, batch: usize) -> Result<ExecPlan, String> {
         ExecPlan::compile(self, assignment, batch)
+    }
+
+    /// [`Prepared::plan`] with explicit [`PlanOptions`] — e.g. forcing the
+    /// legacy f32 round-trip for int8 chains (`int8_resident: false`), the
+    /// baseline `benches/int8_chain.rs` compares against.
+    pub fn plan_with(
+        &self,
+        assignment: &Assignment,
+        batch: usize,
+        opts: PlanOptions,
+    ) -> Result<ExecPlan, String> {
+        ExecPlan::compile_with(self, assignment, batch, opts)
     }
 
     /// Execute the graph under `assignment`; input x: [N,C,H,W].

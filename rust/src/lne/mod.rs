@@ -20,5 +20,5 @@ pub mod quant_explore;
 
 pub use engine::{Prepared, RunResult};
 pub use graph::{Graph, Layer, LayerKind, Padding, PoolKind, Weights};
-pub use planner::{Arena, ArenaPool, ArenaProfile, ExecPlan, SharedArena, Step};
+pub use planner::{Arena, ArenaPool, ArenaProfile, ExecPlan, Lane, PlanOptions, SharedArena, Step};
 pub use plugin::{applicable, Assignment, ConvImpl, DesignSpace};

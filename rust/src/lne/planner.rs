@@ -34,7 +34,7 @@ use super::primitives::direct::conv_direct_into;
 use super::primitives::f16conv::conv_f16_into;
 use super::primitives::gemm::Blocking;
 use super::primitives::im2col::{conv_im2col_into, fc_into, GemmImpl};
-use super::primitives::int8::conv_int8_into;
+use super::primitives::int8::{conv_int8_into, conv_int8_q_into};
 use super::primitives::pool::{global_pool_into, lrn_into, pool_into, softmax_into};
 use super::primitives::winograd::{self, conv_winograd_into};
 use crate::tensor::{HTensor, QTensor, Tensor, TensorView, TensorViewMut};
@@ -45,13 +45,69 @@ use std::time::Instant;
 
 const BN_EPS: f32 = 1e-5;
 
-/// A planned buffer: an offset span in the arena's f32 lane plus the
-/// logical NCHW shape the step reads it under.
+/// Which arena lane a planned activation lives in. Activations default to
+/// the f32 lane; between consecutive int8 layers the planner keeps them on
+/// the i8 lane (DESIGN.md §7), where each buffer also owns one scale slot
+/// *per batch image* in the arena's scale lane (`scale` is the base index;
+/// image `ni` reads `scales[scale + ni]`, real = q * scale), written by
+/// the producer and read by consumers one wavefront later. Per-image
+/// scales keep a sample's quantization independent of whatever the
+/// batcher co-batched it with.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Lane {
+    F32,
+    I8 { scale: usize },
+}
+
+/// A planned buffer: an offset span in one arena lane plus the logical
+/// NCHW shape the step reads it under.
 #[derive(Debug, Clone)]
 pub struct Slot {
     pub off: usize,
     pub len: usize,
     pub shape: Vec<usize>,
+    pub lane: Lane,
+}
+
+impl Slot {
+    pub fn f32(off: usize, len: usize, shape: Vec<usize>) -> Slot {
+        Slot { off, len, shape, lane: Lane::F32 }
+    }
+
+    pub fn i8(off: usize, len: usize, shape: Vec<usize>, scale: usize) -> Slot {
+        Slot { off, len, shape, lane: Lane::I8 { scale } }
+    }
+
+    /// Whether this buffer lives on the i8 lane.
+    pub fn is_q(&self) -> bool {
+        matches!(self.lane, Lane::I8 { .. })
+    }
+
+    fn scale_idx(&self) -> usize {
+        match self.lane {
+            Lane::I8 { scale } => scale,
+            Lane::F32 => unreachable!("f32 slot has no scale"),
+        }
+    }
+
+    fn span(&self) -> Span {
+        Span { off: self.off, len: self.len }
+    }
+}
+
+/// Planner knobs. `int8_resident` (the default) keeps activations on the
+/// arena's i8 lane across int8→int8 edges; switching it off forces every
+/// int8 conv through the legacy f32 round-trip — the comparison baseline
+/// `benches/int8_chain.rs` measures and the parity tests pin against.
+#[derive(Debug, Clone, Copy)]
+pub struct PlanOptions {
+    pub int8_resident: bool,
+}
+
+impl Default for PlanOptions {
+    fn default() -> PlanOptions {
+        PlanOptions { int8_resident: true }
+    }
 }
 
 /// A raw scratch span (offset, length in lane elements).
@@ -112,6 +168,28 @@ pub enum Op {
         wf: Span,
         cols: Span,
     },
+    /// i8-resident int8 conv (int8→int8 lanes, DESIGN.md §7): input is an
+    /// i8 slot (quantized activation + per-image scale slots), each
+    /// image's output requantizes to its own scale in the output i8 slot;
+    /// i32 accumulation identical to `ConvInt8`. No f32 round-trip at
+    /// interior edges.
+    ConvInt8Q {
+        qw: QTensor,
+        bias: Vec<f32>,
+        stride: (usize, usize),
+        pad: (usize, usize),
+        relu: bool,
+        /// i8 patch matrix and i32 accumulators, reused across images.
+        cols_q: Span,
+        acc: Span,
+    },
+    /// Boundary step into the i8 lane: quantize an f32 activation into an
+    /// i8 slot (one scale per image). Emitted once per *value*; every
+    /// in-region consumer of that value reads the same copy.
+    Quantize,
+    /// Boundary step out of the i8 lane: dequantize an i8 activation back
+    /// to f32 for its float consumers.
+    Dequantize,
     ConvDw {
         w: Tensor,
         bias: Vec<f32>,
@@ -145,6 +223,7 @@ impl Op {
             Op::ConvInt8 { cols_f, cols_q, acc, .. } => {
                 ([Some(*cols_f), None], Some(*cols_q), Some(*acc))
             }
+            Op::ConvInt8Q { cols_q, acc, .. } => ([None, None], Some(*cols_q), Some(*acc)),
             Op::ConvF16 { wf, cols, .. } => ([Some(*wf), Some(*cols)], None, None),
             _ => ([None, None], None, None),
         }
@@ -183,19 +262,25 @@ pub struct ExecPlan {
     pub waves: Vec<(usize, usize)>,
     /// Slot of the final value.
     pub output: Slot,
-    /// Planned lane high-water marks (the arena sizes).
+    /// Planned lane high-water marks (the arena sizes). `i8_bytes` covers
+    /// both int8 staging scratch and i8-resident activations;
+    /// `scale_slots` is the number of f32 scale slots those activations
+    /// publish through.
     pub f32_words: usize,
     pub i8_bytes: usize,
     pub i32_words: usize,
+    pub scale_slots: usize,
 }
 
 /// The preallocated execution arena: one buffer per lane. All
-/// activations and scratch of a replay live here.
+/// activations and scratch of a replay live here, including the
+/// per-tensor scales of i8-resident activations (`scales`).
 #[derive(Debug, Default)]
 pub struct Arena {
     f: Vec<f32>,
     q: Vec<i8>,
     acc: Vec<i32>,
+    scales: Vec<f32>,
 }
 
 impl Arena {
@@ -215,6 +300,9 @@ impl Arena {
         if self.acc.len() < plan.i32_words {
             self.acc.resize(plan.i32_words, 0);
         }
+        if self.scales.len() < plan.scale_slots {
+            self.scales.resize(plan.scale_slots, 0.0);
+        }
     }
 
     pub fn for_plan(plan: &ExecPlan) -> Arena {
@@ -225,7 +313,7 @@ impl Arena {
 
     /// Currently allocated bytes across lanes.
     pub fn capacity_bytes(&self) -> usize {
-        self.f.len() * 4 + self.q.len() + self.acc.len() * 4
+        self.f.len() * 4 + self.q.len() + self.acc.len() * 4 + self.scales.len() * 4
     }
 }
 
@@ -239,8 +327,12 @@ pub type SharedArena = Arc<Mutex<Arena>>;
 pub struct ArenaProfile {
     pub batch: usize,
     pub f32_words: usize,
+    /// High-water mark of the i8 lane — int8 staging scratch *and*
+    /// i8-resident activations.
     pub i8_bytes: usize,
     pub i32_words: usize,
+    /// Scale slots backing the i8-resident activations.
+    pub scale_slots: usize,
 }
 
 impl ArenaProfile {
@@ -250,6 +342,7 @@ impl ArenaProfile {
         self.f32_words >= other.f32_words
             && self.i8_bytes >= other.i8_bytes
             && self.i32_words >= other.i32_words
+            && self.scale_slots >= other.scale_slots
     }
 }
 
@@ -420,6 +513,16 @@ impl ExecPlan {
         assignment: &Assignment,
         batch: usize,
     ) -> Result<ExecPlan, String> {
+        ExecPlan::compile_with(p, assignment, batch, PlanOptions::default())
+    }
+
+    /// [`ExecPlan::compile`] with explicit [`PlanOptions`].
+    pub fn compile_with(
+        p: &Prepared,
+        assignment: &Assignment,
+        batch: usize,
+        opts: PlanOptions,
+    ) -> Result<ExecPlan, String> {
         let g = &p.graph;
         assert_eq!(assignment.choices.len(), g.layers.len());
         assert!(batch > 0, "batch must be positive");
@@ -440,32 +543,99 @@ impl ExecPlan {
         }
         remaining[nvals - 1] += 1;
 
-        // wavefront grouping: value 0 is ready at wave 0; a layer runs in
-        // the earliest wave where all of its inputs exist, i.e. one wave
-        // after its latest producer. Layers of one wave share no edge.
-        let mut vwave = vec![0usize; nvals];
-        let mut lwave = vec![0usize; g.layers.len()];
-        for (i, layer) in g.layers.iter().enumerate() {
-            let w = layer.inputs.iter().map(|&v| vwave[v]).max().unwrap_or(0);
-            lwave[i] = w;
-            vwave[i + 1] = w + 1;
+        // int8 residency (DESIGN.md §7): a value stays on the i8 lane when
+        // its producer and *every* consumer run Int8Gemm — then no f32
+        // dequant/requant exists on those edges. The graph input and the
+        // final output are always f32.
+        let int8_conv = |i: usize| {
+            matches!(g.layers[i].kind, LayerKind::Conv { .. })
+                && assignment.choices[i] == Some(ConvImpl::Int8Gemm)
+        };
+        let mut is_q = vec![false; nvals];
+        if opts.int8_resident {
+            for i in 0..g.layers.len() {
+                let v = i + 1;
+                if !int8_conv(i) || v == nvals - 1 {
+                    continue;
+                }
+                let mut consumers = g
+                    .layers
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, l)| l.inputs.contains(&v))
+                    .peekable();
+                is_q[v] =
+                    consumers.peek().is_some() && consumers.all(|(j, _)| int8_conv(j));
+            }
         }
-        let nwaves = lwave.iter().map(|&w| w + 1).max().unwrap_or(0);
-        let mut wave_layers: Vec<Vec<usize>> = vec![Vec::new(); nwaves];
-        for (i, &w) in lwave.iter().enumerate() {
-            wave_layers[w].push(i);
+        // an int8 conv joins the i8 region when either side of it is
+        // i8-resident; f32 boundaries then get explicit quantize (before)
+        // / dequantize (after) steps. Isolated int8 convs keep the legacy
+        // f32 round-trip (`ConvInt8`), bit-identical to `run_legacy`.
+        let in_region =
+            |i: usize| int8_conv(i) && (is_q[g.layers[i].inputs[0]] || is_q[i + 1]);
+
+        // wavefront grouping over *items* — graph layers plus the boundary
+        // quantize/dequantize steps the i8 lanes need. Value 0 is ready at
+        // wave 0; an item runs in the earliest wave where all its inputs
+        // exist (a boundary step's output counts as an input of its
+        // layer). Items of one wave share no edge.
+        #[derive(Clone, Copy, PartialEq)]
+        enum ItemKind {
+            Quant,
+            Layer,
+            Dequant,
+        }
+        // one boundary quantize per *value*: a shared f32 value feeding
+        // several in-region convs is quantized once and the copy read by
+        // all of them (they all consume it in the same wavefront, since a
+        // conv's readiness is exactly its single input's readiness + 1)
+        let mut quant_users = vec![0usize; nvals];
+        for (i, layer) in g.layers.iter().enumerate() {
+            if in_region(i) && !is_q[layer.inputs[0]] {
+                quant_users[layer.inputs[0]] += 1;
+            }
+        }
+        let mut quant_emitted = vec![false; nvals];
+        let mut vwave = vec![0usize; nvals];
+        let mut items: Vec<(usize, ItemKind, usize)> = Vec::new();
+        for (i, layer) in g.layers.iter().enumerate() {
+            let mut w = layer.inputs.iter().map(|&v| vwave[v]).max().unwrap_or(0);
+            let region = in_region(i);
+            if region && !is_q[layer.inputs[0]] {
+                if !quant_emitted[layer.inputs[0]] {
+                    items.push((w, ItemKind::Quant, i));
+                    quant_emitted[layer.inputs[0]] = true;
+                }
+                w += 1;
+            }
+            items.push((w, ItemKind::Layer, i));
+            w += 1;
+            if region && !is_q[i + 1] {
+                items.push((w, ItemKind::Dequant, i));
+                w += 1;
+            }
+            vwave[i + 1] = w;
+        }
+        let nwaves = items.iter().map(|&(w, _, _)| w + 1).max().unwrap_or(0);
+        let mut wave_items: Vec<Vec<(ItemKind, usize)>> = vec![Vec::new(); nwaves];
+        for (w, k, i) in items {
+            wave_items[w].push((k, i));
         }
 
         let mut falloc = Region::default();
         let mut qalloc = Region::default();
         let mut ialloc = Region::default();
+        let mut nscales = 0usize;
         let mut slots: Vec<Option<Slot>> = vec![None; nvals];
-        let input = Slot {
-            off: falloc.alloc(vlen[0]),
-            len: vlen[0],
-            shape: vshape[0].clone(),
-        };
+        let input = Slot::f32(falloc.alloc(vlen[0]), vlen[0], vshape[0].clone());
         slots[0] = Some(input.clone());
+        // aux i8 slots that bridge one wave: the per-value quantized copy
+        // of an f32 value (written by Quant, read by every in-region
+        // consumer — the count tracks when it can be freed) and a conv's
+        // pre-dequantize output (written by the conv, consumed by Dequant)
+        let mut qcopies: Vec<Option<(Slot, usize)>> = vec![None; nvals];
+        let mut aux_qout: Vec<Option<Slot>> = vec![None; g.layers.len()];
 
         fn wblobs<'a>(p: &'a Prepared, name: &str) -> Result<&'a [Tensor], String> {
             p.weights
@@ -474,20 +644,143 @@ impl ExecPlan {
                 .ok_or_else(|| format!("missing weights for {name}"))
         }
 
-        // Plan wavefront by wavefront. Releases (scratch, dead inputs) are
-        // deferred to the *end of each wave*: a span freed mid-wave could
-        // be handed to a co-scheduled step, and two steps of one wavefront
-        // must never share memory. `remaining` is likewise decremented only
-        // at wave end, so the in-place sole-consumer test below can never
-        // be satisfied by a value another step of the same wave still
-        // reads. Steps are emitted in wavefront order — a valid topological
-        // order that sequential replay follows unchanged.
+        // Plan wavefront by wavefront. Releases (scratch, consumed aux
+        // spans, dead inputs) are deferred to the *end of each wave*: a
+        // span freed mid-wave could be handed to a co-scheduled step, and
+        // two steps of one wavefront must never share memory. `remaining`
+        // is likewise decremented only at wave end, so the in-place
+        // sole-consumer test below can never be satisfied by a value
+        // another step of the same wave still reads. Steps are emitted in
+        // wavefront order — a valid topological order that sequential
+        // replay follows unchanged.
         let mut steps: Vec<Step> = Vec::with_capacity(g.layers.len());
         let mut waves: Vec<(usize, usize)> = Vec::with_capacity(nwaves);
-        for (wave_idx, layers_in_wave) in wave_layers.iter().enumerate() {
+        for (wave_idx, witems) in wave_items.iter().enumerate() {
             let wave_start = steps.len();
-            for &i in layers_in_wave {
+            // graph-value reads retired at this wave's end (bool: keep the
+            // storage because an in-place step aliased it), plus consumed
+            // aux i8 spans returned to the free list then
+            let mut reads: Vec<(usize, bool)> = Vec::new();
+            let mut aux_frees: Vec<Span> = Vec::new();
+            for &(kind, i) in witems {
             let layer = &g.layers[i];
+            match kind {
+                ItemKind::Quant => {
+                    let v = layer.inputs[0];
+                    let src = slots[v].clone().expect("input value alive");
+                    let out =
+                        Slot::i8(qalloc.alloc(vlen[v]), vlen[v], vshape[v].clone(), nscales);
+                    nscales += batch; // one scale per image
+                    // this step stands in for every in-region consumer's
+                    // read of v, so retire all of their edges at wave end
+                    for _ in 0..quant_users[v] {
+                        reads.push((v, false));
+                    }
+                    steps.push(Step {
+                        layer: i,
+                        name: format!("{}:quant", layer.name),
+                        ins: vec![src],
+                        out: out.clone(),
+                        in_place: false,
+                        wave: wave_idx,
+                        op: Op::Quantize,
+                    });
+                    qcopies[v] = Some((out, quant_users[v]));
+                    continue;
+                }
+                ItemKind::Dequant => {
+                    let src = aux_qout[i].take().expect("quantized conv output alive");
+                    aux_frees.push(src.span());
+                    let out =
+                        Slot::f32(falloc.alloc(vlen[i + 1]), vlen[i + 1], vshape[i + 1].clone());
+                    steps.push(Step {
+                        layer: i,
+                        name: format!("{}:dequant", layer.name),
+                        ins: vec![src],
+                        out: out.clone(),
+                        in_place: false,
+                        wave: wave_idx,
+                        op: Op::Dequantize,
+                    });
+                    slots[i + 1] = Some(out);
+                    continue;
+                }
+                ItemKind::Layer => {}
+            }
+            if in_region(i) {
+                // i8-resident conv: i8 in (a resident value, or the aux
+                // quantized copy the Quant step staged one wave earlier),
+                // i8 out (a resident value, or the aux buffer the Dequant
+                // step drains one wave later). Interior int8→int8 edges
+                // therefore carry no conversion step at all.
+                let (k, stride, pad, relu) = match &layer.kind {
+                    LayerKind::Conv { k, stride, pad, relu_fused } => {
+                        (*k, *stride, *pad, *relu_fused)
+                    }
+                    _ => unreachable!("i8 region holds convs only"),
+                };
+                let (c_in, h_in, w_in) = shapes[layer.inputs[0]];
+                let (c_out, out_h, out_w) = shapes[i + 1];
+                let qw = p
+                    .quant
+                    .get(&i)
+                    .ok_or_else(|| format!("{}: int8 weights not prepared", layer.name))?;
+                let w = wblobs(p, &layer.name)?;
+                let bias: Vec<f32> =
+                    if w.len() > 1 { w[1].data.clone() } else { Vec::new() };
+                let kdim = c_in * k.0 * k.1;
+                let out_plane = out_h * out_w;
+                let src = if is_q[layer.inputs[0]] {
+                    reads.push((layer.inputs[0], false));
+                    slots[layer.inputs[0]].clone().expect("input value alive")
+                } else {
+                    // the shared per-value quantized copy; the last
+                    // consumer returns it to the free list (all consumers
+                    // sit in this same wave)
+                    let v = layer.inputs[0];
+                    let (slot, users) = qcopies[v].take().expect("quantize step emitted");
+                    let s = slot.clone();
+                    if users <= 1 {
+                        aux_frees.push(slot.span());
+                    } else {
+                        qcopies[v] = Some((slot, users - 1));
+                    }
+                    s
+                };
+                let out =
+                    Slot::i8(qalloc.alloc(vlen[i + 1]), vlen[i + 1], vshape[i + 1].clone(), nscales);
+                nscales += batch; // one scale per image
+                let op = Op::ConvInt8Q {
+                    qw: qw.clone(),
+                    bias,
+                    stride,
+                    pad: resolve_pad(h_in, w_in, k, stride, pad),
+                    relu,
+                    cols_q: Span {
+                        off: qalloc.alloc(kdim * out_plane),
+                        len: kdim * out_plane,
+                    },
+                    acc: Span {
+                        off: ialloc.alloc(c_out * out_plane),
+                        len: c_out * out_plane,
+                    },
+                };
+                steps.push(Step {
+                    layer: i,
+                    name: layer.name.clone(),
+                    ins: vec![src],
+                    out: out.clone(),
+                    in_place: false,
+                    wave: wave_idx,
+                    op,
+                });
+                if is_q[i + 1] {
+                    slots[i + 1] = Some(out);
+                } else {
+                    aux_qout[i] = Some(out);
+                }
+                continue;
+            }
             let choice = assignment.choices[i];
             let (c_in, h_in, w_in) = shapes[layer.inputs[0]];
             let (c_out, out_h, out_w) = shapes[i + 1];
@@ -664,15 +957,15 @@ impl ExecPlan {
             let out = if in_place {
                 let src = slots[layer.inputs[0]].as_ref().expect("input value alive");
                 debug_assert_eq!(src.len, vlen[i + 1]);
-                Slot { off: src.off, len: src.len, shape: vshape[i + 1].clone() }
+                debug_assert!(!src.is_q(), "in-place aliasing is f32-lane only");
+                Slot::f32(src.off, src.len, vshape[i + 1].clone())
             } else {
-                Slot {
-                    off: falloc.alloc(vlen[i + 1]),
-                    len: vlen[i + 1],
-                    shape: vshape[i + 1].clone(),
-                }
+                Slot::f32(falloc.alloc(vlen[i + 1]), vlen[i + 1], vshape[i + 1].clone())
             };
 
+            for &v in &layer.inputs {
+                reads.push((v, in_place && v == layer.inputs[0]));
+            }
             let ins: Vec<Slot> = layer
                 .inputs
                 .iter()
@@ -690,9 +983,10 @@ impl ExecPlan {
             slots[i + 1] = Some(out);
             }
 
-            // end of wave: only now do scratch spans and exhausted inputs
-            // return to the free lists (a span read anywhere in this wave
-            // may be reused from the next wave on, never within it)
+            // end of wave: only now do scratch spans, consumed aux spans
+            // and exhausted inputs return to the free lists (a span read
+            // anywhere in this wave may be reused from the next wave on,
+            // never within it)
             for si in wave_start..steps.len() {
                 let (fs, qs, is) = steps[si].op.scratch();
                 for s in fs.into_iter().flatten() {
@@ -704,17 +998,22 @@ impl ExecPlan {
                 if let Some(s) = is {
                     ialloc.free(s.off, s.len);
                 }
-                // release inputs whose consumers are exhausted; an aliased
-                // input's storage lives on as its step's output
-                let i = steps[si].layer;
-                let in_place = steps[si].in_place;
-                let layer = &g.layers[i];
-                for &v in &layer.inputs {
-                    remaining[v] -= 1;
-                    if remaining[v] == 0 {
-                        if let Some(s) = slots[v].take() {
-                            if !(in_place && v == layer.inputs[0]) {
-                                falloc.free(s.off, s.len);
+            }
+            for s in aux_frees {
+                qalloc.free(s.off, s.len);
+            }
+            // release graph values whose consumers are exhausted; an
+            // aliased input's storage lives on as its step's output. Each
+            // consumption edge is recorded exactly once — by the consumer
+            // step itself or by the boundary step standing in for it.
+            for (v, aliased) in reads {
+                remaining[v] -= 1;
+                if remaining[v] == 0 {
+                    if let Some(s) = slots[v].take() {
+                        if !aliased {
+                            match s.lane {
+                                Lane::F32 => falloc.free(s.off, s.len),
+                                Lane::I8 { .. } => qalloc.free(s.off, s.len),
                             }
                         }
                     }
@@ -726,6 +1025,7 @@ impl ExecPlan {
         let output = slots[nvals - 1]
             .clone()
             .ok_or_else(|| "graph has no output value".to_string())?;
+        debug_assert!(!output.is_q(), "graph output must stay on the f32 lane");
         let plan = ExecPlan {
             graph_name: g.name.clone(),
             input,
@@ -735,6 +1035,7 @@ impl ExecPlan {
             f32_words: falloc.hi,
             i8_bytes: qalloc.hi,
             i32_words: ialloc.hi,
+            scale_slots: nscales,
         };
         if cfg!(debug_assertions) {
             if let Err(e) = plan.validate_wavefronts() {
@@ -747,7 +1048,7 @@ impl ExecPlan {
     /// Total planned arena footprint — the `peak_bytes` the replay
     /// observes.
     pub fn arena_bytes(&self) -> usize {
-        self.f32_words * 4 + self.i8_bytes + self.i32_words * 4
+        self.f32_words * 4 + self.i8_bytes + self.i32_words * 4 + self.scale_slots * 4
     }
 
     /// The batch size this plan was compiled for.
@@ -762,7 +1063,26 @@ impl ExecPlan {
             f32_words: self.f32_words,
             i8_bytes: self.i8_bytes,
             i32_words: self.i32_words,
+            scale_slots: self.scale_slots,
         }
+    }
+
+    /// Steps that convert between the f32 and i8 lanes (quantize +
+    /// dequantize). An all-int8 chain keeps these at its two boundaries
+    /// only; interior int8→int8 edges carry none (asserted in tests).
+    pub fn lane_conversion_steps(&self) -> usize {
+        self.steps
+            .iter()
+            .filter(|s| matches!(s.op, Op::Quantize | Op::Dequantize))
+            .count()
+    }
+
+    /// Number of steps executing on the i8-resident conv path.
+    pub fn i8_resident_steps(&self) -> usize {
+        self.steps
+            .iter()
+            .filter(|s| matches!(s.op, Op::ConvInt8Q { .. }))
+            .count()
     }
 
     /// Sum of all buffer sizes with no reuse at all — every layer output
@@ -772,7 +1092,11 @@ impl ExecPlan {
     pub fn unplanned_bytes(&self) -> usize {
         let mut total = self.input.len * 4;
         for s in &self.steps {
-            total += s.out.len * 4;
+            total += match s.out.lane {
+                Lane::F32 => s.out.len * 4,
+                // i8 buffer + its per-image scales
+                Lane::I8 { .. } => s.out.len + 4 * s.out.shape[0],
+            };
             let (fs, qs, is) = s.op.scratch();
             for sp in fs.into_iter().flatten() {
                 total += sp.len * 4;
@@ -798,6 +1122,13 @@ impl ExecPlan {
         self.waves.iter().map(|&(s, e)| e - s).max().unwrap_or(0)
     }
 
+    /// Number of graph layers behind this plan (`RunResult::layer_ms`
+    /// slots). Smaller than `steps.len()` whenever boundary
+    /// quantize/dequantize steps were emitted.
+    pub fn layer_count(&self) -> usize {
+        self.steps.iter().map(|s| s.layer + 1).max().unwrap_or(0)
+    }
+
     /// Observed arena high-water marks, folded over every step's spans —
     /// the `peak_bytes` both replay paths report (asserted equal to the
     /// planned footprint in tests). Order-independent, so sequential and
@@ -806,10 +1137,16 @@ impl ExecPlan {
         let mut hi_f = self.input.off + self.input.len;
         let mut hi_q = 0usize;
         let mut hi_i = 0usize;
+        let mut hi_s = 0usize;
         for step in &self.steps {
-            hi_f = hi_f.max(step.out.off + step.out.len);
-            for s in &step.ins {
-                hi_f = hi_f.max(s.off + s.len);
+            for s in step.ins.iter().chain([&step.out]) {
+                match s.lane {
+                    Lane::F32 => hi_f = hi_f.max(s.off + s.len),
+                    Lane::I8 { scale } => {
+                        hi_q = hi_q.max(s.off + s.len);
+                        hi_s = hi_s.max(scale + s.shape[0]);
+                    }
+                }
             }
             let (fs, qs, is) = step.op.scratch();
             for s in fs.into_iter().flatten() {
@@ -822,69 +1159,84 @@ impl ExecPlan {
                 hi_i = hi_i.max(s.off + s.len);
             }
         }
-        hi_f * 4 + hi_q + hi_i * 4
+        hi_f * 4 + hi_q + hi_i * 4 + hi_s * 4
     }
 
     /// Check the concurrency invariant the wavefront allocator guarantees:
-    /// within every wavefront, each step's write spans (output + scratch,
-    /// all lanes) are disjoint from every other co-scheduled step's read
-    /// *and* write spans. This is what makes `replay_on`'s simultaneous
-    /// mutable views of one arena sound.
+    /// within every wavefront, each step's write spans (output + scratch)
+    /// are disjoint from every other co-scheduled step's read *and* write
+    /// spans, *per lane* — the i8 lane carries persistent quantized
+    /// activations now, not just staging scratch, so it is proven with
+    /// the same rigor as the f32 lane (including each activation's scale
+    /// slot). This is what makes `replay_on`'s simultaneous mutable views
+    /// of one arena sound.
     pub fn validate_wavefronts(&self) -> Result<(), String> {
-        fn f32_writes(s: &Step) -> Vec<Span> {
-            let mut v = vec![Span { off: s.out.off, len: s.out.len }];
-            let (fs, _, _) = s.op.scratch();
-            for sp in fs.into_iter().flatten() {
-                v.push(sp);
+        /// Per-lane read/write span sets of one step. Scale slots are
+        /// folded in as one-element spans on their own axis.
+        #[derive(Default)]
+        struct Access {
+            fw: Vec<Span>,
+            fr: Vec<Span>,
+            qw: Vec<Span>,
+            qr: Vec<Span>,
+            iw: Vec<Span>,
+            sw: Vec<Span>,
+            sr: Vec<Span>,
+        }
+        fn access(s: &Step) -> Access {
+            let mut a = Access::default();
+            match s.out.lane {
+                Lane::F32 => a.fw.push(s.out.span()),
+                Lane::I8 { scale } => {
+                    a.qw.push(s.out.span());
+                    a.sw.push(Span { off: scale, len: s.out.shape[0] });
+                }
             }
-            v
+            for i in &s.ins {
+                match i.lane {
+                    Lane::F32 => a.fr.push(i.span()),
+                    Lane::I8 { scale } => {
+                        a.qr.push(i.span());
+                        a.sr.push(Span { off: scale, len: i.shape[0] });
+                    }
+                }
+            }
+            let (fs, qs, is) = s.op.scratch();
+            for sp in fs.into_iter().flatten() {
+                a.fw.push(sp);
+            }
+            if let Some(sp) = qs {
+                a.qw.push(sp);
+            }
+            if let Some(sp) = is {
+                a.iw.push(sp);
+            }
+            a
+        }
+        fn clash(writes: &[Span], touched: &[Span]) -> bool {
+            writes.iter().any(|x| {
+                touched
+                    .iter()
+                    .any(|y| spans_overlap(x.off, x.len, y.off, y.len))
+            })
         }
         for &(start, end) in &self.waves {
             for ai in start..end {
                 for bi in (ai + 1)..end {
                     let (sa, sb) = (&self.steps[ai], &self.steps[bi]);
-                    let (wa, wb) = (f32_writes(sa), f32_writes(sb));
-                    // f32 lane: a's writes vs b's reads+writes, and b's
+                    let (a, b) = (access(sa), access(sb));
+                    // per lane: a's writes vs b's reads+writes, and b's
                     // writes vs a's reads
-                    for x in &wa {
-                        for y in wb
-                            .iter()
-                            .copied()
-                            .chain(sb.ins.iter().map(|s| Span { off: s.off, len: s.len }))
-                        {
-                            if spans_overlap(x.off, x.len, y.off, y.len) {
-                                return Err(format!(
-                                    "wave {}: '{}' and '{}' overlap in the f32 lane",
-                                    sa.wave, sa.name, sb.name
-                                ));
-                            }
-                        }
-                    }
-                    for x in &wb {
-                        for y in sa.ins.iter().map(|s| Span { off: s.off, len: s.len }) {
-                            if spans_overlap(x.off, x.len, y.off, y.len) {
-                                return Err(format!(
-                                    "wave {}: '{}' writes over '{}' input",
-                                    sb.wave, sb.name, sa.name
-                                ));
-                            }
-                        }
-                    }
-                    // i8 / i32 lanes carry only int8 scratch
-                    let (_, qa, ia) = sa.op.scratch();
-                    let (_, qb, ib) = sb.op.scratch();
-                    if let (Some(x), Some(y)) = (qa, qb) {
-                        if spans_overlap(x.off, x.len, y.off, y.len) {
+                    let lanes: [(&str, &[Span], &[Span], &[Span], &[Span]); 4] = [
+                        ("f32", &a.fw, &a.fr, &b.fw, &b.fr),
+                        ("i8", &a.qw, &a.qr, &b.qw, &b.qr),
+                        ("i32", &a.iw, &[], &b.iw, &[]),
+                        ("scale", &a.sw, &a.sr, &b.sw, &b.sr),
+                    ];
+                    for (lane, aw, ar, bw, br) in lanes {
+                        if clash(aw, bw) || clash(aw, br) || clash(bw, ar) {
                             return Err(format!(
-                                "wave {}: '{}' and '{}' share i8 scratch",
-                                sa.wave, sa.name, sb.name
-                            ));
-                        }
-                    }
-                    if let (Some(x), Some(y)) = (ia, ib) {
-                        if spans_overlap(x.off, x.len, y.off, y.len) {
-                            return Err(format!(
-                                "wave {}: '{}' and '{}' share i32 scratch",
+                                "wave {}: '{}' and '{}' overlap in the {lane} lane",
                                 sa.wave, sa.name, sb.name
                             ));
                         }
@@ -899,7 +1251,9 @@ impl ExecPlan {
     /// (no per-layer allocation), and return the result with per-layer
     /// timings exactly like the interpreter recorded them.
     /// `RunResult::layer_ms` is indexed by *layer* (steps execute in
-    /// wavefront order, which differs from layer order on branchy graphs).
+    /// wavefront order, which differs from layer order on branchy graphs);
+    /// boundary quantize/dequantize steps *accumulate* into their conv's
+    /// layer slot, so QS-DNN keeps learning the full cross-lane cost.
     pub fn replay(&self, x: &Tensor, arena: &mut Arena) -> RunResult {
         assert_eq!(
             x.shape, self.input.shape,
@@ -909,12 +1263,12 @@ impl ExecPlan {
         arena.ensure(self);
         arena.f[self.input.off..self.input.off + self.input.len]
             .copy_from_slice(&x.data);
-        let mut layer_ms = vec![0.0f64; self.steps.len()];
+        let mut layer_ms = vec![0.0f64; self.layer_count()];
         let t_all = Instant::now();
         for step in &self.steps {
             let t0 = Instant::now();
             exec_step(step, arena);
-            layer_ms[step.layer] = t0.elapsed().as_secs_f64() * 1e3;
+            layer_ms[step.layer] += t0.elapsed().as_secs_f64() * 1e3;
         }
         let out_slice = &arena.f[self.output.off..self.output.off + self.output.len];
         let output = Tensor::from_vec(&self.output.shape, out_slice.to_vec());
@@ -941,11 +1295,12 @@ impl ExecPlan {
         arena.ensure(self);
         arena.f[self.input.off..self.input.off + self.input.len]
             .copy_from_slice(&x.data);
-        let mut layer_ms = vec![0.0f64; self.steps.len()];
+        let mut layer_ms = vec![0.0f64; self.layer_count()];
         let lanes = Lanes {
             f: arena.f.as_mut_ptr(),
             q: arena.q.as_mut_ptr(),
             acc: arena.acc.as_mut_ptr(),
+            s: arena.scales.as_mut_ptr(),
         };
         let t_all = Instant::now();
         for &(start, end) in &self.waves {
@@ -956,7 +1311,7 @@ impl ExecPlan {
                     // SAFETY: single thread here; spans are in-bounds by
                     // construction and `ensure` sized the lanes.
                     unsafe { exec_step_on(step, lanes) };
-                    layer_ms[step.layer] = t0.elapsed().as_secs_f64() * 1e3;
+                    layer_ms[step.layer] += t0.elapsed().as_secs_f64() * 1e3;
                 }
             } else {
                 let wave_steps = &self.steps[start..end];
@@ -964,11 +1319,14 @@ impl ExecPlan {
                 pool.scope_run(width, |i| {
                     let t0 = Instant::now();
                     // SAFETY: the planner guarantees co-scheduled steps
-                    // touch pairwise disjoint arena spans (asserted by
+                    // touch pairwise disjoint arena spans in every lane,
+                    // scale slots included (asserted by
                     // `validate_wavefronts` in debug builds), so the
                     // mutable views the workers derive from `lanes` never
                     // overlap; `scope_run` is a barrier, so no span
-                    // outlives the wave into a reuse by a later one.
+                    // outlives the wave into a reuse by a later one, and
+                    // a producer's scale write is visible to consumers
+                    // one wave later.
                     unsafe { exec_step_on(&wave_steps[i], lanes) };
                     times[i].store(
                         (t0.elapsed().as_secs_f64() * 1e3).to_bits(),
@@ -976,7 +1334,7 @@ impl ExecPlan {
                     );
                 });
                 for (i, step) in wave_steps.iter().enumerate() {
-                    layer_ms[step.layer] = f64::from_bits(times[i].load(Ordering::Relaxed));
+                    layer_ms[step.layer] += f64::from_bits(times[i].load(Ordering::Relaxed));
                 }
             }
         }
@@ -994,12 +1352,14 @@ impl ExecPlan {
 /// SAFETY: `base` must be valid for `s.off + s.len` reads and the span
 /// must not be mutably aliased for the returned lifetime.
 unsafe fn view_at<'a>(base: *const f32, s: &'a Slot) -> TensorView<'a> {
+    debug_assert!(!s.is_q(), "f32 view of an i8 slot");
     TensorView::new(&s.shape, std::slice::from_raw_parts(base.add(s.off), s.len))
 }
 
 /// SAFETY: `base` must be valid for `s.off + s.len` writes and the span
 /// must not be aliased at all for the returned lifetime.
 unsafe fn view_mut_at<'a>(base: *mut f32, s: &'a Slot) -> TensorViewMut<'a> {
+    debug_assert!(!s.is_q(), "f32 view of an i8 slot");
     TensorViewMut::new(
         &s.shape,
         std::slice::from_raw_parts_mut(base.add(s.off), s.len),
@@ -1011,18 +1371,20 @@ unsafe fn span_mut_at<'a>(base: *mut f32, s: Span) -> &'a mut [f32] {
     std::slice::from_raw_parts_mut(base.add(s.off), s.len)
 }
 
-/// Raw views of the arena's three lanes, shared by every worker of a
-/// wavefront.
+/// Raw views of the arena's lanes (f32, i8, i32 accumulators and the i8
+/// activations' scale slots), shared by every worker of a wavefront.
 ///
 /// SAFETY of the Send/Sync impls: a `Lanes` value is only created inside
 /// `replay`/`replay_on` from a `&mut Arena` held for the whole call, and
 /// concurrent workers only dereference spans the planner proved pairwise
-/// disjoint (`validate_wavefronts`), with a barrier between wavefronts.
+/// disjoint per lane (`validate_wavefronts`), with a barrier between
+/// wavefronts.
 #[derive(Clone, Copy)]
 struct Lanes {
     f: *mut f32,
     q: *mut i8,
     acc: *mut i32,
+    s: *mut f32,
 }
 
 unsafe impl Send for Lanes {}
@@ -1034,6 +1396,7 @@ fn exec_step(step: &Step, arena: &mut Arena) {
         f: arena.f.as_mut_ptr(),
         q: arena.q.as_mut_ptr(),
         acc: arena.acc.as_mut_ptr(),
+        s: arena.scales.as_mut_ptr(),
     };
     // SAFETY: exclusive `&mut Arena` — no concurrent access at all.
     unsafe { exec_step_on(step, lanes) }
@@ -1047,15 +1410,16 @@ fn exec_step(step: &Step, arena: &mut Arena) {
 /// planner's wavefront disjointness invariant.
 unsafe fn exec_step_on(step: &Step, lanes: Lanes) {
     // The planner guarantees: the output span is disjoint from every
-    // input span unless `in_place` (where it aliases ins[0] exactly), and
-    // scratch spans are disjoint from inputs, output and each other. The
-    // debug assertions below check the invariant.
+    // same-lane input span unless `in_place` (where it aliases ins[0]
+    // exactly), and scratch spans are disjoint from inputs, output and
+    // each other. The debug assertions below check the invariant.
     if step.in_place {
         debug_assert_eq!(step.out.off, step.ins[0].off, "{}: bad alias", step.name);
     } else {
         for s in &step.ins {
             debug_assert!(
-                !spans_overlap(s.off, s.len, step.out.off, step.out.len),
+                s.is_q() != step.out.is_q()
+                    || !spans_overlap(s.off, s.len, step.out.off, step.out.len),
                 "{}: input overlaps output",
                 step.name
             );
@@ -1115,6 +1479,67 @@ unsafe fn exec_step_on(step: &Step, lanes: Lanes) {
                     std::slice::from_raw_parts_mut(lanes.acc.add(acc.off), acc.len),
                     view_mut_at(fbase, &step.out),
                 );
+            }
+            Op::ConvInt8Q { qw, bias, stride, pad, relu, cols_q, acc } => {
+                let sin = &step.ins[0];
+                let x_q = std::slice::from_raw_parts(lanes.q.add(sin.off), sin.len);
+                let x_scales =
+                    std::slice::from_raw_parts(lanes.s.add(sin.scale_idx()), sin.shape[0]);
+                let out_q =
+                    std::slice::from_raw_parts_mut(lanes.q.add(step.out.off), step.out.len);
+                let out_scales = std::slice::from_raw_parts_mut(
+                    lanes.s.add(step.out.scale_idx()),
+                    step.out.shape[0],
+                );
+                conv_int8_q_into(
+                    x_q,
+                    &sin.shape,
+                    x_scales,
+                    qw,
+                    bias,
+                    *stride,
+                    *pad,
+                    *relu,
+                    std::slice::from_raw_parts_mut(lanes.q.add(cols_q.off), cols_q.len),
+                    std::slice::from_raw_parts_mut(lanes.acc.add(acc.off), acc.len),
+                    out_q,
+                    &step.out.shape,
+                    out_scales,
+                );
+            }
+            Op::Quantize => {
+                let src = view_at(fbase, &step.ins[0]);
+                let n = step.out.shape[0];
+                let per = step.out.len / n;
+                let dst =
+                    std::slice::from_raw_parts_mut(lanes.q.add(step.out.off), step.out.len);
+                let scales =
+                    std::slice::from_raw_parts_mut(lanes.s.add(step.out.scale_idx()), n);
+                for (ni, s) in scales.iter_mut().enumerate() {
+                    *s = QTensor::quantize_into(
+                        &src.data[ni * per..(ni + 1) * per],
+                        &mut dst[ni * per..(ni + 1) * per],
+                    );
+                }
+            }
+            Op::Dequantize => {
+                let sin = &step.ins[0];
+                let n = sin.shape[0];
+                let per = sin.len / n;
+                let src = std::slice::from_raw_parts(lanes.q.add(sin.off), sin.len);
+                let scales =
+                    std::slice::from_raw_parts(lanes.s.add(sin.scale_idx()), n);
+                let out = view_mut_at(fbase, &step.out);
+                for ni in 0..n {
+                    let s = scales[ni];
+                    let base = ni * per;
+                    for (o, &qv) in out.data[base..base + per]
+                        .iter_mut()
+                        .zip(src[base..base + per].iter())
+                    {
+                        *o = qv as f32 * s;
+                    }
+                }
             }
             Op::ConvF16 { hw, bias, stride, pad, relu, blk, wf, cols } => {
                 conv_f16_into(
@@ -1504,10 +1929,20 @@ mod tests {
                 let plan = p.plan(&a, 1).unwrap();
                 let mut arena = Arena::for_plan(&plan);
                 let seq = plan.replay(&x, &mut arena);
+                // int8→int8 chains ride the i8-resident lanes, which skip
+                // the legacy f32 round-trip: same int8 arithmetic, but the
+                // boundary (re)quantization differs within quant error.
+                // Everything else stays bit-exact with the interpreter.
+                let tol = if plan.i8_resident_steps() > 0 {
+                    legacy.output.max_abs() * 0.1
+                } else {
+                    0.0
+                };
                 assert!(
-                    seq.output.allclose(&legacy.output, 0.0, 0.0),
-                    "{}/{choice:?}: sequential replay diverged from legacy",
-                    g.name
+                    seq.output.allclose(&legacy.output, 0.0, tol),
+                    "{}/{choice:?}: sequential replay diverged from legacy by {}",
+                    g.name,
+                    seq.output.max_abs_diff(&legacy.output)
                 );
                 for threads in [1usize, 2, 4] {
                     let pool = ThreadPool::new(threads);
@@ -1688,6 +2123,228 @@ mod tests {
         let mut ga = a1.lock().unwrap();
         let r = p1.replay(&x, &mut ga);
         assert_eq!(r.peak_bytes, p1.arena_bytes());
+    }
+
+    /// Three int8 convs in a row: the canonical all-int8 chain.
+    fn int8_chain_model() -> (Graph, Weights) {
+        let mut g = Graph::new("i8chain", (3, 12, 12));
+        g.push("conv1", LayerKind::Conv { k: (3, 3), stride: (1, 1), pad: Padding::Same, relu_fused: true }, 8);
+        g.push("conv2", LayerKind::Conv { k: (3, 3), stride: (1, 1), pad: Padding::Same, relu_fused: true }, 8);
+        g.push("conv3", LayerKind::Conv { k: (3, 3), stride: (1, 1), pad: Padding::Same, relu_fused: false }, 6);
+        let w = crate::models::random_weights(&g, 5);
+        (g, w)
+    }
+
+    #[test]
+    fn int8_chain_is_resident_with_boundary_conversions_only() {
+        let (g, w) = int8_chain_model();
+        let p = Prepared::new(g.clone(), w, Platform::pi4()).unwrap();
+        let space = DesignSpace::build(&g, &p.platform);
+        let a = space.uniform(&g, ConvImpl::Int8Gemm);
+        let plan = p.plan(&a, 2).unwrap();
+        // all three convs run i8-resident; the only lane conversions are
+        // the chain's entry quantize and exit dequantize — zero f32
+        // dequant/requant steps at the two interior edges
+        assert_eq!(plan.i8_resident_steps(), 3, "steps: {:?}",
+                   plan.steps.iter().map(|s| s.name.clone()).collect::<Vec<_>>());
+        assert_eq!(plan.lane_conversion_steps(), 2);
+        assert!(matches!(plan.steps.first().unwrap().op, Op::Quantize));
+        assert!(matches!(plan.steps.last().unwrap().op, Op::Dequantize));
+        // the interior conv consumes and produces i8-lane activations
+        let conv2 = plan.steps.iter().find(|s| s.name == "conv2").unwrap();
+        assert!(matches!(conv2.op, Op::ConvInt8Q { .. }));
+        assert!(conv2.ins[0].is_q() && conv2.out.is_q());
+        // i8-lane activation disjointness is proven, scale slots planned
+        plan.validate_wavefronts().unwrap();
+        // 4 i8 buffers (quant copy + conv1 + conv2 + conv3 aux), one
+        // scale per image at batch 2
+        assert_eq!(plan.scale_slots, 8);
+        // the i8 lane is doing real work and the plan accounts for it
+        assert!(plan.i8_bytes > 0);
+        assert_eq!(
+            plan.arena_bytes(),
+            plan.f32_words * 4 + plan.i8_bytes + plan.i32_words * 4 + plan.scale_slots * 4
+        );
+        // opting out restores one step per layer, no conversions
+        let rt = p.plan_with(&a, 2, PlanOptions { int8_resident: false }).unwrap();
+        assert_eq!(rt.i8_resident_steps(), 0);
+        assert_eq!(rt.lane_conversion_steps(), 0);
+        assert_eq!(rt.steps.len(), g.layers.len());
+    }
+
+    #[test]
+    fn int8_chain_parity_vs_legacy_roundtrip_and_thread_counts() {
+        let (g, w) = int8_chain_model();
+        let p = Prepared::new(g.clone(), w, Platform::pi4()).unwrap();
+        let space = DesignSpace::build(&g, &p.platform);
+        let a = space.uniform(&g, ConvImpl::Int8Gemm);
+        let mut rng = Rng::new(12);
+        let x = Tensor::randn(&[2, 3, 12, 12], 1.0, &mut rng);
+        // f32 reference, the legacy f32-round-trip int8 path, and the
+        // planned round-trip (must be the legacy numerics bit for bit)
+        let f32_ref = p.run_legacy(&x, &space.uniform(&g, ConvImpl::GemmRef));
+        let legacy = p.run_legacy(&x, &a);
+        let rt_plan = p.plan_with(&a, 2, PlanOptions { int8_resident: false }).unwrap();
+        let mut rt_arena = Arena::for_plan(&rt_plan);
+        let roundtrip = rt_plan.replay(&x, &mut rt_arena);
+        assert!(roundtrip.output.allclose(&legacy.output, 0.0, 0.0));
+
+        let plan = p.plan(&a, 2).unwrap();
+        let mut arena = Arena::for_plan(&plan);
+        let resident = plan.replay(&x, &mut arena);
+        // within quant tolerance of both the f32 reference and the
+        // round-trip int8 path
+        let scale = f32_ref.output.max_abs();
+        assert!(
+            resident.output.max_abs_diff(&f32_ref.output) < scale * 0.15,
+            "vs f32: {} (scale {scale})",
+            resident.output.max_abs_diff(&f32_ref.output)
+        );
+        assert!(
+            resident.output.max_abs_diff(&roundtrip.output) < scale * 0.15,
+            "vs roundtrip: {}",
+            resident.output.max_abs_diff(&roundtrip.output)
+        );
+        // planned == observed peak; layer_ms stays indexed by layer with
+        // the boundary steps folded into their conv's slot
+        assert_eq!(resident.peak_bytes, plan.arena_bytes());
+        assert_eq!(resident.layer_ms.len(), g.layers.len());
+        // bit-exact across thread counts
+        for threads in [1usize, 2, 4] {
+            let pool = ThreadPool::new(threads);
+            let par = plan.replay_on(&x, &mut arena, &pool);
+            assert!(
+                par.output.allclose(&resident.output, 0.0, 0.0),
+                "threads={threads} diverged by {}",
+                par.output.max_abs_diff(&resident.output)
+            );
+            assert_eq!(par.peak_bytes, resident.peak_bytes);
+            assert_eq!(par.layer_ms.len(), g.layers.len());
+        }
+        // replaying again on the warm arena allocates nothing new
+        let before = arena.capacity_bytes();
+        let again = plan.replay(&x, &mut arena);
+        assert!(again.output.allclose(&resident.output, 0.0, 0.0));
+        assert_eq!(arena.capacity_bytes(), before);
+    }
+
+    /// Activation scales are per image, so a served sample's result never
+    /// depends on which other samples the batcher co-batched it with.
+    #[test]
+    fn int8_chain_results_do_not_depend_on_batch_composition() {
+        let (g, w) = int8_chain_model();
+        let p = Prepared::new(g.clone(), w, Platform::pi4()).unwrap();
+        let space = DesignSpace::build(&g, &p.platform);
+        let a = space.uniform(&g, ConvImpl::Int8Gemm);
+        let mut rng = Rng::new(44);
+        let sample = Tensor::randn(&[1, 3, 12, 12], 1.0, &mut rng);
+        // a neighbor with a much larger dynamic range
+        let loud = Tensor::randn(&[1, 3, 12, 12], 5.0, &mut rng);
+        let p1 = p.plan(&a, 1).unwrap();
+        let mut arena1 = Arena::for_plan(&p1);
+        let solo = p1.replay(&sample, &mut arena1);
+        let mut both = Tensor::zeros(&[2, 3, 12, 12]);
+        both.data[..sample.len()].copy_from_slice(&sample.data);
+        both.data[sample.len()..].copy_from_slice(&loud.data);
+        let p2 = p.plan(&a, 2).unwrap();
+        let mut arena2 = Arena::for_plan(&p2);
+        let pair = p2.replay(&both, &mut arena2);
+        let half = solo.output.len();
+        assert_eq!(
+            &pair.output.data[..half],
+            &solo.output.data[..],
+            "co-batched neighbor changed the sample's quantized result"
+        );
+    }
+
+    #[test]
+    fn f32_int8_f32_sandwich_gets_boundary_steps_only() {
+        // conv_f32 → conv_i8 → conv_i8 → conv_f32: exactly one quantize
+        // (entering the i8 region) and one dequantize (leaving it); the
+        // interior int8→int8 edge carries no conversion step
+        let mut g = Graph::new("sandwich", (3, 10, 10));
+        g.push("pre", LayerKind::Conv { k: (3, 3), stride: (1, 1), pad: Padding::Same, relu_fused: true }, 6);
+        g.push("q1", LayerKind::Conv { k: (3, 3), stride: (1, 1), pad: Padding::Same, relu_fused: true }, 6);
+        g.push("q2", LayerKind::Conv { k: (3, 3), stride: (1, 1), pad: Padding::Same, relu_fused: true }, 6);
+        g.push("post", LayerKind::Conv { k: (3, 3), stride: (1, 1), pad: Padding::Same, relu_fused: false }, 4);
+        let w = crate::models::random_weights(&g, 8);
+        let p = Prepared::new(g.clone(), w, Platform::pi4()).unwrap();
+        let mut a = crate::lne::quant_explore::f32_baseline(&p);
+        a.choices[1] = Some(ConvImpl::Int8Gemm);
+        a.choices[2] = Some(ConvImpl::Int8Gemm);
+        let plan = p.plan(&a, 1).unwrap();
+        assert_eq!(plan.i8_resident_steps(), 2);
+        assert_eq!(plan.lane_conversion_steps(), 2);
+        let quant = plan.steps.iter().find(|s| matches!(s.op, Op::Quantize)).unwrap();
+        assert_eq!(quant.name, "q1:quant");
+        let deq = plan.steps.iter().find(|s| matches!(s.op, Op::Dequantize)).unwrap();
+        assert_eq!(deq.name, "q2:dequant");
+        // q1→q2 is a direct i8 edge: q2 reads q1's output slot verbatim
+        let q1 = plan.steps.iter().find(|s| s.name == "q1").unwrap();
+        let q2 = plan.steps.iter().find(|s| s.name == "q2").unwrap();
+        assert!(q1.out.is_q() && q2.ins[0].is_q());
+        assert_eq!(q1.out.off, q2.ins[0].off);
+        // and the sandwich still computes the right thing, in parallel too
+        let mut rng = Rng::new(9);
+        let x = Tensor::randn(&[1, 3, 10, 10], 1.0, &mut rng);
+        let f32_ref = p.run_legacy(&x, &crate::lne::quant_explore::f32_baseline(&p));
+        let mut arena = Arena::for_plan(&plan);
+        let r = plan.replay(&x, &mut arena);
+        let scale = f32_ref.output.max_abs();
+        assert!(r.output.max_abs_diff(&f32_ref.output) < scale * 0.15);
+        let pool = ThreadPool::new(4);
+        let par = plan.replay_on(&x, &mut arena, &pool);
+        assert!(par.output.allclose(&r.output, 0.0, 0.0));
+    }
+
+    #[test]
+    fn inceptionette_int8_keeps_i8_activations_disjoint_across_waves() {
+        // all-int8 inceptionette: every tower's reduce→conv edge goes
+        // i8-resident, several of them co-scheduled in one wavefront, and
+        // `validate_wavefronts` proves the persistent i8 activations (and
+        // their scale slots) pairwise disjoint — not just the scratch
+        let g = crate::models::inceptionette::inceptionette();
+        let w = crate::models::random_weights(&g, 11);
+        let p = Prepared::new(g.clone(), w, Platform::pi4()).unwrap();
+        let space = DesignSpace::build(&g, &p.platform);
+        let a = space.uniform(&g, ConvImpl::Int8Gemm);
+        for batch in [1usize, 2] {
+            let plan = p.plan(&a, batch).unwrap();
+            plan.validate_wavefronts()
+                .unwrap_or_else(|e| panic!("batch {batch}: {e}"));
+            assert!(plan.i8_resident_steps() >= 4, "reduce→conv tower edges");
+            assert!(plan.max_wave_width() >= 2);
+            // each block input feeds BOTH reduce convs, but is quantized
+            // exactly once per value (one quant step per block)
+            assert_eq!(
+                plan.steps.iter().filter(|s| matches!(s.op, Op::Quantize)).count(),
+                2,
+                "shared f32 inputs must quantize once per value"
+            );
+            // some wave co-schedules two steps touching the i8 lane
+            let mut q_parallel = false;
+            for &(s, e) in &plan.waves {
+                let q_steps = plan.steps[s..e]
+                    .iter()
+                    .filter(|st| st.out.is_q() || st.ins.iter().any(|i| i.is_q()))
+                    .count();
+                if q_steps >= 2 {
+                    q_parallel = true;
+                }
+            }
+            assert!(q_parallel, "expected co-scheduled i8-lane steps");
+        }
+        // and the whole thing replays bit-exact across thread counts
+        let a_plan = p.plan(&a, 1).unwrap();
+        let mut rng = Rng::new(3);
+        let x = Tensor::randn(&[1, 3, 16, 16], 1.0, &mut rng);
+        let mut arena = Arena::for_plan(&a_plan);
+        let seq = a_plan.replay(&x, &mut arena);
+        for threads in [2usize, 4] {
+            let pool = ThreadPool::new(threads);
+            let par = a_plan.replay_on(&x, &mut arena, &pool);
+            assert!(par.output.allclose(&seq.output, 0.0, 0.0), "threads={threads}");
+        }
     }
 
     #[test]

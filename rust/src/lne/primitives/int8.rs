@@ -1,7 +1,11 @@
 //! Int8 quantized convolution (paper §6.2.5 / Fig 13b): symmetric per-tensor
 //! quantization, integer GEMM with i32 accumulators, f32 dequantize+bias.
-//! Weights are quantized once at plugin-setup time; activations per call
-//! (that conversion is part of the honest cost, as on real hardware).
+//! Weights are quantized once at plugin-setup time. Activations come in two
+//! flavors: the f32 round-trip path ([`conv_int8_into`]) quantizes the patch
+//! matrix per call, and the i8-resident path ([`conv_int8_q_into`]) consumes
+//! an already-quantized activation and requantizes each image's output to
+//! a fresh per-image scale, so chained int8 layers never touch f32 between
+//! them (DESIGN.md §7).
 
 use super::im2col::im2col;
 use crate::lne::graph::{conv_out, resolve_pad, Padding};
@@ -13,13 +17,53 @@ pub fn prepare_weights(w: &Tensor) -> QTensor {
 }
 
 fn quantize_buf(x: &[f32], out: &mut [i8]) -> f32 {
-    let max = x.iter().fold(0.0f32, |m, &v| m.max(v.abs())).max(1e-12);
-    let scale = max / 127.0;
-    let inv = 1.0 / scale;
-    for (o, &v) in out.iter_mut().zip(x.iter()) {
-        *o = (v * inv).round().clamp(-127.0, 127.0) as i8;
+    QTensor::quantize_into(x, out)
+}
+
+/// `im2col` over an i8 image: lower one (C,H,W) quantized image to the i8
+/// patch matrix. Zero padding is exact in symmetric quantization (q = 0),
+/// so the lowering is a pure byte shuffle — no arithmetic, no f32.
+#[allow(clippy::too_many_arguments)]
+pub fn im2col_i8(
+    x: &[i8],
+    c: usize,
+    h: usize,
+    w: usize,
+    k: (usize, usize),
+    stride: (usize, usize),
+    pad: (usize, usize),
+    out_h: usize,
+    out_w: usize,
+    cols: &mut [i8],
+) {
+    let (kh, kw) = k;
+    debug_assert_eq!(cols.len(), c * kh * kw * out_h * out_w);
+    let plane = h * w;
+    let out_plane = out_h * out_w;
+    for ci in 0..c {
+        for dy in 0..kh {
+            for dx in 0..kw {
+                let row = ((ci * kh + dy) * kw + dx) * out_plane;
+                for oy in 0..out_h {
+                    let iy = (oy * stride.0 + dy) as isize - pad.0 as isize;
+                    let base = row + oy * out_w;
+                    if iy < 0 || iy as usize >= h {
+                        cols[base..base + out_w].fill(0);
+                        continue;
+                    }
+                    let irow = ci * plane + iy as usize * w;
+                    for ox in 0..out_w {
+                        let ix = (ox * stride.1 + dx) as isize - pad.1 as isize;
+                        cols[base + ox] = if ix < 0 || ix as usize >= w {
+                            0
+                        } else {
+                            x[irow + ix as usize]
+                        };
+                    }
+                }
+            }
+        }
     }
-    scale
 }
 
 /// Integer GEMM: C_i32[M,N] = A_i8[M,K] @ B_i8[K,N].
@@ -91,6 +135,91 @@ pub fn conv_int8_into(
     }
 }
 
+/// i8-in/i8-out conv core for int8-resident activation lanes: the input
+/// is already quantized (`x_q` with one symmetric scale *per batch image*
+/// in `x_scales`), the patch matrix is lowered directly in i8
+/// (`im2col_i8` — no f32 round-trip at all), the GEMM accumulates in i32
+/// exactly like the round-trip path, and each image's f32 result (dequant
+/// + bias + optional ReLU) is requantized to that image's own scale,
+/// written to `out_scales`.
+///
+/// Scales are per-image on purpose: a sample's quantization must not
+/// depend on which other samples the batcher co-batched it with (the
+/// legacy round-trip path quantized per image too). `cols_q` is the i8
+/// patch matrix (C*kh*kw*out_h*out_w) and `acc` the i32 accumulators
+/// (O*out_h*out_w), both reused across batch images.
+#[allow(clippy::too_many_arguments)]
+pub fn conv_int8_q_into(
+    x_q: &[i8],
+    x_shape: &[usize],
+    x_scales: &[f32],
+    qw: &QTensor,
+    b: &[f32],
+    stride: (usize, usize),
+    pad: (usize, usize),
+    relu: bool,
+    cols_q: &mut [i8],
+    acc: &mut [i32],
+    out_q: &mut [i8],
+    out_shape: &[usize],
+    out_scales: &mut [f32],
+) {
+    let (n, c, h, wd) = (x_shape[0], x_shape[1], x_shape[2], x_shape[3]);
+    let o = qw.shape[0];
+    let k = (qw.shape[2], qw.shape[3]);
+    let (out_h, out_w) = (out_shape[2], out_shape[3]);
+    debug_assert_eq!(out_shape[0], n);
+    debug_assert_eq!(out_shape[1], o);
+    debug_assert_eq!(x_q.len(), n * c * h * wd);
+    debug_assert_eq!(x_scales.len(), n);
+    debug_assert_eq!(out_scales.len(), n);
+    let kdim = c * k.0 * k.1;
+    let out_plane = out_h * out_w;
+    debug_assert_eq!(cols_q.len(), kdim * out_plane);
+    debug_assert_eq!(acc.len(), o * out_plane);
+    debug_assert_eq!(out_q.len(), n * o * out_plane);
+    let bias = |oc: usize| b.get(oc).copied().unwrap_or(0.0);
+    for ni in 0..n {
+        let xi = &x_q[ni * c * h * wd..(ni + 1) * c * h * wd];
+        im2col_i8(xi, c, h, wd, k, stride, pad, out_h, out_w, cols_q);
+        gemm_i8(o, kdim, out_plane, &qw.data, cols_q, acc);
+        let dq = x_scales[ni] * qw.scale;
+        // pass 1: this image's dynamic range (bias and ReLU applied,
+        // since that is what downstream consumers see). `a*dq + bv` is
+        // monotonic in `a` (dq > 0), so per channel only the i32 extremes
+        // matter — integer compares instead of a full f32 dequant pass.
+        let mut max = 0.0f32;
+        for oc in 0..o {
+            let row = &acc[oc * out_plane..(oc + 1) * out_plane];
+            let (mut amin, mut amax) = (i32::MAX, i32::MIN);
+            for &a in row {
+                amin = amin.min(a);
+                amax = amax.max(a);
+            }
+            let bv = bias(oc);
+            let hi = amax as f32 * dq + bv;
+            let lo = amin as f32 * dq + bv;
+            let chan = if relu { hi.max(0.0) } else { hi.abs().max(lo.abs()) };
+            max = max.max(chan);
+        }
+        let out_scale = max.max(1e-12) / 127.0;
+        let inv = 1.0 / out_scale;
+        // pass 2: requantize this image to its scale
+        let obase = ni * o * out_plane;
+        for oc in 0..o {
+            let bv = bias(oc);
+            for p in 0..out_plane {
+                let mut v = acc[oc * out_plane + p] as f32 * dq + bv;
+                if relu && v < 0.0 {
+                    v = 0.0;
+                }
+                out_q[obase + oc * out_plane + p] = (v * inv).round().clamp(-127.0, 127.0) as i8;
+            }
+        }
+        out_scales[ni] = out_scale;
+    }
+}
+
 /// Allocating wrapper kept for callers outside the planned path.
 /// Int8 conv via im2col + integer GEMM. `qw` from `prepare_weights`.
 pub fn conv_int8(
@@ -156,6 +285,127 @@ mod tests {
         let mut c = vec![0i32; 4];
         gemm_i8(2, 2, 2, &a, &b, &mut c);
         assert_eq!(c, vec![19, 22, 43, 50]);
+    }
+
+    #[test]
+    fn im2col_i8_gathers_and_zero_pads() {
+        // 1 channel, 2x2 image, 3x3 kernel, SAME padding (pad 1,1):
+        // the center patch row sees the full image, corners see zeros
+        let x: Vec<i8> = vec![1, 2, 3, 4];
+        let mut cols = vec![9i8; 9 * 4];
+        im2col_i8(&x, 1, 2, 2, (3, 3), (1, 1), (1, 1), 2, 2, &mut cols);
+        // kernel tap (dy=1, dx=1) is identity: row 4 reproduces the image
+        assert_eq!(&cols[4 * 4..5 * 4], &[1, 2, 3, 4]);
+        // kernel tap (dy=0, dx=0) reads above-left: only output (1,1)
+        // lands inside, on pixel (0,0)
+        assert_eq!(&cols[0..4], &[0, 0, 0, 1]);
+    }
+
+    /// Per-image symmetric quantization of a batched activation.
+    fn quantize_per_image(x: &Tensor) -> (Vec<i8>, Vec<f32>) {
+        let n = x.n();
+        let per = x.len() / n;
+        let mut q = vec![0i8; x.len()];
+        let mut scales = vec![0.0f32; n];
+        for ni in 0..n {
+            scales[ni] =
+                QTensor::quantize_into(&x.data[ni * per..(ni + 1) * per], &mut q[ni * per..(ni + 1) * per]);
+        }
+        (q, scales)
+    }
+
+    #[test]
+    fn conv_int8_q_matches_f32_conv_within_quant_error() {
+        let mut rng = Rng::new(3);
+        let x = Tensor::randn(&[2, 3, 8, 8], 1.0, &mut rng);
+        let w = Tensor::randn(&[5, 3, 3, 3], 0.5, &mut rng);
+        let b: Vec<f32> = (0..5).map(|i| 0.1 * i as f32).collect();
+        let qw = prepare_weights(&w);
+        let (x_q, x_scales) = quantize_per_image(&x);
+        let (out_h, out_w) = conv_out(8, 8, (3, 3), (1, 1), Padding::Same);
+        let out_plane = out_h * out_w;
+        let kdim = 3 * 9;
+        let mut cols_q = vec![0i8; kdim * out_plane];
+        let mut acc = vec![0i32; 5 * out_plane];
+        let mut out_q = vec![0i8; 2 * 5 * out_plane];
+        let mut out_scales = vec![0.0f32; 2];
+        let out_shape = [2usize, 5, out_h, out_w];
+        conv_int8_q_into(
+            &x_q,
+            &[2, 3, 8, 8],
+            &x_scales,
+            &qw,
+            &b,
+            (1, 1),
+            resolve_pad(8, 8, (3, 3), (1, 1), Padding::Same),
+            false,
+            &mut cols_q,
+            &mut acc,
+            &mut out_q,
+            &out_shape,
+            &mut out_scales,
+        );
+        // dequantize each image with its own scale
+        let got = Tensor::from_vec(
+            &out_shape,
+            out_q
+                .iter()
+                .enumerate()
+                .map(|(j, &q)| q as f32 * out_scales[j / (5 * out_plane)])
+                .collect(),
+        );
+        let want = conv_direct(&x, &w, &b, (1, 1), Padding::Same, false);
+        // input quant + output requant: still bounded by a few quant steps
+        let scale = want.max_abs();
+        assert!(
+            got.max_abs_diff(&want) < scale * 0.06,
+            "diff {} vs scale {scale}",
+            got.max_abs_diff(&want)
+        );
+    }
+
+    #[test]
+    fn conv_int8_q_is_per_image_and_relu_clamps() {
+        let mut rng = Rng::new(4);
+        let x = Tensor::randn(&[1, 2, 5, 5], 1.0, &mut rng);
+        let w = Tensor::randn(&[2, 2, 3, 3], 1.0, &mut rng);
+        let qw = prepare_weights(&w);
+        let run = |batch: &Tensor| -> (Vec<i8>, Vec<f32>) {
+            let n = batch.n();
+            let (x_q, x_scales) = quantize_per_image(batch);
+            let mut cols_q = vec![0i8; 2 * 9 * 25];
+            let mut acc = vec![0i32; 2 * 25];
+            let mut out_q = vec![0i8; n * 2 * 25];
+            let mut out_scales = vec![0.0f32; n];
+            conv_int8_q_into(
+                &x_q,
+                batch.shape.as_slice(),
+                &x_scales,
+                &qw,
+                &[0.0, 0.0],
+                (1, 1),
+                resolve_pad(5, 5, (3, 3), (1, 1), Padding::Same),
+                true,
+                &mut cols_q,
+                &mut acc,
+                &mut out_q,
+                &[n, 2, 5, 5],
+                &mut out_scales,
+            );
+            (out_q, out_scales)
+        };
+        let (solo_q, solo_s) = run(&x);
+        assert!(solo_s[0] > 0.0);
+        assert!(solo_q.iter().all(|&q| q >= 0), "relu output must requantize non-negative");
+        // co-batching with a larger-magnitude neighbor leaves the first
+        // image's quantized output and scale untouched (per-image scales)
+        let mut both = Tensor::zeros(&[2, 2, 5, 5]);
+        both.data[..x.len()].copy_from_slice(&x.data);
+        let loud = Tensor::randn(&[1, 2, 5, 5], 5.0, &mut rng);
+        both.data[x.len()..].copy_from_slice(&loud.data);
+        let (pair_q, pair_s) = run(&both);
+        assert_eq!(&pair_q[..solo_q.len()], &solo_q[..]);
+        assert_eq!(pair_s[0], solo_s[0]);
     }
 
     #[test]

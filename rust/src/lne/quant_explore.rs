@@ -22,6 +22,12 @@ pub struct LayerQuantReport {
 pub struct QuantExploration {
     pub reports: Vec<LayerQuantReport>,
     pub baseline: Assignment,
+    /// The calibration input `explore` measured with; `select`'s joint
+    /// re-runs use it so the deviation reference stays consistent.
+    pub calib: Tensor,
+    /// Output of the baseline run on `calib` — kept so `select`'s
+    /// joint-deviation check doesn't re-run the reference.
+    pub baseline_output: Tensor,
 }
 
 /// Baseline f32 assignment: blocked GEMM where available, else first choice.
@@ -63,27 +69,64 @@ pub fn explore(p: &Prepared, x: &Tensor) -> QuantExploration {
             int8_ms: run.layer_ms[i],
         });
     }
-    QuantExploration { reports, baseline }
+    QuantExploration { reports, baseline, calib: x.clone(), baseline_output: ref_run.output }
 }
 
 impl QuantExploration {
-    /// Mixed assignment: int8 wherever deviation <= budget AND int8 is
-    /// actually faster than the layer's f32 implementation.
-    pub fn select(&self, budget: f64) -> Assignment {
-        let mut a = self.baseline.clone();
-        for r in &self.reports {
-            if r.deviation <= budget && r.int8_ms < r.f32_ms {
-                a.choices[r.layer] = Some(ConvImpl::Int8Gemm);
-            }
-        }
-        a
+    /// The per-layer selection predicate `select` and `quantized_layers`
+    /// share: within the accuracy budget AND int8 actually faster than
+    /// the layer's f32 implementation.
+    fn candidate(r: &LayerQuantReport, budget: f64) -> bool {
+        r.deviation <= budget && r.int8_ms < r.f32_ms
     }
 
-    /// Layers quantized under a budget.
+    /// Mixed assignment under a *joint* accuracy budget. Candidate layers
+    /// are picked by their one-layer-at-a-time deviation, but deviations
+    /// compound when layers quantize together (and int8→int8 chains swap
+    /// onto the i8-resident lanes), so the mixed assignment is re-run on
+    /// the stored calibration input and the worst-deviation layer greedily
+    /// un-quantized until the measured joint deviation fits the budget.
+    pub fn select(&self, p: &Prepared, budget: f64) -> Assignment {
+        let mut a = self.baseline.clone();
+        let mut selected: Vec<&LayerQuantReport> = self
+            .reports
+            .iter()
+            .filter(|r| Self::candidate(r, budget))
+            .collect();
+        for r in &selected {
+            a.choices[r.layer] = Some(ConvImpl::Int8Gemm);
+        }
+        if selected.is_empty() {
+            return a;
+        }
+        let ref_scale = self.baseline_output.max_abs().max(1e-12) as f64;
+        loop {
+            let run = p.run(&self.calib, &a);
+            let joint = run.output.max_abs_diff(&self.baseline_output) as f64 / ref_scale;
+            if joint <= budget {
+                return a;
+            }
+            // roll back the most sensitive remaining layer
+            let worst = selected
+                .iter()
+                .enumerate()
+                .max_by(|(_, r1), (_, r2)| r1.deviation.partial_cmp(&r2.deviation).unwrap())
+                .map(|(i, _)| i)
+                .expect("non-empty selection");
+            let r = selected.swap_remove(worst);
+            a.choices[r.layer] = self.baseline.choices[r.layer];
+            if selected.is_empty() {
+                return a; // back to the baseline: trivially within budget
+            }
+        }
+    }
+
+    /// Layers passing the per-layer selection predicate under a budget
+    /// (before `select`'s joint-deviation rollback).
     pub fn quantized_layers(&self, budget: f64) -> Vec<&str> {
         self.reports
             .iter()
-            .filter(|r| r.deviation <= budget && r.int8_ms < r.f32_ms)
+            .filter(|r| Self::candidate(r, budget))
             .map(|r| r.name.as_str())
             .collect()
     }
@@ -124,7 +167,7 @@ mod tests {
         let (g, w, x) = model();
         let p = Prepared::new(g, w, Platform::pi4()).unwrap();
         let e = explore(&p, &x);
-        let a = e.select(0.0);
+        let a = e.select(&p, 0.0);
         assert_eq!(a, e.baseline);
     }
 
@@ -133,10 +176,43 @@ mod tests {
         let (g, w, x) = model();
         let p = Prepared::new(g, w, Platform::pi4()).unwrap();
         let e = explore(&p, &x);
-        let a = e.select(1.0);
+        let a = e.select(&p, 1.0);
         for r in &e.reports {
             let quantized = a.choices[r.layer] == Some(ConvImpl::Int8Gemm);
             assert_eq!(quantized, r.int8_ms < r.f32_ms);
+        }
+    }
+
+    #[test]
+    fn selection_respects_the_joint_deviation_budget() {
+        let (g, w, x) = model();
+        let p = Prepared::new(g, w, Platform::pi4()).unwrap();
+        let e = explore(&p, &x);
+        let ref_run = p.run(&x, &e.baseline);
+        let ref_scale = ref_run.output.max_abs().max(1e-12) as f64;
+        // sweep budgets from "nothing fits" to "everything fits": at each
+        // point the *joint* deviation of the returned assignment must fit
+        // the budget, even where single-layer deviations passed but their
+        // combination would compound past it
+        for budget in [0.0, 1e-4, 1e-3, 1e-2, 0.05, 1.0] {
+            let a = e.select(&p, budget);
+            let joint = p.run(&x, &a).output.max_abs_diff(&ref_run.output) as f64 / ref_scale;
+            assert!(
+                joint <= budget + 1e-12,
+                "budget {budget}: joint deviation {joint} exceeds it"
+            );
+        }
+        // and the per-layer predicate is shared with quantized_layers
+        let names = e.quantized_layers(1.0);
+        let a = e.select(&p, 1.0);
+        let selected: Vec<&str> = e
+            .reports
+            .iter()
+            .filter(|r| a.choices[r.layer] == Some(ConvImpl::Int8Gemm))
+            .map(|r| r.name.as_str())
+            .collect();
+        for s in &selected {
+            assert!(names.contains(s), "{s} selected but not a candidate");
         }
     }
 }

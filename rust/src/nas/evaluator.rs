@@ -1,7 +1,7 @@
 //! Candidate evaluators for NAS (paper §5.3).
 //!
 //! `Surrogate`: a calibrated analytic accuracy model — deterministic, free,
-//! used by the default Table-4/5 bench (DESIGN.md §7 documents this
+//! used by the default Table-4/5 bench (DESIGN.md §8 documents this
 //! substitution for the paper's hundreds of trained candidates). The model
 //! encodes the paper's own findings: accuracy saturates in FLOPs, uniform
 //! channel stacks (the seed) carry redundancy, DS variants trade a few

@@ -54,7 +54,9 @@ pub struct SearchOutcome {
 }
 
 /// Run the QS-DNN search on a prepared model with calibration input `x`.
-pub fn search(p: &Prepared, x: &Tensor, cfg: &QsDnnConfig) -> SearchOutcome {
+/// An unplannable assignment (missing weights, bad topology) is reported
+/// as `Err` instead of panicking the caller's serving/CLI thread.
+pub fn search(p: &Prepared, x: &Tensor, cfg: &QsDnnConfig) -> Result<SearchOutcome, String> {
     let space = DesignSpace::build(&p.graph, &p.platform);
     let mut rng = Rng::new(cfg.seed);
     let mut q: HashMap<(usize, ConvImpl), f64> = HashMap::new();
@@ -96,7 +98,7 @@ pub fn search(p: &Prepared, x: &Tensor, cfg: &QsDnnConfig) -> SearchOutcome {
         // plan once for this episode's assignment, then replay hot — the
         // per-layer timings QS-DNN learns from come from the same replay
         // loop the deployment will run
-        let plan = p.plan(&a, x.n()).expect("plannable graph");
+        let plan = p.plan(&a, x.n())?;
         let run = plan.replay(x, &mut arena);
         // update Q with measured per-layer latency
         for (layer, _) in &space.layers {
@@ -130,28 +132,29 @@ pub fn search(p: &Prepared, x: &Tensor, cfg: &QsDnnConfig) -> SearchOutcome {
             .unwrap();
         greedy.choices[*layer] = Some(pick);
     }
-    let greedy_plan = p.plan(&greedy, x.n()).expect("plannable graph");
+    let greedy_plan = p.plan(&greedy, x.n())?;
     let greedy_run = greedy_plan.replay(x, &mut arena);
     let greedy_ms: f64 = greedy_run.layer_ms.iter().sum();
-    let (best_a, best_ms) = best.unwrap();
+    let (best_a, best_ms) = best.ok_or("search ran zero episodes")?;
     let (best, best_ms) = if greedy_ms < best_ms {
         (greedy, greedy_ms)
     } else {
         (best_a, best_ms)
     };
-    SearchOutcome { best, best_ms, episode_ms, q }
+    Ok(SearchOutcome { best, best_ms, episode_ms, q })
 }
 
 /// Median latency of a fixed assignment (baseline for comparisons): the
 /// plan is compiled once and replayed `reps` times against one arena, so
-/// the measurement loop itself performs no per-run allocation.
-pub fn measure(p: &Prepared, x: &Tensor, a: &Assignment, reps: usize) -> f64 {
-    let plan = p.plan(a, x.n()).expect("plannable graph");
+/// the measurement loop itself performs no per-run allocation. An
+/// unplannable assignment is an `Err`, not a panic.
+pub fn measure(p: &Prepared, x: &Tensor, a: &Assignment, reps: usize) -> Result<f64, String> {
+    let plan = p.plan(a, x.n())?;
     let mut arena = Arena::for_plan(&plan);
     let times: Vec<f64> = (0..reps.max(1))
         .map(|_| plan.replay(x, &mut arena).layer_ms.iter().sum())
         .collect();
-    crate::util::stats::median(times)
+    Ok(crate::util::stats::median(times))
 }
 
 #[cfg(test)]
@@ -175,15 +178,26 @@ mod tests {
     }
 
     #[test]
+    fn unplannable_assignment_is_an_error_not_a_panic() {
+        let (g, w, x) = model();
+        let p = Prepared::new(g, w, Platform::pi4()).unwrap();
+        // winograd requires 3x3 stride-1; forcing it onto the 5x5 conv2
+        // makes the assignment unplannable (no prepared winograd weights)
+        let mut a = Assignment::default_for(&p.graph);
+        a.choices[1] = Some(ConvImpl::Winograd);
+        assert!(measure(&p, &x, &a, 2).is_err());
+    }
+
+    #[test]
     fn search_beats_or_matches_every_uniform_library() {
         let (g, w, x) = model();
         let p = Prepared::new(g.clone(), w, Platform::pi4()).unwrap();
         let cfg = QsDnnConfig { episodes: 60, explore_episodes: 25, ..Default::default() };
-        let out = search(&p, &x, &cfg);
+        let out = search(&p, &x, &cfg).unwrap();
         let space = DesignSpace::build(&g, &p.platform);
         for lib in [ConvImpl::GemmRef, ConvImpl::GemmBlocked, ConvImpl::Direct] {
             let uni = space.uniform(&g, lib);
-            let t = measure(&p, &x, &uni, 3);
+            let t = measure(&p, &x, &uni, 3).unwrap();
             // allow 25% noise margin on a tiny model
             assert!(
                 out.best_ms <= t * 1.25,
@@ -199,7 +213,7 @@ mod tests {
         let (g, w, x) = model();
         let p = Prepared::new(g, w, Platform::pi4()).unwrap();
         let cfg = QsDnnConfig { episodes: 60, explore_episodes: 30, ..Default::default() };
-        let out = search(&p, &x, &cfg);
+        let out = search(&p, &x, &cfg).unwrap();
         let explore_avg: f64 =
             out.episode_ms[..30].iter().sum::<f64>() / 30.0;
         let exploit_best = out.episode_ms[30..]
@@ -216,7 +230,7 @@ mod tests {
         let (g, w, x) = model();
         let p = Prepared::new(g.clone(), w, Platform::pi4()).unwrap();
         let cfg = QsDnnConfig { episodes: 80, explore_episodes: 50, ..Default::default() };
-        let out = search(&p, &x, &cfg);
+        let out = search(&p, &x, &cfg).unwrap();
         let space = DesignSpace::build(&g, &p.platform);
         for (layer, choices) in &space.layers {
             for &c in choices {

@@ -251,6 +251,15 @@ impl LneSession {
         self.buckets.iter().map(|b| b.plan.arena_bytes()).max().unwrap_or(0)
     }
 
+    /// Planned i8-lane high-water mark of the largest bucket. Covers the
+    /// int8 staging scratch *and* the i8-resident activations an int8→int8
+    /// assignment keeps quantized between layers; it is part of the
+    /// [`ArenaProfile`](crate::lne::planner::ArenaProfile) the pool keys
+    /// arena sharing by.
+    pub fn peak_i8_bytes(&self) -> usize {
+        self.buckets.iter().map(|b| b.plan.i8_bytes).max().unwrap_or(0)
+    }
+
     pub fn assignment(&self) -> &Assignment {
         &self.assignment
     }
@@ -421,6 +430,58 @@ pub(crate) mod tests {
         assert_eq!(pool.arena_count(), 1);
         assert!(pool.arena_count() < models_x_buckets);
         assert_eq!(s1.peak_bytes(), s2.peak_bytes());
+    }
+
+    /// An all-int8 conv chain served through `LneSession`: the compiled
+    /// plans keep activations on the i8 lane (boundary conversions only),
+    /// the pooled arena profile carries the i8 high-water mark, and
+    /// predictions are identical across worker-pool sizes.
+    #[test]
+    fn int8_chain_session_serves_i8_resident_plans() {
+        use crate::lne::graph::Graph;
+        use crate::lne::platform::Platform;
+
+        let mut g = Graph::new("i8serve", (2, 8, 8));
+        g.push("c1", LayerKind::Conv { k: (3, 3), stride: (1, 1), pad: Padding::Same, relu_fused: true }, 4);
+        g.push("c2", LayerKind::Conv { k: (3, 3), stride: (1, 1), pad: Padding::Same, relu_fused: true }, 4);
+        g.push("c3", LayerKind::Conv { k: (3, 3), stride: (1, 1), pad: Padding::Same, relu_fused: false }, 3);
+        let w = crate::models::random_weights(&g, 13);
+        let p = Arc::new(Prepared::new(g, w, Platform::pi4()).unwrap());
+        let mut a = Assignment::default_for(&p.graph);
+        for c in a.choices.iter_mut() {
+            *c = Some(ConvImpl::Int8Gemm);
+        }
+        let mut rng = Rng::new(6);
+        let sample = Tensor::randn(&[2, 8, 8], 1.0, &mut rng).data;
+        let mut reference: Option<Vec<f32>> = None;
+        for threads in [1usize, 2, 4] {
+            let pool = ArenaPool::new();
+            let mut s = LneSession::new(
+                Arc::clone(&p),
+                a.clone(),
+                &[1, 2],
+                &[],
+                &pool,
+                Arc::new(WorkerPool::new(threads)),
+            )
+            .unwrap();
+            // every bucket's plan runs the chain i8-resident with exactly
+            // the two boundary conversions
+            for b in &s.buckets {
+                assert_eq!(b.plan.i8_resident_steps(), 3);
+                assert_eq!(b.plan.lane_conversion_steps(), 2);
+            }
+            assert!(s.peak_i8_bytes() > 0);
+            let preds = s.run_batch(2, &[sample.as_slice()]).unwrap();
+            assert_eq!(preds.len(), 1);
+            if let Some(want) = reference.as_ref() {
+                for (got, want) in preds[0].scores.iter().zip(want.iter()) {
+                    assert_eq!(got, want, "threads={threads} diverged");
+                }
+            } else {
+                reference = Some(preds[0].scores.clone());
+            }
+        }
     }
 
     /// The session replays on the shared worker pool: predictions match

@@ -225,15 +225,24 @@ pub struct QTensor {
 }
 
 impl QTensor {
-    pub fn quantize(t: &Tensor) -> QTensor {
-        let max = t.max_abs().max(1e-12);
+    /// Quantize `src` into `dst` (same element count) and return the
+    /// symmetric per-tensor scale. The shared core of [`QTensor::quantize`],
+    /// the planner's boundary quantize steps and the int8 conv's
+    /// patch-matrix staging — one definition of the rounding convention.
+    pub fn quantize_into(src: &[f32], dst: &mut [i8]) -> f32 {
+        debug_assert_eq!(src.len(), dst.len());
+        let max = src.iter().fold(0.0f32, |m, &v| m.max(v.abs())).max(1e-12);
         let scale = max / 127.0;
         let inv = 1.0 / scale;
-        let data = t
-            .data
-            .iter()
-            .map(|&x| (x * inv).round().clamp(-127.0, 127.0) as i8)
-            .collect();
+        for (o, &v) in dst.iter_mut().zip(src.iter()) {
+            *o = (v * inv).round().clamp(-127.0, 127.0) as i8;
+        }
+        scale
+    }
+
+    pub fn quantize(t: &Tensor) -> QTensor {
+        let mut data = vec![0i8; t.len()];
+        let scale = QTensor::quantize_into(&t.data, &mut data);
         QTensor { shape: t.shape.clone(), data, scale }
     }
 
@@ -243,6 +252,83 @@ impl QTensor {
             data: self.data.iter().map(|&q| q as f32 * self.scale).collect(),
         }
     }
+
+    /// Borrow as an immutable quantized view.
+    pub fn view(&self) -> QTensorView<'_> {
+        QTensorView { shape: &self.shape, data: &self.data, scale: self.scale }
+    }
+}
+
+/// Borrowed immutable view over a quantized i8 buffer: shape, i8 data and
+/// a symmetric scale (real = q * scale) — the borrowed counterpart of
+/// [`QTensor`] for callers that hold quantized data in their own storage.
+/// The planner's i8-resident hot loop addresses the arena's i8 lane
+/// through raw per-image slices instead (scales live in a separate lane),
+/// so these views serve tests and ad-hoc quantized-tensor callers.
+#[derive(Debug, Clone, Copy)]
+pub struct QTensorView<'a> {
+    pub shape: &'a [usize],
+    pub data: &'a [i8],
+    pub scale: f32,
+}
+
+impl<'a> QTensorView<'a> {
+    pub fn new(shape: &'a [usize], data: &'a [i8], scale: f32) -> QTensorView<'a> {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        QTensorView { shape, data, scale }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// NCHW accessors (panic on rank != 4).
+    pub fn n(&self) -> usize { self.shape[0] }
+    pub fn c(&self) -> usize { self.shape[1] }
+    pub fn h(&self) -> usize { self.shape[2] }
+    pub fn w(&self) -> usize { self.shape[3] }
+
+    /// Materialize the f32 tensor (copies; boundary/debug use only — the
+    /// hot path stays on i8).
+    pub fn dequantize(&self) -> Tensor {
+        Tensor {
+            shape: self.shape.to_vec(),
+            data: self.data.iter().map(|&q| q as f32 * self.scale).collect(),
+        }
+    }
+}
+
+/// Borrowed mutable view over a quantized i8 output buffer. The producer
+/// decides the scale while writing, so the view carries none; writers
+/// report it separately.
+#[derive(Debug)]
+pub struct QTensorViewMut<'a> {
+    pub shape: &'a [usize],
+    pub data: &'a mut [i8],
+}
+
+impl<'a> QTensorViewMut<'a> {
+    pub fn new(shape: &'a [usize], data: &'a mut [i8]) -> QTensorViewMut<'a> {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        QTensorViewMut { shape, data }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn n(&self) -> usize { self.shape[0] }
+    pub fn c(&self) -> usize { self.shape[1] }
+    pub fn h(&self) -> usize { self.shape[2] }
+    pub fn w(&self) -> usize { self.shape[3] }
 }
 
 /// Half-precision storage tensor (Fig 14b substrate).
@@ -326,6 +412,30 @@ mod tests {
         assert_eq!(v.at4(0, 1, 1, 1), 9.0);
         assert_eq!(v.to_tensor().data, t.data);
         assert_eq!(v.len(), 8);
+    }
+
+    #[test]
+    fn quantize_into_matches_quantize_and_views_roundtrip() {
+        let mut rng = Rng::new(7);
+        let t = Tensor::randn(&[2, 3, 4, 5], 1.0, &mut rng);
+        let q = QTensor::quantize(&t);
+        let mut buf = vec![0i8; t.len()];
+        let scale = QTensor::quantize_into(&t.data, &mut buf);
+        assert_eq!(scale, q.scale);
+        assert_eq!(buf, q.data);
+        // borrowed views see the same quantized world
+        let v = q.view();
+        assert_eq!((v.n(), v.c(), v.h(), v.w()), (2, 3, 4, 5));
+        assert_eq!(v.len(), 120);
+        assert!(v.dequantize().allclose(&q.dequantize(), 0.0, 0.0));
+        let shape = [2usize, 3, 4, 5];
+        let mut out = vec![0i8; 120];
+        {
+            let m = QTensorViewMut::new(&shape, &mut out);
+            assert_eq!((m.n(), m.c(), m.h(), m.w()), (2, 3, 4, 5));
+            m.data.copy_from_slice(&q.data);
+        }
+        assert_eq!(out, q.data);
     }
 
     #[test]

@@ -44,7 +44,7 @@ impl Tool for DeployLpdnn {
             ..Default::default()
         };
         let d = deploy(Framework::Lpdnn, &graph, &weights, platform.clone(), &calib, &opts)?;
-        let latency = d.latency_ms(&calib, 5);
+        let latency = d.latency_ms(&calib, 5)?;
         ctx.info(format!(
             "deployed {} on {}: {:.3} ms ({} layers searched)",
             model.arch,

@@ -35,16 +35,22 @@ pub fn summarize(samples: &[f64]) -> Summary {
     }
 }
 
-/// Median by sort-and-index (upper median for even counts) — the
-/// latency-measurement convention shared by `qsdnn::measure`, the NAS
-/// latency decorator, the CLI `eval` command and the wavefront bench.
-/// Returns 0.0 for an empty set.
+/// Median by sort: the middle element for odd counts, the average of the
+/// two middle elements for even counts (the upper-middle shortcut biased
+/// every even-sample median high). The latency-measurement convention
+/// shared by `qsdnn::measure`, the NAS latency decorator, the CLI `eval`
+/// command and the benches. Returns 0.0 for an empty set.
 pub fn median(mut v: Vec<f64>) -> f64 {
     if v.is_empty() {
         return 0.0;
     }
     v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    v[v.len() / 2]
+    let mid = v.len() / 2;
+    if v.len() % 2 == 1 {
+        v[mid]
+    } else {
+        0.5 * (v[mid - 1] + v[mid])
+    }
 }
 
 /// Linear-interpolated percentile over a pre-sorted slice.
@@ -113,6 +119,15 @@ mod tests {
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 5.0);
         assert!((s.p50 - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn median_averages_middle_pair_for_even_counts() {
+        assert_eq!(median(vec![1.0, 3.0]), 2.0);
+        assert_eq!(median(vec![4.0, 1.0, 3.0, 2.0]), 2.5);
+        assert_eq!(median(vec![3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(vec![7.0]), 7.0);
+        assert_eq!(median(Vec::new()), 0.0);
     }
 
     #[test]
