@@ -1,0 +1,107 @@
+//! Work-stealing scheduler bench: unbalanced inception towers, where the
+//! barrier wavefront replay (`replay_on`) stalls every worker at each
+//! wave boundary while one deep tower is still running, but the
+//! dep-counted tasked replay (`replay_tasked`) lets deep branches run
+//! ahead and splits large GEMMs into row-range subtasks whenever the
+//! ready set is narrower than the pool. The acceptance check for ISSUE 5
+//! is tasked beating barrier on this model at 4 threads.
+
+#[path = "common.rs"]
+mod common;
+
+use bonseyes::lne::engine::Prepared;
+use bonseyes::lne::graph::{Graph, LayerKind, Padding};
+use bonseyes::lne::planner::Arena;
+use bonseyes::lne::platform::Platform;
+use bonseyes::lne::quant_explore::f32_baseline;
+use bonseyes::models::random_weights;
+use bonseyes::util::stats::median;
+use bonseyes::util::threadpool::ThreadPool;
+
+/// Inception-style blocks with *unbalanced* tower depths: a 1x1 shortcut
+/// tower against a deep 3x3 chain and a mid 5x5 tower, joined by concat.
+/// Wave widths shrink to 1 long before the deep chain finishes, so the
+/// barrier replay serializes most of the work.
+fn unbalanced_towers(blocks: usize) -> Graph {
+    let conv = |k: usize| LayerKind::Conv {
+        k: (k, k),
+        stride: (1, 1),
+        pad: Padding::Same,
+        relu_fused: true,
+    };
+    let mut g = Graph::new("unbalanced-towers", (16, 24, 24));
+    let mut inp = 0;
+    for b in 0..blocks {
+        let t1 = g.push_on(&format!("b{b}_1x1"), conv(1), vec![inp], 24);
+        let mut deep = inp;
+        for i in 0..4 {
+            deep = g.push_on(&format!("b{b}_deep{i}"), conv(3), vec![deep], 48);
+        }
+        let mid = g.push_on(&format!("b{b}_5x5"), conv(5), vec![inp], 32);
+        inp = g.push_on(
+            &format!("b{b}_cat"),
+            LayerKind::Concat,
+            vec![t1, deep, mid],
+            0,
+        );
+    }
+    g
+}
+
+fn main() {
+    common::banner(
+        "steal",
+        "work-stealing + intra-op partitioning on unbalanced inception towers",
+    );
+    let reps = common::reps().max(3);
+    let g = unbalanced_towers(2);
+    let w = random_weights(&g, 42);
+    let p = Prepared::new(g, w, Platform::pi4()).expect("prepared");
+    let a = f32_baseline(&p);
+    let plan = p.plan(&a, 1).expect("plan");
+    plan.validate_schedule().expect("schedule invariant");
+    let mut arena = Arena::for_plan(&plan);
+    let x = common::image_input(&p.graph, 7);
+    let _ = plan.replay(&x, &mut arena); // warm-up
+    let seq = median((0..reps).map(|_| plan.replay(&x, &mut arena).total_ms).collect());
+    println!(
+        "{} steps, {} waves (max width {}), arena {} KB, seq {seq:.2} ms",
+        plan.steps.len(),
+        plan.wave_count(),
+        plan.max_wave_width(),
+        plan.arena_bytes() / 1024
+    );
+    println!(
+        "{:>7} {:>14} {:>14} {:>9} {:>8} {:>9}",
+        "threads", "barrier ms", "tasked ms", "tasked-x", "steals", "subtasks"
+    );
+    for threads in [2usize, 4] {
+        let pool = ThreadPool::new(threads);
+        let _ = plan.replay_on(&x, &mut arena, &pool);
+        let barrier = median(
+            (0..reps)
+                .map(|_| plan.replay_on(&x, &mut arena, &pool).total_ms)
+                .collect(),
+        );
+        let _ = plan.replay_tasked(&x, &mut arena, &pool);
+        let mut steals = 0usize;
+        let mut subtasks = 0usize;
+        let tasked = median(
+            (0..reps)
+                .map(|_| {
+                    let (r, s) = plan.replay_tasked_stats(&x, &mut arena, &pool);
+                    steals = s.steals;
+                    subtasks = s.subtasks;
+                    r.total_ms
+                })
+                .collect(),
+        );
+        println!(
+            "{threads:>7} {barrier:>11.2} ms {tasked:>11.2} ms {:>8.2}x {steals:>8} {subtasks:>9}",
+            barrier / tasked.max(1e-9)
+        );
+    }
+    println!("\n(tasked-x is barrier/tasked: >1 means stealing + partitioning win;");
+    println!(" the deep chain runs ahead of wave barriers and its width-1 stretches");
+    println!(" split their GEMMs across the idle workers)");
+}

@@ -25,7 +25,7 @@ fn main() {
     let iters = common::scaled(120, 40);
     let per_class = common::scaled(40, 12);
     // paper trains the two seeds; at our CPU budget the DS seed is the
-    // honest full run and the CNN seed is reduced-iteration (DESIGN.md §8)
+    // honest full run and the CNN seed is reduced-iteration (DESIGN.md §9)
     let archs: &[(&str, usize)] = if common::fast() {
         &[("ds_kws9", 40)]
     } else {

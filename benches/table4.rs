@@ -1,5 +1,5 @@
 //! Table 4: Pareto-optimal CNN architectures from NAS (TPE + Pareto
-//! selection). Default: surrogate evaluator (DESIGN.md §8); run the real
+//! selection). Default: surrogate evaluator (DESIGN.md §9); run the real
 //! PJRT-training evaluator via `cargo bench --bench table4 -- --real-train`
 //! (or env BONSEYES_NAS_REAL=1) with a reduced trial budget.
 

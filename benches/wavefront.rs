@@ -1,9 +1,10 @@
-//! Wavefront scheduling bench: sequential `ExecPlan::replay` vs
-//! wavefront-parallel `replay_on` over a shared worker pool, on branchy
-//! models (inception towers, residual legs). Demonstrates the wall-clock
-//! speedup parallel branch execution buys on multi-branch wavefronts;
-//! chain-shaped models (kws family) show ~1.0x by construction, so only
-//! branchy zoo members appear here.
+//! Wavefront scheduling bench: sequential `ExecPlan::replay` vs the
+//! barrier wavefront `replay_on` vs the dep-counted work-stealing
+//! `replay_tasked` (intra-op GEMM partitioning included), on branchy
+//! models (inception towers, residual legs). The barrier replay only
+//! wins on waves wider than one; the tasked scheduler additionally
+//! overlaps waves of unbalanced depth and splits big GEMMs when the
+//! ready set is narrow — `benches/steal.rs` isolates that case.
 
 #[path = "common.rs"]
 mod common;
@@ -23,8 +24,8 @@ fn main() {
     );
     let reps = common::reps().max(3);
     println!(
-        "{:<14} {:>5} {:>9} {:>12} {:>16} {:>16}",
-        "model", "waves", "max-width", "seq ms", "2 threads", "4 threads"
+        "{:<14} {:>5} {:>9} {:>12} {:>21} {:>21}",
+        "model", "waves", "max-width", "seq ms", "barrier 2t/4t", "tasked 2t/4t"
     );
     for name in ["inceptionette", "googlenet", "squeezenet"] {
         let (g, w) = models::by_name(name, 42).expect("zoo model");
@@ -52,7 +53,18 @@ fn main() {
             );
             print!("  {par:>7.2} ms {:>4.2}x", seq / par.max(1e-9));
         }
+        for threads in [2usize, 4] {
+            let pool = ThreadPool::new(threads);
+            let _ = plan.replay_tasked(&x, &mut arena, &pool);
+            let tasked = median(
+                (0..reps)
+                    .map(|_| plan.replay_tasked(&x, &mut arena, &pool).total_ms)
+                    .collect(),
+            );
+            print!("  {tasked:>7.2} ms {:>4.2}x", seq / tasked.max(1e-9));
+        }
         println!();
     }
-    println!("\n(speedup tracks max wavefront width; concat/pool barriers cap it)");
+    println!("\n(barrier speedup tracks max wavefront width; the tasked scheduler");
+    println!(" also overlaps waves and partitions big GEMMs on narrow ready sets)");
 }

@@ -75,8 +75,10 @@ USAGE:
   bonseyes tools
   bonseyes info [--artifacts DIR]
 
---threads sizes the shared wavefront worker pool (default: available
-parallelism; 1 = sequential replay).
+--threads sizes the shared replay worker pool (default: available
+parallelism; 1 = sequential replay). Pools > 1 execute plans through the
+dep-counted work-stealing scheduler with intra-op GEMM partitioning;
+`eval` also reports the legacy barrier replay for comparison.
 ";
 
 pub fn main_with(argv: &[String]) -> Result<()> {
@@ -181,8 +183,10 @@ fn serve(args: &Args) -> Result<()> {
     }
 }
 
-/// Measure a zoo model's LNE latency: sequential replay vs
-/// wavefront-parallel `replay_on` across the worker pool.
+/// Measure a zoo model's LNE latency: sequential replay vs the barrier
+/// wavefront `replay_on` vs the dep-counted work-stealing
+/// `replay_tasked` (with intra-op GEMM partitioning) across the worker
+/// pool, with the scheduler's steal/subtask counters.
 fn eval(args: &Args) -> Result<()> {
     use crate::lne::planner::Arena;
 
@@ -212,6 +216,19 @@ fn eval(args: &Args) -> Result<()> {
             .map(|_| plan.replay_on(&x, &mut arena, &pool).total_ms)
             .collect(),
     );
+    let (_, sched) = plan.replay_tasked_stats(&x, &mut arena, &pool); // warm-up
+    let mut steals = sched.steals;
+    let mut subtasks = sched.subtasks;
+    let tasked = median(
+        (0..reps)
+            .map(|_| {
+                let (r, s) = plan.replay_tasked_stats(&x, &mut arena, &pool);
+                steals = s.steals;
+                subtasks = s.subtasks;
+                r.total_ms
+            })
+            .collect(),
+    );
     println!(
         "{name}: {} steps in {} wavefronts (max width {}), arena {} KB",
         plan.steps.len(),
@@ -219,10 +236,14 @@ fn eval(args: &Args) -> Result<()> {
         plan.max_wave_width(),
         plan.arena_bytes() / 1024
     );
-    println!("  sequential replay        {seq:9.2} ms");
+    println!("  sequential replay           {seq:9.2} ms");
     println!(
-        "  replay_on ({threads:2} threads)   {par:9.2} ms   ({:.2}x)",
+        "  barrier replay_on ({threads:2}t)    {par:9.2} ms   ({:.2}x)",
         seq / par.max(1e-9)
+    );
+    println!(
+        "  tasked replay ({threads:2}t)        {tasked:9.2} ms   ({:.2}x)   [{steals} steals, {subtasks} gemm subtasks]",
+        seq / tasked.max(1e-9)
     );
     Ok(())
 }

@@ -22,6 +22,17 @@
 //! via [`ExecPlan::replay_on`] on a shared worker pool, bit-exact with
 //! the sequential [`ExecPlan::replay`].
 //!
+//! On top of the wavefront structure, compile emits a **task graph**
+//! (per-step predecessor counts + successor lists, one edge per pair of
+//! steps with conflicting arena accesses — data flow and cross-wave span
+//! reuse alike) that [`ExecPlan::replay_tasked`] executes with
+//! dep-counted **work-stealing** scheduling and **intra-op GEMM
+//! partitioning** (DESIGN.md §8): no barriers between waves, deep
+//! branches run ahead of shallow ones, and large conv GEMMs split into
+//! row-range subtasks when the ready set is narrower than the pool.
+//! [`ExecPlan::validate_schedule`] proves the schedule sound;
+//! `replay_on` stays as the barrier-synchronized parity oracle.
+//!
 //! This mirrors the codegen-time decisions the paper credits for LNE's
 //! embedded-target edge, and the Planner -> Vec<Step> -> replay shape of
 //! production inference engines.
@@ -32,14 +43,18 @@ use super::plugin::{Assignment, ConvImpl};
 use super::primitives::depthwise::conv_depthwise_into;
 use super::primitives::direct::conv_direct_into;
 use super::primitives::f16conv::conv_f16_into;
-use super::primitives::gemm::Blocking;
-use super::primitives::im2col::{conv_im2col_into, fc_into, GemmImpl};
-use super::primitives::int8::{conv_int8_into, conv_int8_q_into};
+use super::primitives::gemm::{gemm_blocked_rows, gemm_ref_rows, Blocking};
+use super::primitives::im2col::{conv_im2col_into, fc_into, im2col, GemmImpl};
+use super::primitives::int8::{
+    conv_int8_into, conv_int8_q_into, gemm_i8_rows, im2col_i8, requantize_image,
+};
 use super::primitives::pool::{global_pool_into, lrn_into, pool_into, softmax_into};
 use super::primitives::winograd::{self, conv_winograd_into};
 use crate::tensor::{HTensor, QTensor, Tensor, TensorView, TensorViewMut};
 use crate::util::threadpool::ThreadPool;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::collections::VecDeque;
+use std::ops::Range;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -262,6 +277,17 @@ pub struct ExecPlan {
     pub waves: Vec<(usize, usize)>,
     /// Slot of the final value.
     pub output: Slot,
+    /// Per-step predecessor counts for the dep-counted task scheduler
+    /// ([`ExecPlan::replay_tasked`]): the number of earlier steps whose
+    /// arena accesses conflict with this step's (data flow *and* the
+    /// allocator's cross-wave span reuse — WAR/WAW — both appear as span
+    /// conflicts, so ordering every conflicting pair is exactly what makes
+    /// out-of-order execution produce the sequential arena contents).
+    pub preds: Vec<usize>,
+    /// Successor lists mirroring `preds`: `succs[i]` holds every later
+    /// step that must wait for step `i`. Edges always point forward in
+    /// step (wavefront) order.
+    pub succs: Vec<Vec<usize>>,
     /// Planned lane high-water marks (the arena sizes). `i8_bytes` covers
     /// both int8 staging scratch and i8-resident activations;
     /// `scale_slots` is the number of f32 scale slots those activations
@@ -494,6 +520,100 @@ impl Region {
 
 fn spans_overlap(a_off: usize, a_len: usize, b_off: usize, b_len: usize) -> bool {
     a_off < b_off + b_len && b_off < a_off + a_len
+}
+
+/// Per-lane read/write span sets of one step (f32 / i8 / i32 / scale).
+/// Scale slots are folded in as spans on their own axis.
+#[derive(Default)]
+struct Access {
+    fw: Vec<Span>,
+    fr: Vec<Span>,
+    qw: Vec<Span>,
+    qr: Vec<Span>,
+    iw: Vec<Span>,
+    sw: Vec<Span>,
+    sr: Vec<Span>,
+}
+
+fn step_access(s: &Step) -> Access {
+    let mut a = Access::default();
+    match s.out.lane {
+        Lane::F32 => a.fw.push(s.out.span()),
+        Lane::I8 { scale } => {
+            a.qw.push(s.out.span());
+            a.sw.push(Span { off: scale, len: s.out.shape[0] });
+        }
+    }
+    for i in &s.ins {
+        match i.lane {
+            Lane::F32 => a.fr.push(i.span()),
+            Lane::I8 { scale } => {
+                a.qr.push(i.span());
+                a.sr.push(Span { off: scale, len: i.shape[0] });
+            }
+        }
+    }
+    let (fs, qs, is) = s.op.scratch();
+    for sp in fs.into_iter().flatten() {
+        a.fw.push(sp);
+    }
+    if let Some(sp) = qs {
+        a.qw.push(sp);
+    }
+    if let Some(sp) = is {
+        a.iw.push(sp);
+    }
+    a
+}
+
+fn clash(writes: &[Span], touched: &[Span]) -> bool {
+    writes.iter().any(|x| {
+        touched
+            .iter()
+            .any(|y| spans_overlap(x.off, x.len, y.off, y.len))
+    })
+}
+
+/// The lane (if any) in which two steps' accesses conflict: one step's
+/// writes against the other's reads or writes. A conflicting pair must
+/// never execute concurrently and must keep its program order.
+fn conflict_lane(a: &Access, b: &Access) -> Option<&'static str> {
+    let lanes: [(&'static str, &[Span], &[Span], &[Span], &[Span]); 4] = [
+        ("f32", &a.fw, &a.fr, &b.fw, &b.fr),
+        ("i8", &a.qw, &a.qr, &b.qw, &b.qr),
+        ("i32", &a.iw, &[], &b.iw, &[]),
+        ("scale", &a.sw, &a.sr, &b.sw, &b.sr),
+    ];
+    for (lane, aw, ar, bw, br) in lanes {
+        if clash(aw, bw) || clash(aw, br) || clash(bw, ar) {
+            return Some(lane);
+        }
+    }
+    None
+}
+
+/// Dependency edges for the dep-counted task scheduler: later step `j`
+/// depends on earlier step `i` iff their arena accesses conflict in any
+/// lane. This covers true data flow (a consumer reads its producer's
+/// span) *and* the liveness allocator's cross-wave span reuse (the new
+/// writer of a recycled span conflicts with every old reader/writer —
+/// WAR/WAW), so any execution respecting these edges writes the exact
+/// sequential arena contents. Steps are already in topological
+/// (wavefront) order, so edges always point forward; co-scheduled steps
+/// of one wave are span-disjoint (`validate_wavefronts`) and get no edge.
+fn task_edges(steps: &[Step]) -> (Vec<usize>, Vec<Vec<usize>>) {
+    let acc: Vec<Access> = steps.iter().map(step_access).collect();
+    let mut preds = vec![0usize; steps.len()];
+    let mut succs: Vec<Vec<usize>> = vec![Vec::new(); steps.len()];
+    for j in 0..steps.len() {
+        for i in 0..j {
+            if conflict_lane(&acc[i], &acc[j]).is_some() {
+                succs[i].push(j);
+                preds[j] += 1;
+            }
+        }
+    }
+    (preds, succs)
 }
 
 impl ExecPlan {
@@ -1026,20 +1146,23 @@ impl ExecPlan {
             .clone()
             .ok_or_else(|| "graph has no output value".to_string())?;
         debug_assert!(!output.is_q(), "graph output must stay on the f32 lane");
+        let (preds, succs) = task_edges(&steps);
         let plan = ExecPlan {
             graph_name: g.name.clone(),
             input,
             steps,
             waves,
             output,
+            preds,
+            succs,
             f32_words: falloc.hi,
             i8_bytes: qalloc.hi,
             i32_words: ialloc.hi,
             scale_slots: nscales,
         };
         if cfg!(debug_assertions) {
-            if let Err(e) = plan.validate_wavefronts() {
-                panic!("planner wavefront invariant violated: {e}");
+            if let Err(e) = plan.validate_schedule() {
+                panic!("planner schedule invariant violated: {e}");
             }
         }
         Ok(plan)
@@ -1171,75 +1294,86 @@ impl ExecPlan {
     /// slot). This is what makes `replay_on`'s simultaneous mutable views
     /// of one arena sound.
     pub fn validate_wavefronts(&self) -> Result<(), String> {
-        /// Per-lane read/write span sets of one step. Scale slots are
-        /// folded in as one-element spans on their own axis.
-        #[derive(Default)]
-        struct Access {
-            fw: Vec<Span>,
-            fr: Vec<Span>,
-            qw: Vec<Span>,
-            qr: Vec<Span>,
-            iw: Vec<Span>,
-            sw: Vec<Span>,
-            sr: Vec<Span>,
-        }
-        fn access(s: &Step) -> Access {
-            let mut a = Access::default();
-            match s.out.lane {
-                Lane::F32 => a.fw.push(s.out.span()),
-                Lane::I8 { scale } => {
-                    a.qw.push(s.out.span());
-                    a.sw.push(Span { off: scale, len: s.out.shape[0] });
-                }
-            }
-            for i in &s.ins {
-                match i.lane {
-                    Lane::F32 => a.fr.push(i.span()),
-                    Lane::I8 { scale } => {
-                        a.qr.push(i.span());
-                        a.sr.push(Span { off: scale, len: i.shape[0] });
-                    }
-                }
-            }
-            let (fs, qs, is) = s.op.scratch();
-            for sp in fs.into_iter().flatten() {
-                a.fw.push(sp);
-            }
-            if let Some(sp) = qs {
-                a.qw.push(sp);
-            }
-            if let Some(sp) = is {
-                a.iw.push(sp);
-            }
-            a
-        }
-        fn clash(writes: &[Span], touched: &[Span]) -> bool {
-            writes.iter().any(|x| {
-                touched
-                    .iter()
-                    .any(|y| spans_overlap(x.off, x.len, y.off, y.len))
-            })
-        }
         for &(start, end) in &self.waves {
             for ai in start..end {
                 for bi in (ai + 1)..end {
                     let (sa, sb) = (&self.steps[ai], &self.steps[bi]);
-                    let (a, b) = (access(sa), access(sb));
                     // per lane: a's writes vs b's reads+writes, and b's
                     // writes vs a's reads
-                    let lanes: [(&str, &[Span], &[Span], &[Span], &[Span]); 4] = [
-                        ("f32", &a.fw, &a.fr, &b.fw, &b.fr),
-                        ("i8", &a.qw, &a.qr, &b.qw, &b.qr),
-                        ("i32", &a.iw, &[], &b.iw, &[]),
-                        ("scale", &a.sw, &a.sr, &b.sw, &b.sr),
-                    ];
-                    for (lane, aw, ar, bw, br) in lanes {
-                        if clash(aw, bw) || clash(aw, br) || clash(bw, ar) {
-                            return Err(format!(
-                                "wave {}: '{}' and '{}' overlap in the {lane} lane",
-                                sa.wave, sa.name, sb.name
-                            ));
-                        }
+                    if let Some(lane) = conflict_lane(&step_access(sa), &step_access(sb)) {
+                        return Err(format!(
+                            "wave {}: '{}' and '{}' overlap in the {lane} lane",
+                            sa.wave, sa.name, sb.name
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Prove the whole schedule safe for out-of-order (work-stealing)
+    /// execution, extending [`ExecPlan::validate_wavefronts`]: besides
+    /// same-wave span disjointness, every pair of steps whose arena
+    /// accesses conflict in *any* lane (f32/i8/i32/scale) must be ordered
+    /// by a path in the dependency graph (`preds`/`succs`). This is the
+    /// epoch argument made checkable: the allocator only reassigns a span
+    /// freed at the end of wave *w* to steps of waves > *w*, and the edge
+    /// builder orders the new writer after every old reader/writer it
+    /// conflicts with — so a plan whose task graph misses such an edge
+    /// (unsafe cross-wave span reuse) is rejected here.
+    pub fn validate_schedule(&self) -> Result<(), String> {
+        self.validate_wavefronts()?;
+        let n = self.steps.len();
+        if self.preds.len() != n || self.succs.len() != n {
+            return Err(format!(
+                "task graph sized {}/{} for {n} steps",
+                self.preds.len(),
+                self.succs.len()
+            ));
+        }
+        // edges must point forward in step order and in-degrees must
+        // match the seeded dep counts, or the scheduler deadlocks / races
+        let mut indeg = vec![0usize; n];
+        for (i, ss) in self.succs.iter().enumerate() {
+            for &j in ss {
+                if j <= i || j >= n {
+                    return Err(format!("step {i}: bad successor edge -> {j}"));
+                }
+                indeg[j] += 1;
+            }
+        }
+        if indeg != self.preds {
+            return Err("preds do not match successor in-degrees".to_string());
+        }
+        // transitive reachability over the forward DAG, as bitsets
+        let words = (n + 63) / 64;
+        let mut reach: Vec<Vec<u64>> = vec![vec![0u64; words]; n];
+        for i in (0..n).rev() {
+            let (head, tail) = reach.split_at_mut(i + 1);
+            let ri = &mut head[i];
+            for &j in &self.succs[i] {
+                ri[j / 64] |= 1u64 << (j % 64);
+                for (w, &bits) in ri.iter_mut().zip(tail[j - i - 1].iter()) {
+                    *w |= bits;
+                }
+            }
+        }
+        // every conflicting pair must be ordered by a dependency path
+        let acc: Vec<Access> = self.steps.iter().map(step_access).collect();
+        for j in 0..n {
+            for i in 0..j {
+                if let Some(lane) = conflict_lane(&acc[i], &acc[j]) {
+                    if reach[i][j / 64] & (1u64 << (j % 64)) == 0 {
+                        return Err(format!(
+                            "steps '{}' (wave {}) and '{}' (wave {}) conflict in the \
+                             {lane} lane with no dependency path between them — \
+                             unsafe cross-wave span reuse",
+                            self.steps[i].name,
+                            self.steps[i].wave,
+                            self.steps[j].name,
+                            self.steps[j].wave
+                        ));
                     }
                 }
             }
@@ -1346,6 +1480,496 @@ impl ExecPlan {
             total_ms: t_all.elapsed().as_secs_f64() * 1e3,
             peak_bytes: self.observed_peak_bytes(),
         }
+    }
+
+    /// Static intra-op partition plan for a pool of `threads` workers:
+    /// `parts[si] >= 2` means step `si`'s GEMM splits into that many
+    /// row-range subtasks under [`ExecPlan::replay_tasked`], `0` means it
+    /// runs whole. A step partitions when its wavefront is narrower than
+    /// the pool (spare workers exist by construction), its GEMM is large
+    /// enough to amortize the split ([`PARTITION_MIN_MULS`] multiplies),
+    /// and it is a single-image `ConvIm2col`/`ConvInt8Q` step (batched
+    /// steps iterate images over shared scratch and stay whole). The
+    /// decision is a pure function of the plan and the thread count, so
+    /// subtask metrics are deterministic.
+    pub fn partition_parts(&self, threads: usize) -> Vec<u32> {
+        let mut parts = vec![0u32; self.steps.len()];
+        if threads <= 1 {
+            return parts;
+        }
+        for (si, step) in self.steps.iter().enumerate() {
+            let (ws, we) = self.waves[step.wave];
+            if we - ws >= threads {
+                continue;
+            }
+            if let Some((m, muls)) = partitionable(step) {
+                if muls >= PARTITION_MIN_MULS && m >= 2 {
+                    parts[si] = threads.min(m) as u32;
+                }
+            }
+        }
+        parts
+    }
+
+    /// Replay with the dependency-counted work-stealing scheduler:
+    /// [`ExecPlan::replay_tasked_stats`] without the scheduler stats.
+    pub fn replay_tasked(&self, x: &Tensor, arena: &mut Arena, pool: &ThreadPool) -> RunResult {
+        self.replay_tasked_stats(x, arena, pool).0
+    }
+
+    /// Replay the plan with dep-counted, work-stealing task scheduling:
+    /// the ready set seeds with zero-predecessor steps, every pool worker
+    /// pops from its own deque (LIFO) and steals from the others' (FIFO),
+    /// and completing a step decrements its successors' counts — so deep
+    /// branches run ahead of shallow ones with no wave barriers. When the
+    /// ready set is narrower than the pool, large conv GEMMs additionally
+    /// split into row-range subtasks ([`ExecPlan::partition_parts`]) whose
+    /// disjoint output rows reproduce the whole-step result bit for bit.
+    ///
+    /// Bit-exact with sequential [`ExecPlan::replay`] and the barrier
+    /// [`ExecPlan::replay_on`] at every thread count: the task graph
+    /// orders every pair of steps whose spans conflict (data flow and
+    /// cross-wave span reuse alike — `validate_schedule` proves it), and
+    /// partitioned parts preserve each output element's floating-point
+    /// accumulation order. The replay occupies at most as many pool
+    /// workers as the plan can feed (widest wavefront or widest GEMM
+    /// split), so narrow plans on a big shared serving pool leave the
+    /// other workers free; a 1-worker pool — or a plan whose ceiling is
+    /// 1 — short-circuits to the sequential replay, fully inline with no
+    /// queue round-trip.
+    pub fn replay_tasked_stats(
+        &self,
+        x: &Tensor,
+        arena: &mut Arena,
+        pool: &ThreadPool,
+    ) -> (RunResult, SchedStats) {
+        let threads = pool.size();
+        let parts = self.partition_parts(threads);
+        // never occupy more pool workers than the plan can actually feed:
+        // the concurrency ceiling is the widest wavefront or the widest
+        // GEMM split, whichever is larger. A chain with nothing to
+        // partition caps at 1 and short-circuits to the inline sequential
+        // replay, so tiny models on a big shared serving pool neither pin
+        // its workers nor leave them spinning.
+        let ceiling = self
+            .max_wave_width()
+            .max(parts.iter().copied().max().unwrap_or(0) as usize);
+        let workers = threads.min(ceiling);
+        if workers <= 1 || self.steps.len() <= 1 {
+            let r = self.replay(x, arena);
+            return (r, SchedStats { workers: 1, ..SchedStats::default() });
+        }
+        assert_eq!(
+            x.shape, self.input.shape,
+            "input shape {:?} vs planned {:?}",
+            x.shape, self.input.shape
+        );
+        arena.ensure(self);
+        arena.f[self.input.off..self.input.off + self.input.len]
+            .copy_from_slice(&x.data);
+        let lanes = Lanes {
+            f: arena.f.as_mut_ptr(),
+            q: arena.q.as_mut_ptr(),
+            acc: arena.acc.as_mut_ptr(),
+            s: arena.scales.as_mut_ptr(),
+        };
+        let n = self.steps.len();
+        let sched = Sched {
+            plan: self,
+            lanes,
+            deps: self.preds.iter().map(|&p| AtomicUsize::new(p)).collect(),
+            parts_left: parts.iter().map(|&p| AtomicUsize::new(p as usize)).collect(),
+            parts,
+            deques: (0..workers).map(|_| Mutex::new(VecDeque::new())).collect(),
+            remaining: AtomicUsize::new(n),
+            aborted: std::sync::atomic::AtomicBool::new(false),
+            steals: AtomicUsize::new(0),
+            partitioned: AtomicUsize::new(0),
+            subtasks: AtomicUsize::new(0),
+            step_ms: (0..n).map(|_| AtomicU64::new(0)).collect(),
+        };
+        // seed the ready set round-robin so workers start spread out
+        let mut seeded = 0usize;
+        for (si, &d) in self.preds.iter().enumerate() {
+            if d == 0 {
+                sched.deques[seeded % workers]
+                    .lock()
+                    .unwrap()
+                    .push_back(Task::Step(si));
+                seeded += 1;
+            }
+        }
+        debug_assert!(seeded > 0, "dependency graph has no source step");
+        let t_all = Instant::now();
+        // SAFETY of the shared `lanes`: every pair of steps with
+        // conflicting spans is ordered by the task graph (proved by
+        // `validate_schedule`), partitioned subtasks write disjoint row
+        // ranges of their step's output/accumulator spans, and all
+        // cross-worker hand-offs go through mutex-guarded deques or
+        // acquire/release counters, so no two threads ever touch an
+        // overlapping span concurrently and every read sees its
+        // producer's writes.
+        pool.scope_run(workers, |wid| sched.worker(wid));
+        assert!(
+            !sched.aborted.load(Ordering::SeqCst),
+            "replay_tasked: a scheduled task panicked"
+        );
+        debug_assert_eq!(sched.remaining.load(Ordering::SeqCst), 0);
+        let total_ms = t_all.elapsed().as_secs_f64() * 1e3;
+        let mut layer_ms = vec![0.0f64; self.layer_count()];
+        for (si, step) in self.steps.iter().enumerate() {
+            layer_ms[step.layer] += f64::from_bits(sched.step_ms[si].load(Ordering::Relaxed));
+        }
+        let out_slice = &arena.f[self.output.off..self.output.off + self.output.len];
+        let output = Tensor::from_vec(&self.output.shape, out_slice.to_vec());
+        let stats = SchedStats {
+            workers,
+            steals: sched.steals.load(Ordering::Relaxed),
+            partitioned_steps: sched.partitioned.load(Ordering::Relaxed),
+            subtasks: sched.subtasks.load(Ordering::Relaxed),
+        };
+        (
+            RunResult {
+                output,
+                layer_ms,
+                total_ms,
+                peak_bytes: self.observed_peak_bytes(),
+            },
+            stats,
+        )
+    }
+}
+
+/// Minimum multiply count (`M * K * N` of the step's GEMM) before
+/// intra-op partitioning pays for its task overhead.
+pub const PARTITION_MIN_MULS: usize = 1 << 18;
+
+/// What one [`ExecPlan::replay_tasked_stats`] call did, for scheduler
+/// observability (`ServingMetrics`, benches, the CLI `eval` report).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SchedStats {
+    /// Workers the replay ran on (1 = inline sequential short-circuit).
+    pub workers: usize,
+    /// Tasks taken from another worker's deque.
+    pub steals: usize,
+    /// Steps that executed as partitioned GEMMs.
+    pub partitioned_steps: usize,
+    /// Row-range subtasks those steps fanned out to (total parts).
+    pub subtasks: usize,
+}
+
+/// `(m, muls)` when `step` is an intra-op partitionable GEMM conv:
+/// single-image `ConvIm2col` (any GEMM impl) or `ConvInt8Q`, with `m` the
+/// number of output channels (GEMM rows) and `muls` the GEMM's multiply
+/// count `M * K * N`.
+fn partitionable(step: &Step) -> Option<(usize, usize)> {
+    if step.out.shape[0] != 1 {
+        return None;
+    }
+    let m = step.out.shape[1];
+    match &step.op {
+        Op::ConvIm2col { cols, .. } => Some((m, m * cols.len)),
+        Op::ConvInt8Q { cols_q, .. } => Some((m, m * cols_q.len)),
+        _ => None,
+    }
+}
+
+/// Row range of part `p` of `parts` over `m` GEMM rows (remainder spread
+/// over the leading parts).
+fn part_rows(m: usize, parts: usize, p: usize) -> Range<usize> {
+    let base = m / parts;
+    let rem = m % parts;
+    let start = p * base + p.min(rem);
+    start..start + base + usize::from(p < rem)
+}
+
+/// Lock-free f64 accumulate into an `AtomicU64` holding f64 bits.
+fn atomic_add_ms(slot: &AtomicU64, ms: f64) {
+    let mut cur = slot.load(Ordering::Relaxed);
+    loop {
+        let next = (f64::from_bits(cur) + ms).to_bits();
+        match slot.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => break,
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
+/// One schedulable unit of [`ExecPlan::replay_tasked`]. A step enters as
+/// `Step`; a partitioned step expands into its im2col prep (run inline by
+/// the expanding worker), `Part` GEMM row-ranges, and — for int8 convs,
+/// whose per-image requantize needs every accumulator row — a `Finish`.
+#[derive(Clone, Copy)]
+enum Task {
+    Step(usize),
+    Part { step: usize, part: u32 },
+    Finish(usize),
+}
+
+/// Shared state of one tasked replay: dep counters, per-worker deques,
+/// per-step part counters and timing slots. Workers own their deque's
+/// back (LIFO, cache-hot) and steal from other deques' front (FIFO).
+struct Sched<'a> {
+    plan: &'a ExecPlan,
+    lanes: Lanes,
+    deps: Vec<AtomicUsize>,
+    parts: Vec<u32>,
+    parts_left: Vec<AtomicUsize>,
+    deques: Vec<Mutex<VecDeque<Task>>>,
+    remaining: AtomicUsize,
+    /// A task panicked: every worker drains out so the scope barrier
+    /// releases and the caller can re-raise (instead of the surviving
+    /// workers spinning forever on a count that will never hit zero).
+    aborted: std::sync::atomic::AtomicBool,
+    steals: AtomicUsize,
+    partitioned: AtomicUsize,
+    subtasks: AtomicUsize,
+    step_ms: Vec<AtomicU64>,
+}
+
+impl Sched<'_> {
+    fn worker(&self, wid: usize) {
+        loop {
+            if self.aborted.load(Ordering::Acquire) {
+                break;
+            }
+            let task = self
+                .pop_own(wid)
+                .or_else(|| self.steal(wid));
+            match task {
+                Some(t) => {
+                    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        self.run_task(wid, t)
+                    }));
+                    if r.is_err() {
+                        self.aborted.store(true, Ordering::Release);
+                        break;
+                    }
+                }
+                None => {
+                    if self.remaining.load(Ordering::Acquire) == 0 {
+                        break;
+                    }
+                    std::thread::yield_now();
+                }
+            }
+        }
+    }
+
+    fn push(&self, wid: usize, task: Task) {
+        self.deques[wid].lock().unwrap().push_back(task);
+    }
+
+    fn pop_own(&self, wid: usize) -> Option<Task> {
+        self.deques[wid].lock().unwrap().pop_back()
+    }
+
+    fn steal(&self, wid: usize) -> Option<Task> {
+        let w = self.deques.len();
+        for k in 1..w {
+            let victim = (wid + k) % w;
+            let task = self.deques[victim].lock().unwrap().pop_front();
+            if task.is_some() {
+                self.steals.fetch_add(1, Ordering::Relaxed);
+                return task;
+            }
+        }
+        None
+    }
+
+    fn run_task(&self, wid: usize, task: Task) {
+        match task {
+            Task::Step(si) => {
+                let step = &self.plan.steps[si];
+                let p = self.parts[si];
+                if p >= 2 {
+                    self.partitioned.fetch_add(1, Ordering::Relaxed);
+                    self.subtasks.fetch_add(p as usize, Ordering::Relaxed);
+                    let t0 = Instant::now();
+                    // SAFETY: see `replay_tasked_stats` — this worker owns
+                    // the step's spans until its parts are published.
+                    unsafe { exec_partitioned_prep(step, self.lanes) };
+                    atomic_add_ms(&self.step_ms[si], t0.elapsed().as_secs_f64() * 1e3);
+                    // publish parts 1.. for thieves, run part 0 ourselves
+                    {
+                        let mut dq = self.deques[wid].lock().unwrap();
+                        for part in 1..p {
+                            dq.push_back(Task::Part { step: si, part });
+                        }
+                    }
+                    self.run_task(wid, Task::Part { step: si, part: 0 });
+                } else {
+                    let t0 = Instant::now();
+                    // SAFETY: see `replay_tasked_stats`.
+                    unsafe { exec_step_on(step, self.lanes) };
+                    atomic_add_ms(&self.step_ms[si], t0.elapsed().as_secs_f64() * 1e3);
+                    self.complete_step(wid, si);
+                }
+            }
+            Task::Part { step: si, part } => {
+                let step = &self.plan.steps[si];
+                let parts = self.parts[si] as usize;
+                let rows = part_rows(step.out.shape[1], parts, part as usize);
+                let t0 = Instant::now();
+                // SAFETY: parts of one step write disjoint row ranges and
+                // read only the prep's scratch, published via the deque.
+                unsafe { exec_partitioned_part(step, self.lanes, rows) };
+                atomic_add_ms(&self.step_ms[si], t0.elapsed().as_secs_f64() * 1e3);
+                if self.parts_left[si].fetch_sub(1, Ordering::AcqRel) == 1 {
+                    if matches!(step.op, Op::ConvInt8Q { .. }) {
+                        // requantize needs every accumulator row
+                        self.push(wid, Task::Finish(si));
+                    } else {
+                        self.complete_step(wid, si);
+                    }
+                }
+            }
+            Task::Finish(si) => {
+                let step = &self.plan.steps[si];
+                let t0 = Instant::now();
+                // SAFETY: runs after every part's `parts_left` decrement
+                // (acquire/release), so all accumulator rows are visible.
+                unsafe { exec_partitioned_finish(step, self.lanes) };
+                atomic_add_ms(&self.step_ms[si], t0.elapsed().as_secs_f64() * 1e3);
+                self.complete_step(wid, si);
+            }
+        }
+    }
+
+    /// A step's final subtask landed: release its successors and retire
+    /// it. The AcqRel decrements chain each predecessor's writes into
+    /// whichever worker observes the count hit zero.
+    fn complete_step(&self, wid: usize, si: usize) {
+        for &succ in &self.plan.succs[si] {
+            if self.deps[succ].fetch_sub(1, Ordering::AcqRel) == 1 {
+                self.push(wid, Task::Step(succ));
+            }
+        }
+        self.remaining.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+/// Lower a partitioned conv's input into its patch-matrix scratch
+/// (im2col / im2col_i8). Runs once, before any GEMM part.
+///
+/// SAFETY: same lane contract as `exec_step_on`; the step must satisfy
+/// [`partitionable`] (single image) and no part may run concurrently.
+unsafe fn exec_partitioned_prep(step: &Step, lanes: Lanes) {
+    let sin = &step.ins[0];
+    let (c, h, w) = (sin.shape[1], sin.shape[2], sin.shape[3]);
+    let (out_h, out_w) = (step.out.shape[2], step.out.shape[3]);
+    match &step.op {
+        Op::ConvIm2col { w: wt, stride, pad, cols, .. } => {
+            let k = (wt.shape[2], wt.shape[3]);
+            let x = std::slice::from_raw_parts(lanes.f.add(sin.off), sin.len);
+            let cols_s = span_mut_at(lanes.f, *cols);
+            im2col(x, c, h, w, k, *stride, *pad, out_h, out_w, cols_s);
+        }
+        Op::ConvInt8Q { qw, stride, pad, cols_q, .. } => {
+            let k = (qw.shape[2], qw.shape[3]);
+            let x = std::slice::from_raw_parts(lanes.q.add(sin.off), sin.len);
+            let cols_s =
+                std::slice::from_raw_parts_mut(lanes.q.add(cols_q.off), cols_q.len);
+            im2col_i8(x, c, h, w, k, *stride, *pad, out_h, out_w, cols_s);
+        }
+        _ => unreachable!("{}: only conv GEMM steps partition", step.name),
+    }
+}
+
+/// One GEMM row-range part of a partitioned conv: output channels `rows`
+/// into the step's output (f32, with the same bias+ReLU tail
+/// `conv_im2col_into` applies) or i32 accumulator rows (int8). Disjoint
+/// ranges touch disjoint slices, and each element's accumulation order
+/// matches the whole-step primitive, so the union is bit-exact.
+///
+/// SAFETY: prep must have completed; concurrent parts must have disjoint
+/// `rows`; same lane contract as `exec_step_on`.
+unsafe fn exec_partitioned_part(step: &Step, lanes: Lanes, rows: Range<usize>) {
+    let out_plane = step.out.shape[2] * step.out.shape[3];
+    match &step.op {
+        Op::ConvIm2col { w: wt, bias, gemm, relu, cols, .. } => {
+            let kdim = wt.shape[1] * wt.shape[2] * wt.shape[3];
+            let cols_s = std::slice::from_raw_parts(lanes.f.add(cols.off), cols.len);
+            let c_rows = std::slice::from_raw_parts_mut(
+                lanes.f.add(step.out.off + rows.start * out_plane),
+                rows.len() * out_plane,
+            );
+            match gemm {
+                GemmImpl::Reference => {
+                    gemm_ref_rows(kdim, out_plane, rows.clone(), &wt.data, cols_s, None, c_rows)
+                }
+                GemmImpl::Blocked(blk) => gemm_blocked_rows(
+                    kdim,
+                    out_plane,
+                    rows.clone(),
+                    &wt.data,
+                    cols_s,
+                    None,
+                    c_rows,
+                    *blk,
+                ),
+            }
+            // the same bias + fused-ReLU tail as `conv_im2col_into`,
+            // restricted to these rows
+            if bias.is_empty() {
+                if *relu {
+                    for v in c_rows.iter_mut() {
+                        if *v < 0.0 {
+                            *v = 0.0;
+                        }
+                    }
+                }
+            } else {
+                for (ri, oc) in rows.enumerate() {
+                    if oc >= bias.len() {
+                        break;
+                    }
+                    let bv = bias[oc];
+                    for v in c_rows[ri * out_plane..(ri + 1) * out_plane].iter_mut() {
+                        *v += bv;
+                        if *relu && *v < 0.0 {
+                            *v = 0.0;
+                        }
+                    }
+                }
+            }
+        }
+        Op::ConvInt8Q { qw, cols_q, acc, .. } => {
+            let kdim = qw.shape[1] * qw.shape[2] * qw.shape[3];
+            let cols_s = std::slice::from_raw_parts(lanes.q.add(cols_q.off), cols_q.len);
+            let acc_rows = std::slice::from_raw_parts_mut(
+                lanes.acc.add(acc.off + rows.start * out_plane),
+                rows.len() * out_plane,
+            );
+            gemm_i8_rows(kdim, out_plane, rows, &qw.data, cols_s, acc_rows);
+        }
+        _ => unreachable!("{}: only conv GEMM steps partition", step.name),
+    }
+}
+
+/// Finish a partitioned int8 conv: requantize the image's complete i32
+/// accumulators to its fresh per-image scale — identical code to the
+/// unpartitioned `conv_int8_q_into` tail.
+///
+/// SAFETY: every GEMM part must have completed (and be visible); same
+/// lane contract as `exec_step_on`.
+unsafe fn exec_partitioned_finish(step: &Step, lanes: Lanes) {
+    match &step.op {
+        Op::ConvInt8Q { qw, bias, relu, acc, .. } => {
+            let sin = &step.ins[0];
+            let o = step.out.shape[1];
+            let out_plane = step.out.shape[2] * step.out.shape[3];
+            let x_scale = *lanes.s.add(sin.scale_idx());
+            let acc_s = std::slice::from_raw_parts(lanes.acc.add(acc.off), acc.len);
+            let out_q =
+                std::slice::from_raw_parts_mut(lanes.q.add(step.out.off), step.out.len);
+            let out_scales =
+                std::slice::from_raw_parts_mut(lanes.s.add(step.out.scale_idx()), 1);
+            let dq = x_scale * qw.scale;
+            out_scales[0] =
+                requantize_image(&acc_s[..o * out_plane], o, out_plane, bias, *relu, dq, out_q);
+        }
+        _ => unreachable!("{}: only int8 conv steps need a finish", step.name),
     }
 }
 
@@ -2360,5 +2984,325 @@ mod tests {
             plan.replay(&bad, &mut arena)
         }));
         assert!(result.is_err(), "shape mismatch must be rejected");
+    }
+
+    #[test]
+    fn task_graph_orders_chain_and_validates() {
+        let (g, w) = toy_model();
+        let p = Prepared::new(g.clone(), w, Platform::pi4()).unwrap();
+        let a = DesignSpace::build(&g, &p.platform).uniform(&g, ConvImpl::GemmRef);
+        let plan = p.plan(&a, 1).unwrap();
+        plan.validate_schedule().unwrap();
+        assert_eq!(plan.preds.len(), plan.steps.len());
+        assert_eq!(plan.succs.len(), plan.steps.len());
+        // exactly one source on a pure chain; every later step is gated
+        assert_eq!(plan.preds[0], 0);
+        for (si, &d) in plan.preds.iter().enumerate().skip(1) {
+            assert!(d >= 1, "step {si} unreachable-from-deps on a pure chain");
+        }
+        // consecutive chain steps conflict (data flow), so each step's
+        // successor list must order the next one after it
+        for si in 0..plan.steps.len() - 1 {
+            assert!(
+                plan.succs[si].contains(&(si + 1)),
+                "step {si} -> {} edge missing",
+                si + 1
+            );
+        }
+    }
+
+    #[test]
+    fn validate_schedule_rejects_unsafe_cross_wave_reuse() {
+        // Hand-built plan with two independent wave-0 chains. Step C
+        // (wave 1) recycles the span chain A reads — legal under the
+        // barrier replay (the wave boundary orders it), but its task
+        // graph carries no A -> C edge, so out-of-order stealing could
+        // overwrite A's input while A still reads it. `validate_schedule`
+        // must reject exactly that, and accept the plan once the edge
+        // exists.
+        let shape = vec![1usize, 1, 4, 4];
+        let x_in = Slot::f32(0, 16, shape.clone());
+        let a_out = Slot::f32(16, 16, shape.clone());
+        let b_in = Slot::f32(32, 16, shape.clone());
+        let b_out = Slot::f32(48, 16, shape.clone());
+        let c_out = Slot::f32(0, 16, shape.clone()); // reuses x_in's span
+        let step = |name: &str, layer, ins, out: &Slot, wave| Step {
+            layer,
+            name: name.to_string(),
+            ins,
+            out: out.clone(),
+            in_place: false,
+            wave,
+            op: Op::Relu,
+        };
+        let mut plan = ExecPlan {
+            graph_name: "handmade".into(),
+            input: x_in.clone(),
+            steps: vec![
+                step("a", 0, vec![x_in.clone()], &a_out, 0),
+                step("b", 1, vec![b_in.clone()], &b_out, 0),
+                step("c", 2, vec![b_out.clone()], &c_out, 1),
+            ],
+            waves: vec![(0, 2), (2, 3)],
+            output: b_out.clone(),
+            preds: vec![0, 0, 1],
+            succs: vec![vec![], vec![2], vec![]],
+            f32_words: 64,
+            i8_bytes: 0,
+            i32_words: 0,
+            scale_slots: 0,
+        };
+        // the barrier invariant holds (wave 0 is disjoint)...
+        plan.validate_wavefronts().unwrap();
+        // ...but the schedule is unsafe: 'c' clobbers 'a''s input span
+        // with no dependency path
+        let err = plan.validate_schedule().unwrap_err();
+        assert!(err.contains("'a'") && err.contains("'c'"), "{err}");
+        assert!(err.contains("f32"), "{err}");
+        // adding the missing ordering edge makes it safe
+        plan.succs[0].push(2);
+        plan.preds[2] = 2;
+        plan.validate_schedule().unwrap();
+        // and inconsistent dep counts are caught too
+        plan.preds[2] = 1;
+        assert!(plan.validate_schedule().is_err());
+    }
+
+    #[test]
+    fn replay_tasked_matches_replay_and_barrier_across_thread_counts() {
+        for (g, w, _) in parity_cases() {
+            let p = Prepared::new(g.clone(), w, Platform::pi4()).unwrap();
+            let space = DesignSpace::build(&g, &p.platform);
+            let mut rng = Rng::new(5);
+            let x = Tensor::randn(&[1, g.input.0, g.input.1, g.input.2], 1.0, &mut rng);
+            for choice in [ConvImpl::Direct, ConvImpl::GemmBlocked, ConvImpl::Int8Gemm] {
+                let a = space.uniform(&g, choice);
+                let plan = p.plan(&a, 1).unwrap();
+                plan.validate_schedule()
+                    .unwrap_or_else(|e| panic!("{}/{choice:?}: {e}", g.name));
+                let mut arena = Arena::for_plan(&plan);
+                let seq = plan.replay(&x, &mut arena);
+                for threads in [1usize, 2, 4] {
+                    let pool = ThreadPool::new(threads);
+                    let bar = plan.replay_on(&x, &mut arena, &pool);
+                    let (tsk, stats) = plan.replay_tasked_stats(&x, &mut arena, &pool);
+                    assert!(
+                        tsk.output.allclose(&seq.output, 0.0, 0.0),
+                        "{}/{choice:?}/{threads}t: tasked diverged from sequential by {}",
+                        g.name,
+                        tsk.output.max_abs_diff(&seq.output)
+                    );
+                    assert!(
+                        tsk.output.allclose(&bar.output, 0.0, 0.0),
+                        "{}/{choice:?}/{threads}t: tasked diverged from barrier replay",
+                        g.name
+                    );
+                    assert_eq!(tsk.peak_bytes, seq.peak_bytes);
+                    assert_eq!(tsk.layer_ms.len(), g.layers.len());
+                    if threads == 1 {
+                        // inline short-circuit: no workers, no steals
+                        assert_eq!(stats.workers, 1);
+                        assert_eq!(stats.steals, 0);
+                        assert_eq!(stats.subtasks, 0);
+                    } else {
+                        // capped by the plan's concurrency ceiling, never
+                        // above the pool
+                        assert!(
+                            stats.workers >= 1 && stats.workers <= threads,
+                            "workers {} vs pool {threads}",
+                            stats.workers
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Two towers of very different depth off one input. The deep tower's
+    /// later waves share no dependency path with the shallow tower's
+    /// conv, so the dep-counted scheduler may legally run them while
+    /// earlier-wave work is still in flight — work-stealing across wave
+    /// boundaries — and must still reproduce the sequential result bit
+    /// for bit.
+    fn unbalanced_model() -> (Graph, Weights) {
+        let conv = |k: usize| LayerKind::Conv {
+            k: (k, k),
+            stride: (1, 1),
+            pad: Padding::Same,
+            relu_fused: true,
+        };
+        let mut g = Graph::new("unbalanced", (8, 12, 12));
+        let sh = g.push_on("shallow", conv(5), vec![0], 24);
+        let mut d = 0;
+        for i in 0..4 {
+            d = g.push_on(&format!("deep{i}"), conv(3), vec![d], 32);
+        }
+        g.push_on("join", LayerKind::Concat, vec![d, sh], 0);
+        let w = crate::models::random_weights(&g, 21);
+        (g, w)
+    }
+
+    #[test]
+    fn work_stealing_crosses_wave_boundaries_on_unbalanced_towers() {
+        let (g, w) = unbalanced_model();
+        let p = Prepared::new(g.clone(), w, Platform::pi4()).unwrap();
+        let a = DesignSpace::build(&g, &p.platform).uniform(&g, ConvImpl::GemmBlocked);
+        let plan = p.plan(&a, 1).unwrap();
+        plan.validate_schedule().unwrap();
+        // structural: some pair of steps in *different* waves is ordered
+        // in neither direction by the task graph — exactly the freedom a
+        // barrier replay forbids and the scheduler exploits
+        let n = plan.steps.len();
+        let reachable = |from: usize, to: usize| -> bool {
+            let mut seen = vec![false; n];
+            let mut stack = vec![from];
+            while let Some(i) = stack.pop() {
+                for &j in &plan.succs[i] {
+                    if j == to {
+                        return true;
+                    }
+                    if !seen[j] {
+                        seen[j] = true;
+                        stack.push(j);
+                    }
+                }
+            }
+            false
+        };
+        let mut independent_cross_wave = false;
+        'outer: for i in 0..n {
+            for j in (i + 1)..n {
+                if plan.steps[i].wave != plan.steps[j].wave && !reachable(i, j) {
+                    independent_cross_wave = true;
+                    break 'outer;
+                }
+            }
+        }
+        assert!(
+            independent_cross_wave,
+            "unbalanced towers must leave cross-wave steps unordered for stealing to overtake"
+        );
+        // and the out-of-order execution stays bit-exact
+        let mut rng = Rng::new(33);
+        let x = Tensor::randn(&[1, 8, 12, 12], 1.0, &mut rng);
+        let mut arena = Arena::for_plan(&plan);
+        let seq = plan.replay(&x, &mut arena);
+        for threads in [2usize, 4] {
+            let pool = ThreadPool::new(threads);
+            let (tsk, stats) = plan.replay_tasked_stats(&x, &mut arena, &pool);
+            assert!(
+                tsk.output.allclose(&seq.output, 0.0, 0.0),
+                "threads={threads}: diverged by {}",
+                tsk.output.max_abs_diff(&seq.output)
+            );
+            // the partitioned deep convs keep the whole pool fed
+            assert!(stats.workers >= 2 && stats.workers <= threads);
+        }
+    }
+
+    /// A pure chain of large convs: every wave has width 1, so at 4
+    /// threads the scheduler can only use the pool through intra-op
+    /// partitioning — which must be deterministic and bit-exact.
+    #[test]
+    fn partitioned_chain_replay_is_bitexact_and_deterministic() {
+        let mut g = Graph::new("bigchain", (8, 16, 16));
+        g.push("c1", LayerKind::Conv { k: (3, 3), stride: (1, 1), pad: Padding::Same, relu_fused: true }, 32);
+        g.push("c2", LayerKind::Conv { k: (3, 3), stride: (1, 1), pad: Padding::Same, relu_fused: true }, 32);
+        g.push("c3", LayerKind::Conv { k: (3, 3), stride: (1, 1), pad: Padding::Same, relu_fused: false }, 32);
+        let w = crate::models::random_weights(&g, 4);
+        let p = Prepared::new(g.clone(), w, Platform::pi4()).unwrap();
+        let space = DesignSpace::build(&g, &p.platform);
+        let mut rng = Rng::new(6);
+        let x = Tensor::randn(&[1, 8, 16, 16], 1.0, &mut rng);
+        for choice in [ConvImpl::GemmRef, ConvImpl::GemmBlocked, ConvImpl::Int8Gemm] {
+            let a = space.uniform(&g, choice);
+            let plan = p.plan(&a, 1).unwrap();
+            let parts = plan.partition_parts(4);
+            let split_steps = parts.iter().filter(|&&p| p >= 2).count();
+            assert_eq!(
+                split_steps, 3,
+                "{choice:?}: all three conv GEMMs clear the partition threshold"
+            );
+            // deterministic: same plan + thread count -> same split
+            assert_eq!(parts, plan.partition_parts(4));
+            // single-threaded and batched plans never partition
+            assert!(plan.partition_parts(1).iter().all(|&p| p == 0));
+            let plan2 = p.plan(&a, 2).unwrap();
+            assert!(plan2.partition_parts(4).iter().all(|&p| p == 0));
+            let mut arena = Arena::for_plan(&plan);
+            let seq = plan.replay(&x, &mut arena);
+            let pool = ThreadPool::new(4);
+            let (tsk, stats) = plan.replay_tasked_stats(&x, &mut arena, &pool);
+            assert!(
+                tsk.output.allclose(&seq.output, 0.0, 0.0),
+                "{choice:?}: partitioned replay diverged by {}",
+                tsk.output.max_abs_diff(&seq.output)
+            );
+            assert_eq!(stats.partitioned_steps, split_steps, "{choice:?}");
+            assert_eq!(
+                stats.subtasks,
+                parts.iter().map(|&p| p as usize).sum::<usize>(),
+                "{choice:?}"
+            );
+        }
+    }
+
+    /// ImageNet-family acceptance spot-check: squeezenet (the smallest
+    /// zoo member) through the task scheduler at the f32 baseline.
+    #[test]
+    fn replay_tasked_parity_on_imagenet_squeezenet() {
+        let (g, w) = crate::models::by_name("squeezenet", 3).unwrap();
+        let p = Prepared::new(g.clone(), w, Platform::pi4()).unwrap();
+        let a = crate::lne::quant_explore::f32_baseline(&p);
+        let plan = p.plan(&a, 1).unwrap();
+        plan.validate_schedule().unwrap();
+        let mut rng = Rng::new(23);
+        let x = Tensor::randn(&[1, g.input.0, g.input.1, g.input.2], 1.0, &mut rng);
+        let mut arena = Arena::for_plan(&plan);
+        let seq = plan.replay(&x, &mut arena);
+        for threads in [2usize, 4] {
+            let pool = ThreadPool::new(threads);
+            let tsk = plan.replay_tasked(&x, &mut arena, &pool);
+            assert!(
+                tsk.output.allclose(&seq.output, 0.0, 0.0),
+                "threads={threads}: squeezenet tasked replay diverged"
+            );
+        }
+    }
+
+    /// kws-geometry chain and the int8-resident inceptionette through the
+    /// task scheduler — the remaining acceptance models.
+    #[test]
+    fn replay_tasked_parity_on_kws_and_int8_inceptionette() {
+        use crate::nas::space::KwsArch;
+        let arch = KwsArch { ds: false, convs: vec![(3, 48), (3, 48), (3, 48)] };
+        let (kg, kw) = crate::nas::evaluator::lne_model(&arch, 7);
+        let ig = crate::models::inceptionette::inceptionette();
+        let iw = crate::models::random_weights(&ig, 11);
+        for ((g, w), choice) in [(kg, kw), (ig.clone(), iw.clone()), (ig, iw)]
+            .into_iter()
+            .zip([ConvImpl::GemmBlocked, ConvImpl::GemmBlocked, ConvImpl::Int8Gemm])
+        {
+            let p = Prepared::new(g.clone(), w, Platform::pi4()).unwrap();
+            let space = DesignSpace::build(&g, &p.platform);
+            let a = space.uniform(&g, choice);
+            let plan = p.plan(&a, 1).unwrap();
+            plan.validate_schedule().unwrap();
+            let mut rng = Rng::new(19);
+            let x = Tensor::randn(&[1, g.input.0, g.input.1, g.input.2], 1.0, &mut rng);
+            let mut arena = Arena::for_plan(&plan);
+            let seq = plan.replay(&x, &mut arena);
+            for threads in [1usize, 2, 4] {
+                let pool = ThreadPool::new(threads);
+                let bar = plan.replay_on(&x, &mut arena, &pool);
+                let tsk = plan.replay_tasked(&x, &mut arena, &pool);
+                assert!(
+                    tsk.output.allclose(&seq.output, 0.0, 0.0)
+                        && tsk.output.allclose(&bar.output, 0.0, 0.0),
+                    "{}/{choice:?}/{threads}t: tasked replay diverged",
+                    g.name
+                );
+            }
+        }
     }
 }

@@ -32,6 +32,27 @@ pub fn gemm_ref(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], bias: Option
     }
 }
 
+/// Row-range variant of [`gemm_ref`] for intra-op partitioning: compute
+/// only output rows `rows` (a contiguous range of M) into `c_rows`, a
+/// slice holding exactly those rows (`rows.len() * n` elements). `a` is
+/// the full `[M,K]` matrix. Disjoint row ranges write disjoint output
+/// slices, so parts may run concurrently; each element's accumulation
+/// order is identical to the full-matrix call, so the union of all parts
+/// is bit-exact with one `gemm_ref` call.
+pub fn gemm_ref_rows(
+    k: usize,
+    n: usize,
+    rows: std::ops::Range<usize>,
+    a: &[f32],
+    b: &[f32],
+    bias: Option<&[f32]>,
+    c_rows: &mut [f32],
+) {
+    debug_assert!(rows.end * k <= a.len());
+    debug_assert_eq!(c_rows.len(), rows.len() * n);
+    gemm_ref(rows.len(), k, n, &a[rows.start * k..rows.end * k], b, bias, c_rows);
+}
+
 /// Blocking parameters (selected by the platform profile).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Blocking {
@@ -84,6 +105,30 @@ pub fn gemm_blocked(
         }
         kk += blk.kc;
     }
+}
+
+/// Row-range variant of [`gemm_blocked`] for intra-op partitioning:
+/// compute only output rows `rows` into `c_rows` (`rows.len() * n`
+/// elements); `a` is the full `[M,K]` matrix. Bit-exact with the
+/// full-matrix call on those rows: the M-tiling shifts with the range
+/// start, but every output element accumulates each kc-block's partial
+/// sum over ascending k into a single f32 accumulator before adding it
+/// to C — the same floating-point sequence in the microkernel and both
+/// cleanup paths — so tile assignment never changes the result.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_blocked_rows(
+    k: usize,
+    n: usize,
+    rows: std::ops::Range<usize>,
+    a: &[f32],
+    b: &[f32],
+    bias: Option<&[f32]>,
+    c_rows: &mut [f32],
+    blk: Blocking,
+) {
+    debug_assert!(rows.end * k <= a.len());
+    debug_assert_eq!(c_rows.len(), rows.len() * n);
+    gemm_blocked(rows.len(), k, n, &a[rows.start * k..rows.end * k], b, bias, c_rows, blk);
 }
 
 /// Inner block: 4-row x 8-col register tile, scalar cleanup.
@@ -198,6 +243,46 @@ mod tests {
             gemm_ref(m, k, n, &a, &b, None, &mut c1);
             gemm_blocked(m, k, n, &a, &b, None, &mut c2, Blocking { mc: 8, kc: 8, nc: 8 });
             check_close(&c2, &c1, 1e-4);
+        }
+    }
+
+    /// Partitioned rows must reproduce the full GEMM bit for bit: the
+    /// scheduler's intra-op split relies on it for exact parity with the
+    /// unpartitioned replay.
+    #[test]
+    fn row_ranges_are_bitexact_with_full_gemm() {
+        let (m, k, n) = (13, 29, 23);
+        let mut rng = Rng::new(11);
+        let a = testing::randn_vec(&mut rng, m * k, 1.0);
+        let b = testing::randn_vec(&mut rng, k * n, 1.0);
+        let bias: Vec<f32> = testing::randn_vec(&mut rng, n, 1.0);
+        for bias_opt in [None, Some(bias.as_slice())] {
+            let mut full_ref = vec![0.0; m * n];
+            let mut full_blk = vec![0.0; m * n];
+            gemm_ref(m, k, n, &a, &b, bias_opt, &mut full_ref);
+            let blk = Blocking { mc: 4, kc: 8, nc: 8 };
+            gemm_blocked(m, k, n, &a, &b, bias_opt, &mut full_blk, blk);
+            // uneven 3-way split
+            for parts in [2usize, 3, 5] {
+                let mut part_ref = vec![7.0; m * n];
+                let mut part_blk = vec![7.0; m * n];
+                let base = m / parts;
+                let rem = m % parts;
+                for p in 0..parts {
+                    let start = p * base + p.min(rem);
+                    let end = start + base + usize::from(p < rem);
+                    gemm_ref_rows(
+                        k, n, start..end, &a, &b, bias_opt,
+                        &mut part_ref[start * n..end * n],
+                    );
+                    gemm_blocked_rows(
+                        k, n, start..end, &a, &b, bias_opt,
+                        &mut part_blk[start * n..end * n], blk,
+                    );
+                }
+                assert_eq!(part_ref, full_ref, "ref parts={parts}");
+                assert_eq!(part_blk, full_blk, "blocked parts={parts}");
+            }
         }
     }
 

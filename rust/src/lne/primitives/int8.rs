@@ -86,6 +86,74 @@ pub fn gemm_i8(m: usize, k: usize, n: usize, a: &[i8], b: &[i8], c: &mut [i32]) 
     }
 }
 
+/// Row-range variant of [`gemm_i8`] for intra-op partitioning: compute
+/// only accumulator rows `rows` into `c_rows` (`rows.len() * n` i32
+/// elements); `a` is the full `[M,K]` int8 matrix. Integer arithmetic is
+/// associative-free of rounding, and each part zero-fills exactly its own
+/// rows, so the union of disjoint parts equals one full [`gemm_i8`] call.
+pub fn gemm_i8_rows(
+    k: usize,
+    n: usize,
+    rows: std::ops::Range<usize>,
+    a: &[i8],
+    b: &[i8],
+    c_rows: &mut [i32],
+) {
+    debug_assert!(rows.end * k <= a.len());
+    debug_assert_eq!(c_rows.len(), rows.len() * n);
+    gemm_i8(rows.len(), k, n, &a[rows.start * k..rows.end * k], b, c_rows);
+}
+
+/// Requantize one image's i32 GEMM accumulators to a fresh symmetric
+/// per-image scale: pass 1 finds the image's dynamic range (bias and
+/// optional ReLU applied — what downstream consumers see; `a*dq + bv` is
+/// monotonic in `a` for `dq > 0`, so per channel only the i32 extremes
+/// matter), pass 2 writes the quantized bytes. Returns the scale. This is
+/// the tail of [`conv_int8_q_into`], split out so the task scheduler's
+/// partitioned int8 conv can run it as the finish subtask once every
+/// GEMM row-range part has landed — bit-exact with the unpartitioned
+/// path because it is the very same code.
+pub fn requantize_image(
+    acc: &[i32],
+    o: usize,
+    out_plane: usize,
+    b: &[f32],
+    relu: bool,
+    dq: f32,
+    out_q: &mut [i8],
+) -> f32 {
+    debug_assert_eq!(acc.len(), o * out_plane);
+    debug_assert_eq!(out_q.len(), o * out_plane);
+    let bias = |oc: usize| b.get(oc).copied().unwrap_or(0.0);
+    let mut max = 0.0f32;
+    for oc in 0..o {
+        let row = &acc[oc * out_plane..(oc + 1) * out_plane];
+        let (mut amin, mut amax) = (i32::MAX, i32::MIN);
+        for &a in row {
+            amin = amin.min(a);
+            amax = amax.max(a);
+        }
+        let bv = bias(oc);
+        let hi = amax as f32 * dq + bv;
+        let lo = amin as f32 * dq + bv;
+        let chan = if relu { hi.max(0.0) } else { hi.abs().max(lo.abs()) };
+        max = max.max(chan);
+    }
+    let out_scale = max.max(1e-12) / 127.0;
+    let inv = 1.0 / out_scale;
+    for oc in 0..o {
+        let bv = bias(oc);
+        for p in 0..out_plane {
+            let mut v = acc[oc * out_plane + p] as f32 * dq + bv;
+            if relu && v < 0.0 {
+                v = 0.0;
+            }
+            out_q[oc * out_plane + p] = (v * inv).round().clamp(-127.0, 127.0) as i8;
+        }
+    }
+    out_scale
+}
+
 /// Out-param core: resolved padding and caller-provided staging buffers —
 /// `cols_f` (f32 patch matrix), `cols_q` (its int8 quantization, same
 /// element count) and `acc` (i32 accumulators, O*out_h*out_w). These are
@@ -178,45 +246,21 @@ pub fn conv_int8_q_into(
     debug_assert_eq!(cols_q.len(), kdim * out_plane);
     debug_assert_eq!(acc.len(), o * out_plane);
     debug_assert_eq!(out_q.len(), n * o * out_plane);
-    let bias = |oc: usize| b.get(oc).copied().unwrap_or(0.0);
     for ni in 0..n {
         let xi = &x_q[ni * c * h * wd..(ni + 1) * c * h * wd];
         im2col_i8(xi, c, h, wd, k, stride, pad, out_h, out_w, cols_q);
         gemm_i8(o, kdim, out_plane, &qw.data, cols_q, acc);
         let dq = x_scales[ni] * qw.scale;
-        // pass 1: this image's dynamic range (bias and ReLU applied,
-        // since that is what downstream consumers see). `a*dq + bv` is
-        // monotonic in `a` (dq > 0), so per channel only the i32 extremes
-        // matter — integer compares instead of a full f32 dequant pass.
-        let mut max = 0.0f32;
-        for oc in 0..o {
-            let row = &acc[oc * out_plane..(oc + 1) * out_plane];
-            let (mut amin, mut amax) = (i32::MAX, i32::MIN);
-            for &a in row {
-                amin = amin.min(a);
-                amax = amax.max(a);
-            }
-            let bv = bias(oc);
-            let hi = amax as f32 * dq + bv;
-            let lo = amin as f32 * dq + bv;
-            let chan = if relu { hi.max(0.0) } else { hi.abs().max(lo.abs()) };
-            max = max.max(chan);
-        }
-        let out_scale = max.max(1e-12) / 127.0;
-        let inv = 1.0 / out_scale;
-        // pass 2: requantize this image to its scale
         let obase = ni * o * out_plane;
-        for oc in 0..o {
-            let bv = bias(oc);
-            for p in 0..out_plane {
-                let mut v = acc[oc * out_plane + p] as f32 * dq + bv;
-                if relu && v < 0.0 {
-                    v = 0.0;
-                }
-                out_q[obase + oc * out_plane + p] = (v * inv).round().clamp(-127.0, 127.0) as i8;
-            }
-        }
-        out_scales[ni] = out_scale;
+        out_scales[ni] = requantize_image(
+            acc,
+            o,
+            out_plane,
+            b,
+            relu,
+            dq,
+            &mut out_q[obase..obase + o * out_plane],
+        );
     }
 }
 
@@ -285,6 +329,59 @@ mod tests {
         let mut c = vec![0i32; 4];
         gemm_i8(2, 2, 2, &a, &b, &mut c);
         assert_eq!(c, vec![19, 22, 43, 50]);
+    }
+
+    #[test]
+    fn gemm_i8_rows_union_equals_full() {
+        let (m, k, n) = (7usize, 5, 6);
+        let mut rng = Rng::new(9);
+        let a: Vec<i8> = (0..m * k).map(|_| rng.below(61) as i8 - 30).collect();
+        let b: Vec<i8> = (0..k * n).map(|_| rng.below(61) as i8 - 30).collect();
+        let mut full = vec![0i32; m * n];
+        gemm_i8(m, k, n, &a, &b, &mut full);
+        let mut parts = vec![99i32; m * n];
+        for (s, e) in [(0usize, 3usize), (3, 5), (5, 7)] {
+            gemm_i8_rows(k, n, s..e, &a, &b, &mut parts[s * n..e * n]);
+        }
+        assert_eq!(parts, full);
+    }
+
+    /// `conv_int8_q_into` composed from its pieces (im2col_i8 +
+    /// partitioned gemm rows + `requantize_image`) is bit-exact with the
+    /// fused call — the invariant the partitioned ConvInt8Q step needs.
+    #[test]
+    fn split_pipeline_matches_fused_conv_int8_q() {
+        let mut rng = Rng::new(17);
+        let x = Tensor::randn(&[1, 3, 7, 7], 1.0, &mut rng);
+        let w = Tensor::randn(&[5, 3, 3, 3], 0.5, &mut rng);
+        let b: Vec<f32> = (0..5).map(|i| 0.05 * i as f32).collect();
+        let qw = prepare_weights(&w);
+        let (x_q, x_scales) = quantize_per_image(&x);
+        let pad = resolve_pad(7, 7, (3, 3), (1, 1), Padding::Same);
+        let out_plane = 49;
+        let kdim = 27;
+        // fused
+        let mut cols_q = vec![0i8; kdim * out_plane];
+        let mut acc = vec![0i32; 5 * out_plane];
+        let mut fused_q = vec![0i8; 5 * out_plane];
+        let mut fused_s = vec![0.0f32; 1];
+        conv_int8_q_into(
+            &x_q, &[1, 3, 7, 7], &x_scales, &qw, &b, (1, 1), pad, true,
+            &mut cols_q, &mut acc, &mut fused_q, &[1, 5, 7, 7], &mut fused_s,
+        );
+        // split: prep, two row parts, finish
+        let mut cols2 = vec![0i8; kdim * out_plane];
+        let mut acc2 = vec![0i32; 5 * out_plane];
+        im2col_i8(&x_q, 3, 7, 7, (3, 3), (1, 1), pad, 7, 7, &mut cols2);
+        gemm_i8_rows(kdim, out_plane, 0..2, &qw.data, &cols2, &mut acc2[..2 * out_plane]);
+        gemm_i8_rows(kdim, out_plane, 2..5, &qw.data, &cols2, &mut acc2[2 * out_plane..]);
+        let mut split_q = vec![0i8; 5 * out_plane];
+        let split_s =
+            requantize_image(&acc2, 5, out_plane, &b, true, x_scales[0] * qw.scale, &mut split_q);
+        assert_eq!(cols2, cols_q);
+        assert_eq!(acc2, acc);
+        assert_eq!(split_q, fused_q);
+        assert_eq!(split_s, fused_s[0]);
     }
 
     #[test]

@@ -3,7 +3,7 @@
 //! Fig 15 uses Alexnet, Resnet50-V1, Googlenet-V1, Squeezenet-V1.1 and
 //! Mobilenet-V2; Fig 14 uses resnet18/50-based body-pose models; Fig 13
 //! uses the KWS family. Channel structure is faithful to the originals;
-//! spatial input is reduced (DESIGN.md §8: 64x64 for the ImageNet family,
+//! spatial input is reduced (DESIGN.md §9: 64x64 for the ImageNet family,
 //! 128x96 for pose) to keep single-thread from-scratch benches tractable —
 //! relative framework orderings are what the evaluation claims.
 

@@ -1,7 +1,7 @@
 //! Body-pose estimation models (Fig 14): resnet18/50 backbone + a
 //! composite-fields head in the PifPaf [67] style. The paper's models
 //! upsample with deconvolutions; LNE has no deconv layer, so the head uses
-//! 1x1/3x3 convs at backbone resolution (documented in DESIGN.md §8 — the
+//! 1x1/3x3 convs at backbone resolution (documented in DESIGN.md §9 — the
 //! compute profile, resnet-dominated, is preserved).
 
 use super::imagenet::resnet;

@@ -1,7 +1,7 @@
 //! Candidate evaluators for NAS (paper §5.3).
 //!
 //! `Surrogate`: a calibrated analytic accuracy model — deterministic, free,
-//! used by the default Table-4/5 bench (DESIGN.md §8 documents this
+//! used by the default Table-4/5 bench (DESIGN.md §9 documents this
 //! substitution for the paper's hundreds of trained candidates). The model
 //! encodes the paper's own findings: accuracy saturates in FLOPs, uniform
 //! channel stacks (the seed) carry redundancy, DS variants trade a few
@@ -133,9 +133,12 @@ pub fn lne_prepared(
 /// candidate, one `ExecPlan` is compiled for the f32-baseline assignment
 /// and replayed `reps` times against a shared arena (median reported) —
 /// the plan-once/run-hot protocol the engine refactor enables. With
-/// [`WithLneLatency::with_threads`] the replays run wavefront-parallel on
-/// a worker pool, so the search scores candidates at the parallelism the
-/// deployment will actually use.
+/// [`WithLneLatency::with_threads`] the replays run on a worker pool
+/// through the dep-counted work-stealing scheduler
+/// (`ExecPlan::replay_tasked`) — including intra-op GEMM partitioning on
+/// the chain-shaped KWS candidates, whose width-1 waves a barrier replay
+/// could never spread over the pool — so the search scores candidates at
+/// the parallelism the deployment will actually use.
 pub struct WithLneLatency<E> {
     pub inner: E,
     pub platform: Platform,
@@ -179,7 +182,7 @@ impl<E: ArchEvaluator> ArchEvaluator for WithLneLatency<E> {
         );
         let times: Vec<f64> = (0..self.reps)
             .map(|_| match &self.pool {
-                Some(pool) => plan.replay_on(&x, &mut arena, pool).total_ms,
+                Some(pool) => plan.replay_tasked(&x, &mut arena, pool).total_ms,
                 None => plan.replay(&x, &mut arena).total_ms,
             })
             .collect();

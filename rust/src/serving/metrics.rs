@@ -34,6 +34,15 @@ struct Inner {
     wave_width: Welford,
     /// Worker-pool jobs already in flight when a replay dispatched.
     pool_occupancy: Welford,
+    /// Tasks the scheduler's workers stole from other deques, per replay
+    /// (work-stealing replays only; barrier/sequential replays report 0).
+    steals: Welford,
+    /// Total stolen tasks across all replays.
+    steals_total: u64,
+    /// Intra-op GEMM subtasks partitioned steps fanned out, per replay.
+    subtasks: Welford,
+    /// Total partitioned subtasks across all replays.
+    subtasks_total: u64,
 }
 
 impl ServingMetrics {
@@ -58,14 +67,29 @@ impl ServingMetrics {
     }
 
     /// Record one plan replay on the shared worker pool: the plan's
-    /// wavefront count and widest wavefront, plus how many pool jobs were
-    /// already in flight when this replay dispatched.
-    pub fn record_replay(&self, waves: usize, max_width: usize, occupancy: usize) {
+    /// wavefront count and widest wavefront, how many pool jobs were
+    /// already in flight when this replay dispatched (scheduler
+    /// occupancy), and — for the work-stealing tasked replay — how many
+    /// tasks workers stole and how many intra-op GEMM subtasks
+    /// partitioned steps fanned out (both 0 on barrier/sequential
+    /// replays).
+    pub fn record_replay(
+        &self,
+        waves: usize,
+        max_width: usize,
+        occupancy: usize,
+        steals: usize,
+        subtasks: usize,
+    ) {
         let mut i = self.inner.lock().unwrap();
         i.replays += 1;
         i.waves.push(waves as f64);
         i.wave_width.push(max_width as f64);
         i.pool_occupancy.push(occupancy as f64);
+        i.steals.push(steals as f64);
+        i.steals_total += steals as u64;
+        i.subtasks.push(subtasks as f64);
+        i.subtasks_total += subtasks as u64;
     }
 
     pub fn snapshot(&self) -> Json {
@@ -93,6 +117,11 @@ impl ServingMetrics {
             ("wave_width_max", Json::num(i.wave_width.max)),
             ("pool_occupancy_mean", Json::num(i.pool_occupancy.mean())),
             ("pool_occupancy_max", Json::num(i.pool_occupancy.max)),
+            ("steals_total", Json::from(i.steals_total as i64)),
+            ("steals_mean", Json::num(i.steals.mean())),
+            ("subtasks_total", Json::from(i.subtasks_total as i64)),
+            ("subtasks_mean", Json::num(i.subtasks.mean())),
+            ("subtasks_max", Json::num(i.subtasks.max)),
         ])
     }
 }
@@ -121,13 +150,18 @@ mod tests {
     #[test]
     fn replay_wavefront_and_occupancy_aggregate() {
         let m = ServingMetrics::default();
-        m.record_replay(12, 4, 0);
-        m.record_replay(12, 4, 3);
+        m.record_replay(12, 4, 0, 2, 8);
+        m.record_replay(12, 4, 3, 4, 0);
         let s = m.snapshot();
         assert_eq!(s.get("replays").as_i64(), Some(2));
         assert!((s.get("wave_width_max").as_f64().unwrap() - 4.0).abs() < 1e-9);
         assert!((s.get("waves_mean").as_f64().unwrap() - 12.0).abs() < 1e-9);
         assert!((s.get("pool_occupancy_mean").as_f64().unwrap() - 1.5).abs() < 1e-9);
         assert!((s.get("pool_occupancy_max").as_f64().unwrap() - 3.0).abs() < 1e-9);
+        // scheduler steal + partitioned-subtask counters
+        assert_eq!(s.get("steals_total").as_i64(), Some(6));
+        assert!((s.get("steals_mean").as_f64().unwrap() - 3.0).abs() < 1e-9);
+        assert_eq!(s.get("subtasks_total").as_i64(), Some(8));
+        assert!((s.get("subtasks_max").as_f64().unwrap() - 8.0).abs() < 1e-9);
     }
 }

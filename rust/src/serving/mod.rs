@@ -9,9 +9,10 @@
 //! into the backend's compiled batch buckets with a flush deadline; LNE
 //! sessions check their per-bucket arenas out of a cross-model
 //! [`ArenaPool`] (largest bucket first, so compatible profiles borrow the
-//! larger arena) and replay on the router's one shared [`WorkerPool`] —
-//! branchy plans execute wavefront-parallel (DESIGN.md §6) with total
-//! compute threads bounded by the machine, not by registered models.
+//! larger arena) and replay on the router's one shared [`WorkerPool`]
+//! through the dep-counted work-stealing scheduler with intra-op GEMM
+//! partitioning (DESIGN.md §8) — total compute threads stay bounded by
+//! the machine, not by registered models.
 
 pub mod batcher;
 pub mod metrics;
@@ -319,5 +320,76 @@ mod tests {
         assert_eq!(pred2.class_id, pred.class_id);
         assert_eq!(pred2.class, names[pred2.class_id]);
         assert!(router.infer(Some("nope"), vec![0.0; 72]).is_err());
+    }
+
+    /// Scheduler observability: a served chain of large convs at batch 1
+    /// partitions its GEMMs across the router's 4-worker pool, and the
+    /// router's metrics expose the scheduler's occupancy, steal and
+    /// partitioned-subtask counters — with predictions bit-identical to a
+    /// single-threaded router.
+    #[test]
+    fn router_metrics_expose_scheduler_steals_and_subtasks() {
+        use crate::lne::graph::{Graph, LayerKind, Padding, PoolKind};
+        use crate::lne::platform::Platform;
+        use crate::lne::plugin::{applicable, Assignment, ConvImpl};
+
+        let mut g = Graph::new("bigserve", (8, 16, 16));
+        g.push("c1", LayerKind::Conv { k: (3, 3), stride: (1, 1), pad: Padding::Same, relu_fused: true }, 32);
+        g.push("c2", LayerKind::Conv { k: (3, 3), stride: (1, 1), pad: Padding::Same, relu_fused: true }, 32);
+        g.push("gap", LayerKind::Pool { kind: PoolKind::Avg, k: 0, stride: 1, pad: 0, global: true }, 0);
+        g.push("fc", LayerKind::Fc { relu_fused: false }, 4);
+        let w = crate::models::random_weights(&g, 3);
+        let p = Arc::new(Prepared::new(g, w, Platform::pi4()).unwrap());
+        let mut a = Assignment::default_for(&p.graph);
+        for (i, l) in p.graph.layers.iter().enumerate() {
+            let ch = applicable(&l.kind, &p.platform);
+            if ch.contains(&ConvImpl::GemmBlocked) {
+                a.choices[i] = Some(ConvImpl::GemmBlocked);
+            }
+        }
+        // both conv GEMMs clear the partition threshold at 4 workers
+        let plan = p.plan(&a, 1).unwrap();
+        let expected_subtasks: usize =
+            plan.partition_parts(4).iter().map(|&x| x as usize).sum();
+        assert!(expected_subtasks > 0, "fixture must trigger partitioning");
+
+        let sample = vec![0.3f32; 8 * 16 * 16];
+        let mut reference: Option<Prediction> = None;
+        for threads in [1usize, 4] {
+            let mut router = ModelRouter::with_threads(threads);
+            router
+                .register_lne(
+                    "big",
+                    Arc::clone(&p),
+                    a.clone(),
+                    &[1],
+                    &[],
+                    BatcherConfig { max_wait_ms: 1.0, ..Default::default() },
+                )
+                .unwrap();
+            let pred = router.infer(None, sample.clone()).unwrap();
+            match reference.as_ref() {
+                Some(want) => {
+                    assert_eq!(pred.class_id, want.class_id);
+                    assert_eq!(pred.scores, want.scores, "threads={threads} diverged");
+                }
+                None => reference = Some(pred),
+            }
+            let snap = router.metrics.snapshot();
+            assert_eq!(snap.get("replays").as_i64(), Some(1));
+            assert!(snap.get("pool_occupancy_mean").as_f64().is_some());
+            if threads == 1 {
+                assert_eq!(snap.get("subtasks_total").as_i64(), Some(0));
+                assert_eq!(snap.get("steals_total").as_i64(), Some(0));
+            } else {
+                // the partition plan is a pure function of plan + pool
+                // size, so the recorded subtask count is deterministic
+                assert_eq!(
+                    snap.get("subtasks_total").as_i64(),
+                    Some(expected_subtasks as i64)
+                );
+                assert!(snap.get("steals_total").as_i64().unwrap() >= 0);
+            }
+        }
     }
 }

@@ -1,8 +1,10 @@
 //! The shared serving worker pool (ROADMAP remnant from PR 2): one
 //! fixed-size pool per [`ModelRouter`](super::ModelRouter) instead of
-//! compute threads per model. LNE sessions dispatch their wavefront-
-//! parallel replays here (`ExecPlan::replay_on`), so total compute
-//! parallelism is bounded by the machine, not by models × branches.
+//! compute threads per model. LNE sessions dispatch their replays here
+//! through the dep-counted work-stealing scheduler
+//! (`ExecPlan::replay_tasked`; the barrier `replay_on` remains the
+//! parity oracle), so total compute parallelism is bounded by the
+//! machine, not by models × branches.
 
 use crate::util::threadpool::ThreadPool;
 

@@ -169,10 +169,14 @@ struct LneBucket {
 /// LNE backend: one `ExecPlan` per batch bucket, compiled at registration
 /// (plan once, run hot), arenas checked out of a cross-model [`ArenaPool`]
 /// largest bucket first, so smaller buckets borrow the big bucket's arena
-/// (compatible-profile lending). Steady-state inference performs zero heap
-/// allocation in the execution hot loop; replays on a shared arena
-/// serialize on its lock and dispatch their wavefront-parallel steps onto
-/// the router's shared [`WorkerPool`] instead of a thread per model.
+/// (compatible-profile lending). Steady-state inference performs no
+/// per-layer heap allocation in the execution hot loop (the tasked
+/// scheduler allocates its O(steps) counters once per replay); replays on
+/// a shared arena serialize on its lock and dispatch onto the router's shared
+/// [`WorkerPool`] instead of a thread per model — through the
+/// dep-counted work-stealing scheduler (`ExecPlan::replay_tasked`), so
+/// deep branches run ahead of shallow ones and narrow ready sets split
+/// large GEMMs across idle workers.
 pub struct LneSession {
     prepared: Arc<Prepared>,
     assignment: Assignment,
@@ -303,19 +307,31 @@ impl InferenceSession for LneSession {
             *v = 0.0;
         }
         let occupancy = self.workers.active();
-        let result = {
+        let (result, sched) = {
             // recover from poisoning: the arena holds no invariants a fresh
             // replay doesn't rewrite, and one model's panic must not
             // permanently fail every model lending the same arena
             let mut arena = b.arena.lock().unwrap_or_else(|e| e.into_inner());
             if self.workers.threads() > 1 {
-                b.plan.replay_on(&b.staging, &mut arena, self.workers.inner())
+                // dep-counted work-stealing scheduler: no wave barriers,
+                // narrow ready sets split large GEMMs across the pool
+                b.plan
+                    .replay_tasked_stats(&b.staging, &mut arena, self.workers.inner())
             } else {
-                b.plan.replay(&b.staging, &mut arena)
+                (
+                    b.plan.replay(&b.staging, &mut arena),
+                    crate::lne::planner::SchedStats::default(),
+                )
             }
         };
         if let Some(m) = &self.metrics {
-            m.record_replay(b.plan.wave_count(), b.plan.max_wave_width(), occupancy);
+            m.record_replay(
+                b.plan.wave_count(),
+                b.plan.max_wave_width(),
+                occupancy,
+                sched.steals,
+                sched.subtasks,
+            );
         }
         let row_len = result.output.len() / b.batch;
         let preds = (0..inputs.len())

@@ -89,9 +89,11 @@ impl ThreadPool {
         if n == 0 {
             return;
         }
-        if self.size == 1 {
-            // one worker executes sequentially anyway; run inline and skip
-            // the queue round-trip
+        if self.size == 1 || n == 1 {
+            // one worker executes sequentially anyway, and a single job
+            // gains nothing from a worker: run inline and skip the queue
+            // round-trip (the width-1 case the task scheduler hits on
+            // every pure-chain stretch)
             for i in 0..n {
                 f(i);
             }
@@ -171,6 +173,13 @@ impl Drop for ThreadPool {
 /// Global helper for quick parallel-for without owning a pool.
 pub fn parallel_for<F: Fn(usize) + Send + Sync>(n: usize, threads: usize, f: F) {
     if n == 0 {
+        return;
+    }
+    if threads <= 1 || n == 1 {
+        // degenerate widths run fully inline: no thread::scope, no spawn
+        for i in 0..n {
+            f(i);
+        }
         return;
     }
     let threads = threads.max(1).min(n);
@@ -264,6 +273,37 @@ mod tests {
             ok.fetch_add(1, Ordering::SeqCst);
         });
         assert_eq!(ok.load(Ordering::SeqCst), 3);
+    }
+
+    /// Width-1 dispatches run inline: no queue round-trip, so they are
+    /// legal even from a worker thread of the same pool (the scheduler's
+    /// single-task case) and leave the in-flight gauge untouched.
+    #[test]
+    fn scope_run_single_job_runs_inline_on_caller() {
+        let pool = ThreadPool::new(4);
+        let caller = std::thread::current().id();
+        let ran_on = Mutex::new(None);
+        pool.scope_run(1, |i| {
+            assert_eq!(i, 0);
+            *ran_on.lock().unwrap() = Some(std::thread::current().id());
+        });
+        assert_eq!(*ran_on.lock().unwrap(), Some(caller));
+        assert_eq!(pool.active(), 0);
+    }
+
+    #[test]
+    fn parallel_for_degenerate_widths_run_inline() {
+        let caller = std::thread::current().id();
+        let seen = Mutex::new(Vec::new());
+        parallel_for(1, 8, |i| {
+            assert_eq!(std::thread::current().id(), caller);
+            seen.lock().unwrap().push(i);
+        });
+        parallel_for(5, 1, |i| {
+            assert_eq!(std::thread::current().id(), caller);
+            seen.lock().unwrap().push(10 + i);
+        });
+        assert_eq!(*seen.lock().unwrap(), vec![0, 10, 11, 12, 13, 14]);
     }
 
     #[test]
