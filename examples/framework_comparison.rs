@@ -14,8 +14,8 @@ use bonseyes::util::rng::Rng;
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let model = args.first().map(|s| s.as_str()).unwrap_or("squeezenet");
-    let platform = Platform::by_name(args.get(1).map(|s| s.as_str()).unwrap_or("pi4"))
-        .ok_or_else(|| anyhow::anyhow!("unknown platform"))?;
+    let platform = Platform::by_name_or_err(args.get(1).map(|s| s.as_str()).unwrap_or("pi4"))
+        .map_err(|e| anyhow::anyhow!(e))?;
     let (g, w) = models::by_name(model, 0)
         .ok_or_else(|| anyhow::anyhow!("unknown model {model}; try one of {:?}",
                                        models::IMAGENET_MODELS))?;

@@ -1,10 +1,13 @@
 //! §Perf probe: GEMM throughput across shapes (L3 hot path).
-use bonseyes::lne::primitives::gemm::{gemm_blocked, gemm_ref, Blocking};
+use bonseyes::lne::primitives::gemm::{
+    bpack_words, gemm_blocked, gemm_packed, gemm_ref, pack_a, Blocking, PackParams,
+};
 use bonseyes::util::rng::Rng;
 use std::time::Instant;
 
 fn main() {
     let shapes = [(96usize, 363usize, 1024usize), (256, 2304, 256), (64, 576, 4096), (1000, 512, 1)];
+    let params = PackParams::default();
     let mut rng = Rng::new(0);
     for (m, k, n) in shapes {
         let a: Vec<f32> = (0..m * k).map(|_| rng.normal_f32()).collect();
@@ -20,7 +23,13 @@ fn main() {
         };
         let t_ref = time(&mut || gemm_ref(m, k, n, &a, &b, None, &mut c));
         let t_blk = time(&mut || gemm_blocked(m, k, n, &a, &b, None, &mut c, Blocking::default()));
-        println!("{m}x{k}x{n}: ref {:.2} GF/s, blocked {:.2} GF/s ({:.2}x)",
-                 flops / t_ref / 1e9, flops / t_blk / 1e9, t_ref / t_blk);
+        let pa = pack_a(m, k, &a, params.mr);
+        let mut bpack = vec![0.0f32; bpack_words(params)];
+        let t_pack = time(&mut || {
+            let _ = gemm_packed(k, n, 0..m, &pa, &b, None, &mut c, params, &mut bpack);
+        });
+        println!("{m}x{k}x{n}: ref {:.2} GF/s, blocked {:.2} GF/s ({:.2}x), packed {:.2} GF/s ({:.2}x)",
+                 flops / t_ref / 1e9, flops / t_blk / 1e9, t_ref / t_blk,
+                 flops / t_pack / 1e9, t_blk / t_pack);
     }
 }

@@ -1,0 +1,135 @@
+//! Per-platform microkernel autotune (paper Figs 13-15: per-platform
+//! kernel choice is where LPDNN's edge comes from; EdgeMark makes the same
+//! observation across embedded toolchains).
+//!
+//! A small deterministic sweep picks the packed-GEMM tile parameters
+//! `(mc, kc, nc, mr, nr)` for a platform profile and caches the winner in
+//! a process-wide map keyed by `Platform::name` (through `Platform::all()`
+//! names — the same namespace the CLI validates against). Two invariants
+//! keep this safe:
+//!
+//! 1. **`kc` is pinned to the profile's `Blocking::kc`.** Of the five tile
+//!    parameters, only `kc` affects each output element's FP accumulation
+//!    order (one single-accumulator partial per kc-block, ascending k).
+//!    Pinning it means autotune can only change *speed*, never *bits*, so
+//!    results are reproducible across hosts and runs even though the sweep
+//!    itself times real execution.
+//! 2. **Candidate sets are disjoint per cache class.** Small-cache
+//!    profiles (pi3-class, `blocking.nc <= 64`) only see `nc <= 64`
+//!    candidates; large-cache profiles only see `nc >= 128`. pi3 and pi4
+//!    therefore structurally diverge regardless of what the timing says on
+//!    the (single) host CPU the simulation runs on.
+//!
+//! The cache lock is held across the sweep: the first caller for a profile
+//! does the timing while any racing callers wait and then read the cached
+//! winner, so one process always uses one parameter set per profile.
+
+use super::platform::Platform;
+use super::primitives::gemm::{bpack_words, gemm_packed, pack_a, PackParams};
+use crate::testing::randn_vec;
+use crate::util::rng::Rng;
+use std::collections::HashMap;
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+fn cache() -> &'static Mutex<HashMap<String, PackParams>> {
+    static CACHE: OnceLock<Mutex<HashMap<String, PackParams>>> = OnceLock::new();
+    CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Candidate tile tuples for a profile. `kc` is always the profile's
+/// blocking `kc` (see module doc); the rest scale with the cache class.
+pub fn candidates(p: &Platform) -> Vec<PackParams> {
+    let kc = p.blocking.kc;
+    if p.blocking.nc <= 64 {
+        // small-cache class: keep B panels and the C tile footprint tight
+        vec![
+            PackParams { mc: 32, kc, nc: 64, mr: 4, nr: 8 },
+            PackParams { mc: 64, kc, nc: 64, mr: 8, nr: 8 },
+            PackParams { mc: 32, kc, nc: 32, mr: 4, nr: 4 },
+        ]
+    } else {
+        // large-cache class: wider panels amortize the pack traffic
+        vec![
+            PackParams { mc: 64, kc, nc: 256, mr: 4, nr: 8 },
+            PackParams { mc: 64, kc, nc: 128, mr: 8, nr: 8 },
+            PackParams { mc: 128, kc, nc: 256, mr: 4, nr: 16 },
+        ]
+    }
+}
+
+/// Tile parameters for a profile: cached per `Platform::name`, swept once
+/// per process. Deterministic in-process (first writer wins under the
+/// lock); bit-identical across processes because every candidate shares
+/// `kc` (the only numerics-relevant parameter).
+pub fn pack_params_for(p: &Platform) -> PackParams {
+    let mut map = cache().lock().unwrap();
+    if let Some(params) = map.get(&p.name) {
+        return *params;
+    }
+    let best = sweep(&candidates(p));
+    map.insert(p.name.clone(), best);
+    best
+}
+
+/// Time each candidate on a synthetic conv-shaped GEMM; minimum of three
+/// timed reps wins, first candidate wins ties (stable ordering).
+fn sweep(cands: &[PackParams]) -> PackParams {
+    let (m, n) = (64usize, 256usize);
+    let k = cands[0].kc.min(256);
+    let mut rng = Rng::new(0xA070);
+    let a = randn_vec(&mut rng, m * k, 1.0);
+    let b = randn_vec(&mut rng, k * n, 1.0);
+    let mut c = vec![0.0f32; m * n];
+    let mut best = cands[0];
+    let mut best_t = f64::INFINITY;
+    for &cand in cands {
+        let pa = pack_a(m, k, &a, cand.mr);
+        let mut bpack = vec![0.0f32; bpack_words(cand)];
+        // warm-up rep outside the clock
+        gemm_packed(k, n, 0..m, &pa, &b, None, &mut c, cand, &mut bpack);
+        let mut t = f64::INFINITY;
+        for _ in 0..3 {
+            let t0 = Instant::now();
+            gemm_packed(k, n, 0..m, &pa, &b, None, &mut c, cand, &mut bpack);
+            t = t.min(t0.elapsed().as_secs_f64());
+        }
+        if t < best_t {
+            best_t = t;
+            best = cand;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pi3_and_pi4_structurally_diverge() {
+        let p3 = pack_params_for(&Platform::pi3());
+        let p4 = pack_params_for(&Platform::pi4());
+        assert!(p3.nc <= 64, "pi3-class candidates are all tight: {p3:?}");
+        assert!(p4.nc >= 128, "pi4-class candidates are all wide: {p4:?}");
+        assert_eq!(p3.kc, Platform::pi3().blocking.kc);
+        assert_eq!(p4.kc, Platform::pi4().blocking.kc);
+    }
+
+    #[test]
+    fn cache_is_deterministic_in_process() {
+        let first = pack_params_for(&Platform::pi4());
+        for _ in 0..3 {
+            assert_eq!(pack_params_for(&Platform::pi4()), first);
+        }
+    }
+
+    #[test]
+    fn every_candidate_pins_profile_kc() {
+        for p in Platform::all() {
+            for c in candidates(&p) {
+                assert_eq!(c.kc, p.blocking.kc, "{}: {c:?}", p.name);
+            }
+        }
+    }
+}

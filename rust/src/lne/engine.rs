@@ -10,13 +10,15 @@ use super::platform::Platform;
 use super::plugin::{applicable, Assignment, ConvImpl};
 use super::primitives::depthwise::conv_depthwise;
 use super::primitives::direct::conv_direct;
-use super::primitives::f16conv::{self, conv_f16};
-use super::primitives::im2col::{conv_im2col, fc, GemmImpl};
-use super::primitives::int8::{self, conv_int8};
+use super::primitives::f16conv;
+use super::primitives::gemm::{pack_a, PackParams, PackedA};
+use super::primitives::im2col::{conv_im2col, conv_im2col_packed, fc, GemmImpl};
+use super::primitives::int8::{self, conv_int8, pack_a_i8, PackedAI8};
 use super::primitives::pool::{global_pool, lrn, pool, softmax};
 use super::primitives::winograd::{conv_winograd, transform_weights};
-use crate::tensor::{HTensor, QTensor, Tensor};
+use crate::tensor::{QTensor, Tensor};
 use std::collections::HashMap;
+use std::sync::Arc;
 use std::time::Instant;
 
 const BN_EPS: f32 = 1e-5;
@@ -30,7 +32,15 @@ pub struct Prepared {
     pub platform: Platform,
     pub(crate) wino: HashMap<usize, Tensor>,
     pub(crate) quant: HashMap<usize, QTensor>,
-    pub(crate) half: HashMap<usize, HTensor>,
+    /// Packed A panels for the f32/i8/f16 GEMM paths, frozen here (once
+    /// per `Prepared`) and Arc-shared into every compiled `Step` — the
+    /// same lifecycle as the winograd/int8/f16 weight variants above.
+    pub(crate) packed: HashMap<usize, Arc<PackedA>>,
+    pub(crate) packed_q: HashMap<usize, Arc<PackedAI8>>,
+    pub(crate) packed_h: HashMap<usize, Arc<PackedA>>,
+    /// Autotuned tile parameters for this platform (see `lne::autotune`);
+    /// `packed*` panels above use its `mr`.
+    pub(crate) pack_params: PackParams,
     /// consumers[v] = how many layers consume value v.
     consumers: Vec<usize>,
 }
@@ -55,23 +65,34 @@ pub struct RunResult {
 impl Prepared {
     pub fn new(graph: Graph, weights: Weights, platform: Platform) -> Result<Prepared, String> {
         graph.infer_shapes()?; // validate topology early
+        let pack_params = platform.pack_params();
         let mut wino = HashMap::new();
         let mut quant = HashMap::new();
-        let mut half = HashMap::new();
+        let mut packed = HashMap::new();
+        let mut packed_q = HashMap::new();
+        let mut packed_h = HashMap::new();
         for (i, layer) in graph.layers.iter().enumerate() {
             if let LayerKind::Conv { .. } = layer.kind {
                 let w = weights
                     .get(&layer.name)
                     .ok_or_else(|| format!("missing weights for {}", layer.name))?;
                 let choices = applicable(&layer.kind, &platform);
+                let o = w[0].shape[0];
+                let kdim: usize = w[0].shape[1..].iter().product();
                 if choices.contains(&ConvImpl::Winograd) {
                     wino.insert(i, transform_weights(&w[0]));
                 }
+                if choices.contains(&ConvImpl::GemmBlocked) {
+                    packed.insert(i, Arc::new(pack_a(o, kdim, &w[0].data, pack_params.mr)));
+                }
                 if choices.contains(&ConvImpl::Int8Gemm) {
-                    quant.insert(i, int8::prepare_weights(&w[0]));
+                    let q = int8::prepare_weights(&w[0]);
+                    packed_q.insert(i, Arc::new(pack_a_i8(o, kdim, &q.data, pack_params.mr)));
+                    quant.insert(i, q);
                 }
                 if choices.contains(&ConvImpl::F16Gemm) {
-                    half.insert(i, f16conv::prepare_weights(&w[0]));
+                    let h = f16conv::prepare_weights(&w[0]);
+                    packed_h.insert(i, Arc::new(f16conv::prepare_packed_weights(&h, pack_params.mr)));
                 }
             }
         }
@@ -82,7 +103,18 @@ impl Prepared {
             }
         }
         *consumers.last_mut().unwrap() += 1; // final output survives
-        Ok(Prepared { graph, weights, platform, wino, quant, half, consumers })
+        Ok(Prepared {
+            graph,
+            weights,
+            platform,
+            wino,
+            quant,
+            packed,
+            packed_q,
+            packed_h,
+            pack_params,
+            consumers,
+        })
     }
 
     fn wblobs(&self, layer: &Layer) -> &[Tensor] {
@@ -206,19 +238,21 @@ impl Prepared {
             }
         };
         match &layer.kind {
-            LayerKind::Conv { stride, pad, relu_fused, .. } => {
+            LayerKind::Conv { k, stride, pad, relu_fused } => {
                 let x = values[layer.inputs[0]].as_ref().expect("alive");
                 let w = self.wblobs(layer);
                 let bias: &[f32] = if w.len() > 1 { &w[1].data } else { &[] };
-                let blk = self.platform.blocking;
                 match choice.unwrap_or(ConvImpl::GemmRef) {
                     ConvImpl::Direct => conv_direct(x, &w[0], bias, *stride, *pad, *relu_fused),
                     ConvImpl::GemmRef => {
                         conv_im2col(x, &w[0], bias, *stride, *pad, GemmImpl::Reference, *relu_fused)
                     }
-                    ConvImpl::GemmBlocked => conv_im2col(
-                        x, &w[0], bias, *stride, *pad, GemmImpl::Blocked(blk), *relu_fused,
-                    ),
+                    ConvImpl::GemmBlocked => {
+                        let pa = self.packed.get(&idx).expect("packed weights prepared");
+                        conv_im2col_packed(
+                            x, pa, *k, bias, *stride, *pad, self.pack_params, *relu_fused,
+                        )
+                    }
                     ConvImpl::Winograd => {
                         let u = self.wino.get(&idx).expect("winograd weights prepared");
                         conv_winograd(x, u, bias, *pad, *relu_fused)
@@ -228,8 +262,10 @@ impl Prepared {
                         conv_int8(x, q, bias, *stride, *pad, *relu_fused)
                     }
                     ConvImpl::F16Gemm => {
-                        let h = self.half.get(&idx).expect("f16 weights prepared");
-                        conv_f16(x, h, bias, *stride, *pad, *relu_fused, blk)
+                        let pa = self.packed_h.get(&idx).expect("packed f16 weights prepared");
+                        f16conv::conv_f16_packed(
+                            x, pa, *k, bias, *stride, *pad, *relu_fused, self.pack_params,
+                        )
                     }
                 }
             }

@@ -9,6 +9,7 @@
 //! that compiles and replays plans (`engine`), and the int8 sensitivity
 //! explorer (`quant_explore`).
 
+pub mod autotune;
 pub mod engine;
 pub mod graph;
 pub mod passes;

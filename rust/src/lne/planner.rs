@@ -42,15 +42,20 @@ use super::graph::{resolve_pad, LayerKind, PoolKind};
 use super::plugin::{Assignment, ConvImpl};
 use super::primitives::depthwise::conv_depthwise_into;
 use super::primitives::direct::conv_direct_into;
-use super::primitives::f16conv::conv_f16_into;
-use super::primitives::gemm::{gemm_blocked_rows, gemm_ref_rows, Blocking};
-use super::primitives::im2col::{conv_im2col_into, fc_into, im2col, GemmImpl};
+use super::primitives::f16conv::conv_f16_packed_into;
+use super::primitives::gemm::{
+    bpack_words, gemm_blocked_rows, gemm_packed, gemm_ref_rows, PackParams, PackedA,
+};
+use super::primitives::im2col::{
+    conv_im2col_into, conv_im2col_packed_into, fc_into, im2col, GemmImpl,
+};
 use super::primitives::int8::{
-    conv_int8_into, conv_int8_q_into, gemm_i8_rows, im2col_i8, requantize_image,
+    bpack_bytes, conv_int8_into, conv_int8_q_packed_into, gemm_i8_packed, im2col_i8,
+    requantize_image, PackedAI8,
 };
 use super::primitives::pool::{global_pool_into, lrn_into, pool_into, softmax_into};
 use super::primitives::winograd::{self, conv_winograd_into};
-use crate::tensor::{HTensor, QTensor, Tensor, TensorView, TensorViewMut};
+use crate::tensor::{QTensor, Tensor, TensorView, TensorViewMut};
 use crate::util::threadpool::ThreadPool;
 use std::collections::VecDeque;
 use std::ops::Range;
@@ -148,6 +153,10 @@ pub enum Op {
         stride: (usize, usize),
         pad: (usize, usize),
         gemm: GemmImpl,
+        /// Weight panels packed once at compile time (`Prepared::new`),
+        /// shared by every plan of the same `Prepared`. `Some` iff `gemm`
+        /// is `GemmImpl::Packed`.
+        pa: Option<Arc<PackedA>>,
         relu: bool,
         /// Patch-matrix scratch (f32 lane).
         cols: Span,
@@ -173,14 +182,18 @@ pub enum Op {
         acc: Span,
     },
     ConvF16 {
-        hw: HTensor,
+        /// Weights dequantized from f16 and packed into MR panels once at
+        /// compile time (`f16conv::prepare_packed_weights`), shared via
+        /// `Prepared`. The packed path needs no per-replay weight staging
+        /// lane — `wf` is gone; B panels pack into the arena's pack lane.
+        pa: Arc<PackedA>,
+        k: (usize, usize),
         bias: Vec<f32>,
         stride: (usize, usize),
         pad: (usize, usize),
         relu: bool,
-        blk: Blocking,
-        /// f32 weight staging + patch matrix (f32 lane).
-        wf: Span,
+        params: PackParams,
+        /// Patch matrix (f32 lane).
         cols: Span,
     },
     /// i8-resident int8 conv (int8→int8 lanes, DESIGN.md §7): input is an
@@ -190,6 +203,9 @@ pub enum Op {
     /// interior edges.
     ConvInt8Q {
         qw: QTensor,
+        /// Quantized weight panels packed once at compile time.
+        pa: Arc<PackedAI8>,
+        params: PackParams,
         bias: Vec<f32>,
         stride: (usize, usize),
         pad: (usize, usize),
@@ -239,7 +255,7 @@ impl Op {
                 ([Some(*cols_f), None], Some(*cols_q), Some(*acc))
             }
             Op::ConvInt8Q { cols_q, acc, .. } => ([None, None], Some(*cols_q), Some(*acc)),
-            Op::ConvF16 { wf, cols, .. } => ([Some(*wf), Some(*cols)], None, None),
+            Op::ConvF16 { cols, .. } => ([Some(*cols), None], None, None),
             _ => ([None, None], None, None),
         }
     }
@@ -296,6 +312,14 @@ pub struct ExecPlan {
     pub i8_bytes: usize,
     pub i32_words: usize,
     pub scale_slots: usize,
+    /// Per-worker B-panel pack lane strides: the largest packed-GEMM
+    /// B-block footprint any step needs (`bpack_words`/`bpack_bytes` of
+    /// its tile parameters), in f32 words / i8 bytes. Each replay unit
+    /// (wavefront slot or tasked worker) gets its own stride-sized region
+    /// of the arena's pack lanes, sized once per plan — steady-state
+    /// replays never allocate.
+    pub pack_f_words: usize,
+    pub pack_q_bytes: usize,
 }
 
 /// The preallocated execution arena: one buffer per lane. All
@@ -307,6 +331,13 @@ pub struct Arena {
     q: Vec<i8>,
     acc: Vec<i32>,
     scales: Vec<f32>,
+    /// Per-worker B-panel pack lanes for the packed GEMM kernels: `units`
+    /// regions of `plan.pack_f_words` f32s / `plan.pack_q_bytes` i8s each
+    /// (unit = wavefront slot or tasked worker id). Private per unit, so
+    /// they sit outside the span-conflict analysis and the planned
+    /// high-water marks.
+    pack_f: Vec<f32>,
+    pack_q: Vec<i8>,
 }
 
 impl Arena {
@@ -317,6 +348,14 @@ impl Arena {
     /// Size the arena for a plan (a no-op when already large enough, so a
     /// long-lived arena can serve many plans without churn).
     pub fn ensure(&mut self, plan: &ExecPlan) {
+        self.ensure_units(plan, 1);
+    }
+
+    /// `ensure` with `units` independent pack-lane regions (sequential
+    /// replay needs 1; parallel replays need one per concurrent worker).
+    /// Lanes only grow, so arena capacity is stable across steady-state
+    /// replays of a plan.
+    pub fn ensure_units(&mut self, plan: &ExecPlan, units: usize) {
         if self.f.len() < plan.f32_words {
             self.f.resize(plan.f32_words, 0.0);
         }
@@ -329,6 +368,13 @@ impl Arena {
         if self.scales.len() < plan.scale_slots {
             self.scales.resize(plan.scale_slots, 0.0);
         }
+        let units = units.max(1);
+        if self.pack_f.len() < plan.pack_f_words * units {
+            self.pack_f.resize(plan.pack_f_words * units, 0.0);
+        }
+        if self.pack_q.len() < plan.pack_q_bytes * units {
+            self.pack_q.resize(plan.pack_q_bytes * units, 0);
+        }
     }
 
     pub fn for_plan(plan: &ExecPlan) -> Arena {
@@ -337,9 +383,14 @@ impl Arena {
         a
     }
 
-    /// Currently allocated bytes across lanes.
+    /// Currently allocated bytes across lanes (pack lanes included).
     pub fn capacity_bytes(&self) -> usize {
-        self.f.len() * 4 + self.q.len() + self.acc.len() * 4 + self.scales.len() * 4
+        self.f.len() * 4
+            + self.q.len()
+            + self.acc.len() * 4
+            + self.scales.len() * 4
+            + self.pack_f.len() * 4
+            + self.pack_q.len()
     }
 }
 
@@ -870,8 +921,14 @@ impl ExecPlan {
                 let out =
                     Slot::i8(qalloc.alloc(vlen[i + 1]), vlen[i + 1], vshape[i + 1].clone(), nscales);
                 nscales += batch; // one scale per image
+                let pa = p
+                    .packed_q
+                    .get(&i)
+                    .ok_or_else(|| format!("{}: packed int8 weights not prepared", layer.name))?;
                 let op = Op::ConvInt8Q {
                     qw: qw.clone(),
+                    pa: Arc::clone(pa),
+                    params: p.pack_params,
                     bias,
                     stride,
                     pad: resolve_pad(h_in, w_in, k, stride, pad),
@@ -927,24 +984,31 @@ impl ExecPlan {
                             stride: *stride,
                             pad: rp,
                             gemm: GemmImpl::Reference,
+                            pa: None,
                             relu: *relu_fused,
                             cols: Span {
                                 off: falloc.alloc(kdim * out_plane),
                                 len: kdim * out_plane,
                             },
                         },
-                        ConvImpl::GemmBlocked => Op::ConvIm2col {
-                            w: w[0].clone(),
-                            bias,
-                            stride: *stride,
-                            pad: rp,
-                            gemm: GemmImpl::Blocked(blk),
-                            relu: *relu_fused,
-                            cols: Span {
-                                off: falloc.alloc(kdim * out_plane),
-                                len: kdim * out_plane,
-                            },
-                        },
+                        ConvImpl::GemmBlocked => {
+                            let pa = p.packed.get(&i).ok_or_else(|| {
+                                format!("{}: packed weights not prepared", layer.name)
+                            })?;
+                            Op::ConvIm2col {
+                                w: w[0].clone(),
+                                bias,
+                                stride: *stride,
+                                pad: rp,
+                                gemm: GemmImpl::Packed(p.pack_params),
+                                pa: Some(Arc::clone(pa)),
+                                relu: *relu_fused,
+                                cols: Span {
+                                    off: falloc.alloc(kdim * out_plane),
+                                    len: kdim * out_plane,
+                                },
+                            }
+                        }
                         ConvImpl::Winograd => {
                             let u = p
                                 .wino
@@ -985,19 +1049,17 @@ impl ExecPlan {
                             }
                         }
                         ConvImpl::F16Gemm => {
-                            let hw = p
-                                .half
-                                .get(&i)
-                                .ok_or_else(|| format!("{}: f16 weights not prepared", layer.name))?;
-                            let wlen = hw.data.len();
+                            let pa = p.packed_h.get(&i).ok_or_else(|| {
+                                format!("{}: f16 weights not prepared", layer.name)
+                            })?;
                             Op::ConvF16 {
-                                hw: hw.clone(),
+                                pa: Arc::clone(pa),
+                                k: *k,
                                 bias,
                                 stride: *stride,
                                 pad: rp,
                                 relu: *relu_fused,
-                                blk,
-                                wf: Span { off: falloc.alloc(wlen), len: wlen },
+                                params: p.pack_params,
                                 cols: Span {
                                     off: falloc.alloc(kdim * out_plane),
                                     len: kdim * out_plane,
@@ -1147,6 +1209,22 @@ impl ExecPlan {
             .ok_or_else(|| "graph has no output value".to_string())?;
         debug_assert!(!output.is_q(), "graph output must stay on the f32 lane");
         let (preds, succs) = task_edges(&steps);
+        let mut pack_f_words = 0;
+        let mut pack_q_bytes = 0;
+        for s in &steps {
+            match &s.op {
+                Op::ConvIm2col { gemm: GemmImpl::Packed(pp), .. } => {
+                    pack_f_words = pack_f_words.max(bpack_words(*pp));
+                }
+                Op::ConvF16 { params, .. } => {
+                    pack_f_words = pack_f_words.max(bpack_words(*params));
+                }
+                Op::ConvInt8Q { params, .. } => {
+                    pack_q_bytes = pack_q_bytes.max(bpack_bytes(*params));
+                }
+                _ => {}
+            }
+        }
         let plan = ExecPlan {
             graph_name: g.name.clone(),
             input,
@@ -1159,6 +1237,8 @@ impl ExecPlan {
             i8_bytes: qalloc.hi,
             i32_words: ialloc.hi,
             scale_slots: nscales,
+            pack_f_words,
+            pack_q_bytes,
         };
         if cfg!(debug_assertions) {
             if let Err(e) = plan.validate_schedule() {
@@ -1389,6 +1469,15 @@ impl ExecPlan {
     /// boundary quantize/dequantize steps *accumulate* into their conv's
     /// layer slot, so QS-DNN keeps learning the full cross-lane cost.
     pub fn replay(&self, x: &Tensor, arena: &mut Arena) -> RunResult {
+        self.replay_counting(x, arena).0
+    }
+
+    /// [`ExecPlan::replay`] that additionally reports how many packed-GEMM
+    /// B panel blocks the replay packed. Weight (A) panels are packed once
+    /// at compile time and never counted here, so this number is the
+    /// *entire* steady-state packing cost — the pack-counting tests pin
+    /// that it is identical on every replay of a plan.
+    pub fn replay_counting(&self, x: &Tensor, arena: &mut Arena) -> (RunResult, usize) {
         assert_eq!(
             x.shape, self.input.shape,
             "input shape {:?} vs planned {:?}",
@@ -1398,20 +1487,22 @@ impl ExecPlan {
         arena.f[self.input.off..self.input.off + self.input.len]
             .copy_from_slice(&x.data);
         let mut layer_ms = vec![0.0f64; self.layer_count()];
+        let mut b_blocks = 0usize;
         let t_all = Instant::now();
         for step in &self.steps {
             let t0 = Instant::now();
-            exec_step(step, arena);
+            b_blocks += exec_step(step, arena);
             layer_ms[step.layer] += t0.elapsed().as_secs_f64() * 1e3;
         }
         let out_slice = &arena.f[self.output.off..self.output.off + self.output.len];
         let output = Tensor::from_vec(&self.output.shape, out_slice.to_vec());
-        RunResult {
+        let r = RunResult {
             output,
             layer_ms,
             total_ms: t_all.elapsed().as_secs_f64() * 1e3,
             peak_bytes: self.observed_peak_bytes(),
-        }
+        };
+        (r, b_blocks)
     }
 
     /// Replay with wavefront parallelism: steps of each wavefront are
@@ -1426,7 +1517,9 @@ impl ExecPlan {
             "input shape {:?} vs planned {:?}",
             x.shape, self.input.shape
         );
-        arena.ensure(self);
+        // one pack-lane region per concurrently running step
+        let units = if pool.size() <= 1 { 1 } else { self.max_wave_width().max(1) };
+        arena.ensure_units(self, units);
         arena.f[self.input.off..self.input.off + self.input.len]
             .copy_from_slice(&x.data);
         let mut layer_ms = vec![0.0f64; self.layer_count()];
@@ -1435,6 +1528,10 @@ impl ExecPlan {
             q: arena.q.as_mut_ptr(),
             acc: arena.acc.as_mut_ptr(),
             s: arena.scales.as_mut_ptr(),
+            pf: arena.pack_f.as_mut_ptr(),
+            pq: arena.pack_q.as_mut_ptr(),
+            pf_stride: self.pack_f_words,
+            pq_stride: self.pack_q_bytes,
         };
         let t_all = Instant::now();
         for &(start, end) in &self.waves {
@@ -1443,8 +1540,8 @@ impl ExecPlan {
                 for step in &self.steps[start..end] {
                     let t0 = Instant::now();
                     // SAFETY: single thread here; spans are in-bounds by
-                    // construction and `ensure` sized the lanes.
-                    unsafe { exec_step_on(step, lanes) };
+                    // construction and `ensure_units` sized the lanes.
+                    unsafe { exec_step_on(step, lanes, 0) };
                     layer_ms[step.layer] += t0.elapsed().as_secs_f64() * 1e3;
                 }
             } else {
@@ -1460,8 +1557,9 @@ impl ExecPlan {
                     // overlap; `scope_run` is a barrier, so no span
                     // outlives the wave into a reuse by a later one, and
                     // a producer's scale write is visible to consumers
-                    // one wave later.
-                    unsafe { exec_step_on(&wave_steps[i], lanes) };
+                    // one wave later. Pack lanes: wave task `i` owns its
+                    // private region (`i < width <= units`).
+                    unsafe { exec_step_on(&wave_steps[i], lanes, i) };
                     times[i].store(
                         (t0.elapsed().as_secs_f64() * 1e3).to_bits(),
                         Ordering::Relaxed,
@@ -1503,8 +1601,11 @@ impl ExecPlan {
                 continue;
             }
             if let Some((m, muls)) = partitionable(step) {
-                if muls >= PARTITION_MIN_MULS && m >= 2 {
-                    parts[si] = threads.min(m) as u32;
+                // split along MR-row panel boundaries: the packed kernel
+                // rejects ranges that cut through an A panel
+                let panels = m.div_ceil(step_mr(step));
+                if muls >= PARTITION_MIN_MULS && panels >= 2 {
+                    parts[si] = threads.min(panels) as u32;
                 }
             }
         }
@@ -1564,7 +1665,8 @@ impl ExecPlan {
             "input shape {:?} vs planned {:?}",
             x.shape, self.input.shape
         );
-        arena.ensure(self);
+        // one pack-lane region per scheduler worker
+        arena.ensure_units(self, workers);
         arena.f[self.input.off..self.input.off + self.input.len]
             .copy_from_slice(&x.data);
         let lanes = Lanes {
@@ -1572,6 +1674,10 @@ impl ExecPlan {
             q: arena.q.as_mut_ptr(),
             acc: arena.acc.as_mut_ptr(),
             s: arena.scales.as_mut_ptr(),
+            pf: arena.pack_f.as_mut_ptr(),
+            pq: arena.pack_q.as_mut_ptr(),
+            pf_stride: self.pack_f_words,
+            pq_stride: self.pack_q_bytes,
         };
         let n = self.steps.len();
         let sched = Sched {
@@ -1674,13 +1780,29 @@ fn partitionable(step: &Step) -> Option<(usize, usize)> {
     }
 }
 
-/// Row range of part `p` of `parts` over `m` GEMM rows (remainder spread
-/// over the leading parts).
-fn part_rows(m: usize, parts: usize, p: usize) -> Range<usize> {
-    let base = m / parts;
-    let rem = m % parts;
+/// Panel height a partitioned step's row splits must align to: the packed
+/// kernels reject ranges cutting through an MR-row A panel, so the
+/// scheduler splits on panel edges. Non-packed GEMMs split on any row
+/// (`mr = 1`).
+fn step_mr(step: &Step) -> usize {
+    match &step.op {
+        Op::ConvIm2col { gemm: GemmImpl::Packed(pp), .. } => pp.mr,
+        Op::ConvInt8Q { params, .. } => params.mr,
+        _ => 1,
+    }
+}
+
+/// Row range of part `p` of `parts` over `m` GEMM rows: whole MR-row
+/// panels are spread over the parts (remainder panels to the leading
+/// ones), so every boundary except the final `m` lands on a panel edge.
+/// With `mr = 1` this is the plain even row split.
+fn part_rows(m: usize, parts: usize, p: usize, mr: usize) -> Range<usize> {
+    let panels = m.div_ceil(mr);
+    let base = panels / parts;
+    let rem = panels % parts;
     let start = p * base + p.min(rem);
-    start..start + base + usize::from(p < rem)
+    let end = start + base + usize::from(p < rem);
+    (start * mr).min(m)..(end * mr).min(m)
 }
 
 /// Lock-free f64 accumulate into an `AtomicU64` holding f64 bits.
@@ -1800,8 +1922,9 @@ impl Sched<'_> {
                     self.run_task(wid, Task::Part { step: si, part: 0 });
                 } else {
                     let t0 = Instant::now();
-                    // SAFETY: see `replay_tasked_stats`.
-                    unsafe { exec_step_on(step, self.lanes) };
+                    // SAFETY: see `replay_tasked_stats`; worker `wid` owns
+                    // pack-lane region `wid`.
+                    unsafe { exec_step_on(step, self.lanes, wid) };
                     atomic_add_ms(&self.step_ms[si], t0.elapsed().as_secs_f64() * 1e3);
                     self.complete_step(wid, si);
                 }
@@ -1809,11 +1932,12 @@ impl Sched<'_> {
             Task::Part { step: si, part } => {
                 let step = &self.plan.steps[si];
                 let parts = self.parts[si] as usize;
-                let rows = part_rows(step.out.shape[1], parts, part as usize);
+                let rows = part_rows(step.out.shape[1], parts, part as usize, step_mr(step));
                 let t0 = Instant::now();
                 // SAFETY: parts of one step write disjoint row ranges and
-                // read only the prep's scratch, published via the deque.
-                unsafe { exec_partitioned_part(step, self.lanes, rows) };
+                // read only the prep's scratch, published via the deque;
+                // the executing worker packs B into its own pack region.
+                unsafe { exec_partitioned_part(step, self.lanes, rows, wid) };
                 atomic_add_ms(&self.step_ms[si], t0.elapsed().as_secs_f64() * 1e3);
                 if self.parts_left[si].fetch_sub(1, Ordering::AcqRel) == 1 {
                     if matches!(step.op, Op::ConvInt8Q { .. }) {
@@ -1883,11 +2007,13 @@ unsafe fn exec_partitioned_prep(step: &Step, lanes: Lanes) {
 /// matches the whole-step primitive, so the union is bit-exact.
 ///
 /// SAFETY: prep must have completed; concurrent parts must have disjoint
-/// `rows`; same lane contract as `exec_step_on`.
-unsafe fn exec_partitioned_part(step: &Step, lanes: Lanes, rows: Range<usize>) {
+/// `rows` (panel-aligned for packed GEMMs); same lane contract as
+/// `exec_step_on`; `unit` must be the executing worker's private
+/// pack-lane region.
+unsafe fn exec_partitioned_part(step: &Step, lanes: Lanes, rows: Range<usize>, unit: usize) {
     let out_plane = step.out.shape[2] * step.out.shape[3];
     match &step.op {
-        Op::ConvIm2col { w: wt, bias, gemm, relu, cols, .. } => {
+        Op::ConvIm2col { w: wt, bias, gemm, pa, relu, cols, .. } => {
             let kdim = wt.shape[1] * wt.shape[2] * wt.shape[3];
             let cols_s = std::slice::from_raw_parts(lanes.f.add(cols.off), cols.len);
             let c_rows = std::slice::from_raw_parts_mut(
@@ -1908,6 +2034,24 @@ unsafe fn exec_partitioned_part(step: &Step, lanes: Lanes, rows: Range<usize>) {
                     c_rows,
                     *blk,
                 ),
+                GemmImpl::Packed(pp) => {
+                    let pa = pa.as_ref().expect("packed weights frozen at compile");
+                    let bpack = std::slice::from_raw_parts_mut(
+                        lanes.pf.add(unit * lanes.pf_stride),
+                        lanes.pf_stride,
+                    );
+                    gemm_packed(
+                        kdim,
+                        out_plane,
+                        rows.clone(),
+                        pa,
+                        cols_s,
+                        None,
+                        c_rows,
+                        *pp,
+                        bpack,
+                    );
+                }
             }
             // the same bias + fused-ReLU tail as `conv_im2col_into`,
             // restricted to these rows
@@ -1934,14 +2078,18 @@ unsafe fn exec_partitioned_part(step: &Step, lanes: Lanes, rows: Range<usize>) {
                 }
             }
         }
-        Op::ConvInt8Q { qw, cols_q, acc, .. } => {
+        Op::ConvInt8Q { qw, pa, params, cols_q, acc, .. } => {
             let kdim = qw.shape[1] * qw.shape[2] * qw.shape[3];
             let cols_s = std::slice::from_raw_parts(lanes.q.add(cols_q.off), cols_q.len);
             let acc_rows = std::slice::from_raw_parts_mut(
                 lanes.acc.add(acc.off + rows.start * out_plane),
                 rows.len() * out_plane,
             );
-            gemm_i8_rows(kdim, out_plane, rows, &qw.data, cols_s, acc_rows);
+            let bpack = std::slice::from_raw_parts_mut(
+                lanes.pq.add(unit * lanes.pq_stride),
+                lanes.pq_stride,
+            );
+            gemm_i8_packed(kdim, out_plane, rows, pa, cols_s, acc_rows, *params, bpack);
         }
         _ => unreachable!("{}: only conv GEMM steps partition", step.name),
     }
@@ -2009,30 +2157,47 @@ struct Lanes {
     q: *mut i8,
     acc: *mut i32,
     s: *mut f32,
+    /// Per-unit B-pack regions for the packed GEMM kernels (`pf_stride`
+    /// f32 words / `pq_stride` i8 bytes per unit); each concurrent worker
+    /// dereferences only its own region, so they need no disjointness
+    /// proof from the planner.
+    pf: *mut f32,
+    pq: *mut i8,
+    pf_stride: usize,
+    pq_stride: usize,
 }
 
 unsafe impl Send for Lanes {}
 unsafe impl Sync for Lanes {}
 
 /// Bind a step's arena spans and dispatch to the out-param primitive.
-fn exec_step(step: &Step, arena: &mut Arena) {
+/// Returns the number of packed-GEMM B panel blocks the step packed.
+fn exec_step(step: &Step, arena: &mut Arena) -> usize {
     let lanes = Lanes {
         f: arena.f.as_mut_ptr(),
         q: arena.q.as_mut_ptr(),
         acc: arena.acc.as_mut_ptr(),
         s: arena.scales.as_mut_ptr(),
+        pf: arena.pack_f.as_mut_ptr(),
+        pq: arena.pack_q.as_mut_ptr(),
+        pf_stride: arena.pack_f.len(),
+        pq_stride: arena.pack_q.len(),
     };
-    // SAFETY: exclusive `&mut Arena` — no concurrent access at all.
-    unsafe { exec_step_on(step, lanes) }
+    // SAFETY: exclusive `&mut Arena` — no concurrent access at all; the
+    // whole pack lane serves as unit 0's region.
+    unsafe { exec_step_on(step, lanes, 0) }
 }
 
-/// Execute one step against raw lane pointers.
+/// Execute one step against raw lane pointers. `unit` selects this
+/// worker's private B-pack region. Returns the number of packed-GEMM B
+/// panel blocks packed (0 for non-packed steps).
 ///
-/// SAFETY: the lanes must stay allocated (and sized per `Arena::ensure`)
-/// for the whole call, and no concurrently executing step may touch a
-/// span overlapping this step's input/output/scratch spans — the
-/// planner's wavefront disjointness invariant.
-unsafe fn exec_step_on(step: &Step, lanes: Lanes) {
+/// SAFETY: the lanes must stay allocated (and sized per
+/// `Arena::ensure_units` with more than `unit` units) for the whole call,
+/// and no concurrently executing step may touch a span overlapping this
+/// step's input/output/scratch spans — the planner's wavefront
+/// disjointness invariant. No two concurrent steps may share `unit`.
+unsafe fn exec_step_on(step: &Step, lanes: Lanes, unit: usize) -> usize {
     // The planner guarantees: the output span is disjoint from every
     // same-lane input span unless `in_place` (where it aliases ins[0]
     // exactly), and scratch spans are disjoint from inputs, output and
@@ -2050,6 +2215,7 @@ unsafe fn exec_step_on(step: &Step, lanes: Lanes) {
         }
     }
     let fbase = lanes.f;
+    let mut packed = 0usize;
     // SAFETY: all spans were bounds-allocated by the planner inside the
     // lane sizes `ensure` guaranteed, and disjointness (above) makes the
     // simultaneous &/&mut derived from `fbase` non-overlapping.
@@ -2066,18 +2232,38 @@ unsafe fn exec_step_on(step: &Step, lanes: Lanes) {
                     view_mut_at(fbase, &step.out),
                 );
             }
-            Op::ConvIm2col { w, bias, stride, pad, gemm, relu, cols } => {
-                conv_im2col_into(
-                    view_at(fbase, &step.ins[0]),
-                    w.view(),
-                    bias,
-                    *stride,
-                    *pad,
-                    *gemm,
-                    *relu,
-                    span_mut_at(fbase, *cols),
-                    view_mut_at(fbase, &step.out),
-                );
+            Op::ConvIm2col { w, bias, stride, pad, gemm, pa, relu, cols } => {
+                if let (GemmImpl::Packed(pp), Some(pa)) = (gemm, pa) {
+                    let bpack = std::slice::from_raw_parts_mut(
+                        lanes.pf.add(unit * lanes.pf_stride),
+                        lanes.pf_stride,
+                    );
+                    packed = conv_im2col_packed_into(
+                        view_at(fbase, &step.ins[0]),
+                        pa,
+                        (w.shape[2], w.shape[3]),
+                        bias,
+                        *stride,
+                        *pad,
+                        *pp,
+                        *relu,
+                        span_mut_at(fbase, *cols),
+                        bpack,
+                        view_mut_at(fbase, &step.out),
+                    );
+                } else {
+                    conv_im2col_into(
+                        view_at(fbase, &step.ins[0]),
+                        w.view(),
+                        bias,
+                        *stride,
+                        *pad,
+                        *gemm,
+                        *relu,
+                        span_mut_at(fbase, *cols),
+                        view_mut_at(fbase, &step.out),
+                    );
+                }
             }
             Op::ConvWinograd { u, bias, pad, relu, vbuf } => {
                 conv_winograd_into(
@@ -2104,7 +2290,7 @@ unsafe fn exec_step_on(step: &Step, lanes: Lanes) {
                     view_mut_at(fbase, &step.out),
                 );
             }
-            Op::ConvInt8Q { qw, bias, stride, pad, relu, cols_q, acc } => {
+            Op::ConvInt8Q { qw, pa, params, bias, stride, pad, relu, cols_q, acc } => {
                 let sin = &step.ins[0];
                 let x_q = std::slice::from_raw_parts(lanes.q.add(sin.off), sin.len);
                 let x_scales =
@@ -2115,17 +2301,24 @@ unsafe fn exec_step_on(step: &Step, lanes: Lanes) {
                     lanes.s.add(step.out.scale_idx()),
                     step.out.shape[0],
                 );
-                conv_int8_q_into(
+                let bpack = std::slice::from_raw_parts_mut(
+                    lanes.pq.add(unit * lanes.pq_stride),
+                    lanes.pq_stride,
+                );
+                packed = conv_int8_q_packed_into(
                     x_q,
                     &sin.shape,
                     x_scales,
                     qw,
+                    pa,
                     bias,
                     *stride,
                     *pad,
                     *relu,
+                    *params,
                     std::slice::from_raw_parts_mut(lanes.q.add(cols_q.off), cols_q.len),
                     std::slice::from_raw_parts_mut(lanes.acc.add(acc.off), acc.len),
+                    bpack,
                     out_q,
                     &step.out.shape,
                     out_scales,
@@ -2165,17 +2358,22 @@ unsafe fn exec_step_on(step: &Step, lanes: Lanes) {
                     }
                 }
             }
-            Op::ConvF16 { hw, bias, stride, pad, relu, blk, wf, cols } => {
-                conv_f16_into(
+            Op::ConvF16 { pa, k, bias, stride, pad, relu, params, cols } => {
+                let bpack = std::slice::from_raw_parts_mut(
+                    lanes.pf.add(unit * lanes.pf_stride),
+                    lanes.pf_stride,
+                );
+                packed = conv_f16_packed_into(
                     view_at(fbase, &step.ins[0]),
-                    hw,
+                    pa,
+                    *k,
                     bias,
                     *stride,
                     *pad,
                     *relu,
-                    *blk,
-                    span_mut_at(fbase, *wf),
+                    *params,
                     span_mut_at(fbase, *cols),
+                    bpack,
                     view_mut_at(fbase, &step.out),
                 );
             }
@@ -2276,6 +2474,7 @@ unsafe fn exec_step_on(step: &Step, lanes: Lanes) {
             }
         }
     }
+    packed
 }
 
 /// y = x * scale[c] + shift[c] over an [N,C,H,W] buffer, in place.
@@ -3051,6 +3250,8 @@ mod tests {
             i8_bytes: 0,
             i32_words: 0,
             scale_slots: 0,
+            pack_f_words: 0,
+            pack_q_bytes: 0,
         };
         // the barrier invariant holds (wave 0 is disjoint)...
         plan.validate_wavefronts().unwrap();
@@ -3248,25 +3449,31 @@ mod tests {
     }
 
     /// ImageNet-family acceptance spot-check: squeezenet (the smallest
-    /// zoo member) through the task scheduler at the f32 baseline.
+    /// zoo member) through the task scheduler, at the f32 baseline (the
+    /// packed kernels are the default GemmImpl there) and int8-resident.
     #[test]
     fn replay_tasked_parity_on_imagenet_squeezenet() {
         let (g, w) = crate::models::by_name("squeezenet", 3).unwrap();
         let p = Prepared::new(g.clone(), w, Platform::pi4()).unwrap();
-        let a = crate::lne::quant_explore::f32_baseline(&p);
-        let plan = p.plan(&a, 1).unwrap();
-        plan.validate_schedule().unwrap();
-        let mut rng = Rng::new(23);
-        let x = Tensor::randn(&[1, g.input.0, g.input.1, g.input.2], 1.0, &mut rng);
-        let mut arena = Arena::for_plan(&plan);
-        let seq = plan.replay(&x, &mut arena);
-        for threads in [2usize, 4] {
-            let pool = ThreadPool::new(threads);
-            let tsk = plan.replay_tasked(&x, &mut arena, &pool);
-            assert!(
-                tsk.output.allclose(&seq.output, 0.0, 0.0),
-                "threads={threads}: squeezenet tasked replay diverged"
-            );
+        let space = DesignSpace::build(&g, &p.platform);
+        for a in [
+            crate::lne::quant_explore::f32_baseline(&p),
+            space.uniform(&g, ConvImpl::Int8Gemm),
+        ] {
+            let plan = p.plan(&a, 1).unwrap();
+            plan.validate_schedule().unwrap();
+            let mut rng = Rng::new(23);
+            let x = Tensor::randn(&[1, g.input.0, g.input.1, g.input.2], 1.0, &mut rng);
+            let mut arena = Arena::for_plan(&plan);
+            let seq = plan.replay(&x, &mut arena);
+            for threads in [1usize, 2, 4] {
+                let pool = ThreadPool::new(threads);
+                let tsk = plan.replay_tasked(&x, &mut arena, &pool);
+                assert!(
+                    tsk.output.allclose(&seq.output, 0.0, 0.0),
+                    "threads={threads}: squeezenet tasked replay diverged"
+                );
+            }
         }
     }
 
@@ -3303,6 +3510,125 @@ mod tests {
                     g.name
                 );
             }
+        }
+    }
+
+    /// Tentpole acceptance: weight panels are packed exactly once per
+    /// `Prepared`. Every compiled plan's packed steps hold the same `Arc`
+    /// allocation as the `Prepared` cache — recompiling never repacks.
+    #[test]
+    fn weight_panels_are_packed_once_per_prepared() {
+        let (g, w) = toy_model();
+        let p = Prepared::new(g.clone(), w, Platform::pi4()).unwrap();
+        let space = DesignSpace::build(&g, &p.platform);
+        let a = space.uniform(&g, ConvImpl::GemmBlocked);
+        let plan1 = p.plan(&a, 1).unwrap();
+        let plan2 = p.plan(&a, 1).unwrap();
+        let mut packed_steps = 0;
+        for (s1, s2) in plan1.steps.iter().zip(plan2.steps.iter()) {
+            if let (
+                Op::ConvIm2col { pa: Some(a1), gemm: GemmImpl::Packed(_), .. },
+                Op::ConvIm2col { pa: Some(a2), .. },
+            ) = (&s1.op, &s2.op)
+            {
+                packed_steps += 1;
+                assert!(Arc::ptr_eq(a1, a2), "{}: recompile repacked weights", s1.name);
+                assert!(
+                    Arc::ptr_eq(a1, &p.packed[&s1.layer]),
+                    "{}: step panels are not the Prepared cache's",
+                    s1.name
+                );
+            }
+        }
+        assert_eq!(packed_steps, 2, "both toy convs lower to packed GEMM");
+
+        // int8-resident chain: the same guarantee for quantized panels
+        let (g, w) = int8_chain_model();
+        let p = Prepared::new(g.clone(), w, Platform::pi4()).unwrap();
+        let space = DesignSpace::build(&g, &p.platform);
+        let a = space.uniform(&g, ConvImpl::Int8Gemm);
+        let plan1 = p.plan(&a, 1).unwrap();
+        let plan2 = p.plan(&a, 1).unwrap();
+        let mut q_steps = 0;
+        for (s1, s2) in plan1.steps.iter().zip(plan2.steps.iter()) {
+            if let (Op::ConvInt8Q { pa: a1, .. }, Op::ConvInt8Q { pa: a2, .. }) =
+                (&s1.op, &s2.op)
+            {
+                q_steps += 1;
+                assert!(Arc::ptr_eq(a1, a2), "{}: recompile repacked weights", s1.name);
+                assert!(Arc::ptr_eq(a1, &p.packed_q[&s1.layer]));
+            }
+        }
+        assert_eq!(q_steps, 3, "the whole chain stays int8-resident");
+    }
+
+    /// Steady-state replays repack only B panels: the per-replay pack
+    /// count is stable and nonzero, and arena capacity stops growing
+    /// after the first run (no steady-state allocation).
+    #[test]
+    fn replay_counting_repacks_only_b_panels_in_steady_state() {
+        let (g, w) = toy_model();
+        let p = Prepared::new(g.clone(), w, Platform::pi4()).unwrap();
+        let space = DesignSpace::build(&g, &p.platform);
+        let a = space.uniform(&g, ConvImpl::GemmBlocked);
+        let plan = p.plan(&a, 1).unwrap();
+        assert!(plan.pack_f_words > 0, "packed plan reserves a pack lane");
+        let mut rng = Rng::new(31);
+        let x = Tensor::randn(&[1, 3, 10, 8], 1.0, &mut rng);
+        let mut arena = Arena::for_plan(&plan);
+        let (r1, n1) = plan.replay_counting(&x, &mut arena);
+        assert!(n1 > 0, "packed convs pack at least one B block per replay");
+        let cap = arena.capacity_bytes();
+        let (r2, n2) = plan.replay_counting(&x, &mut arena);
+        assert_eq!(n2, n1, "replays pack exactly the same B blocks");
+        assert_eq!(arena.capacity_bytes(), cap, "no steady-state allocation");
+        assert!(r2.output.allclose(&r1.output, 0.0, 0.0));
+    }
+
+    /// Partition boundaries land on microkernel panel edges: every
+    /// subtask row range starts on a multiple of the step's `mr`, ends on
+    /// one (except the final ragged edge), and the ranges tile `0..m`
+    /// contiguously — the invariant behind bit-exact tasked replay.
+    #[test]
+    fn partitioned_row_ranges_align_to_microkernel_panels() {
+        let mut g = Graph::new("alignchain", (8, 16, 16));
+        g.push("c1", LayerKind::Conv { k: (3, 3), stride: (1, 1), pad: Padding::Same, relu_fused: true }, 32);
+        g.push("c2", LayerKind::Conv { k: (3, 3), stride: (1, 1), pad: Padding::Same, relu_fused: true }, 32);
+        g.push("c3", LayerKind::Conv { k: (3, 3), stride: (1, 1), pad: Padding::Same, relu_fused: false }, 32);
+        let w = crate::models::random_weights(&g, 4);
+        let p = Prepared::new(g.clone(), w, Platform::pi4()).unwrap();
+        let space = DesignSpace::build(&g, &p.platform);
+        for choice in [ConvImpl::GemmBlocked, ConvImpl::Int8Gemm] {
+            let a = space.uniform(&g, choice);
+            let plan = p.plan(&a, 1).unwrap();
+            let parts = plan.partition_parts(4);
+            let mut saw_panel_step = false;
+            for (si, &n) in parts.iter().enumerate() {
+                if n < 2 {
+                    continue;
+                }
+                let step = &plan.steps[si];
+                let mr = step_mr(step);
+                saw_panel_step |= mr > 1;
+                let m = step.out.shape[1];
+                let mut next = 0usize;
+                for part in 0..n as usize {
+                    let rows = part_rows(m, n as usize, part, mr);
+                    assert_eq!(rows.start, next, "{}: gap in partition tiling", step.name);
+                    assert_eq!(rows.start % mr, 0, "{}: subtask starts mid-panel", step.name);
+                    assert!(
+                        rows.end % mr == 0 || rows.end == m,
+                        "{}: subtask ends mid-panel",
+                        step.name
+                    );
+                    next = rows.end;
+                }
+                assert_eq!(next, m, "{}: partitions must cover all rows", step.name);
+            }
+            assert!(
+                saw_panel_step,
+                "{choice:?}: at least one partitioned step runs a packed microkernel"
+            );
         }
     }
 }

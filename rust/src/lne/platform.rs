@@ -7,7 +7,7 @@
 //! reproduce are *relative* (DESIGN.md §3).
 
 use super::plugin::ConvImpl;
-use super::primitives::gemm::Blocking;
+use super::primitives::gemm::{Blocking, PackParams};
 
 #[derive(Debug, Clone)]
 pub struct Platform {
@@ -60,14 +60,34 @@ impl Platform {
         Platform { name: "jetson-xavier".into(), ..Platform::pi4() }
     }
 
+    /// Every shipped profile. The single source of the profile namespace:
+    /// `by_name`, CLI validation, and the autotune cache all key off it.
+    pub fn all() -> Vec<Platform> {
+        vec![
+            Self::pi3(),
+            Self::pi4(),
+            Self::jetson_nano(),
+            Self::jetson_xavier(),
+        ]
+    }
+
     pub fn by_name(name: &str) -> Option<Platform> {
-        match name {
-            "pi3" => Some(Self::pi3()),
-            "pi4" => Some(Self::pi4()),
-            "jetson-nano" => Some(Self::jetson_nano()),
-            "jetson-xavier" => Some(Self::jetson_xavier()),
-            _ => None,
-        }
+        Self::all().into_iter().find(|p| p.name == name)
+    }
+
+    /// `by_name` with an error that lists the valid profile names, for CLI
+    /// surfaces (`--platform`).
+    pub fn by_name_or_err(name: &str) -> Result<Platform, String> {
+        Self::by_name(name).ok_or_else(|| {
+            let names: Vec<String> = Self::all().into_iter().map(|p| p.name).collect();
+            format!("unknown platform '{name}' (valid: {})", names.join(", "))
+        })
+    }
+
+    /// Autotuned packed-GEMM tile parameters for this profile (swept once
+    /// per process, cached by profile name; see `lne::autotune`).
+    pub fn pack_params(&self) -> PackParams {
+        super::autotune::pack_params_for(self)
     }
 
     pub fn supports(&self, p: ConvImpl) -> bool {
@@ -92,5 +112,31 @@ mod tests {
     fn lookup_by_name() {
         assert!(Platform::by_name("pi3").is_some());
         assert!(Platform::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn all_covers_by_name() {
+        let all = Platform::all();
+        assert_eq!(all.len(), 4);
+        for p in &all {
+            assert_eq!(Platform::by_name(&p.name).unwrap().name, p.name);
+        }
+    }
+
+    #[test]
+    fn by_name_or_err_lists_valid_profiles() {
+        let err = Platform::by_name_or_err("rpi5").unwrap_err();
+        for name in ["pi3", "pi4", "jetson-nano", "jetson-xavier"] {
+            assert!(err.contains(name), "{err}");
+        }
+        assert!(Platform::by_name_or_err("pi4").is_ok());
+    }
+
+    #[test]
+    fn pack_params_diverge_between_cache_classes() {
+        let p3 = Platform::pi3().pack_params();
+        let p4 = Platform::pi4().pack_params();
+        assert_ne!(p3, p4);
+        assert!(p3.nc < p4.nc);
     }
 }

@@ -6,7 +6,7 @@
 //! *slower* than FP32 (the paper's out-of-the-box PyTorch FP16 observation),
 //! while halving weight memory; QS-DNN only picks it where that trade wins.
 
-use super::gemm::{gemm_blocked, Blocking};
+use super::gemm::{gemm_blocked, gemm_packed, pack_a, Blocking, PackParams, PackedA};
 use super::im2col::im2col;
 use crate::lne::graph::{conv_out, resolve_pad, Padding};
 use crate::tensor::{HTensor, Tensor, TensorView, TensorViewMut};
@@ -14,6 +14,17 @@ use crate::util::f16::F16;
 
 pub fn prepare_weights(w: &Tensor) -> HTensor {
     HTensor::from_f32(w)
+}
+
+/// Compile-time freeze for the packed f16 path: dequantize the f16 weights
+/// to f32 once and pack them into MR-row panels. The per-call fp16->fp32
+/// weight-staging traffic of `conv_f16_into` is deliberately *not* modeled
+/// here — packing is the one-time cost the packed path trades it for.
+pub fn prepare_packed_weights(hw: &HTensor, mr: usize) -> PackedA {
+    let o = hw.shape[0];
+    let kdim: usize = hw.shape[1..].iter().product();
+    let wf: Vec<f32> = hw.data.iter().map(|v| v.to_f32()).collect();
+    pack_a(o, kdim, &wf, mr)
 }
 
 /// Out-param core: resolved padding and caller-provided staging buffers —
@@ -70,6 +81,94 @@ pub fn conv_f16_into(
     }
 }
 
+/// Packed-kernel f16 conv: weights arrive as a pre-converted, pre-packed
+/// f32 panel set (`prepare_packed_weights`, frozen at plan compile time),
+/// reusing the f32 microkernel. Activations still round through f16
+/// storage and the output tail is identical to `conv_f16_into`, so with
+/// equal `kc` the result is bit-identical to the blocked path. Returns the
+/// number of B panel blocks packed.
+#[allow(clippy::too_many_arguments)]
+pub fn conv_f16_packed_into(
+    x: TensorView,
+    pa: &PackedA,
+    k: (usize, usize),
+    b: &[f32],
+    stride: (usize, usize),
+    pad: (usize, usize),
+    relu: bool,
+    params: PackParams,
+    cols: &mut [f32],
+    bpack: &mut [f32],
+    out: TensorViewMut,
+) -> usize {
+    let (n, c, h, wd) = (x.n(), x.c(), x.h(), x.w());
+    let o = pa.m;
+    let (out_h, out_w) = (out.h(), out.w());
+    debug_assert_eq!(out.n(), n);
+    debug_assert_eq!(out.c(), o);
+    let kdim = c * k.0 * k.1;
+    debug_assert_eq!(pa.k, kdim);
+    let out_plane = out_h * out_w;
+    debug_assert_eq!(cols.len(), kdim * out_plane);
+    let mut packed_blocks = 0;
+    for ni in 0..n {
+        let xi = &x.data[ni * c * h * wd..(ni + 1) * c * h * wd];
+        im2col(xi, c, h, wd, k, stride, pad, out_h, out_w, cols);
+        // round activations through f16 storage
+        for v in cols.iter_mut() {
+            *v = F16::from_f32(*v).to_f32();
+        }
+        let ci = &mut out.data[ni * o * out_plane..(ni + 1) * o * out_plane];
+        packed_blocks += gemm_packed(kdim, out_plane, 0..o, pa, cols, None, ci, params, bpack);
+        for oc in 0..o {
+            let bias = b.get(oc).copied().unwrap_or(0.0);
+            let row = &mut ci[oc * out_plane..(oc + 1) * out_plane];
+            for v in row.iter_mut() {
+                *v = F16::from_f32(*v + bias).to_f32(); // f16 output storage
+                if relu && *v < 0.0 {
+                    *v = 0.0;
+                }
+            }
+        }
+    }
+    packed_blocks
+}
+
+/// Allocating wrapper over `conv_f16_packed_into` for the legacy
+/// interpreter and examples.
+#[allow(clippy::too_many_arguments)]
+pub fn conv_f16_packed(
+    x: &Tensor,
+    pa: &PackedA,
+    k: (usize, usize),
+    b: &[f32],
+    stride: (usize, usize),
+    pad: Padding,
+    relu: bool,
+    params: PackParams,
+) -> Tensor {
+    let (h, wd) = (x.h(), x.w());
+    let (out_h, out_w) = conv_out(h, wd, k, stride, pad);
+    let kdim = x.c() * k.0 * k.1;
+    let mut cols = vec![0.0f32; kdim * out_h * out_w];
+    let mut bpack = vec![0.0f32; super::gemm::bpack_words(params)];
+    let mut out = Tensor::zeros(&[x.n(), pa.m, out_h, out_w]);
+    conv_f16_packed_into(
+        x.view(),
+        pa,
+        k,
+        b,
+        stride,
+        resolve_pad(h, wd, k, stride, pad),
+        relu,
+        params,
+        &mut cols,
+        &mut bpack,
+        out.view_mut(),
+    );
+    out
+}
+
 /// Allocating wrapper kept for callers outside the planned path.
 /// f16-storage conv: round activations through f16, GEMM in f32.
 pub fn conv_f16(
@@ -120,5 +219,25 @@ mod tests {
         let want = conv_direct(&x, &w, &b, (1, 1), Padding::Same, false);
         let scale = want.max_abs();
         assert!(got.max_abs_diff(&want) < scale * 0.02);
+    }
+
+    /// Same kc => same FP order => the packed f16 path is bit-identical to
+    /// the blocked one (weights round through f16 in both).
+    #[test]
+    fn packed_f16_is_bitexact_with_blocked_at_same_kc() {
+        let mut rng = Rng::new(3);
+        let x = Tensor::randn(&[2, 3, 7, 6], 1.0, &mut rng);
+        let w = Tensor::randn(&[6, 3, 3, 3], 0.5, &mut rng);
+        let b: Vec<f32> = (0..6).map(|i| 0.05 * i as f32).collect();
+        let hw = prepare_weights(&w);
+        let blk = Blocking { mc: 16, kc: 8, nc: 16 };
+        let params = PackParams { mc: 8, kc: 8, nc: 32, mr: 4, nr: 8 };
+        let pa = prepare_packed_weights(&hw, params.mr);
+        for pad in [Padding::Same, Padding::Valid] {
+            let want = conv_f16(&x, &hw, &b, (1, 1), pad, true, blk);
+            let got = conv_f16_packed(&x, &pa, (3, 3), &b, (1, 1), pad, true, params);
+            assert_eq!(got.shape, want.shape);
+            crate::testing::check_close(&got.data, &want.data, 0.0);
+        }
     }
 }

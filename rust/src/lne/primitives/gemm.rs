@@ -1,5 +1,5 @@
 //! GEMM primitives — the "acceleration libraries" LNE's plugins wrap
-//! (paper §6.2.3: BLAS, ArmCL, NNPACK...). Two implementations with
+//! (paper §6.2.3: BLAS, ArmCL, NNPACK...). Three implementations with
 //! genuinely different performance profiles:
 //!
 //! - `gemm_ref`: straightforward ikj loop — plays the role of the generic
@@ -7,12 +7,36 @@
 //! - `gemm_blocked`: cache-blocked with a register-tiled microkernel —
 //!   plays the role of a tuned mobile library (ArmCL/NCNN style). Block
 //!   sizes come from the platform profile (pi3/pi4, see lne/platform.rs).
+//! - `gemm_packed`: BLIS-style packed-panel kernel. A is pre-packed once
+//!   into MR-row panels ([`pack_a`] / [`PackedA`], frozen into the plan's
+//!   Step at compile time), B is packed per (kc, nc) block into NR-wide
+//!   panels inside a caller-provided scratch buffer ([`bpack_words`] —
+//!   sized once per plan, per worker), and the inner loop is a
+//!   register-tiled `MR x NR` microkernel. Tile parameters come from the
+//!   per-platform autotune sweep (`lne/autotune.rs`).
+//!
+//! Bit-exactness invariant (the scheduler's partitioned replay relies on
+//! it): for every output element, the FP sequence is "init with bias (or
+//! 0), then one `+=` of a single-accumulator partial per kc-block over
+//! ascending k". Only `kc` changes that sequence; `mc`/`nc`/`mr`/`nr` and
+//! the row partitioning never do, provided row ranges land on MR panel
+//! edges — which [`gemm_packed`] enforces by rejecting unaligned ranges.
+//! With equal `kc`, `gemm_packed` is bit-identical to `gemm_blocked`.
 
 /// C[M,N] = A[M,K] @ B[K,N] (+ bias[N] broadcast over rows if given).
+///
+/// Contract of the zero-skip: skipping a row of B when the A element is
+/// exactly 0.0 models the S (sparsification) benefit, but it would also
+/// skip `0.0 * inf = NaN` — silently breaking IEEE propagation and parity
+/// with `gemm_blocked` on non-finite inputs. The skip is therefore guarded
+/// on B being all-finite (one O(K*N) scan, negligible next to the
+/// O(M*K*N) loops): finite inputs keep the sparsity speedup, non-finite
+/// inputs propagate NaN/Inf exactly like the blocked/packed kernels.
 pub fn gemm_ref(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], bias: Option<&[f32]>, c: &mut [f32]) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(c.len(), m * n);
+    let skip_zeros = b.iter().all(|v| v.is_finite());
     for i in 0..m {
         let crow = &mut c[i * n..(i + 1) * n];
         match bias {
@@ -21,7 +45,7 @@ pub fn gemm_ref(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], bias: Option
         }
         for kk in 0..k {
             let av = a[i * k + kk];
-            if av == 0.0 {
+            if skip_zeros && av == 0.0 {
                 continue; // sparsity-aware: skipped zeros are the S benefit
             }
             let brow = &b[kk * n..(kk + 1) * n];
@@ -201,18 +225,253 @@ fn block_kernel(
     }
 }
 
+/// Packed-kernel tile/blocking parameters: cache blocking (`mc`/`kc`/`nc`)
+/// plus the register tile (`mr` x `nr`). Chosen per platform by the
+/// autotune sweep (`lne/autotune.rs`); `kc` is the one parameter that
+/// changes FP summation order, so profiles pin it (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PackParams {
+    pub mc: usize,
+    pub kc: usize,
+    pub nc: usize,
+    pub mr: usize,
+    pub nr: usize,
+}
+
+impl Default for PackParams {
+    fn default() -> Self {
+        PackParams { mc: 64, kc: 256, nc: 256, mr: 4, nr: 8 }
+    }
+}
+
+/// The `(mr, nr)` register tiles with a monomorphized microkernel.
+/// Autotune candidates must draw from this set; [`gemm_packed`] panics on
+/// anything else.
+pub const SUPPORTED_TILES: [(usize, usize); 5] = [(4, 4), (4, 8), (4, 16), (8, 4), (8, 8)];
+
+/// A[M,K] packed once into MR-row panel-major layout:
+/// `data[mp*(k*mr) + p*mr + r] = A[(mp*mr + r)*k + p]`, rows past M
+/// zero-padded. Weight matrices are packed at prepare time and frozen
+/// into the plan's Step behind an `Arc` — replays never touch this again.
+#[derive(Debug, Clone)]
+pub struct PackedA {
+    pub m: usize,
+    pub k: usize,
+    pub mr: usize,
+    pub data: Vec<f32>,
+}
+
+/// Pack A[M,K] into MR-row panels (zero-padding the last partial panel).
+pub fn pack_a(m: usize, k: usize, a: &[f32], mr: usize) -> PackedA {
+    assert!(mr > 0);
+    debug_assert_eq!(a.len(), m * k);
+    let panels = m.div_ceil(mr);
+    let mut data = vec![0.0f32; panels * k * mr];
+    for mp in 0..panels {
+        let base = mp * (k * mr);
+        for r in 0..mr {
+            let row = mp * mr + r;
+            if row >= m {
+                break; // zero padding already in place
+            }
+            for p in 0..k {
+                data[base + p * mr + r] = a[row * k + p];
+            }
+        }
+    }
+    PackedA { m, k, mr, data }
+}
+
+/// f32 words of B-pack scratch one [`gemm_packed`] call needs: one
+/// (kc, nc) block of NR-wide panels, padded to whole panels. The planner
+/// sizes one such buffer per worker into the arena's pack lane.
+pub fn bpack_words(params: PackParams) -> usize {
+    params.kc * params.nc.div_ceil(params.nr) * params.nr
+}
+
+/// Pack one (kb, nb) block of B into NR-wide panels: panel `jp` starts at
+/// `jp*(kb*nr)`, element `(p, c)` of a panel at `p*nr + c`; columns past
+/// the block edge are zero-padded so the microkernel never branches.
+fn pack_b_block(
+    b: &[f32],
+    n: usize,
+    kk: usize,
+    kb: usize,
+    jj: usize,
+    nb: usize,
+    nr: usize,
+    buf: &mut [f32],
+) {
+    let npan = nb.div_ceil(nr);
+    debug_assert!(buf.len() >= npan * kb * nr);
+    for jp in 0..npan {
+        let col0 = jj + jp * nr;
+        let vc = (jj + nb - col0).min(nr);
+        let dst0 = jp * (kb * nr);
+        for p in 0..kb {
+            let src = (kk + p) * n + col0;
+            let dst = dst0 + p * nr;
+            buf[dst..dst + vc].copy_from_slice(&b[src..src + vc]);
+            buf[dst + vc..dst + nr].fill(0.0);
+        }
+    }
+}
+
+/// Register-tiled inner kernel over one A panel slice and one B panel:
+/// `acc[r][c] += sum_p apanel[p*MR + r] * bpanel[p*NR + c]`. Both panels
+/// are contiguous, so the compiler vectorizes the fixed-NR inner loop.
+///
+/// SAFETY: caller guarantees `ap` holds `kb*MR` and `bp` holds `kb*NR`
+/// readable floats.
+#[inline(always)]
+unsafe fn tile_f32<const MR: usize, const NR: usize>(
+    kb: usize,
+    ap: *const f32,
+    bp: *const f32,
+    acc: &mut [[f32; NR]; MR],
+) {
+    let mut a = ap;
+    let mut b = bp;
+    for _ in 0..kb {
+        let brow = std::slice::from_raw_parts(b, NR);
+        for (r, accr) in acc.iter_mut().enumerate() {
+            let av = *a.add(r);
+            for (x, bv) in accr.iter_mut().zip(brow.iter()) {
+                *x += av * *bv;
+            }
+        }
+        a = a.add(MR);
+        b = b.add(NR);
+    }
+}
+
+/// Packed-panel GEMM over a row range: C rows `rows` of
+/// `C = PackedA @ B (+ bias)` into `c_rows` (`rows.len() * n` elements),
+/// packing B blocks into the caller's `bpack` scratch
+/// (>= [`bpack_words`]). Returns the number of B blocks packed — the
+/// planner's pack-counting test pins that steady-state replays repack
+/// exactly this much and nothing else.
+///
+/// `rows` must start on an MR panel edge and end on one (or at `m`):
+/// the kernel computes whole panels, and panel-aligned boundaries are
+/// what keep every element's FP accumulation order identical across
+/// partitionings (the scheduler aligns `part_rows` to MR). Unaligned
+/// ranges are rejected with a panic rather than rounded silently.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_packed(
+    k: usize,
+    n: usize,
+    rows: std::ops::Range<usize>,
+    pa: &PackedA,
+    b: &[f32],
+    bias: Option<&[f32]>,
+    c_rows: &mut [f32],
+    params: PackParams,
+    bpack: &mut [f32],
+) -> usize {
+    assert_eq!(pa.k, k, "packed A K mismatch");
+    assert_eq!(pa.mr, params.mr, "packed A panel height != params.mr");
+    assert!(rows.start <= rows.end && rows.end <= pa.m, "row range {rows:?} out of bounds (m={})", pa.m);
+    assert!(
+        rows.start % params.mr == 0 && (rows.end % params.mr == 0 || rows.end == pa.m),
+        "row range {:?} not aligned to MR={} panel edges (m={})",
+        rows,
+        params.mr,
+        pa.m
+    );
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c_rows.len(), rows.len() * n);
+    assert!(bpack.len() >= bpack_words(params), "B-pack scratch too small");
+    if rows.is_empty() || n == 0 {
+        return 0;
+    }
+    match (params.mr, params.nr) {
+        (4, 4) => packed_driver::<4, 4>(k, n, rows, pa, b, bias, c_rows, params, bpack),
+        (4, 8) => packed_driver::<4, 8>(k, n, rows, pa, b, bias, c_rows, params, bpack),
+        (4, 16) => packed_driver::<4, 16>(k, n, rows, pa, b, bias, c_rows, params, bpack),
+        (8, 4) => packed_driver::<8, 4>(k, n, rows, pa, b, bias, c_rows, params, bpack),
+        (8, 8) => packed_driver::<8, 8>(k, n, rows, pa, b, bias, c_rows, params, bpack),
+        (mr, nr) => panic!("unsupported microkernel tile {mr}x{nr} (see SUPPORTED_TILES)"),
+    }
+}
+
+/// Monomorphized driver: jc (nc) -> pc (kc, pack B block) -> ic (mc-group
+/// of A panels) -> jr (B panels) -> microkernel. Per output element this
+/// is still "init, then one += of an ascending-k partial per kc-block":
+/// only one jc block touches a given column, and the zero-padded panel
+/// lanes contribute exact zeros that are never written out.
+#[allow(clippy::too_many_arguments)]
+fn packed_driver<const MR: usize, const NR: usize>(
+    k: usize,
+    n: usize,
+    rows: std::ops::Range<usize>,
+    pa: &PackedA,
+    b: &[f32],
+    bias: Option<&[f32]>,
+    c_rows: &mut [f32],
+    params: PackParams,
+    bpack: &mut [f32],
+) -> usize {
+    for crow in c_rows.chunks_mut(n) {
+        match bias {
+            Some(bias) => crow.copy_from_slice(&bias[..n]),
+            None => crow.fill(0.0),
+        }
+    }
+    let mp0 = rows.start / MR;
+    let mp1 = rows.end.div_ceil(MR);
+    let mc_panels = (params.mc / MR).max(1);
+    let mut packed_blocks = 0usize;
+    let mut jj = 0;
+    while jj < n {
+        let nb = params.nc.min(n - jj);
+        let npan = nb.div_ceil(NR);
+        let mut kk = 0;
+        while kk < k {
+            let kb = params.kc.min(k - kk);
+            pack_b_block(b, n, kk, kb, jj, nb, NR, bpack);
+            packed_blocks += 1;
+            let mut mp = mp0;
+            while mp < mp1 {
+                let hi = (mp + mc_panels).min(mp1);
+                for mpi in mp..hi {
+                    let apanel = &pa.data[mpi * (k * MR) + kk * MR..];
+                    let row0 = mpi * MR;
+                    let vr = (rows.end - row0).min(MR);
+                    for jp in 0..npan {
+                        let bpanel = &bpack[jp * (kb * NR)..];
+                        let mut acc = [[0.0f32; NR]; MR];
+                        // SAFETY: apanel holds kb*MR packed floats from
+                        // offset kk*MR (pa.data is panels*k*MR long),
+                        // bpanel holds kb*NR packed floats (bpack holds
+                        // npan*kb*NR).
+                        unsafe {
+                            tile_f32::<MR, NR>(kb, apanel.as_ptr(), bpanel.as_ptr(), &mut acc);
+                        }
+                        let col0 = jj + jp * NR;
+                        let vc = (jj + nb - col0).min(NR);
+                        for (r, accr) in acc.iter().enumerate().take(vr) {
+                            let ci = (row0 + r - rows.start) * n + col0;
+                            for (x, &v) in c_rows[ci..ci + vc].iter_mut().zip(accr.iter()) {
+                                *x += v;
+                            }
+                        }
+                    }
+                }
+                mp = hi;
+            }
+            kk += kb;
+        }
+        jj += nb;
+    }
+    packed_blocks
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::testing;
+    use crate::testing::{self, check_close};
     use crate::util::rng::Rng;
-
-    fn check_close(a: &[f32], b: &[f32], tol: f32) {
-        assert_eq!(a.len(), b.len());
-        for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
-            assert!((x - y).abs() <= tol * (1.0 + y.abs()), "idx {i}: {x} vs {y}");
-        }
-    }
 
     #[test]
     fn blocked_matches_ref_property() {
@@ -299,5 +558,129 @@ mod tests {
         let mut c = vec![0.0; m * m];
         gemm_blocked(m, m, m, &a, &eye, None, &mut c, Blocking::default());
         check_close(&c, &a, 1e-6);
+    }
+
+    /// With equal kc the packed kernel performs, per output element, the
+    /// exact same FP sequence as gemm_blocked — the parity anchor the
+    /// planner's legacy-vs-planned tests rest on.
+    #[test]
+    fn packed_is_bitexact_with_blocked_at_same_kc() {
+        testing::check("gemm-packed-vs-blocked", &[(1, 40), (1, 40), (1, 40), (0, 4), (0, 1)], 40, |case| {
+            let (m, k, n) = (case.usize(0), case.usize(1), case.usize(2));
+            let (mr, nr) = SUPPORTED_TILES[case.usize(3)];
+            let with_bias = case.get(4) == 1;
+            let params = PackParams { mc: 16, kc: 8, nc: 16, mr, nr };
+            let blk = Blocking { mc: 32, kc: 8, nc: 32 }; // same kc, different mc/nc
+            let mut rng = Rng::new((m * 9000 + k * 90 + n) as u64);
+            let a = testing::randn_vec(&mut rng, m * k, 1.0);
+            let b = testing::randn_vec(&mut rng, k * n, 1.0);
+            let bias: Vec<f32> = testing::randn_vec(&mut rng, n, 1.0);
+            let bias_opt = if with_bias { Some(bias.as_slice()) } else { None };
+            let mut c1 = vec![0.0; m * n];
+            let mut c2 = vec![0.0; m * n];
+            gemm_blocked(m, k, n, &a, &b, bias_opt, &mut c1, blk);
+            let pa = pack_a(m, k, &a, mr);
+            let mut bpack = vec![0.0; bpack_words(params)];
+            gemm_packed(k, n, 0..m, &pa, &b, bias_opt, &mut c2, params, &mut bpack);
+            c1.iter().zip(c2.iter()).all(|(x, y)| x.to_bits() == y.to_bits())
+        });
+    }
+
+    /// Satellite: the union of panel-aligned row-range calls must equal
+    /// one full call byte for byte, for every supported tile.
+    #[test]
+    fn packed_row_ranges_are_bitexact_with_full_call() {
+        testing::check("gemm-packed-rows", &[(1, 33), (1, 24), (1, 33), (0, 4), (1, 4)], 32, |case| {
+            let (m, k, n) = (case.usize(0), case.usize(1), case.usize(2));
+            let (mr, nr) = SUPPORTED_TILES[case.usize(3)];
+            let params = PackParams { mc: 16, kc: 8, nc: 16, mr, nr };
+            let mut rng = Rng::new((m * 10000 + k * 100 + n) as u64);
+            let a = testing::randn_vec(&mut rng, m * k, 1.0);
+            let b = testing::randn_vec(&mut rng, k * n, 1.0);
+            let bias: Vec<f32> = testing::randn_vec(&mut rng, n, 1.0);
+            let pa = pack_a(m, k, &a, mr);
+            let mut bpack = vec![0.0; bpack_words(params)];
+            let mut full = vec![0.0; m * n];
+            gemm_packed(k, n, 0..m, &pa, &b, Some(&bias), &mut full, params, &mut bpack);
+            let panels = m.div_ceil(mr);
+            let parts = case.usize(4).min(panels);
+            let mut union = vec![f32::NAN; m * n];
+            for p in 0..parts {
+                let base = panels / parts;
+                let rem = panels % parts;
+                let ps = p * base + p.min(rem);
+                let pe = ps + base + usize::from(p < rem);
+                let (rs, re) = (ps * mr, (pe * mr).min(m));
+                gemm_packed(
+                    k, n, rs..re, &pa, &b, Some(&bias),
+                    &mut union[rs * n..re * n], params, &mut bpack,
+                );
+            }
+            union.iter().zip(full.iter()).all(|(x, y)| x.to_bits() == y.to_bits())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "not aligned")]
+    fn packed_rejects_unaligned_range_start() {
+        let (m, k, n) = (9usize, 5, 6);
+        let params = PackParams { mc: 8, kc: 4, nc: 8, mr: 4, nr: 4 };
+        let a = vec![1.0f32; m * k];
+        let b = vec![1.0f32; k * n];
+        let pa = pack_a(m, k, &a, 4);
+        let mut bpack = vec![0.0; bpack_words(params)];
+        let mut c = vec![0.0; (m - 1) * n];
+        gemm_packed(k, n, 1..m, &pa, &b, None, &mut c, params, &mut bpack);
+    }
+
+    #[test]
+    #[should_panic(expected = "not aligned")]
+    fn packed_rejects_unaligned_range_end() {
+        let (m, k, n) = (9usize, 5, 6);
+        let params = PackParams { mc: 8, kc: 4, nc: 8, mr: 4, nr: 4 };
+        let a = vec![1.0f32; m * k];
+        let b = vec![1.0f32; k * n];
+        let pa = pack_a(m, k, &a, 4);
+        let mut bpack = vec![0.0; bpack_words(params)];
+        let mut c = vec![0.0; 6 * n];
+        gemm_packed(k, n, 0..6, &pa, &b, None, &mut c, params, &mut bpack);
+    }
+
+    /// Satellite regression: with a non-finite B the zero-skip is
+    /// disabled, so `0.0 * inf/NaN` propagates NaN exactly like the
+    /// blocked and packed kernels — the three parity oracles agree.
+    #[test]
+    fn zero_skip_preserves_nan_inf_propagation() {
+        let (m, k, n) = (3usize, 4, 5);
+        let mut a = vec![0.0f32; m * k]; // all-zero rows: every product skippable
+        a[k + 1] = 1.0; // row 1, kk=1
+        let mut b = vec![1.0f32; k * n];
+        b[2] = f32::NAN; // kk=0, col 2
+        b[2 * n + 3] = f32::INFINITY; // kk=2, col 3
+        let mut c_ref = vec![0.0; m * n];
+        let mut c_blk = vec![0.0; m * n];
+        gemm_ref(m, k, n, &a, &b, None, &mut c_ref);
+        gemm_blocked(m, k, n, &a, &b, None, &mut c_blk, Blocking { mc: 2, kc: 2, nc: 2 });
+        let params = PackParams { mc: 8, kc: 2, nc: 4, mr: 4, nr: 4 };
+        let pa = pack_a(m, k, &a, 4);
+        let mut bpack = vec![0.0; bpack_words(params)];
+        let mut c_pack = vec![0.0; m * n];
+        gemm_packed(k, n, 0..m, &pa, &b, None, &mut c_pack, params, &mut bpack);
+        // 0 * inf and 0 * NaN must surface as NaN, not silently vanish
+        assert!(c_ref.iter().any(|v| v.is_nan()));
+        check_close(&c_blk, &c_ref, 0.0);
+        check_close(&c_pack, &c_ref, 0.0);
+    }
+
+    #[test]
+    fn pack_a_panel_layout_and_padding() {
+        // 3x2 matrix, mr=2: panel 0 holds rows 0-1, panel 1 row 2 + zeros
+        let a = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let pa = pack_a(3, 2, &a, 2);
+        assert_eq!(pa.data.len(), 2 * 2 * 2);
+        // panel 0: p=0 -> [a00, a10], p=1 -> [a01, a11]
+        assert_eq!(&pa.data[..4], &[1.0, 3.0, 2.0, 4.0]);
+        // panel 1: p=0 -> [a20, 0], p=1 -> [a21, 0]
+        assert_eq!(&pa.data[4..], &[5.0, 0.0, 6.0, 0.0]);
     }
 }

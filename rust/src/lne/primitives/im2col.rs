@@ -1,7 +1,7 @@
 //! im2col convolution: patch-matrix transform + GEMM. The workhorse layout
 //! for the GEMM-backed plugins (Caffe/BLAS-style and blocked variants).
 
-use super::gemm::{gemm_blocked, gemm_ref, Blocking};
+use super::gemm::{gemm_blocked, gemm_packed, gemm_ref, Blocking, PackParams, PackedA};
 use crate::lne::graph::{conv_out, resolve_pad, Padding};
 use crate::tensor::{Tensor, TensorView, TensorViewMut};
 
@@ -54,6 +54,10 @@ pub fn im2col(
 pub enum GemmImpl {
     Reference,
     Blocked(Blocking),
+    /// Packed-panel microkernel. Requires the A (weight) side pre-packed
+    /// at compile time; routed through `conv_im2col_packed_into` — the
+    /// generic entry points panic on it because they only see raw weights.
+    Packed(PackParams),
 }
 
 /// Out-param core: resolved padding, caller-provided patch-matrix scratch
@@ -89,6 +93,9 @@ pub fn conv_im2col_into(
             GemmImpl::Reference => gemm_ref(o, kdim, out_plane, w.data, cols, None, ci),
             GemmImpl::Blocked(blk) => {
                 gemm_blocked(o, kdim, out_plane, w.data, cols, None, ci, blk)
+            }
+            GemmImpl::Packed(_) => {
+                panic!("packed GEMM requires pre-packed weights; use conv_im2col_packed_into")
             }
         }
         // bias is per output channel = per GEMM row
@@ -142,6 +149,98 @@ pub fn conv_im2col(
     out
 }
 
+/// Packed-kernel im2col conv: the weight matrix arrives pre-packed (`pa`,
+/// frozen at plan compile time); only the patch matrix B is packed per
+/// call, into the caller's pre-sized `bpack` scratch (`bpack_words(params)`
+/// f32s, reused across images and replays — no allocation inside).
+/// Returns the number of B panel blocks packed (for steady-state
+/// accounting in the planner tests). Bias/relu tail is identical to
+/// `conv_im2col_into` so results are bit-comparable per GEMM kernel.
+#[allow(clippy::too_many_arguments)]
+pub fn conv_im2col_packed_into(
+    x: TensorView,
+    pa: &PackedA,
+    k: (usize, usize),
+    b: &[f32],
+    stride: (usize, usize),
+    pad: (usize, usize),
+    params: PackParams,
+    relu: bool,
+    cols: &mut [f32],
+    bpack: &mut [f32],
+    out: TensorViewMut,
+) -> usize {
+    let (n, c, h, wd) = (x.n(), x.c(), x.h(), x.w());
+    let o = pa.m;
+    let (out_h, out_w) = (out.h(), out.w());
+    debug_assert_eq!(out.n(), n);
+    debug_assert_eq!(out.c(), o);
+    let kdim = c * k.0 * k.1;
+    debug_assert_eq!(pa.k, kdim);
+    let out_plane = out_h * out_w;
+    debug_assert_eq!(cols.len(), kdim * out_plane);
+    let mut packed_blocks = 0;
+    for ni in 0..n {
+        let xi = &x.data[ni * c * h * wd..(ni + 1) * c * h * wd];
+        im2col(xi, c, h, wd, k, stride, pad, out_h, out_w, cols);
+        let ci = &mut out.data[ni * o * out_plane..(ni + 1) * o * out_plane];
+        packed_blocks += gemm_packed(kdim, out_plane, 0..o, pa, cols, None, ci, params, bpack);
+        // bias is per output channel = per GEMM row
+        for (oc, bi) in b.iter().enumerate().take(o) {
+            let row = &mut ci[oc * out_plane..(oc + 1) * out_plane];
+            for v in row.iter_mut() {
+                *v += bi;
+                if relu && *v < 0.0 {
+                    *v = 0.0;
+                }
+            }
+        }
+        if relu && b.is_empty() {
+            for v in ci.iter_mut() {
+                if *v < 0.0 {
+                    *v = 0.0;
+                }
+            }
+        }
+    }
+    packed_blocks
+}
+
+/// Allocating wrapper over `conv_im2col_packed_into` for callers outside
+/// the planned path (legacy interpreter, examples).
+#[allow(clippy::too_many_arguments)]
+pub fn conv_im2col_packed(
+    x: &Tensor,
+    pa: &PackedA,
+    k: (usize, usize),
+    b: &[f32],
+    stride: (usize, usize),
+    pad: Padding,
+    params: PackParams,
+    relu: bool,
+) -> Tensor {
+    let (h, wd) = (x.h(), x.w());
+    let (out_h, out_w) = conv_out(h, wd, k, stride, pad);
+    let kdim = x.c() * k.0 * k.1;
+    let mut cols = vec![0.0f32; kdim * out_h * out_w];
+    let mut bpack = vec![0.0f32; super::gemm::bpack_words(params)];
+    let mut out = Tensor::zeros(&[x.n(), pa.m, out_h, out_w]);
+    conv_im2col_packed_into(
+        x.view(),
+        pa,
+        k,
+        b,
+        stride,
+        resolve_pad(h, wd, k, stride, pad),
+        params,
+        relu,
+        &mut cols,
+        &mut bpack,
+        out.view_mut(),
+    );
+    out
+}
+
 /// Out-param fully connected: x [N, C*H*W] @ w [in, out] + b into the
 /// caller-provided [N, out, 1, 1] buffer.
 pub fn fc_into(
@@ -161,6 +260,9 @@ pub fn fc_into(
         GemmImpl::Reference => gemm_ref(n, in_dim, wo, x.data, w.data, Some(b), out.data),
         GemmImpl::Blocked(blk) => {
             gemm_blocked(n, in_dim, wo, x.data, w.data, Some(b), out.data, blk)
+        }
+        GemmImpl::Packed(_) => {
+            panic!("packed GEMM is conv-only (activations are the A side in fc)")
         }
     }
     if relu {
@@ -220,5 +322,28 @@ mod tests {
         let b = vec![0.5, -0.5];
         let y = fc(&x, &w, &b, GemmImpl::Reference, false);
         assert_eq!(y.data, vec![1.0 + 3.0 + 0.5, 2.0 + 3.0 - 0.5]);
+    }
+
+    /// Same kc => same per-element FP accumulation order => the packed conv
+    /// is bit-identical to the blocked conv (tol 0.0 via the shared
+    /// `testing::check_close`).
+    #[test]
+    fn packed_conv_is_bitexact_with_blocked_at_same_kc() {
+        use super::super::gemm::pack_a;
+        let mut rng = Rng::new(7);
+        for &(c, o, k, s) in &[(3usize, 8usize, 3usize, 1usize), (2, 5, 5, 2), (4, 9, 1, 1)] {
+            let x = Tensor::randn(&[2, c, 9, 7], 1.0, &mut rng);
+            let w = Tensor::randn(&[o, c, k, k], 0.5, &mut rng);
+            let b: Vec<f32> = (0..o).map(|i| i as f32 * 0.1 - 0.2).collect();
+            let blk = Blocking { mc: 16, kc: 8, nc: 16 };
+            let params = PackParams { mc: 8, kc: 8, nc: 32, mr: 4, nr: 8 };
+            let pa = pack_a(o, c * k * k, &w.data, params.mr);
+            for pad in [Padding::Same, Padding::Valid] {
+                let want = conv_im2col(&x, &w, &b, (s, s), pad, GemmImpl::Blocked(blk), true);
+                let got = conv_im2col_packed(&x, &pa, (k, k), &b, (s, s), pad, params, true);
+                assert_eq!(got.shape, want.shape);
+                crate::testing::check_close(&got.data, &want.data, 0.0);
+            }
+        }
     }
 }

@@ -7,6 +7,7 @@
 //! a fresh per-image scale, so chained int8 layers never touch f32 between
 //! them (DESIGN.md §7).
 
+use super::gemm::{bpack_words, PackParams};
 use super::im2col::im2col;
 use crate::lne::graph::{conv_out, resolve_pad, Padding};
 use crate::tensor::{QTensor, Tensor, TensorView, TensorViewMut};
@@ -102,6 +103,201 @@ pub fn gemm_i8_rows(
     debug_assert!(rows.end * k <= a.len());
     debug_assert_eq!(c_rows.len(), rows.len() * n);
     gemm_i8(rows.len(), k, n, &a[rows.start * k..rows.end * k], b, c_rows);
+}
+
+/// Quantized weights packed once into MR-row panel-major layout — the i8
+/// sibling of `gemm::PackedA`, with the same zero-padded panel geometry
+/// (q = 0 is exact in symmetric quantization). Frozen into the plan's
+/// Step behind an `Arc` at prepare time.
+#[derive(Debug, Clone)]
+pub struct PackedAI8 {
+    pub m: usize,
+    pub k: usize,
+    pub mr: usize,
+    pub data: Vec<i8>,
+}
+
+/// Pack A[M,K] (i8) into MR-row panels (zero-padding the last panel).
+pub fn pack_a_i8(m: usize, k: usize, a: &[i8], mr: usize) -> PackedAI8 {
+    assert!(mr > 0);
+    debug_assert_eq!(a.len(), m * k);
+    let panels = m.div_ceil(mr);
+    let mut data = vec![0i8; panels * k * mr];
+    for mp in 0..panels {
+        let base = mp * (k * mr);
+        for r in 0..mr {
+            let row = mp * mr + r;
+            if row >= m {
+                break;
+            }
+            for p in 0..k {
+                data[base + p * mr + r] = a[row * k + p];
+            }
+        }
+    }
+    PackedAI8 { m, k, mr, data }
+}
+
+/// Bytes of i8 B-pack scratch one [`gemm_i8_packed`] call needs (same
+/// panel geometry as the f32 kernel's [`bpack_words`]).
+pub fn bpack_bytes(params: PackParams) -> usize {
+    bpack_words(params)
+}
+
+/// Pack one (kb, nb) block of i8 B into NR-wide zero-padded panels.
+#[allow(clippy::too_many_arguments)]
+fn pack_b_block_i8(
+    b: &[i8],
+    n: usize,
+    kk: usize,
+    kb: usize,
+    jj: usize,
+    nb: usize,
+    nr: usize,
+    buf: &mut [i8],
+) {
+    let npan = nb.div_ceil(nr);
+    debug_assert!(buf.len() >= npan * kb * nr);
+    for jp in 0..npan {
+        let col0 = jj + jp * nr;
+        let vc = (jj + nb - col0).min(nr);
+        let dst0 = jp * (kb * nr);
+        for p in 0..kb {
+            let src = (kk + p) * n + col0;
+            let dst = dst0 + p * nr;
+            buf[dst..dst + vc].copy_from_slice(&b[src..src + vc]);
+            buf[dst + vc..dst + nr].fill(0);
+        }
+    }
+}
+
+/// i8 x i8 -> i32 register tile over packed panels.
+///
+/// SAFETY: caller guarantees `ap` holds `kb*MR` and `bp` holds `kb*NR`
+/// readable bytes.
+#[inline(always)]
+unsafe fn tile_i8<const MR: usize, const NR: usize>(
+    kb: usize,
+    ap: *const i8,
+    bp: *const i8,
+    acc: &mut [[i32; NR]; MR],
+) {
+    let mut a = ap;
+    let mut b = bp;
+    for _ in 0..kb {
+        let brow = std::slice::from_raw_parts(b, NR);
+        for (r, accr) in acc.iter_mut().enumerate() {
+            let av = *a.add(r) as i32;
+            for (x, bv) in accr.iter_mut().zip(brow.iter()) {
+                *x += av * *bv as i32;
+            }
+        }
+        a = a.add(MR);
+        b = b.add(NR);
+    }
+}
+
+/// Packed-panel integer GEMM over a row range: accumulator rows `rows` of
+/// `C_i32 = PackedAI8 @ B_i8` into `c_rows`, packing B blocks into the
+/// caller's `bpack` scratch (>= [`bpack_bytes`]). Returns the number of
+/// B blocks packed. Integer arithmetic is exact under any blocking, but
+/// the MR panel-edge alignment contract matches the f32 kernel so the
+/// scheduler can treat both identically (unaligned ranges are rejected).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_i8_packed(
+    k: usize,
+    n: usize,
+    rows: std::ops::Range<usize>,
+    pa: &PackedAI8,
+    b: &[i8],
+    c_rows: &mut [i32],
+    params: PackParams,
+    bpack: &mut [i8],
+) -> usize {
+    assert_eq!(pa.k, k, "packed A K mismatch");
+    assert_eq!(pa.mr, params.mr, "packed A panel height != params.mr");
+    assert!(rows.start <= rows.end && rows.end <= pa.m, "row range {rows:?} out of bounds (m={})", pa.m);
+    assert!(
+        rows.start % params.mr == 0 && (rows.end % params.mr == 0 || rows.end == pa.m),
+        "row range {:?} not aligned to MR={} panel edges (m={})",
+        rows,
+        params.mr,
+        pa.m
+    );
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c_rows.len(), rows.len() * n);
+    assert!(bpack.len() >= bpack_bytes(params), "B-pack scratch too small");
+    if rows.is_empty() || n == 0 {
+        c_rows.fill(0);
+        return 0;
+    }
+    match (params.mr, params.nr) {
+        (4, 4) => packed_driver_i8::<4, 4>(k, n, rows, pa, b, c_rows, params, bpack),
+        (4, 8) => packed_driver_i8::<4, 8>(k, n, rows, pa, b, c_rows, params, bpack),
+        (4, 16) => packed_driver_i8::<4, 16>(k, n, rows, pa, b, c_rows, params, bpack),
+        (8, 4) => packed_driver_i8::<8, 4>(k, n, rows, pa, b, c_rows, params, bpack),
+        (8, 8) => packed_driver_i8::<8, 8>(k, n, rows, pa, b, c_rows, params, bpack),
+        (mr, nr) => panic!("unsupported microkernel tile {mr}x{nr} (see SUPPORTED_TILES)"),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn packed_driver_i8<const MR: usize, const NR: usize>(
+    k: usize,
+    n: usize,
+    rows: std::ops::Range<usize>,
+    pa: &PackedAI8,
+    b: &[i8],
+    c_rows: &mut [i32],
+    params: PackParams,
+    bpack: &mut [i8],
+) -> usize {
+    c_rows.fill(0);
+    let mp0 = rows.start / MR;
+    let mp1 = rows.end.div_ceil(MR);
+    let mc_panels = (params.mc / MR).max(1);
+    let mut packed_blocks = 0usize;
+    let mut jj = 0;
+    while jj < n {
+        let nb = params.nc.min(n - jj);
+        let npan = nb.div_ceil(NR);
+        let mut kk = 0;
+        while kk < k {
+            let kb = params.kc.min(k - kk);
+            pack_b_block_i8(b, n, kk, kb, jj, nb, NR, bpack);
+            packed_blocks += 1;
+            let mut mp = mp0;
+            while mp < mp1 {
+                let hi = (mp + mc_panels).min(mp1);
+                for mpi in mp..hi {
+                    let apanel = &pa.data[mpi * (k * MR) + kk * MR..];
+                    let row0 = mpi * MR;
+                    let vr = (rows.end - row0).min(MR);
+                    for jp in 0..npan {
+                        let bpanel = &bpack[jp * (kb * NR)..];
+                        let mut acc = [[0i32; NR]; MR];
+                        // SAFETY: apanel holds kb*MR packed bytes from
+                        // offset kk*MR, bpanel holds kb*NR packed bytes.
+                        unsafe {
+                            tile_i8::<MR, NR>(kb, apanel.as_ptr(), bpanel.as_ptr(), &mut acc);
+                        }
+                        let col0 = jj + jp * NR;
+                        let vc = (jj + nb - col0).min(NR);
+                        for (r, accr) in acc.iter().enumerate().take(vr) {
+                            let ci = (row0 + r - rows.start) * n + col0;
+                            for (x, &v) in c_rows[ci..ci + vc].iter_mut().zip(accr.iter()) {
+                                *x += v;
+                            }
+                        }
+                    }
+                }
+                mp = hi;
+            }
+            kk += kb;
+        }
+        jj += nb;
+    }
+    packed_blocks
 }
 
 /// Requantize one image's i32 GEMM accumulators to a fresh symmetric
@@ -262,6 +458,67 @@ pub fn conv_int8_q_into(
             &mut out_q[obase..obase + o * out_plane],
         );
     }
+}
+
+/// [`conv_int8_q_into`] over the packed-panel kernel: the planned
+/// ConvInt8Q step's exec path. `pa` holds the quantized weights packed
+/// once at prepare time (`pack_a_i8`), `bpack` is this worker's B-pack
+/// scratch from the arena's pack lane. Integer accumulation is exact, so
+/// the result is bit-identical to [`conv_int8_q_into`]. Returns the
+/// number of B blocks packed.
+#[allow(clippy::too_many_arguments)]
+pub fn conv_int8_q_packed_into(
+    x_q: &[i8],
+    x_shape: &[usize],
+    x_scales: &[f32],
+    qw: &QTensor,
+    pa: &PackedAI8,
+    b: &[f32],
+    stride: (usize, usize),
+    pad: (usize, usize),
+    relu: bool,
+    params: PackParams,
+    cols_q: &mut [i8],
+    acc: &mut [i32],
+    bpack: &mut [i8],
+    out_q: &mut [i8],
+    out_shape: &[usize],
+    out_scales: &mut [f32],
+) -> usize {
+    let (n, c, h, wd) = (x_shape[0], x_shape[1], x_shape[2], x_shape[3]);
+    let o = qw.shape[0];
+    let k = (qw.shape[2], qw.shape[3]);
+    let (out_h, out_w) = (out_shape[2], out_shape[3]);
+    debug_assert_eq!(out_shape[0], n);
+    debug_assert_eq!(out_shape[1], o);
+    debug_assert_eq!(pa.m, o);
+    debug_assert_eq!(x_q.len(), n * c * h * wd);
+    debug_assert_eq!(x_scales.len(), n);
+    debug_assert_eq!(out_scales.len(), n);
+    let kdim = c * k.0 * k.1;
+    let out_plane = out_h * out_w;
+    debug_assert_eq!(pa.k, kdim);
+    debug_assert_eq!(cols_q.len(), kdim * out_plane);
+    debug_assert_eq!(acc.len(), o * out_plane);
+    debug_assert_eq!(out_q.len(), n * o * out_plane);
+    let mut packed_blocks = 0usize;
+    for ni in 0..n {
+        let xi = &x_q[ni * c * h * wd..(ni + 1) * c * h * wd];
+        im2col_i8(xi, c, h, wd, k, stride, pad, out_h, out_w, cols_q);
+        packed_blocks += gemm_i8_packed(kdim, out_plane, 0..o, pa, cols_q, acc, params, bpack);
+        let dq = x_scales[ni] * qw.scale;
+        let obase = ni * o * out_plane;
+        out_scales[ni] = requantize_image(
+            acc,
+            o,
+            out_plane,
+            b,
+            relu,
+            dq,
+            &mut out_q[obase..obase + o * out_plane],
+        );
+    }
+    packed_blocks
 }
 
 /// Allocating wrapper kept for callers outside the planned path.
@@ -513,5 +770,104 @@ mod tests {
         let qw = prepare_weights(&w);
         let y = conv_int8(&x, &qw, &[0.0, 0.0], (1, 1), Padding::Same, true);
         assert!(y.data.iter().all(|&v| v >= 0.0));
+    }
+
+    /// Satellite: packed i8 row ranges — the union of panel-aligned parts
+    /// equals one full call, which equals the unpacked `gemm_i8`, exactly
+    /// (integer accumulation), for every supported tile.
+    #[test]
+    fn packed_i8_row_ranges_match_full_and_unpacked() {
+        use crate::lne::primitives::gemm::SUPPORTED_TILES;
+        crate::testing::check(
+            "gemm-i8-packed-rows",
+            &[(1, 33), (1, 24), (1, 33), (0, 4), (1, 4)],
+            32,
+            |case| {
+                let (m, k, n) = (case.usize(0), case.usize(1), case.usize(2));
+                let (mr, nr) = SUPPORTED_TILES[case.usize(3)];
+                let params = PackParams { mc: 16, kc: 8, nc: 16, mr, nr };
+                let mut rng = Rng::new((m * 10007 + k * 101 + n) as u64);
+                let a: Vec<i8> = (0..m * k).map(|_| rng.below(255) as i8).collect();
+                let b: Vec<i8> = (0..k * n).map(|_| rng.below(255) as i8).collect();
+                let mut want = vec![0i32; m * n];
+                gemm_i8(m, k, n, &a, &b, &mut want);
+                let pa = pack_a_i8(m, k, &a, mr);
+                let mut bpack = vec![0i8; bpack_bytes(params)];
+                let mut full = vec![7i32; m * n];
+                gemm_i8_packed(k, n, 0..m, &pa, &b, &mut full, params, &mut bpack);
+                if full != want {
+                    return false;
+                }
+                let panels = m.div_ceil(mr);
+                let parts = case.usize(4).min(panels);
+                let mut union = vec![9i32; m * n];
+                for p in 0..parts {
+                    let base = panels / parts;
+                    let rem = panels % parts;
+                    let ps = p * base + p.min(rem);
+                    let pe = ps + base + usize::from(p < rem);
+                    let (rs, re) = (ps * mr, (pe * mr).min(m));
+                    gemm_i8_packed(
+                        k, n, rs..re, &pa, &b,
+                        &mut union[rs * n..re * n], params, &mut bpack,
+                    );
+                }
+                union == want
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "not aligned")]
+    fn packed_i8_rejects_unaligned_range() {
+        let (m, k, n) = (9usize, 5, 6);
+        let params = PackParams { mc: 8, kc: 4, nc: 8, mr: 4, nr: 4 };
+        let a = vec![1i8; m * k];
+        let b = vec![1i8; k * n];
+        let pa = pack_a_i8(m, k, &a, 4);
+        let mut bpack = vec![0i8; bpack_bytes(params)];
+        let mut c = vec![0i32; 6 * n];
+        gemm_i8_packed(k, n, 0..6, &pa, &b, &mut c, params, &mut bpack);
+    }
+
+    /// The planned ConvInt8Q path swaps `gemm_i8` for the packed kernel;
+    /// integer exactness makes the whole conv bit-identical.
+    #[test]
+    fn conv_int8_q_packed_is_bitexact_with_unpacked() {
+        let mut rng = Rng::new(23);
+        let x = Tensor::randn(&[2, 3, 8, 8], 1.0, &mut rng);
+        let w = Tensor::randn(&[5, 3, 3, 3], 0.5, &mut rng);
+        let b: Vec<f32> = (0..5).map(|i| 0.1 * i as f32).collect();
+        let qw = prepare_weights(&w);
+        let (x_q, x_scales) = quantize_per_image(&x);
+        let pad = resolve_pad(8, 8, (3, 3), (1, 1), Padding::Same);
+        let (kdim, out_plane) = (27usize, 64usize);
+        let run_unpacked = || {
+            let mut cols_q = vec![0i8; kdim * out_plane];
+            let mut acc = vec![0i32; 5 * out_plane];
+            let mut out_q = vec![0i8; 2 * 5 * out_plane];
+            let mut out_scales = vec![0.0f32; 2];
+            conv_int8_q_into(
+                &x_q, &[2, 3, 8, 8], &x_scales, &qw, &b, (1, 1), pad, true,
+                &mut cols_q, &mut acc, &mut out_q, &[2, 5, 8, 8], &mut out_scales,
+            );
+            (out_q, out_scales)
+        };
+        let (want_q, want_s) = run_unpacked();
+        let params = PackParams { mc: 16, kc: 16, nc: 32, mr: 4, nr: 8 };
+        let pa = pack_a_i8(5, kdim, &qw.data, params.mr);
+        let mut cols_q = vec![0i8; kdim * out_plane];
+        let mut acc = vec![0i32; 5 * out_plane];
+        let mut bpack = vec![0i8; bpack_bytes(params)];
+        let mut out_q = vec![0i8; 2 * 5 * out_plane];
+        let mut out_scales = vec![0.0f32; 2];
+        let blocks = conv_int8_q_packed_into(
+            &x_q, &[2, 3, 8, 8], &x_scales, &qw, &pa, &b, (1, 1), pad, true, params,
+            &mut cols_q, &mut acc, &mut bpack, &mut out_q, &[2, 5, 8, 8], &mut out_scales,
+        );
+        // per image: ceil(out_plane/nc) * ceil(kdim/kc) B blocks
+        assert_eq!(blocks, 2 * out_plane.div_ceil(32) * kdim.div_ceil(16));
+        assert_eq!(out_q, want_q);
+        assert_eq!(out_scales, want_s);
     }
 }

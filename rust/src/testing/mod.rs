@@ -89,6 +89,24 @@ pub fn randn_vec(rng: &mut Rng, n: usize, sigma: f32) -> Vec<f32> {
     (0..n).map(|_| rng.normal_f32() * sigma).collect()
 }
 
+/// Assert two f32 slices are elementwise close: `|a - b| <= tol * (1 +
+/// |b|)` (`b` is the expected side). `tol = 0.0` demands bit-parity up to
+/// signed zero; NaN in both positions counts as equal so non-finite
+/// propagation paths can be compared. Shared by the primitive tests
+/// (gemm/im2col/f16conv) instead of per-file copies.
+pub fn check_close(a: &[f32], b: &[f32], tol: f32) {
+    assert_eq!(a.len(), b.len(), "length mismatch: {} vs {}", a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        if x.is_nan() && y.is_nan() {
+            continue;
+        }
+        assert!(
+            (x - y).abs() <= tol * (1.0 + y.abs()),
+            "idx {i}: {x} vs {y} (tol {tol})"
+        );
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -28,8 +28,7 @@ impl Tool for DeployLpdnn {
     }
     fn run(&self, ctx: &mut ToolCtx) -> Result<(), String> {
         let engine = ctx.engine()?.clone();
-        let platform = Platform::by_name(&ctx.param_str("platform", "jetson-nano"))
-            .ok_or("unknown platform")?;
+        let platform = Platform::by_name_or_err(&ctx.param_str("platform", "jetson-nano"))?;
         let episodes = ctx.param_usize("episodes", 60);
         let model = crate::training::tools::load_model(ctx.input("model")?)?;
         let m = &engine.manifest;
