@@ -1,0 +1,113 @@
+//! Cascade serving bench: end-to-end latency of a two-stage early-exit
+//! pipeline (cheap gate → heavy branchy model) at exit rates 0% / ~50% /
+//! 100%. The point being measured: a batch entering the downstream stage
+//! re-coalesces ONLY the gate's survivors into the smallest covering
+//! bucket, so the heavy stage's work — and the pipeline's latency —
+//! shrinks as the exit rate rises.
+#[path = "common.rs"]
+mod common;
+
+use bonseyes::lne::platform::Platform;
+use bonseyes::lne::quant_explore::f32_baseline;
+use bonseyes::lne::{ArenaPool, Graph, LayerKind, Padding, PoolKind, Prepared};
+use bonseyes::models;
+use bonseyes::serving::cascade::{Cascade, Gate, Stage, Transform};
+use bonseyes::serving::{InferenceSession, ServingMetrics, WorkerPool};
+use bonseyes::tensor::Tensor;
+use bonseyes::util::rng::Rng;
+use bonseyes::util::stats::median;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() {
+    common::banner("cascade", "two-stage early-exit pipeline: latency vs exit rate");
+    let reps = common::reps();
+    let n = common::scaled(32, 8);
+
+    // cheap gate: a tiny binary "wake" classifier ending in softmax, so
+    // its scores are probabilities and thresholds calibrate directly
+    let mut g = Graph::new("gate", (1, 12, 12));
+    g.push("conv1", LayerKind::Conv { k: (3, 3), stride: (1, 1), pad: Padding::Same, relu_fused: true }, 4);
+    g.push("gap", LayerKind::Pool { kind: PoolKind::Avg, k: 0, stride: 1, pad: 0, global: true }, 0);
+    g.push("fc", LayerKind::Fc { relu_fused: false }, 2);
+    g.push("prob", LayerKind::Softmax, 0);
+    let w = models::random_weights(&g, 5);
+    let gate_p = Arc::new(Prepared::new(g, w, Platform::pi4()).unwrap());
+    let gate_a = f32_baseline(&gate_p);
+
+    // heavy downstream: the branchy inceptionette in its own input space
+    let g = models::inceptionette::inceptionette();
+    let w = models::random_weights(&g, 7);
+    let cmd_p = Arc::new(Prepared::new(g, w, Platform::pi4()).unwrap());
+    let cmd_a = f32_baseline(&cmd_p);
+
+    let mut rng = Rng::new(3);
+    let samples: Vec<Vec<f32>> =
+        (0..n).map(|_| Tensor::randn(&[1, 12, 12], 1.0, &mut rng).data).collect();
+    let refs: Vec<&[f32]> = samples.iter().map(|v| v.as_slice()).collect();
+
+    // calibrate the ~50% threshold from the gate's top-1 confidences
+    let top1: Vec<f32> = samples
+        .iter()
+        .map(|s| {
+            let x = Tensor::from_vec(&[1, 1, 12, 12], s.clone());
+            let out = gate_p.run(&x, &gate_a);
+            out.output.data.iter().cloned().fold(f32::MIN, f32::max)
+        })
+        .collect();
+    let mut sorted = top1.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let t50 = sorted[n / 2];
+
+    println!("{n} items/batch, gate 1x12x12 -> heavy 3x16x16, {reps} reps\n");
+    println!("  exit-rate   survivors   end-to-end (median)");
+    for (label, thresh) in [("0%", 2.0f32), ("~50%", t50), ("100%", 0.0)] {
+        let pool = ArenaPool::new();
+        let workers = Arc::new(WorkerPool::new(2));
+        let metrics = Arc::new(ServingMetrics::default());
+        let gate = Stage::lne(
+            "gate",
+            Arc::clone(&gate_p),
+            gate_a.clone(),
+            &[n],
+            &[],
+            Gate::ConfidenceBelow(thresh),
+            Transform::identity(),
+            &pool,
+            Arc::clone(&workers),
+        )
+        .unwrap();
+        let heavy = Stage::lne(
+            "heavy",
+            Arc::clone(&cmd_p),
+            cmd_a.clone(),
+            &[1, 8, n],
+            &[],
+            Gate::ConfidenceBelow(0.0),
+            Transform { resize: Some(((1, 12, 12), (3, 16, 16))), renormalize: true },
+            &pool,
+            workers,
+        )
+        .unwrap();
+        let mut cascade = Cascade::new("bench")
+            .push(gate)
+            .unwrap()
+            .push(heavy)
+            .unwrap()
+            .with_metrics(Arc::clone(&metrics));
+        let _ = cascade.run_batch(n, &refs).unwrap(); // warm-up
+        let ms = median(
+            (0..reps)
+                .map(|_| {
+                    let t0 = Instant::now();
+                    let _ = cascade.run_batch(n, &refs).unwrap();
+                    t0.elapsed().as_secs_f64() * 1e3
+                })
+                .collect(),
+        );
+        let survivors = top1.iter().filter(|&&v| v < thresh).count();
+        println!("  {label:>9}   {survivors:9}   {ms:10.2} ms");
+    }
+    println!("\n(the heavy stage re-coalesces only gate survivors into its smallest");
+    println!(" covering bucket, so downstream work shrinks with the exit rate)");
+}

@@ -1,0 +1,105 @@
+//! Cascade serving quickstart: build a two-stage early-exit pipeline
+//! (cheap gate → heavier classifier), register it in a `ModelRouter` as
+//! ONE model, and serve a handful of requests through the dynamic
+//! batcher. Early-exited requests come back with the gate's answer; the
+//! rest run the downstream stage in its own input space. Per-stage
+//! accounting (items in/out, exit rate, latency, arena checkouts) is the
+//! same view `/metrics` serves under `cascade_stages`.
+//!
+//!     cargo run --example cascade_quickstart
+
+use bonseyes::lne::platform::Platform;
+use bonseyes::lne::quant_explore::f32_baseline;
+use bonseyes::lne::{Graph, LayerKind, Padding, PoolKind, Prepared};
+use bonseyes::models;
+use bonseyes::serving::cascade::{Cascade, Gate, Stage, Transform};
+use bonseyes::serving::{BatcherConfig, ModelRouter};
+use bonseyes::tensor::Tensor;
+use bonseyes::util::rng::Rng;
+use std::sync::Arc;
+
+fn main() {
+    let mut router = ModelRouter::with_threads(2);
+
+    // stage 0 — "wake": a tiny binary gate; only items whose top-1
+    // confidence stays below the threshold continue downstream
+    let mut g = Graph::new("wake", (1, 12, 12));
+    g.push("conv1", LayerKind::Conv { k: (3, 3), stride: (1, 1), pad: Padding::Same, relu_fused: true }, 4);
+    g.push("gap", LayerKind::Pool { kind: PoolKind::Avg, k: 0, stride: 1, pad: 0, global: true }, 0);
+    g.push("fc", LayerKind::Fc { relu_fused: false }, 2);
+    g.push("prob", LayerKind::Softmax, 0);
+    let w = models::random_weights(&g, 5);
+    let gate_p = Arc::new(Prepared::new(g, w, Platform::pi4()).unwrap());
+    let gate_a = f32_baseline(&gate_p);
+    let wake_names: Vec<String> = vec!["quiet".into(), "wake".into()];
+    let gate = Stage::lne(
+        "wake",
+        gate_p,
+        gate_a,
+        &[1, 8],
+        &wake_names,
+        Gate::ConfidenceBelow(0.75),
+        Transform::identity(),
+        &router.arena_pool,
+        Arc::clone(&router.worker_pool),
+    )
+    .unwrap();
+
+    // stage 1 — "command": the branchy inceptionette; the transform maps
+    // the ORIGINAL 1x12x12 payload into its 3x16x16 input space
+    let g = models::inceptionette::inceptionette();
+    let w = models::random_weights(&g, 7);
+    let cmd_p = Arc::new(Prepared::new(g, w, Platform::pi4()).unwrap());
+    let cmd_a = f32_baseline(&cmd_p);
+    let command = Stage::lne(
+        "command",
+        cmd_p,
+        cmd_a,
+        &[1, 8],
+        &[],
+        Gate::ConfidenceBelow(0.0), // final stage: gate unused
+        Transform { resize: Some(((1, 12, 12), (3, 16, 16))), renormalize: true },
+        &router.arena_pool,
+        Arc::clone(&router.worker_pool),
+    )
+    .unwrap();
+
+    let cascade = Cascade::new("wake-command").push(gate).unwrap().push(command).unwrap();
+    router
+        .register_cascade(cascade, BatcherConfig { max_wait_ms: 2.0, ..Default::default() })
+        .unwrap();
+
+    // serve a batch of requests through the router like any other model
+    let mut rng = Rng::new(17);
+    let tickets: Vec<_> = (0..8)
+        .map(|_| {
+            let x = Tensor::randn(&[1, 12, 12], 1.0, &mut rng).data;
+            router.infer_async(Some("wake-command"), x).unwrap()
+        })
+        .collect();
+    for (i, t) in tickets.into_iter().enumerate() {
+        let p = t.wait().unwrap();
+        let stage = if p.scores.len() == 2 { "wake (early exit)" } else { "command" };
+        println!("request {i}: {:<10} from {stage:18} ({} scores)", p.class, p.scores.len());
+    }
+
+    // the same per-stage accounting /metrics serves under `cascade_stages`
+    let snap = router.metrics.snapshot();
+    if let Some(stages) = snap.get("cascade_stages").as_obj() {
+        println!("\nper-stage accounting:");
+        for (key, s) in stages {
+            println!(
+                "  {key:24} in {:3}  out {:3}  early-exit {:3} ({:4.0}%)  arenas {}",
+                s.get("items_in").as_i64().unwrap_or(0),
+                s.get("items_out").as_i64().unwrap_or(0),
+                s.get("early_exits").as_i64().unwrap_or(0),
+                s.get("exit_rate").as_f64().unwrap_or(0.0) * 100.0,
+                s.get("arena_checkouts").as_i64().unwrap_or(0),
+            );
+        }
+    }
+    println!(
+        "shared arena pool: {} arenas across both stages",
+        router.arena_pool.arena_count()
+    );
+}

@@ -68,8 +68,8 @@ const USAGE: &str = "bonseyes — the Bonseyes AI pipeline (paper reproduction)
 USAGE:
   bonseyes pipeline run <workflow.json> [--store DIR] [--artifacts DIR] [--force]
   bonseyes pipeline serve [--addr 127.0.0.1:8080] [--store DIR] [--artifacts DIR]
-  bonseyes serve [--model ARCH] [--app DIR] [--lne-model ARCH] [--addr 127.0.0.1:8090] [--artifacts DIR] [--threads N]
-  bonseyes eval [--model inceptionette] [--threads N] [--reps 5]
+  bonseyes serve [--model ARCH] [--app DIR] [--lne-model ARCH] [--cascade NAME] [--addr 127.0.0.1:8090] [--artifacts DIR] [--threads N]
+  bonseyes eval [--model inceptionette] [--cascade NAME] [--threads N] [--reps 5]
   bonseyes iot-hub [--addr 127.0.0.1:8070] [--model ARCH] [--artifacts DIR]
   bonseyes nas [--ds] [--trials 120]
   bonseyes tools
@@ -79,6 +79,10 @@ USAGE:
 parallelism; 1 = sequential replay). Pools > 1 execute plans through the
 dep-counted work-stealing scheduler with intra-op GEMM partitioning;
 `eval` also reports the legacy barrier replay for comparison.
+
+--cascade serves/evaluates a staged early-exit pipeline (scenarios:
+kws-command, pose-classify); `eval --cascade` prints the per-stage
+items-in/out, early-exit rate and latency accounting.
 ";
 
 pub fn main_with(argv: &[String]) -> Result<()> {
@@ -155,7 +159,7 @@ fn serve(args: &Args) -> Result<()> {
         let model = ServableModel::from_artifact(std::path::Path::new(&args.get("app", "")))
             .map_err(|e| anyhow!(e))?;
         router.register_pjrt(&eng, model, cfg.clone())?;
-    } else if args.has("model") || !args.has("lne-model") {
+    } else if args.has("model") || (!args.has("lne-model") && !args.has("cascade")) {
         let eng = engine(args)?;
         let arch = args.get("model", "ds_kws9");
         router.register_pjrt(&eng, ServableModel::from_init(&eng, &arch)?, cfg.clone())?;
@@ -170,9 +174,21 @@ fn serve(args: &Args) -> Result<()> {
             crate::nas::evaluator::lne_prepared(&arch, 7, crate::lne::platform::Platform::pi4())
                 .map_err(|e| anyhow!(e))?;
         router
-            .register_lne(&name, p, a, &[1, 8, 32], &[], cfg)
+            .register_lne(&name, p, a, &[1, 8, 32], &[], cfg.clone())
             .map_err(|e| anyhow!(e))?;
         eprintln!("note: serving random LNE weights for {name} (plan/arena path)");
+    }
+    // staged early-exit pipeline served as one model
+    if args.has("cascade") {
+        let name = args.get("cascade", "kws-command");
+        let c = crate::serving::cascade::scenario(
+            &name,
+            &router.arena_pool,
+            Arc::clone(&router.worker_pool),
+        )
+        .map_err(|e| anyhow!(e))?;
+        router.register_cascade(c, cfg).map_err(|e| anyhow!(e))?;
+        eprintln!("note: serving cascade scenario '{name}' (random weights; per-stage accounting on /metrics)");
     }
     let addr = args.get("addr", "127.0.0.1:8090");
     let serving = Arc::new(router);
@@ -190,6 +206,9 @@ fn serve(args: &Args) -> Result<()> {
 fn eval(args: &Args) -> Result<()> {
     use crate::lne::planner::Arena;
 
+    if args.has("cascade") {
+        return eval_cascade(args);
+    }
     let name = args.get("model", "inceptionette");
     let reps: usize = args.get("reps", "5").parse().unwrap_or(5).max(1);
     let threads = pool_threads(args);
@@ -244,6 +263,61 @@ fn eval(args: &Args) -> Result<()> {
     println!(
         "  tasked replay ({threads:2}t)        {tasked:9.2} ms   ({:.2}x)   [{steals} steals, {subtasks} gemm subtasks]",
         seq / tasked.max(1e-9)
+    );
+    Ok(())
+}
+
+/// Drive a cascade scenario end-to-end through the router/batcher and
+/// print the per-stage accounting the gates earned: items in/out, early
+/// exits and per-stage latency (the `/metrics` `cascade_stages` view).
+fn eval_cascade(args: &Args) -> Result<()> {
+    let name = args.get("cascade", "kws-command");
+    let reps: usize = args.get("reps", "3").parse().unwrap_or(3).max(1);
+    let threads = pool_threads(args);
+    let mut router = ModelRouter::with_threads(threads);
+    let cascade = crate::serving::cascade::scenario(
+        &name,
+        &router.arena_pool,
+        Arc::clone(&router.worker_pool),
+    )
+    .map_err(|e| anyhow!(e))?;
+    router
+        .register_cascade(cascade, BatcherConfig { max_wait_ms: 2.0, ..Default::default() })
+        .map_err(|e| anyhow!(e))?;
+    let input_len = router.input_len(Some(name.as_str())).map_err(|e| anyhow!(e))?;
+    let mut rng = crate::util::rng::Rng::new(11);
+    let per_rep = 16usize;
+    for _ in 0..reps {
+        let tickets: Vec<_> = (0..per_rep)
+            .map(|_| {
+                router
+                    .infer_async(Some(name.as_str()), crate::testing::randn_vec(&mut rng, input_len, 1.0))
+                    .map_err(|e| anyhow!(e))
+            })
+            .collect::<Result<_>>()?;
+        for t in tickets {
+            t.wait().map_err(|e| anyhow!(e))?;
+        }
+    }
+    let snap = router.metrics.snapshot();
+    println!("cascade '{name}' ({threads} threads, {} items):", reps * per_rep);
+    if let Some(stages) = snap.get("cascade_stages").as_obj() {
+        for (key, s) in stages {
+            println!(
+                "  {key:24} in {:4}  out {:4}  early-exit {:4} ({:5.1}%)  infer {:8.2} ms mean  arenas {}",
+                s.get("items_in").as_i64().unwrap_or(0),
+                s.get("items_out").as_i64().unwrap_or(0),
+                s.get("early_exits").as_i64().unwrap_or(0),
+                s.get("exit_rate").as_f64().unwrap_or(0.0) * 100.0,
+                s.get("infer_ms_mean").as_f64().unwrap_or(0.0),
+                s.get("arena_checkouts").as_i64().unwrap_or(0),
+            );
+        }
+    }
+    println!(
+        "  shared arena pool: {} arenas, {} KB",
+        router.arena_pool.arena_count(),
+        router.arena_pool.total_bytes() / 1024
     );
     Ok(())
 }
@@ -334,6 +408,19 @@ mod tests {
     fn eval_subcommand_exercises_the_parallel_path() {
         let argv: Vec<String> =
             ["eval", "--model", "inceptionette", "--threads", "2", "--reps", "1"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        main_with(&argv).unwrap();
+    }
+
+    /// Tier-1 smoke of the cascade path: `eval --cascade` builds the
+    /// kws-command scenario, serves a rep through the router/batcher and
+    /// prints the per-stage accounting.
+    #[test]
+    fn eval_cascade_subcommand_prints_stage_accounting() {
+        let argv: Vec<String> =
+            ["eval", "--cascade", "kws-command", "--threads", "2", "--reps", "1"]
                 .iter()
                 .map(|s| s.to_string())
                 .collect();

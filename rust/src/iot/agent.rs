@@ -102,6 +102,107 @@ impl CloudAgent {
     }
 }
 
+/// The hybrid split of the two Fig 12 scenarios, built on cascade gating:
+/// the edge device runs the cascade's cheap *gate* stage locally and ships
+/// only gate-passing payloads to the hub's media endpoint, where the heavy
+/// downstream stage runs. Early-exited captures resolve on-device — only
+/// their result (a Measurement) ever leaves the device, never the payload,
+/// so the uplink carries exactly the survivors the gate earned.
+pub struct CascadeEdgeAgent {
+    pub device_id: String,
+    /// Local serving router hosting the gate-stage model.
+    pub gate: Arc<ModelRouter>,
+    /// Early-exit rule over the gate's prediction scores: `passes` ships
+    /// the payload to the hub, anything else is final on-device.
+    pub rule: crate::serving::cascade::Gate,
+    pub hub_url: String,
+    pub broker_url: String,
+    /// Hub-side model the survivors run under (media endpoint `model`
+    /// key; None = the hub's default route).
+    pub hub_model: Option<String>,
+    /// Payloads captured since construction.
+    pub captured: u64,
+    /// Payloads that passed the gate and were shipped to the hub.
+    pub shipped: u64,
+    /// Payloads resolved on-device by the gate (early exits).
+    pub exited: u64,
+    rng: Rng,
+}
+
+impl CascadeEdgeAgent {
+    pub fn new(
+        device_id: &str,
+        gate: Arc<ModelRouter>,
+        rule: crate::serving::cascade::Gate,
+        hub_url: &str,
+        broker_url: &str,
+        hub_model: Option<String>,
+    ) -> CascadeEdgeAgent {
+        CascadeEdgeAgent {
+            device_id: device_id.to_string(),
+            gate,
+            rule,
+            hub_url: hub_url.to_string(),
+            broker_url: broker_url.to_string(),
+            hub_model,
+            captured: 0,
+            shipped: 0,
+            exited: 0,
+            rng: Rng::new(fnv(device_id.as_bytes())),
+        }
+    }
+
+    /// Capture one synthetic utterance and triage it through the gate.
+    pub fn capture_and_triage(&mut self, true_class: usize) -> Result<Json, String> {
+        let nk = self.gate.num_classes(None)?.saturating_sub(2);
+        let audio = synth::generate(true_class, nk, &mut self.rng);
+        self.triage(true_class, audio)
+    }
+
+    /// Triage one raw payload: run the local gate stage, then either ship
+    /// the payload to the hub (gate passed) or report the gate's own
+    /// result to the broker (early exit — result only, no payload).
+    pub fn triage(&mut self, true_class: usize, payload: Vec<f32>) -> Result<Json, String> {
+        self.captured += 1;
+        let pred = self.gate.infer(None, payload.clone())?;
+        if self.rule.passes(&pred.scores) {
+            self.shipped += 1;
+            let mut fields = vec![
+                ("device", Json::str(self.device_id.clone())),
+                ("true_class", Json::from(true_class)),
+                (
+                    "audio",
+                    Json::arr(payload.iter().map(|&v| Json::num(v as f64)).collect()),
+                ),
+            ];
+            if let Some(m) = &self.hub_model {
+                fields.push(("model", Json::str(m.clone())));
+            }
+            let resp = client::post_json(&format!("{}/v1/media/kws", self.hub_url), &Json::obj(fields))
+                .map_err(|e| e.to_string())?;
+            if resp.status != 200 {
+                return Err(format!("hub returned {}", resp.status));
+            }
+            resp.json()
+        } else {
+            self.exited += 1;
+            let measurement = Json::obj(vec![
+                ("id", Json::str(format!("{}:last", self.device_id))),
+                ("type", Json::str("Measurement")),
+                ("device", Json::str(self.device_id.clone())),
+                ("keyword", Json::str(pred.class.clone())),
+                ("class_id", Json::from(pred.class_id)),
+                ("true_class", Json::from(true_class)),
+                ("stage", Json::str("gate")),
+                ("early_exit", Json::from(true)),
+            ]);
+            client::post_json(&format!("{}/v2/entities", self.broker_url), &measurement)
+                .map_err(|e| e.to_string())?;
+            Ok(measurement)
+        }
+    }
+}
+
 fn fnv(bytes: &[u8]) -> u64 {
     let mut h = 0xcbf29ce484222325u64;
     for &b in bytes {

@@ -6,7 +6,7 @@ pub mod agent;
 pub mod broker;
 pub mod media;
 
-pub use agent::{CloudAgent, EdgeAgent};
+pub use agent::{CascadeEdgeAgent, CloudAgent, EdgeAgent};
 pub use broker::{ContextBroker, Entity};
 pub use media::MediaModule;
 
@@ -58,6 +58,83 @@ mod tests {
         let m = broker.get("cloud-1:last").unwrap();
         assert_eq!(
             m.attrs.get("scenario").and_then(|s| s.as_str()),
+            Some("cloud-processing")
+        );
+        hub.stop();
+    }
+
+    /// The cascade split scenario, no artifacts needed: the edge runs an
+    /// LNE gate stage locally; early exits report only a Measurement to
+    /// the broker, survivors ship their raw payload to the hub's media
+    /// endpoint where the heavy stage runs.
+    #[test]
+    fn cascade_edge_agent_ships_only_gate_survivors() {
+        use crate::serving::cascade::Gate;
+        use crate::serving::session::tests::lne_toy;
+
+        // hub: heavy stage behind the media endpoint
+        let mut hub_router = ModelRouter::new();
+        let (hp, ha) = lne_toy();
+        hub_router
+            .register_lne(
+                "cmd",
+                hp,
+                ha,
+                &[1],
+                &[],
+                BatcherConfig { max_wait_ms: 1.0, ..Default::default() },
+            )
+            .unwrap();
+        let broker = ContextBroker::new();
+        let mut hub = MediaModule::serve_hub(
+            Arc::new(hub_router),
+            Arc::clone(&broker),
+            "127.0.0.1:0",
+        )
+        .unwrap();
+        let hub_url = format!("http://{}", hub.addr);
+
+        // edge: local gate stage only
+        let mut gate_router = ModelRouter::new();
+        let (gp, ga) = lne_toy();
+        let names: Vec<String> = vec!["hit".into(), "miss".into(), "noise".into()];
+        gate_router
+            .register_lne(
+                "gate",
+                gp,
+                ga,
+                &[1],
+                &names,
+                BatcherConfig { max_wait_ms: 1.0, ..Default::default() },
+            )
+            .unwrap();
+        let mut agent = CascadeEdgeAgent::new(
+            "edge-c",
+            Arc::new(gate_router),
+            Gate::ConfidenceBelow(0.0), // nobody passes: everything exits at the gate
+            &hub_url,
+            &hub_url, // broker routes are merged into the hub server
+            Some("cmd".into()),
+        );
+        let payload = vec![0.3f32; 72];
+        let m = agent.triage(1, payload.clone()).unwrap();
+        assert_eq!((agent.captured, agent.shipped, agent.exited), (1, 0, 1));
+        assert_eq!(m.get("early_exit").as_bool(), Some(true));
+        let stored = broker.get("edge-c:last").unwrap();
+        assert_eq!(stored.entity_type, "Measurement");
+        assert_eq!(stored.attrs.get("stage").and_then(|s| s.as_str()), Some("gate"));
+        // the gate's own class names answered — the payload never left
+        let kw = stored.attrs.get("keyword").and_then(|s| s.as_str()).unwrap();
+        assert!(names.iter().any(|n| n == kw));
+
+        // open the gate: the payload ships to the hub's heavy stage
+        agent.rule = Gate::ConfidenceBelow(1.1);
+        let resp = agent.triage(1, payload).unwrap();
+        assert_eq!((agent.captured, agent.shipped, agent.exited), (2, 1, 1));
+        assert!(resp.get("class").as_str().is_some());
+        let stored = broker.get("edge-c:last").unwrap();
+        assert_eq!(
+            stored.attrs.get("scenario").and_then(|s| s.as_str()),
             Some("cloud-processing")
         );
         hub.stop();

@@ -27,8 +27,10 @@
 use super::platform::Platform;
 use super::primitives::gemm::{bpack_words, gemm_packed, pack_a, PackParams};
 use crate::testing::randn_vec;
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 use std::collections::HashMap;
+use std::path::{Path, PathBuf};
 use std::sync::{Mutex, OnceLock};
 use std::time::Instant;
 
@@ -58,8 +60,10 @@ pub fn candidates(p: &Platform) -> Vec<PackParams> {
     }
 }
 
-/// Tile parameters for a profile: cached per `Platform::name`, swept once
-/// per process. Deterministic in-process (first writer wins under the
+/// Tile parameters for a profile: the in-process cache wins, then a
+/// persisted winner from the on-disk cache (so cold processes skip the
+/// sweep), then the timed sweep — whose winner is written back to disk
+/// best-effort. Deterministic in-process (first writer wins under the
 /// lock); bit-identical across processes because every candidate shares
 /// `kc` (the only numerics-relevant parameter).
 pub fn pack_params_for(p: &Platform) -> PackParams {
@@ -67,9 +71,96 @@ pub fn pack_params_for(p: &Platform) -> PackParams {
     if let Some(params) = map.get(&p.name) {
         return *params;
     }
+    let dir = cache_dir();
+    if let Some(params) = dir.as_deref().and_then(|d| load_from(d).remove(&p.name)) {
+        map.insert(p.name.clone(), params);
+        return params;
+    }
     let best = sweep(&candidates(p));
     map.insert(p.name.clone(), best);
+    if let Some(d) = dir.as_deref() {
+        store_to(d, &p.name, best);
+    }
     best
+}
+
+/// Directory the persisted autotune winners live in: `$BONSEYES_CACHE_DIR`
+/// when set (set it empty to disable persistence), else a fixed location
+/// under the OS temp dir. Winners can only ever change speed — `kc` is
+/// pinned and loads are validated against the live candidate set — so a
+/// stale or cross-process-shared cache is always safe to trust.
+fn cache_dir() -> Option<PathBuf> {
+    match std::env::var("BONSEYES_CACHE_DIR") {
+        Ok(d) if d.is_empty() => None,
+        Ok(d) => Some(PathBuf::from(d)),
+        Err(_) => Some(std::env::temp_dir().join("bonseyes-cache")),
+    }
+}
+
+fn cache_file(dir: &Path) -> PathBuf {
+    dir.join("autotune.json")
+}
+
+/// Load persisted winners from `dir` (`autotune.json`, an object keyed by
+/// platform name). Anything unreadable, unparseable, for an unknown
+/// profile, or not an exact member of that profile's *current* candidate
+/// set is silently dropped — the membership check re-establishes every
+/// structural invariant (pinned `kc`, supported tile, cache class), so a
+/// corrupt or stale file can never change behavior, only cost a sweep.
+pub fn load_from(dir: &Path) -> HashMap<String, PackParams> {
+    let mut out = HashMap::new();
+    let Ok(text) = std::fs::read_to_string(cache_file(dir)) else {
+        return out;
+    };
+    let Ok(json) = Json::parse(&text) else {
+        return out;
+    };
+    let Some(obj) = json.as_obj() else {
+        return out;
+    };
+    for (name, v) in obj {
+        let Some(p) = Platform::by_name(name) else {
+            continue;
+        };
+        let fields =
+            [v.get("mc"), v.get("kc"), v.get("nc"), v.get("mr"), v.get("nr")].map(|f| f.as_usize());
+        let [Some(mc), Some(kc), Some(nc), Some(mr), Some(nr)] = fields else {
+            continue;
+        };
+        let cand = PackParams { mc, kc, nc, mr, nr };
+        if candidates(&p).contains(&cand) {
+            out.insert(name.clone(), cand);
+        }
+    }
+    out
+}
+
+/// Best-effort merge-write of one profile's winner into `dir`'s cache
+/// file, preserving other profiles' entries. IO errors are swallowed:
+/// persistence is an optimization, never a requirement.
+pub fn store_to(dir: &Path, name: &str, params: PackParams) {
+    let mut all = load_from(dir);
+    all.insert(name.to_string(), params);
+    let mut names: Vec<&String> = all.keys().collect();
+    names.sort();
+    let entries: Vec<(&str, Json)> = names
+        .iter()
+        .map(|n| {
+            let p = all[*n];
+            (
+                n.as_str(),
+                Json::obj(vec![
+                    ("mc", Json::from(p.mc)),
+                    ("kc", Json::from(p.kc)),
+                    ("nc", Json::from(p.nc)),
+                    ("mr", Json::from(p.mr)),
+                    ("nr", Json::from(p.nr)),
+                ]),
+            )
+        })
+        .collect();
+    let _ = std::fs::create_dir_all(dir);
+    let _ = std::fs::write(cache_file(dir), Json::obj(entries).to_string());
 }
 
 /// Time each candidate on a synthetic conv-shaped GEMM; minimum of three
@@ -131,5 +222,47 @@ mod tests {
                 assert_eq!(c.kc, p.blocking.kc, "{}: {c:?}", p.name);
             }
         }
+    }
+
+    #[test]
+    fn disk_cache_roundtrips_and_merges() {
+        let dir =
+            std::env::temp_dir().join(format!("bonseyes-autotune-rt-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let p4 = Platform::pi4();
+        let w4 = candidates(&p4)[1];
+        store_to(&dir, &p4.name, w4);
+        assert_eq!(load_from(&dir).get(&p4.name), Some(&w4));
+        // a second profile merges in without clobbering the first
+        let p3 = Platform::pi3();
+        let w3 = candidates(&p3)[0];
+        store_to(&dir, &p3.name, w3);
+        let all = load_from(&dir);
+        assert_eq!(all.get(&p4.name), Some(&w4));
+        assert_eq!(all.get(&p3.name), Some(&w3));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_or_invalid_disk_entries_are_dropped_silently() {
+        let dir =
+            std::env::temp_dir().join(format!("bonseyes-autotune-bad-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        // missing dir / file: empty, no error
+        assert!(load_from(&dir).is_empty());
+        std::fs::create_dir_all(&dir).unwrap();
+        // unparseable file
+        std::fs::write(dir.join("autotune.json"), "{not json").unwrap();
+        assert!(load_from(&dir).is_empty());
+        // parseable but invalid winners: wrong kc, unknown profile,
+        // unsupported register tile — all fail candidate-set membership
+        let bad = r#"{
+            "pi4": {"mc": 64, "kc": 999, "nc": 256, "mr": 4, "nr": 8},
+            "mars-rover": {"mc": 64, "kc": 256, "nc": 256, "mr": 4, "nr": 8},
+            "pi3": {"mc": 64, "kc": 128, "nc": 64, "mr": 3, "nr": 5}
+        }"#;
+        std::fs::write(dir.join("autotune.json"), bad).unwrap();
+        assert!(load_from(&dir).is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

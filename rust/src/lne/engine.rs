@@ -38,6 +38,9 @@ pub struct Prepared {
     pub(crate) packed: HashMap<usize, Arc<PackedA>>,
     pub(crate) packed_q: HashMap<usize, Arc<PackedAI8>>,
     pub(crate) packed_h: HashMap<usize, Arc<PackedA>>,
+    /// Packed `W^T` panels for fc layers (the packed fc runs the transposed
+    /// problem `C^T = W^T @ X^T`; see `fc_packed_into`).
+    pub(crate) packed_fc: HashMap<usize, Arc<PackedA>>,
     /// Autotuned tile parameters for this platform (see `lne::autotune`);
     /// `packed*` panels above use its `mr`.
     pub(crate) pack_params: PackParams,
@@ -71,7 +74,26 @@ impl Prepared {
         let mut packed = HashMap::new();
         let mut packed_q = HashMap::new();
         let mut packed_h = HashMap::new();
+        let mut packed_fc = HashMap::new();
         for (i, layer) in graph.layers.iter().enumerate() {
+            if let LayerKind::Fc { .. } = layer.kind {
+                let w = weights
+                    .get(&layer.name)
+                    .ok_or_else(|| format!("missing weights for {}", layer.name))?;
+                let choices = applicable(&layer.kind, &platform);
+                if choices.contains(&ConvImpl::GemmBlocked) && !w.is_empty() {
+                    // transpose [in,out] -> [out,in]: the packed fc runs
+                    // C^T = W^T @ X^T with W^T as the frozen A side
+                    let (wi, wo) = (w[0].shape[0], w[0].shape[1]);
+                    let mut wt = vec![0.0f32; wo * wi];
+                    for r in 0..wi {
+                        for c in 0..wo {
+                            wt[c * wi + r] = w[0].data[r * wo + c];
+                        }
+                    }
+                    packed_fc.insert(i, Arc::new(pack_a(wo, wi, &wt, pack_params.mr)));
+                }
+            }
             if let LayerKind::Conv { .. } = layer.kind {
                 let w = weights
                     .get(&layer.name)
@@ -112,6 +134,7 @@ impl Prepared {
             packed,
             packed_q,
             packed_h,
+            packed_fc,
             pack_params,
             consumers,
         })

@@ -47,7 +47,7 @@ use super::primitives::gemm::{
     bpack_words, gemm_blocked_rows, gemm_packed, gemm_ref_rows, PackParams, PackedA,
 };
 use super::primitives::im2col::{
-    conv_im2col_into, conv_im2col_packed_into, fc_into, im2col, GemmImpl,
+    conv_im2col_into, conv_im2col_packed_into, fc_into, fc_packed_into, im2col, GemmImpl,
 };
 use super::primitives::int8::{
     bpack_bytes, conv_int8_into, conv_int8_q_packed_into, gemm_i8_packed, im2col_i8,
@@ -232,7 +232,16 @@ pub enum Op {
         w: Tensor,
         bias: Vec<f32>,
         gemm: GemmImpl,
+        /// Packed `W^T` panels (the packed fc runs the transposed problem
+        /// `C^T = W^T @ X^T`), frozen at prepare time. `Some` iff `gemm`
+        /// is `GemmImpl::Packed`.
+        pa: Option<Arc<PackedA>>,
         relu: bool,
+        /// Transpose scratch for the packed path (f32 lane): `X^T`
+        /// (in*batch) and `C^T` (out*batch). Zero-length on the
+        /// blocked/reference path.
+        xt: Span,
+        ct: Span,
     },
     /// Inference BN folded to per-channel scale/shift at plan time.
     BatchNorm { scale: Vec<f32>, shift: Vec<f32> },
@@ -256,6 +265,7 @@ impl Op {
             }
             Op::ConvInt8Q { cols_q, acc, .. } => ([None, None], Some(*cols_q), Some(*acc)),
             Op::ConvF16 { cols, .. } => ([Some(*cols), None], None, None),
+            Op::Fc { xt, ct, .. } if xt.len > 0 => ([Some(*xt), Some(*ct)], None, None),
             _ => ([None, None], None, None),
         }
     }
@@ -1085,15 +1095,30 @@ impl ExecPlan {
                     if w.len() < 2 {
                         return Err(format!("{}: fc needs weight + bias", layer.name));
                     }
-                    let gemm = match choice.unwrap_or(ConvImpl::GemmRef) {
-                        ConvImpl::GemmBlocked => GemmImpl::Blocked(blk),
-                        _ => GemmImpl::Reference,
+                    let (wi, wo) = (w[0].shape[0], w[0].shape[1]);
+                    let none = Span { off: 0, len: 0 };
+                    let (gemm, pa, xt, ct) = match choice.unwrap_or(ConvImpl::GemmRef) {
+                        ConvImpl::GemmBlocked => match p.packed_fc.get(&i) {
+                            // packed path: transposed problem on the frozen
+                            // W^T panels, with X^T/C^T transpose scratch
+                            Some(pa) => (
+                                GemmImpl::Packed(p.pack_params),
+                                Some(Arc::clone(pa)),
+                                Span { off: falloc.alloc(wi * batch), len: wi * batch },
+                                Span { off: falloc.alloc(wo * batch), len: wo * batch },
+                            ),
+                            None => (GemmImpl::Blocked(blk), None, none, none),
+                        },
+                        _ => (GemmImpl::Reference, None, none, none),
                     };
                     Op::Fc {
                         w: w[0].clone(),
                         bias: w[1].data.clone(),
                         gemm,
+                        pa,
                         relu: *relu_fused,
+                        xt,
+                        ct,
                     }
                 }
                 LayerKind::BatchNorm => {
@@ -1218,6 +1243,9 @@ impl ExecPlan {
                 }
                 Op::ConvF16 { params, .. } => {
                     pack_f_words = pack_f_words.max(bpack_words(*params));
+                }
+                Op::Fc { gemm: GemmImpl::Packed(pp), .. } => {
+                    pack_f_words = pack_f_words.max(bpack_words(*pp));
                 }
                 Op::ConvInt8Q { params, .. } => {
                     pack_q_bytes = pack_q_bytes.max(bpack_bytes(*params));
@@ -2388,15 +2416,33 @@ unsafe fn exec_step_on(step: &Step, lanes: Lanes, unit: usize) -> usize {
                     view_mut_at(fbase, &step.out),
                 );
             }
-            Op::Fc { w, bias, gemm, relu } => {
-                fc_into(
-                    view_at(fbase, &step.ins[0]),
-                    w.view(),
-                    bias,
-                    *gemm,
-                    *relu,
-                    view_mut_at(fbase, &step.out),
-                );
+            Op::Fc { w, bias, gemm, pa, relu, xt, ct } => {
+                if let (GemmImpl::Packed(pp), Some(pa)) = (gemm, pa) {
+                    let bpack = std::slice::from_raw_parts_mut(
+                        lanes.pf.add(unit * lanes.pf_stride),
+                        lanes.pf_stride,
+                    );
+                    packed = fc_packed_into(
+                        view_at(fbase, &step.ins[0]),
+                        pa,
+                        bias,
+                        *pp,
+                        *relu,
+                        span_mut_at(fbase, *xt),
+                        span_mut_at(fbase, *ct),
+                        bpack,
+                        view_mut_at(fbase, &step.out),
+                    );
+                } else {
+                    fc_into(
+                        view_at(fbase, &step.ins[0]),
+                        w.view(),
+                        bias,
+                        *gemm,
+                        *relu,
+                        view_mut_at(fbase, &step.out),
+                    );
+                }
             }
             Op::BatchNorm { scale, shift } => {
                 let out = view_mut_at(fbase, &step.out);

@@ -385,6 +385,77 @@ pub fn gemm_packed(
     if rows.is_empty() || n == 0 {
         return 0;
     }
+    let bias = match bias {
+        Some(b) => BiasRef::Cols(b),
+        None => BiasRef::None,
+    };
+    dispatch_packed(k, n, rows, pa, b, bias, c_rows, params, bpack)
+}
+
+/// Row-broadcast-bias variant of [`gemm_packed`]: row `r` of `c_rows` is
+/// initialized with `bias[rows.start + r]` (instead of a per-column bias
+/// vector) before the kc-block partials accumulate. This is the fc path's
+/// transposed problem — `C^T = W^T @ X^T` — where the fc output bias
+/// indexes *rows* of the transposed product. Keeping the bias in the init
+/// (rather than adding it after the GEMM) preserves the exact per-element
+/// FP sequence of the blocked path: init with bias, then one += of a
+/// single-accumulator ascending-k partial per kc-block.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_packed_rowbias(
+    k: usize,
+    n: usize,
+    rows: std::ops::Range<usize>,
+    pa: &PackedA,
+    b: &[f32],
+    bias: &[f32],
+    c_rows: &mut [f32],
+    params: PackParams,
+    bpack: &mut [f32],
+) -> usize {
+    assert_eq!(pa.k, k, "packed A K mismatch");
+    assert_eq!(pa.mr, params.mr, "packed A panel height != params.mr");
+    assert!(rows.start <= rows.end && rows.end <= pa.m, "row range {rows:?} out of bounds (m={})", pa.m);
+    assert!(
+        rows.start % params.mr == 0 && (rows.end % params.mr == 0 || rows.end == pa.m),
+        "row range {:?} not aligned to MR={} panel edges (m={})",
+        rows,
+        params.mr,
+        pa.m
+    );
+    assert!(bias.len() >= rows.end, "row bias shorter than row range");
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c_rows.len(), rows.len() * n);
+    assert!(bpack.len() >= bpack_words(params), "B-pack scratch too small");
+    if rows.is_empty() || n == 0 {
+        return 0;
+    }
+    dispatch_packed(k, n, rows, pa, b, BiasRef::Rows(bias), c_rows, params, bpack)
+}
+
+/// How the C init is seeded before kc-block partials accumulate.
+#[derive(Clone, Copy)]
+enum BiasRef<'a> {
+    None,
+    /// Per-column bias broadcast over rows (conv: bias indexes out channels
+    /// along N).
+    Cols(&'a [f32]),
+    /// Per-row bias broadcast over columns (transposed fc: bias indexes out
+    /// features along M).
+    Rows(&'a [f32]),
+}
+
+#[allow(clippy::too_many_arguments)]
+fn dispatch_packed(
+    k: usize,
+    n: usize,
+    rows: std::ops::Range<usize>,
+    pa: &PackedA,
+    b: &[f32],
+    bias: BiasRef<'_>,
+    c_rows: &mut [f32],
+    params: PackParams,
+    bpack: &mut [f32],
+) -> usize {
     match (params.mr, params.nr) {
         (4, 4) => packed_driver::<4, 4>(k, n, rows, pa, b, bias, c_rows, params, bpack),
         (4, 8) => packed_driver::<4, 8>(k, n, rows, pa, b, bias, c_rows, params, bpack),
@@ -407,15 +478,16 @@ fn packed_driver<const MR: usize, const NR: usize>(
     rows: std::ops::Range<usize>,
     pa: &PackedA,
     b: &[f32],
-    bias: Option<&[f32]>,
+    bias: BiasRef<'_>,
     c_rows: &mut [f32],
     params: PackParams,
     bpack: &mut [f32],
 ) -> usize {
-    for crow in c_rows.chunks_mut(n) {
+    for (r, crow) in c_rows.chunks_mut(n).enumerate() {
         match bias {
-            Some(bias) => crow.copy_from_slice(&bias[..n]),
-            None => crow.fill(0.0),
+            BiasRef::Cols(bias) => crow.copy_from_slice(&bias[..n]),
+            BiasRef::Rows(bias) => crow.fill(bias[rows.start + r]),
+            BiasRef::None => crow.fill(0.0),
         }
     }
     let mp0 = rows.start / MR;

@@ -281,6 +281,66 @@ pub fn fc(x: &Tensor, w: &Tensor, b: &[f32], gemm: GemmImpl, relu: bool) -> Tens
     out
 }
 
+/// Out-param packed fully connected. fc computes `C[n,out] = X[n,in] @
+/// W[in,out] + b` with the *activations* on the A side, so the weight
+/// panels can't be frozen directly — but the transposed problem can:
+/// `C^T[out,n] = W^T[out,in] @ X^T[in,n]` with the bias broadcast over
+/// rows. `pa` is `pack_a(out, in, W^T)` frozen at prepare time; `xt`
+/// (`in*n` f32s) and `ct` (`out*n` f32s) are caller scratch for the two
+/// transposes; `bpack` is the per-worker B-pack lane. Returns B blocks
+/// packed. Bit-exact with the blocked path at equal `kc`: the transpose
+/// moves data, not arithmetic, and `gemm_packed_rowbias` keeps the
+/// per-element init-bias-then-ascending-k-partials sequence.
+#[allow(clippy::too_many_arguments)]
+pub fn fc_packed_into(
+    x: TensorView,
+    pa: &PackedA,
+    b: &[f32],
+    params: PackParams,
+    relu: bool,
+    xt: &mut [f32],
+    ct: &mut [f32],
+    bpack: &mut [f32],
+    out: TensorViewMut,
+) -> usize {
+    let n = x.shape[0];
+    let in_dim: usize = x.shape[1..].iter().product();
+    let o = pa.m;
+    assert_eq!(pa.k, in_dim, "fc input {in_dim} vs packed weight k {}", pa.k);
+    debug_assert_eq!(out.len(), n * o);
+    debug_assert_eq!(xt.len(), in_dim * n);
+    debug_assert_eq!(ct.len(), o * n);
+    // X^T: xt[i*n + ni] = x[ni*in + i]
+    for ni in 0..n {
+        let row = &x.data[ni * in_dim..(ni + 1) * in_dim];
+        for (i, &v) in row.iter().enumerate() {
+            xt[i * n + ni] = v;
+        }
+    }
+    let packed = super::gemm::gemm_packed_rowbias(in_dim, n, 0..o, pa, xt, b, ct, params, bpack);
+    // transpose back, fusing relu: out[ni*o + j] = ct[j*n + ni]
+    for j in 0..o {
+        let crow = &ct[j * n..(j + 1) * n];
+        for (ni, &v) in crow.iter().enumerate() {
+            out.data[ni * o + j] = if relu && v < 0.0 { 0.0 } else { v };
+        }
+    }
+    packed
+}
+
+/// Allocating wrapper over `fc_packed_into` for callers outside the
+/// planned path (tests, legacy interpreter comparisons).
+pub fn fc_packed(x: &Tensor, pa: &PackedA, b: &[f32], params: PackParams, relu: bool) -> Tensor {
+    let n = x.shape[0];
+    let in_dim: usize = x.shape[1..].iter().product();
+    let mut xt = vec![0.0f32; in_dim * n];
+    let mut ct = vec![0.0f32; pa.m * n];
+    let mut bpack = vec![0.0f32; super::gemm::bpack_words(params)];
+    let mut out = Tensor::zeros(&[n, pa.m, 1, 1]);
+    fc_packed_into(x.view(), pa, b, params, relu, &mut xt, &mut ct, &mut bpack, out.view_mut());
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -343,6 +403,37 @@ mod tests {
                 let got = conv_im2col_packed(&x, &pa, (k, k), &b, (s, s), pad, params, true);
                 assert_eq!(got.shape, want.shape);
                 crate::testing::check_close(&got.data, &want.data, 0.0);
+            }
+        }
+    }
+
+    /// The transposed packed fc must be bit-identical to the blocked fc at
+    /// equal kc, for every supported register tile and batch size.
+    #[test]
+    fn packed_fc_is_bitexact_with_blocked_at_same_kc() {
+        use super::super::gemm::{pack_a, SUPPORTED_TILES};
+        let mut rng = Rng::new(11);
+        for &(n, in_dim, o) in &[(1usize, 12usize, 7usize), (4, 37, 16), (5, 8, 3)] {
+            let x = Tensor::randn(&[n, in_dim, 1, 1], 1.0, &mut rng);
+            let w = Tensor::randn(&[in_dim, o], 0.5, &mut rng);
+            let b: Vec<f32> = (0..o).map(|i| i as f32 * 0.1 - 0.3).collect();
+            // transpose [in,out] -> [out,in] for the A-side panels
+            let mut wt = vec![0.0f32; o * in_dim];
+            for i in 0..in_dim {
+                for j in 0..o {
+                    wt[j * in_dim + i] = w.data[i * o + j];
+                }
+            }
+            let blk = Blocking { mc: 16, kc: 8, nc: 16 };
+            for &(mr, nr) in &SUPPORTED_TILES {
+                let params = PackParams { mc: 8, kc: 8, nc: 16, mr, nr };
+                let pa = pack_a(o, in_dim, &wt, mr);
+                for relu in [false, true] {
+                    let want = fc(&x, &w, &b, GemmImpl::Blocked(blk), relu);
+                    let got = fc_packed(&x, &pa, &b, params, relu);
+                    assert_eq!(got.shape, want.shape);
+                    crate::testing::check_close(&got.data, &want.data, 0.0);
+                }
             }
         }
     }

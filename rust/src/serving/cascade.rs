@@ -1,0 +1,663 @@
+//! Cascade serving: staged multi-model pipelines with early-exit as a
+//! first-class session type (paper §7's applications are pipelines —
+//! wake-word → command, detector → classifier — not single models).
+//!
+//! A [`Cascade`] is an ordered list of [`Stage`]s, each wrapping any
+//! [`InferenceSession`] plus a pure [`Gate`] that decides per item whether
+//! it continues downstream or exits the pipeline early with the current
+//! stage's result, and a [`Transform`] mapping the original raw payload
+//! into the stage's input space (crop/resize/renormalize). The cascade
+//! itself implements `InferenceSession`, so it registers in a
+//! [`ModelRouter`](super::ModelRouter) and batches through the one
+//! [`DynamicBatcher`](super::DynamicBatcher) like any single model; a batch
+//! entering stage *k* re-coalesces only the survivors into the smallest
+//! covering bucket, so downstream (heavier) stages run at the shrunken
+//! batch the gates earned. Per-stage accounting (items in/out, early-exit
+//! counts, latency, build-time arena checkouts) lands in
+//! [`ServingMetrics`](super::ServingMetrics) under `cascade_stages` and is
+//! served by `/metrics`.
+
+use super::batcher::{argmax, Prediction};
+use super::metrics::ServingMetrics;
+use super::pool::WorkerPool;
+use super::session::{InferenceSession, LneSession};
+use crate::lne::engine::Prepared;
+use crate::lne::planner::ArenaPool;
+use crate::lne::plugin::Assignment;
+use std::sync::Arc;
+
+/// Pure per-item early-exit rule, evaluated on a stage's `Prediction::scores`.
+/// `passes` = the item *continues* to the next stage; anything else exits
+/// the pipeline early, keeping this stage's prediction as its final result.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Gate {
+    /// Continue iff the top-1 score is below the threshold — the classic
+    /// early-exit rule: a confident stage answers, an unsure one defers.
+    /// `ConfidenceBelow(0.0)` exits everything; a threshold above the
+    /// maximum possible score (e.g. 2.0 on softmaxed rows) forwards
+    /// everything.
+    ConfidenceBelow(f32),
+    /// Continue iff the argmax is this class — a wake-word gate: only the
+    /// trigger class wakes the downstream model.
+    ArgmaxIs(usize),
+    /// Continue iff any score exceeds the threshold — a detector gate:
+    /// "detection count > 0" forwards the item to the heavy stage.
+    AnyAbove(f32),
+}
+
+impl Gate {
+    /// Does this item continue downstream?
+    pub fn passes(&self, scores: &[f32]) -> bool {
+        match *self {
+            Gate::ConfidenceBelow(t) => scores.get(argmax(scores)).copied().unwrap_or(0.0) < t,
+            Gate::ArgmaxIs(c) => argmax(scores) == c,
+            Gate::AnyAbove(t) => scores.iter().any(|&s| s > t),
+        }
+    }
+}
+
+/// Maps the ORIGINAL raw payload into a stage's input space. Transforms
+/// never compound: stage *k*'s transform always sees the bytes the client
+/// submitted, so every stage states its full preprocessing explicitly.
+#[derive(Debug, Clone)]
+pub struct Transform {
+    /// Nearest-neighbor CHW resize `(from (c,h,w), to (c,h,w))`. Source
+    /// channels are clamped, so a mono payload replicates into an RGB
+    /// stage and extra source channels are dropped.
+    pub resize: Option<((usize, usize, usize), (usize, usize, usize))>,
+    /// Zero-mean / unit-std renormalization (after any resize).
+    pub renormalize: bool,
+}
+
+impl Transform {
+    pub fn identity() -> Transform {
+        Transform { resize: None, renormalize: false }
+    }
+
+    pub fn is_identity(&self) -> bool {
+        self.resize.is_none() && !self.renormalize
+    }
+
+    /// Apply to one raw payload; errors if the payload does not match the
+    /// declared source shape.
+    pub fn apply(&self, raw: &[f32]) -> Result<Vec<f32>, String> {
+        let mut v = match self.resize {
+            Some(((fc, fh, fw), (tc, th, tw))) => {
+                if raw.len() != fc * fh * fw {
+                    return Err(format!(
+                        "transform source is {fc}x{fh}x{fw} = {} values, payload has {}",
+                        fc * fh * fw,
+                        raw.len()
+                    ));
+                }
+                let mut out = vec![0.0f32; tc * th * tw];
+                for c in 0..tc {
+                    let sc = c.min(fc - 1);
+                    for y in 0..th {
+                        let sy = y * fh / th;
+                        for x in 0..tw {
+                            let sx = x * fw / tw;
+                            out[(c * th + y) * tw + x] = raw[(sc * fh + sy) * fw + sx];
+                        }
+                    }
+                }
+                out
+            }
+            None => raw.to_vec(),
+        };
+        if self.renormalize {
+            let n = v.len().max(1) as f32;
+            let mean = v.iter().sum::<f32>() / n;
+            let var = v.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / n;
+            let std = var.sqrt().max(1e-6);
+            for x in v.iter_mut() {
+                *x = (*x - mean) / std;
+            }
+        }
+        Ok(v)
+    }
+}
+
+/// One pipeline stage: a named session plus its gate and input transform.
+pub struct Stage {
+    pub name: String,
+    session: Box<dyn InferenceSession>,
+    pub gate: Gate,
+    pub transform: Transform,
+    /// New arenas this stage's bucket plans added to the shared pool at
+    /// build time (0 when every bucket borrowed an existing arena — the
+    /// cross-stage sharing `/metrics` surfaces per stage).
+    pub arena_checkouts: usize,
+}
+
+impl Stage {
+    /// Wrap any session as a stage (non-LNE backends report 0 checkouts).
+    pub fn new(
+        name: &str,
+        session: Box<dyn InferenceSession>,
+        gate: Gate,
+        transform: Transform,
+    ) -> Stage {
+        Stage { name: name.to_string(), session, gate, transform, arena_checkouts: 0 }
+    }
+
+    /// Build an LNE-backed stage whose bucket plans check arenas out of
+    /// the shared `pool` and replay on the shared `workers` — the same
+    /// resources every other model on the router uses. Records how many
+    /// *new* arenas this stage's checkout added to the pool.
+    #[allow(clippy::too_many_arguments)]
+    pub fn lne(
+        name: &str,
+        prepared: Arc<Prepared>,
+        assignment: Assignment,
+        batches: &[usize],
+        classes: &[String],
+        gate: Gate,
+        transform: Transform,
+        pool: &ArenaPool,
+        workers: Arc<WorkerPool>,
+    ) -> Result<Stage, String> {
+        let before = pool.arena_count();
+        let session = LneSession::new(prepared, assignment, batches, classes, pool, workers)?;
+        let arena_checkouts = pool.arena_count() - before;
+        Ok(Stage {
+            name: name.to_string(),
+            session: Box::new(session),
+            gate,
+            transform,
+            arena_checkouts,
+        })
+    }
+}
+
+/// Smallest compiled bucket covering `n` items (`sizes` ascending); falls
+/// back to the largest when nothing covers (callers chunk by the largest
+/// bucket first, so this only triggers on misuse).
+pub fn pick_bucket(sizes: &[usize], n: usize) -> usize {
+    sizes.iter().copied().find(|&b| b >= n).unwrap_or_else(|| *sizes.last().unwrap())
+}
+
+/// An ordered multi-model pipeline served as one model. Buckets and input
+/// length come from stage 0 (the entry point); `classes()` reports the
+/// final stage's labels, but each returned `Prediction` is self-contained
+/// (class string + scores of whichever stage answered), so early-exited
+/// items are well-formed even when stages disagree on label sets.
+pub struct Cascade {
+    name: String,
+    stages: Vec<Stage>,
+    buckets: Vec<usize>,
+    input_len: usize,
+    classes: Vec<String>,
+    metrics: Option<Arc<ServingMetrics>>,
+}
+
+impl Cascade {
+    pub fn new(name: &str) -> Cascade {
+        Cascade {
+            name: name.to_string(),
+            stages: Vec::new(),
+            buckets: Vec::new(),
+            input_len: 0,
+            classes: Vec::new(),
+            metrics: None,
+        }
+    }
+
+    /// Append a stage. Stage names must be unique (they key the per-stage
+    /// metrics), and stage 0's transform must be the identity — it
+    /// receives the raw request the batcher already validated against
+    /// `input_len()`.
+    pub fn push(mut self, stage: Stage) -> Result<Cascade, String> {
+        if self.stages.iter().any(|s| s.name == stage.name) {
+            return Err(format!("cascade '{}': duplicate stage '{}'", self.name, stage.name));
+        }
+        if self.stages.is_empty() {
+            if !stage.transform.is_identity() {
+                return Err(format!(
+                    "cascade '{}': stage 0 receives the raw request; its transform must be identity",
+                    self.name
+                ));
+            }
+            self.buckets = stage.session.buckets().to_vec();
+            self.input_len = stage.session.input_len();
+        }
+        self.classes = stage.session.classes();
+        self.stages.push(stage);
+        Ok(self)
+    }
+
+    /// Attach serving metrics (call after all stages are pushed): records
+    /// each stage's build-time arena checkouts now, and per-stage item /
+    /// latency accounting on every batch from here on.
+    pub fn with_metrics(mut self, metrics: Arc<ServingMetrics>) -> Cascade {
+        for (k, s) in self.stages.iter().enumerate() {
+            metrics.record_stage_arenas(&self.name, k, &s.name, s.arena_checkouts);
+        }
+        self.metrics = Some(metrics);
+        self
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn stage_names(&self) -> Vec<String> {
+        self.stages.iter().map(|s| s.name.clone()).collect()
+    }
+}
+
+impl InferenceSession for Cascade {
+    fn buckets(&self) -> &[usize] {
+        &self.buckets
+    }
+
+    fn input_len(&self) -> usize {
+        self.input_len
+    }
+
+    fn classes(&self) -> Vec<String> {
+        self.classes.clone()
+    }
+
+    fn run_batch(&mut self, bucket: usize, inputs: &[&[f32]]) -> Result<Vec<Prediction>, String> {
+        if self.stages.is_empty() {
+            return Err(format!("cascade '{}' has no stages", self.name));
+        }
+        let n = inputs.len();
+        let nstages = self.stages.len();
+        let mut results: Vec<Option<Prediction>> = Vec::new();
+        results.resize_with(n, || None);
+        // indices (into the submitted batch) still flowing downstream
+        let mut live: Vec<usize> = (0..n).collect();
+        for (k, stage) in self.stages.iter_mut().enumerate() {
+            if live.is_empty() {
+                break;
+            }
+            let last = k + 1 == nstages;
+            // survivors enter this stage in its own input space; the
+            // transform always maps the ORIGINAL payload (no compounding)
+            let payloads: Vec<Vec<f32>> = if k == 0 {
+                Vec::new()
+            } else {
+                live.iter()
+                    .map(|&i| stage.transform.apply(inputs[i]))
+                    .collect::<Result<_, _>>()?
+            };
+            let sizes = stage.session.buckets().to_vec();
+            let cap = if k == 0 { bucket } else { *sizes.last().unwrap() };
+            let t0 = std::time::Instant::now();
+            let mut preds: Vec<Prediction> = Vec::with_capacity(live.len());
+            let mut off = 0;
+            while off < live.len() {
+                let take = (live.len() - off).min(cap);
+                let chunk: Vec<&[f32]> = if k == 0 {
+                    live[off..off + take].iter().map(|&i| inputs[i]).collect()
+                } else {
+                    payloads[off..off + take].iter().map(|v| v.as_slice()).collect()
+                };
+                // stage 0 runs the bucket the batcher chose; downstream
+                // stages re-coalesce survivors into the smallest covering
+                // bucket, chunking by the largest when they overflow it
+                let b = if k == 0 { bucket } else { pick_bucket(&sizes, take) };
+                preds.extend(stage.session.run_batch(b, &chunk)?);
+                off += take;
+            }
+            let infer_ms = t0.elapsed().as_secs_f64() * 1e3;
+            let mut next_live = Vec::with_capacity(live.len());
+            for (&i, p) in live.iter().zip(preds.into_iter()) {
+                if !last && stage.gate.passes(&p.scores) {
+                    next_live.push(i);
+                }
+                // keep this stage's result; overwritten if it survives
+                results[i] = Some(p);
+            }
+            let (items_in, items_out) = (live.len(), next_live.len());
+            let early_exits = if last { 0 } else { items_in - items_out };
+            if let Some(m) = &self.metrics {
+                m.record_stage(&self.name, k, &stage.name, items_in, items_out, early_exits, infer_ms);
+            }
+            live = next_live;
+        }
+        results
+            .into_iter()
+            .map(|p| p.ok_or_else(|| format!("cascade '{}' lost an item", self.name)))
+            .collect()
+    }
+}
+
+/// Registered cascade scenarios, constructible by name (CLI `serve
+/// --cascade` / `eval --cascade`, benches, examples).
+pub const SCENARIOS: [&str; 2] = ["kws-command", "pose-classify"];
+
+/// The 12 KWS classes (10 keywords + silence + unknown) the paper's §5
+/// dataset uses; `kws-command` wakes on "go".
+pub const KWS_CLASSES: [&str; 12] = [
+    "yes", "no", "up", "down", "left", "right", "on", "off", "stop", "go", "silence", "unknown",
+];
+
+/// Build a named two-stage cascade scenario against the given shared pool
+/// and workers (a router's `arena_pool` / `worker_pool`). Both scenarios
+/// carry random weights — the pipelines demonstrate structure (gating,
+/// re-coalescing, transforms), not trained accuracy.
+pub fn scenario(
+    name: &str,
+    pool: &ArenaPool,
+    workers: Arc<WorkerPool>,
+) -> Result<Cascade, String> {
+    match name {
+        "kws-command" => kws_command(pool, workers),
+        "pose-classify" => pose_classify(pool, workers),
+        _ => Err(format!("unknown cascade scenario '{name}' (try {SCENARIOS:?})")),
+    }
+}
+
+/// KWS wake-word gate → command classifier (paper §7.1): a tiny `kws9`
+/// model listens for the wake word ("go"); only waking utterances run the
+/// heavier branchy command model, in its own input space.
+fn kws_command(pool: &ArenaPool, workers: Arc<WorkerPool>) -> Result<Cascade, String> {
+    let arch = crate::nas::space::paper_arch("kws9").ok_or("kws9 missing from the paper table")?;
+    let (gp, ga) =
+        crate::nas::evaluator::lne_prepared(&arch, 7, crate::lne::platform::Platform::pi4())?;
+    let from = gp.graph.input;
+    let kws: Vec<String> = KWS_CLASSES.iter().map(|s| s.to_string()).collect();
+    let wake = KWS_CLASSES.iter().position(|&c| c == "go").unwrap();
+    let gate = Stage::lne(
+        "wake",
+        gp,
+        ga,
+        &[1, 8],
+        &kws,
+        Gate::ArgmaxIs(wake),
+        Transform::identity(),
+        pool,
+        Arc::clone(&workers),
+    )?;
+    let g = crate::models::inceptionette::inceptionette();
+    let w = crate::models::random_weights(&g, 7);
+    let cp = Arc::new(Prepared::new(g, w, crate::lne::platform::Platform::pi4())?);
+    let ca = crate::lne::quant_explore::f32_baseline(&cp);
+    let to = cp.graph.input;
+    let command = Stage::lne(
+        "command",
+        cp,
+        ca,
+        &[1, 8],
+        &[],
+        Gate::ConfidenceBelow(0.0),
+        Transform { resize: Some((from, to)), renormalize: true },
+        pool,
+        workers,
+    )?;
+    Cascade::new("kws-command").push(gate)?.push(command)
+}
+
+/// Pose/detector gate → ImageNet classifier (paper Figs 14-15 models):
+/// the pose fields act as a person detector — frames with any confident
+/// field forward a resized crop to the classifier.
+fn pose_classify(pool: &ArenaPool, workers: Arc<WorkerPool>) -> Result<Cascade, String> {
+    let g = crate::models::pose::pose_resnet(18);
+    let w = crate::models::random_weights(&g, 7);
+    let gp = Arc::new(Prepared::new(g, w, crate::lne::platform::Platform::pi4())?);
+    let ga = crate::lne::quant_explore::f32_baseline(&gp);
+    let from = gp.graph.input;
+    let gate = Stage::lne(
+        "pose-gate",
+        gp,
+        ga,
+        &[1, 2],
+        &[],
+        Gate::AnyAbove(1e-3),
+        Transform::identity(),
+        pool,
+        Arc::clone(&workers),
+    )?;
+    let g = crate::models::imagenet::squeezenet();
+    let w = crate::models::random_weights(&g, 8);
+    let cp = Arc::new(Prepared::new(g, w, crate::lne::platform::Platform::pi4())?);
+    let ca = crate::lne::quant_explore::f32_baseline(&cp);
+    let to = cp.graph.input;
+    let classify = Stage::lne(
+        "classify",
+        cp,
+        ca,
+        &[1, 2],
+        &[],
+        Gate::ConfidenceBelow(0.0),
+        Transform { resize: Some((from, to)), renormalize: true },
+        pool,
+        workers,
+    )?;
+    Cascade::new("pose-classify").push(gate)?.push(classify)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::session::tests::lne_toy;
+    use super::*;
+    use crate::lne::graph::{Graph, LayerKind, Padding, PoolKind};
+    use crate::lne::platform::Platform;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+
+    fn workers(n: usize) -> Arc<WorkerPool> {
+        Arc::new(WorkerPool::new(n))
+    }
+
+    /// A second toy model with a DIFFERENT arena profile than `lne_toy`:
+    /// larger input, more channels, 4 classes, no trailing softmax.
+    fn lne_toy_big() -> (Arc<Prepared>, Assignment) {
+        let mut g = Graph::new("serve-big", (3, 8, 8));
+        g.push("conv1", LayerKind::Conv { k: (3, 3), stride: (1, 1), pad: Padding::Same, relu_fused: true }, 8);
+        g.push("pool", LayerKind::Pool { kind: PoolKind::Avg, k: 0, stride: 1, pad: 0, global: true }, 0);
+        g.push("fc", LayerKind::Fc { relu_fused: false }, 4);
+        let w = crate::models::random_weights(&g, 11);
+        let p = Arc::new(Prepared::new(g, w, Platform::pi4()).unwrap());
+        let a = crate::lne::quant_explore::f32_baseline(&p);
+        (p, a)
+    }
+
+    #[test]
+    fn gate_semantics() {
+        let scores = [0.1f32, 0.7, 0.2];
+        assert!(Gate::ConfidenceBelow(0.8).passes(&scores));
+        assert!(!Gate::ConfidenceBelow(0.5).passes(&scores));
+        assert!(!Gate::ConfidenceBelow(0.0).passes(&scores));
+        assert!(Gate::ArgmaxIs(1).passes(&scores));
+        assert!(!Gate::ArgmaxIs(0).passes(&scores));
+        assert!(Gate::AnyAbove(0.6).passes(&scores));
+        assert!(!Gate::AnyAbove(0.9).passes(&scores));
+    }
+
+    #[test]
+    fn transform_resizes_with_channel_clamp_and_renormalizes() {
+        let id = Transform::identity();
+        assert!(id.is_identity());
+        let raw = vec![1.0f32, 2.0, 3.0, 4.0];
+        assert_eq!(id.apply(&raw).unwrap(), raw);
+
+        // mono 1x2x2 -> RGB 3x2x2: channel clamp replicates the source
+        let t = Transform { resize: Some(((1, 2, 2), (3, 2, 2))), renormalize: false };
+        let out = t.apply(&raw).unwrap();
+        assert_eq!(out.len(), 12);
+        assert_eq!(&out[0..4], &raw[..]);
+        assert_eq!(&out[4..8], &raw[..]);
+        assert_eq!(&out[8..12], &raw[..]);
+        // wrong payload length is rejected
+        assert!(t.apply(&raw[..3]).is_err());
+
+        // downscale 1x4x4 -> 1x2x2 picks nearest-neighbor sources
+        let src: Vec<f32> = (0..16).map(|v| v as f32).collect();
+        let d = Transform { resize: Some(((1, 4, 4), (1, 2, 2))), renormalize: false };
+        assert_eq!(d.apply(&src).unwrap(), vec![0.0, 2.0, 8.0, 10.0]);
+
+        // renormalize -> zero mean, unit std
+        let r = Transform { resize: None, renormalize: true };
+        let v = r.apply(&src).unwrap();
+        let mean: f32 = v.iter().sum::<f32>() / v.len() as f32;
+        let var: f32 = v.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / v.len() as f32;
+        assert!(mean.abs() < 1e-5, "mean {mean}");
+        assert!((var - 1.0).abs() < 1e-4, "var {var}");
+    }
+
+    #[test]
+    fn pick_bucket_prefers_smallest_covering() {
+        assert_eq!(pick_bucket(&[1, 4, 8], 1), 1);
+        assert_eq!(pick_bucket(&[1, 4, 8], 3), 4);
+        assert_eq!(pick_bucket(&[1, 4, 8], 4), 4);
+        assert_eq!(pick_bucket(&[1, 4, 8], 7), 8);
+        // nothing covers -> largest (callers chunk before this happens)
+        assert_eq!(pick_bucket(&[1, 4], 9), 4);
+    }
+
+    #[test]
+    fn cascade_rejects_duplicate_stage_names_and_nonidentity_entry() {
+        let pool = ArenaPool::new();
+        let w = workers(1);
+        let mk = |gate| {
+            let (p, a) = lne_toy();
+            Stage::lne("s", p, a, &[1], &[], gate, Transform::identity(), &pool, Arc::clone(&w))
+                .unwrap()
+        };
+        let c = Cascade::new("dup").push(mk(Gate::ConfidenceBelow(1.1))).unwrap();
+        assert!(c.push(mk(Gate::ConfidenceBelow(1.1))).is_err());
+
+        let (p, a) = lne_toy();
+        let bad = Stage::lne(
+            "entry",
+            p,
+            a,
+            &[1],
+            &[],
+            Gate::ConfidenceBelow(1.1),
+            Transform { resize: None, renormalize: true },
+            &pool,
+            w,
+        )
+        .unwrap();
+        assert!(Cascade::new("bad").push(bad).is_err());
+    }
+
+    /// Early-exited items keep the gate stage's prediction (its own class
+    /// set) and the downstream stage never sees them — proven by the
+    /// per-stage items-in/items-out accounting.
+    #[test]
+    fn early_exit_returns_gate_result_and_skips_downstream() {
+        let mut rng = Rng::new(21);
+        let samples: Vec<Vec<f32>> =
+            (0..4).map(|_| Tensor::randn(&[2, 6, 6], 1.0, &mut rng).data).collect();
+        let refs: Vec<&[f32]> = samples.iter().map(|v| v.as_slice()).collect();
+
+        // threshold 0.0: nobody passes the gate -> 100% early exit
+        for (thresh, expect_exits) in [(0.0f32, 4usize), (1.1, 0)] {
+            let pool = ArenaPool::new();
+            let w = workers(2);
+            let metrics = Arc::new(ServingMetrics::default());
+            let (gp, ga) = lne_toy();
+            let gate = Stage::lne(
+                "gate",
+                gp,
+                ga,
+                &[1, 4],
+                &[],
+                Gate::ConfidenceBelow(thresh),
+                Transform::identity(),
+                &pool,
+                Arc::clone(&w),
+            )
+            .unwrap();
+            let (cp, ca) = lne_toy_big();
+            let heavy = Stage::lne(
+                "heavy",
+                cp,
+                ca,
+                &[1, 4],
+                &[],
+                Gate::ConfidenceBelow(0.0),
+                Transform { resize: Some(((2, 6, 6), (3, 8, 8))), renormalize: true },
+                &pool,
+                w,
+            )
+            .unwrap();
+            let mut cascade = Cascade::new("toy")
+                .push(gate)
+                .unwrap()
+                .push(heavy)
+                .unwrap()
+                .with_metrics(Arc::clone(&metrics));
+            assert_eq!(cascade.buckets(), &[1, 4]);
+            assert_eq!(cascade.input_len(), 72);
+            assert_eq!(cascade.classes().len(), 4, "cascade reports the final stage's classes");
+
+            let preds = cascade.run_batch(4, &refs).unwrap();
+            assert_eq!(preds.len(), 4);
+            for p in &preds {
+                // gate answers carry 3 scores (toy), heavy answers 4
+                let expect = if expect_exits == 4 { 3 } else { 4 };
+                assert_eq!(p.scores.len(), expect);
+            }
+            let snap = metrics.snapshot();
+            let g = snap.get("cascade_stages").get("toy/0:gate");
+            assert_eq!(g.get("items_in").as_i64(), Some(4));
+            assert_eq!(g.get("items_out").as_i64(), Some(4 - expect_exits as i64));
+            assert_eq!(g.get("early_exits").as_i64(), Some(expect_exits as i64));
+            let h = snap.get("cascade_stages").get("toy/1:heavy");
+            if expect_exits == 4 {
+                assert!(h.as_obj().is_none(), "skipped stage must record nothing");
+            } else {
+                assert_eq!(h.get("items_in").as_i64(), Some(4));
+                assert_eq!(h.get("items_out").as_i64(), Some(0), "last stage forwards nothing");
+                assert_eq!(h.get("early_exits").as_i64(), Some(0));
+            }
+        }
+    }
+
+    /// Satellite: mixed cascade stage shapes on ONE shared pool. The
+    /// small stage's buckets all fit inside the big stage's arena, so
+    /// compatible-profile lending keeps the pool at the covering arena
+    /// count — not stages x buckets.
+    #[test]
+    fn mixed_stage_shapes_lend_arenas_across_profiles() {
+        let pool = ArenaPool::new();
+        let w = workers(1);
+        let (bp, ba) = lne_toy_big();
+        let big = Stage::lne(
+            "big",
+            bp,
+            ba,
+            &[1, 4],
+            &[],
+            Gate::ConfidenceBelow(1.1),
+            Transform::identity(),
+            &pool,
+            Arc::clone(&w),
+        )
+        .unwrap();
+        assert_eq!(pool.arena_count(), 1, "batch-1 borrows the batch-4 arena");
+        assert_eq!(big.arena_checkouts, 1);
+        let (sp, sa) = lne_toy();
+        let small = Stage::lne(
+            "small",
+            sp,
+            sa,
+            &[1, 2],
+            &[],
+            Gate::ConfidenceBelow(0.0),
+            Transform { resize: Some(((3, 8, 8), (2, 6, 6))), renormalize: false },
+            &pool,
+            w,
+        )
+        .unwrap();
+        // 2 stages x 2 buckets = 4 plans, but every lane of the small
+        // stage's plans fits under the big stage's high-water marks ->
+        // the pool must not grow beyond the covering arena count (1)
+        assert_eq!(pool.arena_count(), 1, "small-stage buckets must borrow, not allocate");
+        assert_eq!(small.arena_checkouts, 0);
+        // wire them into an actual cascade to prove the lent arenas serve
+        let mut cascade =
+            Cascade::new("mixed").push(big).unwrap().push(small).unwrap();
+        let x = vec![0.3f32; 3 * 8 * 8];
+        let preds = cascade.run_batch(4, &[x.as_slice(), x.as_slice()]).unwrap();
+        assert_eq!(preds.len(), 2);
+        assert_eq!(pool.arena_count(), 1);
+    }
+}

@@ -43,6 +43,23 @@ struct Inner {
     subtasks: Welford,
     /// Total partitioned subtasks across all replays.
     subtasks_total: u64,
+    /// Per-cascade-stage accounting, keyed `"{cascade}/{idx}:{stage}"`
+    /// (the index prefix keeps BTreeMap order = pipeline order).
+    stages: BTreeMap<String, StageStats>,
+}
+
+/// One cascade stage's accounting (see `serving::cascade`): how many items
+/// entered it, how many its gate passed downstream, how many exited the
+/// pipeline early with this stage's result, stage replay latency, and the
+/// arenas its bucket plans checked out of the shared pool at build time.
+#[derive(Default)]
+struct StageStats {
+    items_in: u64,
+    items_out: u64,
+    early_exits: u64,
+    batches: u64,
+    infer_ms: Welford,
+    arena_checkouts: u64,
 }
 
 impl ServingMetrics {
@@ -92,12 +109,68 @@ impl ServingMetrics {
         i.subtasks_total += subtasks as u64;
     }
 
+    /// Record one cascade stage execution over a (possibly re-coalesced)
+    /// batch: `items_in` entered the stage, `items_out` passed its gate
+    /// downstream, `early_exits` left the pipeline here with this stage's
+    /// result (`items_in - items_out` on non-final stages, 0 on the last).
+    pub fn record_stage(
+        &self,
+        cascade: &str,
+        idx: usize,
+        stage: &str,
+        items_in: usize,
+        items_out: usize,
+        early_exits: usize,
+        infer_ms: f64,
+    ) {
+        let mut i = self.inner.lock().unwrap();
+        let s = i.stages.entry(format!("{cascade}/{idx}:{stage}")).or_default();
+        s.items_in += items_in as u64;
+        s.items_out += items_out as u64;
+        s.early_exits += early_exits as u64;
+        s.batches += 1;
+        s.infer_ms.push(infer_ms);
+    }
+
+    /// Record how many arenas a cascade stage's bucket plans checked out
+    /// of the shared pool when the stage was built (a build-time fact,
+    /// recorded once so `/metrics` shows cross-stage arena sharing).
+    pub fn record_stage_arenas(&self, cascade: &str, idx: usize, stage: &str, checkouts: usize) {
+        let mut i = self.inner.lock().unwrap();
+        let s = i.stages.entry(format!("{cascade}/{idx}:{stage}")).or_default();
+        s.arena_checkouts = checkouts as u64;
+    }
+
     pub fn snapshot(&self) -> Json {
         let i = self.inner.lock().unwrap();
         let flushes: BTreeMap<String, Json> = i
             .bucket_flushes
             .iter()
             .map(|(&b, &n)| (format!("b{b}"), Json::from(n as i64)))
+            .collect();
+        let stages: BTreeMap<String, Json> = i
+            .stages
+            .iter()
+            .map(|(k, s)| {
+                let exit_rate = if s.items_in > 0 {
+                    s.early_exits as f64 / s.items_in as f64
+                } else {
+                    0.0
+                };
+                (
+                    k.clone(),
+                    Json::obj(vec![
+                        ("items_in", Json::from(s.items_in as i64)),
+                        ("items_out", Json::from(s.items_out as i64)),
+                        ("early_exits", Json::from(s.early_exits as i64)),
+                        ("exit_rate", Json::num(exit_rate)),
+                        ("batches", Json::from(s.batches as i64)),
+                        ("infer_ms_mean", Json::num(s.infer_ms.mean())),
+                        ("infer_ms_max", Json::num(s.infer_ms.max)),
+                        ("arena_checkouts", Json::from(s.arena_checkouts as i64)),
+                    ]),
+                )
+            })
             .collect();
         Json::obj(vec![
             ("requests", Json::from(i.requests as i64)),
@@ -122,6 +195,7 @@ impl ServingMetrics {
             ("subtasks_total", Json::from(i.subtasks_total as i64)),
             ("subtasks_mean", Json::num(i.subtasks.mean())),
             ("subtasks_max", Json::num(i.subtasks.max)),
+            ("cascade_stages", Json::Obj(stages)),
         ])
     }
 }
@@ -163,5 +237,24 @@ mod tests {
         assert!((s.get("steals_mean").as_f64().unwrap() - 3.0).abs() < 1e-9);
         assert_eq!(s.get("subtasks_total").as_i64(), Some(8));
         assert!((s.get("subtasks_max").as_f64().unwrap() - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cascade_stage_accounting_aggregates() {
+        let m = ServingMetrics::default();
+        m.record_stage("kws", 0, "gate", 4, 1, 3, 2.0);
+        m.record_stage("kws", 0, "gate", 2, 2, 0, 4.0);
+        m.record_stage("kws", 1, "command", 3, 0, 0, 9.0);
+        m.record_stage_arenas("kws", 0, "gate", 2);
+        let s = m.snapshot();
+        let gate = s.get("cascade_stages").get("kws/0:gate");
+        assert_eq!(gate.get("items_in").as_i64(), Some(6));
+        assert_eq!(gate.get("items_out").as_i64(), Some(3));
+        assert_eq!(gate.get("early_exits").as_i64(), Some(3));
+        assert!((gate.get("exit_rate").as_f64().unwrap() - 0.5).abs() < 1e-9);
+        assert_eq!(gate.get("batches").as_i64(), Some(2));
+        assert!((gate.get("infer_ms_mean").as_f64().unwrap() - 3.0).abs() < 1e-9);
+        assert_eq!(gate.get("arena_checkouts").as_i64(), Some(2));
+        assert_eq!(s.get("cascade_stages").get("kws/1:command").get("items_in").as_i64(), Some(3));
     }
 }

@@ -15,12 +15,14 @@
 //! the machine, not by registered models.
 
 pub mod batcher;
+pub mod cascade;
 pub mod metrics;
 pub mod pool;
 pub mod server;
 pub mod session;
 
 pub use batcher::{BatcherConfig, DynamicBatcher, Prediction, Ticket};
+pub use cascade::{Cascade, Gate, Stage, Transform};
 pub use metrics::ServingMetrics;
 pub use pool::WorkerPool;
 pub use server::KwsServer;
@@ -122,6 +124,39 @@ impl ModelRouter {
         }
         self.batchers.insert(name.to_string(), batcher);
         Ok(())
+    }
+
+    /// Explicitly swap the backend behind an already-registered name —
+    /// the deliberate counterpart to `register_session`'s duplicate
+    /// rejection. The old batcher drops here: its submit side closes, the
+    /// batcher thread drains whatever is queued and exits, and in-flight
+    /// tickets still resolve (the thread owns the queue receiver).
+    /// Unknown names are an error: replace never silently registers.
+    pub fn replace_session(
+        &mut self,
+        name: &str,
+        session: Box<dyn InferenceSession>,
+        cfg: BatcherConfig,
+    ) -> Result<(), String> {
+        if !self.batchers.contains_key(name) {
+            return Err(format!(
+                "model '{name}' not registered (replace_session never registers; use register_session)"
+            ));
+        }
+        let batcher = DynamicBatcher::start(name, session, cfg, Arc::clone(&self.metrics))?;
+        self.batchers.insert(name.to_string(), batcher);
+        Ok(())
+    }
+
+    /// Register a staged multi-model [`Cascade`] under its own name: it
+    /// batches through a `DynamicBatcher` like any single model, attaches
+    /// this router's metrics (per-stage accounting lands under
+    /// `cascade_stages` in `/metrics`), and its LNE stages should have
+    /// been built against this router's `arena_pool` / `worker_pool`.
+    pub fn register_cascade(&mut self, cascade: Cascade, cfg: BatcherConfig) -> Result<(), String> {
+        let name = cascade.name().to_string();
+        let cascade = cascade.with_metrics(Arc::clone(&self.metrics));
+        self.register_session(&name, Box::new(cascade), cfg)
     }
 
     /// Register a PJRT-backed model (AOT executables), warming the
@@ -320,6 +355,46 @@ mod tests {
         assert_eq!(pred2.class_id, pred.class_id);
         assert_eq!(pred2.class, names[pred2.class_id]);
         assert!(router.infer(Some("nope"), vec![0.0; 72]).is_err());
+    }
+
+    /// `replace_session` is the explicit swap API: unknown names error
+    /// (it never registers), and a live route's backend — classes and
+    /// all — is exchanged without disturbing the route set.
+    #[test]
+    fn replace_session_swaps_backend_explicitly() {
+        let cfg = || BatcherConfig { max_wait_ms: 1.0, ..Default::default() };
+        let mut router = ModelRouter::new();
+        let (p1, a1) = lne_toy();
+        router.register_lne("m", p1, a1, &[1], &[], cfg()).unwrap();
+        assert_eq!(router.num_classes(None).unwrap(), 3);
+        // replacing a name that was never registered is an error
+        let (p2, a2) = lne_toy();
+        let ghost = LneSession::new(
+            p2,
+            a2,
+            &[1],
+            &[],
+            &router.arena_pool,
+            Arc::clone(&router.worker_pool),
+        )
+        .unwrap();
+        assert!(router.replace_session("ghost", Box::new(ghost), cfg()).is_err());
+        // explicit replacement on a live name swaps the backend in place
+        let (p3, a3) = lne_toy();
+        let named: Vec<String> = vec!["yes".into(), "no".into(), "maybe".into()];
+        let swapped = LneSession::new(
+            p3,
+            a3,
+            &[1],
+            &named,
+            &router.arena_pool,
+            Arc::clone(&router.worker_pool),
+        )
+        .unwrap();
+        router.replace_session("m", Box::new(swapped), cfg()).unwrap();
+        assert_eq!(router.models(), vec!["m".to_string()]);
+        let pred = router.infer(Some("m"), vec![0.3; 72]).unwrap();
+        assert_eq!(pred.class, named[pred.class_id], "swap must carry the new classes");
     }
 
     /// Scheduler observability: a served chain of large convs at batch 1

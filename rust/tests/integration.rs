@@ -199,6 +199,204 @@ fn lne_planned_serving_runs_without_artifacts() {
     assert_eq!(m1.class_id, m2.class_id);
 }
 
+/// Cascade serving end to end — no artifacts: a two-stage early-exit
+/// pipeline (3-class softmax gate -> 5-class heavier model in a different
+/// input space) registered behind the `ModelRouter` as ONE model and
+/// served through the dynamic batcher.
+///
+/// Proves (a) early-exited items return the GATE stage's result (its
+/// 3-score prediction) and the downstream stage never executes for them —
+/// asserted via the per-stage items-in/items-out/early-exit metrics — and
+/// (b) the cascade's outputs are bit-exact with manually running the same
+/// sessions in sequence, at worker-pool sizes 1 / 2 / 4.
+#[test]
+fn cascade_early_exit_serving_is_bit_exact_with_manual_staging() {
+    use bonseyes::lne::platform::Platform;
+    use bonseyes::lne::quant_explore::f32_baseline;
+    use bonseyes::lne::{ArenaPool, Graph, LayerKind, Padding, PoolKind, Prepared};
+    use bonseyes::models;
+    use bonseyes::serving::cascade::{pick_bucket, Cascade, Gate, Stage, Transform};
+    use bonseyes::serving::{
+        BatcherConfig, InferenceSession, LneSession, ModelRouter, WorkerPool,
+    };
+    use bonseyes::tensor::Tensor;
+    use bonseyes::util::rng::Rng;
+
+    // gate: tiny 3-class model ending in Softmax, so its scores are
+    // probabilities and confidence thresholds calibrate directly
+    let mut g = Graph::new("gate", (2, 6, 6));
+    g.push("conv1", LayerKind::Conv { k: (3, 3), stride: (1, 1), pad: Padding::Same, relu_fused: true }, 4);
+    g.push("gap", LayerKind::Pool { kind: PoolKind::Avg, k: 0, stride: 1, pad: 0, global: true }, 0);
+    g.push("fc", LayerKind::Fc { relu_fused: false }, 3);
+    g.push("prob", LayerKind::Softmax, 0);
+    let w = models::random_weights(&g, 5);
+    let gate_p = Arc::new(Prepared::new(g, w, Platform::pi4()).unwrap());
+    let gate_a = f32_baseline(&gate_p);
+
+    // downstream: a 5-class model in its OWN input space (3x8x8), so a
+    // prediction's score length tells us which stage answered (3 vs 5)
+    let mut g = Graph::new("heavy", (3, 8, 8));
+    g.push("conv1", LayerKind::Conv { k: (3, 3), stride: (1, 1), pad: Padding::Same, relu_fused: true }, 8);
+    g.push("gap", LayerKind::Pool { kind: PoolKind::Avg, k: 0, stride: 1, pad: 0, global: true }, 0);
+    g.push("fc", LayerKind::Fc { relu_fused: false }, 5);
+    let w = models::random_weights(&g, 9);
+    let heavy_p = Arc::new(Prepared::new(g, w, Platform::pi4()).unwrap());
+    let heavy_a = f32_baseline(&heavy_p);
+    let tr = Transform { resize: Some(((2, 6, 6), (3, 8, 8))), renormalize: true };
+
+    let mut rng = Rng::new(33);
+    let samples: Vec<Vec<f32>> =
+        (0..6).map(|_| Tensor::randn(&[2, 6, 6], 1.0, &mut rng).data).collect();
+
+    // calibrate a threshold that splits the first four samples 2/2 by the
+    // gate's top-1 confidence: items BELOW it continue, the rest exit early
+    let top1: Vec<f32> = samples
+        .iter()
+        .map(|s| {
+            let x = Tensor::from_vec(&[1, 2, 6, 6], s.clone());
+            gate_p.run(&x, &gate_a).output.data.iter().cloned().fold(f32::MIN, f32::max)
+        })
+        .collect();
+    let mut sorted: Vec<f32> = top1[..4].to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let thresh = sorted[2];
+
+    // (a) through the router: register the cascade as one model, serve 6
+    // requests through the batcher, and read the per-stage accounting
+    let mut router = ModelRouter::with_threads(2);
+    let gate = Stage::lne(
+        "gate",
+        Arc::clone(&gate_p),
+        gate_a.clone(),
+        &[1, 4],
+        &[],
+        Gate::ConfidenceBelow(thresh),
+        Transform::identity(),
+        &router.arena_pool,
+        Arc::clone(&router.worker_pool),
+    )
+    .unwrap();
+    let heavy = Stage::lne(
+        "heavy",
+        Arc::clone(&heavy_p),
+        heavy_a.clone(),
+        &[1, 4],
+        &[],
+        Gate::ConfidenceBelow(0.0),
+        tr.clone(),
+        &router.arena_pool,
+        Arc::clone(&router.worker_pool),
+    )
+    .unwrap();
+    let cascade = Cascade::new("casc").push(gate).unwrap().push(heavy).unwrap();
+    router
+        .register_cascade(cascade, BatcherConfig { max_wait_ms: 1.0, ..Default::default() })
+        .unwrap();
+    assert_eq!(router.input_len(Some("casc")).unwrap(), 2 * 6 * 6);
+    assert_eq!(router.num_classes(Some("casc")).unwrap(), 5);
+
+    let mut exits = 0usize;
+    let mut survivors = 0usize;
+    for s in &samples {
+        let p = router.infer(Some("casc"), s.clone()).unwrap();
+        match p.scores.len() {
+            3 => exits += 1,      // answered by the gate: its own class set
+            5 => survivors += 1,  // answered downstream
+            n => panic!("prediction from neither stage ({n} scores)"),
+        }
+        assert!(p.scores.iter().all(|v| v.is_finite()));
+    }
+    assert!(exits >= 1 && survivors >= 1, "threshold must split: {exits}/{survivors}");
+
+    // items the gate exited never reached the heavy stage
+    let snap = router.metrics.snapshot();
+    let stages = snap.get("cascade_stages");
+    let g_stats = stages.get("casc/0:gate");
+    assert_eq!(g_stats.get("items_in").as_i64(), Some(6));
+    assert_eq!(g_stats.get("items_out").as_i64(), Some(survivors as i64));
+    assert_eq!(g_stats.get("early_exits").as_i64(), Some(exits as i64));
+    let h_stats = stages.get("casc/1:heavy");
+    assert_eq!(h_stats.get("items_in").as_i64(), Some(survivors as i64));
+    assert_eq!(h_stats.get("items_out").as_i64(), Some(0), "last stage forwards nothing");
+    assert_eq!(h_stats.get("early_exits").as_i64(), Some(0));
+
+    // (b) fixed batch composition: the cascade must be bit-exact with
+    // manually staging the SAME sessions — gate over the full batch, then
+    // the survivors re-coalesced into the smallest covering bucket — and
+    // bit-exact across worker-pool sizes
+    let refs4: Vec<&[f32]> = samples[..4].iter().map(|v| v.as_slice()).collect();
+    let mut reference: Option<Vec<Vec<f32>>> = None;
+    for threads in [1usize, 2, 4] {
+        let pool = ArenaPool::new();
+        let w = Arc::new(WorkerPool::new(threads));
+        let gate = Stage::lne(
+            "gate",
+            Arc::clone(&gate_p),
+            gate_a.clone(),
+            &[1, 4],
+            &[],
+            Gate::ConfidenceBelow(thresh),
+            Transform::identity(),
+            &pool,
+            Arc::clone(&w),
+        )
+        .unwrap();
+        let heavy = Stage::lne(
+            "heavy",
+            Arc::clone(&heavy_p),
+            heavy_a.clone(),
+            &[1, 4],
+            &[],
+            Gate::ConfidenceBelow(0.0),
+            tr.clone(),
+            &pool,
+            Arc::clone(&w),
+        )
+        .unwrap();
+        let mut cascade = Cascade::new("direct").push(gate).unwrap().push(heavy).unwrap();
+        let got: Vec<Vec<f32>> = cascade
+            .run_batch(4, &refs4)
+            .unwrap()
+            .into_iter()
+            .map(|p| p.scores)
+            .collect();
+
+        // manual staging of the same prepared models on the same pool
+        let mut gate_s = LneSession::new(
+            Arc::clone(&gate_p),
+            gate_a.clone(),
+            &[1, 4],
+            &[],
+            &pool,
+            Arc::clone(&w),
+        )
+        .unwrap();
+        let mut heavy_s =
+            LneSession::new(Arc::clone(&heavy_p), heavy_a.clone(), &[1, 4], &[], &pool, w)
+                .unwrap();
+        let gate_preds = gate_s.run_batch(4, &refs4).unwrap();
+        let live: Vec<usize> = (0..4)
+            .filter(|&i| Gate::ConfidenceBelow(thresh).passes(&gate_preds[i].scores))
+            .collect();
+        assert!(!live.is_empty() && live.len() < 4, "need both populations: {live:?}");
+        let payloads: Vec<Vec<f32>> =
+            live.iter().map(|&i| tr.apply(refs4[i]).unwrap()).collect();
+        let chunk: Vec<&[f32]> = payloads.iter().map(|v| v.as_slice()).collect();
+        let b = pick_bucket(heavy_s.buckets(), live.len());
+        let heavy_preds = heavy_s.run_batch(b, &chunk).unwrap();
+        let mut want: Vec<Vec<f32>> = gate_preds.into_iter().map(|p| p.scores).collect();
+        for (j, &i) in live.iter().enumerate() {
+            want[i] = heavy_preds[j].scores.clone();
+        }
+        assert_eq!(got, want, "threads={threads}: cascade != manual staging");
+        if let Some(r) = &reference {
+            assert_eq!(&got, r, "threads={threads} diverged from threads=1");
+        } else {
+            reference = Some(got);
+        }
+    }
+}
+
 /// Wavefront-parallel serving end to end: a branchy model (inceptionette)
 /// served through routers whose shared worker pools have 1 / 2 / 4
 /// threads must produce identical predictions — the planner's
