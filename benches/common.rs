@@ -13,6 +13,7 @@ use bonseyes::util::rng::Rng;
 use std::path::PathBuf;
 
 pub fn manifest() -> Manifest {
+    skip_quick_without_artifacts();
     let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json");
     Manifest::load(&p).expect("run `make artifacts` first")
 }
@@ -41,9 +42,30 @@ pub fn image_input(g: &Graph, seed: u64) -> Tensor {
     Tensor::randn(&[1, g.input.0, g.input.1, g.input.2], 1.0, &mut rng)
 }
 
-/// Fast-mode toggle (BONSEYES_BENCH_FAST=1 shrinks everything).
+/// CI smoke-mode toggle (BONSEYES_BENCH_QUICK=1): every bench runs its
+/// real code paths at minimum size — one rep, fast-mode scaling, smallest
+/// model set — so CI *executes* the benches on every push instead of
+/// merely building them. Numbers printed in quick mode are meaningless;
+/// the mode exists to catch bench bit-rot and runtime panics.
+pub fn quick() -> bool {
+    std::env::var("BONSEYES_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Quick-mode guard for benches that need `make artifacts` outputs: the
+/// CI smoke has none, so skip cleanly (exit 0) instead of panicking.
+/// Outside quick mode, missing artifacts still fail loudly.
+pub fn skip_quick_without_artifacts() {
+    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json");
+    if quick() && !p.exists() {
+        println!("BONSEYES_BENCH_QUICK=1 and no artifacts; skipping bench");
+        std::process::exit(0);
+    }
+}
+
+/// Fast-mode toggle (BONSEYES_BENCH_FAST=1 shrinks everything; implied
+/// by quick mode).
 pub fn fast() -> bool {
-    std::env::var("BONSEYES_BENCH_FAST").map(|v| v == "1").unwrap_or(false)
+    quick() || std::env::var("BONSEYES_BENCH_FAST").map(|v| v == "1").unwrap_or(false)
 }
 
 pub fn scaled(normal: usize, fast_value: usize) -> usize {
@@ -55,7 +77,11 @@ pub fn scaled(normal: usize, fast_value: usize) -> usize {
 }
 
 pub fn reps() -> usize {
-    scaled(5, 2)
+    if quick() {
+        1
+    } else {
+        scaled(5, 2)
+    }
 }
 
 /// Paper-style banner.

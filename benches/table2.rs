@@ -17,6 +17,7 @@ use bonseyes::util::json::Json;
 
 fn main() {
     common::banner("Table 2", "trained KWS models with Q/S compression");
+    common::skip_quick_without_artifacts();
     let engine = EngineHandle::spawn(common::artifacts_dir()).unwrap();
     let store_dir = std::env::temp_dir().join("bonseyes-table2");
     let _ = std::fs::remove_dir_all(&store_dir);

@@ -1,8 +1,10 @@
 //! Wavefront scheduling bench: sequential `ExecPlan::replay` vs the
-//! barrier wavefront `replay_on` vs the dep-counted work-stealing
-//! `replay_tasked` (intra-op GEMM partitioning included), on branchy
-//! models (inception towers, residual legs). The barrier replay only
-//! wins on waves wider than one; the tasked scheduler additionally
+//! barrier wavefront `replay_on` vs the dep-counted tasked scheduler,
+//! on branchy models (inception towers, residual legs). The tasked
+//! scheduler is shown both ways: "fresh" re-derives the schedule every
+//! replay, "trace" records a `ScheduleTrace` once and replays it with
+//! epoch-counter resets (the serving steady state). The barrier replay
+//! only wins on waves wider than one; the tasked scheduler additionally
 //! overlaps waves of unbalanced depth and splits big GEMMs when the
 //! ready set is narrow — `benches/steal.rs` isolates that case.
 
@@ -22,12 +24,17 @@ fn main() {
         "wavefront",
         "parallel branch execution on the shared worker pool",
     );
-    let reps = common::reps().max(3);
+    let reps = if common::quick() { 1 } else { common::reps().max(3) };
+    let names: &[&str] = if common::quick() {
+        &["inceptionette"]
+    } else {
+        &["inceptionette", "googlenet", "squeezenet"]
+    };
     println!(
-        "{:<14} {:>5} {:>9} {:>12} {:>21} {:>21}",
-        "model", "waves", "max-width", "seq ms", "barrier 2t/4t", "tasked 2t/4t"
+        "{:<14} {:>5} {:>9} {:>12} {:>21} {:>21} {:>21}",
+        "model", "waves", "max-width", "seq ms", "barrier 2t/4t", "fresh 2t/4t", "trace 2t/4t"
     );
-    for name in ["inceptionette", "googlenet", "squeezenet"] {
+    for name in names {
         let (g, w) = models::by_name(name, 42).expect("zoo model");
         let p = Prepared::new(g, w, Platform::pi4()).expect("prepared");
         let a = f32_baseline(&p);
@@ -56,15 +63,27 @@ fn main() {
         for threads in [2usize, 4] {
             let pool = ThreadPool::new(threads);
             let _ = plan.replay_tasked(&x, &mut arena, &pool);
-            let tasked = median(
+            let fresh = median(
                 (0..reps)
                     .map(|_| plan.replay_tasked(&x, &mut arena, &pool).total_ms)
                     .collect(),
             );
-            print!("  {tasked:>7.2} ms {:>4.2}x", seq / tasked.max(1e-9));
+            print!("  {fresh:>7.2} ms {:>4.2}x", seq / fresh.max(1e-9));
+        }
+        for threads in [2usize, 4] {
+            let pool = ThreadPool::new(threads);
+            let mut trace = plan.record_trace(threads);
+            let _ = trace.replay_stats(&plan, &x, &mut arena, &pool); // warm-up
+            let traced = median(
+                (0..reps)
+                    .map(|_| trace.replay_stats(&plan, &x, &mut arena, &pool).0.total_ms)
+                    .collect(),
+            );
+            print!("  {traced:>7.2} ms {:>4.2}x", seq / traced.max(1e-9));
         }
         println!();
     }
-    println!("\n(barrier speedup tracks max wavefront width; the tasked scheduler");
-    println!(" also overlaps waves and partitions big GEMMs on narrow ready sets)");
+    println!("\n(barrier speedup tracks max wavefront width; fresh re-derives the tasked");
+    println!(" schedule per replay, trace replays the recorded one with epoch resets —");
+    println!(" the gap between the two is pure scheduling overhead serving no longer pays)");
 }

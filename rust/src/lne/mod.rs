@@ -18,8 +18,10 @@ pub mod platform;
 pub mod plugin;
 pub mod primitives;
 pub mod quant_explore;
+pub mod trace;
 
 pub use engine::{Prepared, RunResult};
 pub use graph::{Graph, Layer, LayerKind, Padding, PoolKind, Weights};
 pub use planner::{Arena, ArenaPool, ArenaProfile, ExecPlan, Lane, PlanOptions, SharedArena, Step};
+pub use trace::ScheduleTrace;
 pub use plugin::{applicable, Assignment, ConvImpl, DesignSpace};

@@ -56,10 +56,10 @@ use super::primitives::int8::{
 use super::primitives::pool::{global_pool_into, lrn_into, pool_into, softmax_into};
 use super::primitives::winograd::{self, conv_winograd_into};
 use crate::tensor::{QTensor, Tensor, TensorView, TensorViewMut};
+use super::trace::ScheduleTrace;
 use crate::util::threadpool::ThreadPool;
-use std::collections::VecDeque;
 use std::ops::Range;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -337,17 +337,17 @@ pub struct ExecPlan {
 /// per-tensor scales of i8-resident activations (`scales`).
 #[derive(Debug, Default)]
 pub struct Arena {
-    f: Vec<f32>,
-    q: Vec<i8>,
-    acc: Vec<i32>,
-    scales: Vec<f32>,
+    pub(crate) f: Vec<f32>,
+    pub(crate) q: Vec<i8>,
+    pub(crate) acc: Vec<i32>,
+    pub(crate) scales: Vec<f32>,
     /// Per-worker B-panel pack lanes for the packed GEMM kernels: `units`
     /// regions of `plan.pack_f_words` f32s / `plan.pack_q_bytes` i8s each
     /// (unit = wavefront slot or tasked worker id). Private per unit, so
     /// they sit outside the span-conflict analysis and the planned
     /// high-water marks.
-    pack_f: Vec<f32>,
-    pack_q: Vec<i8>,
+    pub(crate) pack_f: Vec<f32>,
+    pub(crate) pack_q: Vec<i8>,
 }
 
 impl Arena {
@@ -1364,7 +1364,7 @@ impl ExecPlan {
     /// the `peak_bytes` both replay paths report (asserted equal to the
     /// planned footprint in tests). Order-independent, so sequential and
     /// wavefront replays observe the same number.
-    fn observed_peak_bytes(&self) -> usize {
+    pub(crate) fn observed_peak_bytes(&self) -> usize {
         let mut hi_f = self.input.off + self.input.len;
         let mut hi_q = 0usize;
         let mut hi_i = 0usize;
@@ -1551,16 +1551,7 @@ impl ExecPlan {
         arena.f[self.input.off..self.input.off + self.input.len]
             .copy_from_slice(&x.data);
         let mut layer_ms = vec![0.0f64; self.layer_count()];
-        let lanes = Lanes {
-            f: arena.f.as_mut_ptr(),
-            q: arena.q.as_mut_ptr(),
-            acc: arena.acc.as_mut_ptr(),
-            s: arena.scales.as_mut_ptr(),
-            pf: arena.pack_f.as_mut_ptr(),
-            pq: arena.pack_q.as_mut_ptr(),
-            pf_stride: self.pack_f_words,
-            pq_stride: self.pack_q_bytes,
-        };
+        let lanes = Lanes::bind(arena, self);
         let t_all = Instant::now();
         for &(start, end) in &self.waves {
             let width = end - start;
@@ -1610,14 +1601,17 @@ impl ExecPlan {
 
     /// Static intra-op partition plan for a pool of `threads` workers:
     /// `parts[si] >= 2` means step `si`'s GEMM splits into that many
-    /// row-range subtasks under [`ExecPlan::replay_tasked`], `0` means it
-    /// runs whole. A step partitions when its wavefront is narrower than
-    /// the pool (spare workers exist by construction), its GEMM is large
-    /// enough to amortize the split ([`PARTITION_MIN_MULS`] multiplies),
-    /// and it is a single-image `ConvIm2col`/`ConvInt8Q` step (batched
-    /// steps iterate images over shared scratch and stay whole). The
-    /// decision is a pure function of the plan and the thread count, so
-    /// subtask metrics are deterministic.
+    /// row-range subtasks *per image* under [`ExecPlan::replay_tasked`],
+    /// `0` means it runs whole. A step partitions when its wavefront is
+    /// narrower than the pool (spare workers exist by construction), its
+    /// per-image GEMM is large enough to amortize the split
+    /// ([`PARTITION_MIN_MULS`] multiplies), and it is a
+    /// `ConvIm2col`/`ConvInt8Q` step. Batched (n > 1) steps partition
+    /// per image: the images chain sequentially over the step's shared
+    /// im2col/accumulator scratch (exactly like the whole-step primitive)
+    /// while each image's row ranges fan out in parallel. The decision is
+    /// a pure function of the plan and the thread count, so subtask
+    /// metrics are deterministic.
     pub fn partition_parts(&self, threads: usize) -> Vec<u32> {
         let mut parts = vec![0u32; self.steps.len()];
         if threads <= 1 {
@@ -1648,11 +1642,12 @@ impl ExecPlan {
 
     /// Replay the plan with dep-counted, work-stealing task scheduling:
     /// the ready set seeds with zero-predecessor steps, every pool worker
-    /// pops from its own deque (LIFO) and steals from the others' (FIFO),
-    /// and completing a step decrements its successors' counts — so deep
-    /// branches run ahead of shallow ones with no wave barriers. When the
-    /// ready set is narrower than the pool, large conv GEMMs additionally
-    /// split into row-range subtasks ([`ExecPlan::partition_parts`]) whose
+    /// pops from its own lock-free deque (LIFO) and steals from the
+    /// others' (FIFO), idle workers park on a condvar, and completing a
+    /// step bumps its successors' epoch counters — so deep branches run
+    /// ahead of shallow ones with no wave barriers. When the ready set is
+    /// narrower than the pool, large conv GEMMs additionally split into
+    /// per-image row-range subtasks ([`ExecPlan::partition_parts`]) whose
     /// disjoint output rows reproduce the whole-step result bit for bit.
     ///
     /// Bit-exact with sequential [`ExecPlan::replay`] and the barrier
@@ -1666,111 +1661,39 @@ impl ExecPlan {
     /// other workers free; a 1-worker pool — or a plan whose ceiling is
     /// 1 — short-circuits to the sequential replay, fully inline with no
     /// queue round-trip.
+    ///
+    /// This entry point records a fresh [`ScheduleTrace`] on every call
+    /// ("fresh-schedule" replay — O(steps) allocation per request).
+    /// Steady-state callers should [`ExecPlan::record_trace`] once and
+    /// [`ScheduleTrace::replay_stats`] forever: the trace resets via
+    /// epoch counters and replays with zero heap allocation, which is how
+    /// `LneSession` serves (see `lne/trace.rs` and DESIGN.md §13).
     pub fn replay_tasked_stats(
         &self,
         x: &Tensor,
         arena: &mut Arena,
         pool: &ThreadPool,
     ) -> (RunResult, SchedStats) {
-        let threads = pool.size();
-        let parts = self.partition_parts(threads);
-        // never occupy more pool workers than the plan can actually feed:
-        // the concurrency ceiling is the widest wavefront or the widest
-        // GEMM split, whichever is larger. A chain with nothing to
-        // partition caps at 1 and short-circuits to the inline sequential
-        // replay, so tiny models on a big shared serving pool neither pin
-        // its workers nor leave them spinning.
-        let ceiling = self
-            .max_wave_width()
-            .max(parts.iter().copied().max().unwrap_or(0) as usize);
-        let workers = threads.min(ceiling);
-        if workers <= 1 || self.steps.len() <= 1 {
-            let r = self.replay(x, arena);
-            return (r, SchedStats { workers: 1, ..SchedStats::default() });
-        }
-        assert_eq!(
-            x.shape, self.input.shape,
-            "input shape {:?} vs planned {:?}",
-            x.shape, self.input.shape
-        );
-        // one pack-lane region per scheduler worker
-        arena.ensure_units(self, workers);
-        arena.f[self.input.off..self.input.off + self.input.len]
-            .copy_from_slice(&x.data);
-        let lanes = Lanes {
-            f: arena.f.as_mut_ptr(),
-            q: arena.q.as_mut_ptr(),
-            acc: arena.acc.as_mut_ptr(),
-            s: arena.scales.as_mut_ptr(),
-            pf: arena.pack_f.as_mut_ptr(),
-            pq: arena.pack_q.as_mut_ptr(),
-            pf_stride: self.pack_f_words,
-            pq_stride: self.pack_q_bytes,
-        };
-        let n = self.steps.len();
-        let sched = Sched {
-            plan: self,
-            lanes,
-            deps: self.preds.iter().map(|&p| AtomicUsize::new(p)).collect(),
-            parts_left: parts.iter().map(|&p| AtomicUsize::new(p as usize)).collect(),
-            parts,
-            deques: (0..workers).map(|_| Mutex::new(VecDeque::new())).collect(),
-            remaining: AtomicUsize::new(n),
-            aborted: std::sync::atomic::AtomicBool::new(false),
-            steals: AtomicUsize::new(0),
-            partitioned: AtomicUsize::new(0),
-            subtasks: AtomicUsize::new(0),
-            step_ms: (0..n).map(|_| AtomicU64::new(0)).collect(),
-        };
-        // seed the ready set round-robin so workers start spread out
-        let mut seeded = 0usize;
-        for (si, &d) in self.preds.iter().enumerate() {
-            if d == 0 {
-                sched.deques[seeded % workers]
-                    .lock()
-                    .unwrap()
-                    .push_back(Task::Step(si));
-                seeded += 1;
-            }
-        }
-        debug_assert!(seeded > 0, "dependency graph has no source step");
-        let t_all = Instant::now();
-        // SAFETY of the shared `lanes`: every pair of steps with
-        // conflicting spans is ordered by the task graph (proved by
-        // `validate_schedule`), partitioned subtasks write disjoint row
-        // ranges of their step's output/accumulator spans, and all
-        // cross-worker hand-offs go through mutex-guarded deques or
-        // acquire/release counters, so no two threads ever touch an
-        // overlapping span concurrently and every read sees its
-        // producer's writes.
-        pool.scope_run(workers, |wid| sched.worker(wid));
-        assert!(
-            !sched.aborted.load(Ordering::SeqCst),
-            "replay_tasked: a scheduled task panicked"
-        );
-        debug_assert_eq!(sched.remaining.load(Ordering::SeqCst), 0);
-        let total_ms = t_all.elapsed().as_secs_f64() * 1e3;
-        let mut layer_ms = vec![0.0f64; self.layer_count()];
-        for (si, step) in self.steps.iter().enumerate() {
-            layer_ms[step.layer] += f64::from_bits(sched.step_ms[si].load(Ordering::Relaxed));
-        }
-        let out_slice = &arena.f[self.output.off..self.output.off + self.output.len];
-        let output = Tensor::from_vec(&self.output.shape, out_slice.to_vec());
-        let stats = SchedStats {
-            workers,
-            steals: sched.steals.load(Ordering::Relaxed),
-            partitioned_steps: sched.partitioned.load(Ordering::Relaxed),
-            subtasks: sched.subtasks.load(Ordering::Relaxed),
-        };
-        (
-            RunResult {
-                output,
-                layer_ms,
-                total_ms,
-                peak_bytes: self.observed_peak_bytes(),
-            },
-            stats,
-        )
+        let mut trace = self.record_trace(pool.size());
+        trace.replay_stats(self, x, arena, pool)
+    }
+
+    /// Record the tasked schedule for this plan at `threads` workers into
+    /// a frozen, replayable [`ScheduleTrace`]: task order, dep edges and
+    /// intra-op partition boundaries captured into flat preallocated
+    /// arrays. The trace is valid for exactly this `(plan, threads)`
+    /// pair (it pins the plan's fingerprint) and replays with zero heap
+    /// allocation.
+    pub fn record_trace(&self, threads: usize) -> ScheduleTrace {
+        ScheduleTrace::record(self, threads)
+    }
+
+    /// The plan's output values as they sit in `arena` after a replay —
+    /// the zero-copy alternative to `RunResult::output` for callers that
+    /// hold the arena lock anyway (the serving hot path reads rows
+    /// straight from here instead of materializing a `Tensor`).
+    pub fn output_slice<'a>(&self, arena: &'a Arena) -> &'a [f32] {
+        &arena.f[self.output.off..self.output.off + self.output.len]
     }
 }
 
@@ -1778,8 +1701,9 @@ impl ExecPlan {
 /// intra-op partitioning pays for its task overhead.
 pub const PARTITION_MIN_MULS: usize = 1 << 18;
 
-/// What one [`ExecPlan::replay_tasked_stats`] call did, for scheduler
-/// observability (`ServingMetrics`, benches, the CLI `eval` report).
+/// What one tasked replay did ([`ExecPlan::replay_tasked_stats`] /
+/// [`ScheduleTrace::replay_stats`]), for scheduler observability
+/// (`ServingMetrics`, benches, the CLI `eval` report).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct SchedStats {
     /// Workers the replay ran on (1 = inline sequential short-circuit).
@@ -1788,18 +1712,20 @@ pub struct SchedStats {
     pub steals: usize,
     /// Steps that executed as partitioned GEMMs.
     pub partitioned_steps: usize,
-    /// Row-range subtasks those steps fanned out to (total parts).
+    /// Row-range subtasks those steps fanned out to (parts × images).
     pub subtasks: usize,
+    /// Times an idle worker parked on the trace's condvar.
+    pub parks: usize,
+    /// Wake notifications issued to parked workers.
+    pub wakes: usize,
 }
 
 /// `(m, muls)` when `step` is an intra-op partitionable GEMM conv:
-/// single-image `ConvIm2col` (any GEMM impl) or `ConvInt8Q`, with `m` the
-/// number of output channels (GEMM rows) and `muls` the GEMM's multiply
-/// count `M * K * N`.
-fn partitionable(step: &Step) -> Option<(usize, usize)> {
-    if step.out.shape[0] != 1 {
-        return None;
-    }
+/// `ConvIm2col` (any GEMM impl) or `ConvInt8Q`, with `m` the number of
+/// output channels (per-image GEMM rows) and `muls` the per-image GEMM's
+/// multiply count `M * K * N` (`cols`/`cols_q` scratch is per-image, so
+/// its length already is `K * N`). Batched steps partition per image.
+pub(crate) fn partitionable(step: &Step) -> Option<(usize, usize)> {
     let m = step.out.shape[1];
     match &step.op {
         Op::ConvIm2col { cols, .. } => Some((m, m * cols.len)),
@@ -1812,7 +1738,7 @@ fn partitionable(step: &Step) -> Option<(usize, usize)> {
 /// kernels reject ranges cutting through an MR-row A panel, so the
 /// scheduler splits on panel edges. Non-packed GEMMs split on any row
 /// (`mr = 1`).
-fn step_mr(step: &Step) -> usize {
+pub(crate) fn step_mr(step: &Step) -> usize {
     match &step.op {
         Op::ConvIm2col { gemm: GemmImpl::Packed(pp), .. } => pp.mr,
         Op::ConvInt8Q { params, .. } => params.mr,
@@ -1824,7 +1750,7 @@ fn step_mr(step: &Step) -> usize {
 /// panels are spread over the parts (remainder panels to the leading
 /// ones), so every boundary except the final `m` lands on a panel edge.
 /// With `mr = 1` this is the plain even row split.
-fn part_rows(m: usize, parts: usize, p: usize, mr: usize) -> Range<usize> {
+pub(crate) fn part_rows(m: usize, parts: usize, p: usize, mr: usize) -> Range<usize> {
     let panels = m.div_ceil(mr);
     let base = panels / parts;
     let rem = panels % parts;
@@ -1834,7 +1760,7 @@ fn part_rows(m: usize, parts: usize, p: usize, mr: usize) -> Range<usize> {
 }
 
 /// Lock-free f64 accumulate into an `AtomicU64` holding f64 bits.
-fn atomic_add_ms(slot: &AtomicU64, ms: f64) {
+pub(crate) fn atomic_add_ms(slot: &AtomicU64, ms: f64) {
     let mut cur = slot.load(Ordering::Relaxed);
     loop {
         let next = (f64::from_bits(cur) + ms).to_bits();
@@ -1845,181 +1771,30 @@ fn atomic_add_ms(slot: &AtomicU64, ms: f64) {
     }
 }
 
-/// One schedulable unit of [`ExecPlan::replay_tasked`]. A step enters as
-/// `Step`; a partitioned step expands into its im2col prep (run inline by
-/// the expanding worker), `Part` GEMM row-ranges, and — for int8 convs,
-/// whose per-image requantize needs every accumulator row — a `Finish`.
-#[derive(Clone, Copy)]
-enum Task {
-    Step(usize),
-    Part { step: usize, part: u32 },
-    Finish(usize),
-}
-
-/// Shared state of one tasked replay: dep counters, per-worker deques,
-/// per-step part counters and timing slots. Workers own their deque's
-/// back (LIFO, cache-hot) and steal from other deques' front (FIFO).
-struct Sched<'a> {
-    plan: &'a ExecPlan,
-    lanes: Lanes,
-    deps: Vec<AtomicUsize>,
-    parts: Vec<u32>,
-    parts_left: Vec<AtomicUsize>,
-    deques: Vec<Mutex<VecDeque<Task>>>,
-    remaining: AtomicUsize,
-    /// A task panicked: every worker drains out so the scope barrier
-    /// releases and the caller can re-raise (instead of the surviving
-    /// workers spinning forever on a count that will never hit zero).
-    aborted: std::sync::atomic::AtomicBool,
-    steals: AtomicUsize,
-    partitioned: AtomicUsize,
-    subtasks: AtomicUsize,
-    step_ms: Vec<AtomicU64>,
-}
-
-impl Sched<'_> {
-    fn worker(&self, wid: usize) {
-        loop {
-            if self.aborted.load(Ordering::Acquire) {
-                break;
-            }
-            let task = self
-                .pop_own(wid)
-                .or_else(|| self.steal(wid));
-            match task {
-                Some(t) => {
-                    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                        self.run_task(wid, t)
-                    }));
-                    if r.is_err() {
-                        self.aborted.store(true, Ordering::Release);
-                        break;
-                    }
-                }
-                None => {
-                    if self.remaining.load(Ordering::Acquire) == 0 {
-                        break;
-                    }
-                    std::thread::yield_now();
-                }
-            }
-        }
-    }
-
-    fn push(&self, wid: usize, task: Task) {
-        self.deques[wid].lock().unwrap().push_back(task);
-    }
-
-    fn pop_own(&self, wid: usize) -> Option<Task> {
-        self.deques[wid].lock().unwrap().pop_back()
-    }
-
-    fn steal(&self, wid: usize) -> Option<Task> {
-        let w = self.deques.len();
-        for k in 1..w {
-            let victim = (wid + k) % w;
-            let task = self.deques[victim].lock().unwrap().pop_front();
-            if task.is_some() {
-                self.steals.fetch_add(1, Ordering::Relaxed);
-                return task;
-            }
-        }
-        None
-    }
-
-    fn run_task(&self, wid: usize, task: Task) {
-        match task {
-            Task::Step(si) => {
-                let step = &self.plan.steps[si];
-                let p = self.parts[si];
-                if p >= 2 {
-                    self.partitioned.fetch_add(1, Ordering::Relaxed);
-                    self.subtasks.fetch_add(p as usize, Ordering::Relaxed);
-                    let t0 = Instant::now();
-                    // SAFETY: see `replay_tasked_stats` — this worker owns
-                    // the step's spans until its parts are published.
-                    unsafe { exec_partitioned_prep(step, self.lanes) };
-                    atomic_add_ms(&self.step_ms[si], t0.elapsed().as_secs_f64() * 1e3);
-                    // publish parts 1.. for thieves, run part 0 ourselves
-                    {
-                        let mut dq = self.deques[wid].lock().unwrap();
-                        for part in 1..p {
-                            dq.push_back(Task::Part { step: si, part });
-                        }
-                    }
-                    self.run_task(wid, Task::Part { step: si, part: 0 });
-                } else {
-                    let t0 = Instant::now();
-                    // SAFETY: see `replay_tasked_stats`; worker `wid` owns
-                    // pack-lane region `wid`.
-                    unsafe { exec_step_on(step, self.lanes, wid) };
-                    atomic_add_ms(&self.step_ms[si], t0.elapsed().as_secs_f64() * 1e3);
-                    self.complete_step(wid, si);
-                }
-            }
-            Task::Part { step: si, part } => {
-                let step = &self.plan.steps[si];
-                let parts = self.parts[si] as usize;
-                let rows = part_rows(step.out.shape[1], parts, part as usize, step_mr(step));
-                let t0 = Instant::now();
-                // SAFETY: parts of one step write disjoint row ranges and
-                // read only the prep's scratch, published via the deque;
-                // the executing worker packs B into its own pack region.
-                unsafe { exec_partitioned_part(step, self.lanes, rows, wid) };
-                atomic_add_ms(&self.step_ms[si], t0.elapsed().as_secs_f64() * 1e3);
-                if self.parts_left[si].fetch_sub(1, Ordering::AcqRel) == 1 {
-                    if matches!(step.op, Op::ConvInt8Q { .. }) {
-                        // requantize needs every accumulator row
-                        self.push(wid, Task::Finish(si));
-                    } else {
-                        self.complete_step(wid, si);
-                    }
-                }
-            }
-            Task::Finish(si) => {
-                let step = &self.plan.steps[si];
-                let t0 = Instant::now();
-                // SAFETY: runs after every part's `parts_left` decrement
-                // (acquire/release), so all accumulator rows are visible.
-                unsafe { exec_partitioned_finish(step, self.lanes) };
-                atomic_add_ms(&self.step_ms[si], t0.elapsed().as_secs_f64() * 1e3);
-                self.complete_step(wid, si);
-            }
-        }
-    }
-
-    /// A step's final subtask landed: release its successors and retire
-    /// it. The AcqRel decrements chain each predecessor's writes into
-    /// whichever worker observes the count hit zero.
-    fn complete_step(&self, wid: usize, si: usize) {
-        for &succ in &self.plan.succs[si] {
-            if self.deps[succ].fetch_sub(1, Ordering::AcqRel) == 1 {
-                self.push(wid, Task::Step(succ));
-            }
-        }
-        self.remaining.fetch_sub(1, Ordering::AcqRel);
-    }
-}
-
-/// Lower a partitioned conv's input into its patch-matrix scratch
-/// (im2col / im2col_i8). Runs once, before any GEMM part.
+/// Lower one image of a partitioned conv's input into its patch-matrix
+/// scratch (im2col / im2col_i8). Runs once per image, before any of that
+/// image's GEMM parts; `cols`/`cols_q` scratch is per-image, so batched
+/// steps re-lower it image by image exactly like the whole-step
+/// primitive does.
 ///
 /// SAFETY: same lane contract as `exec_step_on`; the step must satisfy
-/// [`partitionable`] (single image) and no part may run concurrently.
-unsafe fn exec_partitioned_prep(step: &Step, lanes: Lanes) {
+/// [`partitionable`] and no part of this step may run concurrently (the
+/// previous image's parts must all have completed).
+pub(crate) unsafe fn exec_partitioned_prep(step: &Step, lanes: Lanes, img: usize) {
     let sin = &step.ins[0];
     let (c, h, w) = (sin.shape[1], sin.shape[2], sin.shape[3]);
+    let plane = c * h * w;
     let (out_h, out_w) = (step.out.shape[2], step.out.shape[3]);
     match &step.op {
         Op::ConvIm2col { w: wt, stride, pad, cols, .. } => {
             let k = (wt.shape[2], wt.shape[3]);
-            let x = std::slice::from_raw_parts(lanes.f.add(sin.off), sin.len);
+            let x = std::slice::from_raw_parts(lanes.f.add(sin.off + img * plane), plane);
             let cols_s = span_mut_at(lanes.f, *cols);
             im2col(x, c, h, w, k, *stride, *pad, out_h, out_w, cols_s);
         }
         Op::ConvInt8Q { qw, stride, pad, cols_q, .. } => {
             let k = (qw.shape[2], qw.shape[3]);
-            let x = std::slice::from_raw_parts(lanes.q.add(sin.off), sin.len);
+            let x = std::slice::from_raw_parts(lanes.q.add(sin.off + img * plane), plane);
             let cols_s =
                 std::slice::from_raw_parts_mut(lanes.q.add(cols_q.off), cols_q.len);
             im2col_i8(x, c, h, w, k, *stride, *pad, out_h, out_w, cols_s);
@@ -2028,24 +1803,33 @@ unsafe fn exec_partitioned_prep(step: &Step, lanes: Lanes) {
     }
 }
 
-/// One GEMM row-range part of a partitioned conv: output channels `rows`
-/// into the step's output (f32, with the same bias+ReLU tail
-/// `conv_im2col_into` applies) or i32 accumulator rows (int8). Disjoint
-/// ranges touch disjoint slices, and each element's accumulation order
-/// matches the whole-step primitive, so the union is bit-exact.
+/// One GEMM row-range part of image `img` of a partitioned conv: output
+/// channels `rows` into the image's slice of the step's output (f32,
+/// with the same bias+ReLU tail `conv_im2col_into` applies) or i32
+/// accumulator rows (int8; the accumulator is per-image scratch, so
+/// `img` only offsets the f32 path). Disjoint ranges touch disjoint
+/// slices, and each element's accumulation order matches the whole-step
+/// primitive, so the union is bit-exact.
 ///
-/// SAFETY: prep must have completed; concurrent parts must have disjoint
-/// `rows` (panel-aligned for packed GEMMs); same lane contract as
-/// `exec_step_on`; `unit` must be the executing worker's private
-/// pack-lane region.
-unsafe fn exec_partitioned_part(step: &Step, lanes: Lanes, rows: Range<usize>, unit: usize) {
+/// SAFETY: prep for `img` must have completed; concurrent parts must be
+/// of the same image with disjoint `rows` (panel-aligned for packed
+/// GEMMs); same lane contract as `exec_step_on`; `unit` must be the
+/// executing worker's private pack-lane region.
+pub(crate) unsafe fn exec_partitioned_part(
+    step: &Step,
+    lanes: Lanes,
+    rows: Range<usize>,
+    img: usize,
+    unit: usize,
+) {
     let out_plane = step.out.shape[2] * step.out.shape[3];
+    let m = step.out.shape[1];
     match &step.op {
         Op::ConvIm2col { w: wt, bias, gemm, pa, relu, cols, .. } => {
             let kdim = wt.shape[1] * wt.shape[2] * wt.shape[3];
             let cols_s = std::slice::from_raw_parts(lanes.f.add(cols.off), cols.len);
             let c_rows = std::slice::from_raw_parts_mut(
-                lanes.f.add(step.out.off + rows.start * out_plane),
+                lanes.f.add(step.out.off + (img * m + rows.start) * out_plane),
                 rows.len() * out_plane,
             );
             match gemm {
@@ -2123,24 +1907,28 @@ unsafe fn exec_partitioned_part(step: &Step, lanes: Lanes, rows: Range<usize>, u
     }
 }
 
-/// Finish a partitioned int8 conv: requantize the image's complete i32
-/// accumulators to its fresh per-image scale — identical code to the
-/// unpartitioned `conv_int8_q_into` tail.
+/// Finish image `img` of a partitioned int8 conv: requantize the image's
+/// complete i32 accumulators to its fresh per-image scale — identical
+/// code to the unpartitioned `conv_int8_q_into` tail (which reads
+/// `x_scales[ni]` and writes `out_scales[ni]`, both `img` slots past the
+/// slot's base scale index).
 ///
-/// SAFETY: every GEMM part must have completed (and be visible); same
-/// lane contract as `exec_step_on`.
-unsafe fn exec_partitioned_finish(step: &Step, lanes: Lanes) {
+/// SAFETY: every GEMM part of `img` must have completed (and be
+/// visible); same lane contract as `exec_step_on`.
+pub(crate) unsafe fn exec_partitioned_finish(step: &Step, lanes: Lanes, img: usize) {
     match &step.op {
         Op::ConvInt8Q { qw, bias, relu, acc, .. } => {
             let sin = &step.ins[0];
             let o = step.out.shape[1];
             let out_plane = step.out.shape[2] * step.out.shape[3];
-            let x_scale = *lanes.s.add(sin.scale_idx());
+            let x_scale = *lanes.s.add(sin.scale_idx() + img);
             let acc_s = std::slice::from_raw_parts(lanes.acc.add(acc.off), acc.len);
-            let out_q =
-                std::slice::from_raw_parts_mut(lanes.q.add(step.out.off), step.out.len);
+            let out_q = std::slice::from_raw_parts_mut(
+                lanes.q.add(step.out.off + img * o * out_plane),
+                o * out_plane,
+            );
             let out_scales =
-                std::slice::from_raw_parts_mut(lanes.s.add(step.out.scale_idx()), 1);
+                std::slice::from_raw_parts_mut(lanes.s.add(step.out.scale_idx() + img), 1);
             let dq = x_scale * qw.scale;
             out_scales[0] =
                 requantize_image(&acc_s[..o * out_plane], o, out_plane, bias, *relu, dq, out_q);
@@ -2172,35 +1960,56 @@ unsafe fn span_mut_at<'a>(base: *mut f32, s: Span) -> &'a mut [f32] {
 }
 
 /// Raw views of the arena's lanes (f32, i8, i32 accumulators and the i8
-/// activations' scale slots), shared by every worker of a wavefront.
+/// activations' scale slots), shared by every worker of a wavefront or
+/// tasked replay.
 ///
-/// SAFETY of the Send/Sync impls: a `Lanes` value is only created inside
-/// `replay`/`replay_on` from a `&mut Arena` held for the whole call, and
-/// concurrent workers only dereference spans the planner proved pairwise
-/// disjoint per lane (`validate_wavefronts`), with a barrier between
-/// wavefronts.
+/// SAFETY of the Send/Sync impls: a `Lanes` value is only created from a
+/// `&mut Arena` held for the whole replay call
+/// (`replay`/`replay_on`/`ScheduleTrace::replay_into`), and concurrent
+/// workers only dereference spans the planner proved pairwise disjoint
+/// per lane (`validate_wavefronts`/`validate_schedule`), ordered by a
+/// wave barrier or the task graph's acquire/release hand-offs.
 #[derive(Clone, Copy)]
-struct Lanes {
-    f: *mut f32,
-    q: *mut i8,
-    acc: *mut i32,
-    s: *mut f32,
+pub(crate) struct Lanes {
+    pub(crate) f: *mut f32,
+    pub(crate) q: *mut i8,
+    pub(crate) acc: *mut i32,
+    pub(crate) s: *mut f32,
     /// Per-unit B-pack regions for the packed GEMM kernels (`pf_stride`
     /// f32 words / `pq_stride` i8 bytes per unit); each concurrent worker
     /// dereferences only its own region, so they need no disjointness
     /// proof from the planner.
-    pf: *mut f32,
-    pq: *mut i8,
-    pf_stride: usize,
-    pq_stride: usize,
+    pub(crate) pf: *mut f32,
+    pub(crate) pq: *mut i8,
+    pub(crate) pf_stride: usize,
+    pub(crate) pq_stride: usize,
 }
 
 unsafe impl Send for Lanes {}
 unsafe impl Sync for Lanes {}
 
+impl Lanes {
+    /// Bind `arena`'s lane buffers for a replay of `plan`. The caller's
+    /// `&mut Arena` must outlive every dereference of the returned
+    /// pointers (the Send/Sync contract above), and the arena must
+    /// already be [`Arena::ensure_units`]-sized for the plan.
+    pub(crate) fn bind(arena: &mut Arena, plan: &ExecPlan) -> Lanes {
+        Lanes {
+            f: arena.f.as_mut_ptr(),
+            q: arena.q.as_mut_ptr(),
+            acc: arena.acc.as_mut_ptr(),
+            s: arena.scales.as_mut_ptr(),
+            pf: arena.pack_f.as_mut_ptr(),
+            pq: arena.pack_q.as_mut_ptr(),
+            pf_stride: plan.pack_f_words,
+            pq_stride: plan.pack_q_bytes,
+        }
+    }
+}
+
 /// Bind a step's arena spans and dispatch to the out-param primitive.
 /// Returns the number of packed-GEMM B panel blocks the step packed.
-fn exec_step(step: &Step, arena: &mut Arena) -> usize {
+pub(crate) fn exec_step(step: &Step, arena: &mut Arena) -> usize {
     let lanes = Lanes {
         f: arena.f.as_mut_ptr(),
         q: arena.q.as_mut_ptr(),
@@ -2225,7 +2034,7 @@ fn exec_step(step: &Step, arena: &mut Arena) -> usize {
 /// and no concurrently executing step may touch a span overlapping this
 /// step's input/output/scratch spans — the planner's wavefront
 /// disjointness invariant. No two concurrent steps may share `unit`.
-unsafe fn exec_step_on(step: &Step, lanes: Lanes, unit: usize) -> usize {
+pub(crate) unsafe fn exec_step_on(step: &Step, lanes: Lanes, unit: usize) -> usize {
     // The planner guarantees: the output span is disjoint from every
     // same-lane input span unless `in_place` (where it aliases ins[0]
     // exactly), and scratch spans are disjoint from inputs, output and
@@ -3472,10 +3281,12 @@ mod tests {
             );
             // deterministic: same plan + thread count -> same split
             assert_eq!(parts, plan.partition_parts(4));
-            // single-threaded and batched plans never partition
+            // single-threaded plans never partition
             assert!(plan.partition_parts(1).iter().all(|&p| p == 0));
+            // batched plans partition per image (the batched parity test
+            // below proves them bit-exact)
             let plan2 = p.plan(&a, 2).unwrap();
-            assert!(plan2.partition_parts(4).iter().all(|&p| p == 0));
+            assert!(plan2.partition_parts(4).iter().any(|&p| p >= 2));
             let mut arena = Arena::for_plan(&plan);
             let seq = plan.replay(&x, &mut arena);
             let pool = ThreadPool::new(4);
@@ -3492,6 +3303,106 @@ mod tests {
                 "{choice:?}"
             );
         }
+    }
+
+    /// Batched (n > 1) conv steps partition per image: each image's GEMM
+    /// rows fan out in parallel while images chain sequentially over the
+    /// step's shared im2col/accumulator scratch — bit-exact with the
+    /// whole-step batched primitive at every thread count, f32 and int8.
+    #[test]
+    fn partitioned_batched_replay_is_bitexact_across_thread_counts() {
+        let mut g = Graph::new("bigchain_b", (8, 16, 16));
+        g.push("c1", LayerKind::Conv { k: (3, 3), stride: (1, 1), pad: Padding::Same, relu_fused: true }, 32);
+        g.push("c2", LayerKind::Conv { k: (3, 3), stride: (1, 1), pad: Padding::Same, relu_fused: true }, 32);
+        g.push("c3", LayerKind::Conv { k: (3, 3), stride: (1, 1), pad: Padding::Same, relu_fused: false }, 32);
+        let w = crate::models::random_weights(&g, 4);
+        let p = Prepared::new(g.clone(), w, Platform::pi4()).unwrap();
+        let space = DesignSpace::build(&g, &p.platform);
+        let mut rng = Rng::new(61);
+        for batch in [2usize, 3] {
+            let x = Tensor::randn(&[batch, 8, 16, 16], 1.0, &mut rng);
+            for choice in [ConvImpl::GemmRef, ConvImpl::GemmBlocked, ConvImpl::Int8Gemm] {
+                let a = space.uniform(&g, choice);
+                let plan = p.plan(&a, batch).unwrap();
+                plan.validate_schedule().unwrap();
+                let parts = plan.partition_parts(4);
+                assert!(
+                    parts.iter().any(|&p| p >= 2),
+                    "{choice:?}/b{batch}: batched convs partition"
+                );
+                let mut arena = Arena::for_plan(&plan);
+                let seq = plan.replay(&x, &mut arena);
+                for threads in [1usize, 2, 4] {
+                    let pool = ThreadPool::new(threads);
+                    let (tsk, stats) = plan.replay_tasked_stats(&x, &mut arena, &pool);
+                    assert!(
+                        tsk.output.allclose(&seq.output, 0.0, 0.0),
+                        "{choice:?}/b{batch}/{threads}t: batched partitioned replay diverged by {}",
+                        tsk.output.max_abs_diff(&seq.output)
+                    );
+                    if threads == 4 {
+                        // subtasks count parts × images
+                        let expect: usize = parts
+                            .iter()
+                            .zip(&plan.steps)
+                            .map(|(&p, s)| if p >= 2 { p as usize * s.out.shape[0] } else { 0 })
+                            .sum();
+                        assert_eq!(stats.subtasks, expect, "{choice:?}/b{batch}");
+                    }
+                }
+            }
+        }
+    }
+
+    /// A trace records once and replays forever: epoch-counter resets
+    /// keep the preallocated scheduler state valid across replays (with
+    /// changing inputs), bit-exact with the sequential oracle every time.
+    #[test]
+    fn recorded_trace_replays_bitexact_across_epochs() {
+        let (g, w) = unbalanced_model();
+        let p = Prepared::new(g.clone(), w, Platform::pi4()).unwrap();
+        let a = DesignSpace::build(&g, &p.platform).uniform(&g, ConvImpl::GemmBlocked);
+        let plan = p.plan(&a, 1).unwrap();
+        let mut rng = Rng::new(44);
+        let x1 = Tensor::randn(&[1, 8, 12, 12], 1.0, &mut rng);
+        let x2 = Tensor::randn(&[1, 8, 12, 12], 1.0, &mut rng);
+        let mut arena = Arena::for_plan(&plan);
+        let seq1 = plan.replay(&x1, &mut arena);
+        let seq2 = plan.replay(&x2, &mut arena);
+        let pool = ThreadPool::new(4);
+        let mut trace = plan.record_trace(4);
+        assert_eq!(trace.threads(), 4);
+        for epoch in 0..4 {
+            let (r1, stats) = trace.replay_stats(&plan, &x1, &mut arena, &pool);
+            assert!(
+                r1.output.allclose(&seq1.output, 0.0, 0.0),
+                "epoch {epoch}: trace replay diverged by {}",
+                r1.output.max_abs_diff(&seq1.output)
+            );
+            assert_eq!(stats.subtasks, trace.subtasks());
+            assert_eq!(stats.partitioned_steps, trace.partitioned_steps());
+            assert!(stats.workers >= 2 && stats.workers <= 4);
+            let (r2, _) = trace.replay_stats(&plan, &x2, &mut arena, &pool);
+            assert!(
+                r2.output.allclose(&seq2.output, 0.0, 0.0),
+                "epoch {epoch}: trace replay diverged on second input"
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "recorded for")]
+    fn trace_rejects_mismatched_pool_size() {
+        let (g, w) = unbalanced_model();
+        let p = Prepared::new(g.clone(), w, Platform::pi4()).unwrap();
+        let a = DesignSpace::build(&g, &p.platform).uniform(&g, ConvImpl::GemmBlocked);
+        let plan = p.plan(&a, 1).unwrap();
+        let mut rng = Rng::new(45);
+        let x = Tensor::randn(&[1, 8, 12, 12], 1.0, &mut rng);
+        let mut arena = Arena::for_plan(&plan);
+        let mut trace = plan.record_trace(2);
+        let pool = ThreadPool::new(4);
+        trace.replay_into(&plan, &x, &mut arena, &pool);
     }
 
     /// ImageNet-family acceptance spot-check: squeezenet (the smallest

@@ -1,0 +1,835 @@
+//! Recorded schedule traces: zero-alloc steady-state tasked replay
+//! (DESIGN.md §13).
+//!
+//! [`ExecPlan::replay_tasked`] makes good scheduling decisions — dep
+//! counting, work stealing, intra-op GEMM partitioning — but it used to
+//! rebuild O(steps) scheduler state (counter vectors, deque buffers,
+//! part lists) on every request. That is exactly the per-inference
+//! bookkeeping the source paper's LPDNN engine exists to avoid, and the
+//! same observation behind CUDA graphs: the schedule for a fixed
+//! `(plan, threads, batch)` triple never changes, so capture it once and
+//! replay the capture.
+//!
+//! [`ScheduleTrace::record`] freezes the tasked schedule into flat
+//! preallocated arrays: per-step predecessor counts, CSR successor
+//! edges, the round-robin seed set, per-step partition widths and image
+//! counts, and per-worker fixed-capacity Chase–Lev deques sized for the
+//! whole task set. [`ScheduleTrace::replay_into`] then executes the
+//! trace with **zero heap allocation**: instead of zeroing or
+//! reallocating counters between replays, an epoch counter `e` redefines
+//! "ready" as `deps[i] == e * preds[i]` — counters monotonically
+//! accumulate and every replay starts from wherever the previous one
+//! left them. Idle workers park on a condvar (an eventcount protocol
+//! prevents lost wakeups) instead of yield-spinning, so a shared serving
+//! pool is quiet between requests; ready hand-offs go through per-worker
+//! lock-free Chase–Lev deques (owner LIFO pop, thief FIFO steal)
+//! instead of mutexed `VecDeque`s.
+//!
+//! A trace is valid for exactly the plan and thread count it recorded
+//! (`LneSession` re-records when its pool's thread count changes and
+//! drops traces with the session on `replace_session`); bit-exactness
+//! with the sequential [`ExecPlan::replay`] is inherited from the task
+//! graph — the trace only freezes decisions `replay_tasked` used to make
+//! per call, it does not change them.
+
+use super::engine::RunResult;
+use super::planner::{
+    atomic_add_ms, exec_partitioned_finish, exec_partitioned_part, exec_partitioned_prep,
+    exec_step, exec_step_on, part_rows, step_mr, Arena, ExecPlan, Lanes, Op, SchedStats,
+};
+use crate::tensor::Tensor;
+use crate::util::threadpool::ThreadPool;
+use std::sync::atomic::{fence, AtomicBool, AtomicI64, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+/// Tasks are packed into one u64 so deque slots are single atomics:
+/// bit 0 = kind (0 step, 1 part), bits 1..25 step index, bits 25..41
+/// part index, bits 41..57 image index. `record` asserts the widths.
+const KIND_PART: u64 = 1;
+
+fn enc_step(si: usize) -> u64 {
+    (si as u64) << 1
+}
+
+fn enc_part(si: usize, part: u32, img: u32) -> u64 {
+    KIND_PART | ((si as u64) << 1) | (u64::from(part) << 25) | (u64::from(img) << 41)
+}
+
+fn dec_step(t: u64) -> usize {
+    ((t >> 1) & 0xFF_FFFF) as usize
+}
+
+fn dec_part(t: u64) -> (usize, u32) {
+    (((t >> 25) & 0xFFFF) as usize, ((t >> 41) & 0xFFFF) as u32)
+}
+
+/// Fixed-capacity Chase–Lev work-stealing deque over packed task words.
+/// The owner pushes and pops at the bottom (LIFO); thieves steal at the
+/// top (FIFO). `top` only ever grows, so there is no ABA, and the trace
+/// sizes the ring for every task one replay can push, so `push` never
+/// grows or wraps onto unconsumed slots (capacity > tasks per epoch; the
+/// deque drains completely by the end of each replay).
+struct Deque {
+    buf: Vec<AtomicU64>,
+    mask: u64,
+    top: AtomicI64,
+    bottom: AtomicI64,
+}
+
+impl Deque {
+    fn new(cap: usize) -> Deque {
+        let cap = cap.next_power_of_two().max(2);
+        Deque {
+            buf: (0..cap).map(|_| AtomicU64::new(0)).collect(),
+            mask: cap as u64 - 1,
+            top: AtomicI64::new(0),
+            bottom: AtomicI64::new(0),
+        }
+    }
+
+    fn slot(&self, i: i64) -> &AtomicU64 {
+        &self.buf[(i as u64 & self.mask) as usize]
+    }
+
+    /// Owner-only. The Release store of `bottom` publishes the slot
+    /// write to thieves that Acquire-load `bottom`.
+    fn push(&self, task: u64) {
+        let b = self.bottom.load(Ordering::Relaxed);
+        self.slot(b).store(task, Ordering::Relaxed);
+        self.bottom.store(b + 1, Ordering::Release);
+    }
+
+    /// Owner-only LIFO pop. The SeqCst fence orders the speculative
+    /// `bottom` decrement against thieves' `top` reads; the last element
+    /// is raced for with a CAS on `top`.
+    fn pop(&self) -> Option<u64> {
+        let b = self.bottom.load(Ordering::Relaxed) - 1;
+        self.bottom.store(b, Ordering::Relaxed);
+        fence(Ordering::SeqCst);
+        let t = self.top.load(Ordering::Relaxed);
+        if t > b {
+            // empty: undo the decrement
+            self.bottom.store(b + 1, Ordering::Relaxed);
+            return None;
+        }
+        let task = self.slot(b).load(Ordering::Relaxed);
+        if t == b {
+            let won = self
+                .top
+                .compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed)
+                .is_ok();
+            self.bottom.store(b + 1, Ordering::Relaxed);
+            if !won {
+                return None; // a thief got the last element
+            }
+        }
+        Some(task)
+    }
+
+    /// Thief-side FIFO steal; a lost CAS race returns `None` and the
+    /// caller moves on to the next victim.
+    fn steal(&self) -> Option<u64> {
+        let t = self.top.load(Ordering::Acquire);
+        fence(Ordering::SeqCst);
+        let b = self.bottom.load(Ordering::Acquire);
+        if t >= b {
+            return None;
+        }
+        let task = self.slot(t).load(Ordering::Relaxed);
+        self.top
+            .compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed)
+            .ok()
+            .map(|_| task)
+    }
+
+    /// Racy emptiness probe for the parking re-check: may spuriously say
+    /// non-empty (harmless extra loop), and the eventcount protocol in
+    /// [`Parker`] guarantees a push concurrent with parking is either
+    /// seen here or triggers a wake.
+    fn has_items(&self) -> bool {
+        self.top.load(Ordering::Acquire) < self.bottom.load(Ordering::Acquire)
+    }
+
+    /// Exclusive-access reset after an aborted replay left items behind.
+    fn reset(&mut self) {
+        *self.top.get_mut() = 0;
+        *self.bottom.get_mut() = 0;
+    }
+}
+
+/// Eventcount parking lot for idle workers. Lost-wakeup-free protocol:
+/// a parker reads the generation, advertises itself in `parked`
+/// (SeqCst), re-checks for work, and only then condvar-waits while the
+/// generation is unchanged; a waker publishes its work, then
+/// `fence(SeqCst)` + reads `parked` — either it sees the parker (and
+/// bumps the generation under the lock, notifying), or the parker's
+/// re-check saw the work. Counters feed `SchedStats::parks`/`wakes`.
+struct Parker {
+    gen: AtomicU64,
+    parked: AtomicUsize,
+    lock: Mutex<()>,
+    cv: Condvar,
+    parks: AtomicUsize,
+    wakes: AtomicUsize,
+}
+
+impl Parker {
+    fn new() -> Parker {
+        Parker {
+            gen: AtomicU64::new(0),
+            parked: AtomicUsize::new(0),
+            lock: Mutex::new(()),
+            cv: Condvar::new(),
+            parks: AtomicUsize::new(0),
+            wakes: AtomicUsize::new(0),
+        }
+    }
+
+    /// Block until `has_work` turns true *or* any waker bumps the
+    /// generation. Spurious returns are fine — the worker loop re-polls.
+    fn park(&self, has_work: impl Fn() -> bool) {
+        let g0 = self.gen.load(Ordering::SeqCst);
+        self.parked.fetch_add(1, Ordering::SeqCst);
+        if has_work() {
+            self.parked.fetch_sub(1, Ordering::SeqCst);
+            return;
+        }
+        self.parks.fetch_add(1, Ordering::Relaxed);
+        let mut guard = self.lock.lock().unwrap();
+        while self.gen.load(Ordering::SeqCst) == g0 && !has_work() {
+            guard = self.cv.wait(guard).unwrap();
+        }
+        drop(guard);
+        self.parked.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    /// Wake up to `n` parked workers (no-op when none are parked — the
+    /// fast path of a busy replay never touches the lock).
+    fn wake(&self, n: usize) {
+        if n == 0 {
+            return;
+        }
+        fence(Ordering::SeqCst);
+        let parked = self.parked.load(Ordering::SeqCst);
+        if parked == 0 {
+            return;
+        }
+        self.wakes.fetch_add(1, Ordering::Relaxed);
+        let _guard = self.lock.lock().unwrap();
+        self.gen.fetch_add(1, Ordering::SeqCst);
+        if n >= parked {
+            self.cv.notify_all();
+        } else {
+            for _ in 0..n {
+                self.cv.notify_one();
+            }
+        }
+    }
+
+    /// Wake everyone unconditionally (replay completion / abort).
+    fn wake_all(&self) {
+        fence(Ordering::SeqCst);
+        if self.parked.load(Ordering::SeqCst) == 0 {
+            return;
+        }
+        self.wakes.fetch_add(1, Ordering::Relaxed);
+        let _guard = self.lock.lock().unwrap();
+        self.gen.fetch_add(1, Ordering::SeqCst);
+        self.cv.notify_all();
+    }
+}
+
+/// A frozen, replayable capture of [`ExecPlan::replay_tasked`]'s
+/// schedule for one `(plan, threads)` pair: what to run, in what
+/// dependency order, split how — plus all the mutable scheduler state
+/// one replay needs, preallocated and epoch-reset so steady-state
+/// replays allocate nothing. See the module docs for the protocol.
+pub struct ScheduleTrace {
+    /// Pool size the trace was recorded for (`replay_into` asserts it).
+    threads: usize,
+    /// Workers a replay actually occupies (`threads` capped by the
+    /// plan's concurrency ceiling).
+    workers: usize,
+    /// Concurrency ceiling ≤ 1: replays run inline on the caller.
+    sequential: bool,
+    /// Plan fingerprint (best effort — step count and arena footprint):
+    /// catches a trace replayed against the wrong plan.
+    steps: usize,
+    f32_words: usize,
+    // --- frozen schedule -------------------------------------------
+    /// Per-step predecessor count (the epoch multiplier).
+    preds: Vec<u32>,
+    /// CSR successor edges: step `i`'s successors are
+    /// `succ_dat[succ_off[i]..succ_off[i+1]]`.
+    succ_off: Vec<u32>,
+    succ_dat: Vec<u32>,
+    /// Zero-predecessor steps, seeded round-robin at replay start.
+    seeds: Vec<u32>,
+    /// Per-step partition width (0 or ≥ 2 row-range parts per image).
+    parts: Vec<u32>,
+    /// Images a partitioned step chains through (1 for whole steps).
+    images: Vec<u32>,
+    partitioned_steps: usize,
+    total_subtasks: usize,
+    // --- epoch-reset runtime state ---------------------------------
+    /// Completed-replay count; replay `e` treats step `i` as ready when
+    /// `deps[i]` reaches `e * preds[i]`, so nothing is ever zeroed.
+    epoch: u64,
+    /// An aborted replay left counters/deques mid-flight; the next
+    /// replay must `hard_reset` before trusting the epoch invariant.
+    dirty: bool,
+    deps: Vec<AtomicU64>,
+    /// Per-step completed-part counter (accumulates across epochs; every
+    /// multiple of `parts[i]` is an image boundary).
+    parts_done: Vec<AtomicU64>,
+    deques: Vec<Deque>,
+    remaining: AtomicUsize,
+    aborted: AtomicBool,
+    steals: AtomicUsize,
+    step_ms: Vec<AtomicU64>,
+    parker: Parker,
+}
+
+impl ScheduleTrace {
+    /// Capture the tasked schedule of `plan` at `threads` workers. One
+    /// recording pass — every `replay_into` after this allocates
+    /// nothing.
+    pub fn record(plan: &ExecPlan, threads: usize) -> ScheduleTrace {
+        let n = plan.steps.len();
+        assert!(n < (1 << 24), "trace task encoding caps plans at 2^24 steps");
+        let parts = plan.partition_parts(threads);
+        // Same concurrency ceiling as replay_tasked always used: never
+        // occupy more pool workers than the widest wavefront or widest
+        // GEMM split can feed.
+        let ceiling = plan
+            .max_wave_width()
+            .max(parts.iter().copied().max().unwrap_or(0) as usize);
+        let workers = threads.min(ceiling).max(1);
+        let sequential = workers <= 1 || n <= 1;
+        let mut images = vec![1u32; n];
+        let mut partitioned_steps = 0usize;
+        let mut total_subtasks = 0usize;
+        for (si, step) in plan.steps.iter().enumerate() {
+            if parts[si] >= 2 {
+                let imgs = step.out.shape[0];
+                assert!(
+                    imgs < (1 << 16) && (parts[si] as usize) < (1 << 16),
+                    "trace task encoding caps parts/images at 2^16"
+                );
+                images[si] = imgs as u32;
+                partitioned_steps += 1;
+                total_subtasks += parts[si] as usize * imgs;
+            }
+        }
+        let mut succ_off = Vec::with_capacity(n + 1);
+        let mut succ_dat: Vec<u32> =
+            Vec::with_capacity(plan.succs.iter().map(Vec::len).sum());
+        succ_off.push(0u32);
+        for succs in &plan.succs {
+            succ_dat.extend(succs.iter().map(|&s| s as u32));
+            succ_off.push(succ_dat.len() as u32);
+        }
+        let seeds: Vec<u32> = plan
+            .preds
+            .iter()
+            .enumerate()
+            .filter(|&(_, &p)| p == 0)
+            .map(|(si, _)| si as u32)
+            .collect();
+        debug_assert!(n == 0 || !seeds.is_empty(), "dependency graph has no source step");
+        // Each deque can in the worst case receive every task one replay
+        // pushes (seeds + dep-released steps + published parts); +1 keeps
+        // the ring's live count strictly below capacity so a push never
+        // lands on an unconsumed slot.
+        let cap = n + total_subtasks + 1;
+        ScheduleTrace {
+            threads,
+            workers,
+            sequential,
+            steps: n,
+            f32_words: plan.f32_words,
+            preds: plan.preds.iter().map(|&p| p as u32).collect(),
+            succ_off,
+            succ_dat,
+            seeds,
+            parts,
+            images,
+            partitioned_steps,
+            total_subtasks,
+            epoch: 0,
+            dirty: false,
+            deps: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            parts_done: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            deques: (0..workers).map(|_| Deque::new(cap)).collect(),
+            remaining: AtomicUsize::new(0),
+            aborted: AtomicBool::new(false),
+            steals: AtomicUsize::new(0),
+            step_ms: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            parker: Parker::new(),
+        }
+    }
+
+    /// Pool size this trace was recorded for — a session checks this to
+    /// invalidate traces when its pool's thread count changes.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Workers one replay occupies (1 when the trace runs inline).
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Static schedule stats (the per-replay dynamic fields are filled
+    /// in by `replay_into`).
+    pub fn partitioned_steps(&self) -> usize {
+        self.partitioned_steps
+    }
+
+    /// Row-range subtasks (parts × images) one replay fans out.
+    pub fn subtasks(&self) -> usize {
+        self.total_subtasks
+    }
+
+    /// Execute one replay of the trace, leaving the plan's output in
+    /// `arena` (read it via [`ExecPlan::output_slice`]). This is the
+    /// zero-allocation hot path: input staging, counter resets, task
+    /// dispatch and execution all reuse the trace's and arena's
+    /// preallocated storage.
+    ///
+    /// Panics if a scheduled task panicked (the trace marks itself dirty
+    /// and self-heals on the next replay), and asserts the trace matches
+    /// `plan` and `pool`.
+    pub fn replay_into(
+        &mut self,
+        plan: &ExecPlan,
+        x: &Tensor,
+        arena: &mut Arena,
+        pool: &ThreadPool,
+    ) -> SchedStats {
+        assert_eq!(
+            (self.steps, self.f32_words),
+            (plan.steps.len(), plan.f32_words),
+            "schedule trace replayed against a different plan"
+        );
+        assert_eq!(
+            self.threads,
+            pool.size(),
+            "schedule trace recorded for a {}-thread pool, replayed on {}",
+            self.threads,
+            pool.size()
+        );
+        assert_eq!(
+            x.shape, plan.input.shape,
+            "input shape {:?} vs planned {:?}",
+            x.shape, plan.input.shape
+        );
+        if self.sequential {
+            arena.ensure(plan);
+            arena.f[plan.input.off..plan.input.off + plan.input.len]
+                .copy_from_slice(&x.data);
+            for (si, step) in plan.steps.iter().enumerate() {
+                let t0 = Instant::now();
+                exec_step(step, arena);
+                self.step_ms[si]
+                    .store((t0.elapsed().as_secs_f64() * 1e3).to_bits(), Ordering::Relaxed);
+            }
+            return SchedStats { workers: 1, ..SchedStats::default() };
+        }
+        if self.dirty {
+            self.hard_reset();
+        }
+        self.epoch += 1;
+        let (epoch, workers) = (self.epoch, self.workers);
+        arena.ensure_units(plan, workers);
+        arena.f[plan.input.off..plan.input.off + plan.input.len]
+            .copy_from_slice(&x.data);
+        let lanes = Lanes::bind(arena, plan);
+        self.remaining.store(self.steps, Ordering::Relaxed);
+        self.aborted.store(false, Ordering::Relaxed);
+        self.steals.store(0, Ordering::Relaxed);
+        self.parker.parks.store(0, Ordering::Relaxed);
+        self.parker.wakes.store(0, Ordering::Relaxed);
+        for ms in &self.step_ms {
+            ms.store(0, Ordering::Relaxed);
+        }
+        // Seed the ready set round-robin so workers start spread out.
+        // Workers aren't running yet, so owner-only pushes are fine.
+        for (k, &si) in self.seeds.iter().enumerate() {
+            self.deques[k % workers].push(enc_step(si as usize));
+        }
+        {
+            let ex = Executor { trace: &*self, plan, lanes, epoch };
+            // SAFETY of the shared `lanes` (see `Lanes`): every pair of
+            // steps with conflicting spans is ordered by the recorded
+            // task graph (`validate_schedule` proves the graph), parts
+            // of one image write disjoint row ranges, images of one step
+            // chain through acquire/release part counters, and all
+            // cross-worker hand-offs go through the deques'
+            // release/acquire pairs — so no two threads ever touch an
+            // overlapping span concurrently and every read sees its
+            // producer's writes.
+            pool.scope_run(workers, |wid| ex.worker(wid));
+        }
+        if self.aborted.load(Ordering::SeqCst) {
+            self.dirty = true;
+            panic!("trace replay: a scheduled task panicked");
+        }
+        debug_assert_eq!(self.remaining.load(Ordering::SeqCst), 0);
+        SchedStats {
+            workers,
+            steals: self.steals.load(Ordering::Relaxed),
+            partitioned_steps: self.partitioned_steps,
+            subtasks: self.total_subtasks,
+            parks: self.parker.parks.load(Ordering::Relaxed),
+            wakes: self.parker.wakes.load(Ordering::Relaxed),
+        }
+    }
+
+    /// [`ScheduleTrace::replay_into`] packaged like the plan replays:
+    /// times the replay, folds per-step timings into per-layer ones and
+    /// materializes the output tensor. The serving hot path uses
+    /// `replay_into` + [`ExecPlan::output_slice`] instead — this
+    /// convenience wrapper allocates for its `RunResult`.
+    pub fn replay_stats(
+        &mut self,
+        plan: &ExecPlan,
+        x: &Tensor,
+        arena: &mut Arena,
+        pool: &ThreadPool,
+    ) -> (RunResult, SchedStats) {
+        let t_all = Instant::now();
+        let stats = self.replay_into(plan, x, arena, pool);
+        let total_ms = t_all.elapsed().as_secs_f64() * 1e3;
+        let mut layer_ms = vec![0.0f64; plan.layer_count()];
+        for (si, step) in plan.steps.iter().enumerate() {
+            layer_ms[step.layer] += f64::from_bits(self.step_ms[si].load(Ordering::Relaxed));
+        }
+        let output = Tensor::from_vec(&plan.output.shape, plan.output_slice(arena).to_vec());
+        (
+            RunResult {
+                output,
+                layer_ms,
+                total_ms,
+                peak_bytes: plan.observed_peak_bytes(),
+            },
+            stats,
+        )
+    }
+
+    /// Restore the epoch invariant after an aborted replay left counters
+    /// and deques mid-flight: pretend epoch `self.epoch` completed
+    /// cleanly. Exclusive access, so plain stores are enough.
+    fn hard_reset(&mut self) {
+        for si in 0..self.steps {
+            *self.deps[si].get_mut() = self.epoch * u64::from(self.preds[si]);
+            *self.parts_done[si].get_mut() =
+                self.epoch * u64::from(self.parts[si]) * u64::from(self.images[si]);
+        }
+        for dq in &mut self.deques {
+            dq.reset();
+        }
+        *self.remaining.get_mut() = 0;
+        *self.aborted.get_mut() = false;
+        self.dirty = false;
+    }
+}
+
+/// One replay's view of a trace: borrows the trace and plan, carries the
+/// raw arena lanes and the current epoch. `Lanes` is (unsafely) Send +
+/// Sync, everything else is atomics and shared refs, so `scope_run` can
+/// fan `worker` out across the pool.
+struct Executor<'a> {
+    trace: &'a ScheduleTrace,
+    plan: &'a ExecPlan,
+    lanes: Lanes,
+    epoch: u64,
+}
+
+impl Executor<'_> {
+    fn worker(&self, wid: usize) {
+        let tr = self.trace;
+        let w = tr.deques.len();
+        loop {
+            if tr.aborted.load(Ordering::Acquire) {
+                break;
+            }
+            let mut task = tr.deques[wid].pop();
+            if task.is_none() {
+                for k in 1..w {
+                    if let Some(t) = tr.deques[(wid + k) % w].steal() {
+                        tr.steals.fetch_add(1, Ordering::Relaxed);
+                        task = Some(t);
+                        break;
+                    }
+                }
+            }
+            match task {
+                Some(t) => {
+                    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        self.run_chain(wid, t)
+                    }));
+                    if r.is_err() {
+                        tr.aborted.store(true, Ordering::Release);
+                        tr.parker.wake_all();
+                        break;
+                    }
+                }
+                None => {
+                    if tr.remaining.load(Ordering::Acquire) == 0 {
+                        break;
+                    }
+                    tr.parker.park(|| {
+                        tr.remaining.load(Ordering::Acquire) == 0
+                            || tr.aborted.load(Ordering::Acquire)
+                            || tr.deques.iter().any(Deque::has_items)
+                    });
+                }
+            }
+        }
+    }
+
+    /// Run a task and whatever it hands back inline (a partitioned
+    /// step's part 0, the next image's part 0) without a deque
+    /// round-trip.
+    fn run_chain(&self, wid: usize, first: u64) {
+        let mut task = Some(first);
+        while let Some(t) = task {
+            task = self.run_task(wid, t);
+        }
+    }
+
+    fn run_task(&self, wid: usize, t: u64) -> Option<u64> {
+        let tr = self.trace;
+        let si = dec_step(t);
+        let step = &self.plan.steps[si];
+        if t & KIND_PART == 0 {
+            let p = tr.parts[si];
+            if p >= 2 {
+                // SAFETY: this worker owns the step's spans until its
+                // parts are published (see `replay_into`).
+                let t0 = Instant::now();
+                unsafe { exec_partitioned_prep(step, self.lanes, 0) };
+                atomic_add_ms(&tr.step_ms[si], t0.elapsed().as_secs_f64() * 1e3);
+                self.publish_parts(wid, si, p, 0);
+                Some(enc_part(si, 0, 0))
+            } else {
+                // SAFETY: see `replay_into`; worker `wid` owns pack-lane
+                // region `wid`.
+                let t0 = Instant::now();
+                unsafe { exec_step_on(step, self.lanes, wid) };
+                atomic_add_ms(&tr.step_ms[si], t0.elapsed().as_secs_f64() * 1e3);
+                self.complete(wid, si);
+                None
+            }
+        } else {
+            let (part, img) = dec_part(t);
+            let p = tr.parts[si] as usize;
+            let rows = part_rows(step.out.shape[1], p, part, step_mr(step));
+            // SAFETY: concurrent parts are of the same image with
+            // disjoint row ranges; the executing worker packs B into its
+            // own pack region.
+            let t0 = Instant::now();
+            unsafe { exec_partitioned_part(step, self.lanes, rows, img as usize, wid) };
+            atomic_add_ms(&tr.step_ms[si], t0.elapsed().as_secs_f64() * 1e3);
+            let done = tr.parts_done[si].fetch_add(1, Ordering::AcqRel) + 1;
+            if done % (p as u64) != 0 {
+                return None;
+            }
+            // Image `img` is complete, and its parts' writes are visible
+            // via the AcqRel counter. All in-flight parts of a step
+            // belong to one image (the next image is only published
+            // below), so the finisher is unambiguous.
+            if matches!(step.op, Op::ConvInt8Q { .. }) {
+                // SAFETY: every accumulator row of `img` has landed.
+                let t0 = Instant::now();
+                unsafe { exec_partitioned_finish(step, self.lanes, img as usize) };
+                atomic_add_ms(&tr.step_ms[si], t0.elapsed().as_secs_f64() * 1e3);
+            }
+            if (img as usize) + 1 < tr.images[si] as usize {
+                // Chain to the next image over the step's shared im2col
+                // scratch — same image order as the whole-step primitive.
+                // SAFETY: image `img`'s parts are done reading `cols`.
+                let t0 = Instant::now();
+                unsafe { exec_partitioned_prep(step, self.lanes, img as usize + 1) };
+                atomic_add_ms(&tr.step_ms[si], t0.elapsed().as_secs_f64() * 1e3);
+                self.publish_parts(wid, si, p as u32, img + 1);
+                Some(enc_part(si, 0, img + 1))
+            } else {
+                self.complete(wid, si);
+                None
+            }
+        }
+    }
+
+    /// Push parts 1.. of image `img` for thieves (the caller keeps part
+    /// 0) and wake enough parked workers to take them.
+    fn publish_parts(&self, wid: usize, si: usize, p: u32, img: u32) {
+        let dq = &self.trace.deques[wid];
+        for part in 1..p {
+            dq.push(enc_part(si, part, img));
+        }
+        self.trace.parker.wake(p as usize - 1);
+    }
+
+    /// A step's final subtask landed: bump successors' epoch counters,
+    /// publish the newly ready ones and retire the step. The AcqRel
+    /// increments chain each predecessor's writes into whichever worker
+    /// observes a successor turn ready.
+    fn complete(&self, wid: usize, si: usize) {
+        let tr = self.trace;
+        let (lo, hi) = (tr.succ_off[si] as usize, tr.succ_off[si + 1] as usize);
+        let mut ready = 0usize;
+        for &succ in &tr.succ_dat[lo..hi] {
+            let succ = succ as usize;
+            let hit = tr.deps[succ].fetch_add(1, Ordering::AcqRel) + 1;
+            if hit == self.epoch * u64::from(tr.preds[succ]) {
+                tr.deques[wid].push(enc_step(succ));
+                ready += 1;
+            }
+        }
+        // The caller returns to its pop loop and takes one of these
+        // itself; wake thieves for the rest.
+        tr.parker.wake(ready.saturating_sub(1));
+        if tr.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+            tr.parker.wake_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::Arc;
+    use std::thread;
+
+    #[test]
+    fn deque_lifo_pop_fifo_steal() {
+        let dq = Deque::new(8);
+        dq.push(enc_step(1));
+        dq.push(enc_step(2));
+        dq.push(enc_step(3));
+        assert!(dq.has_items());
+        assert_eq!(dq.steal(), Some(enc_step(1))); // FIFO from the top
+        assert_eq!(dq.pop(), Some(enc_step(3))); // LIFO from the bottom
+        assert_eq!(dq.pop(), Some(enc_step(2)));
+        assert_eq!(dq.pop(), None);
+        assert_eq!(dq.steal(), None);
+        assert!(!dq.has_items());
+    }
+
+    #[test]
+    fn deque_wraps_across_epochs_when_drained() {
+        // capacity 4: push/drain more than 4 total to exercise ring wrap
+        let dq = Deque::new(4);
+        for round in 0..5u64 {
+            dq.push(round * 2);
+            dq.push(round * 2 + 1);
+            assert_eq!(dq.pop(), Some(round * 2 + 1));
+            assert_eq!(dq.pop(), Some(round * 2));
+            assert_eq!(dq.pop(), None);
+        }
+    }
+
+    #[test]
+    fn deque_concurrent_steals_take_each_task_once() {
+        let dq = Arc::new(Deque::new(1 << 10));
+        let n = 500u64;
+        for t in 0..n {
+            dq.push(t);
+        }
+        let seen = Arc::new((0..n).map(|_| AtomicUsize::new(0)).collect::<Vec<_>>());
+        let thieves: Vec<_> = (0..4)
+            .map(|_| {
+                let (dq, seen) = (Arc::clone(&dq), Arc::clone(&seen));
+                thread::spawn(move || {
+                    let mut got = 0usize;
+                    while let Some(t) = dq.steal() {
+                        seen[t as usize].fetch_add(1, Ordering::Relaxed);
+                        got += 1;
+                    }
+                    got
+                })
+            })
+            .collect();
+        let total: usize = thieves.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(total, n as usize);
+        assert!(seen.iter().all(|c| c.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn deque_owner_pop_races_thieves_without_loss() {
+        let dq = Arc::new(Deque::new(1 << 11));
+        let n = 1000usize;
+        let taken = Arc::new(AtomicUsize::new(0));
+        let done = Arc::new(AtomicBool::new(false));
+        let thieves: Vec<_> = (0..3)
+            .map(|_| {
+                let (dq, taken, done) = (Arc::clone(&dq), Arc::clone(&taken), Arc::clone(&done));
+                thread::spawn(move || loop {
+                    if dq.steal().is_some() {
+                        taken.fetch_add(1, Ordering::Relaxed);
+                    } else if done.load(Ordering::Acquire) && !dq.has_items() {
+                        break;
+                    }
+                })
+            })
+            .collect();
+        // owner interleaves pushes and pops
+        for i in 0..n {
+            dq.push(i as u64);
+            if i % 3 == 0 && dq.pop().is_some() {
+                taken.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        while dq.pop().is_some() {
+            taken.fetch_add(1, Ordering::Relaxed);
+        }
+        done.store(true, Ordering::Release);
+        for h in thieves {
+            h.join().unwrap();
+        }
+        assert_eq!(taken.load(Ordering::Relaxed), n);
+    }
+
+    #[test]
+    fn task_encoding_roundtrips() {
+        let t = enc_part(12345, 7, 3);
+        assert_eq!(t & KIND_PART, 1);
+        assert_eq!(dec_step(t), 12345);
+        assert_eq!(dec_part(t), (7, 3));
+        let s = enc_step((1 << 24) - 1);
+        assert_eq!(s & KIND_PART, 0);
+        assert_eq!(dec_step(s), (1 << 24) - 1);
+    }
+
+    #[test]
+    fn parker_wake_releases_parked_thread() {
+        let p = Arc::new(Parker::new());
+        let flag = Arc::new(AtomicBool::new(false));
+        let (p2, f2) = (Arc::clone(&p), Arc::clone(&flag));
+        let h = thread::spawn(move || {
+            while !f2.load(Ordering::Acquire) {
+                p2.park(|| f2.load(Ordering::Acquire));
+            }
+        });
+        thread::sleep(std::time::Duration::from_millis(20));
+        flag.store(true, Ordering::Release);
+        p.wake_all();
+        h.join().unwrap();
+        // the worker either parked (then was woken) or won the re-check
+        // race; both are valid — only termination is asserted here
+    }
+
+    #[test]
+    fn parker_recheck_prevents_lost_wakeup() {
+        // publish-before-wake: the parker must observe work published
+        // right before its park call without anyone notifying
+        let p = Parker::new();
+        let ready = AtomicBool::new(true);
+        p.park(|| ready.load(Ordering::Acquire)); // must not block
+        assert_eq!(p.parked.load(Ordering::SeqCst), 0);
+    }
+}

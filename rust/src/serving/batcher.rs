@@ -221,7 +221,14 @@ fn batch_loop<B: InferenceSession>(
         let result = session.run_batch(bucket, &inputs);
         let infer_ms = t0.elapsed().as_secs_f64() * 1e3;
         drop(inputs);
-        metrics.record_batch(bucket, batch.len(), depth, queue_ms, infer_ms);
+        // queue-age gauge: the oldest request still waiting after this
+        // drain (pending is FIFO, so the front is the oldest); 0 when the
+        // backlog emptied
+        let oldest_pending_ms = pending
+            .first()
+            .map(|j| j.enqueued.elapsed().as_secs_f64() * 1e3)
+            .unwrap_or(0.0);
+        metrics.record_batch(bucket, batch.len(), depth, queue_ms, infer_ms, oldest_pending_ms);
         match result {
             Ok(mut preds) => {
                 if preds.len() != batch.len() {

@@ -5,7 +5,7 @@
 //! a [`ModelRouter`](super::ModelRouter).
 
 use crate::util::json::Json;
-use crate::util::stats::Welford;
+use crate::util::stats::{LogHistogram, Welford};
 use std::collections::BTreeMap;
 use std::sync::Mutex;
 
@@ -43,6 +43,24 @@ struct Inner {
     subtasks: Welford,
     /// Total partitioned subtasks across all replays.
     subtasks_total: u64,
+    /// Replay wall-clock latency per bucket size (record + execute on a
+    /// miss, pure execute on a hit) in a fixed-footprint log histogram so
+    /// the steady-state path records without allocating.
+    replay_ms: BTreeMap<usize, LogHistogram>,
+    /// Replays served from a cached [`ScheduleTrace`](crate::lne::ScheduleTrace).
+    trace_hits: u64,
+    /// Replays that had to record a trace first (cold bucket, or thread
+    /// count changed under the session).
+    trace_misses: u64,
+    /// Times a scheduler worker parked on the trace's condvar, total.
+    parks_total: u64,
+    /// Times a worker was woken from park by published work, total.
+    wakes_total: u64,
+    /// Age of the oldest still-pending request after the last batch was
+    /// drained (a gauge, not a distribution: 0 means the queue emptied).
+    queue_age_ms: f64,
+    /// High-water mark of the queue-age gauge.
+    queue_age_ms_max: f64,
     /// Per-cascade-stage accounting, keyed `"{cascade}/{idx}:{stage}"`
     /// (the index prefix keeps BTreeMap order = pipeline order).
     stages: BTreeMap<String, StageStats>,
@@ -62,9 +80,42 @@ struct StageStats {
     arena_checkouts: u64,
 }
 
+/// One plan replay's accounting, recorded by `LneSession` after every
+/// trace execution. Passed as a struct (not positional args) because the
+/// trace runtime grew the field count past what a call site can keep
+/// straight: wavefront shape, pool occupancy, scheduler counters, the
+/// trace cache outcome, and the measured replay latency.
+#[derive(Debug, Clone, Copy)]
+pub struct ReplayRecord {
+    /// Bucket (padded batch size) the replay served.
+    pub bucket: usize,
+    /// Wall-clock latency of the replay (records + executes on a miss).
+    pub replay_ms: f64,
+    /// Wavefront count of the replayed plan (critical-path depth).
+    pub waves: usize,
+    /// Widest wavefront of the replayed plan.
+    pub max_width: usize,
+    /// Pool jobs already in flight when the replay dispatched.
+    pub occupancy: usize,
+    /// Tasks stolen between worker deques during this replay.
+    pub steals: usize,
+    /// Intra-op subtasks partitioned steps fanned out.
+    pub subtasks: usize,
+    /// Times a worker parked idle during this replay.
+    pub parks: usize,
+    /// Times a parked worker was woken by published work.
+    pub wakes: usize,
+    /// Whether the session replayed a cached trace (`true`) or had to
+    /// record one first (`false`).
+    pub trace_hit: bool,
+}
+
 impl ServingMetrics {
     /// Record one flushed batch: `bucket` is the chosen bucket size,
-    /// `size` the occupied lanes, `depth` the queue length at flush.
+    /// `size` the occupied lanes, `depth` the queue length at flush, and
+    /// `oldest_pending_ms` the age of the oldest request still waiting
+    /// after this batch was drained (0 when the queue emptied — the
+    /// queue-age gauge).
     pub fn record_batch(
         &self,
         bucket: usize,
@@ -72,6 +123,7 @@ impl ServingMetrics {
         depth: usize,
         queue_ms: f64,
         infer_ms: f64,
+        oldest_pending_ms: f64,
     ) {
         let mut i = self.inner.lock().unwrap();
         i.requests += size as u64;
@@ -80,33 +132,32 @@ impl ServingMetrics {
         i.infer_ms.push(infer_ms);
         i.batch_size.push(size as f64);
         i.queue_depth.push(depth as f64);
+        i.queue_age_ms = oldest_pending_ms;
+        i.queue_age_ms_max = i.queue_age_ms_max.max(oldest_pending_ms);
         *i.bucket_flushes.entry(bucket).or_insert(0) += 1;
     }
 
-    /// Record one plan replay on the shared worker pool: the plan's
-    /// wavefront count and widest wavefront, how many pool jobs were
-    /// already in flight when this replay dispatched (scheduler
-    /// occupancy), and — for the work-stealing tasked replay — how many
-    /// tasks workers stole and how many intra-op GEMM subtasks
-    /// partitioned steps fanned out (both 0 on barrier/sequential
-    /// replays).
-    pub fn record_replay(
-        &self,
-        waves: usize,
-        max_width: usize,
-        occupancy: usize,
-        steals: usize,
-        subtasks: usize,
-    ) {
+    /// Record one plan replay on the shared worker pool. Allocation-free
+    /// once the bucket's histogram entry exists (i.e. after the first
+    /// replay of that bucket), which the zero-alloc harness relies on.
+    pub fn record_replay(&self, r: &ReplayRecord) {
         let mut i = self.inner.lock().unwrap();
         i.replays += 1;
-        i.waves.push(waves as f64);
-        i.wave_width.push(max_width as f64);
-        i.pool_occupancy.push(occupancy as f64);
-        i.steals.push(steals as f64);
-        i.steals_total += steals as u64;
-        i.subtasks.push(subtasks as f64);
-        i.subtasks_total += subtasks as u64;
+        i.waves.push(r.waves as f64);
+        i.wave_width.push(r.max_width as f64);
+        i.pool_occupancy.push(r.occupancy as f64);
+        i.steals.push(r.steals as f64);
+        i.steals_total += r.steals as u64;
+        i.subtasks.push(r.subtasks as f64);
+        i.subtasks_total += r.subtasks as u64;
+        i.parks_total += r.parks as u64;
+        i.wakes_total += r.wakes as u64;
+        if r.trace_hit {
+            i.trace_hits += 1;
+        } else {
+            i.trace_misses += 1;
+        }
+        i.replay_ms.entry(r.bucket).or_default().record(r.replay_ms);
     }
 
     /// Record one cascade stage execution over a (possibly re-coalesced)
@@ -143,6 +194,22 @@ impl ServingMetrics {
 
     pub fn snapshot(&self) -> Json {
         let i = self.inner.lock().unwrap();
+        let replay_latency: BTreeMap<String, Json> = i
+            .replay_ms
+            .iter()
+            .map(|(&b, h)| {
+                (
+                    format!("b{b}"),
+                    Json::obj(vec![
+                        ("count", Json::from(h.count() as i64)),
+                        ("p50", Json::num(h.percentile(50.0))),
+                        ("p95", Json::num(h.percentile(95.0))),
+                        ("p99", Json::num(h.percentile(99.0))),
+                        ("max", Json::num(h.max())),
+                    ]),
+                )
+            })
+            .collect();
         let flushes: BTreeMap<String, Json> = i
             .bucket_flushes
             .iter()
@@ -195,6 +262,13 @@ impl ServingMetrics {
             ("subtasks_total", Json::from(i.subtasks_total as i64)),
             ("subtasks_mean", Json::num(i.subtasks.mean())),
             ("subtasks_max", Json::num(i.subtasks.max)),
+            ("trace_hits", Json::from(i.trace_hits as i64)),
+            ("trace_misses", Json::from(i.trace_misses as i64)),
+            ("parks_total", Json::from(i.parks_total as i64)),
+            ("wakes_total", Json::from(i.wakes_total as i64)),
+            ("replay_latency", Json::Obj(replay_latency)),
+            ("queue_age_ms", Json::num(i.queue_age_ms)),
+            ("queue_age_ms_max", Json::num(i.queue_age_ms_max)),
             ("cascade_stages", Json::Obj(stages)),
         ])
     }
@@ -204,12 +278,27 @@ impl ServingMetrics {
 mod tests {
     use super::*;
 
+    fn replay(bucket: usize, ms: f64, occupancy: usize, steals: usize, subtasks: usize, hit: bool) -> ReplayRecord {
+        ReplayRecord {
+            bucket,
+            replay_ms: ms,
+            waves: 12,
+            max_width: 4,
+            occupancy,
+            steals,
+            subtasks,
+            parks: 3,
+            wakes: 2,
+            trace_hit: hit,
+        }
+    }
+
     #[test]
     fn snapshot_aggregates() {
         let m = ServingMetrics::default();
-        m.record_batch(8, 8, 9, 1.0, 10.0);
-        m.record_batch(8, 4, 4, 3.0, 6.0);
-        m.record_batch(1, 1, 1, 0.5, 2.0);
+        m.record_batch(8, 8, 9, 1.0, 10.0, 2.5);
+        m.record_batch(8, 4, 4, 3.0, 6.0, 4.0);
+        m.record_batch(1, 1, 1, 0.5, 2.0, 0.0);
         let s = m.snapshot();
         assert_eq!(s.get("requests").as_i64(), Some(13));
         assert_eq!(s.get("batches").as_i64(), Some(3));
@@ -219,13 +308,16 @@ mod tests {
         assert!((s.get("queue_depth_max").as_f64().unwrap() - 9.0).abs() < 1e-9);
         assert_eq!(s.get("bucket_flushes").get("b8").as_i64(), Some(2));
         assert_eq!(s.get("bucket_flushes").get("b1").as_i64(), Some(1));
+        // queue-age gauge holds the last drain's value; max is the high-water
+        assert!((s.get("queue_age_ms").as_f64().unwrap() - 0.0).abs() < 1e-9);
+        assert!((s.get("queue_age_ms_max").as_f64().unwrap() - 4.0).abs() < 1e-9);
     }
 
     #[test]
     fn replay_wavefront_and_occupancy_aggregate() {
         let m = ServingMetrics::default();
-        m.record_replay(12, 4, 0, 2, 8);
-        m.record_replay(12, 4, 3, 4, 0);
+        m.record_replay(&replay(4, 5.0, 0, 2, 8, false));
+        m.record_replay(&replay(4, 5.0, 3, 4, 0, true));
         let s = m.snapshot();
         assert_eq!(s.get("replays").as_i64(), Some(2));
         assert!((s.get("wave_width_max").as_f64().unwrap() - 4.0).abs() < 1e-9);
@@ -237,6 +329,17 @@ mod tests {
         assert!((s.get("steals_mean").as_f64().unwrap() - 3.0).abs() < 1e-9);
         assert_eq!(s.get("subtasks_total").as_i64(), Some(8));
         assert!((s.get("subtasks_max").as_f64().unwrap() - 8.0).abs() < 1e-9);
+        // trace cache + parking counters
+        assert_eq!(s.get("trace_hits").as_i64(), Some(1));
+        assert_eq!(s.get("trace_misses").as_i64(), Some(1));
+        assert_eq!(s.get("parks_total").as_i64(), Some(6));
+        assert_eq!(s.get("wakes_total").as_i64(), Some(4));
+        // per-bucket replay latency histogram
+        let lat = s.get("replay_latency").get("b4");
+        assert_eq!(lat.get("count").as_i64(), Some(2));
+        let p50 = lat.get("p50").as_f64().unwrap();
+        assert!(p50 >= 5.0 / 2f64.sqrt() && p50 <= 5.0 * 2f64.sqrt(), "p50={p50}");
+        assert!((lat.get("max").as_f64().unwrap() - 5.0).abs() < 1e-9);
     }
 
     #[test]

@@ -1,10 +1,14 @@
 //! The shared serving worker pool (ROADMAP remnant from PR 2): one
 //! fixed-size pool per [`ModelRouter`](super::ModelRouter) instead of
 //! compute threads per model. LNE sessions dispatch their replays here
-//! through the dep-counted work-stealing scheduler
-//! (`ExecPlan::replay_tasked`; the barrier `replay_on` remains the
-//! parity oracle), so total compute parallelism is bounded by the
-//! machine, not by models × branches.
+//! through recorded schedule traces
+//! ([`ScheduleTrace`](crate::lne::ScheduleTrace): per-worker lock-free
+//! deques, condvar-parked idle workers, epoch-counter resets; the
+//! barrier `replay_on` and fresh-schedule `replay_tasked` remain the
+//! parity oracles), so total compute parallelism is bounded by the
+//! machine, not by models × branches. A session keys its cached traces
+//! by this pool's thread count — resizing means a new router, so traces
+//! can never replay on a pool they weren't recorded for.
 
 use crate::util::threadpool::ThreadPool;
 

@@ -7,16 +7,18 @@
 //! the LNE plan/arena path ([`LneSession`]) without knowing which runs.
 
 use super::batcher::{argmax, softmax, Prediction};
-use super::metrics::ServingMetrics;
+use super::metrics::{ReplayRecord, ServingMetrics};
 use super::pool::WorkerPool;
 use super::ServableModel;
 use crate::lne::engine::Prepared;
 use crate::lne::graph::LayerKind;
-use crate::lne::planner::{ArenaPool, ExecPlan, SharedArena};
+use crate::lne::planner::{Arena, ArenaPool, ExecPlan, SchedStats, SharedArena};
 use crate::lne::plugin::Assignment;
+use crate::lne::trace::ScheduleTrace;
 use crate::runtime::{EngineHandle, OwnedInput};
 use crate::tensor::Tensor;
-use std::sync::Arc;
+use std::sync::{Arc, MutexGuard};
+use std::time::Instant;
 
 /// A serving backend: executes one batch at a compiled bucket size.
 ///
@@ -157,26 +159,34 @@ impl InferenceSession for PjrtSession {
 }
 
 /// Per-bucket LNE state: the compiled plan, the staging input tensor
-/// requests are packed into (owned, reused forever), and the pooled arena
-/// — possibly lent by another model with the same high-water profile.
+/// requests are packed into (owned, reused forever), the pooled arena —
+/// possibly lent by another model with the same high-water profile — and
+/// the recorded schedule trace this bucket replays in steady state.
 struct LneBucket {
     batch: usize,
     plan: ExecPlan,
     staging: Tensor,
     arena: SharedArena,
+    /// Cached [`ScheduleTrace`] for this `(plan, threads, batch)` triple,
+    /// recorded on the first replay and invalidated when the worker-pool
+    /// thread count it was recorded for no longer matches (and implicitly
+    /// on `replace_session`, which swaps in a fresh session whose buckets
+    /// start with no trace).
+    trace: Option<ScheduleTrace>,
 }
 
 /// LNE backend: one `ExecPlan` per batch bucket, compiled at registration
 /// (plan once, run hot), arenas checked out of a cross-model [`ArenaPool`]
 /// largest bucket first, so smaller buckets borrow the big bucket's arena
-/// (compatible-profile lending). Steady-state inference performs no
-/// per-layer heap allocation in the execution hot loop (the tasked
-/// scheduler allocates its O(steps) counters once per replay); replays on
-/// a shared arena serialize on its lock and dispatch onto the router's shared
-/// [`WorkerPool`] instead of a thread per model — through the
-/// dep-counted work-stealing scheduler (`ExecPlan::replay_tasked`), so
-/// deep branches run ahead of shallow ones and narrow ready sets split
-/// large GEMMs across idle workers.
+/// (compatible-profile lending). The first replay of a bucket records the
+/// tasked schedule into a [`ScheduleTrace`]; every replay after that is
+/// the zero-allocation steady state — epoch-counter resets over the
+/// trace's preallocated arrays, lock-free per-worker deques, condvar-
+/// parked idle workers — proven by the counting-allocator harness in
+/// `tests/zero_alloc.rs`. Replays on a shared arena serialize on its lock
+/// and dispatch onto the router's shared [`WorkerPool`] instead of a
+/// thread per model, so deep branches run ahead of shallow ones and
+/// narrow ready sets split large GEMMs across idle workers.
 pub struct LneSession {
     prepared: Arc<Prepared>,
     assignment: Assignment,
@@ -219,7 +229,7 @@ impl LneSession {
             let plan = prepared.plan(&assignment, b)?;
             let arena = pool.checkout(&plan);
             let staging = Tensor::zeros(&[b, c, h, w]);
-            buckets.push(LneBucket { batch: b, plan, staging, arena });
+            buckets.push(LneBucket { batch: b, plan, staging, arena, trace: None });
         }
         buckets.reverse();
         let nc = buckets[0].plan.output.len / sizes[0];
@@ -271,6 +281,69 @@ impl LneSession {
     pub fn prepared(&self) -> &Prepared {
         &self.prepared
     }
+
+    /// Replay `b`'s staged batch through its cached schedule trace,
+    /// recording the trace first if the cache misses (cold bucket, or the
+    /// trace was recorded for a different thread count). The plan's output
+    /// is left in the arena; the returned guard lets the caller read it
+    /// via [`ExecPlan::output_slice`] *before* releasing the lock —
+    /// pooled arenas may be lent to other models, so the rows are only
+    /// valid while the lock is held.
+    fn replay_traced<'b>(
+        b: &'b mut LneBucket,
+        workers: &WorkerPool,
+        metrics: Option<&ServingMetrics>,
+    ) -> (SchedStats, &'b ExecPlan, MutexGuard<'b, Arena>) {
+        let threads = workers.threads();
+        let occupancy = workers.active();
+        let LneBucket { batch, plan, staging, arena, trace } = b;
+        // the latency histogram charges record cost to the miss sample
+        let t0 = Instant::now();
+        let trace_hit = matches!(trace, Some(t) if t.threads() == threads);
+        if !trace_hit {
+            *trace = Some(plan.record_trace(threads));
+        }
+        let trace = trace.as_mut().unwrap();
+        // recover from poisoning: the arena holds no invariants a fresh
+        // replay doesn't rewrite, and one model's panic must not
+        // permanently fail every model lending the same arena
+        let mut guard = arena.lock().unwrap_or_else(|e| e.into_inner());
+        let sched = trace.replay_into(plan, staging, &mut guard, workers.inner());
+        let replay_ms = t0.elapsed().as_secs_f64() * 1e3;
+        if let Some(m) = metrics {
+            m.record_replay(&ReplayRecord {
+                bucket: *batch,
+                replay_ms,
+                waves: plan.wave_count(),
+                max_width: plan.max_wave_width(),
+                occupancy,
+                steals: sched.steals,
+                subtasks: sched.subtasks,
+                parks: sched.parks,
+                wakes: sched.wakes,
+                trace_hit,
+            });
+        }
+        (sched, &*plan, guard)
+    }
+
+    /// Re-execute bucket `bucket`'s *currently staged* inputs through the
+    /// session's recorded trace without materializing predictions — the
+    /// steady-state serving hot path in isolation. Stage once (e.g. via
+    /// `run_batch`), then drive this in a loop: once warm (trace recorded,
+    /// arena sized, metrics bucket seen) a call performs zero heap
+    /// allocations, which `tests/zero_alloc.rs` pins with a counting
+    /// global allocator.
+    pub fn replay_staged(&mut self, bucket: usize) -> Result<SchedStats, String> {
+        let b = self
+            .buckets
+            .iter_mut()
+            .find(|b| b.batch == bucket)
+            .ok_or_else(|| format!("bucket {bucket} not compiled"))?;
+        let (sched, _plan, guard) = Self::replay_traced(b, &self.workers, self.metrics.as_deref());
+        drop(guard);
+        Ok(sched)
+    }
 }
 
 impl InferenceSession for LneSession {
@@ -306,37 +379,18 @@ impl InferenceSession for LneSession {
         for v in b.staging.data[inputs.len() * sample_len..].iter_mut() {
             *v = 0.0;
         }
-        let occupancy = self.workers.active();
-        let (result, sched) = {
-            // recover from poisoning: the arena holds no invariants a fresh
-            // replay doesn't rewrite, and one model's panic must not
-            // permanently fail every model lending the same arena
-            let mut arena = b.arena.lock().unwrap_or_else(|e| e.into_inner());
-            if self.workers.threads() > 1 {
-                // dep-counted work-stealing scheduler: no wave barriers,
-                // narrow ready sets split large GEMMs across the pool
-                b.plan
-                    .replay_tasked_stats(&b.staging, &mut arena, self.workers.inner())
-            } else {
-                (
-                    b.plan.replay(&b.staging, &mut arena),
-                    crate::lne::planner::SchedStats::default(),
-                )
-            }
-        };
-        if let Some(m) = &self.metrics {
-            m.record_replay(
-                b.plan.wave_count(),
-                b.plan.max_wave_width(),
-                occupancy,
-                sched.steals,
-                sched.subtasks,
-            );
-        }
-        let row_len = result.output.len() / b.batch;
+        // record-once trace replay: the first batch at this bucket records
+        // the tasked schedule, every later one resets epoch counters and
+        // re-executes the frozen trace (zero-alloc steady state)
+        let (_sched, plan, arena) = Self::replay_traced(b, &self.workers, self.metrics.as_deref());
+        // read the output rows while the arena lock is still held — the
+        // arena may be lent to other models, so the rows are only valid
+        // under the lock
+        let out = plan.output_slice(&arena);
+        let row_len = out.len() / bucket;
         let preds = (0..inputs.len())
             .map(|i| {
-                let row = &result.output.data[i * row_len..(i + 1) * row_len];
+                let row = &out[i * row_len..(i + 1) * row_len];
                 let scores = if self.apply_softmax { softmax(row) } else { row.to_vec() };
                 let class_id = argmax(&scores);
                 Prediction {
@@ -542,5 +596,40 @@ pub(crate) mod tests {
             assert_eq!(snap.get("replays").as_i64(), Some(1));
             assert!(snap.get("wave_width_max").as_f64().unwrap() >= 2.0);
         }
+    }
+
+    /// The session records a bucket's schedule trace exactly once and
+    /// serves every later batch from it: metrics show one miss then only
+    /// hits, the per-bucket latency histogram counts every replay, and
+    /// predictions stay bit-identical across trace replays.
+    #[test]
+    fn session_records_trace_once_and_replays_it() {
+        let (p, a) = lne_toy();
+        let pool = ArenaPool::new();
+        let metrics = Arc::new(crate::serving::ServingMetrics::default());
+        let mut s = LneSession::new(p, a, &[2], &[], &pool, Arc::new(WorkerPool::new(2)))
+            .unwrap()
+            .with_metrics(Arc::clone(&metrics));
+        let mut rng = Rng::new(11);
+        let sample = Tensor::randn(&[2, 6, 6], 1.0, &mut rng).data;
+        let first = s.run_batch(2, &[sample.as_slice()]).unwrap();
+        let snap = metrics.snapshot();
+        assert_eq!(snap.get("trace_misses").as_i64(), Some(1));
+        assert_eq!(snap.get("trace_hits").as_i64(), Some(0));
+        for _ in 0..3 {
+            let again = s.run_batch(2, &[sample.as_slice()]).unwrap();
+            assert_eq!(again[0].scores, first[0].scores);
+        }
+        let snap = metrics.snapshot();
+        assert_eq!(snap.get("trace_misses").as_i64(), Some(1));
+        assert_eq!(snap.get("trace_hits").as_i64(), Some(3));
+        assert_eq!(snap.get("replay_latency").get("b2").get("count").as_i64(), Some(4));
+        // replay_staged re-runs the staged batch through the cached trace
+        // (the zero-alloc harness's entry point) and records a hit too
+        s.replay_staged(2).unwrap();
+        assert!(s.replay_staged(7).is_err());
+        let snap = metrics.snapshot();
+        assert_eq!(snap.get("trace_hits").as_i64(), Some(4));
+        assert_eq!(snap.get("replay_latency").get("b2").get("count").as_i64(), Some(5));
     }
 }

@@ -89,6 +89,72 @@ pub fn randn_vec(rng: &mut Rng, n: usize, sigma: f32) -> Vec<f32> {
     (0..n).map(|_| rng.normal_f32() * sigma).collect()
 }
 
+/// Allocation-counting global allocator for zero-alloc proofs.
+///
+/// Install [`alloc_counter::CountingAlloc`] as the `#[global_allocator]`
+/// of a dedicated test binary (it must be the process-wide allocator, so
+/// it cannot live inside `cargo test`'s main lib binary without taxing
+/// every other test), [`alloc_counter::arm`] around the code under
+/// scrutiny, and [`alloc_counter::disarm`] to read how many heap
+/// allocations happened while armed — across *all* threads, so pool
+/// workers are covered. Counting is Relaxed-atomic and allocation-free
+/// itself; when not armed the wrapper is a pass-through to the system
+/// allocator.
+pub mod alloc_counter {
+    use std::alloc::{GlobalAlloc, Layout, System};
+    use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+    pub struct CountingAlloc;
+
+    static ARMED: AtomicBool = AtomicBool::new(false);
+    static ALLOCS: AtomicU64 = AtomicU64::new(0);
+    static BYTES: AtomicU64 = AtomicU64::new(0);
+
+    unsafe impl GlobalAlloc for CountingAlloc {
+        unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+            if ARMED.load(Ordering::Relaxed) {
+                ALLOCS.fetch_add(1, Ordering::Relaxed);
+                BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+            }
+            System.alloc(layout)
+        }
+
+        unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+            if ARMED.load(Ordering::Relaxed) {
+                ALLOCS.fetch_add(1, Ordering::Relaxed);
+                BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+            }
+            System.alloc_zeroed(layout)
+        }
+
+        unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+            // growth is a fresh allocation in disguise; shrink is free
+            if ARMED.load(Ordering::Relaxed) && new_size > layout.size() {
+                ALLOCS.fetch_add(1, Ordering::Relaxed);
+                BYTES.fetch_add((new_size - layout.size()) as u64, Ordering::Relaxed);
+            }
+            System.realloc(ptr, layout, new_size)
+        }
+
+        unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+            System.dealloc(ptr, layout)
+        }
+    }
+
+    /// Zero the counters and start counting.
+    pub fn arm() {
+        ALLOCS.store(0, Ordering::SeqCst);
+        BYTES.store(0, Ordering::SeqCst);
+        ARMED.store(true, Ordering::SeqCst);
+    }
+
+    /// Stop counting; returns `(allocations, bytes)` observed while armed.
+    pub fn disarm() -> (u64, u64) {
+        ARMED.store(false, Ordering::SeqCst);
+        (ALLOCS.load(Ordering::SeqCst), BYTES.load(Ordering::SeqCst))
+    }
+}
+
 /// Assert two f32 slices are elementwise close: `|a - b| <= tol * (1 +
 /// |b|)` (`b` is the expected side). `tol = 0.0` demands bit-parity up to
 /// signed zero; NaN in both positions counts as equal so non-finite

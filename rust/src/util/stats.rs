@@ -68,6 +68,84 @@ pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
     sorted[lo] * (1.0 - frac) + sorted[hi] * frac
 }
 
+/// Number of bins in a [`LogHistogram`].
+pub const LOG_HIST_BINS: usize = 64;
+
+/// Lowest bin boundary in milliseconds (1 µs).
+const LOG_HIST_LO_MS: f64 = 1e-3;
+
+/// Fixed-footprint log-spaced latency histogram: 64 bins from 1 µs with a
+/// √2 growth factor per bin (covering ~1 µs .. ~4.3 s before the last bin
+/// saturates). `record` touches a flat array only — no heap allocation —
+/// so the steady-state replay path can feed it without breaking the
+/// zero-alloc guarantee that `tests/zero_alloc.rs` pins. Percentiles are
+/// answered from bin midpoints (geometric), clamped to the observed
+/// min/max so a single-sample histogram reports the sample itself.
+#[derive(Debug, Clone)]
+pub struct LogHistogram {
+    counts: [u64; LOG_HIST_BINS],
+    count: u64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> LogHistogram {
+        LogHistogram { counts: [0; LOG_HIST_BINS], count: 0, min: 0.0, max: 0.0 }
+    }
+}
+
+impl LogHistogram {
+    /// Bin index for a sample: log base √2 of x/LO, i.e. `2·log2(x/LO)`.
+    fn bin(x: f64) -> usize {
+        if x <= LOG_HIST_LO_MS {
+            return 0;
+        }
+        let b = (2.0 * (x / LOG_HIST_LO_MS).log2()) as usize;
+        b.min(LOG_HIST_BINS - 1)
+    }
+
+    pub fn record(&mut self, ms: f64) {
+        let x = if ms.is_finite() && ms > 0.0 { ms } else { 0.0 };
+        if self.count == 0 {
+            self.min = x;
+            self.max = x;
+        } else {
+            self.min = self.min.min(x);
+            self.max = self.max.max(x);
+        }
+        self.counts[Self::bin(x)] += 1;
+        self.count += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Percentile estimate (p in 0..=100): walk the cumulative counts to
+    /// the target rank, report that bin's geometric midpoint clamped to
+    /// the observed sample range.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((p / 100.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                let mid = LOG_HIST_LO_MS * 2f64.powf((i as f64 + 0.5) / 2.0);
+                return mid.clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+}
+
 /// Streaming mean/variance (Welford) for serving metrics.
 #[derive(Debug, Clone, Default)]
 pub struct Welford {
@@ -135,6 +213,37 @@ mod tests {
         let v = [0.0, 10.0];
         assert!((percentile_sorted(&v, 50.0) - 5.0).abs() < 1e-12);
         assert!((percentile_sorted(&v, 95.0) - 9.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn log_histogram_percentiles_bracket_samples() {
+        let mut h = LogHistogram::default();
+        assert_eq!(h.percentile(50.0), 0.0);
+        // 99 fast samples around 1 ms, one slow 100 ms outlier
+        for _ in 0..99 {
+            h.record(1.0);
+        }
+        h.record(100.0);
+        assert_eq!(h.count(), 100);
+        let p50 = h.percentile(50.0);
+        let p95 = h.percentile(95.0);
+        let p99 = h.percentile(99.0);
+        // √2-wide bins: each estimate is within one bin factor of truth
+        assert!(p50 >= 1.0 / 2f64.sqrt() && p50 <= 1.0 * 2f64.sqrt(), "p50={p50}");
+        assert!(p95 <= 2.0, "p95={p95}");
+        assert!(p50 <= p95 && p95 <= p99);
+        // p100 lands on the outlier, clamped to the observed max
+        assert!((h.percentile(100.0) - 100.0).abs() / 100.0 < 0.5);
+        assert_eq!(h.max(), 100.0);
+    }
+
+    #[test]
+    fn log_histogram_single_sample_reports_itself() {
+        let mut h = LogHistogram::default();
+        h.record(7.25);
+        // clamped to observed min == max == sample
+        assert_eq!(h.percentile(50.0), 7.25);
+        assert_eq!(h.percentile(99.0), 7.25);
     }
 
     #[test]

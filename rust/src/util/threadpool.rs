@@ -1,14 +1,53 @@
 //! Fixed-size thread pool (substrate: tokio is unavailable offline; the
-//! HTTP server and pipeline executor run blocking work on this pool).
+//! HTTP server, pipeline executor and the LNE replay schedulers run
+//! blocking work on this pool).
+//!
+//! Workers block on a condvar-guarded queue (no busy-wait when idle).
+//! Two kinds of work share the queue: boxed fire-and-forget jobs
+//! ([`ThreadPool::execute`]) and *scope tasks* — small `Copy` entries
+//! pointing at a caller-stack closure ([`ThreadPool::scope_run`]). Scope
+//! dispatch performs **no heap allocation** once the queue's ring has
+//! grown to its steady-state capacity: this is what lets a recorded
+//! schedule trace replay (`lne::trace`) run with zero allocations end to
+//! end.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+/// One queue entry. `Scope` carries the address of a [`ScopeCtl`] on the
+/// dispatching caller's stack (erased to `usize`: the control block and
+/// its closure outlive every task — `scope_run` is a barrier).
+enum Work {
+    Boxed(Job),
+    Scope { ctl: usize, idx: usize },
+}
+
+/// Barrier control block for one `scope_run` call, living on the caller's
+/// stack. Workers run `f(idx)`, then bump `done`; the caller waits until
+/// `done == n`, so the block (and the borrowed closure) outlive all uses.
+struct ScopeCtl<'a> {
+    f: &'a (dyn Fn(usize) + Sync),
+    done: Mutex<usize>,
+    cv: Condvar,
+    panicked: AtomicBool,
+}
+
+struct State {
+    queue: VecDeque<Work>,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    work_cv: Condvar,
+}
+
 pub struct ThreadPool {
-    tx: Option<mpsc::Sender<Job>>,
+    shared: Arc<Shared>,
     workers: Vec<thread::JoinHandle<()>>,
     in_flight: Arc<(Mutex<usize>, Condvar)>,
     size: usize,
@@ -17,35 +56,22 @@ pub struct ThreadPool {
 impl ThreadPool {
     pub fn new(size: usize) -> ThreadPool {
         assert!(size > 0);
-        let (tx, rx) = mpsc::channel::<Job>();
-        let rx = Arc::new(Mutex::new(rx));
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State { queue: VecDeque::new(), shutdown: false }),
+            work_cv: Condvar::new(),
+        });
         let in_flight = Arc::new((Mutex::new(0usize), Condvar::new()));
         let workers = (0..size)
             .map(|i| {
-                let rx = Arc::clone(&rx);
+                let shared = Arc::clone(&shared);
                 let inf = Arc::clone(&in_flight);
                 thread::Builder::new()
                     .name(format!("bonseyes-worker-{i}"))
-                    .spawn(move || loop {
-                        let job = {
-                            let guard = rx.lock().unwrap();
-                            guard.recv()
-                        };
-                        match job {
-                            Ok(job) => {
-                                job();
-                                let (lock, cv) = &*inf;
-                                let mut n = lock.lock().unwrap();
-                                *n -= 1;
-                                cv.notify_all();
-                            }
-                            Err(_) => break, // channel closed: shut down
-                        }
-                    })
+                    .spawn(move || worker_loop(&shared, &inf))
                     .expect("spawn worker")
             })
             .collect();
-        ThreadPool { tx: Some(tx), workers, in_flight, size }
+        ThreadPool { shared, workers, in_flight, size }
     }
 
     pub fn size(&self) -> usize {
@@ -57,11 +83,11 @@ impl ThreadPool {
             let (lock, _) = &*self.in_flight;
             *lock.lock().unwrap() += 1;
         }
-        self.tx
-            .as_ref()
-            .expect("pool shut down")
-            .send(Box::new(f))
-            .expect("worker channel closed");
+        let mut st = self.shared.state.lock().unwrap();
+        assert!(!st.shutdown, "pool shut down");
+        st.queue.push_back(Work::Boxed(Box::new(f)));
+        drop(st);
+        self.shared.work_cv.notify_one();
     }
 
     /// Block until every submitted job has finished.
@@ -84,7 +110,10 @@ impl ThreadPool {
     /// borrow from the caller's stack: the call is a barrier, so no job
     /// outlives the borrowed data. A panicking job is caught on the
     /// worker (keeping the pool alive) and re-raised here after the
-    /// barrier.
+    /// barrier. Dispatch pushes `Copy` entries onto the shared queue —
+    /// no per-job boxing — so a warmed pool runs the barrier without
+    /// heap allocation; concurrent `scope_run`s from different callers
+    /// interleave safely (each task points at its own control block).
     pub fn scope_run<F: Fn(usize) + Send + Sync>(&self, n: usize, f: F) {
         if n == 0 {
             return;
@@ -99,42 +128,31 @@ impl ThreadPool {
             }
             return;
         }
-        struct Scope<'a> {
-            f: &'a (dyn Fn(usize) + Sync),
-            done: Mutex<usize>,
-            cv: Condvar,
-            panicked: std::sync::atomic::AtomicBool,
-        }
-        let scope = Scope {
+        let ctl = ScopeCtl {
             f: &f,
             done: Mutex::new(0),
             cv: Condvar::new(),
-            panicked: std::sync::atomic::AtomicBool::new(false),
+            panicked: AtomicBool::new(false),
         };
-        let sp = &scope as *const Scope as usize;
-        for i in 0..n {
-            self.execute(move || {
-                // SAFETY: `scope` outlives every job — scope_run does not
-                // return until all n jobs have signalled `done` below.
-                let scope = unsafe { &*(sp as *const Scope) };
-                let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    (scope.f)(i)
-                }));
-                if r.is_err() {
-                    scope.panicked.store(true, Ordering::SeqCst);
-                }
-                let mut d = scope.done.lock().unwrap();
-                *d += 1;
-                scope.cv.notify_all();
-            });
+        let cp = &ctl as *const ScopeCtl as usize;
+        {
+            let (lock, _) = &*self.in_flight;
+            *lock.lock().unwrap() += n;
         }
-        let mut d = scope.done.lock().unwrap();
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            for i in 0..n {
+                st.queue.push_back(Work::Scope { ctl: cp, idx: i });
+            }
+        }
+        self.shared.work_cv.notify_all();
+        let mut d = ctl.done.lock().unwrap();
         while *d < n {
-            d = scope.cv.wait(d).unwrap();
+            d = ctl.cv.wait(d).unwrap();
         }
         drop(d);
         assert!(
-            !scope.panicked.load(Ordering::SeqCst),
+            !ctl.panicked.load(Ordering::SeqCst),
             "scope_run job panicked"
         );
     }
@@ -161,9 +179,52 @@ impl ThreadPool {
     }
 }
 
+fn worker_loop(shared: &Shared, in_flight: &(Mutex<usize>, Condvar)) {
+    loop {
+        let work = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if let Some(w) = st.queue.pop_front() {
+                    break w;
+                }
+                if st.shutdown {
+                    return;
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        match work {
+            Work::Boxed(job) => job(),
+            Work::Scope { ctl, idx } => {
+                // SAFETY: the control block lives on the stack of the
+                // `scope_run` caller, which does not return until every
+                // task of this scope has bumped `done` below.
+                let ctl = unsafe { &*(ctl as *const ScopeCtl) };
+                let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    (ctl.f)(idx)
+                }));
+                if r.is_err() {
+                    ctl.panicked.store(true, Ordering::SeqCst);
+                }
+                let mut d = ctl.done.lock().unwrap();
+                *d += 1;
+                ctl.cv.notify_all();
+            }
+        }
+        let (lock, cv) = in_flight;
+        let mut n = lock.lock().unwrap();
+        *n -= 1;
+        cv.notify_all();
+    }
+}
+
 impl Drop for ThreadPool {
     fn drop(&mut self) {
-        drop(self.tx.take()); // close channel; workers exit
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
@@ -289,6 +350,33 @@ mod tests {
         });
         assert_eq!(*ran_on.lock().unwrap(), Some(caller));
         assert_eq!(pool.active(), 0);
+    }
+
+    /// Two threads driving barriers into the same pool at once: each
+    /// scope's tasks hit their own control block, so concurrent
+    /// `scope_run`s never cross wires (the serving router replays many
+    /// models over one shared pool exactly like this).
+    #[test]
+    fn concurrent_scope_runs_do_not_interfere() {
+        let pool = Arc::new(ThreadPool::new(4));
+        let sums: Vec<AtomicU64> = (0..2).map(|_| AtomicU64::new(0)).collect();
+        let sums = Arc::new(sums);
+        thread::scope(|s| {
+            for t in 0..2 {
+                let pool = Arc::clone(&pool);
+                let sums = Arc::clone(&sums);
+                s.spawn(move || {
+                    for _ in 0..20 {
+                        pool.scope_run(8, |i| {
+                            sums[t].fetch_add(i as u64 + 1, Ordering::Relaxed);
+                        });
+                    }
+                });
+            }
+        });
+        // each scope ran 20 barriers of sum(1..=8) = 36
+        assert_eq!(sums[0].load(Ordering::SeqCst), 20 * 36);
+        assert_eq!(sums[1].load(Ordering::SeqCst), 20 * 36);
     }
 
     #[test]

@@ -1,0 +1,121 @@
+//! Proof of the record-once trace's central claim: a warmed `LneSession`
+//! steady-state replay performs ZERO heap allocations — input staging,
+//! epoch-counter resets, lock-free deque dispatch, GEMM execution,
+//! condvar parking and metrics recording all reuse preallocated storage.
+//!
+//! This lives in its own test binary because the counting allocator must
+//! be the process-wide `#[global_allocator]`, and a SINGLE `#[test]`
+//! keeps concurrently running tests from polluting the armed window
+//! (the counter observes every thread, deliberately — that is how pool
+//! workers are covered).
+
+use bonseyes::lne::platform::Platform;
+use bonseyes::lne::plugin::{Assignment, ConvImpl};
+use bonseyes::lne::quant_explore::f32_baseline;
+use bonseyes::lne::{ArenaPool, Graph, LayerKind, Padding, PoolKind, Prepared};
+use bonseyes::models;
+use bonseyes::serving::{InferenceSession, LneSession, ServingMetrics, WorkerPool};
+use bonseyes::tensor::Tensor;
+use bonseyes::testing::alloc_counter::{arm, disarm, CountingAlloc};
+use bonseyes::util::rng::Rng;
+use std::sync::Arc;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// Warm a session at `bucket` (record the trace, size the arena, seed
+/// the metrics entries, grow the worker pool's queue to steady state),
+/// then prove repeated staged replays allocate nothing.
+fn prove_zero_alloc(name: &str, s: &mut LneSession, bucket: usize, x: &[f32]) {
+    s.run_batch(bucket, &[x]).unwrap();
+    for _ in 0..3 {
+        s.replay_staged(bucket).unwrap();
+    }
+    arm();
+    for _ in 0..8 {
+        s.replay_staged(bucket).unwrap();
+    }
+    let (allocs, bytes) = disarm();
+    assert_eq!(
+        allocs, 0,
+        "{name}: steady-state trace replay allocated {allocs} times ({bytes} bytes)"
+    );
+}
+
+#[test]
+fn warmed_steady_state_replays_allocate_nothing() {
+    // One router-style substrate shared by every session, as in serving:
+    // pooled arenas, one worker pool, one metrics sink.
+    let pool = ArenaPool::new();
+    let workers = Arc::new(WorkerPool::new(2));
+    let metrics = Arc::new(ServingMetrics::default());
+    let mut rng = Rng::new(77);
+
+    // (1) f32 branchy model: wave width >= 2, so the replay actually runs
+    // the parallel trace machinery (deques, parking, epoch resets)
+    let g = models::inceptionette::inceptionette();
+    let w = models::random_weights(&g, 9);
+    let p = Arc::new(Prepared::new(g, w, Platform::pi4()).unwrap());
+    let a = f32_baseline(&p);
+    let mut f32_s = LneSession::new(p, a, &[2], &[], &pool, Arc::clone(&workers))
+        .unwrap()
+        .with_metrics(Arc::clone(&metrics));
+    let f32_x = Tensor::randn(&[3, 16, 16], 1.0, &mut rng).data;
+    prove_zero_alloc("f32-branchy", &mut f32_s, 2, &f32_x);
+
+    // (2) int8-resident conv chain: quantized lanes, boundary
+    // conversions, per-image scale bookkeeping — all arena-backed
+    let mut g = Graph::new("i8steady", (2, 8, 8));
+    g.push("c1", LayerKind::Conv { k: (3, 3), stride: (1, 1), pad: Padding::Same, relu_fused: true }, 4);
+    g.push("c2", LayerKind::Conv { k: (3, 3), stride: (1, 1), pad: Padding::Same, relu_fused: true }, 4);
+    g.push("c3", LayerKind::Conv { k: (3, 3), stride: (1, 1), pad: Padding::Same, relu_fused: false }, 3);
+    let w = models::random_weights(&g, 13);
+    let p = Arc::new(Prepared::new(g, w, Platform::pi4()).unwrap());
+    let mut a = Assignment::default_for(&p.graph);
+    for c in a.choices.iter_mut() {
+        *c = Some(ConvImpl::Int8Gemm);
+    }
+    let mut i8_s = LneSession::new(p, a, &[2], &[], &pool, Arc::clone(&workers))
+        .unwrap()
+        .with_metrics(Arc::clone(&metrics));
+    let i8_x = Tensor::randn(&[2, 8, 8], 1.0, &mut rng).data;
+    prove_zero_alloc("int8-resident", &mut i8_s, 2, &i8_x);
+
+    // (3) cascade-style staged pair: a gate and a downstream model in a
+    // different input space, sharing the arena pool and worker pool the
+    // way `serving::cascade` stages do
+    let mut g = Graph::new("gate", (2, 6, 6));
+    g.push("conv1", LayerKind::Conv { k: (3, 3), stride: (1, 1), pad: Padding::Same, relu_fused: true }, 4);
+    g.push("gap", LayerKind::Pool { kind: PoolKind::Avg, k: 0, stride: 1, pad: 0, global: true }, 0);
+    g.push("fc", LayerKind::Fc { relu_fused: false }, 3);
+    g.push("prob", LayerKind::Softmax, 0);
+    let w = models::random_weights(&g, 5);
+    let p = Arc::new(Prepared::new(g, w, Platform::pi4()).unwrap());
+    let a = f32_baseline(&p);
+    let mut gate_s = LneSession::new(p, a, &[1, 4], &[], &pool, Arc::clone(&workers))
+        .unwrap()
+        .with_metrics(Arc::clone(&metrics));
+    let gate_x = Tensor::randn(&[2, 6, 6], 1.0, &mut rng).data;
+
+    let mut g = Graph::new("heavy", (3, 8, 8));
+    g.push("conv1", LayerKind::Conv { k: (3, 3), stride: (1, 1), pad: Padding::Same, relu_fused: true }, 8);
+    g.push("gap", LayerKind::Pool { kind: PoolKind::Avg, k: 0, stride: 1, pad: 0, global: true }, 0);
+    g.push("fc", LayerKind::Fc { relu_fused: false }, 5);
+    let w = models::random_weights(&g, 9);
+    let p = Arc::new(Prepared::new(g, w, Platform::pi4()).unwrap());
+    let a = f32_baseline(&p);
+    let mut heavy_s = LneSession::new(p, a, &[1, 4], &[], &pool, Arc::clone(&workers))
+        .unwrap()
+        .with_metrics(Arc::clone(&metrics));
+    let heavy_x = Tensor::randn(&[3, 8, 8], 1.0, &mut rng).data;
+
+    prove_zero_alloc("cascade-gate", &mut gate_s, 4, &gate_x);
+    prove_zero_alloc("cascade-heavy", &mut heavy_s, 4, &heavy_x);
+
+    // the metrics sink saw every replay: 4 sessions × (1 run_batch + 11
+    // staged replays), all but the four recording replays trace hits
+    let snap = metrics.snapshot();
+    assert_eq!(snap.get("replays").as_i64(), Some(48));
+    assert_eq!(snap.get("trace_misses").as_i64(), Some(4));
+    assert_eq!(snap.get("trace_hits").as_i64(), Some(44));
+}
