@@ -1,0 +1,166 @@
+//! Scale-out serving load bench (DESIGN.md §14): drive a `ModelRouter`
+//! hosting the paper's kws9 LNE model two ways.
+//!
+//! 1. **Closed-loop knee**: N client threads, each issuing blocking
+//!    requests back-to-back. As N grows, throughput climbs until the
+//!    replica set saturates and latency takes over — the knee.
+//! 2. **Open-loop overload**: requests arrive on a fixed clock at ~2× the
+//!    measured single-replica capacity, against a bounded admission queue
+//!    (`queue_cap`) and a per-request deadline. The batcher must shed
+//!    (QueueFull) or evict (DeadlineExceeded) the excess instead of
+//!    letting latency grow without bound; more replicas drain more of the
+//!    offered load, so shed% falls as the replica count rises.
+//!
+//! Numbers are host-CPU measurements; replica scaling needs real cores —
+//! on a single-core runner the open-loop table still demonstrates typed
+//! shedding, just not throughput gain.
+#[path = "common.rs"]
+mod common;
+
+use bonseyes::lne::platform::Platform;
+use bonseyes::nas::evaluator::lne_prepared;
+use bonseyes::nas::space::paper_arch;
+use bonseyes::serving::{BatcherConfig, ModelRouter, SubmitError};
+use bonseyes::util::rng::Rng;
+use bonseyes::util::stats::summarize;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+const BUCKETS: &[usize] = &[1, 4, 8];
+
+fn router(replicas: usize, queue_cap: Option<usize>, deadline_ms: Option<f64>) -> Arc<ModelRouter> {
+    let arch = paper_arch("kws9").expect("kws9 arch");
+    let (p, a) = lne_prepared(&arch, 7, Platform::pi4()).expect("prepare kws9");
+    let mut r = ModelRouter::with_threads(2);
+    r.register_lne(
+        "kws9",
+        p,
+        a,
+        BUCKETS,
+        &[],
+        BatcherConfig {
+            max_wait_ms: 2.0,
+            max_batch: 8,
+            queue_cap,
+            deadline_ms,
+            replicas,
+        },
+    )
+    .expect("register kws9");
+    Arc::new(r)
+}
+
+fn samples(n: usize, input_len: usize) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(11);
+    (0..n)
+        .map(|_| bonseyes::testing::randn_vec(&mut rng, input_len, 1.0))
+        .collect()
+}
+
+/// Closed-loop: `clients` threads, `per_client` blocking requests each.
+/// Returns (throughput req/s, p50 ms, p99 ms).
+fn closed_loop(router: &Arc<ModelRouter>, clients: usize, per_client: usize) -> (f64, f64, f64) {
+    let input_len = router.input_len(None).expect("input_len");
+    let pool = samples(16, input_len);
+    let lat = Mutex::new(Vec::<f64>::with_capacity(clients * per_client));
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for w in 0..clients {
+            let router = Arc::clone(router);
+            let pool = &pool;
+            let lat = &lat;
+            s.spawn(move || {
+                let mut mine = Vec::with_capacity(per_client);
+                for i in 0..per_client {
+                    let x = pool[(w + i) % pool.len()].clone();
+                    let t = Instant::now();
+                    router.infer(None, x).expect("closed-loop infer");
+                    mine.push(t.elapsed().as_secs_f64() * 1e3);
+                }
+                lat.lock().unwrap().extend(mine);
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let lats = lat.into_inner().unwrap();
+    let s = summarize(&lats);
+    (lats.len() as f64 / wall, s.p50, s.p99)
+}
+
+/// Open-loop: offer `total` requests on a fixed clock at `rate` req/s.
+/// Returns (achieved req/s, shed, evicted, p99 of completed requests).
+fn open_loop(router: &Arc<ModelRouter>, rate: f64, total: usize) -> (f64, u64, u64, f64) {
+    let input_len = router.input_len(None).expect("input_len");
+    let pool = samples(16, input_len);
+    let interval = Duration::from_secs_f64(1.0 / rate.max(1.0));
+    let t0 = Instant::now();
+    let mut shed = 0u64;
+    let mut tickets = Vec::with_capacity(total);
+    for i in 0..total {
+        let due = t0 + interval * i as u32;
+        let now = Instant::now();
+        if due > now {
+            std::thread::sleep(due - now);
+        }
+        match router.infer_async(None, pool[i % pool.len()].clone()) {
+            Ok(t) => tickets.push(t),
+            Err(SubmitError::QueueFull { .. }) => shed += 1,
+            Err(e) => panic!("unexpected submit error: {e}"),
+        }
+    }
+    let mut evicted = 0u64;
+    let mut done = Vec::with_capacity(tickets.len());
+    for t in tickets {
+        match t.wait() {
+            Ok(p) => done.push(p.latency_ms),
+            Err(SubmitError::DeadlineExceeded) => evicted += 1,
+            Err(e) => panic!("unexpected wait error: {e}"),
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let p99 = if done.is_empty() { 0.0 } else { summarize(&done).p99 };
+    (done.len() as f64 / wall, shed, evicted, p99)
+}
+
+fn main() {
+    common::banner("serve_load", "replica sets + admission control under load");
+    let per_client = common::scaled(64, 8);
+    let quick = common::quick();
+
+    // ---- closed-loop knee (single replica, unbounded, no deadline) ------
+    println!("closed-loop knee (1 replica, unbounded queue, no deadline):");
+    println!("  clients   throughput      p50       p99");
+    let r1 = router(1, None, None);
+    let mut capacity = 1.0f64;
+    let client_counts: &[usize] = if quick { &[1, 2] } else { &[1, 2, 4, 8, 16] };
+    for &c in client_counts {
+        let (tput, p50, p99) = closed_loop(&r1, c, per_client);
+        capacity = capacity.max(tput);
+        println!("  {c:7}   {tput:7.1} rps   {p50:6.2} ms {p99:6.2} ms");
+    }
+    drop(r1);
+
+    // ---- open-loop overload at 1 / 2 / 4 replicas -----------------------
+    // Offer ~2x the measured single-replica capacity so the admission
+    // queue (cap 64) must shed; a 20x-median deadline evicts stragglers.
+    let offered = (capacity * 2.0).max(20.0);
+    let total = if quick { 30 } else { (offered as usize).clamp(200, 2000) };
+    let deadline_ms = if quick { 250.0 } else { 20_000.0 / offered.max(1.0) };
+    println!(
+        "\nopen-loop overload: {offered:.0} rps offered, queue_cap=64, \
+         deadline {deadline_ms:.0} ms, {total} requests:"
+    );
+    println!("  replicas   achieved     shed   evicted   admitted-p99");
+    let replica_counts: &[usize] = if quick { &[1, 2] } else { &[1, 2, 4] };
+    for &n in replica_counts {
+        let r = router(n, Some(64), Some(deadline_ms));
+        let (ach, shed, evicted, p99) = open_loop(&r, offered, total);
+        let shed_pct = 100.0 * shed as f64 / total as f64;
+        println!(
+            "  {n:8}   {ach:6.1} rps   {shed:4} ({shed_pct:4.1}%)   {evicted:7}   {p99:9.2} ms"
+        );
+    }
+    println!("\n(shed requests fail fast with QueueFull/429 instead of queueing;");
+    println!(" replica scaling needs real cores — single-core runners show the");
+    println!(" typed shedding behaviour, not the throughput gain)");
+}

@@ -86,7 +86,11 @@ fn main() -> anyhow::Result<()> {
     let model = ServableModel::from_artifact(&store.dir("model"))
         .map_err(|e| anyhow::anyhow!(e))?;
     let mut router = ModelRouter::new();
-    router.register_pjrt(&engine, model, BatcherConfig { max_wait_ms: 4.0, max_batch: 32 })?;
+    router.register_pjrt(
+        &engine,
+        model,
+        BatcherConfig { max_wait_ms: 4.0, max_batch: 32, ..Default::default() },
+    )?;
     let serving = Arc::new(router);
     let mut server = KwsServer::serve(Arc::clone(&serving), "127.0.0.1:0", 16)?;
     let base = format!("http://{}", server.addr);

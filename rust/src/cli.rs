@@ -83,6 +83,15 @@ dep-counted work-stealing scheduler with intra-op GEMM partitioning;
 --cascade serves/evaluates a staged early-exit pipeline (scenarios:
 kws-command, pose-classify); `eval --cascade` prints the per-stage
 items-in/out, early-exit rate and latency accounting.
+
+Serving admission/scale-out flags (serve and eval):
+  --replicas N      replica drains per LNE model (continuous batching;
+                    each replica owns plans + an exclusive arena)
+  --queue-cap N     bound the admission queue; beyond it requests shed
+                    with HTTP 429 instead of queueing unboundedly
+  --deadline-ms D   default per-request deadline; still-queued requests
+                    are evicted with 504 when it passes
+  --max-wait-ms W   flush deadline for batch coalescing (default 5)
 ";
 
 pub fn main_with(argv: &[String]) -> Result<()> {
@@ -146,12 +155,31 @@ fn pool_threads(args: &Args) -> usize {
     }
 }
 
+/// Batcher config from the shared serving flags: `--max-wait-ms`,
+/// `--replicas`, `--queue-cap` (0 = unbounded), `--deadline-ms` (0 =
+/// none). The defaults reproduce the historical single-replica,
+/// unbounded, no-deadline batcher bit-exactly.
+fn batcher_cfg(args: &Args) -> BatcherConfig {
+    BatcherConfig {
+        max_wait_ms: args.get("max-wait-ms", "5").parse().unwrap_or(5.0),
+        replicas: args.get("replicas", "1").parse::<usize>().unwrap_or(1).max(1),
+        queue_cap: args.get("queue-cap", "0").parse::<usize>().ok().filter(|&c| c > 0),
+        deadline_ms: args.get("deadline-ms", "0").parse::<f64>().ok().filter(|&d| d > 0.0),
+        ..Default::default()
+    }
+}
+
 fn serve(args: &Args) -> Result<()> {
     let mut router = ModelRouter::with_threads(pool_threads(args));
-    let cfg = BatcherConfig {
-        max_wait_ms: args.get("max-wait-ms", "5").parse().unwrap_or(5.0),
-        ..Default::default()
-    };
+    let cfg = batcher_cfg(args);
+    if cfg.queue_cap.is_some() || cfg.deadline_ms.is_some() || cfg.replicas > 1 {
+        eprintln!(
+            "admission: replicas {}, queue cap {}, deadline {} ms (429 on shed, 504 on expiry)",
+            cfg.replicas,
+            cfg.queue_cap.map_or("unbounded".to_string(), |c| c.to_string()),
+            cfg.deadline_ms.map_or("none".to_string(), |d| format!("{d}")),
+        );
+    }
     // PJRT-backed models register first so a trained --app (or --model)
     // stays the default route when an LNE model rides along
     if args.has("app") {
@@ -264,6 +292,36 @@ fn eval(args: &Args) -> Result<()> {
         "  tasked replay ({threads:2}t)        {tasked:9.2} ms   ({:.2}x)   [{steals} steals, {subtasks} gemm subtasks]",
         seq / tasked.max(1e-9)
     );
+    // serving-path section: the same model behind the router/batcher —
+    // admission queue, replica set, trace replays — then the FULL metrics
+    // snapshot through the one renderer every snapshot key flows through
+    // (`render_covers_every_snapshot_key` pins the coverage).
+    let cfg = batcher_cfg(args);
+    let replicas = cfg.replicas;
+    let p = Arc::new(p);
+    let mut router = ModelRouter::with_threads(threads);
+    router
+        .register_lne(&name, Arc::clone(&p), a.clone(), &[1, 4], &[], cfg)
+        .map_err(|e| anyhow!(e))?;
+    let input_len = router.input_len(None).map_err(|e| anyhow!(e))?;
+    let per_rep = 8usize;
+    for _ in 0..reps {
+        let tickets: Vec<_> = (0..per_rep)
+            .map(|_| {
+                router
+                    .infer_async(None, crate::testing::randn_vec(&mut rng, input_len, 1.0))
+                    .map_err(|e| anyhow!(e))
+            })
+            .collect::<Result<_>>()?;
+        for t in tickets {
+            t.wait().map_err(|e| anyhow!(e))?;
+        }
+    }
+    println!(
+        "serving path ({replicas} replica(s), {threads} threads, {} requests):",
+        reps * per_rep
+    );
+    print!("{}", crate::serving::metrics::render(&router.metrics.snapshot()));
     Ok(())
 }
 
@@ -319,6 +377,8 @@ fn eval_cascade(args: &Args) -> Result<()> {
         router.arena_pool.arena_count(),
         router.arena_pool.total_bytes() / 1024
     );
+    println!("serving metrics:");
+    print!("{}", crate::serving::metrics::render(&snap));
     Ok(())
 }
 

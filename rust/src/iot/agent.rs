@@ -50,7 +50,7 @@ impl EdgeAgent {
     pub fn capture_and_report(&mut self, true_class: usize) -> Result<Json, String> {
         let nk = self.serving.num_classes(None)?.saturating_sub(2);
         let audio = synth::generate(true_class, nk, &mut self.rng);
-        let pred = self.serving.infer(None, audio)?;
+        let pred = self.serving.infer(None, audio).map_err(|e| e.to_string())?;
         let measurement = Json::obj(vec![
             ("id", Json::str(format!("{}:last", self.device_id))),
             ("type", Json::str("Measurement")),
@@ -126,6 +126,9 @@ pub struct CascadeEdgeAgent {
     pub shipped: u64,
     /// Payloads resolved on-device by the gate (early exits).
     pub exited: u64,
+    /// Captures the gate's admission queue shed (overload on-device):
+    /// neither shipped nor exited — the capture was dropped loudly.
+    pub shed: u64,
     rng: Rng,
 }
 
@@ -148,6 +151,7 @@ impl CascadeEdgeAgent {
             captured: 0,
             shipped: 0,
             exited: 0,
+            shed: 0,
             rng: Rng::new(fnv(device_id.as_bytes())),
         }
     }
@@ -164,7 +168,15 @@ impl CascadeEdgeAgent {
     /// result to the broker (early exit — result only, no payload).
     pub fn triage(&mut self, true_class: usize, payload: Vec<f32>) -> Result<Json, String> {
         self.captured += 1;
-        let pred = self.gate.infer(None, payload.clone())?;
+        let pred = self.gate.infer(None, payload.clone()).map_err(|e| {
+            // overload on-device: the gate's bounded queue shed the
+            // capture — count it so the device's triage accounting stays
+            // honest (captured = shipped + exited + shed + other errors)
+            if matches!(e, crate::serving::SubmitError::QueueFull { .. }) {
+                self.shed += 1;
+            }
+            e.to_string()
+        })?;
         if self.rule.passes(&pred.scores) {
             self.shipped += 1;
             let mut fields = vec![

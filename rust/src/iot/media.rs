@@ -28,7 +28,15 @@ impl MediaModule {
             let audio: Vec<f32> = arr.iter().map(|v| v.as_f64().unwrap_or(0.0) as f32).collect();
             let model = body.get("model").as_str().map(String::from);
             match serving.infer(model.as_deref(), audio) {
-                Err(e) => Response::error(&e),
+                // typed admission mapping: a constrained device learns the
+                // hub is overloaded (429) or too slow (504), not just "500"
+                Err(e) => Response::json(
+                    e.http_status(),
+                    &Json::obj(vec![
+                        ("error", Json::str(e.code())),
+                        ("message", Json::str(e.to_string())),
+                    ]),
+                ),
                 Ok(p) => {
                     let mut attrs = BTreeMap::new();
                     attrs.insert("device".into(), Json::str(device.clone()));

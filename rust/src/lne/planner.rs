@@ -491,6 +491,18 @@ impl ArenaPool {
         arena
     }
 
+    /// A freshly allocated arena for `plan`, never shared with an
+    /// existing checkout: replica sets use this so secondary replicas
+    /// replay concurrently instead of lock-serializing on a lent arena.
+    /// The arena is still registered in the pool — it counts toward
+    /// `arena_count`/`total_bytes` and later `checkout` calls may borrow
+    /// it when it is idle.
+    pub fn checkout_exclusive(&self, plan: &ExecPlan) -> SharedArena {
+        let arena = Arc::new(Mutex::new(Arena::for_plan(plan)));
+        self.arenas.lock().unwrap().push((plan.profile(), Arc::clone(&arena)));
+        arena
+    }
+
     /// Number of distinct arenas the pool holds.
     pub fn arena_count(&self) -> usize {
         self.arenas.lock().unwrap().len()

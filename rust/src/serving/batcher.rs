@@ -1,25 +1,39 @@
-//! The dynamic batcher: one generic coalescing loop over any
-//! [`InferenceSession`] backend. Requests are queued to a per-model
-//! batcher thread that packs them into the session's compiled batch
-//! buckets; policy: flush when the largest bucket fills, or when the
-//! oldest queued request has waited `max_wait_ms` (latency SLO knob),
-//! with waste-aware bucket choice between padding up and deferring.
+//! The dynamic batcher, split into an **admission front** and N **replica
+//! drains** (scale-out serving):
 //!
-//! Submission is asynchronous at the core: [`DynamicBatcher::submit_async`]
-//! returns a [`Ticket`] immediately, so callers (HTTP workers, IoT agents)
-//! are not thread-per-request blocked; the blocking
-//! [`DynamicBatcher::submit`] is a one-line wrapper over it.
+//! * Admission: [`DynamicBatcher::submit_async`] validates the request and
+//!   pushes it onto a bounded shared queue. A full queue sheds the request
+//!   with [`SubmitError::QueueFull`] instead of queueing unboundedly, and
+//!   each request may carry a deadline (per request, or the config
+//!   default) after which it is evicted un-run with
+//!   [`SubmitError::DeadlineExceeded`].
+//! * Drains: each replica owns one session (plan + arena per bucket for
+//!   LNE backends) and self-schedules from the shared queue. Exactly one
+//!   idle replica at a time holds the *collector token*: it coalesces
+//!   arrivals into the session's compiled batch buckets — flush when the
+//!   largest bucket fills or the flush deadline (`max_wait_ms`, measured
+//!   from pickup) fires, waste-aware bucket choice between padding up and
+//!   deferring — then releases the token *before* executing, so the next
+//!   idle replica starts coalescing while the batch runs (continuous
+//!   batching: a replay in flight no longer head-of-line blocks the
+//!   queue). Idle replicas taking work as they free up is least-loaded
+//!   dispatch without a dispatcher.
 //!
-//! The batcher thread only coalesces and dispatches; LNE backends execute
-//! their replays wavefront-parallel on the router's shared
+//! With one replica, no queue bound and no deadline (the defaults), this
+//! reduces to the original single-loop batcher: same pickup, same flush
+//! deadline, same bucket choice, bit-identical results.
+//!
+//! Replica threads only coalesce and dispatch; LNE backends execute their
+//! replays wavefront-parallel on the router's shared
 //! [`WorkerPool`](super::WorkerPool), so compute threads do not multiply
-//! with registered models.
+//! with registered models or replicas.
 
-use super::metrics::ServingMetrics;
+use super::metrics::{BatchRecord, ServingMetrics};
 use super::session::InferenceSession;
+use std::collections::VecDeque;
+use std::fmt;
 use std::marker::PhantomData;
-use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 #[derive(Debug, Clone)]
@@ -32,107 +46,323 @@ pub struct Prediction {
     pub batch_size: usize,
 }
 
+/// Why a request did not produce a prediction. Typed (not a `String`) so
+/// the HTTP layer can map overload to 429, expiry to 504 and shutdown to
+/// 503 instead of a blanket 500.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The bounded admission queue was full: the request was shed at the
+    /// door (load shedding, never silent dropping). `cap` is the
+    /// configured queue bound.
+    QueueFull { cap: usize },
+    /// The request's deadline passed before a replica executed it; it was
+    /// evicted from the queue un-run.
+    DeadlineExceeded,
+    /// The batcher has shut down (model replaced / router dropped): the
+    /// admission side is closed, or the response channel died mid-flight.
+    Closed,
+    /// The request was rejected before admission (wrong input length,
+    /// unknown model).
+    Rejected(String),
+    /// The backend failed (or panicked) while executing the batch.
+    Backend(String),
+}
+
+impl SubmitError {
+    /// HTTP status this error maps to: overload 429, expiry 504,
+    /// shutdown 503, malformed 400, backend failure 500.
+    pub fn http_status(&self) -> u16 {
+        match self {
+            SubmitError::QueueFull { .. } => 429,
+            SubmitError::DeadlineExceeded => 504,
+            SubmitError::Closed => 503,
+            SubmitError::Rejected(_) => 400,
+            SubmitError::Backend(_) => 500,
+        }
+    }
+
+    /// Stable machine-readable code for JSON error bodies.
+    pub fn code(&self) -> &'static str {
+        match self {
+            SubmitError::QueueFull { .. } => "queue_full",
+            SubmitError::DeadlineExceeded => "deadline_exceeded",
+            SubmitError::Closed => "closed",
+            SubmitError::Rejected(_) => "rejected",
+            SubmitError::Backend(_) => "backend_error",
+        }
+    }
+}
+
+impl fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SubmitError::QueueFull { cap } => {
+                write!(f, "admission queue full ({cap} requests queued); request shed")
+            }
+            SubmitError::DeadlineExceeded => f.write_str("deadline exceeded before execution"),
+            SubmitError::Closed => f.write_str("serving queue closed"),
+            SubmitError::Rejected(m) | SubmitError::Backend(m) => f.write_str(m),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
 #[derive(Debug, Clone)]
 pub struct BatcherConfig {
     /// Flush deadline for the oldest queued request.
     pub max_wait_ms: f64,
     /// Upper bound on coalesced batch (clamped to the largest bucket).
     pub max_batch: usize,
+    /// Bound on the admission queue; submissions beyond it are shed with
+    /// [`SubmitError::QueueFull`]. `None` = unbounded (the historical
+    /// behavior).
+    pub queue_cap: Option<usize>,
+    /// Default per-request deadline, measured from submission: requests
+    /// still queued when it passes are evicted with
+    /// [`SubmitError::DeadlineExceeded`] instead of run late, and staged
+    /// backends stop descending once it passes. `None` = no deadline.
+    pub deadline_ms: Option<f64>,
+    /// Replica drains for this model. Each replica owns a full session
+    /// (plan + arena per bucket for LNE); >1 enables continuous batching
+    /// — the next batch coalesces while a replay is in flight.
+    pub replicas: usize,
 }
 
 impl Default for BatcherConfig {
     fn default() -> Self {
-        BatcherConfig { max_wait_ms: 5.0, max_batch: 32 }
+        BatcherConfig {
+            max_wait_ms: 5.0,
+            max_batch: 32,
+            queue_cap: None,
+            deadline_ms: None,
+            replicas: 1,
+        }
     }
 }
 
 struct Job {
     input: Vec<f32>,
     enqueued: Instant,
-    resp: mpsc::Sender<Result<Prediction, String>>,
+    deadline: Option<Instant>,
+    resp: mpsc::Sender<Result<Prediction, SubmitError>>,
 }
 
 /// A pending prediction: the receiver half of one request's response
 /// channel. Hold it, do other work, then [`wait`](Ticket::wait) (or poll
-/// with [`try_get`](Ticket::try_get)).
+/// with [`try_get`](Ticket::try_get), or bound the wait with
+/// [`wait_timeout`](Ticket::wait_timeout)).
 pub struct Ticket {
-    rx: mpsc::Receiver<Result<Prediction, String>>,
+    rx: mpsc::Receiver<Result<Prediction, SubmitError>>,
 }
 
 impl Ticket {
-    /// Block until the prediction is ready.
-    pub fn wait(self) -> Result<Prediction, String> {
-        self.rx.recv().map_err(|_| "batcher dropped request".to_string())?
+    /// Block until the prediction is ready. A dead batcher (thread gone,
+    /// channel closed) resolves to [`SubmitError::Closed`] — it can no
+    /// longer block forever.
+    pub fn wait(self) -> Result<Prediction, SubmitError> {
+        match self.rx.recv() {
+            Ok(r) => r,
+            Err(_) => Err(SubmitError::Closed),
+        }
+    }
+
+    /// Block at most `timeout` for the prediction: the caller-side guard
+    /// against a wedged backend. Times out to
+    /// [`SubmitError::DeadlineExceeded`]; a dead batcher resolves to
+    /// [`SubmitError::Closed`]. Takes `&self` so a timed-out ticket can
+    /// still be waited on again.
+    pub fn wait_timeout(&self, timeout: Duration) -> Result<Prediction, SubmitError> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(r) => r,
+            Err(mpsc::RecvTimeoutError::Timeout) => Err(SubmitError::DeadlineExceeded),
+            Err(mpsc::RecvTimeoutError::Disconnected) => Err(SubmitError::Closed),
+        }
     }
 
     /// Non-blocking poll: `None` while the batch is still in flight.
-    pub fn try_get(&self) -> Option<Result<Prediction, String>> {
+    pub fn try_get(&self) -> Option<Result<Prediction, SubmitError>> {
         match self.rx.try_recv() {
             Ok(r) => Some(r),
             Err(mpsc::TryRecvError::Empty) => None,
-            Err(mpsc::TryRecvError::Disconnected) => {
-                Some(Err("batcher dropped request".to_string()))
-            }
+            Err(mpsc::TryRecvError::Disconnected) => Some(Err(SubmitError::Closed)),
         }
     }
 }
 
-/// The per-model batcher: owns the queue to a worker thread that runs the
-/// single coalescing loop over `B`. Metadata (buckets, input length,
-/// classes) is snapshotted at start so the router can introspect models
-/// without touching the session, which lives on the worker thread.
+/// The shared admission queue between the submit side and the replica
+/// drains: a mutex-guarded deque plus one condvar carrying both "work
+/// arrived" and "collector token released" wakeups.
+struct Admission {
+    state: Mutex<QueueState>,
+    arrival: Condvar,
+}
+
+struct QueueState {
+    jobs: VecDeque<Job>,
+    /// Admission closed (batcher dropped / model replaced): submissions
+    /// fail with [`SubmitError::Closed`]; drains finish the backlog, then
+    /// exit.
+    closed: bool,
+    /// A replica currently holds the collector token (is coalescing).
+    /// At most one collector at a time keeps batch assembly exactly as
+    /// serial as the original single-loop batcher.
+    collecting: bool,
+    /// Replicas currently executing a batch (occupancy gauge).
+    busy: usize,
+}
+
+/// The per-model batcher: admission front over a replica set. Metadata
+/// (buckets, input length, classes) is snapshotted at start so the router
+/// can introspect models without touching the sessions, which live on the
+/// replica threads.
 pub struct DynamicBatcher<B: InferenceSession> {
-    tx: mpsc::Sender<Job>,
+    queue: Arc<Admission>,
     buckets: Vec<usize>,
     input_len: usize,
     classes: Vec<String>,
+    replicas: usize,
+    queue_cap: Option<usize>,
+    default_deadline: Option<Duration>,
+    metrics: Arc<ServingMetrics>,
     _session: PhantomData<fn() -> B>,
 }
 
 impl<B: InferenceSession> DynamicBatcher<B> {
-    /// Move `session` onto a dedicated batcher thread named after `name`.
+    /// Move `session` onto a dedicated replica thread named after `name`
+    /// (a replica set of one).
     pub fn start(
         name: &str,
         session: B,
         cfg: BatcherConfig,
         metrics: Arc<ServingMetrics>,
     ) -> Result<DynamicBatcher<B>, String> {
-        let buckets = session.buckets().to_vec();
+        Self::start_set(name, vec![session], cfg, metrics)
+    }
+
+    /// Move each session in `sessions` onto its own replica drain thread.
+    /// All sessions must agree on buckets/input length/classes (they are
+    /// replicas of one model); metadata is snapshotted from the first.
+    /// `cfg.replicas` is ignored here — the session count *is* the
+    /// replica count (the router builds the set from `cfg.replicas`).
+    pub fn start_set(
+        name: &str,
+        sessions: Vec<B>,
+        cfg: BatcherConfig,
+        metrics: Arc<ServingMetrics>,
+    ) -> Result<DynamicBatcher<B>, String> {
+        if sessions.is_empty() {
+            return Err(format!("model '{name}' needs at least one replica session"));
+        }
+        let buckets = sessions[0].buckets().to_vec();
         if buckets.is_empty() {
             return Err(format!("session '{name}' has no batch buckets"));
         }
         debug_assert!(buckets.windows(2).all(|w| w[0] < w[1]), "buckets ascending");
-        let input_len = session.input_len();
-        let classes = session.classes();
-        let (tx, rx) = mpsc::channel::<Job>();
-        std::thread::Builder::new()
-            .name(format!("batcher-{name}"))
-            .spawn(move || batch_loop(session, cfg, rx, metrics))
-            .map_err(|e| format!("spawn batcher thread: {e}"))?;
-        Ok(DynamicBatcher { tx, buckets, input_len, classes, _session: PhantomData })
+        debug_assert!(
+            sessions.iter().all(|s| s.buckets() == buckets.as_slice()),
+            "replica sessions must agree on buckets"
+        );
+        let input_len = sessions[0].input_len();
+        let classes = sessions[0].classes();
+        let replicas = sessions.len();
+        let queue = Arc::new(Admission {
+            state: Mutex::new(QueueState {
+                jobs: VecDeque::new(),
+                closed: false,
+                collecting: false,
+                busy: 0,
+            }),
+            arrival: Condvar::new(),
+        });
+        for (r, session) in sessions.into_iter().enumerate() {
+            let q = Arc::clone(&queue);
+            let m = Arc::clone(&metrics);
+            let c = cfg.clone();
+            let spawned = std::thread::Builder::new()
+                .name(format!("batcher-{name}-r{r}"))
+                .spawn(move || drain_loop(session, r, c, q, m));
+            if let Err(e) = spawned {
+                // close so already-spawned replicas exit instead of leaking
+                queue.state.lock().unwrap().closed = true;
+                queue.arrival.notify_all();
+                return Err(format!("spawn batcher thread: {e}"));
+            }
+        }
+        Ok(DynamicBatcher {
+            queue,
+            buckets,
+            input_len,
+            classes,
+            replicas,
+            queue_cap: cfg.queue_cap.map(|c| c.max(1)),
+            default_deadline: cfg
+                .deadline_ms
+                .filter(|&d| d > 0.0)
+                .map(|d| Duration::from_secs_f64(d / 1e3)),
+            metrics,
+            _session: PhantomData,
+        })
     }
 
     /// Submit one request; returns a [`Ticket`] without blocking on the
     /// batch. Length is validated here so malformed requests never poison
-    /// a coalesced batch.
-    pub fn submit_async(&self, input: Vec<f32>) -> Result<Ticket, String> {
+    /// a coalesced batch; a full bounded queue sheds with
+    /// [`SubmitError::QueueFull`] — admission never blocks the caller.
+    pub fn submit_async(&self, input: Vec<f32>) -> Result<Ticket, SubmitError> {
+        self.submit_async_with(input, None)
+    }
+
+    /// Submit with a per-request deadline override; `None` falls back to
+    /// the configured `deadline_ms` (and no deadline when that is unset).
+    pub fn submit_async_with(
+        &self,
+        input: Vec<f32>,
+        deadline: Option<Duration>,
+    ) -> Result<Ticket, SubmitError> {
         if input.len() != self.input_len {
-            return Err(format!(
+            return Err(SubmitError::Rejected(format!(
                 "input must be {} values, got {}",
                 self.input_len,
                 input.len()
-            ));
+            )));
         }
+        let deadline = deadline.or(self.default_deadline).map(|d| Instant::now() + d);
         let (resp, rx) = mpsc::channel();
-        self.tx
-            .send(Job { input, enqueued: Instant::now(), resp })
-            .map_err(|_| "batcher stopped".to_string())?;
+        let mut st = self.queue.state.lock().unwrap();
+        if st.closed {
+            return Err(SubmitError::Closed);
+        }
+        if let Some(cap) = self.queue_cap {
+            if st.jobs.len() >= cap {
+                drop(st);
+                self.metrics.record_shed(cap);
+                return Err(SubmitError::QueueFull { cap });
+            }
+        }
+        st.jobs.push_back(Job { input, enqueued: Instant::now(), deadline, resp });
+        let depth = st.jobs.len();
+        drop(st);
+        self.metrics.record_admission(depth);
+        self.queue.arrival.notify_all();
         Ok(Ticket { rx })
     }
 
     /// Submit one request and block until its prediction is ready.
-    pub fn submit(&self, input: Vec<f32>) -> Result<Prediction, String> {
+    pub fn submit(&self, input: Vec<f32>) -> Result<Prediction, SubmitError> {
         self.submit_async(input)?.wait()
+    }
+
+    /// Close the admission side: further submissions fail with
+    /// [`SubmitError::Closed`]; replica drains finish the queued backlog
+    /// (in-flight tickets still resolve), then exit. Called on drop, so
+    /// `ModelRouter::replace_session` drains the old replica set while
+    /// the new one serves fresh traffic.
+    pub fn close(&self) {
+        let mut st = self.queue.state.lock().unwrap();
+        st.closed = true;
+        drop(st);
+        self.queue.arrival.notify_all();
     }
 
     pub fn buckets(&self) -> &[usize] {
@@ -146,54 +376,103 @@ impl<B: InferenceSession> DynamicBatcher<B> {
     pub fn classes(&self) -> &[String] {
         &self.classes
     }
+
+    /// Replica drains serving this model.
+    pub fn replicas(&self) -> usize {
+        self.replicas
+    }
 }
 
-/// The one coalescing loop, generic over the backend.
-fn batch_loop<B: InferenceSession>(
+impl<B: InferenceSession> Drop for DynamicBatcher<B> {
+    fn drop(&mut self) {
+        self.close();
+    }
+}
+
+/// Move expired-deadline jobs out of the queue (resolved to
+/// [`SubmitError::DeadlineExceeded`] by the caller, outside the lock).
+fn evict_expired(jobs: &mut VecDeque<Job>, evicted: &mut Vec<Job>, now: Instant) {
+    let mut i = 0;
+    while i < jobs.len() {
+        let expired = matches!(jobs[i].deadline, Some(d) if now >= d);
+        if expired {
+            if let Some(j) = jobs.remove(i) {
+                evicted.push(j);
+            }
+        } else {
+            i += 1;
+        }
+    }
+}
+
+fn resolve_evicted(evicted: &mut Vec<Job>, metrics: &ServingMetrics) {
+    if evicted.is_empty() {
+        return;
+    }
+    metrics.record_evicted(evicted.len());
+    for j in evicted.drain(..) {
+        let _ = j.resp.send(Err(SubmitError::DeadlineExceeded));
+    }
+}
+
+/// One replica's drain loop: elect self collector, coalesce, release the
+/// token, execute on the replica's own session, repeat.
+fn drain_loop<B: InferenceSession>(
     mut session: B,
+    replica: usize,
     cfg: BatcherConfig,
-    rx: mpsc::Receiver<Job>,
+    queue: Arc<Admission>,
     metrics: Arc<ServingMetrics>,
 ) {
     let buckets = session.buckets().to_vec();
     let max_batch = cfg.max_batch.min(*buckets.last().unwrap()).max(1);
-    let wait = Duration::from_secs_f64(cfg.max_wait_ms / 1e3);
-    let mut pending: Vec<Job> = Vec::new();
+    let wait = Duration::from_secs_f64(cfg.max_wait_ms.max(0.0) / 1e3);
+    let mut evicted: Vec<Job> = Vec::new();
     loop {
-        // block for the first job
-        if pending.is_empty() {
-            match rx.recv() {
-                Ok(j) => pending.push(j),
-                Err(_) => return, // all senders gone
-            }
-        }
-        // first, drain everything already queued (requests that piled up
-        // while the previous batch was executing)
-        while pending.len() < max_batch {
-            match rx.try_recv() {
-                Ok(j) => pending.push(j),
-                Err(_) => break,
-            }
-        }
-        // then coalesce until the flush deadline (measured from pickup so a
-        // long prior batch doesn't force size-1 flushes) or until full
-        let deadline = Instant::now() + wait;
-        while pending.len() < max_batch {
-            let now = Instant::now();
-            if now >= deadline {
+        // ---- collector election: sleep until there is work and no other
+        // replica is coalescing; exit once closed and fully drained
+        let mut st = queue.state.lock().unwrap();
+        loop {
+            if !st.collecting && !st.jobs.is_empty() {
                 break;
             }
-            match rx.recv_timeout(deadline - now) {
-                Ok(j) => pending.push(j),
-                Err(mpsc::RecvTimeoutError::Timeout) => break,
-                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            if st.closed && st.jobs.is_empty() {
+                return;
             }
+            st = queue.arrival.wait(st).unwrap();
+        }
+        st.collecting = true;
+        // ---- coalesce under the lock, waiting for arrivals until the
+        // batch cap fills or the flush deadline (measured from pickup so a
+        // long prior batch doesn't force size-1 flushes) fires. Expired
+        // jobs are evicted instead of batched; a closed queue flushes
+        // immediately (drain, don't linger).
+        let flush_at = Instant::now() + wait;
+        loop {
+            evict_expired(&mut st.jobs, &mut evicted, Instant::now());
+            if st.jobs.len() >= max_batch || st.closed {
+                break;
+            }
+            let now = Instant::now();
+            if now >= flush_at {
+                break;
+            }
+            let (g, _t) = queue.arrival.wait_timeout(st, flush_at - now).unwrap();
+            st = g;
+        }
+        let n = st.jobs.len().min(max_batch);
+        if n == 0 {
+            // everything expired while coalescing: hand back the token
+            st.collecting = false;
+            drop(st);
+            queue.arrival.notify_all();
+            resolve_evicted(&mut evicted, &metrics);
+            continue;
         }
         // waste-aware bucket choice: padding up to the next bucket costs
         // (bucket - n) wasted lanes; processing only the bucket below
         // defers (n - b_down) requests to the next flush (~small constant
         // overhead). Pick whichever wastes less.
-        let n = pending.len().min(max_batch);
         let b_up = buckets.iter().copied().find(|&b| b >= n);
         let b_down = buckets.iter().copied().filter(|&b| b <= n).next_back();
         const DEFER_OVERHEAD: usize = 2;
@@ -210,42 +489,85 @@ fn batch_loop<B: InferenceSession>(
             (None, None) => unreachable!("buckets non-empty"),
         };
         let take = n.min(bucket);
-        let depth = pending.len();
-        let batch: Vec<Job> = pending.drain(..take).collect();
+        let depth = st.jobs.len();
+        let batch: Vec<Job> = st.jobs.drain(..take).collect();
+        // queue-age gauge: the oldest request still waiting after this
+        // drain (the queue is FIFO, so the front is the oldest); 0 when
+        // the backlog emptied. Deferred jobs stay in the shared queue, so
+        // another replica picks them up immediately.
+        let oldest_pending_ms = st
+            .jobs
+            .front()
+            .map(|j| j.enqueued.elapsed().as_secs_f64() * 1e3)
+            .unwrap_or(0.0);
+        // ---- release the collector token BEFORE executing: the next
+        // idle replica coalesces the next batch while this one runs
+        // (continuous batching)
+        st.collecting = false;
+        st.busy += 1;
+        let busy = st.busy;
+        drop(st);
+        queue.arrival.notify_all();
+        resolve_evicted(&mut evicted, &metrics);
+
         let queue_ms = batch
             .iter()
             .map(|j| j.enqueued.elapsed().as_secs_f64() * 1e3)
             .fold(0.0, f64::max);
+        // the batch's effective deadline is its tightest member's
+        let batch_deadline = batch.iter().filter_map(|j| j.deadline).min();
         let inputs: Vec<&[f32]> = batch.iter().map(|j| j.input.as_slice()).collect();
         let t0 = Instant::now();
-        let result = session.run_batch(bucket, &inputs);
+        // contain backend panics to the batch: the jobs resolve with a
+        // typed error and the replica stays up (tickets never hang on a
+        // dead thread)
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            session.run_batch_deadline(bucket, &inputs, batch_deadline)
+        }));
         let infer_ms = t0.elapsed().as_secs_f64() * 1e3;
         drop(inputs);
-        // queue-age gauge: the oldest request still waiting after this
-        // drain (pending is FIFO, so the front is the oldest); 0 when the
-        // backlog emptied
-        let oldest_pending_ms = pending
-            .first()
-            .map(|j| j.enqueued.elapsed().as_secs_f64() * 1e3)
-            .unwrap_or(0.0);
-        metrics.record_batch(bucket, batch.len(), depth, queue_ms, infer_ms, oldest_pending_ms);
+        let now = Instant::now();
+        // served-but-late: completed past its deadline (still delivered —
+        // eviction only drops work that hasn't started)
+        let late = batch
+            .iter()
+            .filter(|j| matches!(j.deadline, Some(d) if now >= d))
+            .count();
+        metrics.record_batch(&BatchRecord {
+            bucket,
+            size: batch.len(),
+            depth,
+            queue_ms,
+            infer_ms,
+            oldest_pending_ms,
+            replica,
+            busy,
+            late,
+        });
+        let result = match result {
+            Ok(r) => r.map_err(SubmitError::Backend),
+            Err(_) => Err(SubmitError::Backend(format!(
+                "replica {replica} panicked executing a batch of {}",
+                batch.len()
+            ))),
+        };
         match result {
             Ok(mut preds) => {
                 if preds.len() != batch.len() {
-                    let e = format!(
+                    let e = SubmitError::Backend(format!(
                         "backend returned {} predictions for {} requests",
                         preds.len(),
                         batch.len()
-                    );
+                    ));
                     for job in batch {
                         let _ = job.resp.send(Err(e.clone()));
                     }
-                    continue;
-                }
-                for (job, mut p) in batch.into_iter().zip(preds.drain(..)) {
-                    p.latency_ms = job.enqueued.elapsed().as_secs_f64() * 1e3;
-                    p.batch_size = take;
-                    let _ = job.resp.send(Ok(p));
+                } else {
+                    for (job, mut p) in batch.into_iter().zip(preds.drain(..)) {
+                        p.latency_ms = job.enqueued.elapsed().as_secs_f64() * 1e3;
+                        p.batch_size = take;
+                        let _ = job.resp.send(Ok(p));
+                    }
                 }
             }
             Err(e) => {
@@ -254,6 +576,8 @@ fn batch_loop<B: InferenceSession>(
                 }
             }
         }
+        let mut st = queue.state.lock().unwrap();
+        st.busy -= 1;
     }
 }
 
@@ -295,10 +619,65 @@ mod tests {
         DynamicBatcher::start(
             "test",
             session,
-            BatcherConfig { max_wait_ms, max_batch: 32 },
+            BatcherConfig { max_wait_ms, ..Default::default() },
             metrics,
         )
         .unwrap()
+    }
+
+    /// A scriptable backend for admission/replica tests: a fixed bucket
+    /// set, a per-batch execution delay, and an optional one-shot panic.
+    struct TestSession {
+        buckets: Vec<usize>,
+        input_len: usize,
+        delay: Duration,
+        panic_once: bool,
+    }
+
+    impl TestSession {
+        fn slow(buckets: &[usize], delay_ms: u64) -> TestSession {
+            TestSession {
+                buckets: buckets.to_vec(),
+                input_len: 2,
+                delay: Duration::from_millis(delay_ms),
+                panic_once: false,
+            }
+        }
+    }
+
+    impl InferenceSession for TestSession {
+        fn buckets(&self) -> &[usize] {
+            &self.buckets
+        }
+        fn input_len(&self) -> usize {
+            self.input_len
+        }
+        fn classes(&self) -> Vec<String> {
+            vec!["a".into(), "b".into()]
+        }
+        fn run_batch(
+            &mut self,
+            _bucket: usize,
+            inputs: &[&[f32]],
+        ) -> Result<Vec<Prediction>, String> {
+            if self.panic_once {
+                self.panic_once = false;
+                panic!("scripted backend panic");
+            }
+            if !self.delay.is_zero() {
+                std::thread::sleep(self.delay);
+            }
+            Ok(inputs
+                .iter()
+                .map(|s| Prediction {
+                    class_id: 0,
+                    class: "a".into(),
+                    scores: vec![s[0], s[1]],
+                    latency_ms: 0.0,
+                    batch_size: 0,
+                })
+                .collect())
+        }
     }
 
     #[test]
@@ -315,6 +694,7 @@ mod tests {
         let batcher = lne_batcher(&[1, 4], 50.0, &pool, Arc::clone(&metrics));
         assert_eq!(batcher.buckets(), &[1, 4]);
         assert_eq!(batcher.input_len(), SAMPLE);
+        assert_eq!(batcher.replicas(), 1);
         let mut rng = Rng::new(4);
         let samples: Vec<Vec<f32>> = (0..4)
             .map(|_| Tensor::randn(&[2, 6, 6], 1.0, &mut rng).data)
@@ -348,6 +728,8 @@ mod tests {
             .sum();
         assert_eq!(total, batches);
         assert!(snap.get("queue_depth_max").as_f64().unwrap() >= 1.0);
+        // the single replica accounts for every flush
+        assert_eq!(snap.get("replica_flushes").get("r0").as_i64(), Some(batches));
     }
 
     #[test]
@@ -392,7 +774,10 @@ mod tests {
     fn bad_input_length_is_rejected_at_submit() {
         let pool = ArenaPool::new();
         let batcher = lne_batcher(&[2], 1.0, &pool, Arc::new(ServingMetrics::default()));
-        assert!(batcher.submit(vec![0.0; 10]).is_err());
+        match batcher.submit(vec![0.0; 10]) {
+            Err(SubmitError::Rejected(_)) => {}
+            other => panic!("want Rejected, got {other:?}"),
+        }
         // and a well-formed request still round-trips afterwards
         assert!(batcher.submit(vec![0.0; SAMPLE]).is_ok());
     }
@@ -412,6 +797,165 @@ mod tests {
         assert_eq!(p1.class_id, p2.class_id);
         for (a, b) in p1.scores.iter().zip(p2.scores.iter()) {
             assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    /// Load-shedding determinism: with the single replica pinned inside a
+    /// slow batch, a full bounded queue rejects further submissions with
+    /// `QueueFull` — it never blocks the submitter and never drops a
+    /// request silently — and every admitted request still resolves.
+    #[test]
+    fn full_bounded_queue_sheds_with_queue_full() {
+        let metrics = Arc::new(ServingMetrics::default());
+        let cfg = BatcherConfig {
+            max_wait_ms: 0.0,
+            queue_cap: Some(2),
+            ..Default::default()
+        };
+        let b =
+            DynamicBatcher::start("shed", TestSession::slow(&[1], 300), cfg, Arc::clone(&metrics))
+                .unwrap();
+        // pin the replica: first job is picked up (queue empties) and
+        // executes for ~300ms
+        let busy = b.submit_async(vec![0.0, 1.0]).unwrap();
+        std::thread::sleep(Duration::from_millis(60));
+        // the queue (cap 2) now fills behind the busy replica...
+        let admitted: Vec<Ticket> =
+            (0..2).map(|_| b.submit_async(vec![0.0, 1.0]).unwrap()).collect();
+        // ...and every further submission sheds, without blocking
+        for _ in 0..3 {
+            let t0 = Instant::now();
+            match b.submit_async(vec![0.0, 1.0]) {
+                Err(SubmitError::QueueFull { cap }) => assert_eq!(cap, 2),
+                other => panic!("want QueueFull, got {:?}", other.map(|_| ())),
+            }
+            assert!(t0.elapsed() < Duration::from_millis(50), "submit blocked");
+        }
+        // nothing dropped silently: the pinned job and both admitted jobs
+        // all resolve
+        busy.wait().unwrap();
+        for t in admitted {
+            t.wait_timeout(Duration::from_secs(5)).unwrap();
+        }
+        let snap = metrics.snapshot();
+        assert_eq!(snap.get("shed_total").as_i64(), Some(3));
+        assert_eq!(snap.get("requests").as_i64(), Some(3));
+        assert!(snap.get("admission_depth_max").as_f64().unwrap() >= 2.0);
+    }
+
+    /// Deadline-aware eviction: a request whose deadline passes while it
+    /// waits behind a slow batch is evicted un-run with
+    /// `DeadlineExceeded` at the next flush.
+    #[test]
+    fn expired_requests_are_evicted_at_flush() {
+        let metrics = Arc::new(ServingMetrics::default());
+        let cfg = BatcherConfig { max_wait_ms: 0.0, ..Default::default() };
+        let b =
+            DynamicBatcher::start("evict", TestSession::slow(&[1], 200), cfg, Arc::clone(&metrics))
+                .unwrap();
+        // first job pins the replica for ~200ms
+        let busy = b.submit_async(vec![0.0, 1.0]).unwrap();
+        std::thread::sleep(Duration::from_millis(40));
+        // 20ms deadline expires long before the replica frees up
+        let doomed = b
+            .submit_async_with(vec![0.0, 1.0], Some(Duration::from_millis(20)))
+            .unwrap();
+        match doomed.wait() {
+            Err(SubmitError::DeadlineExceeded) => {}
+            other => panic!("want DeadlineExceeded, got {:?}", other.map(|_| ())),
+        }
+        busy.wait().unwrap();
+        let snap = metrics.snapshot();
+        assert_eq!(snap.get("evicted_total").as_i64(), Some(1));
+    }
+
+    /// Two replicas drain concurrently (continuous batching): two jobs
+    /// against 100ms-per-batch replicas finish in ~1 batch time, not 2,
+    /// and both replicas flush.
+    #[test]
+    fn replica_set_overlaps_batches() {
+        let metrics = Arc::new(ServingMetrics::default());
+        let cfg = BatcherConfig { max_wait_ms: 0.0, ..Default::default() };
+        let sessions = vec![TestSession::slow(&[1], 100), TestSession::slow(&[1], 100)];
+        let b = DynamicBatcher::start_set("dual", sessions, cfg, Arc::clone(&metrics)).unwrap();
+        assert_eq!(b.replicas(), 2);
+        let t0 = Instant::now();
+        let t1 = b.submit_async(vec![0.0, 1.0]).unwrap();
+        let t2 = b.submit_async(vec![2.0, 3.0]).unwrap();
+        t1.wait().unwrap();
+        t2.wait().unwrap();
+        let wall = t0.elapsed();
+        // serial execution would take >=200ms; overlap finishes well under
+        // (sleep-bound, so this holds even on one core)
+        assert!(wall < Duration::from_millis(190), "no overlap: {wall:?}");
+        let snap = metrics.snapshot();
+        let r0 = snap.get("replica_flushes").get("r0").as_i64().unwrap_or(0);
+        let r1 = snap.get("replica_flushes").get("r1").as_i64().unwrap_or(0);
+        assert_eq!(r0 + r1, 2);
+        assert_eq!(r0, 1, "each replica takes one of the overlapping batches");
+        assert!(snap.get("replicas_busy_max").as_f64().unwrap() >= 2.0);
+    }
+
+    /// Satellite regression: a backend panic mid-batch resolves the
+    /// batch's tickets with a typed Backend error instead of hanging
+    /// `Ticket::wait` forever, and the replica keeps serving afterwards.
+    #[test]
+    fn backend_panic_resolves_tickets_and_replica_survives() {
+        let metrics = Arc::new(ServingMetrics::default());
+        let cfg = BatcherConfig { max_wait_ms: 0.0, ..Default::default() };
+        let session = TestSession {
+            buckets: vec![1],
+            input_len: 2,
+            delay: Duration::ZERO,
+            panic_once: true,
+        };
+        let b = DynamicBatcher::start("boom", session, cfg, metrics).unwrap();
+        match b.submit(vec![0.0, 1.0]) {
+            Err(SubmitError::Backend(m)) => assert!(m.contains("panicked"), "{m}"),
+            other => panic!("want Backend, got {:?}", other.map(|_| ())),
+        }
+        // the replica caught the panic and still serves
+        let p = b.submit(vec![4.0, 5.0]).unwrap();
+        assert_eq!(p.scores, vec![4.0, 5.0]);
+    }
+
+    /// Satellite regression: a ticket whose batcher died resolves to
+    /// `Closed` (wait and wait_timeout), never blocks forever.
+    #[test]
+    fn dead_batcher_resolves_tickets_closed() {
+        // construct a ticket whose sender is already gone
+        let (tx, rx) = mpsc::channel::<Result<Prediction, SubmitError>>();
+        drop(tx);
+        let t = Ticket { rx };
+        assert_eq!(t.wait_timeout(Duration::from_millis(10)), Err(SubmitError::Closed));
+        assert_eq!(t.wait(), Err(SubmitError::Closed));
+
+        // wait_timeout on an in-flight ticket times out typed, and the
+        // ticket remains waitable
+        let (_tx2, rx2) = mpsc::channel::<Result<Prediction, SubmitError>>();
+        let t2 = Ticket { rx: rx2 };
+        assert_eq!(
+            t2.wait_timeout(Duration::from_millis(10)),
+            Err(SubmitError::DeadlineExceeded)
+        );
+    }
+
+    /// Closing the batcher drains the backlog: already-queued jobs still
+    /// resolve, and submissions after close fail typed.
+    #[test]
+    fn close_drains_backlog_then_rejects() {
+        let metrics = Arc::new(ServingMetrics::default());
+        let cfg = BatcherConfig { max_wait_ms: 0.0, ..Default::default() };
+        let b = DynamicBatcher::start("close", TestSession::slow(&[1], 50), cfg, metrics).unwrap();
+        let pending: Vec<Ticket> =
+            (0..3).map(|_| b.submit_async(vec![0.0, 1.0]).unwrap()).collect();
+        b.close();
+        match b.submit_async(vec![0.0, 1.0]) {
+            Err(SubmitError::Closed) => {}
+            other => panic!("want Closed, got {:?}", other.map(|_| ())),
+        }
+        for t in pending {
+            t.wait_timeout(Duration::from_secs(5)).unwrap();
         }
     }
 }

@@ -260,6 +260,33 @@ impl InferenceSession for Cascade {
     }
 
     fn run_batch(&mut self, bucket: usize, inputs: &[&[f32]]) -> Result<Vec<Prediction>, String> {
+        self.exec(bucket, inputs, None)
+    }
+
+    fn run_batch_deadline(
+        &mut self,
+        bucket: usize,
+        inputs: &[&[f32]],
+        deadline: Option<std::time::Instant>,
+    ) -> Result<Vec<Prediction>, String> {
+        self.exec(bucket, inputs, deadline)
+    }
+}
+
+impl Cascade {
+    /// Run the staged pipeline over one batch. `deadline` (the batch's
+    /// tightest member deadline, inherited from the submitting requests)
+    /// degrades gracefully: once it passes, the cascade stops descending
+    /// further stages and every still-live item answers with its
+    /// best-so-far stage result — a coarse prediction beats a 504 when
+    /// the work is already half done. Stage 0 always runs (an item must
+    /// have *some* result).
+    fn exec(
+        &mut self,
+        bucket: usize,
+        inputs: &[&[f32]],
+        deadline: Option<std::time::Instant>,
+    ) -> Result<Vec<Prediction>, String> {
         if self.stages.is_empty() {
             return Err(format!("cascade '{}' has no stages", self.name));
         }
@@ -271,6 +298,14 @@ impl InferenceSession for Cascade {
         let mut live: Vec<usize> = (0..n).collect();
         for (k, stage) in self.stages.iter_mut().enumerate() {
             if live.is_empty() {
+                break;
+            }
+            if k > 0 && deadline.is_some_and(|d| std::time::Instant::now() >= d) {
+                // deadline passed mid-pipeline: stop descending, keep the
+                // stage-(k-1) results already recorded for live items
+                if let Some(m) = &self.metrics {
+                    m.record_deadline_stops(live.len());
+                }
                 break;
             }
             let last = k + 1 == nstages;
@@ -609,6 +644,69 @@ mod tests {
                 assert_eq!(h.get("early_exits").as_i64(), Some(0));
             }
         }
+    }
+
+    /// A passed deadline stops the cascade from descending further
+    /// stages: every live item answers with its best-so-far (gate) result
+    /// instead of erroring, and the stop is counted in metrics.
+    #[test]
+    fn expired_deadline_stops_descent_with_gate_results() {
+        let pool = ArenaPool::new();
+        let w = workers(2);
+        let metrics = Arc::new(ServingMetrics::default());
+        let (gp, ga) = lne_toy();
+        // threshold 1.1: every item passes the gate downstream
+        let gate = Stage::lne(
+            "gate",
+            gp,
+            ga,
+            &[1, 4],
+            &[],
+            Gate::ConfidenceBelow(1.1),
+            Transform::identity(),
+            &pool,
+            Arc::clone(&w),
+        )
+        .unwrap();
+        let (cp, ca) = lne_toy_big();
+        let heavy = Stage::lne(
+            "heavy",
+            cp,
+            ca,
+            &[1, 4],
+            &[],
+            Gate::ConfidenceBelow(0.0),
+            Transform { resize: Some(((2, 6, 6), (3, 8, 8))), renormalize: true },
+            &pool,
+            w,
+        )
+        .unwrap();
+        let mut cascade = Cascade::new("toy")
+            .push(gate)
+            .unwrap()
+            .push(heavy)
+            .unwrap()
+            .with_metrics(Arc::clone(&metrics));
+        let x = vec![0.3f32; 72];
+        let refs = [x.as_slice(), x.as_slice()];
+        // an already-expired deadline: stage 0 still runs (an item must
+        // have SOME result), stage 1 is skipped
+        let expired = std::time::Instant::now();
+        let preds = cascade.run_batch_deadline(2, &refs, Some(expired)).unwrap();
+        assert_eq!(preds.len(), 2);
+        for p in &preds {
+            assert_eq!(p.scores.len(), 3, "items keep the gate stage's result");
+        }
+        let snap = metrics.snapshot();
+        assert_eq!(snap.get("deadline_stops").as_i64(), Some(2));
+        // the heavy stage exists in the ledger (build-time arena record)
+        // but never executed a batch and never saw an item
+        let heavy_stats = snap.get("cascade_stages").get("toy/1:heavy");
+        assert_eq!(heavy_stats.get("batches").as_i64(), Some(0));
+        assert_eq!(heavy_stats.get("items_in").as_i64(), Some(0));
+        // without a deadline the same batch descends to the heavy stage
+        let full = cascade.run_batch_deadline(2, &refs, None).unwrap();
+        assert_eq!(full[0].scores.len(), 4);
     }
 
     /// Satellite: mixed cascade stage shapes on ONE shared pool. The

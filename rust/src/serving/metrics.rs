@@ -61,6 +61,26 @@ struct Inner {
     queue_age_ms: f64,
     /// High-water mark of the queue-age gauge.
     queue_age_ms_max: f64,
+    /// Requests shed at admission because the bounded queue was full
+    /// (each returned a typed `QueueFull` / HTTP 429).
+    shed_total: u64,
+    /// Requests evicted un-run because their deadline passed while
+    /// queued (each returned `DeadlineExceeded` / HTTP 504).
+    evicted_total: u64,
+    /// Requests that executed but finished past their deadline (served
+    /// late: delivered, counted — eviction only drops un-started work).
+    timeouts_total: u64,
+    /// Admission-queue depth observed at each successful submit (the
+    /// admitted request included).
+    admission_depth: Welford,
+    /// Flush count per replica index (which drains are doing the work).
+    replica_flushes: BTreeMap<usize, u64>,
+    /// Replicas executing concurrently, sampled as each batch dispatches
+    /// (max = observed replica-set concurrency).
+    replicas_busy: Welford,
+    /// Items whose cascade stopped descending stages because the batch
+    /// deadline passed (served with best-so-far stage results).
+    deadline_stops: u64,
     /// Per-cascade-stage accounting, keyed `"{cascade}/{idx}:{stage}"`
     /// (the index prefix keeps BTreeMap order = pipeline order).
     stages: BTreeMap<String, StageStats>,
@@ -110,31 +130,74 @@ pub struct ReplayRecord {
     pub trace_hit: bool,
 }
 
+/// One flushed batch's accounting, recorded by a replica drain after
+/// execution. A struct (not positional args) since the replica-set split
+/// grew the field count: bucket choice, queue state at flush, latencies,
+/// and which replica ran it at what set occupancy.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchRecord {
+    /// Chosen bucket (padded batch size).
+    pub bucket: usize,
+    /// Occupied lanes (requests actually in the batch).
+    pub size: usize,
+    /// Queue length the collector saw at flush (taken + deferred).
+    pub depth: usize,
+    /// Oldest batched request's time-in-queue at dispatch.
+    pub queue_ms: f64,
+    /// Backend execution wall-clock for the batch.
+    pub infer_ms: f64,
+    /// Age of the oldest request still waiting after this drain (0 when
+    /// the queue emptied — the queue-age gauge).
+    pub oldest_pending_ms: f64,
+    /// Replica drain that executed the batch.
+    pub replica: usize,
+    /// Replicas executing (this one included) when the batch dispatched.
+    pub busy: usize,
+    /// Requests in this batch that finished past their deadline.
+    pub late: usize,
+}
+
 impl ServingMetrics {
-    /// Record one flushed batch: `bucket` is the chosen bucket size,
-    /// `size` the occupied lanes, `depth` the queue length at flush, and
-    /// `oldest_pending_ms` the age of the oldest request still waiting
-    /// after this batch was drained (0 when the queue emptied — the
-    /// queue-age gauge).
-    pub fn record_batch(
-        &self,
-        bucket: usize,
-        size: usize,
-        depth: usize,
-        queue_ms: f64,
-        infer_ms: f64,
-        oldest_pending_ms: f64,
-    ) {
+    /// Record one flushed batch (see [`BatchRecord`] field docs).
+    pub fn record_batch(&self, r: &BatchRecord) {
         let mut i = self.inner.lock().unwrap();
-        i.requests += size as u64;
+        i.requests += r.size as u64;
         i.batches += 1;
-        i.queue_ms.push(queue_ms);
-        i.infer_ms.push(infer_ms);
-        i.batch_size.push(size as f64);
-        i.queue_depth.push(depth as f64);
-        i.queue_age_ms = oldest_pending_ms;
-        i.queue_age_ms_max = i.queue_age_ms_max.max(oldest_pending_ms);
-        *i.bucket_flushes.entry(bucket).or_insert(0) += 1;
+        i.queue_ms.push(r.queue_ms);
+        i.infer_ms.push(r.infer_ms);
+        i.batch_size.push(r.size as f64);
+        i.queue_depth.push(r.depth as f64);
+        i.queue_age_ms = r.oldest_pending_ms;
+        i.queue_age_ms_max = i.queue_age_ms_max.max(r.oldest_pending_ms);
+        i.timeouts_total += r.late as u64;
+        *i.bucket_flushes.entry(r.bucket).or_insert(0) += 1;
+        *i.replica_flushes.entry(r.replica).or_insert(0) += 1;
+        i.replicas_busy.push(r.busy as f64);
+    }
+
+    /// Record one request shed at admission (`depth` = the queue bound it
+    /// hit).
+    pub fn record_shed(&self, depth: usize) {
+        let mut i = self.inner.lock().unwrap();
+        i.shed_total += 1;
+        i.admission_depth.push(depth as f64);
+    }
+
+    /// Record one successful admission at the given resulting queue depth.
+    pub fn record_admission(&self, depth: usize) {
+        self.inner.lock().unwrap().admission_depth.push(depth as f64);
+    }
+
+    /// Record `n` requests evicted un-run at flush (deadline passed while
+    /// queued).
+    pub fn record_evicted(&self, n: usize) {
+        self.inner.lock().unwrap().evicted_total += n as u64;
+    }
+
+    /// Record `n` items whose cascade stopped descending stages on a
+    /// passed deadline.
+    pub fn record_deadline_stops(&self, n: usize) {
+        self.inner.lock().unwrap().deadline_stops += n as u64;
     }
 
     /// Record one plan replay on the shared worker pool. Allocation-free
@@ -215,6 +278,11 @@ impl ServingMetrics {
             .iter()
             .map(|(&b, &n)| (format!("b{b}"), Json::from(n as i64)))
             .collect();
+        let replica_flushes: BTreeMap<String, Json> = i
+            .replica_flushes
+            .iter()
+            .map(|(&r, &n)| (format!("r{r}"), Json::from(n as i64)))
+            .collect();
         let stages: BTreeMap<String, Json> = i
             .stages
             .iter()
@@ -269,9 +337,44 @@ impl ServingMetrics {
             ("replay_latency", Json::Obj(replay_latency)),
             ("queue_age_ms", Json::num(i.queue_age_ms)),
             ("queue_age_ms_max", Json::num(i.queue_age_ms_max)),
+            ("shed_total", Json::from(i.shed_total as i64)),
+            ("evicted_total", Json::from(i.evicted_total as i64)),
+            ("timeouts_total", Json::from(i.timeouts_total as i64)),
+            ("admission_depth_mean", Json::num(i.admission_depth.mean())),
+            ("admission_depth_max", Json::num(i.admission_depth.max)),
+            ("replica_flushes", Json::Obj(replica_flushes)),
+            ("replicas_busy_mean", Json::num(i.replicas_busy.mean())),
+            ("replicas_busy_max", Json::num(i.replicas_busy.max)),
+            ("deadline_stops", Json::from(i.deadline_stops as i64)),
             ("cascade_stages", Json::Obj(stages)),
         ])
     }
+}
+
+/// Render a metrics snapshot for terminal output (the CLI `serve`/`eval`
+/// printers): every top-level key on its own line, nested objects
+/// (per-bucket flushes, latency histograms, cascade stages) flattened one
+/// level as `key.sub`. Driven off the snapshot itself so a key added to
+/// [`ServingMetrics::snapshot`] shows up here without touching any
+/// printer — `render_covers_every_snapshot_key` pins that.
+pub fn render(snapshot: &Json) -> String {
+    let mut out = String::new();
+    let Some(map) = snapshot.as_obj() else {
+        return format!("{snapshot}\n");
+    };
+    for (k, v) in map {
+        match v.as_obj() {
+            Some(sub) if sub.is_empty() => out.push_str(&format!("  {k:<24} (empty)\n")),
+            Some(sub) => {
+                for (sk, sv) in sub {
+                    let label = format!("{k}.{sk}");
+                    out.push_str(&format!("  {label:<24} {sv}\n"));
+                }
+            }
+            None => out.push_str(&format!("  {k:<24} {v}\n")),
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -293,12 +396,26 @@ mod tests {
         }
     }
 
+    fn batch(bucket: usize, size: usize, depth: usize, queue_ms: f64, infer_ms: f64, oldest: f64) -> BatchRecord {
+        BatchRecord {
+            bucket,
+            size,
+            depth,
+            queue_ms,
+            infer_ms,
+            oldest_pending_ms: oldest,
+            replica: 0,
+            busy: 1,
+            late: 0,
+        }
+    }
+
     #[test]
     fn snapshot_aggregates() {
         let m = ServingMetrics::default();
-        m.record_batch(8, 8, 9, 1.0, 10.0, 2.5);
-        m.record_batch(8, 4, 4, 3.0, 6.0, 4.0);
-        m.record_batch(1, 1, 1, 0.5, 2.0, 0.0);
+        m.record_batch(&batch(8, 8, 9, 1.0, 10.0, 2.5));
+        m.record_batch(&batch(8, 4, 4, 3.0, 6.0, 4.0));
+        m.record_batch(&batch(1, 1, 1, 0.5, 2.0, 0.0));
         let s = m.snapshot();
         assert_eq!(s.get("requests").as_i64(), Some(13));
         assert_eq!(s.get("batches").as_i64(), Some(3));
@@ -311,6 +428,58 @@ mod tests {
         // queue-age gauge holds the last drain's value; max is the high-water
         assert!((s.get("queue_age_ms").as_f64().unwrap() - 0.0).abs() < 1e-9);
         assert!((s.get("queue_age_ms_max").as_f64().unwrap() - 4.0).abs() < 1e-9);
+        // per-replica flush attribution
+        assert_eq!(s.get("replica_flushes").get("r0").as_i64(), Some(3));
+    }
+
+    #[test]
+    fn admission_counters_aggregate() {
+        let m = ServingMetrics::default();
+        m.record_admission(1);
+        m.record_admission(3);
+        m.record_shed(4);
+        m.record_evicted(2);
+        m.record_deadline_stops(5);
+        let mut r = batch(2, 2, 2, 1.0, 2.0, 0.0);
+        r.replica = 1;
+        r.busy = 2;
+        r.late = 1;
+        m.record_batch(&r);
+        let s = m.snapshot();
+        assert_eq!(s.get("shed_total").as_i64(), Some(1));
+        assert_eq!(s.get("evicted_total").as_i64(), Some(2));
+        assert_eq!(s.get("timeouts_total").as_i64(), Some(1));
+        assert_eq!(s.get("deadline_stops").as_i64(), Some(5));
+        // admission depth saw 1, 3 and the shed at the bound 4
+        assert!((s.get("admission_depth_max").as_f64().unwrap() - 4.0).abs() < 1e-9);
+        assert!((s.get("admission_depth_mean").as_f64().unwrap() - 8.0 / 3.0).abs() < 1e-9);
+        assert_eq!(s.get("replica_flushes").get("r1").as_i64(), Some(1));
+        assert!((s.get("replicas_busy_max").as_f64().unwrap() - 2.0).abs() < 1e-9);
+    }
+
+    /// Metrics-drift guard (tier-1): every top-level key in the snapshot
+    /// is printed by `render`, the one formatter the CLI `serve`/`eval`
+    /// printouts use — a key added to `snapshot()` cannot silently skip
+    /// the operator-facing printers.
+    #[test]
+    fn render_covers_every_snapshot_key() {
+        let m = ServingMetrics::default();
+        m.record_batch(&batch(4, 3, 3, 1.0, 2.0, 0.5));
+        m.record_shed(2);
+        m.record_replay(&replay(4, 5.0, 1, 0, 2, false));
+        m.record_stage("kws", 0, "gate", 4, 1, 3, 2.0);
+        let snap = m.snapshot();
+        let text = render(&snap);
+        let keys = snap.as_obj().expect("snapshot is an object");
+        assert!(!keys.is_empty());
+        for k in keys.keys() {
+            assert!(text.contains(k.as_str()), "render dropped snapshot key {k}");
+        }
+        // nested sections are flattened, not swallowed
+        assert!(text.contains("bucket_flushes.b4"), "{text}");
+        assert!(text.contains("replica_flushes.r0"), "{text}");
+        assert!(text.contains("replay_latency.b4"), "{text}");
+        assert!(text.contains("cascade_stages.kws/0:gate"), "{text}");
     }
 
     #[test]

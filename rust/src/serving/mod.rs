@@ -5,14 +5,19 @@
 //! [`InferenceSession`] — the PJRT AOT executables and the LNE plan/arena
 //! path register side by side behind the same submit/submit_async surface.
 //!
-//! Requests are routed per model to a batcher thread that coalesces them
-//! into the backend's compiled batch buckets with a flush deadline; LNE
+//! Requests are routed per model through a bounded **admission queue**
+//! (typed load shedding via [`SubmitError`], per-request deadlines with
+//! eviction at flush) into a **replica set** of drain threads that
+//! coalesce them into the backend's compiled batch buckets with a flush
+//! deadline — continuous batching: with more than one replica the next
+//! batch assembles while the previous one executes (DESIGN.md §14). LNE
 //! sessions check their per-bucket arenas out of a cross-model
 //! [`ArenaPool`] (largest bucket first, so compatible profiles borrow the
-//! larger arena) and replay on the router's one shared [`WorkerPool`]
+//! larger arena; secondary replicas take exclusive arenas so they never
+//! lock-serialize) and replay on the router's one shared [`WorkerPool`]
 //! through the dep-counted work-stealing scheduler with intra-op GEMM
 //! partitioning (DESIGN.md §8) — total compute threads stay bounded by
-//! the machine, not by registered models.
+//! the machine, not by registered models or replicas.
 
 pub mod batcher;
 pub mod cascade;
@@ -21,7 +26,7 @@ pub mod pool;
 pub mod server;
 pub mod session;
 
-pub use batcher::{BatcherConfig, DynamicBatcher, Prediction, Ticket};
+pub use batcher::{BatcherConfig, DynamicBatcher, Prediction, SubmitError, Ticket};
 pub use cascade::{Cascade, Gate, Stage, Transform};
 pub use metrics::ServingMetrics;
 pub use pool::WorkerPool;
@@ -115,10 +120,24 @@ impl ModelRouter {
         session: Box<dyn InferenceSession>,
         cfg: BatcherConfig,
     ) -> Result<(), String> {
+        self.register_session_set(name, vec![session], cfg)
+    }
+
+    /// Register a replica set under `name`: every session in `sessions`
+    /// is a replica of the same model (same buckets/input/classes), each
+    /// moved onto its own drain thread behind one shared admission queue.
+    /// With more than one replica the batcher coalesces the next batch
+    /// while earlier ones execute (continuous batching).
+    pub fn register_session_set(
+        &mut self,
+        name: &str,
+        sessions: Vec<Box<dyn InferenceSession>>,
+        cfg: BatcherConfig,
+    ) -> Result<(), String> {
         if self.batchers.contains_key(name) {
             return Err(format!("model '{name}' already registered"));
         }
-        let batcher = DynamicBatcher::start(name, session, cfg, Arc::clone(&self.metrics))?;
+        let batcher = DynamicBatcher::start_set(name, sessions, cfg, Arc::clone(&self.metrics))?;
         if self.default_model.is_empty() {
             self.default_model = name.to_string();
         }
@@ -174,8 +193,11 @@ impl ModelRouter {
     }
 
     /// Register an LNE-backed model: one `ExecPlan` per bucket in
-    /// `batches`, arenas checked out of this router's shared pool, replays
-    /// dispatched to the router's shared worker pool.
+    /// `batches` per replica (`cfg.replicas`, min 1), replays dispatched
+    /// to the router's shared worker pool. Replica 0 checks its arenas
+    /// out of the shared pool exactly as a single-replica model always
+    /// has (bit-exact default); further replicas take exclusive arenas so
+    /// concurrent replays never lock-serialize on a lent arena.
     pub fn register_lne(
         &mut self,
         name: &str,
@@ -185,16 +207,32 @@ impl ModelRouter {
         classes: &[String],
         cfg: BatcherConfig,
     ) -> Result<(), String> {
-        let session = LneSession::new(
-            prepared,
-            assignment,
-            batches,
-            classes,
-            &self.arena_pool,
-            Arc::clone(&self.worker_pool),
-        )?
-        .with_metrics(Arc::clone(&self.metrics));
-        self.register_session(name, Box::new(session), cfg)
+        let replicas = cfg.replicas.max(1);
+        let mut sessions: Vec<Box<dyn InferenceSession>> = Vec::with_capacity(replicas);
+        for r in 0..replicas {
+            let session = if r == 0 {
+                LneSession::new(
+                    Arc::clone(&prepared),
+                    assignment.clone(),
+                    batches,
+                    classes,
+                    &self.arena_pool,
+                    Arc::clone(&self.worker_pool),
+                )?
+            } else {
+                LneSession::new_exclusive(
+                    Arc::clone(&prepared),
+                    assignment.clone(),
+                    batches,
+                    classes,
+                    &self.arena_pool,
+                    Arc::clone(&self.worker_pool),
+                )?
+            }
+            .with_metrics(Arc::clone(&self.metrics));
+            sessions.push(Box::new(session));
+        }
+        self.register_session_set(name, sessions, cfg)
     }
 
     pub fn models(&self) -> Vec<String> {
@@ -226,15 +264,41 @@ impl ModelRouter {
         Ok(self.batcher(model)?.classes().len())
     }
 
+    /// Replica drains serving a model (None = default model).
+    pub fn replicas(&self, model: Option<&str>) -> Result<usize, String> {
+        Ok(self.batcher(model)?.replicas())
+    }
+
+    fn route(
+        &self,
+        model: Option<&str>,
+    ) -> Result<&DynamicBatcher<Box<dyn InferenceSession>>, SubmitError> {
+        self.batcher(model).map_err(SubmitError::Rejected)
+    }
+
     /// Route one request (blocking until the prediction is ready).
-    pub fn infer(&self, model: Option<&str>, input: Vec<f32>) -> Result<Prediction, String> {
-        self.batcher(model)?.submit(input)
+    pub fn infer(&self, model: Option<&str>, input: Vec<f32>) -> Result<Prediction, SubmitError> {
+        self.route(model)?.submit(input)
     }
 
     /// Route one request asynchronously: returns a [`Ticket`] immediately,
     /// so the caller thread is free while the batch coalesces and runs.
-    pub fn infer_async(&self, model: Option<&str>, input: Vec<f32>) -> Result<Ticket, String> {
-        self.batcher(model)?.submit_async(input)
+    pub fn infer_async(&self, model: Option<&str>, input: Vec<f32>) -> Result<Ticket, SubmitError> {
+        self.route(model)?.submit_async(input)
+    }
+
+    /// Route one request asynchronously with a per-request deadline:
+    /// still queued when it passes → evicted with
+    /// [`SubmitError::DeadlineExceeded`]; staged backends also stop
+    /// descending stages once it passes. `None` falls back to the model's
+    /// configured `deadline_ms`.
+    pub fn infer_async_with(
+        &self,
+        model: Option<&str>,
+        input: Vec<f32>,
+        deadline: Option<std::time::Duration>,
+    ) -> Result<Ticket, SubmitError> {
+        self.route(model)?.submit_async_with(input, deadline)
     }
 }
 
@@ -355,6 +419,50 @@ mod tests {
         assert_eq!(pred2.class_id, pred.class_id);
         assert_eq!(pred2.class, names[pred2.class_id]);
         assert!(router.infer(Some("nope"), vec![0.0; 72]).is_err());
+    }
+
+    /// A replicated LNE model: `cfg.replicas = 2` builds two full
+    /// sessions behind one admission queue — two arenas in the pool (no
+    /// lock-serialization between replicas), same predictions as a
+    /// single-replica router, replica count surfaced to callers.
+    #[test]
+    fn router_serves_replicated_lne_model() {
+        let (p1, a1) = lne_toy();
+        let mut single = ModelRouter::with_threads(1);
+        single
+            .register_lne("m", p1, a1, &[1, 4], &[], BatcherConfig { max_wait_ms: 1.0, ..Default::default() })
+            .unwrap();
+        let want = single.infer(None, vec![0.3; 72]).unwrap();
+
+        let (p2, a2) = lne_toy();
+        let mut router = ModelRouter::with_threads(1);
+        router
+            .register_lne(
+                "m",
+                p2,
+                a2,
+                &[1, 4],
+                &[],
+                BatcherConfig { max_wait_ms: 1.0, replicas: 2, ..Default::default() },
+            )
+            .unwrap();
+        assert_eq!(router.replicas(None).unwrap(), 2);
+        // replica 0 shares through the pool as before; replica 1 owns an
+        // exclusive arena -> 2 arenas, not replicas x buckets = 4
+        assert_eq!(router.arena_pool.arena_count(), 2);
+        std::thread::scope(|s| {
+            let router = &router;
+            let handles: Vec<_> = (0..6)
+                .map(|_| s.spawn(move || router.infer(None, vec![0.3; 72]).unwrap()))
+                .collect();
+            for h in handles {
+                let p = h.join().unwrap();
+                assert_eq!(p.class_id, want.class_id);
+                assert_eq!(p.scores, want.scores, "replicas diverged from single-replica");
+            }
+        });
+        let snap = router.metrics.snapshot();
+        assert_eq!(snap.get("requests").as_i64(), Some(6));
     }
 
     /// `replace_session` is the explicit swap API: unknown names error

@@ -9,6 +9,15 @@
 //! machine, not by models × branches. A session keys its cached traces
 //! by this pool's thread count — resizing means a new router, so traces
 //! can never replay on a pool they weren't recorded for.
+//!
+//! Replica sets (DESIGN.md §14) share this pool too: each replica drain
+//! dispatches its replays here, so running N replicas of a model
+//! interleaves their wavefronts on the same bounded worker set —
+//! continuous batching overlaps *coalescing* with execution and overlaps
+//! replica replays with each other, without multiplying compute threads.
+//! Replicas keep exclusive arenas precisely so the only contention
+//! between concurrent replays is this pool's scheduling, never an arena
+//! lock.
 
 use crate::util::threadpool::ThreadPool;
 

@@ -2,20 +2,37 @@
 //!
 //! POST /v1/kws    {"audio": [f32; N]} or
 //!                 {"synthesize": {"class": 3, "seed": 7}}   (load-gen aid)
-//!                 optional "model": "<name>"
+//!                 optional "model": "<name>", "deadline_ms": 50
 //! GET  /v1/models
 //! GET  /metrics
 //!
 //! The handler is backend-agnostic: it asks the [`ModelRouter`] for the
 //! routed model's expected input length and classes, so PJRT and LNE
-//! models serve through the same endpoint.
+//! models serve through the same endpoint. Admission failures map to
+//! typed statuses with JSON bodies ([`SubmitError::http_status`]): a full
+//! bounded queue sheds with 429, an expired deadline answers 504, a
+//! closed batcher 503 — overload degrades loudly instead of queueing
+//! unboundedly.
 
-use super::ModelRouter;
+use super::{ModelRouter, SubmitError};
 use crate::http::{Response, Router, Server};
 use crate::ingestion::synth;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 use std::sync::Arc;
+
+/// JSON error body for a typed admission/backend failure, at the status
+/// the error maps to (429 shed, 504 deadline, 503 closed, 400 rejected,
+/// 500 backend).
+fn submit_error(e: &SubmitError) -> Response {
+    Response::json(
+        e.http_status(),
+        &Json::obj(vec![
+            ("error", Json::str(e.code())),
+            ("message", Json::str(e.to_string())),
+        ]),
+    )
+}
 
 pub struct KwsServer;
 
@@ -61,8 +78,19 @@ impl KwsServer {
                     audio.len()
                 ));
             }
-            match s.infer(model.as_deref(), audio) {
-                Err(e) => Response::error(&e),
+            // optional per-request deadline (milliseconds); overrides the
+            // model's configured default when present
+            let deadline = body
+                .get("deadline_ms")
+                .as_f64()
+                .filter(|&d| d > 0.0)
+                .map(|d| std::time::Duration::from_secs_f64(d / 1e3));
+            let ticket = match s.infer_async_with(model.as_deref(), audio, deadline) {
+                Ok(t) => t,
+                Err(e) => return submit_error(&e),
+            };
+            match ticket.wait() {
+                Err(e) => submit_error(&e),
                 Ok(p) => Response::json(
                     200,
                     &Json::obj(vec![
@@ -201,6 +229,44 @@ mod tests {
         let m = metrics.json().unwrap();
         assert_eq!(m.get("requests").as_i64(), Some(1));
         assert!(m.get("bucket_flushes").get("b1").as_i64().unwrap_or(0) >= 1);
+        server.stop();
+    }
+
+    /// A request whose deadline expires while it coalesces is answered
+    /// 504 with a typed JSON body, and `/metrics` counts the eviction —
+    /// the HTTP face of deadline-aware eviction.
+    #[test]
+    fn http_expired_deadline_answers_504() {
+        let (p, a) = lne_toy();
+        let mut router = ModelRouter::new();
+        // only a 4-bucket with a long flush wait: a lone request sits in
+        // the coalescing window well past its 5ms deadline
+        router
+            .register_lne(
+                "toy",
+                p,
+                a,
+                &[4],
+                &[],
+                BatcherConfig { max_wait_ms: 60.0, ..Default::default() },
+            )
+            .unwrap();
+        let serving = Arc::new(router);
+        let mut server = KwsServer::serve(Arc::clone(&serving), "127.0.0.1:0", 2).unwrap();
+        let base = format!("http://{}", server.addr);
+
+        let audio: Vec<String> = (0..72).map(|_| "0.1".to_string()).collect();
+        let resp = client::post_json(
+            &format!("{base}/v1/kws"),
+            &Json::parse(&format!(r#"{{"audio": [{}], "deadline_ms": 5}}"#, audio.join(",")))
+                .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(resp.status, 504, "{}", resp.text());
+        let body = resp.json().unwrap();
+        assert_eq!(body.get("error").as_str(), Some("deadline_exceeded"));
+        let metrics = client::get(&format!("{base}/metrics")).unwrap();
+        assert_eq!(metrics.json().unwrap().get("evicted_total").as_i64(), Some(1));
         server.stop();
     }
 }

@@ -41,6 +41,20 @@ pub trait InferenceSession: Send + 'static {
     /// `bucket` one of `buckets()`) and return one prediction per input.
     /// `latency_ms`/`batch_size` are filled in by the batcher.
     fn run_batch(&mut self, bucket: usize, inputs: &[&[f32]]) -> Result<Vec<Prediction>, String>;
+
+    /// Deadline-aware variant: `deadline` is the batch's tightest member
+    /// deadline (absolute). Single-shot backends ignore it — once a batch
+    /// starts, finishing is cheapest. Staged backends ([`Cascade`]
+    /// (super::Cascade)) override it to stop descending stages once the
+    /// deadline passes, returning best-so-far predictions.
+    fn run_batch_deadline(
+        &mut self,
+        bucket: usize,
+        inputs: &[&[f32]],
+        _deadline: Option<Instant>,
+    ) -> Result<Vec<Prediction>, String> {
+        self.run_batch(bucket, inputs)
+    }
 }
 
 impl InferenceSession for Box<dyn InferenceSession> {
@@ -55,6 +69,14 @@ impl InferenceSession for Box<dyn InferenceSession> {
     }
     fn run_batch(&mut self, bucket: usize, inputs: &[&[f32]]) -> Result<Vec<Prediction>, String> {
         (**self).run_batch(bucket, inputs)
+    }
+    fn run_batch_deadline(
+        &mut self,
+        bucket: usize,
+        inputs: &[&[f32]],
+        deadline: Option<Instant>,
+    ) -> Result<Vec<Prediction>, String> {
+        (**self).run_batch_deadline(bucket, inputs, deadline)
     }
 }
 
@@ -216,6 +238,36 @@ impl LneSession {
         pool: &ArenaPool,
         workers: Arc<WorkerPool>,
     ) -> Result<LneSession, String> {
+        Self::build(prepared, assignment, batches, classes, pool, workers, false)
+    }
+
+    /// Like [`new`](LneSession::new), but every bucket gets an arena no
+    /// other live session holds: secondary replicas in a replica set must
+    /// not lock-serialize their replays on a shared arena, which is the
+    /// whole point of running replicas. The arenas are still registered in
+    /// `pool` (accounting, and later sessions may borrow them when idle);
+    /// within the session, smaller buckets still borrow the largest
+    /// bucket's exclusive arena.
+    pub fn new_exclusive(
+        prepared: Arc<Prepared>,
+        assignment: Assignment,
+        batches: &[usize],
+        classes: &[String],
+        pool: &ArenaPool,
+        workers: Arc<WorkerPool>,
+    ) -> Result<LneSession, String> {
+        Self::build(prepared, assignment, batches, classes, pool, workers, true)
+    }
+
+    fn build(
+        prepared: Arc<Prepared>,
+        assignment: Assignment,
+        batches: &[usize],
+        classes: &[String],
+        pool: &ArenaPool,
+        workers: Arc<WorkerPool>,
+        exclusive: bool,
+    ) -> Result<LneSession, String> {
         let (c, h, w) = prepared.graph.input;
         let input_len = c * h * w;
         let mut sizes: Vec<usize> = batches.iter().copied().filter(|&b| b > 0).collect();
@@ -224,10 +276,20 @@ impl LneSession {
         if sizes.is_empty() {
             return Err("no batch buckets given".into());
         }
-        let mut buckets = Vec::with_capacity(sizes.len());
+        let mut buckets: Vec<LneBucket> = Vec::with_capacity(sizes.len());
         for &b in sizes.iter().rev() {
             let plan = prepared.plan(&assignment, b)?;
-            let arena = pool.checkout(&plan);
+            let arena = if exclusive {
+                // reuse an arena this session already owns exclusively
+                // (largest-first order: the big bucket's arena covers the
+                // smaller ones), else allocate fresh
+                match buckets.iter().find(|eb| eb.plan.profile().covers(&plan.profile())) {
+                    Some(eb) => SharedArena::clone(&eb.arena),
+                    None => pool.checkout_exclusive(&plan),
+                }
+            } else {
+                pool.checkout(&plan)
+            };
             let staging = Tensor::zeros(&[b, c, h, w]);
             buckets.push(LneBucket { batch: b, plan, staging, arena, trace: None });
         }
@@ -500,6 +562,30 @@ pub(crate) mod tests {
         assert_eq!(pool.arena_count(), 1);
         assert!(pool.arena_count() < models_x_buckets);
         assert_eq!(s1.peak_bytes(), s2.peak_bytes());
+    }
+
+    /// Replica sessions built with `new_exclusive` get their own arenas
+    /// (no lock-serialization between replicas), still registered in the
+    /// pool, while in-session bucket lending keeps it at one arena per
+    /// replica — and predictions stay identical across replicas.
+    #[test]
+    fn exclusive_replicas_get_distinct_arenas() {
+        let (p, a) = lne_toy();
+        let pool = ArenaPool::new();
+        let mut s1 =
+            LneSession::new(Arc::clone(&p), a.clone(), &[1, 4], &[], &pool, workers()).unwrap();
+        assert_eq!(pool.arena_count(), 1);
+        let mut s2 =
+            LneSession::new_exclusive(Arc::clone(&p), a.clone(), &[1, 4], &[], &pool, workers())
+                .unwrap();
+        // the exclusive replica allocated its own arena instead of
+        // borrowing s1's: one arena per replica, not per bucket
+        assert_eq!(pool.arena_count(), 2);
+        let mut rng = Rng::new(17);
+        let sample = Tensor::randn(&[2, 6, 6], 1.0, &mut rng).data;
+        let p1 = s1.run_batch(1, &[sample.as_slice()]).unwrap();
+        let p2 = s2.run_batch(1, &[sample.as_slice()]).unwrap();
+        assert_eq!(p1[0].scores, p2[0].scores);
     }
 
     /// An all-int8 conv chain served through `LneSession`: the compiled

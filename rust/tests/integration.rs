@@ -397,6 +397,150 @@ fn cascade_early_exit_serving_is_bit_exact_with_manual_staging() {
     }
 }
 
+/// Hot backend swap under concurrent load (DESIGN.md §14): tickets in
+/// flight on the OLD replica set when `replace_session` runs must all
+/// resolve — the old drains own the queue receiver and finish the backlog
+/// before exiting — while the name immediately serves from the new
+/// backend (observable through its distinct class names). Waits are
+/// bounded (`Ticket::wait_timeout`), so a dropped backlog fails the test
+/// instead of hanging it.
+#[test]
+fn replace_session_under_load_resolves_in_flight_tickets() {
+    use bonseyes::lne::platform::Platform;
+    use bonseyes::nas::evaluator::lne_prepared;
+    use bonseyes::nas::space::paper_arch;
+    use bonseyes::serving::{BatcherConfig, LneSession, ModelRouter, Ticket};
+    use bonseyes::tensor::Tensor;
+    use bonseyes::util::rng::Rng;
+    use std::time::Duration;
+
+    let arch = paper_arch("kws9").unwrap();
+    let (p, a) = lne_prepared(&arch, 3, Platform::pi4()).unwrap();
+    let (c, h, w) = p.graph.input;
+    let mut router = ModelRouter::with_threads(2);
+    // a long coalescing window keeps the submissions queued on the old
+    // batcher while the swap happens underneath them
+    router
+        .register_lne(
+            "kws9",
+            Arc::clone(&p),
+            a.clone(),
+            &[1, 4],
+            &[],
+            BatcherConfig { max_wait_ms: 200.0, ..Default::default() },
+        )
+        .unwrap();
+    let mut rng = Rng::new(9);
+    let tickets: Vec<Ticket> = (0..6)
+        .map(|_| {
+            let s = Tensor::randn(&[c, h, w], 1.0, &mut rng).data;
+            router.infer_async(None, s).unwrap()
+        })
+        .collect();
+
+    // swap the backend while those are in flight
+    let swap_classes: Vec<String> = (0..12).map(|i| format!("swap_{i}")).collect();
+    let session = LneSession::new(
+        Arc::clone(&p),
+        a.clone(),
+        &[1, 4],
+        &swap_classes,
+        &router.arena_pool,
+        Arc::clone(&router.worker_pool),
+    )
+    .unwrap();
+    router
+        .replace_session(
+            "kws9",
+            Box::new(session),
+            BatcherConfig { max_wait_ms: 1.0, ..Default::default() },
+        )
+        .unwrap();
+
+    // every in-flight ticket resolves from the old set's drained backlog
+    for t in &tickets {
+        let pred = t
+            .wait_timeout(Duration::from_secs(5))
+            .expect("in-flight ticket must resolve across replace_session");
+        assert_eq!(pred.scores.len(), 12);
+        assert!(!pred.class.starts_with("swap_"), "old backlog served by old backend");
+    }
+    // and the name now serves from the new backend
+    let s = Tensor::randn(&[c, h, w], 1.0, &mut rng).data;
+    let pred = router.infer(Some("kws9"), s).unwrap();
+    assert!(pred.class.starts_with("swap_"), "swapped backend must answer: {}", pred.class);
+}
+
+/// Load shedding at the router level is deterministic and non-blocking:
+/// with a tiny bounded admission queue, a burst of async submissions
+/// never blocks the submitting thread and every request either resolves
+/// OK or fails fast with the typed `QueueFull` — nothing is silently
+/// dropped, and the metrics ledger matches the caller's own counts.
+#[test]
+fn bounded_admission_sheds_bursts_without_blocking() {
+    use bonseyes::lne::platform::Platform;
+    use bonseyes::nas::evaluator::lne_prepared;
+    use bonseyes::nas::space::paper_arch;
+    use bonseyes::serving::{BatcherConfig, ModelRouter, SubmitError};
+    use bonseyes::tensor::Tensor;
+    use bonseyes::util::rng::Rng;
+    use std::time::Instant;
+
+    let arch = paper_arch("kws9").unwrap();
+    let (p, a) = lne_prepared(&arch, 3, Platform::pi4()).unwrap();
+    let (c, h, w) = p.graph.input;
+    let mut router = ModelRouter::with_threads(2);
+    router
+        .register_lne(
+            "kws9",
+            p,
+            a,
+            &[1],
+            &[],
+            BatcherConfig {
+                max_wait_ms: 0.0,
+                max_batch: 1,
+                queue_cap: Some(2),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+
+    let mut rng = Rng::new(21);
+    let burst = 64usize;
+    let t0 = Instant::now();
+    let mut admitted = Vec::new();
+    let mut shed = 0u64;
+    for _ in 0..burst {
+        let s = Tensor::randn(&[c, h, w], 1.0, &mut rng).data;
+        match router.infer_async(None, s) {
+            Ok(t) => admitted.push(t),
+            Err(SubmitError::QueueFull { cap }) => {
+                assert_eq!(cap, 2);
+                shed += 1;
+            }
+            Err(e) => panic!("burst must shed with QueueFull, got {e}"),
+        }
+    }
+    // admission never blocked on inference (the burst is orders of
+    // magnitude faster to submit than to serve)
+    assert!(t0.elapsed().as_secs_f64() < 5.0, "submission loop blocked");
+    assert!(shed >= 1, "cap-2 queue must shed a 64-burst");
+    assert_eq!(admitted.len() as u64 + shed, burst as u64, "no request unaccounted");
+
+    // every admitted ticket resolves OK — shedding never eats admitted work
+    for t in admitted.iter() {
+        let pred = t
+            .wait_timeout(std::time::Duration::from_secs(10))
+            .expect("admitted ticket must resolve");
+        assert_eq!(pred.scores.len(), 12);
+    }
+    let snap = router.metrics.snapshot();
+    assert_eq!(snap.get("shed_total").as_i64(), Some(shed as i64));
+    assert_eq!(snap.get("requests").as_i64(), Some(admitted.len() as i64));
+    assert_eq!(snap.get("evicted_total").as_i64(), Some(0));
+}
+
 /// Wavefront-parallel serving end to end: a branchy model (inceptionette)
 /// served through routers whose shared worker pools have 1 / 2 / 4
 /// threads must produce identical predictions — the planner's
