@@ -4,9 +4,11 @@
 //!
 //! A small deterministic sweep picks the packed-GEMM tile parameters
 //! `(mc, kc, nc, mr, nr)` for a platform profile and caches the winner in
-//! a process-wide map keyed by `Platform::name` (through `Platform::all()`
-//! names — the same namespace the CLI validates against). Two invariants
-//! keep this safe:
+//! a process-wide map keyed by `(Platform::name, KernelBackend::name)` —
+//! the backend joined the key when the SIMD microkernels landed, because a
+//! register tile tuned for the scalar kernel (where wider `nr` mostly
+//! costs) is generally wrong for AVX2/NEON (where wider `nr` feeds vector
+//! lanes). Three invariants keep this safe:
 //!
 //! 1. **`kc` is pinned to the profile's `Blocking::kc`.** Of the five tile
 //!    parameters, only `kc` affects each output element's FP accumulation
@@ -19,13 +21,20 @@
 //!    candidates; large-cache profiles only see `nc >= 128`. pi3 and pi4
 //!    therefore structurally diverge regardless of what the timing says on
 //!    the (single) host CPU the simulation runs on.
+//! 3. **Winners are keyed — and swept — per backend.** The sweep times
+//!    the backend that will run the winner (`gemm_packed_with`), and the
+//!    persisted file carries a schema version: v1 files (flat, keyed by
+//!    platform name alone, written before the backend dimension existed)
+//!    fail the schema gate and silently fall back to the sweep rather
+//!    than letting a scalar-tuned winner pin the SIMD kernels.
 //!
-//! The cache lock is held across the sweep: the first caller for a profile
+//! The cache lock is held across the sweep: the first caller for a key
 //! does the timing while any racing callers wait and then read the cached
-//! winner, so one process always uses one parameter set per profile.
+//! winner, so one process always uses one parameter set per key.
 
 use super::platform::Platform;
-use super::primitives::gemm::{bpack_words, gemm_packed, pack_a, PackParams};
+use super::primitives::gemm::{bpack_words, gemm_packed_with, pack_a, PackParams};
+use super::primitives::simd::{KernelBackend, BACKEND_NAMES};
 use crate::testing::randn_vec;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -34,13 +43,29 @@ use std::path::{Path, PathBuf};
 use std::sync::{Mutex, OnceLock};
 use std::time::Instant;
 
+/// On-disk cache schema. v1 was a flat object keyed by platform name
+/// alone; v2 wraps `{"schema": 2, "entries": {"<platform>/<backend>":
+/// {mc,kc,nc,mr,nr}}}`. Bump whenever the key namespace or entry shape
+/// changes so stale files cost a sweep instead of changing behavior.
+pub const SCHEMA_VERSION: usize = 2;
+
 fn cache() -> &'static Mutex<HashMap<String, PackParams>> {
     static CACHE: OnceLock<Mutex<HashMap<String, PackParams>>> = OnceLock::new();
     CACHE.get_or_init(|| Mutex::new(HashMap::new()))
 }
 
+/// Composite cache key: `"<platform>/<backend>"`. `/` never appears in
+/// either component (platform names are CLI identifiers, backend names
+/// come from [`BACKEND_NAMES`]), so the key parses back unambiguously.
+pub fn cache_key(p: &Platform, backend: KernelBackend) -> String {
+    format!("{}/{}", p.name, backend.name())
+}
+
 /// Candidate tile tuples for a profile. `kc` is always the profile's
 /// blocking `kc` (see module doc); the rest scale with the cache class.
+/// The set is backend-independent — every candidate draws from
+/// `SUPPORTED_TILES`, which all backends implement — only the *winner*
+/// is backend-specific.
 pub fn candidates(p: &Platform) -> Vec<PackParams> {
     let kc = p.blocking.kc;
     if p.blocking.nc <= 64 {
@@ -60,26 +85,29 @@ pub fn candidates(p: &Platform) -> Vec<PackParams> {
     }
 }
 
-/// Tile parameters for a profile: the in-process cache wins, then a
-/// persisted winner from the on-disk cache (so cold processes skip the
-/// sweep), then the timed sweep — whose winner is written back to disk
-/// best-effort. Deterministic in-process (first writer wins under the
-/// lock); bit-identical across processes because every candidate shares
-/// `kc` (the only numerics-relevant parameter).
+/// Tile parameters for a profile under the currently active backend: the
+/// in-process cache wins, then a persisted winner from the on-disk cache
+/// (so cold processes skip the sweep), then the timed sweep — whose
+/// winner is written back to disk best-effort. Deterministic in-process
+/// (first writer wins under the lock); bit-identical across processes
+/// and backends because every candidate shares `kc` (the only
+/// numerics-relevant parameter).
 pub fn pack_params_for(p: &Platform) -> PackParams {
+    let backend = KernelBackend::active();
+    let key = cache_key(p, backend);
     let mut map = cache().lock().unwrap();
-    if let Some(params) = map.get(&p.name) {
+    if let Some(params) = map.get(&key) {
         return *params;
     }
     let dir = cache_dir();
-    if let Some(params) = dir.as_deref().and_then(|d| load_from(d).remove(&p.name)) {
-        map.insert(p.name.clone(), params);
+    if let Some(params) = dir.as_deref().and_then(|d| load_from(d).remove(&key)) {
+        map.insert(key, params);
         return params;
     }
-    let best = sweep(&candidates(p));
-    map.insert(p.name.clone(), best);
+    let best = sweep(&candidates(p), backend);
+    map.insert(key.clone(), best);
     if let Some(d) = dir.as_deref() {
-        store_to(d, &p.name, best);
+        store_to(d, &key, best);
     }
     best
 }
@@ -101,12 +129,15 @@ fn cache_file(dir: &Path) -> PathBuf {
     dir.join("autotune.json")
 }
 
-/// Load persisted winners from `dir` (`autotune.json`, an object keyed by
-/// platform name). Anything unreadable, unparseable, for an unknown
-/// profile, or not an exact member of that profile's *current* candidate
-/// set is silently dropped — the membership check re-establishes every
-/// structural invariant (pinned `kc`, supported tile, cache class), so a
-/// corrupt or stale file can never change behavior, only cost a sweep.
+/// Load persisted winners from `dir` (`autotune.json`, schema v2: an
+/// `entries` object keyed by `"<platform>/<backend>"`). Anything with the
+/// wrong schema version (including pre-backend v1 flat files), an
+/// unreadable or unparseable body, an unknown platform or backend in the
+/// key, or an entry that is not an exact member of that platform's
+/// *current* candidate set is silently dropped — the membership check
+/// re-establishes every structural invariant (pinned `kc`, supported
+/// tile, cache class), so a corrupt, foreign or stale file can never
+/// change behavior, only cost a sweep.
 pub fn load_from(dir: &Path) -> HashMap<String, PackParams> {
     let mut out = HashMap::new();
     let Ok(text) = std::fs::read_to_string(cache_file(dir)) else {
@@ -115,13 +146,22 @@ pub fn load_from(dir: &Path) -> HashMap<String, PackParams> {
     let Ok(json) = Json::parse(&text) else {
         return out;
     };
-    let Some(obj) = json.as_obj() else {
+    if json.get("schema").as_usize() != Some(SCHEMA_VERSION) {
+        return out; // v1 flat files (no schema field) land here too
+    }
+    let Some(entries) = json.get("entries").as_obj() else {
         return out;
     };
-    for (name, v) in obj {
-        let Some(p) = Platform::by_name(name) else {
+    for (key, v) in entries {
+        let Some((pname, bname)) = key.split_once('/') else {
             continue;
         };
+        let Some(p) = Platform::by_name(pname) else {
+            continue;
+        };
+        if !BACKEND_NAMES.contains(&bname) {
+            continue;
+        }
         let fields =
             [v.get("mc"), v.get("kc"), v.get("nc"), v.get("mr"), v.get("nr")].map(|f| f.as_usize());
         let [Some(mc), Some(kc), Some(nc), Some(mr), Some(nr)] = fields else {
@@ -129,21 +169,21 @@ pub fn load_from(dir: &Path) -> HashMap<String, PackParams> {
         };
         let cand = PackParams { mc, kc, nc, mr, nr };
         if candidates(&p).contains(&cand) {
-            out.insert(name.clone(), cand);
+            out.insert(key.clone(), cand);
         }
     }
     out
 }
 
-/// Best-effort merge-write of one profile's winner into `dir`'s cache
-/// file, preserving other profiles' entries. IO errors are swallowed:
-/// persistence is an optimization, never a requirement.
-pub fn store_to(dir: &Path, name: &str, params: PackParams) {
+/// Best-effort merge-write of one `"<platform>/<backend>"` key's winner
+/// into `dir`'s cache file, preserving other keys' entries. IO errors
+/// are swallowed: persistence is an optimization, never a requirement.
+pub fn store_to(dir: &Path, key: &str, params: PackParams) {
     let mut all = load_from(dir);
-    all.insert(name.to_string(), params);
-    let mut names: Vec<&String> = all.keys().collect();
-    names.sort();
-    let entries: Vec<(&str, Json)> = names
+    all.insert(key.to_string(), params);
+    let mut keys: Vec<&String> = all.keys().collect();
+    keys.sort();
+    let entries: Vec<(&str, Json)> = keys
         .iter()
         .map(|n| {
             let p = all[*n];
@@ -159,13 +199,18 @@ pub fn store_to(dir: &Path, name: &str, params: PackParams) {
             )
         })
         .collect();
+    let body = Json::obj(vec![
+        ("schema", Json::from(SCHEMA_VERSION)),
+        ("entries", Json::obj(entries)),
+    ]);
     let _ = std::fs::create_dir_all(dir);
-    let _ = std::fs::write(cache_file(dir), Json::obj(entries).to_string());
+    let _ = std::fs::write(cache_file(dir), body.to_string());
 }
 
-/// Time each candidate on a synthetic conv-shaped GEMM; minimum of three
-/// timed reps wins, first candidate wins ties (stable ordering).
-fn sweep(cands: &[PackParams]) -> PackParams {
+/// Time each candidate on a synthetic conv-shaped GEMM under the backend
+/// the winner will be keyed to; minimum of three timed reps wins, first
+/// candidate wins ties (stable ordering).
+fn sweep(cands: &[PackParams], backend: KernelBackend) -> PackParams {
     let (m, n) = (64usize, 256usize);
     let k = cands[0].kc.min(256);
     let mut rng = Rng::new(0xA070);
@@ -178,11 +223,11 @@ fn sweep(cands: &[PackParams]) -> PackParams {
         let pa = pack_a(m, k, &a, cand.mr);
         let mut bpack = vec![0.0f32; bpack_words(cand)];
         // warm-up rep outside the clock
-        gemm_packed(k, n, 0..m, &pa, &b, None, &mut c, cand, &mut bpack);
+        gemm_packed_with(backend, k, n, 0..m, &pa, &b, None, &mut c, cand, &mut bpack);
         let mut t = f64::INFINITY;
         for _ in 0..3 {
             let t0 = Instant::now();
-            gemm_packed(k, n, 0..m, &pa, &b, None, &mut c, cand, &mut bpack);
+            gemm_packed_with(backend, k, n, 0..m, &pa, &b, None, &mut c, cand, &mut bpack);
             t = t.min(t0.elapsed().as_secs_f64());
         }
         if t < best_t {
@@ -196,6 +241,7 @@ fn sweep(cands: &[PackParams]) -> PackParams {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::lne::primitives::simd;
 
     #[test]
     fn pi3_and_pi4_structurally_diverge() {
@@ -209,6 +255,9 @@ mod tests {
 
     #[test]
     fn cache_is_deterministic_in_process() {
+        // hold the pin guard so no parallel test flips the active backend
+        // (and with it the cache key) between calls
+        let _g = simd::test_pin_guard();
         let first = pack_params_for(&Platform::pi4());
         for _ in 0..3 {
             assert_eq!(pack_params_for(&Platform::pi4()), first);
@@ -230,16 +279,37 @@ mod tests {
             std::env::temp_dir().join(format!("bonseyes-autotune-rt-{}", std::process::id()));
         let _ = std::fs::remove_dir_all(&dir);
         let p4 = Platform::pi4();
+        let k4 = cache_key(&p4, KernelBackend::Scalar);
         let w4 = candidates(&p4)[1];
-        store_to(&dir, &p4.name, w4);
-        assert_eq!(load_from(&dir).get(&p4.name), Some(&w4));
+        store_to(&dir, &k4, w4);
+        assert_eq!(load_from(&dir).get(&k4), Some(&w4));
         // a second profile merges in without clobbering the first
         let p3 = Platform::pi3();
+        let k3 = cache_key(&p3, KernelBackend::Scalar);
         let w3 = candidates(&p3)[0];
-        store_to(&dir, &p3.name, w3);
+        store_to(&dir, &k3, w3);
         let all = load_from(&dir);
-        assert_eq!(all.get(&p4.name), Some(&w4));
-        assert_eq!(all.get(&p3.name), Some(&w3));
+        assert_eq!(all.get(&k4), Some(&w4));
+        assert_eq!(all.get(&k3), Some(&w3));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// The backend is part of the key: the same platform persists one
+    /// winner per backend, and they coexist in one file.
+    #[test]
+    fn winners_are_keyed_per_backend() {
+        let dir =
+            std::env::temp_dir().join(format!("bonseyes-autotune-bk-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let p4 = Platform::pi4();
+        let cands = candidates(&p4);
+        store_to(&dir, "pi4/scalar", cands[0]);
+        store_to(&dir, "pi4/avx2", cands[1]);
+        store_to(&dir, "pi4/neon", cands[2]);
+        let all = load_from(&dir);
+        assert_eq!(all.get("pi4/scalar"), Some(&cands[0]));
+        assert_eq!(all.get("pi4/avx2"), Some(&cands[1]));
+        assert_eq!(all.get("pi4/neon"), Some(&cands[2]));
         let _ = std::fs::remove_dir_all(&dir);
     }
 
@@ -254,15 +324,49 @@ mod tests {
         // unparseable file
         std::fs::write(dir.join("autotune.json"), "{not json").unwrap();
         assert!(load_from(&dir).is_empty());
-        // parseable but invalid winners: wrong kc, unknown profile,
-        // unsupported register tile — all fail candidate-set membership
-        let bad = r#"{
-            "pi4": {"mc": 64, "kc": 999, "nc": 256, "mr": 4, "nr": 8},
-            "mars-rover": {"mc": 64, "kc": 256, "nc": 256, "mr": 4, "nr": 8},
-            "pi3": {"mc": 64, "kc": 128, "nc": 64, "mr": 3, "nr": 5}
-        }"#;
+        // right schema but invalid winners: wrong kc, unknown profile,
+        // unknown backend, unkeyed entry, unsupported register tile —
+        // every one fails validation
+        let bad = r#"{"schema": 2, "entries": {
+            "pi4/scalar": {"mc": 64, "kc": 999, "nc": 256, "mr": 4, "nr": 8},
+            "mars-rover/scalar": {"mc": 64, "kc": 256, "nc": 256, "mr": 4, "nr": 8},
+            "pi4/sse42": {"mc": 64, "kc": 256, "nc": 256, "mr": 4, "nr": 8},
+            "pi4": {"mc": 64, "kc": 256, "nc": 256, "mr": 4, "nr": 8},
+            "pi3/scalar": {"mc": 64, "kc": 128, "nc": 64, "mr": 3, "nr": 5}
+        }}"#;
         std::fs::write(dir.join("autotune.json"), bad).unwrap();
         assert!(load_from(&dir).is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Satellite regression: a pre-backend v1 cache file — flat object
+    /// keyed by platform name, entries that *would* pass today's
+    /// candidate-membership check — must be rejected wholesale by the
+    /// schema gate, so old caches fall back to the sweep silently
+    /// instead of pinning a scalar-era winner on the SIMD kernels.
+    #[test]
+    fn v1_flat_cache_files_fall_back_to_sweep() {
+        let dir =
+            std::env::temp_dir().join(format!("bonseyes-autotune-v1-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let p4 = Platform::pi4();
+        let valid = candidates(&p4)[0];
+        // hand-written v1 layout: no schema field, platform-name keys
+        let v1 = format!(
+            r#"{{"pi4": {{"mc": {}, "kc": {}, "nc": {}, "mr": {}, "nr": {}}}}}"#,
+            valid.mc, valid.kc, valid.nc, valid.mr, valid.nr
+        );
+        std::fs::write(dir.join("autotune.json"), v1).unwrap();
+        assert!(
+            load_from(&dir).is_empty(),
+            "v1 entries must be dropped even when candidate-valid"
+        );
+        // and a store_to afterwards upgrades the file to v2 in place
+        store_to(&dir, &cache_key(&p4, KernelBackend::Scalar), valid);
+        let all = load_from(&dir);
+        assert_eq!(all.len(), 1);
+        assert_eq!(all.get("pi4/scalar"), Some(&valid));
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -87,6 +87,12 @@ pub fn conv_f16_into(
 /// storage and the output tail is identical to `conv_f16_into`, so with
 /// equal `kc` the result is bit-identical to the blocked path. Returns the
 /// number of B panel blocks packed.
+///
+/// Backend note: because the compute GEMM is [`gemm_packed`], the f16
+/// path rides the `KernelBackend` dispatch (AVX2/NEON) for free — the
+/// f16<->f32 rounding happens entirely outside the microkernel, and the
+/// SIMD f32 tiles are bit-identical to scalar, so backend choice can
+/// never show through the half-precision storage either.
 #[allow(clippy::too_many_arguments)]
 pub fn conv_f16_packed_into(
     x: TensorView,
@@ -238,6 +244,46 @@ mod tests {
             let got = conv_f16_packed(&x, &pa, (3, 3), &b, (1, 1), pad, true, params);
             assert_eq!(got.shape, want.shape);
             crate::testing::check_close(&got.data, &want.data, 0.0);
+        }
+    }
+
+    /// The f16 path rides the f32 microkernel, so SIMD-vs-scalar backend
+    /// parity must hold through the f16 storage rounding too: run the
+    /// same packed conv under a forced-scalar sweep of the underlying
+    /// GEMM and under the detected backend, on every supported tile.
+    #[test]
+    fn packed_f16_is_backend_invariant() {
+        use crate::lne::primitives::gemm::{
+            bpack_words, gemm_packed_with, KernelBackend, SUPPORTED_TILES,
+        };
+        let mut rng = Rng::new(9);
+        let x = Tensor::randn(&[1, 3, 6, 6], 1.0, &mut rng);
+        let w = Tensor::randn(&[5, 3, 3, 3], 0.5, &mut rng);
+        let hw = prepare_weights(&w);
+        let det = KernelBackend::detected();
+        let kdim = 27usize;
+        for &(mr, nr) in &SUPPORTED_TILES {
+            let params = PackParams { mc: 8, kc: 8, nc: 16, mr, nr };
+            let pa = prepare_packed_weights(&hw, mr);
+            // f16-rounded patch matrix, exactly as conv_f16_packed_into
+            // stages it
+            let out_plane = 36usize;
+            let mut cols = vec![0.0f32; kdim * out_plane];
+            im2col(&x.data, 3, 6, 6, (3, 3), (1, 1), (1, 1), 6, 6, &mut cols);
+            for v in cols.iter_mut() {
+                *v = F16::from_f32(*v).to_f32();
+            }
+            let mut bpack = vec![0.0f32; bpack_words(params)];
+            let mut c_s = vec![0.0f32; 5 * out_plane];
+            let mut c_v = vec![0.0f32; 5 * out_plane];
+            gemm_packed_with(
+                KernelBackend::Scalar, kdim, out_plane, 0..5, &pa, &cols, None, &mut c_s,
+                params, &mut bpack,
+            );
+            gemm_packed_with(
+                det, kdim, out_plane, 0..5, &pa, &cols, None, &mut c_v, params, &mut bpack,
+            );
+            crate::testing::check_close(&c_v, &c_s, 0.0);
         }
     }
 }

@@ -22,6 +22,18 @@
 //! the row partitioning never do, provided row ranges land on MR panel
 //! edges — which [`gemm_packed`] enforces by rejecting unaligned ranges.
 //! With equal `kc`, `gemm_packed` is bit-identical to `gemm_blocked`.
+//!
+//! The packed microkernel additionally dispatches over a
+//! [`KernelBackend`] (scalar / AVX2 / NEON, see `primitives/simd`):
+//! [`gemm_packed`] runs whatever `KernelBackend::active()` selects, and
+//! the `*_with` variants take the backend explicitly (autotune sweeps,
+//! parity tests, benches). Backends are bit-interchangeable — the SIMD
+//! tiles vectorize across the NR lane with plain mul+add (no FMA) in the
+//! same ascending-k order — so backend choice never joins `kc` in the
+//! set of parameters that can change results.
+
+use super::simd;
+pub use super::simd::KernelBackend;
 
 /// C[M,N] = A[M,K] @ B[K,N] (+ bias[N] broadcast over rows if given).
 ///
@@ -369,6 +381,26 @@ pub fn gemm_packed(
     params: PackParams,
     bpack: &mut [f32],
 ) -> usize {
+    gemm_packed_with(KernelBackend::active(), k, n, rows, pa, b, bias, c_rows, params, bpack)
+}
+
+/// [`gemm_packed`] with an explicit microkernel backend instead of
+/// `KernelBackend::active()`. Results are bit-identical across backends;
+/// this entry exists so autotune can sweep the backend it will key the
+/// winner under, and so tests/benches can compare backends directly.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_packed_with(
+    backend: KernelBackend,
+    k: usize,
+    n: usize,
+    rows: std::ops::Range<usize>,
+    pa: &PackedA,
+    b: &[f32],
+    bias: Option<&[f32]>,
+    c_rows: &mut [f32],
+    params: PackParams,
+    bpack: &mut [f32],
+) -> usize {
     assert_eq!(pa.k, k, "packed A K mismatch");
     assert_eq!(pa.mr, params.mr, "packed A panel height != params.mr");
     assert!(rows.start <= rows.end && rows.end <= pa.m, "row range {rows:?} out of bounds (m={})", pa.m);
@@ -389,7 +421,7 @@ pub fn gemm_packed(
         Some(b) => BiasRef::Cols(b),
         None => BiasRef::None,
     };
-    dispatch_packed(k, n, rows, pa, b, bias, c_rows, params, bpack)
+    dispatch_packed(backend, k, n, rows, pa, b, bias, c_rows, params, bpack)
 }
 
 /// Row-broadcast-bias variant of [`gemm_packed`]: row `r` of `c_rows` is
@@ -402,6 +434,24 @@ pub fn gemm_packed(
 /// single-accumulator ascending-k partial per kc-block.
 #[allow(clippy::too_many_arguments)]
 pub fn gemm_packed_rowbias(
+    k: usize,
+    n: usize,
+    rows: std::ops::Range<usize>,
+    pa: &PackedA,
+    b: &[f32],
+    bias: &[f32],
+    c_rows: &mut [f32],
+    params: PackParams,
+    bpack: &mut [f32],
+) -> usize {
+    gemm_packed_rowbias_with(KernelBackend::active(), k, n, rows, pa, b, bias, c_rows, params, bpack)
+}
+
+/// [`gemm_packed_rowbias`] with an explicit microkernel backend — see
+/// [`gemm_packed_with`].
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_packed_rowbias_with(
+    backend: KernelBackend,
     k: usize,
     n: usize,
     rows: std::ops::Range<usize>,
@@ -429,7 +479,7 @@ pub fn gemm_packed_rowbias(
     if rows.is_empty() || n == 0 {
         return 0;
     }
-    dispatch_packed(k, n, rows, pa, b, BiasRef::Rows(bias), c_rows, params, bpack)
+    dispatch_packed(backend, k, n, rows, pa, b, BiasRef::Rows(bias), c_rows, params, bpack)
 }
 
 /// How the C init is seeded before kc-block partials accumulate.
@@ -446,6 +496,7 @@ enum BiasRef<'a> {
 
 #[allow(clippy::too_many_arguments)]
 fn dispatch_packed(
+    backend: KernelBackend,
     k: usize,
     n: usize,
     rows: std::ops::Range<usize>,
@@ -457,11 +508,11 @@ fn dispatch_packed(
     bpack: &mut [f32],
 ) -> usize {
     match (params.mr, params.nr) {
-        (4, 4) => packed_driver::<4, 4>(k, n, rows, pa, b, bias, c_rows, params, bpack),
-        (4, 8) => packed_driver::<4, 8>(k, n, rows, pa, b, bias, c_rows, params, bpack),
-        (4, 16) => packed_driver::<4, 16>(k, n, rows, pa, b, bias, c_rows, params, bpack),
-        (8, 4) => packed_driver::<8, 4>(k, n, rows, pa, b, bias, c_rows, params, bpack),
-        (8, 8) => packed_driver::<8, 8>(k, n, rows, pa, b, bias, c_rows, params, bpack),
+        (4, 4) => packed_driver::<4, 4>(backend, k, n, rows, pa, b, bias, c_rows, params, bpack),
+        (4, 8) => packed_driver::<4, 8>(backend, k, n, rows, pa, b, bias, c_rows, params, bpack),
+        (4, 16) => packed_driver::<4, 16>(backend, k, n, rows, pa, b, bias, c_rows, params, bpack),
+        (8, 4) => packed_driver::<8, 4>(backend, k, n, rows, pa, b, bias, c_rows, params, bpack),
+        (8, 8) => packed_driver::<8, 8>(backend, k, n, rows, pa, b, bias, c_rows, params, bpack),
         (mr, nr) => panic!("unsupported microkernel tile {mr}x{nr} (see SUPPORTED_TILES)"),
     }
 }
@@ -473,6 +524,7 @@ fn dispatch_packed(
 /// lanes contribute exact zeros that are never written out.
 #[allow(clippy::too_many_arguments)]
 fn packed_driver<const MR: usize, const NR: usize>(
+    backend: KernelBackend,
     k: usize,
     n: usize,
     rows: std::ops::Range<usize>,
@@ -516,9 +568,22 @@ fn packed_driver<const MR: usize, const NR: usize>(
                         // SAFETY: apanel holds kb*MR packed floats from
                         // offset kk*MR (pa.data is panels*k*MR long),
                         // bpanel holds kb*NR packed floats (bpack holds
-                        // npan*kb*NR).
+                        // npan*kb*NR); SIMD variants additionally require
+                        // the feature their backend was detected with.
                         unsafe {
-                            tile_f32::<MR, NR>(kb, apanel.as_ptr(), bpanel.as_ptr(), &mut acc);
+                            match backend {
+                                KernelBackend::Scalar => {
+                                    tile_f32::<MR, NR>(kb, apanel.as_ptr(), bpanel.as_ptr(), &mut acc)
+                                }
+                                #[cfg(target_arch = "x86_64")]
+                                KernelBackend::Avx2 => {
+                                    simd::avx2::tile_f32::<MR, NR>(kb, apanel.as_ptr(), bpanel.as_ptr(), &mut acc)
+                                }
+                                #[cfg(target_arch = "aarch64")]
+                                KernelBackend::Neon => {
+                                    simd::neon::tile_f32::<MR, NR>(kb, apanel.as_ptr(), bpanel.as_ptr(), &mut acc)
+                                }
+                            }
                         }
                         let col0 = jj + jp * NR;
                         let vc = (jj + nb - col0).min(NR);
@@ -742,6 +807,129 @@ mod tests {
         assert!(c_ref.iter().any(|v| v.is_nan()));
         check_close(&c_blk, &c_ref, 0.0);
         check_close(&c_pack, &c_ref, 0.0);
+    }
+
+    /// Tentpole invariant: the detected SIMD backend is bit-identical to
+    /// the scalar tile on random shapes, for every supported tile, with
+    /// and without bias. On hosts where detection yields Scalar this
+    /// degenerates to self-comparison and stays green.
+    #[test]
+    fn simd_backend_is_bitexact_with_scalar_packed() {
+        let det = KernelBackend::detected();
+        testing::check("gemm-simd-vs-scalar", &[(1, 40), (1, 40), (1, 40), (0, 4), (0, 1)], 48, |case| {
+            let (m, k, n) = (case.usize(0), case.usize(1), case.usize(2));
+            let (mr, nr) = SUPPORTED_TILES[case.usize(3)];
+            let with_bias = case.get(4) == 1;
+            let params = PackParams { mc: 16, kc: 8, nc: 16, mr, nr };
+            let mut rng = Rng::new((m * 7000 + k * 70 + n) as u64);
+            let a = testing::randn_vec(&mut rng, m * k, 1.0);
+            let b = testing::randn_vec(&mut rng, k * n, 1.0);
+            let bias: Vec<f32> = testing::randn_vec(&mut rng, n, 1.0);
+            let bias_opt = if with_bias { Some(bias.as_slice()) } else { None };
+            let pa = pack_a(m, k, &a, mr);
+            let mut bpack = vec![0.0; bpack_words(params)];
+            let mut c_s = vec![0.0; m * n];
+            let mut c_v = vec![0.0; m * n];
+            gemm_packed_with(
+                KernelBackend::Scalar, k, n, 0..m, &pa, &b, bias_opt, &mut c_s, params, &mut bpack,
+            );
+            gemm_packed_with(det, k, n, 0..m, &pa, &b, bias_opt, &mut c_v, params, &mut bpack);
+            c_s.iter().zip(c_v.iter()).all(|(x, y)| x.to_bits() == y.to_bits())
+        });
+    }
+
+    /// Satellite: directed tail shapes — M/N/K off every mr/nr/kc
+    /// multiple, single row, single column — must agree bit for bit
+    /// between scalar and the detected backend on every tile, and stay
+    /// close to `gemm_ref_rows` (the value oracle; ref uses a different
+    /// summation order, so closeness rather than bit-equality there).
+    #[test]
+    fn simd_backend_tail_shapes_are_bitexact() {
+        let det = KernelBackend::detected();
+        let shapes =
+            [(1, 1, 1), (1, 17, 1), (4, 8, 1), (1, 8, 33), (9, 3, 5), (17, 23, 31), (5, 7, 64), (8, 16, 16)];
+        for &(mr, nr) in &SUPPORTED_TILES {
+            let params = PackParams { mc: 16, kc: 8, nc: 16, mr, nr };
+            for &(m, k, n) in &shapes {
+                let mut rng = Rng::new((m * 31 + k * 7 + n) as u64);
+                let a = testing::randn_vec(&mut rng, m * k, 1.0);
+                let b = testing::randn_vec(&mut rng, k * n, 1.0);
+                let bias: Vec<f32> = testing::randn_vec(&mut rng, n, 1.0);
+                let pa = pack_a(m, k, &a, mr);
+                let mut bpack = vec![0.0; bpack_words(params)];
+                let mut c_s = vec![0.0; m * n];
+                let mut c_v = vec![0.0; m * n];
+                let mut c_r = vec![0.0; m * n];
+                gemm_packed_with(
+                    KernelBackend::Scalar, k, n, 0..m, &pa, &b, Some(&bias), &mut c_s, params, &mut bpack,
+                );
+                gemm_packed_with(
+                    det, k, n, 0..m, &pa, &b, Some(&bias), &mut c_v, params, &mut bpack,
+                );
+                gemm_ref_rows(k, n, 0..m, &a, &b, Some(&bias), &mut c_r);
+                assert!(
+                    c_s.iter().zip(c_v.iter()).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "{det:?} != scalar at m={m} k={k} n={n} tile {mr}x{nr}"
+                );
+                check_close(&c_v, &c_r, 1e-4);
+            }
+        }
+    }
+
+    /// Satellite: NaN/Inf must propagate identically through the SIMD
+    /// tiles (vector mul/add follow IEEE lane-wise, and the packed path
+    /// has no zero-skip to guard) — mirrors the PR 6 `gemm_ref`
+    /// zero-skip regression at the backend seam.
+    #[test]
+    fn simd_backend_propagates_nan_inf_like_scalar() {
+        let det = KernelBackend::detected();
+        let (m, k, n) = (9usize, 6, 19);
+        let mut rng = Rng::new(23);
+        let a = testing::randn_vec(&mut rng, m * k, 1.0);
+        let mut b = testing::randn_vec(&mut rng, k * n, 1.0);
+        b[3] = f32::NAN;
+        b[2 * n + 7] = f32::INFINITY;
+        b[4 * n + 11] = f32::NEG_INFINITY;
+        for &(mr, nr) in &SUPPORTED_TILES {
+            let params = PackParams { mc: 8, kc: 4, nc: 8, mr, nr };
+            let pa = pack_a(m, k, &a, mr);
+            let mut bpack = vec![0.0; bpack_words(params)];
+            let mut c_s = vec![0.0; m * n];
+            let mut c_v = vec![0.0; m * n];
+            gemm_packed_with(
+                KernelBackend::Scalar, k, n, 0..m, &pa, &b, None, &mut c_s, params, &mut bpack,
+            );
+            gemm_packed_with(det, k, n, 0..m, &pa, &b, None, &mut c_v, params, &mut bpack);
+            assert!(c_s.iter().any(|v| v.is_nan()), "oracle lost the NaN");
+            check_close(&c_v, &c_s, 0.0);
+        }
+    }
+
+    /// Satellite: the transposed-fc row-bias path agrees across backends
+    /// too (bias-in-init is part of the per-element FP sequence).
+    #[test]
+    fn rowbias_backend_parity_is_bitexact() {
+        let det = KernelBackend::detected();
+        for &(mr, nr) in &SUPPORTED_TILES {
+            let (m, k, n) = (13usize, 9, 21);
+            let params = PackParams { mc: 8, kc: 4, nc: 8, mr, nr };
+            let mut rng = Rng::new(5);
+            let a = testing::randn_vec(&mut rng, m * k, 1.0);
+            let b = testing::randn_vec(&mut rng, k * n, 1.0);
+            let bias: Vec<f32> = testing::randn_vec(&mut rng, m, 1.0);
+            let pa = pack_a(m, k, &a, mr);
+            let mut bpack = vec![0.0; bpack_words(params)];
+            let mut c_s = vec![0.0; m * n];
+            let mut c_v = vec![0.0; m * n];
+            gemm_packed_rowbias_with(
+                KernelBackend::Scalar, k, n, 0..m, &pa, &b, &bias, &mut c_s, params, &mut bpack,
+            );
+            gemm_packed_rowbias_with(det, k, n, 0..m, &pa, &b, &bias, &mut c_v, params, &mut bpack);
+            assert!(
+                c_s.iter().zip(c_v.iter()).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "{det:?} != scalar rowbias tile {mr}x{nr}"
+            );
+        }
     }
 
     #[test]

@@ -7,8 +7,9 @@
 //! a fresh per-image scale, so chained int8 layers never touch f32 between
 //! them (DESIGN.md §7).
 
-use super::gemm::{bpack_words, PackParams};
+use super::gemm::{bpack_words, KernelBackend, PackParams};
 use super::im2col::im2col;
+use super::simd;
 use crate::lne::graph::{conv_out, resolve_pad, Padding};
 use crate::tensor::{QTensor, Tensor, TensorView, TensorViewMut};
 
@@ -214,6 +215,25 @@ pub fn gemm_i8_packed(
     params: PackParams,
     bpack: &mut [i8],
 ) -> usize {
+    gemm_i8_packed_with(KernelBackend::active(), k, n, rows, pa, b, c_rows, params, bpack)
+}
+
+/// [`gemm_i8_packed`] with an explicit microkernel backend instead of
+/// `KernelBackend::active()` — integer accumulation is exact, so every
+/// backend returns identical i32s; the explicit entry exists for autotune
+/// sweeps, parity tests and benches (see `gemm::gemm_packed_with`).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_i8_packed_with(
+    backend: KernelBackend,
+    k: usize,
+    n: usize,
+    rows: std::ops::Range<usize>,
+    pa: &PackedAI8,
+    b: &[i8],
+    c_rows: &mut [i32],
+    params: PackParams,
+    bpack: &mut [i8],
+) -> usize {
     assert_eq!(pa.k, k, "packed A K mismatch");
     assert_eq!(pa.mr, params.mr, "packed A panel height != params.mr");
     assert!(rows.start <= rows.end && rows.end <= pa.m, "row range {rows:?} out of bounds (m={})", pa.m);
@@ -232,17 +252,18 @@ pub fn gemm_i8_packed(
         return 0;
     }
     match (params.mr, params.nr) {
-        (4, 4) => packed_driver_i8::<4, 4>(k, n, rows, pa, b, c_rows, params, bpack),
-        (4, 8) => packed_driver_i8::<4, 8>(k, n, rows, pa, b, c_rows, params, bpack),
-        (4, 16) => packed_driver_i8::<4, 16>(k, n, rows, pa, b, c_rows, params, bpack),
-        (8, 4) => packed_driver_i8::<8, 4>(k, n, rows, pa, b, c_rows, params, bpack),
-        (8, 8) => packed_driver_i8::<8, 8>(k, n, rows, pa, b, c_rows, params, bpack),
+        (4, 4) => packed_driver_i8::<4, 4>(backend, k, n, rows, pa, b, c_rows, params, bpack),
+        (4, 8) => packed_driver_i8::<4, 8>(backend, k, n, rows, pa, b, c_rows, params, bpack),
+        (4, 16) => packed_driver_i8::<4, 16>(backend, k, n, rows, pa, b, c_rows, params, bpack),
+        (8, 4) => packed_driver_i8::<8, 4>(backend, k, n, rows, pa, b, c_rows, params, bpack),
+        (8, 8) => packed_driver_i8::<8, 8>(backend, k, n, rows, pa, b, c_rows, params, bpack),
         (mr, nr) => panic!("unsupported microkernel tile {mr}x{nr} (see SUPPORTED_TILES)"),
     }
 }
 
 #[allow(clippy::too_many_arguments)]
 fn packed_driver_i8<const MR: usize, const NR: usize>(
+    backend: KernelBackend,
     k: usize,
     n: usize,
     rows: std::ops::Range<usize>,
@@ -277,9 +298,23 @@ fn packed_driver_i8<const MR: usize, const NR: usize>(
                         let bpanel = &bpack[jp * (kb * NR)..];
                         let mut acc = [[0i32; NR]; MR];
                         // SAFETY: apanel holds kb*MR packed bytes from
-                        // offset kk*MR, bpanel holds kb*NR packed bytes.
+                        // offset kk*MR, bpanel holds kb*NR packed bytes;
+                        // SIMD variants additionally require the feature
+                        // their backend was detected with.
                         unsafe {
-                            tile_i8::<MR, NR>(kb, apanel.as_ptr(), bpanel.as_ptr(), &mut acc);
+                            match backend {
+                                KernelBackend::Scalar => {
+                                    tile_i8::<MR, NR>(kb, apanel.as_ptr(), bpanel.as_ptr(), &mut acc)
+                                }
+                                #[cfg(target_arch = "x86_64")]
+                                KernelBackend::Avx2 => {
+                                    simd::avx2::tile_i8::<MR, NR>(kb, apanel.as_ptr(), bpanel.as_ptr(), &mut acc)
+                                }
+                                #[cfg(target_arch = "aarch64")]
+                                KernelBackend::Neon => {
+                                    simd::neon::tile_i8::<MR, NR>(kb, apanel.as_ptr(), bpanel.as_ptr(), &mut acc)
+                                }
+                            }
                         }
                         let col0 = jj + jp * NR;
                         let vc = (jj + nb - col0).min(NR);
@@ -869,5 +904,38 @@ mod tests {
         assert_eq!(blocks, 2 * out_plane.div_ceil(32) * kdim.div_ceil(16));
         assert_eq!(out_q, want_q);
         assert_eq!(out_scales, want_s);
+    }
+
+    /// Tentpole invariant at the i8 seam: the detected SIMD backend and
+    /// the scalar tile return identical i32 accumulators on random and
+    /// directed tail shapes (single row/col, off-multiple M/N/K) for
+    /// every supported tile. Integer accumulation is exact, so this is
+    /// plain equality against the unpacked `gemm_i8` oracle as well.
+    #[test]
+    fn simd_i8_backend_matches_scalar_on_all_tiles_and_tails() {
+        use crate::lne::primitives::gemm::SUPPORTED_TILES;
+        let det = KernelBackend::detected();
+        let shapes =
+            [(1, 1, 1), (1, 17, 1), (4, 8, 1), (1, 8, 33), (9, 3, 5), (17, 23, 31), (5, 7, 64), (8, 16, 16)];
+        for &(mr, nr) in &SUPPORTED_TILES {
+            let params = PackParams { mc: 16, kc: 8, nc: 16, mr, nr };
+            for &(m, k, n) in &shapes {
+                let mut rng = Rng::new((m * 131 + k * 17 + n) as u64);
+                let a: Vec<i8> = (0..m * k).map(|_| rng.below(255) as i8).collect();
+                let b: Vec<i8> = (0..k * n).map(|_| rng.below(255) as i8).collect();
+                let mut want = vec![0i32; m * n];
+                gemm_i8(m, k, n, &a, &b, &mut want);
+                let pa = pack_a_i8(m, k, &a, mr);
+                let mut bpack = vec![0i8; bpack_bytes(params)];
+                let mut c_s = vec![7i32; m * n];
+                let mut c_v = vec![9i32; m * n];
+                gemm_i8_packed_with(
+                    KernelBackend::Scalar, k, n, 0..m, &pa, &b, &mut c_s, params, &mut bpack,
+                );
+                gemm_i8_packed_with(det, k, n, 0..m, &pa, &b, &mut c_v, params, &mut bpack);
+                assert_eq!(c_s, want, "scalar != gemm_i8 at m={m} k={k} n={n} tile {mr}x{nr}");
+                assert_eq!(c_v, want, "{det:?} != gemm_i8 at m={m} k={k} n={n} tile {mr}x{nr}");
+            }
+        }
     }
 }

@@ -15,4 +15,5 @@ pub mod gemm;
 pub mod im2col;
 pub mod int8;
 pub mod pool;
+pub mod simd;
 pub mod winograd;

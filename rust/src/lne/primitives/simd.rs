@@ -1,0 +1,404 @@
+//! Explicit SIMD microkernels and runtime backend dispatch (ISSUE 10).
+//!
+//! The packed-panel GEMMs (`gemm.rs` f32, `int8.rs` i8->i32, and the f16
+//! path that reuses the f32 kernel over pre-converted panels) bottom out
+//! in an `MR x NR` register tile. This module provides `std::arch`
+//! implementations of that tile — AVX2 on `x86_64`, NEON on `aarch64` —
+//! selected once per process by [`KernelBackend::detected`] and threaded
+//! through the existing `SUPPORTED_TILES` dispatch. The scalar tile stays
+//! as the always-available fallback; `BONSEYES_NO_SIMD=1` (or
+//! [`KernelBackend::force_scalar`] in tests/benches) pins it.
+//!
+//! **Bit-exactness argument.** The scalar tile keeps one f32 accumulator
+//! per output element `(r, c)` and performs, for k ascending, exactly
+//! `acc = acc + a[k]*b[k]` — a rounded multiply followed by a rounded add.
+//! The SIMD tiles vectorize across the NR lane only: lane `c` of the
+//! vector accumulator for row `r` is the very same per-element
+//! accumulator, updated with vector `mul` then vector `add` (never an
+//! FMA, which would contract the intermediate rounding away), in the very
+//! same ascending-k order. IEEE-754 `mul`/`add` are lane-wise identical
+//! between scalar and vector units, so every output element sees the
+//! identical FP sequence and the backends are bit-interchangeable — the
+//! property the replay/tasked/trace parity suite and the serving seam
+//! test pin. The i8 tiles widen to i32 and use exact (wrapping) integer
+//! multiply-add, which is order-insensitive, so they are trivially exact.
+//!
+//! Vector loads never touch memory outside the packed panels: the B panel
+//! holds exactly `kb*NR` elements and every `NR`-wide (or 4-wide) load
+//! starts at a lane-group boundary inside it; A elements are loaded as
+//! broadcast scalars. Zero-padded panel lanes contribute exact zeros the
+//! drivers never write out, same as the scalar path.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::OnceLock;
+
+/// Which microkernel implementation executes the packed GEMM register
+/// tiles. Only variants for the compiling architecture exist, so a match
+/// over the enum is always exhaustive without dead arms.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KernelBackend {
+    /// Portable scalar tile — the reference every other backend must match
+    /// bit for bit.
+    Scalar,
+    /// 256-bit AVX2 tile (`std::arch::x86_64`), runtime-detected.
+    #[cfg(target_arch = "x86_64")]
+    Avx2,
+    /// 128-bit NEON tile (`std::arch::aarch64`); baseline on aarch64, so
+    /// the target gate is the detection.
+    #[cfg(target_arch = "aarch64")]
+    Neon,
+}
+
+/// Backend names that may appear in persisted autotune cache keys
+/// (`lne::autotune` keys winners by `platform/backend`). Includes every
+/// architecture's backends so a cache file written on one host validates
+/// its key namespace identically on another.
+pub const BACKEND_NAMES: [&str; 3] = ["scalar", "avx2", "neon"];
+
+#[cfg(target_arch = "x86_64")]
+fn detect() -> KernelBackend {
+    if is_x86_feature_detected!("avx2") {
+        KernelBackend::Avx2
+    } else {
+        KernelBackend::Scalar
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn detect() -> KernelBackend {
+    KernelBackend::Neon
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn detect() -> KernelBackend {
+    KernelBackend::Scalar
+}
+
+fn no_simd_flag() -> &'static AtomicBool {
+    static FLAG: OnceLock<AtomicBool> = OnceLock::new();
+    FLAG.get_or_init(|| {
+        AtomicBool::new(std::env::var("BONSEYES_NO_SIMD").map(|v| v == "1").unwrap_or(false))
+    })
+}
+
+impl KernelBackend {
+    /// The best backend the running CPU supports, detected once per
+    /// process (`is_x86_feature_detected!` on x86_64; NEON is baseline on
+    /// aarch64; scalar elsewhere). Pure hardware capability — the
+    /// `BONSEYES_NO_SIMD` override lives in [`KernelBackend::active`].
+    pub fn detected() -> KernelBackend {
+        static DETECTED: OnceLock<KernelBackend> = OnceLock::new();
+        *DETECTED.get_or_init(detect)
+    }
+
+    /// The backend the packed GEMM entry points dispatch to right now:
+    /// [`KernelBackend::detected`] unless scalar is pinned — by
+    /// `BONSEYES_NO_SIMD=1` at first use, or by
+    /// [`KernelBackend::force_scalar`] afterwards. Reading the pin is one
+    /// relaxed atomic load per GEMM call, negligible next to the GEMM.
+    pub fn active() -> KernelBackend {
+        if no_simd_flag().load(Ordering::Relaxed) {
+            KernelBackend::Scalar
+        } else {
+            KernelBackend::detected()
+        }
+    }
+
+    /// Pin (or unpin) the scalar backend, returning the previous pin so
+    /// callers can restore it — the in-process hook behind the
+    /// `BONSEYES_NO_SIMD` seam for tests and benches that compare
+    /// backends. Safe to flip at any time: every backend is bit-exact
+    /// with every other, so concurrent GEMMs only change speed. Autotune
+    /// keys winners by the backend active at sweep time, so a pinned
+    /// sweep never poisons the unpinned cache entry (and vice versa).
+    pub fn force_scalar(on: bool) -> bool {
+        no_simd_flag().swap(on, Ordering::SeqCst)
+    }
+
+    /// Stable lowercase name, used in autotune cache keys and bench
+    /// output. Every value appears in [`BACKEND_NAMES`].
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelBackend::Scalar => "scalar",
+            #[cfg(target_arch = "x86_64")]
+            KernelBackend::Avx2 => "avx2",
+            #[cfg(target_arch = "aarch64")]
+            KernelBackend::Neon => "neon",
+        }
+    }
+}
+
+/// Serializes tests that flip — or depend on the stability of — the
+/// process-global scalar pin: `force_scalar` swaps an `AtomicBool` shared
+/// by every GEMM call, so a parity test pinning scalar in parallel with a
+/// test asserting `active() == detected()` would race. Flippers and
+/// observers both hold this guard.
+#[cfg(test)]
+pub(crate) fn test_pin_guard() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: OnceLock<std::sync::Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| std::sync::Mutex::new(())).lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// AVX2 register tiles. `NR` is 4 (one `__m128`) or a multiple of 8
+/// (`NR/8` `__m256` accumulators per row); `SUPPORTED_TILES` guarantees
+/// at most 8 vector accumulators total, so the fixed-size spill arrays
+/// below never overflow.
+#[cfg(target_arch = "x86_64")]
+pub mod avx2 {
+    use std::arch::x86_64::*;
+
+    /// AVX2 twin of the scalar `tile_f32`: `acc[r][c] += sum_k
+    /// apanel[k*MR + r] * bpanel[k*NR + c]`, one vector accumulator group
+    /// per row, plain `mul` + `add` (no FMA), ascending k — bit-identical
+    /// to scalar per lane.
+    ///
+    /// SAFETY: caller guarantees `ap` holds `kb*MR` and `bp` holds
+    /// `kb*NR` readable floats, and that AVX2 is available.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn tile_f32<const MR: usize, const NR: usize>(
+        kb: usize,
+        ap: *const f32,
+        bp: *const f32,
+        acc: &mut [[f32; NR]; MR],
+    ) {
+        debug_assert!(NR == 4 || NR % 8 == 0);
+        if NR == 4 {
+            let mut accv = [_mm_setzero_ps(); 8];
+            for r in 0..MR {
+                accv[r] = _mm_loadu_ps(acc[r].as_ptr());
+            }
+            let (mut a, mut b) = (ap, bp);
+            for _ in 0..kb {
+                let bv = _mm_loadu_ps(b);
+                for r in 0..MR {
+                    let av = _mm_set1_ps(*a.add(r));
+                    accv[r] = _mm_add_ps(accv[r], _mm_mul_ps(av, bv));
+                }
+                a = a.add(MR);
+                b = b.add(NR);
+            }
+            for r in 0..MR {
+                _mm_storeu_ps(acc[r].as_mut_ptr(), accv[r]);
+            }
+        } else {
+            let lanes = NR / 8;
+            let mut accv = [_mm256_setzero_ps(); 8];
+            for r in 0..MR {
+                for l in 0..lanes {
+                    accv[r * lanes + l] = _mm256_loadu_ps(acc[r].as_ptr().add(l * 8));
+                }
+            }
+            let (mut a, mut b) = (ap, bp);
+            for _ in 0..kb {
+                let mut bv = [_mm256_setzero_ps(); 2];
+                for (l, slot) in bv.iter_mut().enumerate().take(lanes) {
+                    *slot = _mm256_loadu_ps(b.add(l * 8));
+                }
+                for r in 0..MR {
+                    let av = _mm256_set1_ps(*a.add(r));
+                    for l in 0..lanes {
+                        accv[r * lanes + l] =
+                            _mm256_add_ps(accv[r * lanes + l], _mm256_mul_ps(av, bv[l]));
+                    }
+                }
+                a = a.add(MR);
+                b = b.add(NR);
+            }
+            for r in 0..MR {
+                for l in 0..lanes {
+                    _mm256_storeu_ps(acc[r].as_mut_ptr().add(l * 8), accv[r * lanes + l]);
+                }
+            }
+        }
+    }
+
+    /// AVX2 twin of the scalar `tile_i8`: widen B bytes to i32 lanes,
+    /// broadcast the A byte, exact i32 multiply-add. Integer arithmetic
+    /// is exact, so any vectorization matches scalar bit for bit.
+    ///
+    /// SAFETY: caller guarantees `ap` holds `kb*MR` and `bp` holds
+    /// `kb*NR` readable bytes, and that AVX2 is available.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn tile_i8<const MR: usize, const NR: usize>(
+        kb: usize,
+        ap: *const i8,
+        bp: *const i8,
+        acc: &mut [[i32; NR]; MR],
+    ) {
+        debug_assert!(NR == 4 || NR % 8 == 0);
+        if NR == 4 {
+            let mut accv = [_mm_setzero_si128(); 8];
+            for r in 0..MR {
+                accv[r] = _mm_loadu_si128(acc[r].as_ptr() as *const __m128i);
+            }
+            let (mut a, mut b) = (ap, bp);
+            for _ in 0..kb {
+                // 4-byte load (never past the panel), sign-extend to i32x4
+                let braw = b.cast::<i32>().read_unaligned();
+                let bv = _mm_cvtepi8_epi32(_mm_cvtsi32_si128(braw));
+                for r in 0..MR {
+                    let av = _mm_set1_epi32(*a.add(r) as i32);
+                    accv[r] = _mm_add_epi32(accv[r], _mm_mullo_epi32(av, bv));
+                }
+                a = a.add(MR);
+                b = b.add(NR);
+            }
+            for r in 0..MR {
+                _mm_storeu_si128(acc[r].as_mut_ptr() as *mut __m128i, accv[r]);
+            }
+        } else {
+            let lanes = NR / 8;
+            let mut accv = [_mm256_setzero_si256(); 8];
+            for r in 0..MR {
+                for l in 0..lanes {
+                    accv[r * lanes + l] =
+                        _mm256_loadu_si256(acc[r].as_ptr().add(l * 8) as *const __m256i);
+                }
+            }
+            let (mut a, mut b) = (ap, bp);
+            for _ in 0..kb {
+                let mut bv = [_mm256_setzero_si256(); 2];
+                for (l, slot) in bv.iter_mut().enumerate().take(lanes) {
+                    // 8-byte load, sign-extend to i32x8
+                    let b64 = _mm_loadl_epi64(b.add(l * 8) as *const __m128i);
+                    *slot = _mm256_cvtepi8_epi32(b64);
+                }
+                for r in 0..MR {
+                    let av = _mm256_set1_epi32(*a.add(r) as i32);
+                    for l in 0..lanes {
+                        accv[r * lanes + l] =
+                            _mm256_add_epi32(accv[r * lanes + l], _mm256_mullo_epi32(av, bv[l]));
+                    }
+                }
+                a = a.add(MR);
+                b = b.add(NR);
+            }
+            for r in 0..MR {
+                for l in 0..lanes {
+                    _mm256_storeu_si256(
+                        acc[r].as_mut_ptr().add(l * 8) as *mut __m256i,
+                        accv[r * lanes + l],
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// NEON register tiles. Every supported `NR` is a multiple of 4, so each
+/// row owns `NR/4` 128-bit accumulators; `SUPPORTED_TILES` bounds the
+/// total at 16.
+#[cfg(target_arch = "aarch64")]
+pub mod neon {
+    use std::arch::aarch64::*;
+
+    /// NEON twin of the scalar `tile_f32`: vector `mul` + `add` (not
+    /// `vfmaq`, which would fuse the rounding), ascending k —
+    /// bit-identical to scalar per lane.
+    ///
+    /// SAFETY: caller guarantees `ap` holds `kb*MR` and `bp` holds
+    /// `kb*NR` readable floats. NEON is baseline on aarch64.
+    pub unsafe fn tile_f32<const MR: usize, const NR: usize>(
+        kb: usize,
+        ap: *const f32,
+        bp: *const f32,
+        acc: &mut [[f32; NR]; MR],
+    ) {
+        debug_assert!(NR % 4 == 0);
+        let lanes = NR / 4;
+        let mut accv = [vdupq_n_f32(0.0); 16];
+        for r in 0..MR {
+            for l in 0..lanes {
+                accv[r * lanes + l] = vld1q_f32(acc[r].as_ptr().add(l * 4));
+            }
+        }
+        let (mut a, mut b) = (ap, bp);
+        for _ in 0..kb {
+            let mut bv = [vdupq_n_f32(0.0); 4];
+            for (l, slot) in bv.iter_mut().enumerate().take(lanes) {
+                *slot = vld1q_f32(b.add(l * 4));
+            }
+            for r in 0..MR {
+                let av = vdupq_n_f32(*a.add(r));
+                for l in 0..lanes {
+                    accv[r * lanes + l] = vaddq_f32(accv[r * lanes + l], vmulq_f32(av, bv[l]));
+                }
+            }
+            a = a.add(MR);
+            b = b.add(NR);
+        }
+        for r in 0..MR {
+            for l in 0..lanes {
+                vst1q_f32(acc[r].as_mut_ptr().add(l * 4), accv[r * lanes + l]);
+            }
+        }
+    }
+
+    /// NEON twin of the scalar `tile_i8`: widen to i16, `vmlal_s16`
+    /// widening multiply-accumulate into i32x4 — exact integer
+    /// arithmetic, bit-identical to scalar.
+    ///
+    /// SAFETY: caller guarantees `ap` holds `kb*MR` and `bp` holds
+    /// `kb*NR` readable bytes. NEON is baseline on aarch64.
+    pub unsafe fn tile_i8<const MR: usize, const NR: usize>(
+        kb: usize,
+        ap: *const i8,
+        bp: *const i8,
+        acc: &mut [[i32; NR]; MR],
+    ) {
+        debug_assert!(NR % 4 == 0);
+        let lanes = NR / 4;
+        let mut accv = [vdupq_n_s32(0); 16];
+        for r in 0..MR {
+            for l in 0..lanes {
+                accv[r * lanes + l] = vld1q_s32(acc[r].as_ptr().add(l * 4));
+            }
+        }
+        let (mut a, mut b) = (ap, bp);
+        for _ in 0..kb {
+            let mut bv = [vdup_n_s16(0); 4];
+            for (l, slot) in bv.iter_mut().enumerate().take(lanes) {
+                // 4-byte load (never past the panel), sign-extend to i16x4
+                let braw = b.add(l * 4).cast::<i32>().read_unaligned();
+                let b8 = vcreate_s8(braw as u32 as u64);
+                *slot = vget_low_s16(vmovl_s8(b8));
+            }
+            for r in 0..MR {
+                let av = vdup_n_s16(*a.add(r) as i16);
+                for l in 0..lanes {
+                    accv[r * lanes + l] = vmlal_s16(accv[r * lanes + l], av, bv[l]);
+                }
+            }
+            a = a.add(MR);
+            b = b.add(NR);
+        }
+        for r in 0..MR {
+            for l in 0..lanes {
+                vst1q_s32(acc[r].as_mut_ptr().add(l * 4), accv[r * lanes + l]);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn detection_is_stable() {
+        assert_eq!(KernelBackend::detected(), KernelBackend::detected());
+        assert!(BACKEND_NAMES.contains(&KernelBackend::detected().name()));
+        assert!(BACKEND_NAMES.contains(&KernelBackend::Scalar.name()));
+    }
+
+    #[test]
+    fn force_scalar_pins_and_restores() {
+        let _g = test_pin_guard();
+        let prev = KernelBackend::force_scalar(true);
+        assert_eq!(KernelBackend::active(), KernelBackend::Scalar);
+        KernelBackend::force_scalar(prev);
+        if !prev {
+            assert_eq!(KernelBackend::active(), KernelBackend::detected());
+        }
+    }
+}

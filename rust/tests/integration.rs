@@ -596,3 +596,82 @@ fn wavefront_parallel_serving_is_bit_exact_across_thread_counts() {
         assert!(snap.get("wave_width_max").as_f64().unwrap() >= 4.0, "inception towers");
     }
 }
+
+/// The SIMD dispatch seam can never fork serving results: one full
+/// `LneSession` replay pipeline — inceptionette served f32 and
+/// int8-resident through a `ModelRouter` — must produce bit-identical
+/// predictions with the scalar backend pinned (the in-process equivalent
+/// of `BONSEYES_NO_SIMD=1`, which latches the same flag from the
+/// environment at first use) and with the detected backend, at worker
+/// pools of 1 / 2 / 4 threads. On hosts without AVX2/NEON both modes
+/// resolve to scalar and the comparison is trivially green.
+#[test]
+fn simd_and_scalar_serving_predictions_are_bit_identical() {
+    use bonseyes::lne::engine::Prepared;
+    use bonseyes::lne::platform::Platform;
+    use bonseyes::lne::plugin::{ConvImpl, DesignSpace};
+    use bonseyes::lne::primitives::simd::KernelBackend;
+    use bonseyes::lne::quant_explore::f32_baseline;
+    use bonseyes::models;
+    use bonseyes::serving::{BatcherConfig, ModelRouter};
+    use bonseyes::tensor::Tensor;
+    use bonseyes::util::rng::Rng;
+
+    let mut rng = Rng::new(41);
+    let samples: Vec<Vec<f32>> = (0..3)
+        .map(|_| Tensor::randn(&[3, 16, 16], 1.0, &mut rng).data)
+        .collect();
+
+    // Serve every sample through a fresh router (f32 + int8-resident
+    // registrations, Prepared rebuilt under the mode's backend so the
+    // autotune key matches what serving would really do) and collect the
+    // concatenated predictions.
+    let serve = |threads: usize| -> Vec<Vec<f32>> {
+        let mut router = ModelRouter::with_threads(threads);
+        let cfg = || BatcherConfig { max_wait_ms: 1.0, ..Default::default() };
+        let g = models::inceptionette::inceptionette();
+        let w = models::random_weights(&g, 5);
+        let p = std::sync::Arc::new(Prepared::new(g, w, Platform::pi4()).unwrap());
+        let a = f32_baseline(&p);
+        router.register_lne("incep-f32", p, a, &[1, 4], &[], cfg()).unwrap();
+
+        let g = models::inceptionette::inceptionette();
+        let w = models::random_weights(&g, 5);
+        let space = DesignSpace::build(&g, &Platform::pi4());
+        let a = space.uniform(&g, ConvImpl::Int8Gemm);
+        let p = std::sync::Arc::new(Prepared::new(g, w, Platform::pi4()).unwrap());
+        router.register_lne("incep-i8", p, a, &[1, 4], &[], cfg()).unwrap();
+
+        let mut out = Vec::new();
+        for model in ["incep-f32", "incep-i8"] {
+            for s in &samples {
+                out.push(router.infer(Some(model), s.clone()).unwrap().scores);
+            }
+        }
+        out
+    };
+
+    let mut by_mode: Vec<Vec<Vec<Vec<f32>>>> = Vec::new();
+    for scalar_pinned in [true, false] {
+        let prev = KernelBackend::force_scalar(scalar_pinned);
+        let per_thread: Vec<Vec<Vec<f32>>> = [1usize, 2, 4].iter().map(|&t| serve(t)).collect();
+        KernelBackend::force_scalar(prev);
+        // threads {1,2,4} agree within the mode (the existing invariant)
+        for t in &per_thread[1..] {
+            assert_eq!(t, &per_thread[0], "thread counts diverged within one backend mode");
+        }
+        by_mode.push(per_thread);
+    }
+    // and the two modes agree bit for bit across the seam
+    for (scalar_preds, simd_preds) in by_mode[0][0].iter().zip(by_mode[1][0].iter()) {
+        assert_eq!(scalar_preds.len(), simd_preds.len());
+        for (a, b) in scalar_preds.iter().zip(simd_preds.iter()) {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "scalar vs {:?} backend forked a served prediction",
+                KernelBackend::detected()
+            );
+        }
+    }
+}
